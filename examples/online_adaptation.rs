@@ -1,0 +1,66 @@
+//! Online deployment scenario (§4.4 "Search Cost Analysis"): tenants
+//! arrive and leave; the coordinator re-runs the GACER search on each
+//! change and reports how quickly near-optimal plans are recovered —
+//! demonstrating that the modeling-based search is cheap enough for
+//! online use ("acceptable for tasks that care about throughput and are
+//! not sensitive to real-time").
+//!
+//!     cargo run --release --example online_adaptation
+
+use std::time::Instant;
+
+use gacer::gpu::SimOptions;
+use gacer::models::zoo;
+use gacer::plan::{DeploymentPlan, TenantSet};
+use gacer::profile::{CostModel, Platform};
+use gacer::search::{GacerSearch, SearchConfig};
+
+fn main() {
+    let platform = Platform::titan_v();
+    let cost = CostModel::new(platform);
+    let opts = SimOptions::for_platform(&platform);
+
+    // A day in the life of a shared GPU: tenants join and leave.
+    let timeline: [(&str, Vec<&str>); 6] = [
+        ("boot: vision pair", vec!["R18", "M3"]),
+        ("V16 arrives", vec!["R18", "M3", "V16"]),
+        ("R18 leaves, LSTM arrives", vec!["M3", "V16", "LSTM"]),
+        ("recommender joins", vec!["M3", "V16", "LSTM", "BST"]),
+        ("V16 leaves", vec!["M3", "LSTM", "BST"]),
+        ("heavy vision returns", vec!["R50", "M3", "LSTM"]),
+    ];
+
+    println!("== online adaptation: re-search on every tenant change ==\n");
+    println!(
+        "{:<28} {:>8} {:>12} {:>12} {:>9} {:>12}",
+        "event", "tenants", "SP (ms)", "GACER (ms)", "gain", "search time"
+    );
+
+    let mut total_search = std::time::Duration::ZERO;
+    for (event, names) in timeline {
+        let tenants = zoo::build_combo(&names);
+        let ts = TenantSet::new(&tenants, &cost);
+        let unregulated = ts.simulate(&DeploymentPlan::unregulated(tenants.len()), opts);
+        let t0 = Instant::now();
+        let report = GacerSearch::new(&ts, opts, SearchConfig::default()).run();
+        let took = t0.elapsed();
+        total_search += took;
+        println!(
+            "{:<28} {:>8} {:>12.2} {:>12.2} {:>8.2}x {:>12.2?}",
+            event,
+            tenants.len(),
+            unregulated.makespan_us / 1e3,
+            report.outcome.makespan_us / 1e3,
+            unregulated.makespan_us / report.outcome.makespan_us,
+            took
+        );
+        // Online requirement: the plan must never be worse than the
+        // unregulated deployment we could fall back to.
+        assert!(report.outcome.makespan_us <= unregulated.makespan_us * 1.0001);
+    }
+    println!(
+        "\ntotal search time across 6 reconfigurations: {total_search:.2?} \
+         (amortized {:.2?} per event — offline-quality plans at online cost)",
+        total_search / 6
+    );
+}

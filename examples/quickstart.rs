@@ -1,0 +1,59 @@
+//! Quickstart: build a three-tenant combo, price it with the cost model,
+//! run every baseline and the GACER search, and print a Fig. 7-style row.
+//!
+//!     cargo run --release --example quickstart
+
+use gacer::prelude::*;
+use gacer::bench_util::{fig7_header, fig7_row, run_combo};
+
+fn main() {
+    // 1. Pick a platform and a multi-tenant combination (the paper's
+    //    heavy-workload combo).
+    let platform = Platform::titan_v();
+    let combo = ["R50", "V16", "M3"];
+
+    // 2. Run all seven strategies (4 baselines + Spatial/Temporal/GACER).
+    let cells = run_combo(&combo, &platform, SearchConfig::default());
+    println!("{}", fig7_header(&cells));
+    println!("{}", fig7_row(&zoo::combo_label(&combo), &cells));
+
+    // 3. Inspect what the GACER search actually decided.
+    let cost = CostModel::new(platform);
+    let tenants = zoo::build_combo(&combo);
+    let ts = TenantSet::new(&tenants, &cost);
+    let report = GacerSearch::new(
+        &ts,
+        SimOptions::for_platform(&platform),
+        SearchConfig::default(),
+    )
+    .run();
+    println!(
+        "\nGACER plan: {:.2} ms -> {:.2} ms ({:.2}x over Stream-Parallel), \
+         {} simulator evaluations in {:?}",
+        report.initial.makespan_us / 1e3,
+        report.outcome.makespan_us / 1e3,
+        report.speedup_vs_initial(),
+        report.evaluations,
+        report.elapsed,
+    );
+    for (i, d) in tenants.iter().enumerate() {
+        println!(
+            "  {:<5} pointers at {:?}, {} operators decomposed",
+            d.name,
+            report.plan.pointers.list(i),
+            report.plan.chunking[i].len()
+        );
+    }
+
+    // 4. Utilization evidence (Fig. 8 style).
+    let out = ts.simulate(
+        &report.plan,
+        SimOptions::for_platform(&platform).with_trace(),
+    );
+    let tr = out.trace.unwrap();
+    println!(
+        "\nGACER mean SM occupancy {:.1}%  |  trace: {}",
+        tr.mean_occupancy(),
+        tr.sparkline(48)
+    );
+}

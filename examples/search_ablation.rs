@@ -1,0 +1,93 @@
+//! Granularity ablation: sweep temporal granularity (Fig. 9 style) and
+//! spatial decomposition depth (Table 3 style) on a chosen combo, then
+//! compare with what the joint search picks — showing the "sweet zone"
+//! and that Algorithm 1 lands inside it.
+//!
+//!     cargo run --release --example search_ablation [-- --models R50,V16,M3]
+
+use gacer::models::zoo;
+use gacer::plan::{DeploymentPlan, TenantSet};
+use gacer::profile::{CostModel, Platform};
+use gacer::gpu::SimOptions;
+use gacer::search::{GacerSearch, SearchConfig};
+use gacer::temporal::PointerMatrix;
+use gacer::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let names: Vec<String> = args
+        .opt_or("models", "R50,V16,M3")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+    let platform = Platform::titan_v();
+    let cost = CostModel::new(platform);
+    let tenants = zoo::build_combo(&refs);
+    let ts = TenantSet::new(&tenants, &cost);
+    let opts = SimOptions::for_platform(&platform);
+
+    println!("== temporal granularity sweep: {} ==", zoo::combo_label(&refs));
+    let mut best_fixed = f64::INFINITY;
+    for k in [1usize, 2, 3, 4, 6, 8, 12, 16] {
+        let plan = DeploymentPlan {
+            chunking: vec![Default::default(); tenants.len()],
+            pointers: PointerMatrix::equal_segments(&tenants, k),
+        };
+        let out = ts.simulate(&plan, opts);
+        best_fixed = best_fixed.min(out.makespan_us);
+        println!(
+            "  segment-{k:<3} {:>9.2} ms   util {:>5.1}%   sync idle {:>7.1} us",
+            out.makespan_us / 1e3,
+            out.avg_utilization,
+            out.sync_idle_us
+        );
+    }
+    let op_wise = DeploymentPlan {
+        chunking: vec![Default::default(); tenants.len()],
+        pointers: PointerMatrix::operator_wise(&tenants),
+    };
+    let out = ts.simulate(&op_wise, opts);
+    println!(
+        "  operator-wise {:>7.2} ms   util {:>5.1}%   sync idle {:>7.1} us   <- overhead-dominated",
+        out.makespan_us / 1e3,
+        out.avg_utilization,
+        out.sync_idle_us
+    );
+
+    println!("\n== spatial decomposition depth sweep (uniform split of all chunkable convs) ==");
+    for pieces in [1usize, 2, 4, 8] {
+        let mut plan = DeploymentPlan::unregulated(tenants.len());
+        if pieces > 1 {
+            for (ti, d) in tenants.iter().enumerate() {
+                for op in &d.ops {
+                    if op.chunkable() && op.kind.class() == "conv" && op.batch % pieces == 0 {
+                        plan.chunking[ti].insert(op.id, vec![op.batch / pieces; pieces]);
+                    }
+                }
+            }
+        }
+        let out = ts.simulate(&plan, opts);
+        println!(
+            "  split x{pieces}: {:>9.2} ms   util {:>5.1}%   overhead work {:>8.0} %us",
+            out.makespan_us / 1e3,
+            out.avg_utilization,
+            out.overhead_sm_time
+        );
+    }
+
+    println!("\n== joint search (Algorithm 1) ==");
+    let report = GacerSearch::new(&ts, opts, SearchConfig::default()).run();
+    println!(
+        "  GACER: {:>9.2} ms  (fixed-granularity best was {:.2} ms; search \
+         used {} evaluations, {:?})",
+        report.outcome.makespan_us / 1e3,
+        best_fixed / 1e3,
+        report.evaluations,
+        report.elapsed
+    );
+    assert!(
+        report.outcome.makespan_us <= best_fixed * 1.05,
+        "the searched plan should land at or inside the sweet zone"
+    );
+}

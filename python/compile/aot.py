@@ -1,0 +1,230 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for Rust.
+
+Emits HLO *text* (NOT `.serialize()`): jax >= 0.5 writes HloModuleProto
+with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+published `xla` crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts:
+  artifacts/<name>.hlo.txt   one per (operator, shape, micro-batch) variant
+                             and one for the TinyCNN serving model
+  artifacts/manifest.json    entry name -> {inputs, outputs, dtype, meta}
+  artifacts/goldens.json     deterministic input/output samples for Rust
+                             integration tests (numeric parity with JAX)
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from . import ops
+
+# Micro-batch variants lowered for the chunkable dense operator so the Rust
+# PlanExecutor can realize any GACER list_B split with compiled code.
+CHUNK_VARIANTS = (1, 2, 4, 8, 16, 32)
+SERVE_BATCHES = (1, 2, 4, 8, 16, 32)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_of(s):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest: dict[str, dict] = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, arg_specs: list, meta: dict | None = None):
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, path), "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *arg_specs)
+        if not isinstance(out_avals, (list, tuple)):
+            out_avals = (out_avals,)
+        self.manifest[name] = {
+            "path": path,
+            "inputs": [_shape_of(s) for s in arg_specs],
+            "outputs": [_shape_of(s) for s in out_avals],
+            "meta": meta or {},
+        }
+
+    def write_manifest(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=2, sort_keys=True)
+
+
+def emit_operator_artifacts(em: Emitter):
+    """Per-operator entries at the micro-batch variants GACER can issue."""
+    # Chunkable dense layer: (B, 512) @ (512, 128) — each chunk its own HLO.
+    F_IN, F_OUT = 512, 128
+    w = _spec((F_IN, F_OUT))
+    b = _spec((F_OUT,))
+    for bsz in SERVE_BATCHES:
+        em.emit(
+            f"linear_b{bsz}",
+            lambda x, w, b: ops.linear(x, w, b, relu=True),
+            [_spec((bsz, F_IN)), w, b],
+            meta={"op": "linear", "batch": bsz, "relu": True},
+        )
+    for chunk in CHUNK_VARIANTS:
+        bsz = 32  # full batch the chunking decomposes
+        if bsz % chunk:
+            continue
+        em.emit(
+            f"linear_chunked_b{bsz}_c{chunk}",
+            lambda x, w, b, _c=chunk: ops.linear_chunked(x, w, b, chunk=_c),
+            [_spec((bsz, F_IN)), w, b],
+            meta={"op": "linear_chunked", "batch": bsz, "chunk": chunk},
+        )
+    # Conv operator at several batches (16x16x16 -> 16x16x32, the paper's
+    # high-occupancy class).
+    for bsz in (1, 2, 4, 8):
+        em.emit(
+            f"conv3x3_b{bsz}",
+            lambda x, w, b: ops.conv2d(x, w, b, stride=1, pad=1, relu=True),
+            [_spec((bsz, 16, 16, 16)), _spec((3, 3, 16, 32)), _spec((32,))],
+            meta={"op": "conv3x3", "batch": bsz},
+        )
+    # Batchnorm (bandwidth-bound class).
+    for bsz in (1, 8):
+        em.emit(
+            f"batchnorm_b{bsz}",
+            ops.batchnorm,
+            [
+                _spec((bsz, 16, 16, 32)),
+                _spec((32,)),
+                _spec((32,)),
+                _spec((32,)),
+                _spec((32,)),
+            ],
+            meta={"op": "batchnorm", "batch": bsz},
+        )
+    # LSTM cell (language tenant).
+    H, I = 128, 64
+    em.emit(
+        "lstm_cell_b16",
+        ops.lstm_cell,
+        [
+            _spec((16, I)),
+            _spec((16, H)),
+            _spec((16, H)),
+            _spec((I, 4 * H)),
+            _spec((H, 4 * H)),
+            _spec((4 * H,)),
+        ],
+        meta={"op": "lstm_cell", "batch": 16},
+    )
+    # Attention block (recommendation tenant).
+    S, D = 16, 64
+    em.emit(
+        "attention_b8",
+        ops.attention,
+        [_spec((8, S, D))] + [_spec((D, D))] * 4,
+        meta={"op": "attention", "batch": 8, "seq": S},
+    )
+
+
+def emit_model_artifacts(em: Emitter):
+    """TinyCNN forward at every serving batch size."""
+    params = model_lib.tiny_cnn_init(jax.random.PRNGKey(0))
+    flat = model_lib.flatten_params(params)
+    param_specs = [_spec(p.shape) for p in flat]
+
+    def fwd(x, *ps):
+        return model_lib.tiny_cnn_forward(model_lib.TinyCNNParams(*ps), x)
+
+    for bsz in SERVE_BATCHES:
+        em.emit(
+            f"tiny_cnn_b{bsz}",
+            fwd,
+            [_spec((bsz, 32, 32, 3))] + param_specs,
+            meta={"op": "tiny_cnn", "batch": bsz, "n_params": len(flat)},
+        )
+    # Persist the concrete parameters for the Rust server (JSON keeps the
+    # Rust side dependency-free; sizes are small for the serving model).
+    params_doc = [
+        {"shape": list(p.shape), "data": np.asarray(p).ravel().tolist()}
+        for p in flat
+    ]
+    with open(os.path.join(em.out_dir, "tiny_cnn_params.json"), "w") as f:
+        json.dump(params_doc, f)
+    return params, flat
+
+
+def emit_goldens(em: Emitter, params, flat):
+    """Deterministic numeric goldens for Rust integration tests."""
+    goldens = {}
+    # TinyCNN b=2
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3), jnp.float32)
+    y = model_lib.tiny_cnn_forward(params, x)
+    goldens["tiny_cnn_b2"] = {
+        "x": np.asarray(x).ravel().tolist(),
+        "y": np.asarray(y).ravel().tolist(),
+    }
+    # Linear b=4
+    k = jax.random.PRNGKey(2)
+    xk, wk, bk = jax.random.split(k, 3)
+    xl = jax.random.normal(xk, (4, 512), jnp.float32)
+    wl = jax.random.normal(wk, (512, 128), jnp.float32) * 0.05
+    bl = jax.random.normal(bk, (128,), jnp.float32)
+    yl = ops.linear(xl, wl, bl, relu=True)
+    goldens["linear_b4"] = {
+        "x": np.asarray(xl).ravel().tolist(),
+        "w": np.asarray(wl).ravel().tolist(),
+        "b": np.asarray(bl).ravel().tolist(),
+        "y": np.asarray(yl).ravel().tolist(),
+    }
+    with open(os.path.join(em.out_dir, "goldens.json"), "w") as f:
+        json.dump(goldens, f)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts/model.hlo.txt",
+                        help="primary artifact path; siblings land next to it")
+    args = parser.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+
+    em = Emitter(out_dir)
+    emit_operator_artifacts(em)
+    params, flat = emit_model_artifacts(em)
+    emit_goldens(em, params, flat)
+    em.write_manifest()
+
+    # The Makefile's primary target: alias the b8 serving model.
+    primary = em.manifest["tiny_cnn_b8"]["path"]
+    src = os.path.join(out_dir, primary)
+    with open(src) as f, open(args.out if os.path.isabs(args.out)
+                              else os.path.abspath(args.out), "w") as g:
+        g.write(f.read())
+    print(f"emitted {len(em.manifest)} artifacts to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels for the GACER compile path (build-time only)."""
+
+from .chunked_matmul import chunk_vmem_bytes, chunked_matmul
+from .fused_ops import batchnorm_inference, bias_relu
+from .matmul import matmul, vmem_footprint_bytes
+
+__all__ = [
+    "matmul",
+    "chunked_matmul",
+    "bias_relu",
+    "batchnorm_inference",
+    "vmem_footprint_bytes",
+    "chunk_vmem_bytes",
+]

@@ -1,0 +1,64 @@
+"""Layer-1 Pallas chunked (micro-batch) matmul — GACER's spatial-regulation
+knob expressed as a kernel.
+
+The paper resizes an operator O^B into micro-batches [B^1..B^j] (Eq. 5) so
+partial workloads fit SM residues. Here the micro-batch is the *grid*
+dimension: each grid step stages one (chunk, M, K) slab of activations into
+VMEM and runs it against the resident weights. Smaller chunks -> smaller
+per-step VMEM residency -> more co-residency headroom, exactly the paper's
+chunk-size <-> SM-occupancy trade-off re-expressed for a scratchpad machine
+(DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _chunked_kernel(x_ref, w_ref, o_ref):
+    # One micro-batch per grid step; einsum contracts on the MXU.
+    o_ref[...] = jnp.einsum(
+        "bmk,kn->bmn",
+        x_ref[...],
+        w_ref[...],
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+def chunk_vmem_bytes(chunk: int, m: int, k: int, n: int, itemsize: int = 4) -> int:
+    """Per-grid-step VMEM residency: activation slab + weights + output slab."""
+    return (chunk * m * k + k * n + chunk * m * n) * itemsize
+
+
+def chunked_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    chunk: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched matmul (B, M, K) @ (K, N) -> (B, M, N), grid over B-chunks.
+
+    `chunk` must divide B; defaults to B (single step, no decomposition) —
+    the GACER coordinator selects the chunk per its `list_B` regulation.
+    """
+    B, M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, f"inner dims mismatch: {K} vs {K2}"
+    chunk = chunk or B
+    assert B % chunk == 0, f"chunk {chunk} must divide batch {B}"
+    out_dtype = jnp.promote_types(x.dtype, w.dtype)
+
+    return pl.pallas_call(
+        _chunked_kernel,
+        grid=(B // chunk,),
+        in_specs=[
+            pl.BlockSpec((chunk, M, K), lambda b: (b, 0, 0)),
+            pl.BlockSpec((K, N), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((chunk, M, N), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, M, N), out_dtype),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,116 @@
+"""Layer-1 Pallas matmul kernels — the GEMM hot-spot backing conv (im2col)
+and fully-connected operators in the GACER operator library.
+
+Hardware-adaptation note (DESIGN.md §3): the paper chunks GPU threadblock
+work; here the tile is the unit of HBM->VMEM staging expressed with
+`BlockSpec`, and accumulation targets the MXU (`preferred_element_type=
+jnp.float32`). Kernels are lowered with `interpret=True` so they execute on
+the CPU PJRT backend (real-TPU lowering emits Mosaic custom-calls that the
+CPU plugin cannot run); TPU performance is estimated analytically from the
+VMEM footprint + MXU utilization of the chosen tile shapes (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default tile shapes. 128x128 matches the MXU systolic array; the K tile is
+# sized so x-tile + y-tile + fp32 accumulator stay well under ~16 MiB VMEM:
+#   vmem_bytes = (bm*bk + bk*bn) * in_bytes + bm*bn * 4
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, in_dtype=jnp.float32) -> int:
+    """Analytic VMEM residency of one grid step (double-buffered inputs)."""
+    in_bytes = jnp.dtype(in_dtype).itemsize
+    # x tile + y tile (x2 for double buffering) + fp32 accumulator scratch.
+    return 2 * (bm * bk + bk * bn) * in_bytes + bm * bn * 4
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """Simple variant: full-K blocks, one dot per (i, j) grid step."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _matmul_ktiled_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk: int):
+    """K-tiled variant: fp32 VMEM accumulator, sequential K grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pick_tile(dim: int, pref: int) -> int:
+    """Largest divisor of `dim` that is <= pref (keeps grids exact)."""
+    t = min(pref, dim)
+    while dim % t:
+        t -= 1
+    return t
+
+
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tiled Pallas matmul: (M, K) @ (K, N) -> (M, N).
+
+    If a K tile smaller than K is selected, the K-tiled kernel with a VMEM
+    accumulator is used; otherwise the full-K single-dot kernel.
+    """
+    M, K = x.shape
+    K2, N = y.shape
+    assert K == K2, f"inner dims mismatch: {K} vs {K2}"
+    bm = _pick_tile(M, bm or DEFAULT_BM)
+    bn = _pick_tile(N, bn or DEFAULT_BN)
+    bk = _pick_tile(K, bk or DEFAULT_BK)
+    out_dtype = jnp.promote_types(x.dtype, y.dtype)
+    out_shape = jax.ShapeDtypeStruct((M, N), out_dtype)
+
+    if bk == K:
+        return pl.pallas_call(
+            _matmul_kernel,
+            grid=(M // bm, N // bn),
+            in_specs=[
+                pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+                pl.BlockSpec((K, bn), lambda i, j: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            out_shape=out_shape,
+            interpret=interpret,
+        )(x, y)
+
+    nk = K // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_ktiled_kernel, nk=nk),
+        grid=(M // bm, N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)

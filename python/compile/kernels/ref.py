@@ -1,0 +1,39 @@
+"""Pure-jnp correctness oracles for every Layer-1 Pallas kernel.
+
+pytest asserts allclose(kernel(...), ref(...)) — this is the core
+correctness signal for the compile path (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    out_dtype = jnp.promote_types(x.dtype, y.dtype)
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def chunked_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    out_dtype = jnp.promote_types(x.dtype, w.dtype)
+    return jnp.einsum(
+        "bmk,kn->bmn", x, w, preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def bias_relu_ref(x: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.maximum(x + b[None, :], 0.0).astype(x.dtype)
+
+
+def batchnorm_inference_ref(
+    x: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    mean: jax.Array,
+    var: jax.Array,
+    *,
+    eps: float = 1e-5,
+) -> jax.Array:
+    inv = gamma / jnp.sqrt(var + eps)
+    return ((x - mean[None, :]) * inv[None, :] + beta[None, :]).astype(x.dtype)

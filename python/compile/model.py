@@ -1,0 +1,79 @@
+"""Layer-2 model definitions for the GACER compile path.
+
+`TinyCNN` is the e2e serving model: a small conv net whose forward pass is
+AOT-lowered to a single HLO artifact served by the Rust coordinator. The
+per-operator entry points below it are lowered separately so the coordinator
+can also issue operator-granular plans (the paper's operator-level
+regulation) with compiled code.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ops
+
+
+class TinyCNNParams(NamedTuple):
+    """Parameters of the 3-conv + 2-fc serving model (NHWC, 32x32x3 in)."""
+
+    conv1_w: jax.Array  # (3,3,3,16)
+    conv1_b: jax.Array
+    bn1_gamma: jax.Array
+    bn1_beta: jax.Array
+    bn1_mean: jax.Array
+    bn1_var: jax.Array
+    conv2_w: jax.Array  # (3,3,16,32)
+    conv2_b: jax.Array
+    conv3_w: jax.Array  # (3,3,32,32)
+    conv3_b: jax.Array
+    fc1_w: jax.Array  # (512, 128)
+    fc1_b: jax.Array
+    fc2_w: jax.Array  # (128, 10)
+    fc2_b: jax.Array
+
+
+def tiny_cnn_init(key: jax.Array) -> TinyCNNParams:
+    ks = jax.random.split(key, 7)
+
+    def he(k, shape, fan_in):
+        return jax.random.normal(k, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+    return TinyCNNParams(
+        conv1_w=he(ks[0], (3, 3, 3, 16), 27),
+        conv1_b=jnp.zeros(16),
+        bn1_gamma=jnp.ones(16),
+        bn1_beta=jnp.zeros(16),
+        bn1_mean=jnp.zeros(16),
+        bn1_var=jnp.ones(16),
+        conv2_w=he(ks[1], (3, 3, 16, 32), 144),
+        conv2_b=jnp.zeros(32),
+        conv3_w=he(ks[2], (3, 3, 32, 32), 288),
+        conv3_b=jnp.zeros(32),
+        fc1_w=he(ks[3], (512, 128), 512),
+        fc1_b=jnp.zeros(128),
+        fc2_w=he(ks[4], (128, 10), 128),
+        fc2_b=jnp.zeros(10),
+    )
+
+
+def tiny_cnn_forward(params: TinyCNNParams, x: jax.Array) -> jax.Array:
+    """Forward pass: (B, 32, 32, 3) -> (B, 10) logits."""
+    h = ops.conv2d(x, params.conv1_w, params.conv1_b, stride=1, pad=1, relu=True)
+    h = ops.batchnorm(h, params.bn1_gamma, params.bn1_beta, params.bn1_mean, params.bn1_var)
+    h = ops.maxpool2d(h)  # 16x16x16
+    h = ops.conv2d(h, params.conv2_w, params.conv2_b, stride=1, pad=1, relu=True)
+    h = ops.maxpool2d(h)  # 8x8x32
+    h = ops.conv2d(h, params.conv3_w, params.conv3_b, stride=1, pad=1, relu=True)
+    h = ops.maxpool2d(h)  # 4x4x32
+    h = h.reshape(h.shape[0], -1)  # (B, 512)
+    h = ops.linear(h, params.fc1_w, params.fc1_b, relu=True)
+    return ops.linear(h, params.fc2_w, params.fc2_b, relu=False)
+
+
+def flatten_params(params: TinyCNNParams) -> list[jax.Array]:
+    """Deterministic argument order used by aot.py and the Rust runtime."""
+    return list(params)

@@ -1,0 +1,169 @@
+"""Layer-2 JAX operator library for the GACER compile path.
+
+Every operator the Rust coordinator can issue is defined here as a jittable
+JAX function whose GEMM hot-spots route through the Layer-1 Pallas kernels.
+`aot.py` lowers each (operator, shape, micro-batch) variant to HLO text so
+the Rust `PlanExecutor` can realize any GACER `list_B` chunking with
+AOT-compiled code — Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import batchnorm_inference, bias_relu, chunked_matmul, matmul
+
+# Kernels are lowered interpret=True (CPU PJRT cannot run Mosaic calls).
+INTERPRET = True
+
+
+# ---------------------------------------------------------------------------
+# Convolution (the paper's dominant, high-SM-occupancy operator class)
+# ---------------------------------------------------------------------------
+
+def _im2col(x: jax.Array, kh: int, kw: int, stride: int, pad: int) -> jax.Array:
+    """(B, H, W, C) -> (B*OH*OW, KH*KW*C) patch matrix."""
+    B, H, W, C = x.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    OH = (H + 2 * pad - kh) // stride + 1
+    OW = (W + 2 * pad - kw) // stride + 1
+    # Gather patches: (B, OH, OW, KH, KW, C)
+    patches = jax.lax.conv_general_dilated_patches(
+        x.transpose(0, 3, 1, 2),  # NCHW for patches helper
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding="VALID",
+    )  # (B, C*KH*KW, OH, OW)
+    patches = patches.transpose(0, 2, 3, 1)  # (B, OH, OW, C*KH*KW)
+    return patches.reshape(B * OH * OW, C * kh * kw), OH, OW
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    stride: int = 1,
+    pad: int = 1,
+    relu: bool = True,
+) -> jax.Array:
+    """Conv2D (NHWC x HWIO) via im2col + Pallas matmul, fused bias(+ReLU).
+
+    x: (B, H, W, Cin), w: (KH, KW, Cin, Cout), b: (Cout,).
+    """
+    B = x.shape[0]
+    KH, KW, Cin, Cout = w.shape
+    cols, OH, OW = _im2col(x, KH, KW, stride, pad)
+    # conv_general_dilated_patches emits channel-major (C, KH, KW) features;
+    # reorder the weight matrix to match.
+    wmat = w.transpose(2, 0, 1, 3).reshape(Cin * KH * KW, Cout)
+    out = matmul(cols, wmat, interpret=INTERPRET)
+    if relu:
+        out = bias_relu(out, b, interpret=INTERPRET)
+    else:
+        out = out + b[None, :]
+    return out.reshape(B, OH, OW, Cout)
+
+
+# ---------------------------------------------------------------------------
+# Dense / FC (chunkable along batch — GACER's spatial knob)
+# ---------------------------------------------------------------------------
+
+def linear(x: jax.Array, w: jax.Array, b: jax.Array, *, relu: bool = False) -> jax.Array:
+    """(B, F) @ (F, N) + b, optional fused ReLU epilogue."""
+    out = matmul(x, w, interpret=INTERPRET)
+    if relu:
+        return bias_relu(out, b, interpret=INTERPRET)
+    return out + b[None, :]
+
+
+def linear_chunked(x: jax.Array, w: jax.Array, b: jax.Array, *, chunk: int) -> jax.Array:
+    """Batch-chunked dense layer: the AOT realization of Eq. 5.
+
+    x: (B, F) viewed as (B, 1, F) micro-batch slabs through the chunked
+    Pallas kernel; the chunk is a build-time constant so each variant
+    compiles to its own artifact.
+    """
+    B, F = x.shape
+    out = chunked_matmul(x[:, None, :], w, chunk=chunk, interpret=INTERPRET)
+    return out.reshape(B, -1) + b[None, :]
+
+
+# ---------------------------------------------------------------------------
+# Normalization / pooling / activations (bandwidth-bound class)
+# ---------------------------------------------------------------------------
+
+def batchnorm(x: jax.Array, gamma, beta, mean, var) -> jax.Array:
+    """Inference BN over NHWC via the fused Pallas FMA kernel."""
+    B, H, W, C = x.shape
+    flat = batchnorm_inference(
+        x.reshape(B * H * W, C), gamma, beta, mean, var, interpret=INTERPRET
+    )
+    return flat.reshape(B, H, W, C)
+
+
+def relu(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0.0)
+
+
+def maxpool2d(x: jax.Array, *, window: int = 2, stride: int = 2) -> jax.Array:
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        (1, window, window, 1),
+        (1, stride, stride, 1),
+        "VALID",
+    )
+
+
+def avgpool_global(x: jax.Array) -> jax.Array:
+    """Global average pool (B, H, W, C) -> (B, C)."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# LSTM cell (the language-model tenant's repeated operator)
+# ---------------------------------------------------------------------------
+
+def lstm_cell(
+    x: jax.Array,
+    h: jax.Array,
+    c: jax.Array,
+    w_ih: jax.Array,
+    w_hh: jax.Array,
+    b: jax.Array,
+):
+    """One LSTM step. x: (B, I), h/c: (B, H), w_ih: (I, 4H), w_hh: (H, 4H)."""
+    gates = matmul(x, w_ih, interpret=INTERPRET) + matmul(
+        h, w_hh, interpret=INTERPRET
+    ) + b[None, :]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+# ---------------------------------------------------------------------------
+# Attention block (the BST recommendation tenant's operator)
+# ---------------------------------------------------------------------------
+
+def attention(
+    x: jax.Array,
+    wq: jax.Array,
+    wk: jax.Array,
+    wv: jax.Array,
+    wo: jax.Array,
+) -> jax.Array:
+    """Single-head self-attention over (B, S, D) with Pallas GEMMs."""
+    B, S, D = x.shape
+    flat = x.reshape(B * S, D)
+    q = matmul(flat, wq, interpret=INTERPRET).reshape(B, S, -1)
+    k = matmul(flat, wk, interpret=INTERPRET).reshape(B, S, -1)
+    v = matmul(flat, wv, interpret=INTERPRET).reshape(B, S, -1)
+    scores = jnp.einsum("bsd,btd->bst", q, k) / jnp.sqrt(q.shape[-1]).astype(x.dtype)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bst,btd->bsd", attn, v).reshape(B * S, -1)
+    return matmul(ctx, wo, interpret=INTERPRET).reshape(B, S, D)

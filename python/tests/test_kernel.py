@@ -1,0 +1,196 @@
+"""Kernel-vs-reference correctness: the CORE signal for the compile path.
+
+Every Layer-1 Pallas kernel is checked against its pure-jnp oracle in
+`kernels/ref.py`, both at fixed shapes and under hypothesis-driven sweeps
+of shapes, dtypes, tile sizes, and chunk partitions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import (
+    batchnorm_inference,
+    bias_relu,
+    chunk_vmem_bytes,
+    chunked_matmul,
+    matmul,
+    vmem_footprint_bytes,
+)
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+class TestMatmul:
+    def test_basic(self):
+        x, y = _rand(0, (64, 48)), _rand(1, (48, 96))
+        np.testing.assert_allclose(matmul(x, y), ref.matmul_ref(x, y), atol=1e-4)
+
+    def test_full_k_path(self):
+        x, y = _rand(2, (32, 16)), _rand(3, (16, 32))
+        out = matmul(x, y, bk=16)  # bk == K -> single-dot kernel
+        np.testing.assert_allclose(out, ref.matmul_ref(x, y), atol=1e-4)
+
+    def test_k_tiled_path(self):
+        x, y = _rand(4, (64, 128)), _rand(5, (128, 64))
+        out = matmul(x, y, bk=32)  # forces the scratch-accumulator kernel
+        np.testing.assert_allclose(out, ref.matmul_ref(x, y), atol=1e-3)
+
+    def test_non_square(self):
+        x, y = _rand(6, (8, 384)), _rand(7, (384, 24))
+        np.testing.assert_allclose(matmul(x, y), ref.matmul_ref(x, y), atol=1e-3)
+
+    def test_awkward_tile_dims(self):
+        # 6, 10, 14 force _pick_tile to fall back to small divisors.
+        x, y = _rand(8, (6, 10)), _rand(9, (10, 14))
+        np.testing.assert_allclose(matmul(x, y), ref.matmul_ref(x, y), atol=1e-4)
+
+    def test_bf16_inputs(self):
+        x = _rand(10, (32, 32), jnp.bfloat16)
+        y = _rand(11, (32, 32), jnp.bfloat16)
+        out = matmul(x, y)
+        assert out.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            out.astype(jnp.float32),
+            ref.matmul_ref(x, y).astype(jnp.float32),
+            atol=0.25,
+        )
+
+    def test_identity(self):
+        x = _rand(12, (16, 16))
+        np.testing.assert_allclose(matmul(x, jnp.eye(16)), x, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 12),
+        k=st.integers(1, 12),
+        n=st.integers(1, 12),
+        bm=st.integers(1, 12),
+        bn=st.integers(1, 12),
+        bk=st.integers(1, 12),
+    )
+    def test_property_shape_tile_sweep(self, m, k, n, bm, bn, bk):
+        m, k, n = m * 4, k * 4, n * 4
+        x = _rand(m * 131 + k, (m, k))
+        y = _rand(n * 137 + k, (k, n))
+        out = matmul(x, y, bm=bm, bn=bn, bk=bk)
+        assert out.shape == (m, n)
+        np.testing.assert_allclose(out, ref.matmul_ref(x, y), atol=1e-3)
+
+    def test_vmem_footprint_monotone_in_tiles(self):
+        assert vmem_footprint_bytes(128, 128, 128) > vmem_footprint_bytes(64, 64, 64)
+        # Documented default stays under a 16 MiB VMEM budget.
+        assert vmem_footprint_bytes(128, 128, 128) < 16 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# chunked_matmul — the spatial-regulation kernel
+# ---------------------------------------------------------------------------
+
+class TestChunkedMatmul:
+    def test_basic(self):
+        x, w = _rand(20, (8, 16, 24)), _rand(21, (24, 32))
+        np.testing.assert_allclose(
+            chunked_matmul(x, w, chunk=4), ref.chunked_matmul_ref(x, w), atol=1e-4
+        )
+
+    def test_chunk_equals_batch_is_identity_partition(self):
+        x, w = _rand(22, (8, 4, 8)), _rand(23, (8, 16))
+        np.testing.assert_allclose(
+            chunked_matmul(x, w, chunk=8), ref.chunked_matmul_ref(x, w), atol=1e-4
+        )
+
+    def test_chunk_one_finest_granularity(self):
+        x, w = _rand(24, (6, 4, 8)), _rand(25, (8, 8))
+        np.testing.assert_allclose(
+            chunked_matmul(x, w, chunk=1), ref.chunked_matmul_ref(x, w), atol=1e-4
+        )
+
+    def test_invalid_chunk_rejected(self):
+        x, w = _rand(26, (8, 4, 8)), _rand(27, (8, 8))
+        with pytest.raises(AssertionError):
+            chunked_matmul(x, w, chunk=3)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b_factors=st.sampled_from([(1, 1), (2, 1), (2, 2), (4, 2), (8, 4), (6, 3), (12, 4)]),
+        m=st.integers(1, 8),
+        k=st.integers(1, 8),
+        n=st.integers(1, 8),
+    )
+    def test_property_chunk_partition_invariance(self, b_factors, m, k, n):
+        """concat(chunks) == full computation — Eq. 5's correctness claim."""
+        b, chunk = b_factors
+        m, k, n = m * 2, k * 2, n * 2
+        x = _rand(b * 17 + m, (b, m, k))
+        w = _rand(n * 19 + k, (k, n))
+        full = chunked_matmul(x, w, chunk=b)
+        split = chunked_matmul(x, w, chunk=chunk)
+        np.testing.assert_allclose(split, full, atol=1e-4)
+        np.testing.assert_allclose(split, ref.chunked_matmul_ref(x, w), atol=1e-3)
+
+    def test_vmem_scales_with_chunk(self):
+        small = chunk_vmem_bytes(1, 16, 64, 32)
+        large = chunk_vmem_bytes(8, 16, 64, 32)
+        assert large > small  # the paper's occupancy<->chunk trade-off
+
+
+# ---------------------------------------------------------------------------
+# fused element-wise kernels
+# ---------------------------------------------------------------------------
+
+class TestFusedOps:
+    def test_bias_relu(self):
+        x, b = _rand(30, (32, 16)), _rand(31, (16,))
+        np.testing.assert_allclose(
+            bias_relu(x, b), ref.bias_relu_ref(x, b), atol=1e-6
+        )
+
+    def test_bias_relu_clamps_negative(self):
+        x = -jnp.ones((8, 4))
+        b = jnp.zeros(4)
+        assert float(jnp.max(bias_relu(x, b))) == 0.0
+
+    def test_bias_relu_blocked(self):
+        x, b = _rand(32, (64, 8)), _rand(33, (8,))
+        np.testing.assert_allclose(
+            bias_relu(x, b, block_rows=16), ref.bias_relu_ref(x, b), atol=1e-6
+        )
+
+    def test_batchnorm(self):
+        x = _rand(34, (48, 12))
+        gamma, beta = _rand(35, (12,)), _rand(36, (12,))
+        mean, var = _rand(37, (12,), scale=0.1), jnp.abs(_rand(38, (12,))) + 0.5
+        np.testing.assert_allclose(
+            batchnorm_inference(x, gamma, beta, mean, var),
+            ref.batchnorm_inference_ref(x, gamma, beta, mean, var),
+            atol=1e-4,
+        )
+
+    def test_batchnorm_identity_stats(self):
+        x = _rand(39, (16, 8))
+        out = batchnorm_inference(
+            x, jnp.ones(8), jnp.zeros(8), jnp.zeros(8), jnp.ones(8) - 1e-5
+        )
+        np.testing.assert_allclose(out, x, atol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(r=st.integers(1, 16), c=st.integers(1, 16), br=st.integers(1, 16))
+    def test_property_bias_relu_block_sweep(self, r, c, br):
+        x = _rand(r * 31 + c, (r * 2, c))
+        b = _rand(c * 7, (c,))
+        np.testing.assert_allclose(
+            bias_relu(x, b, block_rows=br), ref.bias_relu_ref(x, b), atol=1e-6
+        )

@@ -1,0 +1,158 @@
+"""Layer-2 operator library correctness vs plain-JAX references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import ops
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+def _conv_ref(x, w, b, stride, pad, relu):
+    out = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + b[None, None, None, :]
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+class TestConv2d:
+    def test_same_padding(self):
+        x, w, b = _rand(0, (2, 8, 8, 3)), _rand(1, (3, 3, 3, 8), 0.2), _rand(2, (8,))
+        np.testing.assert_allclose(
+            ops.conv2d(x, w, b, stride=1, pad=1, relu=True),
+            _conv_ref(x, w, b, 1, 1, True),
+            atol=1e-3,
+        )
+
+    def test_stride2_no_relu(self):
+        x, w, b = _rand(3, (1, 16, 16, 4)), _rand(4, (3, 3, 4, 8), 0.2), _rand(5, (8,))
+        np.testing.assert_allclose(
+            ops.conv2d(x, w, b, stride=2, pad=1, relu=False),
+            _conv_ref(x, w, b, 2, 1, False),
+            atol=1e-3,
+        )
+
+    def test_1x1_conv(self):
+        x, w, b = _rand(6, (2, 4, 4, 8)), _rand(7, (1, 1, 8, 16), 0.3), _rand(8, (16,))
+        np.testing.assert_allclose(
+            ops.conv2d(x, w, b, stride=1, pad=0, relu=True),
+            _conv_ref(x, w, b, 1, 0, True),
+            atol=1e-3,
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        hw=st.sampled_from([4, 6, 8]),
+        cin=st.sampled_from([1, 3, 4]),
+        cout=st.sampled_from([2, 4]),
+        stride=st.sampled_from([1, 2]),
+    )
+    def test_property_conv_sweep(self, b, hw, cin, cout, stride):
+        x = _rand(b * 100 + hw, (b, hw, hw, cin))
+        w = _rand(cin * 10 + cout, (3, 3, cin, cout), 0.2)
+        bias = _rand(cout, (cout,))
+        np.testing.assert_allclose(
+            ops.conv2d(x, w, bias, stride=stride, pad=1, relu=True),
+            _conv_ref(x, w, bias, stride, 1, True),
+            atol=1e-3,
+        )
+
+
+class TestLinear:
+    def test_linear(self):
+        x, w, b = _rand(10, (4, 32)), _rand(11, (32, 16), 0.2), _rand(12, (16,))
+        np.testing.assert_allclose(
+            ops.linear(x, w, b), x @ w + b[None, :], atol=1e-4
+        )
+
+    def test_linear_relu(self):
+        x, w, b = _rand(13, (4, 32)), _rand(14, (32, 16), 0.2), _rand(15, (16,))
+        np.testing.assert_allclose(
+            ops.linear(x, w, b, relu=True),
+            jnp.maximum(x @ w + b[None, :], 0.0),
+            atol=1e-4,
+        )
+
+    @settings(max_examples=12, deadline=None)
+    @given(chunk=st.sampled_from([1, 2, 4, 8, 16, 32]))
+    def test_property_chunked_linear_matches_full(self, chunk):
+        """Eq. 5: any chunking of the batch gives the same result."""
+        x, w, b = _rand(16, (32, 64)), _rand(17, (64, 16), 0.2), _rand(18, (16,))
+        np.testing.assert_allclose(
+            ops.linear_chunked(x, w, b, chunk=chunk),
+            x @ w + b[None, :],
+            atol=1e-4,
+        )
+
+
+class TestNormPool:
+    def test_batchnorm_nhwc(self):
+        x = _rand(20, (2, 4, 4, 8))
+        g, be = jnp.ones(8) * 1.5, jnp.ones(8) * 0.25
+        m, v = _rand(21, (8,), 0.1), jnp.abs(_rand(22, (8,))) + 0.5
+        expect = (x - m) / jnp.sqrt(v + 1e-5) * g + be
+        np.testing.assert_allclose(ops.batchnorm(x, g, be, m, v), expect, atol=1e-4)
+
+    def test_maxpool(self):
+        x = jnp.arange(16.0).reshape(1, 4, 4, 1)
+        out = ops.maxpool2d(x)
+        np.testing.assert_allclose(out.ravel(), [5.0, 7.0, 13.0, 15.0])
+
+    def test_avgpool_global(self):
+        x = jnp.ones((2, 4, 4, 3)) * 2.0
+        np.testing.assert_allclose(ops.avgpool_global(x), jnp.full((2, 3), 2.0))
+
+    def test_relu(self):
+        x = jnp.array([-1.0, 0.0, 2.0])
+        np.testing.assert_allclose(ops.relu(x), [0.0, 0.0, 2.0])
+
+
+class TestSequenceOps:
+    def test_lstm_cell_shapes_and_range(self):
+        B, I, H = 4, 8, 16
+        h, c = ops.lstm_cell(
+            _rand(30, (B, I)), jnp.zeros((B, H)), jnp.zeros((B, H)),
+            _rand(31, (I, 4 * H), 0.2), _rand(32, (H, 4 * H), 0.2),
+            _rand(33, (4 * H,)),
+        )
+        assert h.shape == (B, H) and c.shape == (B, H)
+        assert float(jnp.max(jnp.abs(h))) <= 1.0  # tanh*sigmoid bound
+
+    def test_lstm_cell_vs_manual(self):
+        B, I, H = 2, 4, 4
+        x = _rand(34, (B, I))
+        h0, c0 = _rand(35, (B, H)), _rand(36, (B, H))
+        wih, whh = _rand(37, (I, 4 * H), 0.3), _rand(38, (H, 4 * H), 0.3)
+        b = _rand(39, (4 * H,))
+        gates = x @ wih + h0 @ whh + b[None, :]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c_ref = jax.nn.sigmoid(f) * c0 + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h_ref = jax.nn.sigmoid(o) * jnp.tanh(c_ref)
+        h, c = ops.lstm_cell(x, h0, c0, wih, whh, b)
+        np.testing.assert_allclose(h, h_ref, atol=1e-5)
+        np.testing.assert_allclose(c, c_ref, atol=1e-5)
+
+    def test_attention_shape_and_rowsum(self):
+        B, S, D = 2, 8, 16
+        x = _rand(40, (B, S, D))
+        ws = [_rand(41 + i, (D, D), 0.2) for i in range(4)]
+        out = ops.attention(x, *ws)
+        assert out.shape == (B, S, D)
+
+    def test_attention_uniform_when_keys_equal(self):
+        # If all sequence positions are identical, attention output is the
+        # same at every position.
+        B, S, D = 1, 4, 8
+        x = jnp.broadcast_to(_rand(50, (B, 1, D)), (B, S, D))
+        ws = [_rand(51 + i, (D, D), 0.2) for i in range(4)]
+        out = ops.attention(x, *ws)
+        np.testing.assert_allclose(out[0, 0], out[0, -1], atol=1e-5)

@@ -1,0 +1,10 @@
+//! Bench: calibration-constant sensitivity ablation — the paper-shape
+//! ordering must survive the substitute substrate's free constants.
+
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    gacer::bench_util::experiments::ablation_sensitivity();
+    println!("\n[ablation_sensitivity] wall time: {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate Fig. 7 (runtime performance, 5 combos x 7 strategies,
+//! Titan V, normalized to CuDNN-Seq) and time the full strategy sweep.
+
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    gacer::bench_util::experiments::fig7();
+    println!("\n[fig7_speedup] wall time: {:.2?}", t0.elapsed());
+}

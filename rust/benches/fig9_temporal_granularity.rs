@@ -1,0 +1,11 @@
+//! Bench: regenerate Fig. 9 (temporal granularity sweep: model-wise ->
+//! segment-k -> operator-wise latency, three combos) — the temporal
+//! "sweet zone" evidence.
+
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    gacer::bench_util::experiments::fig9();
+    println!("\n[fig9_temporal_granularity] wall time: {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,103 @@
+//! Hot-path micro-benchmarks (criterion-lite: the offline environment has
+//! no criterion crate, so this is a hand-rolled steady-state timer with
+//! warmup + median-of-runs reporting).
+//!
+//! Targets the three L3 hot paths the performance pass optimizes
+//! (EXPERIMENTS.md §Perf):
+//!   * cost-model lookups (memoized `W(O^B)`/`T(O^B)`) — the search's
+//!     innermost dependency;
+//!   * plan compile + simulate — the per-candidate evaluation;
+//!   * one full coordinate-descent search — the Table 4 unit.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use gacer::gpu::SimOptions;
+use gacer::models::zoo;
+use gacer::plan::{DeploymentPlan, TenantSet};
+use gacer::profile::{CostModel, Platform};
+use gacer::search::{GacerSearch, SearchConfig};
+
+/// Run `f` for ~`target_ms`, report iterations/second and per-iter time.
+fn bench<F: FnMut()>(name: &str, target_ms: u64, mut f: F) {
+    // Warmup.
+    for _ in 0..3 {
+        f();
+    }
+    let t0 = Instant::now();
+    let mut iters = 0u64;
+    while t0.elapsed().as_millis() < target_ms as u128 {
+        f();
+        iters += 1;
+    }
+    let el = t0.elapsed();
+    let per = el.as_secs_f64() / iters as f64;
+    let per_str = if per >= 1e-3 {
+        format!("{:.3} ms", per * 1e3)
+    } else {
+        format!("{:.1} us", per * 1e6)
+    };
+    println!(
+        "{name:<42} {iters:>8} iters   {per_str:>12}/iter   {:>10.0} iters/s",
+        iters as f64 / el.as_secs_f64()
+    );
+}
+
+fn main() {
+    let platform = Platform::titan_v();
+    let tenants = zoo::build_combo(&["R50", "V16", "M3"]);
+    let deep = zoo::build_combo(&["R101", "D121", "M3"]);
+    let opts = SimOptions::for_platform(&platform);
+
+    println!("== hotpath micro-benchmarks (R50+V16+M3 unless noted) ==");
+
+    // Cost-model lookups: cold vs memoized.
+    bench("cost_model: cold build + full combo pricing", 1000, || {
+        let cost = CostModel::new(platform);
+        for d in &tenants {
+            for op in &d.ops {
+                black_box(cost.cost(op));
+            }
+        }
+    });
+    let cost = CostModel::new(platform);
+    bench("cost_model: memoized full combo pricing", 1000, || {
+        for d in &tenants {
+            for op in &d.ops {
+                black_box(cost.cost(op));
+            }
+        }
+    });
+
+    // Plan compile + simulate (the search's per-candidate evaluation).
+    let ts = TenantSet::new(&tenants, &cost);
+    let plan = DeploymentPlan::unregulated(3);
+    bench("evaluate: compile + simulate (343 ops)", 2000, || {
+        black_box(ts.simulate(&plan, opts));
+    });
+
+    let cost_deep = CostModel::new(platform);
+    let ts_deep = TenantSet::new(&deep, &cost_deep);
+    let plan_deep = DeploymentPlan::unregulated(3);
+    bench("evaluate: compile + simulate (900 ops, deep)", 2000, || {
+        black_box(ts_deep.simulate(&plan_deep, opts));
+    });
+
+    // Full search (Table 4's unit).
+    let cfg = SearchConfig::default();
+    bench("search: full Algorithm 1 (default config)", 4000, || {
+        black_box(GacerSearch::new(&ts, opts, cfg).run());
+    });
+
+    // Simulator throughput in simulated-op terms.
+    let streams = ts.compile(&plan);
+    let n_ops: usize = streams.iter().map(|s| s.len()).sum();
+    let t0 = Instant::now();
+    let mut evals = 0u64;
+    while t0.elapsed().as_secs_f64() < 1.0 {
+        black_box(gacer::gpu::GpuSim::new(opts).run_staged(&streams));
+        evals += 1;
+    }
+    let ops_per_s = (evals as f64 * n_ops as f64) / t0.elapsed().as_secs_f64();
+    println!("simulator throughput: {:.1}M simulated ops/s", ops_per_s / 1e6);
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate Table 2 (GPU generality: absolute ms + speedups on
+//! P6000 and 1080Ti for all five combos).
+
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    gacer::bench_util::experiments::table2();
+    println!("\n[table2_generality] wall time: {:.2?}", t0.elapsed());
+}

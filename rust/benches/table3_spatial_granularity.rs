@@ -1,0 +1,10 @@
+//! Bench: regenerate Table 3 (spatial granularity cases for
+//! V16(32) || R18(32)) — the spatial "sweet zone" evidence.
+
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    gacer::bench_util::experiments::table3();
+    println!("\n[table3_spatial_granularity] wall time: {:.2?}", t0.elapsed());
+}

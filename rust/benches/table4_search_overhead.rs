@@ -1,0 +1,10 @@
+//! Bench: regenerate Table 4 (GACER search wall-time vs evaluation
+//! budget, three combos).
+
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    gacer::bench_util::experiments::table4(3);
+    println!("\n[table4_search_overhead] wall time: {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,154 @@
+//! Shared harness for the paper-reproduction benches: runs every strategy
+//! (baselines + GACER arms) on a combo/platform and formats paper-style
+//! rows. `experiments` holds the per-table/figure drivers.
+
+pub mod experiments;
+
+use crate::baselines::{Baseline, BaselineKind};
+use crate::gpu::{SimOptions, SimOutcome};
+use crate::models::zoo;
+use crate::plan::TenantSet;
+use crate::profile::{CostModel, Platform};
+use crate::search::{GacerSearch, SearchConfig};
+
+/// Every strategy of Fig. 7.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    Baseline(BaselineKind),
+    /// GACER spatial-regulation-only arm.
+    Spatial,
+    /// GACER temporal-regulation-only arm.
+    Temporal,
+    /// Full joint GACER.
+    Gacer,
+}
+
+impl Strategy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Strategy::Baseline(b) => b.label(),
+            Strategy::Spatial => "Spatial",
+            Strategy::Temporal => "Temporal",
+            Strategy::Gacer => "GACER",
+        }
+    }
+
+    /// The Fig. 7 series, in plot order.
+    pub fn fig7_set() -> Vec<Strategy> {
+        let mut v: Vec<Strategy> =
+            BaselineKind::all().into_iter().map(Strategy::Baseline).collect();
+        v.extend([Strategy::Spatial, Strategy::Temporal, Strategy::Gacer]);
+        v
+    }
+}
+
+/// One evaluated cell: strategy on combo on platform.
+#[derive(Debug, Clone)]
+pub struct EvalCell {
+    pub strategy: Strategy,
+    pub outcome: SimOutcome,
+}
+
+impl EvalCell {
+    pub fn latency_ms(&self) -> f64 {
+        self.outcome.makespan_us / 1e3
+    }
+}
+
+/// Run one strategy on a combo/platform.
+pub fn run_strategy(
+    names: &[&str],
+    platform: &Platform,
+    strategy: Strategy,
+    cfg: SearchConfig,
+) -> EvalCell {
+    let cost = CostModel::new(*platform);
+    let tenants = zoo::build_combo(names);
+    let ts = TenantSet::new(&tenants, &cost);
+    let opts = SimOptions::for_platform(platform);
+    let outcome = match strategy {
+        Strategy::Baseline(b) => Baseline::new(&ts, opts).run(b),
+        Strategy::Spatial => {
+            GacerSearch::new(&ts, opts, SearchConfig { enable_temporal: false, ..cfg })
+                .run()
+                .outcome
+        }
+        Strategy::Temporal => {
+            GacerSearch::new(&ts, opts, SearchConfig { enable_spatial: false, ..cfg })
+                .run()
+                .outcome
+        }
+        Strategy::Gacer => GacerSearch::new(&ts, opts, cfg).run().outcome,
+    };
+    EvalCell { strategy, outcome }
+}
+
+/// Run the full Fig. 7 strategy set on one combo.
+pub fn run_combo(names: &[&str], platform: &Platform, cfg: SearchConfig) -> Vec<EvalCell> {
+    Strategy::fig7_set()
+        .into_iter()
+        .map(|s| run_strategy(names, platform, s, cfg))
+        .collect()
+}
+
+/// Format a Fig. 7-style row: speedups normalized to CuDNN-Seq.
+pub fn fig7_row(label: &str, cells: &[EvalCell]) -> String {
+    let seq = cells
+        .iter()
+        .find(|c| c.strategy == Strategy::Baseline(BaselineKind::CudnnSeq))
+        .expect("CuDNN-Seq cell required")
+        .outcome
+        .makespan_us;
+    let mut row = format!("{label:<16}");
+    for c in cells {
+        row.push_str(&format!(
+            " {:>15}",
+            format!("{:.2}x ({:.2}ms)", seq / c.outcome.makespan_us, c.latency_ms())
+        ));
+    }
+    row
+}
+
+/// Header matching [`fig7_row`].
+pub fn fig7_header(cells: &[EvalCell]) -> String {
+    let mut row = format!("{:<16}", "combo");
+    for c in cells {
+        row.push_str(&format!(" {:>15}", c.strategy.label()));
+    }
+    row
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> SearchConfig {
+        SearchConfig {
+            max_pointers: 1,
+            rounds_per_level: 1,
+            positions_per_coordinate: 4,
+            spatial_steps_per_level: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn full_strategy_set_runs() {
+        let cells = run_combo(&["Alex", "V16", "R18"], &Platform::titan_v(), quick_cfg());
+        assert_eq!(cells.len(), 7);
+        for c in &cells {
+            assert!(c.outcome.makespan_us > 0.0, "{}", c.strategy.label());
+        }
+    }
+
+    #[test]
+    fn rows_render() {
+        let cells = run_combo(&["Alex", "V16", "R18"], &Platform::titan_v(), quick_cfg());
+        let row = fig7_row("ALEX+V16+R18", &cells);
+        assert!(row.contains('x'));
+        assert_eq!(
+            fig7_header(&cells).split_whitespace().count(),
+            8 // "combo" + 7 strategies
+        );
+    }
+}

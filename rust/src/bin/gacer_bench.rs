@@ -1,0 +1,38 @@
+//! `gacer-bench` — regenerates every table and figure of the paper's
+//! evaluation section (see DESIGN.md §5 for the experiment index).
+//!
+//! Usage: `gacer-bench <fig4|fig7|fig8|table2|fig9|table3|table4|all> [--rounds N]`
+
+use gacer::bench_util::experiments;
+use gacer::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let experiment = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let rounds = args.opt_usize("rounds", 3);
+    let ids: Vec<&str> = if experiment == "all" {
+        vec!["fig4", "fig7", "fig8", "table2", "fig9", "table3", "table4"]
+    } else {
+        vec![experiment.as_str()]
+    };
+    for id in ids {
+        match id {
+            "fig4" => experiments::fig4(),
+            "fig7" => experiments::fig7(),
+            "fig8" => experiments::fig8(),
+            "table2" => experiments::table2(),
+            "fig9" => experiments::fig9(),
+            "table3" => experiments::table3(),
+            "table4" => experiments::table4(rounds),
+            other => {
+                eprintln!("unknown experiment: {other}");
+                std::process::exit(2);
+            }
+        }
+        println!();
+    }
+}

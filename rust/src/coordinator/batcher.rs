@@ -1,0 +1,173 @@
+//! Dynamic batcher: groups per-tenant requests into the micro-batch sizes
+//! the AOT artifact set provides (GACER's `list_B` realized with compiled
+//! code).
+
+use std::time::{Duration, Instant};
+
+/// One queued inference request (payload is the flat f32 input).
+#[derive(Debug)]
+pub struct PendingRequest {
+    pub id: u64,
+    pub input: Vec<f32>,
+    pub enqueued: Instant,
+}
+
+/// Batching policy: how large a batch to wait for, and for how long.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Preferred (maximum) batch size.
+    pub max_batch: usize,
+    /// Maximum time the oldest request may wait before a partial batch is
+    /// flushed.
+    pub max_wait: Duration,
+    /// Compiled batch variants available (ascending). A drained batch is
+    /// padded up to the smallest variant that fits.
+    pub variants: Vec<usize>,
+}
+
+impl BatchPolicy {
+    pub fn new(max_batch: usize, max_wait: Duration, mut variants: Vec<usize>) -> Self {
+        variants.sort_unstable();
+        variants.retain(|&v| v > 0);
+        assert!(!variants.is_empty(), "need at least one compiled variant");
+        BatchPolicy { max_batch, max_wait, variants }
+    }
+
+    /// Smallest compiled variant that fits `n` requests, or the largest
+    /// variant if `n` exceeds them all.
+    pub fn variant_for(&self, n: usize) -> usize {
+        self.variants
+            .iter()
+            .copied()
+            .find(|&v| v >= n)
+            .unwrap_or(*self.variants.last().unwrap())
+    }
+}
+
+/// Per-tenant dynamic batcher.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    queue: Vec<PendingRequest>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, queue: Vec::new() }
+    }
+
+    pub fn push(&mut self, req: PendingRequest) {
+        self.queue.push(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Whether a batch should be issued now.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        self.queue.len() >= self.policy.max_batch
+            || now.duration_since(self.queue[0].enqueued) >= self.policy.max_wait
+    }
+
+    /// Drain up to `max_batch` requests (FIFO) and report the compiled
+    /// variant to run them with. Returns `None` when not ready.
+    pub fn drain(&mut self, now: Instant) -> Option<(usize, Vec<PendingRequest>)> {
+        if !self.ready(now) {
+            return None;
+        }
+        let n = self.queue.len().min(self.policy.max_batch);
+        let batch: Vec<PendingRequest> = self.queue.drain(..n).collect();
+        let variant = self.policy.variant_for(batch.len());
+        Some((variant, batch))
+    }
+
+    /// Force-drain everything regardless of readiness (shutdown path).
+    pub fn flush(&mut self) -> Option<(usize, Vec<PendingRequest>)> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let n = self.queue.len().min(self.policy.max_batch);
+        let batch: Vec<PendingRequest> = self.queue.drain(..n).collect();
+        let variant = self.policy.variant_for(batch.len());
+        Some((variant, batch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy::new(8, Duration::from_millis(5), vec![1, 2, 4, 8, 16])
+    }
+
+    fn req(id: u64) -> PendingRequest {
+        PendingRequest { id, input: vec![0.0; 4], enqueued: Instant::now() }
+    }
+
+    #[test]
+    fn variant_rounds_up() {
+        let p = policy();
+        assert_eq!(p.variant_for(1), 1);
+        assert_eq!(p.variant_for(3), 4);
+        assert_eq!(p.variant_for(8), 8);
+        assert_eq!(p.variant_for(100), 16);
+    }
+
+    #[test]
+    fn not_ready_when_empty() {
+        let b = Batcher::new(policy());
+        assert!(!b.ready(Instant::now()));
+    }
+
+    #[test]
+    fn ready_at_max_batch() {
+        let mut b = Batcher::new(policy());
+        for i in 0..8 {
+            b.push(req(i));
+        }
+        assert!(b.ready(Instant::now()));
+        let (variant, batch) = b.drain(Instant::now()).unwrap();
+        assert_eq!(variant, 8);
+        assert_eq!(batch.len(), 8);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn ready_after_deadline() {
+        let mut b = Batcher::new(policy());
+        b.push(req(0));
+        assert!(!b.ready(Instant::now()));
+        assert!(b.ready(Instant::now() + Duration::from_millis(6)));
+        let (variant, batch) = b.drain(Instant::now() + Duration::from_millis(6)).unwrap();
+        assert_eq!((variant, batch.len()), (1, 1));
+    }
+
+    #[test]
+    fn drain_preserves_fifo_order() {
+        let mut b = Batcher::new(policy());
+        for i in 0..10 {
+            b.push(req(i));
+        }
+        let (_, batch) = b.drain(Instant::now()).unwrap();
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+        assert_eq!(b.pending(), 2);
+    }
+
+    #[test]
+    fn flush_drains_partial() {
+        let mut b = Batcher::new(policy());
+        b.push(req(0));
+        b.push(req(1));
+        b.push(req(2));
+        let (variant, batch) = b.flush().unwrap();
+        assert_eq!(variant, 4);
+        assert_eq!(batch.len(), 3);
+        assert!(b.flush().is_none());
+    }
+}

@@ -1,0 +1,106 @@
+//! Executor thread: sole owner of the PJRT runtime (the GPU-submission
+//! thread analogue). Receives compiled-artifact jobs over an mpsc channel,
+//! executes them in arrival order, and answers on per-job response
+//! channels.
+//!
+//! Keeping PJRT on one dedicated OS thread keeps the scheduler free of
+//! blocking FFI calls and models the paper's single issue queue into the
+//! device: the order jobs enter this channel IS the issue order the GACER
+//! schedule controls.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Runtime;
+
+/// Response channel for one job.
+pub type Responder = mpsc::Sender<Result<Vec<Vec<f32>>>>;
+
+/// One execution job: artifact entry + input buffers.
+pub struct ExecJob {
+    pub entry: String,
+    pub inputs: Vec<Vec<f32>>,
+    pub respond: Responder,
+}
+
+/// Handle to the executor thread.
+pub struct ExecutorHandle {
+    tx: mpsc::Sender<ExecJob>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ExecutorHandle {
+    /// Spawn the executor thread. The PJRT runtime is **created inside the
+    /// thread** (the client and its executables are not `Send` — they live
+    /// and die on the submission thread, like a CUDA context). Compilation
+    /// of the `warmup` entries happens before this returns; a failure to
+    /// open/compile is reported here.
+    pub fn spawn(artifact_dir: String, warmup: Vec<String>) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<ExecJob>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("gacer-executor".into())
+            .spawn(move || {
+                let runtime = match Runtime::new(&artifact_dir) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let warm_refs: Vec<&str> = warmup.iter().map(String::as_str).collect();
+                if let Err(e) = runtime.warmup(&warm_refs) {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+                let _ = ready_tx.send(Ok(()));
+                while let Ok(job) = rx.recv() {
+                    let refs: Vec<&[f32]> = job.inputs.iter().map(Vec::as_slice).collect();
+                    let result = runtime.execute_f32(&job.entry, &refs);
+                    // Receiver may have given up; dropping the result then
+                    // is correct.
+                    let _ = job.respond.send(result);
+                }
+            })?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(ExecutorHandle { tx, join: Some(join) }),
+            Ok(Err(e)) => {
+                let _ = join.join();
+                Err(e)
+            }
+            Err(_) => Err(anyhow!("executor thread died during startup")),
+        }
+    }
+
+    /// Submit a job; the result arrives on the returned receiver.
+    pub fn submit(
+        &self,
+        entry: String,
+        inputs: Vec<Vec<f32>>,
+    ) -> Result<mpsc::Receiver<Result<Vec<Vec<f32>>>>> {
+        let (otx, orx) = mpsc::channel();
+        self.tx
+            .send(ExecJob { entry, inputs, respond: otx })
+            .map_err(|_| anyhow!("executor thread gone"))?;
+        Ok(orx)
+    }
+
+    /// Submit and wait (examples/tests and the serial issue loop).
+    pub fn submit_blocking(&self, entry: String, inputs: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        let rx = self.submit(entry, inputs)?;
+        rx.recv().map_err(|_| anyhow!("executor dropped response"))?
+    }
+}
+
+impl Drop for ExecutorHandle {
+    fn drop(&mut self) {
+        // Replace the sender to close the channel, then join the thread.
+        let (tx, _rx) = mpsc::channel();
+        drop(std::mem::replace(&mut self.tx, tx));
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! The multi-tenant serving coordinator — the paper's L3 contribution on
+//! the real-execution path.
+//!
+//! Topology: tokio tasks own per-tenant request queues and dynamic
+//! batchers; a dedicated **executor thread** owns the PJRT runtime (GPU
+//! submission thread analogue) and issues compiled artifacts in the order
+//! a GACER schedule prescribes. Python never runs here: all compute is
+//! AOT-compiled HLO loaded at startup.
+
+mod batcher;
+mod executor;
+mod server;
+
+pub use batcher::{BatchPolicy, Batcher, PendingRequest};
+pub use executor::{ExecJob, ExecutorHandle};
+pub use server::{serve_demo, ServeReport, Server, ServerConfig, TenantSpec};

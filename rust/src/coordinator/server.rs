@@ -1,0 +1,313 @@
+//! Multi-tenant serving server: per-tenant queues + dynamic batchers on a
+//! scheduler thread, a GACER-ordered issue loop, and the PJRT executor
+//! thread. Pure std threading — the deployment binary carries no async
+//! runtime.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::batcher::{BatchPolicy, Batcher, PendingRequest};
+use super::executor::ExecutorHandle;
+use crate::metrics::LatencyHistogram;
+use crate::runtime::{load_params, ArtifactManifest};
+
+/// One tenant of the serving deployment.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    /// Display name.
+    pub name: String,
+    /// Artifact operator family (manifest `meta.op`), e.g. `"tiny_cnn"`.
+    pub family: String,
+    /// Batching policy.
+    pub policy: BatchPolicy,
+    /// Optional spatial regulation on the real path: execute batches as
+    /// micro-batches of this size (GACER `list_B` realized with the
+    /// compiled batch variants).
+    pub chunk: Option<usize>,
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Scheduler tick (batch-deadline polling resolution).
+    pub tick: Duration,
+    /// Tenant issue order when several batches are ready — GACER's
+    /// cross-tenant schedule on the real path (index = priority).
+    pub issue_order: Vec<usize>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { tick: Duration::from_micros(200), issue_order: Vec::new() }
+    }
+}
+
+struct Incoming {
+    tenant: usize,
+    input: Vec<f32>,
+    respond: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+/// Handle to a running server. Cloneable; dropping the last handle stops
+/// the scheduler after it drains outstanding work.
+#[derive(Clone)]
+pub struct Server {
+    tx: mpsc::Sender<Incoming>,
+}
+
+impl Server {
+    /// Start the server: opens the artifact dir, warms the executor, and
+    /// spawns the scheduler thread.
+    pub fn start(artifact_dir: &str, tenants: Vec<TenantSpec>, cfg: ServerConfig) -> Result<Server> {
+        let manifest = ArtifactManifest::load(
+            std::path::Path::new(artifact_dir).join("manifest.json"),
+        )?;
+        let params = load_params(artifact_dir)?;
+
+        // Resolve compiled batch variants per tenant family.
+        let mut variants: Vec<HashMap<usize, String>> = Vec::new();
+        let mut warm: Vec<String> = Vec::new();
+        for t in &tenants {
+            let v = manifest.variants_of(&t.family);
+            if v.is_empty() {
+                return Err(anyhow!("no artifacts for family {}", t.family));
+            }
+            warm.extend(v.values().cloned());
+            variants.push(v.into_iter().collect());
+        }
+        warm.sort();
+        warm.dedup();
+        let executor = ExecutorHandle::spawn(artifact_dir.to_string(), warm)?;
+
+        let issue_order = if cfg.issue_order.is_empty() {
+            (0..tenants.len()).collect()
+        } else {
+            cfg.issue_order.clone()
+        };
+        let (tx, rx) = mpsc::channel();
+        std::thread::Builder::new()
+            .name("gacer-scheduler".into())
+            .spawn(move || {
+                scheduler_loop(rx, tenants, variants, params, executor, cfg.tick, issue_order)
+            })
+            .context("spawn scheduler")?;
+        Ok(Server { tx })
+    }
+
+    /// Submit one request and wait for its output row.
+    pub fn infer(&self, tenant: usize, input: Vec<f32>) -> Result<Vec<f32>> {
+        let (otx, orx) = mpsc::channel();
+        self.tx
+            .send(Incoming { tenant, input, respond: otx })
+            .map_err(|_| anyhow!("server stopped"))?;
+        orx.recv().map_err(|_| anyhow!("server dropped request"))?
+    }
+}
+
+fn scheduler_loop(
+    rx: mpsc::Receiver<Incoming>,
+    tenants: Vec<TenantSpec>,
+    variants: Vec<HashMap<usize, String>>,
+    params: Vec<Vec<f32>>,
+    executor: ExecutorHandle,
+    tick: Duration,
+    issue_order: Vec<usize>,
+) {
+    let n = tenants.len();
+    let mut batchers: Vec<Batcher> =
+        tenants.iter().map(|t| Batcher::new(t.policy.clone())).collect();
+    let mut responders: Vec<HashMap<u64, mpsc::Sender<Result<Vec<f32>>>>> =
+        (0..n).map(|_| HashMap::new()).collect();
+    let mut next_id = 0u64;
+    let mut open = true;
+
+    while open || batchers.iter().any(|b| b.pending() > 0) {
+        // Collect requests for up to one tick.
+        let deadline = Instant::now() + tick;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(msg) => {
+                    let id = next_id;
+                    next_id += 1;
+                    responders[msg.tenant].insert(id, msg.respond);
+                    batchers[msg.tenant].push(PendingRequest {
+                        id,
+                        input: msg.input,
+                        enqueued: Instant::now(),
+                    });
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+
+        // Issue ready batches in GACER order.
+        let now = Instant::now();
+        for &t in &issue_order {
+            while let Some((variant, batch)) = batchers[t].drain(now) {
+                issue_batch(
+                    &tenants[t], &variants[t], &params, &executor,
+                    &mut responders[t], variant, batch,
+                );
+            }
+        }
+        if !open {
+            for &t in &issue_order {
+                while let Some((variant, batch)) = batchers[t].flush() {
+                    issue_batch(
+                        &tenants[t], &variants[t], &params, &executor,
+                        &mut responders[t], variant, batch,
+                    );
+                }
+            }
+            break;
+        }
+    }
+}
+
+/// Execute one drained batch — possibly as GACER micro-batches — and
+/// distribute output rows to the requesters.
+fn issue_batch(
+    tenant: &TenantSpec,
+    variants: &HashMap<usize, String>,
+    params: &[Vec<f32>],
+    executor: &ExecutorHandle,
+    responders: &mut HashMap<u64, mpsc::Sender<Result<Vec<f32>>>>,
+    variant: usize,
+    batch: Vec<PendingRequest>,
+) {
+    let per_input = batch[0].input.len();
+    // Spatial regulation on the real path: split into chunk-sized
+    // micro-batches when the plan asks for it (and a variant exists).
+    let pieces: Vec<&[PendingRequest]> = match tenant.chunk {
+        Some(c) if c < variant && variants.contains_key(&c) => batch.chunks(c).collect(),
+        _ => vec![&batch[..]],
+    };
+
+    for piece in pieces {
+        let v = pick_variant(variants, piece.len());
+        let entry = &variants[&v];
+        let mut x = vec![0.0f32; v * per_input];
+        for (i, r) in piece.iter().enumerate() {
+            x[i * per_input..(i + 1) * per_input].copy_from_slice(&r.input);
+        }
+        let mut inputs = Vec::with_capacity(1 + params.len());
+        inputs.push(x);
+        inputs.extend(params.iter().cloned());
+
+        match executor.submit_blocking(entry.clone(), inputs) {
+            Ok(outputs) => {
+                let out = &outputs[0];
+                let per_out = out.len() / v;
+                for (i, r) in piece.iter().enumerate() {
+                    if let Some(tx) = responders.remove(&r.id) {
+                        let row = out[i * per_out..(i + 1) * per_out].to_vec();
+                        let _ = tx.send(Ok(row));
+                    }
+                }
+            }
+            Err(e) => {
+                for r in piece {
+                    if let Some(tx) = responders.remove(&r.id) {
+                        let _ = tx.send(Err(anyhow!("{e}")));
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn pick_variant(variants: &HashMap<usize, String>, n: usize) -> usize {
+    let mut keys: Vec<usize> = variants.keys().copied().collect();
+    keys.sort_unstable();
+    keys.iter().copied().find(|&v| v >= n).unwrap_or(*keys.last().unwrap())
+}
+
+/// Result of the demo serving run (the e2e driver's report).
+#[derive(Debug)]
+pub struct ServeReport {
+    pub per_tenant: Vec<(String, LatencyHistogram)>,
+    pub total_requests: usize,
+    pub elapsed: Duration,
+}
+
+impl ServeReport {
+    pub fn throughput_rps(&self) -> f64 {
+        self.total_requests as f64 / self.elapsed.as_secs_f64()
+    }
+}
+
+/// The e2e demo driver: serve `n_requests` per tenant of real TinyCNN
+/// inference through the coordinator and report latency/throughput.
+pub fn serve_demo(
+    artifact_dir: &str,
+    tenant_models: &[String],
+    n_requests: usize,
+) -> Result<ServeReport> {
+    let tenants: Vec<TenantSpec> = tenant_models
+        .iter()
+        .enumerate()
+        .map(|(i, m)| TenantSpec {
+            name: format!("{m}-{i}"),
+            family: m.clone(),
+            policy: BatchPolicy::new(8, Duration::from_millis(2), vec![1, 2, 4, 8, 16, 32]),
+            // Tenant 0 demonstrates GACER chunking on the real path.
+            chunk: if i == 0 { Some(4) } else { None },
+        })
+        .collect();
+    let n_tenants = tenants.len();
+    let server = Arc::new(Server::start(artifact_dir, tenants, ServerConfig::default())?);
+
+    let started = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..n_tenants {
+        let server = Arc::clone(&server);
+        handles.push(std::thread::spawn(move || -> Result<LatencyHistogram> {
+            let mut hist = LatencyHistogram::new();
+            for i in 0..n_requests {
+                // Deterministic pseudo-input per (tenant, request).
+                let x: Vec<f32> = (0..32 * 32 * 3)
+                    .map(|k| (((t * 7919 + i * 131 + k) % 97) as f32 / 97.0) - 0.5)
+                    .collect();
+                let t0 = Instant::now();
+                let out = server.infer(t, x)?;
+                hist.record(t0.elapsed());
+                anyhow::ensure!(out.len() == 10, "expected 10 logits, got {}", out.len());
+                anyhow::ensure!(out.iter().all(|v| v.is_finite()), "non-finite logits");
+            }
+            Ok(hist)
+        }));
+    }
+
+    let mut per_tenant = Vec::new();
+    for (t, h) in handles.into_iter().enumerate() {
+        let hist = h.join().map_err(|_| anyhow!("client thread panicked"))??;
+        per_tenant.push((tenant_models[t].clone(), hist));
+    }
+    let report = ServeReport {
+        per_tenant,
+        total_requests: n_requests * n_tenants,
+        elapsed: started.elapsed(),
+    };
+    println!(
+        "served {} requests in {:.2}s  ({:.1} req/s)",
+        report.total_requests,
+        report.elapsed.as_secs_f64(),
+        report.throughput_rps()
+    );
+    for (name, hist) in &report.per_tenant {
+        println!("  tenant {name:<12} {}", hist.summary());
+    }
+    Ok(report)
+}

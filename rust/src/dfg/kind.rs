@@ -1,0 +1,195 @@
+//! Operator kinds and their analytic FLOP / byte counts.
+//!
+//! The cost model (`crate::profile`) maps these counts to SM occupancy
+//! `W(O^B)` and duration `T(O^B)` per platform — the lookup-table role of
+//! the paper's Fig. 4 profiling.
+
+
+const F32: f64 = 4.0; // bytes per element, fp32 serving
+
+/// Layer type with static (batch-independent) shape parameters.
+///
+/// Spatial sizes are *output* spatial dims for convs; `elems` counts are
+/// per-example.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// 2-D convolution producing an `h x w x cout` map from `cin` channels
+    /// with a `k x k` kernel (stride already folded into `h`/`w`).
+    Conv { h: usize, w: usize, cin: usize, cout: usize, k: usize, stride: usize },
+    /// Depthwise convolution (MobileNet class): one filter per channel.
+    DwConv { h: usize, w: usize, c: usize, k: usize },
+    /// Fully connected `fin -> fout`.
+    Linear { fin: usize, fout: usize },
+    /// Inference batchnorm over `elems` per-example elements.
+    BatchNorm { elems: usize },
+    /// Element-wise activation over `elems` per-example elements.
+    ReLU { elems: usize },
+    /// Pooling over an `h x w x c` input map, `k x k` window.
+    Pool { h: usize, w: usize, c: usize, k: usize },
+    /// Residual/element-wise add over `elems` per-example elements.
+    Add { elems: usize },
+    /// Embedding lookup: `seq` tokens into `dim`-wide vectors.
+    Embed { seq: usize, dim: usize },
+    /// One LSTM step: input `i`, hidden `h` (4 gates).
+    LstmCell { i: usize, h: usize },
+    /// Single-head self-attention over `seq` tokens of width `dim`.
+    Attention { seq: usize, dim: usize },
+    /// Softmax over `elems` per-example elements.
+    Softmax { elems: usize },
+    /// Batch-dim split overhead op introduced by spatial regulation
+    /// (`torch.chunk` analogue): moves `elems` per-example elements.
+    Chunk { elems: usize },
+    /// Batch-dim concat overhead op (`torch.cat` analogue).
+    Concat { elems: usize },
+}
+
+impl OpKind {
+    /// Forward FLOPs at batch `b` (multiply-accumulate = 2 FLOPs).
+    pub fn flops(&self, b: usize) -> f64 {
+        let b = b as f64;
+        match *self {
+            OpKind::Conv { h, w, cin, cout, k, .. } => {
+                b * 2.0 * (h * w * cout * cin * k * k) as f64
+            }
+            OpKind::DwConv { h, w, c, k } => b * 2.0 * (h * w * c * k * k) as f64,
+            OpKind::Linear { fin, fout } => b * 2.0 * (fin * fout) as f64,
+            OpKind::BatchNorm { elems } => b * 2.0 * elems as f64,
+            OpKind::ReLU { elems } => b * elems as f64,
+            OpKind::Pool { h, w, c, k } => b * (h * w * c * k * k) as f64,
+            OpKind::Add { elems } => b * elems as f64,
+            OpKind::Embed { seq, dim } => b * (seq * dim) as f64,
+            OpKind::LstmCell { i, h } => b * 2.0 * (4 * h * (i + h)) as f64,
+            OpKind::Attention { seq, dim } => {
+                // 4 projections + QK^T + AV.
+                b * 2.0 * ((4 * seq * dim * dim) + 2 * seq * seq * dim) as f64
+            }
+            OpKind::Softmax { elems } => b * 5.0 * elems as f64,
+            OpKind::Chunk { elems } | OpKind::Concat { elems } => b * elems as f64,
+        }
+    }
+
+    /// HBM bytes moved at batch `b` (activations in+out plus weights).
+    pub fn bytes(&self, b: usize) -> f64 {
+        let bf = b as f64;
+        match *self {
+            OpKind::Conv { h, w, cin, cout, k, stride } => {
+                let input = (h * stride * w * stride * cin) as f64;
+                let output = (h * w * cout) as f64;
+                let weights = (k * k * cin * cout) as f64;
+                (bf * (input + output) + weights) * F32
+            }
+            OpKind::DwConv { h, w, c, k } => {
+                (bf * (2 * h * w * c) as f64 + (k * k * c) as f64) * F32
+            }
+            OpKind::Linear { fin, fout } => {
+                (bf * (fin + fout) as f64 + (fin * fout) as f64) * F32
+            }
+            OpKind::BatchNorm { elems } | OpKind::ReLU { elems } | OpKind::Add { elems } => {
+                bf * (2 * elems) as f64 * F32
+            }
+            OpKind::Pool { h, w, c, k } => bf * ((h * w * c * k * k) + h * w * c) as f64 * F32,
+            OpKind::Embed { seq, dim } => bf * (2 * seq * dim) as f64 * F32,
+            OpKind::LstmCell { i, h } => {
+                (bf * (i + 5 * h) as f64 + (4 * h * (i + h)) as f64) * F32
+            }
+            OpKind::Attention { seq, dim } => {
+                (bf * (6 * seq * dim + seq * seq) as f64 + (4 * dim * dim) as f64) * F32
+            }
+            OpKind::Softmax { elems } => bf * (2 * elems) as f64 * F32,
+            OpKind::Chunk { elems } | OpKind::Concat { elems } => {
+                bf * (2 * elems) as f64 * F32
+            }
+        }
+    }
+
+    /// Output elements per example (drives the occupancy estimate).
+    pub fn out_elems(&self) -> usize {
+        match *self {
+            OpKind::Conv { h, w, cout, .. } => h * w * cout,
+            OpKind::DwConv { h, w, c, .. } => h * w * c,
+            OpKind::Linear { fout, .. } => fout,
+            OpKind::BatchNorm { elems }
+            | OpKind::ReLU { elems }
+            | OpKind::Add { elems }
+            | OpKind::Softmax { elems }
+            | OpKind::Chunk { elems }
+            | OpKind::Concat { elems } => elems,
+            OpKind::Pool { h, w, c, .. } => h * w * c,
+            OpKind::Embed { seq, dim } => seq * dim,
+            // The cell's parallel output is the 4-gate GEMM, not just h.
+            OpKind::LstmCell { h, .. } => 4 * h,
+            OpKind::Attention { seq, dim } => seq * dim,
+        }
+    }
+
+    /// Whether batch-dim decomposition preserves semantics cheaply.
+    pub fn chunkable(&self) -> bool {
+        !matches!(self, OpKind::Chunk { .. } | OpKind::Concat { .. })
+    }
+
+    /// Short class label used in traces and reports.
+    pub fn class(&self) -> &'static str {
+        match self {
+            OpKind::Conv { .. } => "conv",
+            OpKind::DwConv { .. } => "dwconv",
+            OpKind::Linear { .. } => "linear",
+            OpKind::BatchNorm { .. } => "bn",
+            OpKind::ReLU { .. } => "relu",
+            OpKind::Pool { .. } => "pool",
+            OpKind::Add { .. } => "add",
+            OpKind::Embed { .. } => "embed",
+            OpKind::LstmCell { .. } => "lstm",
+            OpKind::Attention { .. } => "attn",
+            OpKind::Softmax { .. } => "softmax",
+            OpKind::Chunk { .. } => "chunk",
+            OpKind::Concat { .. } => "concat",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_flops_formula() {
+        // 1x1 output, 1 cin, 1 cout, 1x1 kernel, batch 1 => 2 FLOPs.
+        let k = OpKind::Conv { h: 1, w: 1, cin: 1, cout: 1, k: 1, stride: 1 };
+        assert_eq!(k.flops(1), 2.0);
+    }
+
+    #[test]
+    fn linear_bytes_include_weights() {
+        let k = OpKind::Linear { fin: 100, fout: 10 };
+        // weights dominate at batch 1: 1000 * 4 bytes.
+        assert!(k.bytes(1) > 4000.0);
+    }
+
+    #[test]
+    fn dwconv_much_cheaper_than_conv() {
+        let c = OpKind::Conv { h: 16, w: 16, cin: 64, cout: 64, k: 3, stride: 1 };
+        let d = OpKind::DwConv { h: 16, w: 16, c: 64, k: 3 };
+        assert!(c.flops(1) / d.flops(1) > 32.0);
+    }
+
+    #[test]
+    fn relu_is_bandwidth_bound() {
+        let k = OpKind::ReLU { elems: 1 << 20 };
+        // bytes/flops ratio >> 1: the Fig. 4 "BN/ReLU" class.
+        assert!(k.bytes(1) / k.flops(1) > 4.0);
+    }
+
+    #[test]
+    fn overhead_ops_not_chunkable() {
+        assert!(!OpKind::Chunk { elems: 8 }.chunkable());
+        assert!(!OpKind::Concat { elems: 8 }.chunkable());
+        assert!(OpKind::Conv { h: 1, w: 1, cin: 1, cout: 1, k: 1, stride: 1 }.chunkable());
+    }
+
+    #[test]
+    fn attention_flops_grow_quadratic_in_seq() {
+        let a1 = OpKind::Attention { seq: 16, dim: 8 };
+        let a2 = OpKind::Attention { seq: 32, dim: 8 };
+        assert!(a2.flops(1) / a1.flops(1) > 2.0);
+    }
+}

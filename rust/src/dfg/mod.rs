@@ -1,0 +1,140 @@
+//! Data-flow-graph (DFG) representation of a DNN tenant.
+//!
+//! The paper compiles each tenant model into a DFG — an ordered list of
+//! operators `M_n = [O_{n,1} .. O_{n,i}]` (§4.1) — whose per-operator
+//! resource demand `W(O^B)` and duration `T(O^B)` drive all regulation.
+//! Within a model, operators execute in list order (layer dependency);
+//! cross-model order is what GACER regulates.
+
+mod kind;
+mod validate;
+
+pub use kind::OpKind;
+pub use validate::{validate, DfgError};
+
+
+/// Identifier of an operator within one model's DFG (its list index).
+pub type OpId = usize;
+
+/// One operator instance of a tenant DFG: a kind (shape parameters) plus
+/// the batch size it is deployed with. The batch is the spatial knob
+/// GACER's operator-resizing regulates (Eq. 5).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Operator {
+    /// Index within the owning model's operator list.
+    pub id: OpId,
+    /// Layer type + static shape parameters.
+    pub kind: OpKind,
+    /// Deployed batch size `B` for this operator.
+    pub batch: usize,
+    /// Human-readable layer label (e.g. `"conv3_2"`).
+    pub name: String,
+}
+
+impl Operator {
+    pub fn new(id: OpId, kind: OpKind, batch: usize, name: impl Into<String>) -> Self {
+        Self { id, kind, batch, name: name.into() }
+    }
+
+    /// Forward FLOPs of this operator at its deployed batch.
+    pub fn flops(&self) -> f64 {
+        self.kind.flops(self.batch)
+    }
+
+    /// HBM/DRAM bytes moved by this operator at its deployed batch.
+    pub fn bytes(&self) -> f64 {
+        self.kind.bytes(self.batch)
+    }
+
+    /// Whether the spatial regulator may decompose this operator along the
+    /// batch dimension. Ops whose semantics couple examples (none in our
+    /// zoo) or overhead-only ops are not chunkable.
+    pub fn chunkable(&self) -> bool {
+        self.batch > 1 && self.kind.chunkable()
+    }
+}
+
+/// A tenant model compiled to an ordered operator list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dfg {
+    /// Model name (e.g. `"VGG16"`).
+    pub name: String,
+    /// Operators in execution (layer) order.
+    pub ops: Vec<Operator>,
+}
+
+impl Dfg {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), ops: Vec::new() }
+    }
+
+    /// Append an operator, assigning it the next id. Returns the id.
+    pub fn push(&mut self, kind: OpKind, batch: usize, name: impl Into<String>) -> OpId {
+        let id = self.ops.len();
+        self.ops.push(Operator::new(id, kind, batch, name));
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Total forward FLOPs of the model at its deployed batches.
+    pub fn total_flops(&self) -> f64 {
+        self.ops.iter().map(Operator::flops).sum()
+    }
+
+    /// Total bytes moved.
+    pub fn total_bytes(&self) -> f64 {
+        self.ops.iter().map(Operator::bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dfg {
+        let mut d = Dfg::new("tiny");
+        d.push(OpKind::Conv { h: 8, w: 8, cin: 3, cout: 16, k: 3, stride: 1 }, 4, "c1");
+        d.push(OpKind::ReLU { elems: 8 * 8 * 16 }, 4, "r1");
+        d.push(OpKind::Linear { fin: 1024, fout: 10 }, 4, "fc");
+        d
+    }
+
+    #[test]
+    fn push_assigns_sequential_ids() {
+        let d = tiny();
+        assert_eq!(d.ops.iter().map(|o| o.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn flops_positive_and_additive() {
+        let d = tiny();
+        assert!(d.total_flops() > 0.0);
+        let sum: f64 = d.ops.iter().map(|o| o.flops()).sum();
+        assert_eq!(d.total_flops(), sum);
+    }
+
+    #[test]
+    fn conv_flops_scale_with_batch() {
+        let k = OpKind::Conv { h: 8, w: 8, cin: 3, cout: 16, k: 3, stride: 1 };
+        assert!((k.flops(8) / k.flops(4) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chunkable_requires_batch_gt_one() {
+        let mut d = Dfg::new("b1");
+        d.push(OpKind::Linear { fin: 8, fout: 8 }, 1, "fc");
+        assert!(!d.ops[0].chunkable());
+    }
+
+    #[test]
+    fn validates_clean_model() {
+        assert!(validate(&tiny()).is_ok());
+    }
+}

@@ -1,0 +1,152 @@
+//! DFG structural validation.
+//!
+//! Catches malformed model definitions before they reach the simulator or
+//! the serving coordinator: id gaps, zero batches, empty graphs, and
+//! degenerate shapes.
+
+use super::{Dfg, OpKind};
+
+/// Validation failure for a tenant DFG.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DfgError {
+    Empty { model: String },
+    IdMismatch { model: String, index: usize, id: usize },
+    ZeroBatch { model: String, op: usize },
+    DegenerateShape { model: String, op: usize, detail: String },
+}
+
+impl std::fmt::Display for DfgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DfgError::Empty { model } => write!(f, "model {model}: empty DFG"),
+            DfgError::IdMismatch { model, index, id } => {
+                write!(f, "model {model}: op at index {index} has id {id}")
+            }
+            DfgError::ZeroBatch { model, op } => {
+                write!(f, "model {model}: op {op} has batch 0")
+            }
+            DfgError::DegenerateShape { model, op, detail } => {
+                write!(f, "model {model}: op {op} degenerate shape: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DfgError {}
+
+fn shape_ok(kind: &OpKind) -> Result<(), String> {
+    let bad = |what: &str| Err(what.to_string());
+    match *kind {
+        OpKind::Conv { h, w, cin, cout, k, stride } => {
+            if h == 0 || w == 0 || cin == 0 || cout == 0 || k == 0 || stride == 0 {
+                return bad("zero conv dim");
+            }
+            Ok(())
+        }
+        OpKind::DwConv { h, w, c, k } => {
+            if h == 0 || w == 0 || c == 0 || k == 0 {
+                return bad("zero dwconv dim");
+            }
+            Ok(())
+        }
+        OpKind::Linear { fin, fout } => {
+            if fin == 0 || fout == 0 {
+                return bad("zero linear dim");
+            }
+            Ok(())
+        }
+        OpKind::BatchNorm { elems }
+        | OpKind::ReLU { elems }
+        | OpKind::Add { elems }
+        | OpKind::Softmax { elems }
+        | OpKind::Chunk { elems }
+        | OpKind::Concat { elems } => {
+            if elems == 0 {
+                return bad("zero element count");
+            }
+            Ok(())
+        }
+        OpKind::Pool { h, w, c, k } => {
+            if h == 0 || w == 0 || c == 0 || k == 0 {
+                return bad("zero pool dim");
+            }
+            Ok(())
+        }
+        OpKind::Embed { seq, dim } => {
+            if seq == 0 || dim == 0 {
+                return bad("zero embed dim");
+            }
+            Ok(())
+        }
+        OpKind::LstmCell { i, h } => {
+            if i == 0 || h == 0 {
+                return bad("zero lstm dim");
+            }
+            Ok(())
+        }
+        OpKind::Attention { seq, dim } => {
+            if seq == 0 || dim == 0 {
+                return bad("zero attention dim");
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Validate a tenant DFG. Returns the first violation found.
+pub fn validate(dfg: &Dfg) -> Result<(), DfgError> {
+    if dfg.ops.is_empty() {
+        return Err(DfgError::Empty { model: dfg.name.clone() });
+    }
+    for (index, op) in dfg.ops.iter().enumerate() {
+        if op.id != index {
+            return Err(DfgError::IdMismatch { model: dfg.name.clone(), index, id: op.id });
+        }
+        if op.batch == 0 {
+            return Err(DfgError::ZeroBatch { model: dfg.name.clone(), op: index });
+        }
+        if let Err(detail) = shape_ok(&op.kind) {
+            return Err(DfgError::DegenerateShape { model: dfg.name.clone(), op: index, detail });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::Operator;
+
+    #[test]
+    fn empty_rejected() {
+        let d = Dfg::new("e");
+        assert!(matches!(validate(&d), Err(DfgError::Empty { .. })));
+    }
+
+    #[test]
+    fn id_gap_rejected() {
+        let mut d = Dfg::new("g");
+        d.ops.push(Operator::new(1, OpKind::ReLU { elems: 4 }, 1, "r"));
+        assert!(matches!(validate(&d), Err(DfgError::IdMismatch { .. })));
+    }
+
+    #[test]
+    fn zero_batch_rejected() {
+        let mut d = Dfg::new("z");
+        d.ops.push(Operator::new(0, OpKind::ReLU { elems: 4 }, 0, "r"));
+        assert!(matches!(validate(&d), Err(DfgError::ZeroBatch { .. })));
+    }
+
+    #[test]
+    fn degenerate_conv_rejected() {
+        let mut d = Dfg::new("d");
+        d.push(OpKind::Conv { h: 0, w: 1, cin: 1, cout: 1, k: 1, stride: 1 }, 1, "c");
+        assert!(matches!(validate(&d), Err(DfgError::DegenerateShape { .. })));
+    }
+
+    #[test]
+    fn error_display_mentions_model() {
+        let e = DfgError::Empty { model: "m".into() };
+        assert!(e.to_string().contains('m'));
+    }
+}

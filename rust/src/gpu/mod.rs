@@ -1,0 +1,18 @@
+//! Multi-stream GPU simulator — the hardware substitute substrate
+//! (DESIGN.md §2).
+//!
+//! Implements exactly the execution model the paper formulates in §4.1:
+//! each tenant is a CUDA stream issuing its operators in order; in any
+//! interval the aggregate SM occupancy of running operators must stay
+//! within the pool (`Σ W(O^B) ≤ S_GPU`, Eq. 1) and aggregate memory
+//! pressure within the bandwidth budget; an operator that does not fit
+//! waits ("is moved to the next cycle", §3.1). Synchronization pointers
+//! (§4.3) impose cross-stream barriers between segment clusters, each
+//! costing the CPU-GPU sync wait `T_SW` (Fig. 6). The unused pool integral
+//! is the paper's residue `R` (Eq. 2/3).
+
+mod sim;
+mod trace;
+
+pub use sim::{GpuSim, OpRecord, SimOp, SimOptions, SimOutcome, SimStage};
+pub use trace::UtilTrace;

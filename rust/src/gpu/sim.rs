@@ -1,0 +1,529 @@
+//! Event-driven multi-stream simulator core.
+//!
+//! Execution model (§4.1 + §2.1's contention analysis):
+//!
+//! * each tenant stream issues its operators in order; the device runs the
+//!   head operator of every stream whose segment is reachable (native
+//!   multi-stream issue is greedy — nothing waits for a resource check);
+//! * when aggregate demand fits (`ΣW ≤ S_GPU`, `Σm ≤ BW`), every operator
+//!   runs at its solo rate — complementary co-location is free;
+//! * when demand oversubscribes the pool, the hardware time-slices:
+//!   progress scales by `1/r` (`r = ΣW / S_GPU`) **plus** a contention
+//!   penalty `1 + α(r−1)` — the cache-thrash / scheduling overhead the
+//!   paper blames greedy multi-stream management for (§1, Table 1). The
+//!   penalty term is pure waste: it appears as reduced useful occupancy
+//!   in the residue accounting, which is what GACER's regulation (keeping
+//!   concurrent clusters complementary) recovers;
+//! * synchronization pointers impose cross-stream cluster barriers, each
+//!   costing the platform's CPU-GPU sync wait `T_SW` (Fig. 6).
+
+use super::trace::UtilTrace;
+
+/// One operator instance as the simulator sees it: resource demands plus
+/// the segment (cluster index) temporal regulation assigned it to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimOp {
+    /// SM occupancy demand in percent, (0, 100].
+    pub occupancy: f64,
+    /// Solo execution duration in microseconds.
+    pub duration_us: f64,
+    /// DRAM bandwidth demand in percent.
+    pub mem_util: f64,
+    /// Cluster index (number of pointers before this op in its DFG).
+    pub segment: usize,
+    /// Index of the source operator in its tenant DFG (chunk pieces and
+    /// overhead ops share their source op's id).
+    pub source_op: usize,
+    /// Operator class label for traces ("conv", "bn", "chunk", ...).
+    pub class: &'static str,
+}
+
+/// One fork-join stage of a tenant stream: its pieces issue concurrently
+/// (each on its own sub-stream, as the paper deploys decomposed micro-
+/// batches, Table 3) and the stage completes when every piece has.
+/// An undecomposed operator is a singleton stage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimStage {
+    pub pieces: Vec<SimOp>,
+}
+
+impl SimStage {
+    pub fn solo(op: SimOp) -> Self {
+        SimStage { pieces: vec![op] }
+    }
+
+    pub fn segment(&self) -> usize {
+        self.pieces.first().map_or(0, |p| p.segment)
+    }
+}
+
+/// Simulator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SimOptions {
+    /// SM pool capacity in percent (the paper's `S_GPU` = 100).
+    pub sm_capacity: f64,
+    /// Memory-bandwidth capacity in percent.
+    pub mem_capacity: f64,
+    /// Contention penalty coefficient α: fractional efficiency lost per
+    /// unit of oversubscription.
+    pub contention_alpha: f64,
+    /// Per-kernel scheduling friction β: fractional efficiency lost per
+    /// concurrent kernel beyond two (cache pollution + scheduler overhead
+    /// grow with the number of co-resident contexts — §2.1's "coordinating
+    /// such multi-tenant GPU support is often overwhelming").
+    pub kernel_beta: f64,
+    /// CPU-GPU synchronization wait per cluster barrier, microseconds
+    /// (the platform's `T_SW`).
+    pub sync_wait_us: f64,
+    /// Record the per-interval utilization trace (Fig. 8).
+    pub record_trace: bool,
+    /// Record per-op start/end times.
+    pub record_ops: bool,
+}
+
+impl SimOptions {
+    pub fn for_platform(p: &crate::profile::Platform) -> Self {
+        SimOptions {
+            sm_capacity: 100.0,
+            mem_capacity: 100.0,
+            contention_alpha: p.contention_alpha,
+            kernel_beta: 0.08,
+            sync_wait_us: p.sync_wait_us,
+            record_trace: false,
+            record_ops: false,
+        }
+    }
+
+    pub fn with_trace(mut self) -> Self {
+        self.record_trace = true;
+        self
+    }
+
+    pub fn with_ops(mut self) -> Self {
+        self.record_ops = true;
+        self
+    }
+}
+
+/// Execution record of one simulated operator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpRecord {
+    pub stream: usize,
+    pub source_op: usize,
+    pub class: &'static str,
+    pub start_us: f64,
+    pub end_us: f64,
+    pub occupancy: f64,
+}
+
+/// Result of a simulation run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimOutcome {
+    /// End-to-end makespan in microseconds.
+    pub makespan_us: f64,
+    /// Total residue `R` (Eq. 3): integral of *unused-or-wasted* SM
+    /// capacity over the makespan, in percent-microseconds. Contention
+    /// waste and sync-wait idle both land here, so the value already
+    /// carries Eq. 8's overhead terms.
+    pub residue: f64,
+    /// Integral of useful SM capacity (percent-microseconds).
+    pub used_sm_time: f64,
+    /// Portion of `used_sm_time` spent on regulation overhead operators
+    /// (chunk/concat splits) — work Eq. 8 counts against a plan.
+    pub overhead_sm_time: f64,
+    /// Average useful SM utilization over the makespan, percent.
+    pub avg_utilization: f64,
+    /// Idle time spent on cluster-barrier synchronization (microseconds).
+    pub sync_idle_us: f64,
+    /// Per-interval utilization trace, when requested.
+    pub trace: Option<UtilTrace>,
+    /// Per-op records, when requested.
+    pub op_records: Option<Vec<OpRecord>>,
+}
+
+impl SimOutcome {
+    /// The search objective: Eq. 8's overhead-aware residue. Equals
+    /// `S_GPU * makespan - useful work`, with chunk/concat overhead also
+    /// counted against the plan.
+    pub fn objective(&self) -> f64 {
+        self.residue + self.overhead_sm_time
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Running {
+    stream: usize,
+    /// Stage index within the stream.
+    op_index: usize,
+    /// Piece index within the stage.
+    piece: usize,
+    /// Remaining solo-execution microseconds.
+    remaining_us: f64,
+    occupancy: f64,
+    mem_util: f64,
+    start_us: f64,
+    overhead: bool,
+}
+
+/// The multi-stream GPU simulator.
+pub struct GpuSim {
+    opts: SimOptions,
+}
+
+impl GpuSim {
+    pub fn new(opts: SimOptions) -> Self {
+        GpuSim { opts }
+    }
+
+    /// Convenience: simulate plain op sequences (each op its own stage).
+    pub fn run(&self, streams: &[Vec<SimOp>]) -> SimOutcome {
+        let staged: Vec<Vec<SimStage>> = streams
+            .iter()
+            .map(|s| s.iter().cloned().map(SimStage::solo).collect())
+            .collect();
+        self.run_staged(&staged)
+    }
+
+    /// Simulate staged streams (one stage sequence per tenant) to
+    /// completion. Pieces within a stage issue concurrently.
+    pub fn run_staged(&self, streams: &[Vec<SimStage>]) -> SimOutcome {
+        let n = streams.len();
+        // Per-stream cursor: (stage index, next piece within the stage,
+        // pieces of the stage still in flight).
+        let mut stage_idx: Vec<usize> = vec![0; n];
+        let mut piece_idx: Vec<usize> = vec![0; n];
+        let mut inflight: Vec<usize> = vec![0; n];
+        let mut running: Vec<Running> = Vec::with_capacity(n * 2);
+        let mut cluster = 0usize;
+        let max_cluster = streams
+            .iter()
+            .flat_map(|s| s.iter().map(|st| st.segment()))
+            .max()
+            .unwrap_or(0);
+
+        let mut t = 0.0f64;
+        let mut used_sm_time = 0.0f64;
+        let mut overhead_sm_time = 0.0f64;
+        let mut sync_idle = 0.0f64;
+        let mut trace = self.opts.record_trace.then(UtilTrace::new);
+        let mut records: Option<Vec<OpRecord>> = self.opts.record_ops.then(Vec::new);
+        // Per-interval scratch, hoisted out of the hot loop.
+        let mut group: Vec<f64> = vec![0.0; n];
+        let mut stream_share: Vec<f64> = vec![1.0; n];
+
+        loop {
+            // Admission: every stream whose current stage is open issues
+            // all of that stage's remaining pieces concurrently (greedy
+            // multi-stream issue; decomposed micro-batches fork).
+            for s in 0..n {
+                // Advance past completed stages.
+                if inflight[s] == 0
+                    && stage_idx[s] < streams[s].len()
+                    && piece_idx[s] >= streams[s][stage_idx[s]].pieces.len()
+                {
+                    stage_idx[s] += 1;
+                    piece_idx[s] = 0;
+                }
+                let Some(stage) = streams[s].get(stage_idx[s]) else { continue };
+                if inflight[s] == 0 && piece_idx[s] == 0 && stage.segment() > cluster {
+                    continue; // blocked behind a pointer barrier
+                }
+                while piece_idx[s] < stage.pieces.len() {
+                    let op = &stage.pieces[piece_idx[s]];
+                    running.push(Running {
+                        stream: s,
+                        op_index: stage_idx[s],
+                        piece: piece_idx[s],
+                        remaining_us: op.duration_us,
+                        occupancy: op.occupancy,
+                        mem_util: op.mem_util,
+                        start_us: t,
+                        overhead: matches!(op.class, "chunk" | "concat"),
+                    });
+                    inflight[s] += 1;
+                    piece_idx[s] += 1;
+                }
+            }
+
+            if running.is_empty() {
+                let all_done = (0..n).all(|s| stage_idx[s] >= streams[s].len());
+                if all_done {
+                    break;
+                }
+                // Everything remaining sits behind the cluster barrier:
+                // cross it, paying the CPU-GPU sync wait.
+                debug_assert!(cluster < max_cluster, "deadlock: no runnable op");
+                cluster += 1;
+                if self.opts.sync_wait_us > 0.0 {
+                    if let Some(tr) = trace.as_mut() {
+                        tr.push(t, t + self.opts.sync_wait_us, 0.0);
+                    }
+                    t += self.opts.sync_wait_us;
+                    sync_idle += self.opts.sync_wait_us;
+                }
+                continue;
+            }
+
+            // Contention state for this interval. Same-stream pieces do
+            // not contend with each other (a tenant cannot thrash its own
+            // cache): each stream's demand is capped at the pool before
+            // summing — decomposed micro-batches share their tenant's
+            // allocation, cross-tenant oversubscription pays the α waste.
+            group.iter_mut().for_each(|g| *g = 0.0);
+            let mut mem_sum = 0.0f64;
+            for r in &running {
+                group[r.stream] += r.occupancy;
+                mem_sum += r.mem_util;
+            }
+            let demand: f64 = group.iter().map(|&g| g.min(self.opts.sm_capacity)).sum();
+            let r_sm = (demand / self.opts.sm_capacity).max(1.0);
+            let r_mem = (mem_sum / self.opts.mem_capacity).max(1.0);
+            let r_eff = r_sm.max(r_mem);
+            let penalty = 1.0
+                + self.opts.contention_alpha * (r_eff - 1.0)
+                + self.opts.kernel_beta * (running.len() as f64 - 2.0).max(0.0);
+            let global = r_eff * penalty;
+            // Per-piece slowdown: global sharing x within-stream sharing.
+            for (share, &g) in stream_share.iter_mut().zip(group.iter()) {
+                *share = if g > self.opts.sm_capacity {
+                    g / self.opts.sm_capacity
+                } else {
+                    1.0
+                };
+            }
+
+            // Useful occupancy: capped at the pool, degraded by waste.
+            let useful = demand.min(self.opts.sm_capacity) / penalty;
+            let occ_sum: f64 = running.iter().map(|r| r.occupancy).sum();
+            let overhead_frac = if occ_sum > 0.0 {
+                running
+                    .iter()
+                    .filter(|r| r.overhead)
+                    .map(|r| r.occupancy)
+                    .sum::<f64>()
+                    / occ_sum
+            } else {
+                0.0
+            };
+
+            // Advance to the next completion (wall time).
+            let dt = running
+                .iter()
+                .map(|r| r.remaining_us * global * stream_share[r.stream])
+                .fold(f64::INFINITY, f64::min);
+            if let Some(tr) = trace.as_mut() {
+                tr.push(t, t + dt, useful);
+            }
+            used_sm_time += useful * dt;
+            overhead_sm_time += useful * overhead_frac * dt;
+            t += dt;
+
+            let mut i = 0;
+            while i < running.len() {
+                let slowdown = global * stream_share[running[i].stream];
+                running[i].remaining_us -= dt / slowdown;
+                if running[i].remaining_us <= 1e-9 {
+                    let r = running.swap_remove(i);
+                    inflight[r.stream] -= 1;
+                    if let Some(rec) = records.as_mut() {
+                        let op = &streams[r.stream][r.op_index].pieces[r.piece];
+                        rec.push(OpRecord {
+                            stream: r.stream,
+                            source_op: op.source_op,
+                            class: op.class,
+                            start_us: r.start_us,
+                            end_us: t,
+                            occupancy: r.occupancy,
+                        });
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+        }
+
+        let residue = self.opts.sm_capacity * t - used_sm_time;
+        SimOutcome {
+            makespan_us: t,
+            residue,
+            used_sm_time,
+            overhead_sm_time,
+            avg_utilization: if t > 0.0 { used_sm_time / t } else { 0.0 },
+            sync_idle_us: sync_idle,
+            trace,
+            op_records: records,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op(w: f64, t: f64, seg: usize) -> SimOp {
+        SimOp {
+            occupancy: w,
+            duration_us: t,
+            mem_util: 10.0,
+            segment: seg,
+            source_op: 0,
+            class: "conv",
+        }
+    }
+
+    fn opts() -> SimOptions {
+        SimOptions {
+            sm_capacity: 100.0,
+            mem_capacity: 100.0,
+            contention_alpha: 0.25,
+            kernel_beta: 0.0,
+            sync_wait_us: 5.0,
+            record_trace: true,
+            record_ops: true,
+        }
+    }
+
+    #[test]
+    fn single_op_runs_solo() {
+        let out = GpuSim::new(opts()).run(&[vec![op(60.0, 100.0, 0)]]);
+        assert!((out.makespan_us - 100.0).abs() < 1e-9);
+        assert!((out.residue - 40.0 * 100.0).abs() < 1e-6);
+        assert!((out.avg_utilization - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fitting_ops_overlap_for_free() {
+        let out = GpuSim::new(opts()).run(&[
+            vec![op(60.0, 100.0, 0)],
+            vec![op(40.0, 100.0, 0)],
+        ]);
+        assert!((out.makespan_us - 100.0).abs() < 1e-9, "perfect pairing");
+        assert!(out.residue.abs() < 1e-6);
+    }
+
+    #[test]
+    fn oversubscription_time_slices_with_waste() {
+        // 90 + 60 = 150%: r = 1.5, penalty = 1.125, slowdown = 1.6875.
+        // Both ops need 100 solo-us -> both finish at 168.75 wall-us.
+        // Better than serialization (200) but pays 12.5% waste vs the
+        // work-conserving ideal (150).
+        let out = GpuSim::new(opts()).run(&[
+            vec![op(90.0, 100.0, 0)],
+            vec![op(60.0, 100.0, 0)],
+        ]);
+        assert!((out.makespan_us - 168.75).abs() < 1e-6, "{}", out.makespan_us);
+        // Useful occupancy during contention: 100 / 1.125 = 88.9%.
+        assert!(out.avg_utilization < 90.0);
+    }
+
+    #[test]
+    fn contention_free_regulated_pairing_beats_greedy() {
+        // The GACER premise in miniature: running (90||60) then (10||40)
+        // greedily pays contention; the regulated order (90||10), (60||40)
+        // fits both cycles and finishes sooner.
+        let greedy = GpuSim::new(opts()).run(&[
+            vec![op(90.0, 100.0, 0), op(10.0, 100.0, 0)],
+            vec![op(60.0, 100.0, 0), op(40.0, 100.0, 0)],
+        ]);
+        let regulated = GpuSim::new(opts()).run(&[
+            vec![op(90.0, 100.0, 0), op(60.0, 100.0, 0)],
+            vec![op(10.0, 100.0, 0), op(40.0, 100.0, 0)],
+        ]);
+        assert!(
+            regulated.makespan_us < greedy.makespan_us,
+            "regulated {} vs greedy {}",
+            regulated.makespan_us,
+            greedy.makespan_us
+        );
+        assert!((regulated.makespan_us - 200.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn memory_is_a_second_contention_resource() {
+        let mut a = op(20.0, 100.0, 0);
+        let mut b = op(20.0, 100.0, 0);
+        a.mem_util = 90.0;
+        b.mem_util = 90.0;
+        // SM fits (40%), bandwidth oversubscribes (180%): r_mem = 1.8
+        // governs the slowdown.
+        let out = GpuSim::new(opts()).run(&[vec![a], vec![b]]);
+        assert!(out.makespan_us > 150.0, "{}", out.makespan_us);
+    }
+
+    #[test]
+    fn intra_stream_order_is_sequential() {
+        let out = GpuSim::new(opts()).run(&[vec![op(10.0, 50.0, 0), op(10.0, 50.0, 0)]]);
+        assert!((out.makespan_us - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn barrier_blocks_next_segment_and_costs_sync() {
+        // Stream 2's segment-1 op must wait for stream 1's long segment-0
+        // op even though resources are free, then pay T_SW.
+        let out = GpuSim::new(opts()).run(&[
+            vec![op(30.0, 200.0, 0)],
+            vec![op(30.0, 50.0, 0), op(30.0, 50.0, 1)],
+        ]);
+        // makespan = 200 (cluster 0) + 5 (sync) + 50 (cluster 1)
+        assert!((out.makespan_us - 255.0).abs() < 1e-9, "{}", out.makespan_us);
+        assert!((out.sync_idle_us - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_conserves_time_and_work() {
+        let out = GpuSim::new(opts()).run(&[
+            vec![op(60.0, 100.0, 0), op(40.0, 50.0, 0)],
+            vec![op(40.0, 100.0, 0), op(60.0, 50.0, 0)],
+        ]);
+        let tr = out.trace.as_ref().unwrap();
+        let total: f64 = tr.intervals().iter().map(|iv| iv.end_us - iv.start_us).sum();
+        assert!((total - out.makespan_us).abs() < 1e-6);
+        let work: f64 = tr
+            .intervals()
+            .iter()
+            .map(|iv| iv.occupancy * (iv.end_us - iv.start_us))
+            .sum();
+        assert!((work - out.used_sm_time).abs() < 1e-6);
+    }
+
+    #[test]
+    fn op_records_cover_all_ops() {
+        let out = GpuSim::new(opts()).run(&[
+            vec![op(60.0, 100.0, 0), op(40.0, 50.0, 0)],
+            vec![op(40.0, 100.0, 0)],
+        ]);
+        assert_eq!(out.op_records.unwrap().len(), 3);
+    }
+
+    #[test]
+    fn residue_identity_holds() {
+        // Eq. 2/3: R = S_GPU * makespan - used  (conservation check).
+        let out = GpuSim::new(opts()).run(&[
+            vec![op(70.0, 80.0, 0), op(20.0, 40.0, 0)],
+            vec![op(50.0, 60.0, 0)],
+        ]);
+        assert!(
+            (out.residue - (100.0 * out.makespan_us - out.used_sm_time)).abs() < 1e-6
+        );
+    }
+
+    #[test]
+    fn zero_alpha_is_work_conserving() {
+        let mut o = opts();
+        o.contention_alpha = 0.0;
+        // Two saturated ops: time-sliced with no waste = serial total.
+        let out = GpuSim::new(o).run(&[
+            vec![op(100.0, 100.0, 0)],
+            vec![op(100.0, 100.0, 0)],
+        ]);
+        assert!((out.makespan_us - 200.0).abs() < 1e-6);
+        assert!((out.avg_utilization - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_streams_zero_makespan() {
+        let out = GpuSim::new(opts()).run(&[vec![], vec![]]);
+        assert_eq!(out.makespan_us, 0.0);
+        assert_eq!(out.residue, 0.0);
+    }
+}

@@ -1,0 +1,166 @@
+//! Nsight-like utilization traces (the paper's Fig. 8 evidence).
+
+
+/// One piecewise-constant utilization interval.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UtilInterval {
+    pub start_us: f64,
+    pub end_us: f64,
+    /// Aggregate SM occupancy during the interval, percent.
+    pub occupancy: f64,
+}
+
+/// Piecewise-constant SM-utilization trace of one simulation run.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct UtilTrace {
+    intervals: Vec<UtilInterval>,
+}
+
+impl UtilTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append an interval, merging with the previous one when the
+    /// occupancy is unchanged (keeps traces compact).
+    pub fn push(&mut self, start_us: f64, end_us: f64, occupancy: f64) {
+        if end_us <= start_us {
+            return;
+        }
+        if let Some(last) = self.intervals.last_mut() {
+            if (last.occupancy - occupancy).abs() < 1e-9 && (last.end_us - start_us).abs() < 1e-9
+            {
+                last.end_us = end_us;
+                return;
+            }
+        }
+        self.intervals.push(UtilInterval { start_us, end_us, occupancy });
+    }
+
+    pub fn intervals(&self) -> &[UtilInterval] {
+        &self.intervals
+    }
+
+    pub fn makespan_us(&self) -> f64 {
+        self.intervals.last().map_or(0.0, |iv| iv.end_us)
+    }
+
+    /// Time-weighted mean occupancy, percent.
+    pub fn mean_occupancy(&self) -> f64 {
+        let span = self.makespan_us();
+        if span == 0.0 {
+            return 0.0;
+        }
+        self.intervals
+            .iter()
+            .map(|iv| iv.occupancy * (iv.end_us - iv.start_us))
+            .sum::<f64>()
+            / span
+    }
+
+    /// Fraction of the makespan with occupancy below `threshold` percent —
+    /// the "inefficient intervals" metric of §5.3.
+    pub fn idle_fraction(&self, threshold: f64) -> f64 {
+        let span = self.makespan_us();
+        if span == 0.0 {
+            return 0.0;
+        }
+        self.intervals
+            .iter()
+            .filter(|iv| iv.occupancy < threshold)
+            .map(|iv| iv.end_us - iv.start_us)
+            .sum::<f64>()
+            / span
+    }
+
+    /// Resample to `bins` equal time buckets (mean occupancy per bucket) —
+    /// the Fig. 8 bar-series form.
+    pub fn resample(&self, bins: usize) -> Vec<f64> {
+        let span = self.makespan_us();
+        if span == 0.0 || bins == 0 {
+            return vec![0.0; bins];
+        }
+        let width = span / bins as f64;
+        let mut out = vec![0.0f64; bins];
+        for iv in &self.intervals {
+            let mut t = iv.start_us;
+            while t < iv.end_us - 1e-12 {
+                let bin = ((t / width) as usize).min(bins - 1);
+                let bin_end = (bin as f64 + 1.0) * width;
+                let seg_end = iv.end_us.min(bin_end);
+                if seg_end <= t {
+                    // Floating-point edge: the bin boundary landed at (or
+                    // before) `t`. Dump the remainder into this bin and
+                    // move on — never loop without progress.
+                    out[bin] += iv.occupancy * (iv.end_us - t) / width;
+                    break;
+                }
+                out[bin] += iv.occupancy * (seg_end - t) / width;
+                t = seg_end;
+            }
+        }
+        out
+    }
+
+    /// Render a compact ASCII sparkline of the trace (reports/EXPERIMENTS).
+    pub fn sparkline(&self, bins: usize) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        self.resample(bins)
+            .into_iter()
+            .map(|v| GLYPHS[((v / 100.0 * 7.0).round() as usize).min(7)])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t3() -> UtilTrace {
+        let mut tr = UtilTrace::new();
+        tr.push(0.0, 10.0, 100.0);
+        tr.push(10.0, 20.0, 50.0);
+        tr.push(20.0, 40.0, 0.0);
+        tr
+    }
+
+    #[test]
+    fn mean_occupancy_weighted() {
+        // (100*10 + 50*10 + 0*20) / 40 = 37.5
+        assert!((t3().mean_occupancy() - 37.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adjacent_equal_intervals_merge() {
+        let mut tr = UtilTrace::new();
+        tr.push(0.0, 5.0, 60.0);
+        tr.push(5.0, 9.0, 60.0);
+        assert_eq!(tr.intervals().len(), 1);
+        assert!((tr.makespan_us() - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_length_intervals_dropped() {
+        let mut tr = UtilTrace::new();
+        tr.push(1.0, 1.0, 50.0);
+        assert!(tr.intervals().is_empty());
+    }
+
+    #[test]
+    fn idle_fraction_counts_low_intervals() {
+        assert!((t3().idle_fraction(10.0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resample_conserves_mean() {
+        let tr = t3();
+        let bins = tr.resample(8);
+        let mean = bins.iter().sum::<f64>() / 8.0;
+        assert!((mean - tr.mean_occupancy()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sparkline_length_matches_bins() {
+        assert_eq!(t3().sparkline(16).chars().count(), 16);
+    }
+}

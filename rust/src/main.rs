@@ -1,0 +1,99 @@
+//! `gacer` — the GACER leader binary: simulate combos, run the regulation
+//! search, and serve multi-tenant inference over real AOT artifacts.
+//!
+//! Subcommands:
+//!   gacer simulate [--models R50,V16,M3] [--platform TitanV]
+//!   gacer search   [--models R50,V16,M3] [--platform TitanV] [--max-pointers 6]
+//!   gacer serve    [--artifacts artifacts] [--requests 64] [--tenants tiny_cnn,tiny_cnn,tiny_cnn]
+
+use gacer::baselines::BaselineKind;
+use gacer::bench_util::{fig7_header, fig7_row, run_combo};
+use gacer::gpu::SimOptions;
+use gacer::models::zoo;
+use gacer::plan::TenantSet;
+use gacer::profile::{CostModel, Platform};
+use gacer::search::{GacerSearch, SearchConfig};
+use gacer::util::cli::Args;
+
+const USAGE: &str = "usage: gacer <simulate|search|serve> [options]
+  simulate --models R50,V16,M3 --platform TitanV
+  search   --models R50,V16,M3 --platform TitanV --max-pointers 6
+  serve    --artifacts artifacts --requests 64 --tenants tiny_cnn,tiny_cnn,tiny_cnn";
+
+fn parse_models(s: &str) -> Vec<String> {
+    s.split(',').map(|m| m.trim().to_string()).collect()
+}
+
+fn platform_or_exit(name: &str) -> Platform {
+    Platform::by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown platform {name}; expected TitanV|P6000|1080Ti");
+        std::process::exit(2);
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let Some(cmd) = args.positional.first().map(String::as_str) else {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    };
+    match cmd {
+        "simulate" => {
+            let platform = platform_or_exit(args.opt_or("platform", "TitanV"));
+            let names = parse_models(args.opt_or("models", "R50,V16,M3"));
+            let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+            let cells = run_combo(&refs, &platform, SearchConfig::default());
+            println!("{}", fig7_header(&cells));
+            println!("{}", fig7_row(&zoo::combo_label(&refs), &cells));
+        }
+        "search" => {
+            let platform = platform_or_exit(args.opt_or("platform", "TitanV"));
+            let names = parse_models(args.opt_or("models", "R50,V16,M3"));
+            let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+            let cost = CostModel::new(platform);
+            let tenants = zoo::build_combo(&refs);
+            let ts = TenantSet::new(&tenants, &cost);
+            let cfg = SearchConfig {
+                max_pointers: args.opt_usize("max-pointers", 6),
+                ..Default::default()
+            };
+            let report = GacerSearch::new(&ts, SimOptions::for_platform(&platform), cfg).run();
+            println!(
+                "combo {} on {}: {:.2}ms -> {:.2}ms ({:.2}x), {} evaluations in {:?}",
+                zoo::combo_label(&refs),
+                platform.name,
+                report.initial.makespan_us / 1e3,
+                report.outcome.makespan_us / 1e3,
+                report.speedup_vs_initial(),
+                report.evaluations,
+                report.elapsed
+            );
+            for (i, d) in tenants.iter().enumerate() {
+                println!(
+                    "  {}: pointers {:?}, {} decomposed ops",
+                    d.name,
+                    report.plan.pointers.list(i),
+                    report.plan.chunking[i].len()
+                );
+            }
+            // Context for the reader: where the baselines sit.
+            let base =
+                gacer::baselines::Baseline::new(&ts, SimOptions::for_platform(&platform));
+            for kind in BaselineKind::all() {
+                let o = base.run(kind);
+                println!("  baseline {:<16} {:.2} ms", kind.label(), o.makespan_us / 1e3);
+            }
+        }
+        "serve" => {
+            let artifacts = args.opt_or("artifacts", "artifacts").to_string();
+            let requests = args.opt_usize("requests", 64);
+            let tenants = parse_models(args.opt_or("tenants", "tiny_cnn,tiny_cnn,tiny_cnn"));
+            gacer::coordinator::serve_demo(&artifacts, &tenants, requests)?;
+        }
+        other => {
+            eprintln!("unknown command: {other}\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

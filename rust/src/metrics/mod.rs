@@ -1,0 +1,146 @@
+//! Serving + evaluation metrics: latency histograms, throughput counters,
+//! and report-ready summaries.
+
+use std::time::Duration;
+
+/// Latency sample recorder with percentile queries.
+///
+/// Stores raw microsecond samples; percentile queries sort a snapshot.
+/// Intended for request-scale counts (thousands), not packet-scale.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyHistogram {
+    samples_us: Vec<f64>,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        self.samples_us.push(us);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    /// `q` in [0, 1]; nearest-rank percentile.
+    pub fn percentile_us(&self, q: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((q * (s.len() - 1) as f64).round() as usize).min(s.len() - 1);
+        s[idx]
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.samples_us.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// One-line summary for logs/EXPERIMENTS.md.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}us p50={:.1}us p99={:.1}us max={:.1}us",
+            self.len(),
+            self.mean_us(),
+            self.percentile_us(0.50),
+            self.percentile_us(0.99),
+            self.max_us()
+        )
+    }
+}
+
+/// Throughput window: completed items over elapsed wall time.
+#[derive(Debug, Clone)]
+pub struct Throughput {
+    started: std::time::Instant,
+    completed: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput { started: std::time::Instant::now(), completed: 0 }
+    }
+
+    pub fn inc(&mut self, n: u64) {
+        self.completed += n;
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    pub fn per_second(&self) -> f64 {
+        let el = self.started.elapsed().as_secs_f64();
+        if el <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / el
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=100 {
+            h.record_us(i as f64);
+        }
+        assert!(h.percentile_us(0.5) <= h.percentile_us(0.99));
+        assert_eq!(h.percentile_us(1.0), 100.0);
+        assert_eq!(h.max_us(), 100.0);
+        assert!((h.mean_us() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.percentile_us(0.99), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn summary_contains_counts() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_micros(123));
+        assert!(h.summary().contains("n=1"));
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = Throughput::new();
+        t.inc(5);
+        t.inc(3);
+        assert_eq!(t.completed(), 8);
+        assert!(t.per_second() > 0.0);
+    }
+}

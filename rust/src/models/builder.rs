@@ -1,0 +1,152 @@
+//! Small DSL for assembling vision DFGs while tracking spatial shape.
+
+use crate::dfg::{Dfg, OpKind};
+
+/// Tracks the activation shape (h, w, c) while appending layers.
+pub struct VisionBuilder {
+    pub dfg: Dfg,
+    pub batch: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    layer: usize,
+}
+
+impl VisionBuilder {
+    pub fn new(name: &str, batch: usize, h: usize, w: usize, c: usize) -> Self {
+        VisionBuilder { dfg: Dfg::new(name), batch, h, w, c, layer: 0 }
+    }
+
+    fn next(&mut self, prefix: &str) -> String {
+        self.layer += 1;
+        format!("{prefix}{}", self.layer)
+    }
+
+    /// `k x k` convolution to `cout` channels, SAME padding, given stride.
+    pub fn conv(&mut self, k: usize, cout: usize, stride: usize) -> &mut Self {
+        self.h = self.h.div_ceil(stride);
+        self.w = self.w.div_ceil(stride);
+        let kind = OpKind::Conv { h: self.h, w: self.w, cin: self.c, cout, k, stride };
+        self.c = cout;
+        let name = self.next("conv");
+        self.dfg.push(kind, self.batch, name);
+        self
+    }
+
+    /// Depthwise `k x k` convolution, SAME padding.
+    pub fn dwconv(&mut self, k: usize, stride: usize) -> &mut Self {
+        self.h = self.h.div_ceil(stride);
+        self.w = self.w.div_ceil(stride);
+        let kind = OpKind::DwConv { h: self.h, w: self.w, c: self.c, k };
+        let name = self.next("dwconv");
+        self.dfg.push(kind, self.batch, name);
+        self
+    }
+
+    pub fn bn(&mut self) -> &mut Self {
+        let kind = OpKind::BatchNorm { elems: self.h * self.w * self.c };
+        let name = self.next("bn");
+        self.dfg.push(kind, self.batch, name);
+        self
+    }
+
+    pub fn relu(&mut self) -> &mut Self {
+        let kind = OpKind::ReLU { elems: self.h * self.w * self.c };
+        let name = self.next("relu");
+        self.dfg.push(kind, self.batch, name);
+        self
+    }
+
+    /// `k x k` max/avg pool with stride `k`.
+    pub fn pool(&mut self, k: usize) -> &mut Self {
+        let kind = OpKind::Pool { h: self.h / k, w: self.w / k, c: self.c, k };
+        self.h /= k;
+        self.w /= k;
+        let name = self.next("pool");
+        self.dfg.push(kind, self.batch, name);
+        self
+    }
+
+    /// Residual add at the current shape.
+    pub fn add(&mut self) -> &mut Self {
+        let kind = OpKind::Add { elems: self.h * self.w * self.c };
+        let name = self.next("add");
+        self.dfg.push(kind, self.batch, name);
+        self
+    }
+
+    /// Channel concat to `c_new` total channels (DenseNet).
+    pub fn concat_to(&mut self, c_new: usize) -> &mut Self {
+        self.c = c_new;
+        let kind = OpKind::Concat { elems: self.h * self.w * self.c };
+        let name = self.next("cat");
+        self.dfg.push(kind, self.batch, name);
+        self
+    }
+
+    /// Global average pool to a `c`-vector.
+    pub fn gap(&mut self) -> &mut Self {
+        let kind = OpKind::Pool { h: 1, w: 1, c: self.c, k: self.h };
+        self.h = 1;
+        self.w = 1;
+        let name = self.next("gap");
+        self.dfg.push(kind, self.batch, name);
+        self
+    }
+
+    /// Fully connected layer from the flattened activation.
+    pub fn fc(&mut self, fout: usize) -> &mut Self {
+        let fin = self.h * self.w * self.c;
+        self.h = 1;
+        self.w = 1;
+        self.c = fout;
+        let kind = OpKind::Linear { fin, fout };
+        let name = self.next("fc");
+        self.dfg.push(kind, self.batch, name);
+        self
+    }
+
+    pub fn finish(self) -> Dfg {
+        self.dfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_stride_updates_shape() {
+        let mut b = VisionBuilder::new("t", 1, 224, 224, 3);
+        b.conv(7, 64, 2);
+        assert_eq!((b.h, b.w, b.c), (112, 112, 64));
+    }
+
+    #[test]
+    fn pool_halves() {
+        let mut b = VisionBuilder::new("t", 1, 8, 8, 4);
+        b.pool(2);
+        assert_eq!((b.h, b.w), (4, 4));
+    }
+
+    #[test]
+    fn fc_flattens() {
+        let mut b = VisionBuilder::new("t", 1, 4, 4, 8);
+        b.fc(10);
+        match b.dfg.ops.last().unwrap().kind {
+            OpKind::Linear { fin, fout } => {
+                assert_eq!(fin, 128);
+                assert_eq!(fout, 10);
+            }
+            _ => panic!("expected linear"),
+        }
+    }
+
+    #[test]
+    fn names_are_sequential() {
+        let mut b = VisionBuilder::new("t", 1, 8, 8, 3);
+        b.conv(3, 4, 1).relu().conv(3, 8, 1);
+        let names: Vec<_> = b.dfg.ops.iter().map(|o| o.name.clone()).collect();
+        assert_eq!(names, vec!["conv1", "relu2", "conv3"]);
+    }
+}

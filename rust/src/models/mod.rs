@@ -1,0 +1,16 @@
+//! Tenant model zoo — the ten models of the paper's §5.1 evaluation,
+//! compiled to operator-level DFGs with layer-accurate shapes:
+//!
+//! vision (224×224×3): AlexNet, VGG16, ResNet18/34/50/101, MobileNetV3,
+//! DenseNet121; language: LSTM; recommendation: BST (behavior-sequence
+//! transformer).
+//!
+//! These DFGs drive the cost model, the simulator, and the regulation
+//! search exactly as the paper's PyTorch-exported graphs drive its runtime.
+
+mod builder;
+mod sequence;
+mod vision;
+pub mod zoo;
+
+pub use builder::VisionBuilder;

@@ -1,0 +1,99 @@
+//! Sequence-model tenants: the LSTM language model (ML2020spring emotion
+//! classification) and the BST transformer recommender (Amazon *Book*) of
+//! §5.1. Both are dominated by small, low-occupancy GEMMs — the "low SM
+//! occupation" models whose combos stress temporal (not spatial) regulation
+//! in the paper's analysis of Fig. 7.
+
+use crate::dfg::{Dfg, OpKind};
+
+/// LSTM emotion classifier: embedding + `seq_len` recurrent steps + FC
+/// head (a compact text classifier, per the ML2020spring emotion task).
+/// Default serving batch in the paper's runs is 128.
+pub fn lstm(batch: usize) -> Dfg {
+    lstm_with(batch, 32, 192, 512)
+}
+
+/// Parameterized LSTM: `seq_len` steps, embed width `embed`, hidden `h`.
+pub fn lstm_with(batch: usize, seq_len: usize, embed: usize, h: usize) -> Dfg {
+    let mut d = Dfg::new("LSTM");
+    d.push(OpKind::Embed { seq: seq_len, dim: embed }, batch, "embed");
+    for t in 0..seq_len {
+        d.push(OpKind::LstmCell { i: embed, h }, batch, format!("lstm_t{t}"));
+    }
+    d.push(OpKind::Linear { fin: h, fout: 64 }, batch, "fc1");
+    d.push(OpKind::ReLU { elems: 64 }, batch, "relu1");
+    d.push(OpKind::Linear { fin: 64, fout: 2 }, batch, "fc_out");
+    d
+}
+
+/// Behavior-Sequence Transformer recommender: item embedding + transformer
+/// block(s) + 3-layer MLP head (the Alibaba BST architecture). Default
+/// serving batch is 64.
+pub fn bst(batch: usize) -> Dfg {
+    bst_with(batch, 48, 128, 2)
+}
+
+/// Parameterized BST: `seq` behavior length, `dim` embedding width,
+/// `blocks` transformer blocks.
+pub fn bst_with(batch: usize, seq: usize, dim: usize, blocks: usize) -> Dfg {
+    let mut d = Dfg::new("BST");
+    d.push(OpKind::Embed { seq, dim }, batch, "embed");
+    for blk in 0..blocks {
+        d.push(OpKind::Attention { seq, dim }, batch, format!("attn{blk}"));
+        d.push(OpKind::Add { elems: seq * dim }, batch, format!("res{blk}a"));
+        d.push(OpKind::BatchNorm { elems: seq * dim }, batch, format!("ln{blk}a"));
+        d.push(OpKind::Linear { fin: dim, fout: 4 * dim }, batch, format!("ffn{blk}_up"));
+        d.push(OpKind::ReLU { elems: 4 * dim }, batch, format!("ffn{blk}_act"));
+        d.push(OpKind::Linear { fin: 4 * dim, fout: dim }, batch, format!("ffn{blk}_down"));
+        d.push(OpKind::Add { elems: seq * dim }, batch, format!("res{blk}b"));
+        d.push(OpKind::BatchNorm { elems: seq * dim }, batch, format!("ln{blk}b"));
+    }
+    // MLP head over the flattened sequence (BST: leaky-relu stack).
+    d.push(OpKind::Linear { fin: seq * dim, fout: 1024 }, batch, "head_fc1");
+    d.push(OpKind::ReLU { elems: 1024 }, batch, "head_act1");
+    d.push(OpKind::Linear { fin: 1024, fout: 512 }, batch, "head_fc2");
+    d.push(OpKind::ReLU { elems: 512 }, batch, "head_act2");
+    d.push(OpKind::Linear { fin: 512, fout: 1 }, batch, "head_out");
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::validate;
+    use crate::profile::{CostModel, Platform};
+
+    #[test]
+    fn sequence_models_validate() {
+        validate(&lstm(128)).unwrap();
+        validate(&bst(64)).unwrap();
+    }
+
+    #[test]
+    fn lstm_has_one_cell_per_timestep() {
+        let d = lstm_with(8, 16, 64, 128);
+        let cells = d.ops.iter().filter(|o| o.kind.class() == "lstm").count();
+        assert_eq!(cells, 16);
+    }
+
+    #[test]
+    fn bst_block_count_scales() {
+        let ops1 = bst_with(8, 16, 32, 1).len();
+        let ops3 = bst_with(8, 16, 32, 3).len();
+        assert_eq!(ops3 - ops1, 2 * 8); // 8 ops per block
+    }
+
+    #[test]
+    fn sequence_models_have_low_occupancy() {
+        // The paper's premise for R34+LSTM+BST: these tenants occupy few
+        // SMs, leaving residue that spatial decomposition cannot fill.
+        let m = CostModel::new(Platform::titan_v());
+        let d = lstm(128);
+        let max_w = d
+            .ops
+            .iter()
+            .map(|o| m.cost(o).sm_occupancy)
+            .fold(0.0f64, f64::max);
+        assert!(max_w < 100.0, "LSTM max occupancy {max_w}");
+    }
+}

@@ -1,0 +1,224 @@
+//! Vision model builders (224×224×3 inputs, ImageNet-shaped heads).
+//!
+//! Layer structures follow the torchvision reference implementations the
+//! paper collects its tenants from (§5.1); shapes are layer-accurate so the
+//! cost model sees the real occupancy/duration heterogeneity each
+//! combination exhibits.
+
+use super::builder::VisionBuilder;
+use crate::dfg::Dfg;
+
+/// AlexNet: 5 convs + 3 FCs (the paper's "Alex").
+pub fn alexnet(batch: usize) -> Dfg {
+    let mut b = VisionBuilder::new("Alex", batch, 224, 224, 3);
+    b.conv(11, 96, 4).relu().pool(2);
+    b.conv(5, 256, 1).relu().pool(2);
+    b.conv(3, 384, 1).relu();
+    b.conv(3, 384, 1).relu();
+    b.conv(3, 256, 1).relu().pool(2);
+    b.fc(4096).relu().fc(4096).relu().fc(1000);
+    b.finish()
+}
+
+/// VGG16: 13 convs + 3 FCs ("V16").
+pub fn vgg16(batch: usize) -> Dfg {
+    let mut b = VisionBuilder::new("V16", batch, 224, 224, 3);
+    for (reps, cout) in [(2, 64), (2, 128), (3, 256), (3, 512), (3, 512)] {
+        for _ in 0..reps {
+            b.conv(3, cout, 1).relu();
+        }
+        b.pool(2);
+    }
+    b.fc(4096).relu().fc(4096).relu().fc(1000);
+    b.finish()
+}
+
+/// ResNet basic block: conv-bn-relu-conv-bn-add-relu.
+fn basic_block(b: &mut VisionBuilder, cout: usize, stride: usize) {
+    b.conv(3, cout, stride).bn().relu();
+    b.conv(3, cout, 1).bn().add().relu();
+}
+
+/// ResNet bottleneck block: 1x1 down, 3x3, 1x1 up (4x).
+fn bottleneck(b: &mut VisionBuilder, width: usize, stride: usize) {
+    b.conv(1, width, 1).bn().relu();
+    b.conv(3, width, stride).bn().relu();
+    b.conv(1, width * 4, 1).bn().add().relu();
+}
+
+fn resnet_stem(name: &str, batch: usize) -> VisionBuilder {
+    let mut b = VisionBuilder::new(name, batch, 224, 224, 3);
+    b.conv(7, 64, 2).bn().relu().pool(2);
+    b
+}
+
+/// ResNet-18 ("R18"): [2, 2, 2, 2] basic blocks.
+pub fn resnet18(batch: usize) -> Dfg {
+    let mut b = resnet_stem("R18", batch);
+    for (i, (n, c)) in [(2usize, 64), (2, 128), (2, 256), (2, 512)].iter().enumerate() {
+        for j in 0..*n {
+            basic_block(&mut b, *c, if i > 0 && j == 0 { 2 } else { 1 });
+        }
+    }
+    b.gap().fc(1000);
+    b.finish()
+}
+
+/// ResNet-34 ("R34"): [3, 4, 6, 3] basic blocks.
+pub fn resnet34(batch: usize) -> Dfg {
+    let mut b = resnet_stem("R34", batch);
+    for (i, (n, c)) in [(3usize, 64), (4, 128), (6, 256), (3, 512)].iter().enumerate() {
+        for j in 0..*n {
+            basic_block(&mut b, *c, if i > 0 && j == 0 { 2 } else { 1 });
+        }
+    }
+    b.gap().fc(1000);
+    b.finish()
+}
+
+/// ResNet-50 ("R50"): [3, 4, 6, 3] bottleneck blocks.
+pub fn resnet50(batch: usize) -> Dfg {
+    let mut b = resnet_stem("R50", batch);
+    for (i, (n, w)) in [(3usize, 64), (4, 128), (6, 256), (3, 512)].iter().enumerate() {
+        for j in 0..*n {
+            bottleneck(&mut b, *w, if i > 0 && j == 0 { 2 } else { 1 });
+        }
+    }
+    b.gap().fc(1000);
+    b.finish()
+}
+
+/// ResNet-101 ("R101"): [3, 4, 23, 3] bottleneck blocks.
+pub fn resnet101(batch: usize) -> Dfg {
+    let mut b = resnet_stem("R101", batch);
+    for (i, (n, w)) in [(3usize, 64), (4, 128), (23, 256), (3, 512)].iter().enumerate() {
+        for j in 0..*n {
+            bottleneck(&mut b, *w, if i > 0 && j == 0 { 2 } else { 1 });
+        }
+    }
+    b.gap().fc(1000);
+    b.finish()
+}
+
+/// MobileNetV3-Large ("M3"): inverted-residual bnecks with depthwise convs.
+pub fn mobilenet_v3(batch: usize) -> Dfg {
+    let mut b = VisionBuilder::new("M3", batch, 224, 224, 3);
+    b.conv(3, 16, 2).bn().relu();
+    // (expand, out, kernel, stride) per bneck — MobileNetV3-Large table.
+    let bnecks: &[(usize, usize, usize, usize)] = &[
+        (16, 16, 3, 1),
+        (64, 24, 3, 2),
+        (72, 24, 3, 1),
+        (72, 40, 5, 2),
+        (120, 40, 5, 1),
+        (120, 40, 5, 1),
+        (240, 80, 3, 2),
+        (200, 80, 3, 1),
+        (184, 80, 3, 1),
+        (184, 80, 3, 1),
+        (480, 112, 3, 1),
+        (672, 112, 3, 1),
+        (672, 160, 5, 2),
+        (960, 160, 5, 1),
+        (960, 160, 5, 1),
+    ];
+    for &(expand, out, k, stride) in bnecks {
+        b.conv(1, expand, 1).bn().relu(); // expand
+        b.dwconv(k, stride).bn().relu(); // depthwise
+        b.conv(1, out, 1).bn(); // project
+        if stride == 1 {
+            b.add();
+        }
+    }
+    b.conv(1, 960, 1).bn().relu();
+    b.gap().fc(1280).relu().fc(1000);
+    b.finish()
+}
+
+/// DenseNet-121 ("D121"): dense blocks [6, 12, 24, 16], growth 32.
+pub fn densenet121(batch: usize) -> Dfg {
+    const GROWTH: usize = 32;
+    let mut b = VisionBuilder::new("D121", batch, 224, 224, 3);
+    b.conv(7, 64, 2).bn().relu().pool(2);
+    let mut channels = 64usize;
+    for (bi, layers) in [6usize, 12, 24, 16].iter().enumerate() {
+        for _ in 0..*layers {
+            // bn-relu-1x1(4k)-bn-relu-3x3(k)-concat
+            b.bn().relu().conv(1, 4 * GROWTH, 1);
+            b.bn().relu().conv(3, GROWTH, 1);
+            channels += GROWTH;
+            b.concat_to(channels);
+        }
+        if bi < 3 {
+            // transition: bn-1x1(half)-pool
+            channels /= 2;
+            b.bn().conv(1, channels, 1).pool(2);
+        }
+    }
+    b.bn().relu().gap().fc(1000);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::validate;
+
+    #[test]
+    fn all_vision_models_validate() {
+        for d in [
+            alexnet(8),
+            vgg16(8),
+            resnet18(8),
+            resnet34(8),
+            resnet50(8),
+            resnet101(8),
+            mobilenet_v3(8),
+            densenet121(8),
+        ] {
+            validate(&d).unwrap_or_else(|e| panic!("{}: {e}", d.name));
+        }
+    }
+
+    #[test]
+    fn op_count_ordering_matches_depth() {
+        // Paper: ALEX+V16+R18 is 10~30 ops per model; R101/D121 exceed 100.
+        assert!(alexnet(8).len() >= 10 && alexnet(8).len() <= 30);
+        assert!(vgg16(8).len() >= 20 && vgg16(8).len() <= 40);
+        assert!(resnet101(8).len() > resnet50(8).len());
+        assert!(densenet121(8).len() > 100);
+    }
+
+    #[test]
+    fn r101_d121_m3_combo_exceeds_200_ops() {
+        let total = resnet101(8).len() + densenet121(8).len() + mobilenet_v3(8).len();
+        assert!(total > 200, "combo ops = {total}");
+    }
+
+    #[test]
+    fn vgg_flops_in_published_band() {
+        // ~15.5 GMACs/image published (commonly quoted as "15.5 GFLOPs");
+        // we count 2 FLOPs per MAC.
+        let gmacs = vgg16(1).total_flops() / 2e9;
+        assert!((10.0..20.0).contains(&gmacs), "VGG16 = {gmacs} GMACs");
+    }
+
+    #[test]
+    fn resnet50_flops_in_published_band() {
+        // ~4.1 GMACs/image published (conv core; FC/downsample variance
+        // tolerated).
+        let gmacs = resnet50(1).total_flops() / 2e9;
+        assert!((2.5..6.5).contains(&gmacs), "R50 = {gmacs} GMACs");
+    }
+
+    #[test]
+    fn mobilenet_much_lighter_than_vgg() {
+        assert!(vgg16(1).total_flops() / mobilenet_v3(1).total_flops() > 10.0);
+    }
+
+    #[test]
+    fn batch_propagates_to_all_ops() {
+        let d = resnet18(4);
+        assert!(d.ops.iter().all(|o| o.batch == 4));
+    }
+}

@@ -1,0 +1,103 @@
+//! Named model registry + the paper's five evaluation combinations.
+
+use crate::dfg::Dfg;
+
+use super::{sequence, vision};
+
+/// All model names the zoo can build (the paper's §5.1 selection).
+pub const MODEL_NAMES: [&str; 10] =
+    ["Alex", "V16", "R18", "R34", "R50", "R101", "M3", "D121", "LSTM", "BST"];
+
+/// Build a model DFG by its paper abbreviation at the given batch size.
+pub fn build(name: &str, batch: usize) -> Option<Dfg> {
+    Some(match name {
+        "Alex" => vision::alexnet(batch),
+        "V16" => vision::vgg16(batch),
+        "R18" => vision::resnet18(batch),
+        "R34" => vision::resnet34(batch),
+        "R50" => vision::resnet50(batch),
+        "R101" => vision::resnet101(batch),
+        "M3" => vision::mobilenet_v3(batch),
+        "D121" => vision::densenet121(batch),
+        "LSTM" => sequence::lstm(batch),
+        "BST" => sequence::bst(batch),
+        _ => return None,
+    })
+}
+
+/// Default serving batch per model class (§5.4: vision 8, language 128,
+/// recommendation 64).
+pub fn default_batch(name: &str) -> usize {
+    match name {
+        "LSTM" => 128,
+        "BST" => 64,
+        _ => 8,
+    }
+}
+
+/// Build a model at its default batch.
+pub fn build_default(name: &str) -> Option<Dfg> {
+    build(name, default_batch(name))
+}
+
+/// The five multi-tenant combinations of Fig. 7 / Table 2.
+pub const PAPER_COMBOS: [[&str; 3]; 5] = [
+    ["Alex", "V16", "R18"],
+    ["D121", "V16", "LSTM"],
+    ["R50", "V16", "M3"],
+    ["R101", "D121", "M3"],
+    ["R34", "LSTM", "BST"],
+];
+
+/// Build one paper combo (default batches) as a tenant list.
+pub fn build_combo(names: &[&str]) -> Vec<Dfg> {
+    names
+        .iter()
+        .map(|n| build_default(n).unwrap_or_else(|| panic!("unknown model {n}")))
+        .collect()
+}
+
+/// Display name of a combo (`"R50+V16+M3"`).
+pub fn combo_label(names: &[&str]) -> String {
+    names.join("+")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::validate;
+
+    #[test]
+    fn every_registered_model_builds_and_validates() {
+        for name in MODEL_NAMES {
+            let d = build_default(name).unwrap();
+            validate(&d).unwrap();
+            assert_eq!(d.name, name);
+        }
+    }
+
+    #[test]
+    fn unknown_model_is_none() {
+        assert!(build("GPT4", 8).is_none());
+    }
+
+    #[test]
+    fn default_batches_match_paper() {
+        assert_eq!(default_batch("V16"), 8);
+        assert_eq!(default_batch("LSTM"), 128);
+        assert_eq!(default_batch("BST"), 64);
+    }
+
+    #[test]
+    fn all_paper_combos_build() {
+        for combo in PAPER_COMBOS {
+            let tenants = build_combo(&combo);
+            assert_eq!(tenants.len(), 3);
+        }
+    }
+
+    #[test]
+    fn combo_label_format() {
+        assert_eq!(combo_label(&PAPER_COMBOS[2]), "R50+V16+M3");
+    }
+}

@@ -1,0 +1,314 @@
+//! Deployment plans: the joint spatial/temporal configuration GACER
+//! searches over, and its compilation to simulator streams.
+//!
+//! A [`DeploymentPlan`] carries the paper's three decision structures:
+//! the decomposition `mask` + `list_B` per operator (§4.2) and the pointer
+//! matrix `Matrix_P` (§4.3). [`TenantSet::compile`] lowers tenants + plan
+//! into per-stream [`SimOp`] sequences, inserting the chunk/concat overhead
+//! operators that batch decomposition costs and assigning each op its
+//! segment (cluster) index from the pointer positions.
+
+use std::collections::BTreeMap;
+
+
+use crate::dfg::{Dfg, OpId, OpKind};
+use crate::gpu::{SimOp, SimStage};
+use crate::profile::CostModel;
+use crate::temporal::PointerMatrix;
+
+/// Per-tenant batch-decomposition choices: `op id -> list_B` (Eq. 5).
+/// An absent entry is `mask(O) = 0` (no decomposition).
+pub type ChunkMap = BTreeMap<OpId, Vec<usize>>;
+
+/// The joint spatial + temporal deployment configuration.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DeploymentPlan {
+    /// Spatial: one chunk map per tenant (the mask + `list_B` of §4.2).
+    pub chunking: Vec<ChunkMap>,
+    /// Temporal: the pointer matrix `Matrix_P` of §4.3.
+    pub pointers: PointerMatrix,
+}
+
+impl DeploymentPlan {
+    /// The unregulated plan (Stream-Parallel's configuration).
+    pub fn unregulated(n_tenants: usize) -> Self {
+        DeploymentPlan {
+            chunking: vec![ChunkMap::new(); n_tenants],
+            pointers: PointerMatrix::empty(n_tenants),
+        }
+    }
+
+    /// Total number of decomposed operators (the mask's popcount).
+    pub fn decomposed_ops(&self) -> usize {
+        self.chunking.iter().map(|m| m.len()).sum()
+    }
+
+    /// Validate against a tenant set: chunk lists must sum to the op's
+    /// batch (Eq. 5's constraint) and pointer positions must be in range.
+    pub fn validate(&self, tenants: &[Dfg]) -> Result<(), String> {
+        if self.chunking.len() != tenants.len() {
+            return Err(format!(
+                "plan has {} chunk maps for {} tenants",
+                self.chunking.len(),
+                tenants.len()
+            ));
+        }
+        for (ti, (map, dfg)) in self.chunking.iter().zip(tenants).enumerate() {
+            for (&op, list_b) in map {
+                let Some(o) = dfg.ops.get(op) else {
+                    return Err(format!("tenant {ti}: chunk map references op {op}"));
+                };
+                if list_b.is_empty() || list_b.iter().any(|&b| b == 0) {
+                    return Err(format!("tenant {ti} op {op}: empty/zero chunk"));
+                }
+                let sum: usize = list_b.iter().sum();
+                if sum != o.batch {
+                    return Err(format!(
+                        "tenant {ti} op {op}: list_B sums to {sum}, batch is {}",
+                        o.batch
+                    ));
+                }
+                if !o.chunkable() && list_b.len() > 1 {
+                    return Err(format!("tenant {ti} op {op}: not chunkable"));
+                }
+            }
+        }
+        self.pointers.validate(tenants)
+    }
+}
+
+/// A set of tenant DFGs deployed together, with the cost model that prices
+/// their operators.
+pub struct TenantSet<'a> {
+    pub tenants: &'a [Dfg],
+    pub cost: &'a CostModel,
+}
+
+impl<'a> TenantSet<'a> {
+    pub fn new(tenants: &'a [Dfg], cost: &'a CostModel) -> Self {
+        TenantSet { tenants, cost }
+    }
+
+    /// Lower tenants + plan to staged simulator streams.
+    ///
+    /// A decomposed operator becomes one fork-join stage whose micro-batch
+    /// pieces issue concurrently (the paper deploys decomposed copies on
+    /// parallel streams, Table 3). Consecutive ops decomposed with the
+    /// SAME `list_B` chain: the activation stays split (`torch.chunk` is a
+    /// view), so the `Chunk` overhead is paid once at the region entry and
+    /// the `Concat` once at its exit — not per operator. All inserted ops
+    /// inherit the source op's segment ("decomposed operators are inserted
+    /// between the pointers without affecting `Matrix_P`", §4.4).
+    pub fn compile(&self, plan: &DeploymentPlan) -> Vec<Vec<SimStage>> {
+        self.tenants
+            .iter()
+            .enumerate()
+            .map(|(ti, dfg)| {
+                let empty = ChunkMap::new();
+                let chunks = plan.chunking.get(ti).unwrap_or(&empty);
+                let pointers = plan.pointers.list(ti);
+                let mut stream: Vec<SimStage> = Vec::with_capacity(dfg.len());
+                let mut open_split: Option<&Vec<usize>> = None;
+                for op in &dfg.ops {
+                    // Segment = number of pointers at positions <= op.id.
+                    let segment = pointers.iter().filter(|&&p| p <= op.id).count();
+                    let split = chunks.get(&op.id).filter(|l| l.len() > 1);
+                    // Close an open split region on change/end. The concat
+                    // belongs to the previous op (its segment follows that
+                    // op's pointer count) so segment restamping from
+                    // `source_op` stays exact.
+                    if let Some(prev) = open_split {
+                        if split != Some(prev) {
+                            let elems = dfg.ops[op.id - 1].kind.out_elems();
+                            let prev_segment =
+                                pointers.iter().filter(|&&p| p <= op.id - 1).count();
+                            stream.push(SimStage::solo(self.sim_op(
+                                &OpKind::Concat { elems },
+                                dfg.ops[op.id - 1].batch,
+                                prev_segment,
+                                op.id - 1,
+                            )));
+                            open_split = None;
+                        }
+                    }
+                    match split {
+                        Some(list_b) => {
+                            if open_split.is_none() {
+                                let elems = op.kind.out_elems();
+                                stream.push(SimStage::solo(self.sim_op(
+                                    &OpKind::Chunk { elems },
+                                    op.batch,
+                                    segment,
+                                    op.id,
+                                )));
+                                open_split = Some(list_b);
+                            }
+                            let pieces = list_b
+                                .iter()
+                                .map(|&b| self.sim_op(&op.kind, b, segment, op.id))
+                                .collect();
+                            stream.push(SimStage { pieces });
+                        }
+                        None => stream.push(SimStage::solo(self.sim_op(
+                            &op.kind, op.batch, segment, op.id,
+                        ))),
+                    }
+                }
+                if open_split.is_some() {
+                    let last = dfg.ops.last().unwrap();
+                    let elems = last.kind.out_elems();
+                    let segment = pointers.iter().filter(|&&p| p <= last.id).count();
+                    stream.push(SimStage::solo(self.sim_op(
+                        &OpKind::Concat { elems },
+                        last.batch,
+                        segment,
+                        last.id,
+                    )));
+                }
+                stream
+            })
+            .collect()
+    }
+
+    fn sim_op(&self, kind: &OpKind, batch: usize, segment: usize, source: OpId) -> SimOp {
+        let c = self.cost.cost_of(kind, batch);
+        SimOp {
+            occupancy: c.sm_occupancy,
+            duration_us: c.duration_us,
+            mem_util: c.mem_util,
+            segment,
+            source_op: source,
+            class: kind.class(),
+        }
+    }
+
+    /// Compile with every tenant in its own single-segment stream — the
+    /// raw Stream-Parallel lowering (flat: one SimOp per operator).
+    pub fn compile_unregulated(&self) -> Vec<Vec<SimOp>> {
+        self.compile(&DeploymentPlan::unregulated(self.tenants.len()))
+            .into_iter()
+            .map(|stages| stages.into_iter().flat_map(|st| st.pieces).collect())
+            .collect()
+    }
+
+    /// Compile + simulate a plan under `opts` — the modeling-based
+    /// evaluation every regulation step uses (no hardware profiling per
+    /// candidate, §4.4 "Search Cost Analysis").
+    pub fn simulate(
+        &self,
+        plan: &DeploymentPlan,
+        opts: crate::gpu::SimOptions,
+    ) -> crate::gpu::SimOutcome {
+        crate::gpu::GpuSim::new(opts).run_staged(&self.compile(plan))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+    use crate::profile::Platform;
+
+    fn setup() -> (Vec<Dfg>, CostModel) {
+        let tenants = zoo::build_combo(&["Alex", "V16", "R18"]);
+        (tenants, CostModel::new(Platform::titan_v()))
+    }
+
+    #[test]
+    fn unregulated_compiles_one_simop_per_op() {
+        let (tenants, cost) = setup();
+        let ts = TenantSet::new(&tenants, &cost);
+        let streams = ts.compile_unregulated();
+        for (s, d) in streams.iter().zip(&tenants) {
+            assert_eq!(s.len(), d.len());
+            assert!(s.iter().all(|o| o.segment == 0));
+        }
+    }
+
+    #[test]
+    fn chunking_forks_one_stage_with_overhead() {
+        let (tenants, cost) = setup();
+        let ts = TenantSet::new(&tenants, &cost);
+        let mut plan = DeploymentPlan::unregulated(3);
+        // Chunk V16's first conv (tenant 1, op 0) into 2 pieces.
+        plan.chunking[1].insert(0, vec![4, 4]);
+        plan.validate(&tenants).unwrap();
+        let streams = ts.compile(&plan);
+        // +1 chunk stage, +1 concat stage (pieces share one fork stage).
+        assert_eq!(streams[1].len(), tenants[1].len() + 2);
+        assert_eq!(streams[1][0].pieces[0].class, "chunk");
+        assert_eq!(streams[1][1].pieces.len(), 2, "fork stage has 2 pieces");
+        assert_eq!(streams[1][2].pieces[0].class, "concat");
+    }
+
+    #[test]
+    fn adjacent_chunked_ops_chain_one_overhead_pair() {
+        let (tenants, cost) = setup();
+        let ts = TenantSet::new(&tenants, &cost);
+        let mut plan = DeploymentPlan::unregulated(3);
+        // V16 ops 0 (conv) and 1 (relu) chunked identically: the split
+        // region opens once and closes once.
+        plan.chunking[1].insert(0, vec![4, 4]);
+        plan.chunking[1].insert(1, vec![4, 4]);
+        let streams = ts.compile(&plan);
+        let classes: Vec<&str> = streams[1]
+            .iter()
+            .flat_map(|st| st.pieces.iter().map(|p| p.class))
+            .collect();
+        assert_eq!(classes.iter().filter(|c| **c == "chunk").count(), 1);
+        assert_eq!(classes.iter().filter(|c| **c == "concat").count(), 1);
+        assert_eq!(streams[1].len(), tenants[1].len() + 2);
+    }
+
+    #[test]
+    fn chunk_pieces_have_lower_occupancy() {
+        let (tenants, cost) = setup();
+        let ts = TenantSet::new(&tenants, &cost);
+        let mut plan = DeploymentPlan::unregulated(3);
+        plan.chunking[1].insert(2, vec![2, 2, 2, 2]);
+        let full = ts.compile_unregulated()[1][2].occupancy;
+        let piece = ts.compile(&plan)[1][3].pieces[0].occupancy;
+        assert!(piece <= full);
+    }
+
+    #[test]
+    fn pointers_assign_segments() {
+        let (tenants, cost) = setup();
+        let ts = TenantSet::new(&tenants, &cost);
+        let mut plan = DeploymentPlan::unregulated(3);
+        plan.pointers.set_list(0, vec![5, 10]);
+        let streams = ts.compile(&plan);
+        assert_eq!(streams[0][0].segment(), 0);
+        assert_eq!(streams[0][5].segment(), 1);
+        assert_eq!(streams[0][10].segment(), 2);
+        assert_eq!(streams[0].last().unwrap().segment(), 2);
+    }
+
+    #[test]
+    fn validate_rejects_bad_list_b() {
+        let (tenants, _) = setup();
+        let mut plan = DeploymentPlan::unregulated(3);
+        plan.chunking[0].insert(0, vec![3, 3]); // batch is 8
+        assert!(plan.validate(&tenants).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_wrong_tenant_count() {
+        let (tenants, _) = setup();
+        let plan = DeploymentPlan::unregulated(2);
+        assert!(plan.validate(&tenants).is_err());
+    }
+
+    #[test]
+    fn segments_monotone_within_stream() {
+        let (tenants, cost) = setup();
+        let ts = TenantSet::new(&tenants, &cost);
+        let mut plan = DeploymentPlan::unregulated(3);
+        plan.pointers.set_list(1, vec![3, 9, 20]);
+        for s in ts.compile(&plan) {
+            for pair in s.windows(2) {
+                assert!(pair[1].segment() >= pair[0].segment());
+            }
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Operator cost model — the lookup table `W(O^B)`, `T(O^B)` of §4.1.
+//!
+//! The paper builds this table by profiling each operator on the target
+//! GPU with Nsight (Fig. 4). Without NVIDIA hardware we substitute an
+//! analytic model per platform (DESIGN.md §2) that preserves the table's
+//! qualitative shape: compute-heavy convs saturate SM occupancy as batch
+//! grows; BN/ReLU stay bandwidth-bound and small; duration follows a
+//! roofline `max(flops/achievable-compute, bytes/bandwidth)` plus a fixed
+//! kernel-launch overhead.
+
+mod cost;
+mod platform;
+
+pub use cost::{CostModel, OpCost};
+pub use platform::Platform;

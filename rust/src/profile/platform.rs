@@ -1,0 +1,131 @@
+//! GPU platform descriptions used by the cost model and the simulator.
+//!
+//! Peak numbers match the paper's §5.4 (Titan V 14.9 TFLOPS, P6000 12.6,
+//! 1080Ti 10.4); SM counts and bandwidths are the public spec-sheet values.
+//! `sync_wait_us` is the paper's `T_SW` — the CPU-GPU synchronization wait
+//! a pointer costs (Fig. 6) — and `launch_us` the per-kernel issue cost,
+//! both "relatively stable per system, obtained by profiling" (§4.3); here
+//! they are fixed per platform.
+
+
+/// A GPU platform: everything the cost model + simulator need.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Platform {
+    pub name: &'static str,
+    /// Peak fp32 throughput in TFLOPS.
+    pub peak_tflops: f64,
+    /// Number of streaming multiprocessors.
+    pub sm_count: usize,
+    /// Peak memory bandwidth in GB/s.
+    pub mem_bw_gbps: f64,
+    /// CPU-GPU synchronization wait `T_SW` in microseconds (per pointer).
+    pub sync_wait_us: f64,
+    /// Kernel launch/issue overhead in microseconds (per operator).
+    pub launch_us: f64,
+    /// Contention penalty coefficient: fractional efficiency lost per unit
+    /// of SM-pool oversubscription (the paper's "resource contention and
+    /// corresponding overhead" of greedy multi-stream issue, §1/§2.1).
+    pub contention_alpha: f64,
+    /// Whether the platform supports MPS static partitioning (the paper
+    /// notes P6000/1080Ti do not, §5.4).
+    pub supports_mps: bool,
+}
+
+impl Platform {
+    /// NVIDIA Titan V — the paper's primary evaluation platform (Fig. 7/8).
+    pub fn titan_v() -> Self {
+        Platform {
+            name: "TitanV",
+            peak_tflops: 14.9,
+            sm_count: 80,
+            mem_bw_gbps: 653.0,
+            sync_wait_us: 5.0,
+            launch_us: 3.0,
+            contention_alpha: 0.25,
+            supports_mps: true,
+        }
+    }
+
+    /// NVIDIA Quadro P6000 (Table 2).
+    pub fn p6000() -> Self {
+        Platform {
+            name: "P6000",
+            peak_tflops: 12.6,
+            sm_count: 60,
+            mem_bw_gbps: 432.0,
+            sync_wait_us: 6.0,
+            launch_us: 3.5,
+            contention_alpha: 0.28,
+            supports_mps: false,
+        }
+    }
+
+    /// NVIDIA GTX 1080 Ti (Table 2).
+    pub fn gtx_1080ti() -> Self {
+        Platform {
+            name: "1080Ti",
+            peak_tflops: 10.4,
+            sm_count: 56,
+            mem_bw_gbps: 484.0,
+            sync_wait_us: 7.0,
+            launch_us: 4.0,
+            contention_alpha: 0.30,
+            supports_mps: false,
+        }
+    }
+
+    /// All platforms of the paper's evaluation.
+    pub fn all() -> [Platform; 3] {
+        [Self::titan_v(), Self::p6000(), Self::gtx_1080ti()]
+    }
+
+    /// Look a platform up by (case-insensitive) name.
+    pub fn by_name(name: &str) -> Option<Platform> {
+        Self::all()
+            .into_iter()
+            .find(|p| p.name.eq_ignore_ascii_case(name))
+    }
+
+    /// Peak fp32 FLOPs per microsecond (the simulator's time unit).
+    pub fn flops_per_us(&self) -> f64 {
+        self.peak_tflops * 1e12 / 1e6
+    }
+
+    /// Peak bytes per microsecond.
+    pub fn bytes_per_us(&self) -> f64 {
+        self.mem_bw_gbps * 1e9 / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(Platform::by_name("titanv").unwrap().name, "TitanV");
+        assert_eq!(Platform::by_name("P6000").unwrap().sm_count, 60);
+        assert!(Platform::by_name("H100").is_none());
+    }
+
+    #[test]
+    fn titan_fastest() {
+        let [t, p, g] = Platform::all();
+        assert!(t.peak_tflops > p.peak_tflops);
+        assert!(p.peak_tflops > g.peak_tflops);
+    }
+
+    #[test]
+    fn only_titan_supports_mps() {
+        assert!(Platform::titan_v().supports_mps);
+        assert!(!Platform::p6000().supports_mps);
+        assert!(!Platform::gtx_1080ti().supports_mps);
+    }
+
+    #[test]
+    fn unit_conversions() {
+        let t = Platform::titan_v();
+        assert!((t.flops_per_us() - 14.9e6).abs() < 1.0);
+        assert!((t.bytes_per_us() - 653e3).abs() < 1.0);
+    }
+}

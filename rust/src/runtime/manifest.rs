@@ -1,0 +1,212 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. One entry per HLO-text artifact with input/output specs.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor shape + dtype as the manifest records them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            shape: v
+                .get("shape")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("spec missing shape"))?,
+            dtype: v
+                .get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("spec missing dtype"))?
+                .to_string(),
+        })
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestEntry {
+    /// Artifact file name relative to the manifest's directory.
+    pub path: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Operator family ("tiny_cnn", "linear", ...), from `meta.op`.
+    pub op: Option<String>,
+    /// Batch size, from `meta.batch`.
+    pub batch: Option<usize>,
+    /// Chunk size for chunked variants, from `meta.chunk`.
+    pub chunk: Option<usize>,
+}
+
+impl ManifestEntry {
+    fn from_json(v: &Json) -> Result<Self> {
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("entry missing {key}"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        let meta = v.get("meta");
+        Ok(ManifestEntry {
+            path: v
+                .get("path")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry missing path"))?
+                .to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            op: meta
+                .and_then(|m| m.get("op"))
+                .and_then(Json::as_str)
+                .map(str::to_string),
+            batch: meta.and_then(|m| m.get("batch")).and_then(Json::as_usize),
+            chunk: meta.and_then(|m| m.get("chunk")).and_then(Json::as_usize),
+        })
+    }
+}
+
+/// The full manifest (sorted map: deterministic iteration for tests/logs).
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    entries: BTreeMap<String, ManifestEntry>,
+}
+
+impl ArtifactManifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let obj = doc.as_obj().ok_or_else(|| anyhow!("manifest not an object"))?;
+        let mut entries = BTreeMap::new();
+        for (name, v) in obj {
+            entries.insert(name.clone(), ManifestEntry::from_json(v)?);
+        }
+        Ok(ArtifactManifest { entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// All entries of an operator family, keyed by batch size — used by
+    /// the batcher to pick the compiled variant for a batch. Chunked
+    /// variants (meta.chunk set) are excluded; they are selected via
+    /// [`Self::chunked_variants_of`].
+    pub fn variants_of(&self, op: &str) -> BTreeMap<usize, String> {
+        self.entries
+            .iter()
+            .filter(|(_, e)| e.op.as_deref() == Some(op) && e.chunk.is_none())
+            .filter_map(|(name, e)| e.batch.map(|b| (b, name.clone())))
+            .collect()
+    }
+
+    /// Chunked variants of a family, keyed by (batch, chunk).
+    pub fn chunked_variants_of(&self, op: &str) -> BTreeMap<(usize, usize), String> {
+        self.entries
+            .iter()
+            .filter(|(_, e)| e.op.as_deref() == Some(op))
+            .filter_map(|(name, e)| {
+                Some(((e.batch?, e.chunk?), name.clone()))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ArtifactManifest {
+        ArtifactManifest::parse(
+            r#"{
+                "tiny_cnn_b2": {
+                    "path": "tiny_cnn_b2.hlo.txt",
+                    "inputs": [{"shape": [2, 32, 32, 3], "dtype": "float32"}],
+                    "outputs": [{"shape": [2, 10], "dtype": "float32"}],
+                    "meta": {"op": "tiny_cnn", "batch": 2}
+                },
+                "tiny_cnn_b8": {
+                    "path": "tiny_cnn_b8.hlo.txt",
+                    "inputs": [{"shape": [8, 32, 32, 3], "dtype": "float32"}],
+                    "outputs": [{"shape": [8, 10], "dtype": "float32"}],
+                    "meta": {"op": "tiny_cnn", "batch": 8}
+                },
+                "linear_chunked_b32_c4": {
+                    "path": "linear_chunked_b32_c4.hlo.txt",
+                    "inputs": [{"shape": [32, 512], "dtype": "float32"}],
+                    "outputs": [{"shape": [32, 128], "dtype": "float32"}],
+                    "meta": {"op": "linear_chunked", "batch": 32, "chunk": 4}
+                }
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_entries() {
+        let m = sample();
+        assert_eq!(m.len(), 3);
+        let e = m.get("tiny_cnn_b2").unwrap();
+        assert_eq!(e.batch, Some(2));
+        assert_eq!(e.op.as_deref(), Some("tiny_cnn"));
+        assert_eq!(e.inputs[0].elems(), 2 * 32 * 32 * 3);
+    }
+
+    #[test]
+    fn variants_keyed_by_batch() {
+        let m = sample();
+        let v = m.variants_of("tiny_cnn");
+        assert_eq!(v.keys().copied().collect::<Vec<_>>(), vec![2, 8]);
+        assert_eq!(v[&8], "tiny_cnn_b8");
+    }
+
+    #[test]
+    fn chunked_variants_separate() {
+        let m = sample();
+        assert!(m.variants_of("linear_chunked").is_empty());
+        let cv = m.chunked_variants_of("linear_chunked");
+        assert_eq!(cv[&(32, 4)], "linear_chunked_b32_c4");
+    }
+
+    #[test]
+    fn missing_entry_is_none() {
+        assert!(sample().get("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(ArtifactManifest::parse("[1,2]").is_err());
+        assert!(ArtifactManifest::parse(r#"{"x": {"path": 3}}"#).is_err());
+    }
+}

@@ -1,0 +1,169 @@
+//! PJRT runtime: loads the HLO-text artifacts `make artifacts` produced
+//! and executes them on the CPU PJRT client. This is the only place the
+//! `xla` crate is touched; Python never runs on the request path.
+//!
+//! Interchange is HLO **text** (not serialized `HloModuleProto`): jax ≥0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+mod manifest;
+
+pub use manifest::{ArtifactManifest, ManifestEntry, TensorSpec};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// Artifact-backed executor: manifest + lazily compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: ArtifactManifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Open an artifact directory (must contain `manifest.json`).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = ArtifactManifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Names of all loadable entries.
+    pub fn entries(&self) -> Vec<String> {
+        self.manifest.names()
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ManifestEntry> {
+        self.manifest.get(name)
+    }
+
+    /// Compile (and cache) the executable for `name`.
+    fn executable(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let path = self.dir.join(&entry.path);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Eagerly compile a set of entries (server startup).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Execute entry `name` with f32 inputs (one flat buffer per input, in
+    /// manifest order); returns the flat f32 outputs.
+    ///
+    /// Shape checking happens against the manifest before touching PJRT.
+    pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let entry = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?
+            .clone();
+        if inputs.len() != entry.inputs.len() {
+            return Err(anyhow!(
+                "{name}: got {} inputs, manifest expects {}",
+                inputs.len(),
+                entry.inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, spec) in inputs.iter().zip(&entry.inputs) {
+            if buf.len() != spec.elems() {
+                return Err(anyhow!(
+                    "{name}: input length {} != spec {:?}",
+                    buf.len(),
+                    spec.shape
+                ));
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(buf)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape input: {e:?}"))?;
+            literals.push(lit);
+        }
+
+        self.executable(name)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).expect("just compiled");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+
+        // aot.py lowers with return_tuple=True: unpack the tuple elements.
+        let n_out = entry.outputs.len();
+        let elems = result
+            .to_tuple()
+            .map_err(|e| anyhow!("decompose tuple: {e:?}"))?;
+        if elems.len() != n_out {
+            return Err(anyhow!("{name}: {} outputs, manifest says {n_out}", elems.len()));
+        }
+        let mut out = Vec::with_capacity(n_out);
+        for lit in elems {
+            out.push(lit.to_vec::<f32>().map_err(|e| anyhow!("read output: {e:?}"))?);
+        }
+        Ok(out)
+    }
+}
+
+/// Load the TinyCNN serving parameters emitted by aot.py
+/// (`tiny_cnn_params.json`): flat f32 buffers in `flatten_params` order.
+pub fn load_params(dir: impl AsRef<Path>) -> Result<Vec<Vec<f32>>> {
+    use crate::util::json::Json;
+    let path = dir.as_ref().join("tiny_cnn_params.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let doc = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+    let arr = doc.as_arr().ok_or_else(|| anyhow!("params not an array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for p in arr {
+        let shape = p
+            .get("shape")
+            .and_then(Json::as_usize_vec)
+            .ok_or_else(|| anyhow!("param missing shape"))?;
+        let data = p
+            .get("data")
+            .and_then(Json::as_f32_vec)
+            .ok_or_else(|| anyhow!("param missing data"))?;
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(anyhow!("param shape/data mismatch: {n} vs {}", data.len()));
+        }
+        out.push(data);
+    }
+    Ok(out)
+}

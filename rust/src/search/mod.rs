@@ -1,0 +1,377 @@
+//! Granularity-aware joint optimization (§4.4, Algorithm 1).
+//!
+//! Coordinate-descent search over the pointer matrix `Matrix_P`,
+//! alternated with spatial decomposition steps:
+//!
+//! 1. start with `|P| = 0` (Stream-Parallel);
+//! 2. at each pointer level, run `X` rounds of coordinate descent — for
+//!    each tenant `i`, for each pointer `j` of `P_i`, scan candidate
+//!    positions, evaluate the overhead-aware residue (Eq. 8) through the
+//!    simulator, and keep the argmin while all other coordinates hold;
+//! 3. after the temporal rounds, run spatial regulation steps (§4.2) and
+//!    update the DFG — decomposed operators land between the existing
+//!    pointers without disturbing `Matrix_P`;
+//! 4. add one pointer per tenant and repeat; stop when the best residue at
+//!    `|P|` is no better than at `|P| - 1` (Algorithm 1 line 9) and return
+//!    the `|P| - 1` optimum.
+//!
+//! The evaluation is modeling-based (simulator, memoized cost lookups) —
+//! no per-candidate hardware profiling — which is what keeps the search in
+//! the seconds-to-minutes band the paper reports in Table 4.
+
+use std::time::Instant;
+
+use crate::gpu::{SimOptions, SimOutcome};
+use crate::plan::{DeploymentPlan, TenantSet};
+use crate::spatial::SpatialRegulator;
+use crate::temporal::PointerMatrix;
+
+/// Search hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchConfig {
+    /// Maximum pointers per tenant (`|P|` cap).
+    pub max_pointers: usize,
+    /// Coordinate-descent rounds per pointer level (Algorithm 1's `X`).
+    pub rounds_per_level: usize,
+    /// Candidate positions scanned per coordinate update.
+    pub positions_per_coordinate: usize,
+    /// Spatial decomposition steps attempted after each level's descent.
+    pub spatial_steps_per_level: usize,
+    /// Enable the spatial knob (disable for the `Temporal`-only ablation).
+    pub enable_spatial: bool,
+    /// Enable the temporal knob (disable for the `Spatial`-only ablation).
+    pub enable_temporal: bool,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            max_pointers: 6,
+            rounds_per_level: 3,
+            positions_per_coordinate: 12,
+            spatial_steps_per_level: 4,
+            enable_spatial: true,
+            enable_temporal: true,
+        }
+    }
+}
+
+impl SearchConfig {
+    /// The paper's `Spatial` ablation arm.
+    pub fn spatial_only() -> Self {
+        SearchConfig { enable_temporal: false, ..Default::default() }
+    }
+
+    /// The paper's `Temporal` ablation arm.
+    pub fn temporal_only() -> Self {
+        SearchConfig { enable_spatial: false, ..Default::default() }
+    }
+}
+
+/// Search result: the chosen plan plus bookkeeping for Tables 4 / Fig. 9.
+#[derive(Debug, Clone)]
+pub struct SearchReport {
+    pub plan: DeploymentPlan,
+    pub outcome: SimOutcome,
+    pub initial: SimOutcome,
+    /// Simulator evaluations performed (the search's unit cost).
+    pub evaluations: usize,
+    /// Best objective found at each pointer level (index = |P|).
+    pub level_best: Vec<f64>,
+    /// Wall-clock search time.
+    pub elapsed: std::time::Duration,
+}
+
+impl SearchReport {
+    pub fn speedup_vs_initial(&self) -> f64 {
+        self.initial.makespan_us / self.outcome.makespan_us
+    }
+}
+
+/// The GACER searcher.
+pub struct GacerSearch<'a> {
+    ts: &'a TenantSet<'a>,
+    opts: SimOptions,
+    cfg: SearchConfig,
+}
+
+impl<'a> GacerSearch<'a> {
+    pub fn new(ts: &'a TenantSet<'a>, opts: SimOptions, cfg: SearchConfig) -> Self {
+        GacerSearch { ts, opts, cfg }
+    }
+
+    /// Run Algorithm 1 to completion.
+    pub fn run(&self) -> SearchReport {
+        let start = Instant::now();
+        let n = self.ts.tenants.len();
+        let mut evals = 0usize;
+
+        let mut plan = DeploymentPlan::unregulated(n);
+        let initial = self.ts.simulate(&plan, self.opts);
+        evals += 1;
+
+        let mut spatial = SpatialRegulator::new(self.opts);
+        let mut best_plan = plan.clone();
+        let mut best_obj = initial.objective();
+        let mut level_best = vec![best_obj];
+
+        // Level 0 may already benefit from spatial-only regulation.
+        if self.cfg.enable_spatial {
+            let (p, o, e) = self.spatial_phase(&mut spatial, plan.clone());
+            evals += e;
+            if o < best_obj {
+                best_obj = o;
+                best_plan = p.clone();
+                level_best[0] = o;
+            }
+            plan = p;
+        }
+
+        if self.cfg.enable_temporal {
+            // Compiled-stream cache for pointer-only evaluations: pricing
+            // depends on chunking alone, so it is rebuilt only after
+            // spatial phases mutate the plan.
+            let mut cache = self.ts.compile(&plan);
+            for _level in 1..=self.cfg.max_pointers {
+                // Add one pointer per tenant, seeded mid-largest-segment.
+                for i in 0..n {
+                    let seed = self.seed_position(&plan.pointers, i);
+                    let mut list = plan.pointers.list(i).to_vec();
+                    list.push(seed);
+                    plan.pointers.set_list(i, list);
+                }
+
+                // Coordinate descent rounds.
+                let mut level_obj = f64::INFINITY;
+                for _ in 0..self.cfg.rounds_per_level {
+                    let mut improved = false;
+                    for i in 0..n {
+                        for j in 0..plan.pointers.list(i).len() {
+                            let (obj, e) =
+                                self.descend_coordinate(&mut plan, &mut cache, i, j);
+                            evals += e;
+                            if obj < level_obj - 1e-9 {
+                                level_obj = obj;
+                                improved = true;
+                            }
+                        }
+                    }
+                    if !improved {
+                        break;
+                    }
+                }
+
+                // Spatial alternation: decomposed ops slot between pointers.
+                if self.cfg.enable_spatial {
+                    spatial.reset_memory();
+                    let (p, o, e) = self.spatial_phase(&mut spatial, plan.clone());
+                    evals += e;
+                    let chunking_changed = p.chunking != plan.chunking;
+                    plan = p;
+                    level_obj = level_obj.min(o);
+                    if chunking_changed {
+                        cache = self.ts.compile(&plan);
+                    }
+                }
+
+                level_best.push(level_obj);
+                if level_obj < best_obj - 1e-9 {
+                    best_obj = level_obj;
+                    best_plan = plan.clone();
+                } else {
+                    // Algorithm 1 line 9: this level is no better — return
+                    // the previous level's optimum.
+                    break;
+                }
+            }
+        }
+
+        let outcome = self.ts.simulate(&best_plan, self.opts);
+        SearchReport {
+            plan: best_plan,
+            outcome,
+            initial,
+            evaluations: evals,
+            level_best,
+            elapsed: start.elapsed(),
+        }
+    }
+
+    /// Greedy spatial phase: apply improving decompositions until none.
+    fn spatial_phase(
+        &self,
+        reg: &mut SpatialRegulator,
+        mut plan: DeploymentPlan,
+    ) -> (DeploymentPlan, f64, usize) {
+        let mut evals = 0usize;
+        let mut obj = {
+            evals += 1;
+            self.ts.simulate(&plan, self.opts).objective()
+        };
+        for _ in 0..self.cfg.spatial_steps_per_level {
+            match reg.step(self.ts, &plan) {
+                Some(step) => {
+                    evals += reg.candidates_per_step + 1;
+                    obj = step.outcome.objective();
+                    plan = step.plan;
+                }
+                None => break,
+            }
+        }
+        (plan, obj, evals)
+    }
+
+    /// Optimize pointer (i, j) by scanning a position grid while all other
+    /// coordinates hold (the inner loop of Algorithm 1).
+    ///
+    /// Hot path: pointer moves do not change operator pricing, only
+    /// segment assignment — so candidates are evaluated by restamping the
+    /// cached compiled streams in place instead of recompiling the plan
+    /// (see EXPERIMENTS.md §Perf).
+    fn descend_coordinate(
+        &self,
+        plan: &mut DeploymentPlan,
+        cache: &mut Vec<Vec<crate::gpu::SimStage>>,
+        i: usize,
+        j: usize,
+    ) -> (f64, usize) {
+        let len = self.ts.tenants[i].len();
+        let mut evals = 0usize;
+        let mut best_pos = plan.pointers.list(i)[j];
+        let mut best_obj = {
+            evals += 1;
+            self.eval_pointers(cache, &plan.pointers)
+        };
+        let step = (len / self.cfg.positions_per_coordinate).max(1);
+        let mut pointers = plan.pointers.clone();
+        let mut pos = 1;
+        while pos < len {
+            if pos != best_pos {
+                pointers.set_pointer(i, j, pos);
+                evals += 1;
+                let obj = self.eval_pointers(cache, &pointers);
+                if obj < best_obj - 1e-9 {
+                    best_obj = obj;
+                    best_pos = pos;
+                }
+                // Restore for the next candidate (set_pointer re-sorts).
+                pointers = plan.pointers.clone();
+            }
+            pos += step;
+        }
+        plan.pointers.set_pointer(i, j, best_pos);
+        self.restamp(cache, &plan.pointers);
+        (best_obj, evals)
+    }
+
+    /// Restamp cached streams' segments from `pointers` and simulate.
+    fn eval_pointers(
+        &self,
+        cache: &mut Vec<Vec<crate::gpu::SimStage>>,
+        pointers: &PointerMatrix,
+    ) -> f64 {
+        self.restamp(cache, pointers);
+        crate::gpu::GpuSim::new(self.opts).run_staged(cache).objective()
+    }
+
+    fn restamp(&self, cache: &mut [Vec<crate::gpu::SimStage>], pointers: &PointerMatrix) {
+        for (ti, stream) in cache.iter_mut().enumerate() {
+            let plist = pointers.list(ti);
+            for stage in stream.iter_mut() {
+                let src = stage.pieces[0].source_op;
+                let seg = plist.iter().filter(|&&p| p <= src).count();
+                for piece in &mut stage.pieces {
+                    piece.segment = seg;
+                }
+            }
+        }
+    }
+
+    /// Seed a new pointer in the middle of tenant `i`'s largest segment.
+    fn seed_position(&self, pointers: &PointerMatrix, i: usize) -> usize {
+        let len = self.ts.tenants[i].len();
+        let segs = pointers.segments_of(i, len);
+        let (s, e) = segs
+            .iter()
+            .copied()
+            .max_by_key(|(s, e)| e - s)
+            .unwrap_or((0, len));
+        ((s + e) / 2).clamp(1, len.saturating_sub(1).max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+    use crate::profile::{CostModel, Platform};
+
+    fn quick_cfg() -> SearchConfig {
+        SearchConfig {
+            max_pointers: 2,
+            rounds_per_level: 1,
+            positions_per_coordinate: 6,
+            spatial_steps_per_level: 2,
+            ..Default::default()
+        }
+    }
+
+    fn run_combo(names: &[&str], cfg: SearchConfig) -> SearchReport {
+        let platform = Platform::titan_v();
+        let cost = CostModel::new(platform);
+        let tenants = zoo::build_combo(names);
+        let ts = TenantSet::new(&tenants, &cost);
+        GacerSearch::new(&ts, SimOptions::for_platform(&platform), cfg).run()
+    }
+
+    #[test]
+    fn search_never_worse_than_stream_parallel() {
+        let r = run_combo(&["Alex", "V16", "R18"], quick_cfg());
+        assert!(r.outcome.objective() <= r.initial.objective() + 1e-6);
+        assert!(r.outcome.makespan_us <= r.initial.makespan_us * 1.001);
+    }
+
+    #[test]
+    fn search_improves_heavy_combo() {
+        let r = run_combo(&["R50", "V16", "M3"], quick_cfg());
+        assert!(
+            r.speedup_vs_initial() > 1.0,
+            "expected improvement, got {}",
+            r.speedup_vs_initial()
+        );
+    }
+
+    #[test]
+    fn returned_plan_validates() {
+        let platform = Platform::titan_v();
+        let cost = CostModel::new(platform);
+        let tenants = zoo::build_combo(&["R34", "LSTM", "BST"]);
+        let ts = TenantSet::new(&tenants, &cost);
+        let r = GacerSearch::new(&ts, SimOptions::for_platform(&platform), quick_cfg()).run();
+        r.plan.validate(&tenants).unwrap();
+    }
+
+    #[test]
+    fn ablations_are_subsets() {
+        // Joint search must be at least as good as either ablation arm
+        // (same budget) on the big combo.
+        let joint = run_combo(&["R101", "D121", "M3"], quick_cfg());
+        let spatial = run_combo(&["R101", "D121", "M3"], SearchConfig {
+            enable_temporal: false,
+            ..quick_cfg()
+        });
+        let temporal = run_combo(&["R101", "D121", "M3"], SearchConfig {
+            enable_spatial: false,
+            ..quick_cfg()
+        });
+        assert!(joint.outcome.makespan_us <= spatial.outcome.makespan_us * 1.02);
+        assert!(joint.outcome.makespan_us <= temporal.outcome.makespan_us * 1.02);
+    }
+
+    #[test]
+    fn evaluation_count_reported() {
+        let r = run_combo(&["Alex", "V16", "R18"], quick_cfg());
+        assert!(r.evaluations > 1);
+        assert!(!r.level_best.is_empty());
+    }
+}

@@ -1,0 +1,192 @@
+//! Temporal granularity regulation (§4.3): synchronization pointers.
+//!
+//! A pointer at position `p` in tenant `n`'s DFG forces a CPU-GPU
+//! synchronization before operator `p` issues: all operators of the
+//! current cross-tenant cluster must finish first (Eq. 6). The pointer
+//! matrix `Matrix_P = [P_1 .. P_n]` (Eq. 7) holds one sorted position list
+//! per tenant; the paper keeps `|P|` equal across tenants and so do we.
+
+
+use crate::dfg::Dfg;
+
+/// The pointer matrix `Matrix_P` (Eq. 7).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PointerMatrix {
+    /// One sorted pointer-position list per tenant. Position `p` means the
+    /// pointer sits immediately before operator `p` (so op `p` starts
+    /// segment `k+1`). Valid positions are `1..len` (a pointer at 0 or at
+    /// `len` would create an empty segment).
+    lists: Vec<Vec<usize>>,
+}
+
+impl PointerMatrix {
+    /// No pointers: every tenant is a single segment (Stream-Parallel).
+    pub fn empty(n_tenants: usize) -> Self {
+        PointerMatrix { lists: vec![Vec::new(); n_tenants] }
+    }
+
+    pub fn from_lists(lists: Vec<Vec<usize>>) -> Self {
+        let mut m = PointerMatrix { lists };
+        for l in &mut m.lists {
+            l.sort_unstable();
+            l.dedup();
+        }
+        m
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.lists.len()
+    }
+
+    /// Pointer positions of tenant `i`.
+    pub fn list(&self, i: usize) -> &[usize] {
+        self.lists.get(i).map_or(&[], |l| l.as_slice())
+    }
+
+    /// Replace tenant `i`'s pointer list (kept sorted + deduped).
+    pub fn set_list(&mut self, i: usize, mut list: Vec<usize>) {
+        list.sort_unstable();
+        list.dedup();
+        self.lists[i] = list;
+    }
+
+    /// Move tenant `i`'s `j`-th pointer to `pos` (kept sorted).
+    pub fn set_pointer(&mut self, i: usize, j: usize, pos: usize) {
+        self.lists[i][j] = pos;
+        self.lists[i].sort_unstable();
+    }
+
+    /// `|P_n|` — pointers per tenant (the paper keeps them equal; we report
+    /// the max for mixed states during search).
+    pub fn pointers_per_tenant(&self) -> usize {
+        self.lists.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Total pointer count across tenants.
+    pub fn total_pointers(&self) -> usize {
+        self.lists.iter().map(Vec::len).sum()
+    }
+
+    /// Number of segments each tenant is divided into.
+    pub fn segments(&self, i: usize) -> usize {
+        self.list(i).len() + 1
+    }
+
+    /// Split each tenant's DFG into `k` equal segments — the "segment-k"
+    /// scheduling granularity of Fig. 9.
+    pub fn equal_segments(tenants: &[Dfg], k: usize) -> Self {
+        assert!(k >= 1);
+        let lists = tenants
+            .iter()
+            .map(|d| {
+                let n = d.len();
+                (1..k)
+                    .map(|j| (j * n).div_ceil(k).clamp(1, n.saturating_sub(1).max(1)))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        Self::from_lists(lists)
+    }
+
+    /// Operator-wise granularity: a pointer before every op (Fig. 9's
+    /// finest point).
+    pub fn operator_wise(tenants: &[Dfg]) -> Self {
+        let lists = tenants.iter().map(|d| (1..d.len()).collect()).collect();
+        PointerMatrix { lists }
+    }
+
+    /// Check positions are within each tenant's DFG.
+    pub fn validate(&self, tenants: &[Dfg]) -> Result<(), String> {
+        if self.lists.len() != tenants.len() {
+            return Err(format!(
+                "pointer matrix has {} lists for {} tenants",
+                self.lists.len(),
+                tenants.len()
+            ));
+        }
+        for (i, (l, d)) in self.lists.iter().zip(tenants).enumerate() {
+            for &p in l {
+                if p == 0 || p >= d.len() {
+                    return Err(format!(
+                        "tenant {i}: pointer at {p} outside 1..{}",
+                        d.len()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The segment structure as (start, end) op-index ranges per tenant —
+    /// `Seg(M_n)` of Eq. 7.
+    pub fn segments_of(&self, i: usize, n_ops: usize) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.segments(i));
+        let mut start = 0usize;
+        for &p in self.list(i) {
+            out.push((start, p));
+            start = p;
+        }
+        out.push((start, n_ops));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn paper_eq7_example() {
+        // M1 with 12 ops + P1 = (2, 8) -> segments [0,2), [2,8), [8,12).
+        let m = PointerMatrix::from_lists(vec![vec![2, 8]]);
+        assert_eq!(m.segments_of(0, 12), vec![(0, 2), (2, 8), (8, 12)]);
+        assert_eq!(m.segments(0), 3);
+    }
+
+    #[test]
+    fn equal_segments_cover_all_ops() {
+        let tenants = zoo::build_combo(&["Alex", "V16", "R18"]);
+        for k in 1..=8 {
+            let m = PointerMatrix::equal_segments(&tenants, k);
+            for (i, d) in tenants.iter().enumerate() {
+                let segs = m.segments_of(i, d.len());
+                assert_eq!(segs.first().unwrap().0, 0);
+                assert_eq!(segs.last().unwrap().1, d.len());
+                for pair in segs.windows(2) {
+                    assert_eq!(pair[0].1, pair[1].0, "contiguous");
+                }
+                m.validate(&tenants).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn operator_wise_one_op_per_segment() {
+        let tenants = zoo::build_combo(&["Alex", "V16", "R18"]);
+        let m = PointerMatrix::operator_wise(&tenants);
+        assert_eq!(m.segments(0), tenants[0].len());
+    }
+
+    #[test]
+    fn from_lists_sorts_and_dedups() {
+        let m = PointerMatrix::from_lists(vec![vec![8, 2, 8, 5]]);
+        assert_eq!(m.list(0), &[2, 5, 8]);
+    }
+
+    #[test]
+    fn set_pointer_keeps_sorted() {
+        let mut m = PointerMatrix::from_lists(vec![vec![2, 8]]);
+        m.set_pointer(0, 0, 10);
+        assert_eq!(m.list(0), &[8, 10]);
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range() {
+        let tenants = zoo::build_combo(&["Alex", "V16", "R18"]);
+        let m = PointerMatrix::from_lists(vec![vec![0], vec![], vec![]]);
+        assert!(m.validate(&tenants).is_err());
+        let m = PointerMatrix::from_lists(vec![vec![tenants[0].len()], vec![], vec![]]);
+        assert!(m.validate(&tenants).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! In-tree utility substrates. The build environment is fully offline with
+//! a minimal vendored crate set, so the small infrastructure pieces a
+//! serving framework normally pulls from crates.io are implemented here:
+//! a JSON parser/serializer (artifact manifest + parameters + goldens), a
+//! deterministic RNG (workload generation + property tests), and a tiny
+//! CLI argument parser.
+
+pub mod cli;
+pub mod json;
+pub mod rng;

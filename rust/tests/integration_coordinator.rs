@@ -1,0 +1,118 @@
+//! Integration: the serving coordinator over real artifacts — multi-tenant
+//! batched inference with correct per-request routing.
+//!
+//! Requires `make artifacts`; skips with a notice when absent.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gacer::coordinator::{BatchPolicy, Server, ServerConfig, TenantSpec};
+use gacer::runtime::{load_params, Runtime};
+
+fn artifacts_dir() -> Option<&'static str> {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("skipping coordinator integration test: run `make artifacts` first");
+        None
+    }
+}
+
+fn tenant(name: &str, chunk: Option<usize>) -> TenantSpec {
+    TenantSpec {
+        name: name.to_string(),
+        family: "tiny_cnn".to_string(),
+        policy: BatchPolicy::new(4, Duration::from_millis(1), vec![1, 2, 4, 8, 16, 32]),
+        chunk,
+    }
+}
+
+fn pseudo_input(seed: usize) -> Vec<f32> {
+    (0..32 * 32 * 3)
+        .map(|k| (((seed * 131 + k) % 97) as f32 / 97.0) - 0.5)
+        .collect()
+}
+
+#[test]
+fn server_answers_each_request_with_its_own_row() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Ground truth via the runtime directly.
+    let rt = Runtime::new(dir).unwrap();
+    let params = load_params(dir).unwrap();
+    let x0 = pseudo_input(0);
+    let x1 = pseudo_input(1);
+    let mut inputs: Vec<&[f32]> = vec![&x0];
+    for p in &params {
+        inputs.push(p);
+    }
+    let y0 = rt.execute_f32("tiny_cnn_b1", &inputs).unwrap()[0].clone();
+    drop(rt);
+
+    let server =
+        Server::start(dir, vec![tenant("a", None), tenant("b", None)], ServerConfig::default())
+            .unwrap();
+    let out0 = server.infer(0, x0.clone()).unwrap();
+    let out1 = server.infer(1, x1.clone()).unwrap();
+    assert_eq!(out0.len(), 10);
+    assert_eq!(out1.len(), 10);
+    // Request 0's row matches the direct single-batch execution (batching
+    // must not mix rows up).
+    for (a, e) in out0.iter().zip(&y0) {
+        assert!((a - e).abs() < 1e-3 + 1e-3 * e.abs(), "{a} vs {e}");
+    }
+    assert!(out0.iter().zip(&out1).any(|(a, b)| (a - b).abs() > 1e-6));
+}
+
+#[test]
+fn concurrent_clients_all_get_answers() {
+    let Some(dir) = artifacts_dir() else { return };
+    let server = Arc::new(
+        Server::start(
+            dir,
+            vec![tenant("a", Some(2)), tenant("b", None), tenant("c", None)],
+            ServerConfig { issue_order: vec![2, 0, 1], ..Default::default() },
+        )
+        .unwrap(),
+    );
+    let mut handles = Vec::new();
+    for t in 0..3 {
+        let server = Arc::clone(&server);
+        handles.push(std::thread::spawn(move || {
+            for i in 0..10 {
+                let out = server.infer(t, pseudo_input(t * 100 + i)).unwrap();
+                assert_eq!(out.len(), 10);
+                assert!(out.iter().all(|v| v.is_finite()));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn chunked_tenant_matches_unchunked_numerically() {
+    // GACER's spatial knob on the real path must not change results.
+    let Some(dir) = artifacts_dir() else { return };
+    let chunked =
+        Server::start(dir, vec![tenant("a", Some(1))], ServerConfig::default()).unwrap();
+    let plain = Server::start(dir, vec![tenant("a", None)], ServerConfig::default()).unwrap();
+    let x = pseudo_input(7);
+    let yc = chunked.infer(0, x.clone()).unwrap();
+    let yp = plain.infer(0, x).unwrap();
+    for (a, e) in yc.iter().zip(&yp) {
+        assert!((a - e).abs() < 1e-3 + 1e-3 * e.abs(), "{a} vs {e}");
+    }
+}
+
+#[test]
+fn unknown_family_rejected_at_startup() {
+    let Some(dir) = artifacts_dir() else { return };
+    let bad = TenantSpec {
+        name: "x".into(),
+        family: "no_such_model".into(),
+        policy: BatchPolicy::new(4, Duration::from_millis(1), vec![1]),
+        chunk: None,
+    };
+    assert!(Server::start(dir, vec![bad], ServerConfig::default()).is_err());
+}

@@ -1,0 +1,136 @@
+//! Integration: PJRT runtime over real AOT artifacts — numeric parity with
+//! the JAX-recorded goldens (`artifacts/goldens.json`).
+//!
+//! Requires `make artifacts` to have run; tests skip (with a notice) when
+//! the artifact directory is absent so a bare checkout still passes
+//! `cargo test`.
+
+use gacer::runtime::{load_params, Runtime};
+use gacer::util::json::Json;
+
+fn artifacts_dir() -> Option<&'static str> {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("skipping runtime integration test: run `make artifacts` first");
+        None
+    }
+}
+
+fn load_goldens() -> Json {
+    let text = std::fs::read_to_string("artifacts/goldens.json").unwrap();
+    Json::parse(&text).unwrap()
+}
+
+#[test]
+fn manifest_loads_with_expected_families() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let m = rt.manifest();
+    assert!(m.len() >= 20, "expected >=20 artifacts, got {}", m.len());
+    let tiny = m.variants_of("tiny_cnn");
+    assert!(tiny.contains_key(&1) && tiny.contains_key(&8) && tiny.contains_key(&32));
+    assert!(!m.variants_of("linear").is_empty());
+    assert!(!m.chunked_variants_of("linear_chunked").is_empty());
+}
+
+#[test]
+fn linear_artifact_matches_jax_golden() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let goldens = load_goldens();
+    let g = goldens.get("linear_b4").expect("golden present");
+    let x = g.get("x").unwrap().as_f32_vec().unwrap();
+    let w = g.get("w").unwrap().as_f32_vec().unwrap();
+    let b = g.get("b").unwrap().as_f32_vec().unwrap();
+    let expect = g.get("y").unwrap().as_f32_vec().unwrap();
+
+    let out = rt.execute_f32("linear_b4", &[&x, &w, &b]).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), expect.len());
+    for (a, e) in out[0].iter().zip(&expect) {
+        assert!((a - e).abs() < 1e-3 + 1e-3 * e.abs(), "{a} vs {e}");
+    }
+}
+
+#[test]
+fn tiny_cnn_artifact_matches_jax_golden() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let params = load_params(dir).unwrap();
+    let goldens = load_goldens();
+    let g = goldens.get("tiny_cnn_b2").expect("golden present");
+    let x = g.get("x").unwrap().as_f32_vec().unwrap();
+    let expect = g.get("y").unwrap().as_f32_vec().unwrap();
+
+    let mut inputs: Vec<&[f32]> = vec![&x];
+    for p in &params {
+        inputs.push(p);
+    }
+    let out = rt.execute_f32("tiny_cnn_b2", &inputs).unwrap();
+    assert_eq!(out[0].len(), expect.len());
+    for (a, e) in out[0].iter().zip(&expect) {
+        assert!((a - e).abs() < 1e-2 + 1e-3 * e.abs(), "{a} vs {e}");
+    }
+}
+
+#[test]
+fn chunked_linear_variants_agree_with_full() {
+    // GACER's Eq. 5 on real compiled code: every chunked variant computes
+    // the same function as the unchunked batch-32 linear.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let chunked = rt.manifest().chunked_variants_of("linear_chunked");
+    assert!(!chunked.is_empty());
+
+    // Build a deterministic input set.
+    let x: Vec<f32> = (0..32 * 512).map(|i| ((i % 89) as f32) / 89.0 - 0.5).collect();
+    let w: Vec<f32> = (0..512 * 128).map(|i| ((i % 53) as f32) / 530.0).collect();
+    let b: Vec<f32> = (0..128).map(|i| (i as f32) / 128.0).collect();
+
+    let mut reference: Option<Vec<f32>> = None;
+    for ((batch, chunk), name) in chunked {
+        assert_eq!(batch, 32);
+        let out = rt.execute_f32(&name, &[&x, &w, &b]).unwrap();
+        match &reference {
+            None => reference = Some(out[0].clone()),
+            Some(r) => {
+                for (a, e) in out[0].iter().zip(r) {
+                    assert!(
+                        (a - e).abs() < 1e-3 + 1e-3 * e.abs(),
+                        "chunk {chunk}: {a} vs {e}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn executor_rejects_bad_inputs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    // Wrong arity.
+    assert!(rt.execute_f32("linear_b4", &[&[0.0f32][..]]).is_err());
+    // Wrong length.
+    let x = vec![0.0f32; 3];
+    let w = vec![0.0f32; 512 * 128];
+    let b = vec![0.0f32; 128];
+    assert!(rt.execute_f32("linear_b4", &[&x, &w, &b]).is_err());
+    // Unknown entry.
+    assert!(rt.execute_f32("nonexistent", &[]).is_err());
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    assert_eq!(rt.compiled_count(), 0);
+    rt.warmup(&["linear_b1", "linear_b2"]).unwrap();
+    assert_eq!(rt.compiled_count(), 2);
+    let x = vec![0.0f32; 512];
+    let w = vec![0.0f32; 512 * 128];
+    let b = vec![0.0f32; 128];
+    rt.execute_f32("linear_b1", &[&x, &w, &b]).unwrap();
+    assert_eq!(rt.compiled_count(), 2, "no recompilation");
+}

@@ -1,0 +1,158 @@
+//! Integration: the GACER joint search (Algorithm 1) end to end, with the
+//! paper's §5.2 qualitative claims as acceptance criteria.
+
+use gacer::baselines::{Baseline, BaselineKind};
+use gacer::gpu::SimOptions;
+use gacer::models::zoo;
+use gacer::plan::TenantSet;
+use gacer::profile::{CostModel, Platform};
+use gacer::search::{GacerSearch, SearchConfig, SearchReport};
+
+fn search(names: &[&str], platform: &Platform, cfg: SearchConfig) -> SearchReport {
+    let cost = CostModel::new(*platform);
+    let tenants = zoo::build_combo(names);
+    let ts = TenantSet::new(&tenants, &cost);
+    GacerSearch::new(&ts, SimOptions::for_platform(platform), cfg).run()
+}
+
+#[test]
+fn gacer_beats_stream_parallel_on_every_combo() {
+    let platform = Platform::titan_v();
+    for combo in zoo::PAPER_COMBOS {
+        let r = search(&combo, &platform, SearchConfig::default());
+        assert!(
+            r.outcome.makespan_us <= r.initial.makespan_us,
+            "{}: search regressed",
+            zoo::combo_label(&combo)
+        );
+    }
+}
+
+#[test]
+fn gacer_speedup_vs_sequential_in_paper_band() {
+    // Fig. 7: GACER lands at 1.37x-1.66x over CuDNN-Seq (we accept a
+    // slightly wider band for the substitute substrate).
+    let platform = Platform::titan_v();
+    let cost = CostModel::new(platform);
+    let mut in_band = 0;
+    for combo in zoo::PAPER_COMBOS {
+        let tenants = zoo::build_combo(&combo);
+        let ts = TenantSet::new(&tenants, &cost);
+        let seq = Baseline::new(&ts, SimOptions::for_platform(&platform))
+            .run(BaselineKind::CudnnSeq);
+        let r = search(&combo, &platform, SearchConfig::default());
+        let speedup = seq.makespan_us / r.outcome.makespan_us;
+        assert!(speedup > 1.2, "{}: {speedup}", zoo::combo_label(&combo));
+        if (1.3..=2.1).contains(&speedup) {
+            in_band += 1;
+        }
+    }
+    assert!(in_band >= 4, "only {in_band}/5 combos in band");
+}
+
+#[test]
+fn spatial_arm_helps_heavy_workload_combo() {
+    // §5.2: spatial regulation shines on R50+V16+M3 (large operator
+    // workloads).
+    let platform = Platform::titan_v();
+    let r = search(&["R50", "V16", "M3"], &platform, SearchConfig::spatial_only());
+    assert!(
+        r.outcome.makespan_us < r.initial.makespan_us * 0.99,
+        "spatial-only should improve the heavy combo: {} -> {}",
+        r.initial.makespan_us,
+        r.outcome.makespan_us
+    );
+}
+
+#[test]
+fn temporal_arm_helps_many_operator_combo() {
+    // §5.2: temporal regulation shines on R101+D121+M3 (most layers).
+    let platform = Platform::titan_v();
+    let r = search(&["R101", "D121", "M3"], &platform, SearchConfig::temporal_only());
+    assert!(
+        r.outcome.makespan_us < r.initial.makespan_us * 0.995,
+        "temporal-only should improve the deep combo: {} -> {}",
+        r.initial.makespan_us,
+        r.outcome.makespan_us
+    );
+}
+
+#[test]
+fn joint_no_worse_than_either_arm() {
+    let platform = Platform::titan_v();
+    for combo in [["R50", "V16", "M3"], ["R101", "D121", "M3"]] {
+        let joint = search(&combo, &platform, SearchConfig::default());
+        let spatial = search(&combo, &platform, SearchConfig::spatial_only());
+        let temporal = search(&combo, &platform, SearchConfig::temporal_only());
+        assert!(joint.outcome.makespan_us <= spatial.outcome.makespan_us * 1.02);
+        assert!(joint.outcome.makespan_us <= temporal.outcome.makespan_us * 1.02);
+    }
+}
+
+#[test]
+fn gacer_utilization_beats_stream_parallel() {
+    // Fig. 8: ~40% utilization enhancement over Stream-Parallel on the
+    // deep combo (we assert a meaningful improvement).
+    let platform = Platform::titan_v();
+    let cost = CostModel::new(platform);
+    let tenants = zoo::build_combo(&["R101", "D121", "M3"]);
+    let ts = TenantSet::new(&tenants, &cost);
+    let sp = Baseline::new(&ts, SimOptions::for_platform(&platform))
+        .run(BaselineKind::StreamParallel);
+    let r = search(&["R101", "D121", "M3"], &platform, SearchConfig::default());
+    assert!(
+        r.outcome.avg_utilization > sp.avg_utilization,
+        "GACER util {} vs SP {}",
+        r.outcome.avg_utilization,
+        sp.avg_utilization
+    );
+}
+
+#[test]
+fn search_report_is_internally_consistent() {
+    let platform = Platform::titan_v();
+    let r = search(&["Alex", "V16", "R18"], &platform, SearchConfig::default());
+    assert!(r.evaluations > 0);
+    assert!(!r.level_best.is_empty());
+    assert!(r.speedup_vs_initial() >= 1.0);
+    // level_best[0] is the |P|=0 objective; the chosen plan's objective
+    // cannot exceed it.
+    assert!(r.outcome.objective() <= r.level_best[0] + 1e-6);
+}
+
+#[test]
+fn search_works_on_two_and_four_tenant_sets() {
+    let platform = Platform::titan_v();
+    let cost = CostModel::new(platform);
+    for names in [vec!["V16", "R18"], vec!["Alex", "V16", "R18", "M3"]] {
+        let tenants: Vec<_> =
+            names.iter().map(|n| zoo::build_default(n).unwrap()).collect();
+        let ts = TenantSet::new(&tenants, &cost);
+        let r = GacerSearch::new(
+            &ts,
+            SimOptions::for_platform(&platform),
+            SearchConfig::default(),
+        )
+        .run();
+        r.plan.validate(&tenants).unwrap();
+        assert!(r.outcome.makespan_us <= r.initial.makespan_us);
+    }
+}
+
+#[test]
+fn search_cost_scales_roughly_linearly_in_rounds() {
+    // Table 4's shape: wall time grows with the evaluation budget.
+    let platform = Platform::titan_v();
+    let cost = CostModel::new(platform);
+    let tenants = zoo::build_combo(&["R34", "LSTM", "BST"]);
+    let ts = TenantSet::new(&tenants, &cost);
+    let small = SearchConfig { rounds_per_level: 1, ..Default::default() };
+    let large = SearchConfig { rounds_per_level: 6, ..Default::default() };
+    let e1 = GacerSearch::new(&ts, SimOptions::for_platform(&platform), small)
+        .run()
+        .evaluations;
+    let e2 = GacerSearch::new(&ts, SimOptions::for_platform(&platform), large)
+        .run()
+        .evaluations;
+    assert!(e2 >= e1, "evals {e1} -> {e2}");
+}

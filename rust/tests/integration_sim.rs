@@ -1,0 +1,164 @@
+//! Integration: model zoo -> cost model -> simulator, end to end, plus
+//! the paper-shape assertions for the baseline orderings (§5.2).
+
+use gacer::baselines::{Baseline, BaselineKind};
+use gacer::gpu::{GpuSim, SimOptions};
+use gacer::models::zoo;
+use gacer::plan::{DeploymentPlan, TenantSet};
+use gacer::profile::{CostModel, Platform};
+use gacer::temporal::PointerMatrix;
+
+fn opts(p: &Platform) -> SimOptions {
+    SimOptions::for_platform(p)
+}
+
+#[test]
+fn all_paper_combos_simulate_on_all_platforms() {
+    for platform in Platform::all() {
+        let cost = CostModel::new(platform);
+        for combo in zoo::PAPER_COMBOS {
+            let tenants = zoo::build_combo(&combo);
+            let ts = TenantSet::new(&tenants, &cost);
+            let out = ts.simulate(&DeploymentPlan::unregulated(3), opts(&platform));
+            assert!(out.makespan_us > 0.0);
+            assert!(out.residue >= -1e-6);
+            assert!(out.avg_utilization > 0.0 && out.avg_utilization <= 100.0);
+        }
+    }
+}
+
+#[test]
+fn stream_parallel_beats_sequential_on_every_combo() {
+    // Fig. 7's first-order claim.
+    let platform = Platform::titan_v();
+    let cost = CostModel::new(platform);
+    for combo in zoo::PAPER_COMBOS {
+        let tenants = zoo::build_combo(&combo);
+        let ts = TenantSet::new(&tenants, &cost);
+        let b = Baseline::new(&ts, opts(&platform));
+        let seq = b.run(BaselineKind::CudnnSeq);
+        let sp = b.run(BaselineKind::StreamParallel);
+        let speedup = seq.makespan_us / sp.makespan_us;
+        assert!(
+            (1.05..2.5).contains(&speedup),
+            "{}: SP speedup {speedup}",
+            zoo::combo_label(&combo)
+        );
+    }
+}
+
+#[test]
+fn stream_parallel_speedup_in_paper_band() {
+    // Paper: Stream-Parallel lands at roughly 1.2x-1.5x over CuDNN-Seq.
+    let platform = Platform::titan_v();
+    let cost = CostModel::new(platform);
+    let mut in_band = 0;
+    for combo in zoo::PAPER_COMBOS {
+        let tenants = zoo::build_combo(&combo);
+        let ts = TenantSet::new(&tenants, &cost);
+        let b = Baseline::new(&ts, opts(&platform));
+        let speedup = b.run(BaselineKind::CudnnSeq).makespan_us
+            / b.run(BaselineKind::StreamParallel).makespan_us;
+        if (1.15..=1.60).contains(&speedup) {
+            in_band += 1;
+        }
+    }
+    assert!(in_band >= 4, "only {in_band}/5 combos in the 1.15-1.6x band");
+}
+
+#[test]
+fn sequential_utilization_is_low() {
+    // Fig. 8: CuDNN-Seq shows the worst utilization.
+    let platform = Platform::titan_v();
+    let cost = CostModel::new(platform);
+    let tenants = zoo::build_combo(&["R101", "D121", "M3"]);
+    let ts = TenantSet::new(&tenants, &cost);
+    let b = Baseline::new(&ts, opts(&platform).with_trace());
+    let seq = b.run(BaselineKind::CudnnSeq);
+    let sp = b.run(BaselineKind::StreamParallel);
+    assert!(seq.avg_utilization < sp.avg_utilization);
+    assert!(seq.avg_utilization < 60.0, "seq util {}", seq.avg_utilization);
+}
+
+#[test]
+fn pointer_barriers_cost_sync_time() {
+    let platform = Platform::titan_v();
+    let cost = CostModel::new(platform);
+    let tenants = zoo::build_combo(&["Alex", "V16", "R18"]);
+    let ts = TenantSet::new(&tenants, &cost);
+    let mut plan = DeploymentPlan::unregulated(3);
+    plan.pointers = PointerMatrix::equal_segments(&tenants, 4);
+    let out = ts.simulate(&plan, opts(&platform));
+    assert!(out.sync_idle_us > 0.0);
+    // 3 cluster transitions at T_SW each.
+    assert!((out.sync_idle_us - 3.0 * platform.sync_wait_us).abs() < 1e-6);
+}
+
+#[test]
+fn operator_wise_scheduling_pays_heavy_sync_penalty() {
+    // The right edge of Fig. 9.
+    let platform = Platform::titan_v();
+    let cost = CostModel::new(platform);
+    let tenants = zoo::build_combo(&["R50", "V16", "M3"]);
+    let ts = TenantSet::new(&tenants, &cost);
+    let coarse = ts.simulate(&DeploymentPlan::unregulated(3), opts(&platform));
+    let mut fine = DeploymentPlan::unregulated(3);
+    fine.pointers = PointerMatrix::operator_wise(&tenants);
+    let fine_out = ts.simulate(&fine, opts(&platform));
+    assert!(
+        fine_out.makespan_us > coarse.makespan_us * 1.15,
+        "operator-wise {} vs model-wise {}",
+        fine_out.makespan_us,
+        coarse.makespan_us
+    );
+}
+
+#[test]
+fn mps_is_unstable_across_combos() {
+    let platform = Platform::titan_v();
+    let cost = CostModel::new(platform);
+    let mut wins = 0;
+    let mut losses = 0;
+    for combo in zoo::PAPER_COMBOS {
+        let tenants = zoo::build_combo(&combo);
+        let ts = TenantSet::new(&tenants, &cost);
+        let b = Baseline::new(&ts, opts(&platform));
+        let mps = b.run(BaselineKind::Mps).makespan_us;
+        let sp = b.run(BaselineKind::StreamParallel).makespan_us;
+        if mps < sp {
+            wins += 1;
+        }
+        if mps > sp * 1.01 {
+            losses += 1;
+        }
+    }
+    assert!(wins >= 1, "MPS should win somewhere");
+    assert!(losses >= 1, "MPS should lose somewhere");
+}
+
+#[test]
+fn empty_and_single_tenant_edge_cases() {
+    let platform = Platform::titan_v();
+    let out = GpuSim::new(opts(&platform)).run(&[]);
+    assert_eq!(out.makespan_us, 0.0);
+
+    let cost = CostModel::new(platform);
+    let tenants = vec![zoo::build_default("Alex").unwrap()];
+    let ts = TenantSet::new(&tenants, &cost);
+    let solo = ts.simulate(&DeploymentPlan::unregulated(1), opts(&platform));
+    assert!((solo.makespan_us - cost.sequential_latency_us(&tenants[0])).abs() < 1e-6);
+}
+
+#[test]
+fn slower_platforms_slower_absolute_latency() {
+    // Table 2's cross-platform ordering.
+    let mut last = 0.0;
+    for platform in [Platform::titan_v(), Platform::p6000(), Platform::gtx_1080ti()] {
+        let cost = CostModel::new(platform);
+        let tenants = zoo::build_combo(&["R50", "V16", "M3"]);
+        let ts = TenantSet::new(&tenants, &cost);
+        let out = ts.simulate(&DeploymentPlan::unregulated(3), opts(&platform));
+        assert!(out.makespan_us > last, "{} not slower", platform.name);
+        last = out.makespan_us;
+    }
+}

@@ -1,0 +1,262 @@
+//! Property-based invariants over routing, batching, scheduling, and
+//! simulator state, using the in-tree deterministic property harness
+//! (`gacer::util::rng::check_property`; offline environment — no proptest
+//! crate available, same discipline: generated cases + replayable seeds).
+
+use std::time::{Duration, Instant};
+
+use gacer::coordinator::{BatchPolicy, Batcher, PendingRequest};
+use gacer::gpu::{GpuSim, SimOp, SimOptions};
+use gacer::models::zoo;
+use gacer::plan::{DeploymentPlan, TenantSet};
+use gacer::profile::{CostModel, Platform};
+use gacer::search::{GacerSearch, SearchConfig};
+use gacer::temporal::PointerMatrix;
+use gacer::util::rng::{check_property, Rng};
+
+fn random_plan(rng: &mut Rng, tenants: &[gacer::dfg::Dfg]) -> DeploymentPlan {
+    let mut plan = DeploymentPlan::unregulated(tenants.len());
+    for (ti, d) in tenants.iter().enumerate() {
+        // Random pointers.
+        let n_ptr = rng.below(4);
+        let mut ptrs = Vec::new();
+        for _ in 0..n_ptr {
+            if d.len() > 2 {
+                ptrs.push(rng.range(1, d.len() - 1));
+            }
+        }
+        plan.pointers.set_list(ti, ptrs);
+        // Random chunkings over a few ops.
+        for _ in 0..rng.below(4) {
+            let op = &d.ops[rng.below(d.len())];
+            if !op.chunkable() {
+                continue;
+            }
+            // Random split: halves/quarters plus a remainder form.
+            let piece = *rng.choose(&[1, 2, 4]);
+            if piece >= op.batch {
+                continue;
+            }
+            let mut list = vec![piece; op.batch / piece];
+            let rem = op.batch % piece;
+            if rem > 0 {
+                list.push(rem);
+            }
+            plan.chunking[ti].insert(op.id, list);
+        }
+    }
+    plan
+}
+
+#[test]
+fn prop_random_plans_validate_and_conserve_batches() {
+    // (a) any chunking list_B sums to B; compiled streams cover every op.
+    let platform = Platform::titan_v();
+    let cost = CostModel::new(platform);
+    let tenants = zoo::build_combo(&["Alex", "V16", "R18"]);
+    check_property("plan-batch-conservation", 40, |rng| {
+        let plan = random_plan(rng, &tenants);
+        plan.validate(&tenants).unwrap();
+        let ts = TenantSet::new(&tenants, &cost);
+        let streams = ts.compile(&plan);
+        for (ti, d) in tenants.iter().enumerate() {
+            // Per source op: sum of piece batches equals... we verify via
+            // occupancy-op coverage: every op id appears at least once.
+            for op in &d.ops {
+                let covered = streams[ti]
+                    .iter()
+                    .flat_map(|st| st.pieces.iter())
+                    .any(|p| p.source_op == op.id && p.class == op.kind.class());
+                assert!(covered, "tenant {ti} op {} uncovered", op.id);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_schedule_is_permutation_respecting_intra_model_order() {
+    // (b) simulated op records = exactly the compiled ops, and within a
+    // stream source ops complete in DFG order.
+    let platform = Platform::titan_v();
+    let cost = CostModel::new(platform);
+    let tenants = zoo::build_combo(&["Alex", "R18", "M3"]);
+    check_property("schedule-permutation", 25, |rng| {
+        let plan = random_plan(rng, &tenants);
+        let ts = TenantSet::new(&tenants, &cost);
+        let out = ts.simulate(&plan, SimOptions::for_platform(&platform).with_ops());
+        let records = out.op_records.unwrap();
+        let compiled = ts.compile(&plan);
+        let n_pieces: usize =
+            compiled.iter().flat_map(|s| s.iter().map(|st| st.pieces.len())).sum();
+        assert_eq!(records.len(), n_pieces, "every piece executed exactly once");
+        for ti in 0..tenants.len() {
+            let mut last_end_per_source: Vec<(usize, f64)> = records
+                .iter()
+                .filter(|r| r.stream == ti && r.class != "chunk" && r.class != "concat")
+                .map(|r| (r.source_op, r.end_us))
+                .collect();
+            last_end_per_source.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            // Completion order of source ops must be non-decreasing in id
+            // once reduced to their final completion.
+            let mut max_end = std::collections::HashMap::new();
+            for (src, end) in &last_end_per_source {
+                let e = max_end.entry(*src).or_insert(0.0f64);
+                *e = e.max(*end);
+            }
+            let mut ends: Vec<(usize, f64)> = max_end.into_iter().collect();
+            ends.sort_by_key(|(src, _)| *src);
+            for pair in ends.windows(2) {
+                assert!(
+                    pair[1].1 >= pair[0].1 - 1e-9,
+                    "tenant {ti}: op {} finished before op {}",
+                    pair[1].0,
+                    pair[0].0
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_simulator_never_exceeds_pool_in_useful_occupancy() {
+    // (c) the utilization trace never reports more than S_GPU.
+    let platform = Platform::titan_v();
+    let cost = CostModel::new(platform);
+    let tenants = zoo::build_combo(&["R50", "V16", "M3"]);
+    check_property("pool-cap", 20, |rng| {
+        let plan = random_plan(rng, &tenants);
+        let ts = TenantSet::new(&tenants, &cost);
+        let out = ts.simulate(&plan, SimOptions::for_platform(&platform).with_trace());
+        for iv in out.trace.unwrap().intervals() {
+            assert!(iv.occupancy <= 100.0 + 1e-9);
+            assert!(iv.occupancy >= 0.0);
+        }
+    });
+}
+
+#[test]
+fn prop_residue_identity_under_random_streams() {
+    // R = S_GPU * makespan - used, for arbitrary synthetic streams.
+    check_property("residue-identity", 50, |rng| {
+        let n_streams = rng.range(1, 4);
+        let streams: Vec<Vec<SimOp>> = (0..n_streams)
+            .map(|_| {
+                (0..rng.range(1, 12))
+                    .map(|_| SimOp {
+                        occupancy: rng.range(1, 100) as f64,
+                        duration_us: rng.range(1, 500) as f64,
+                        mem_util: rng.range(1, 100) as f64,
+                        segment: 0,
+                        source_op: 0,
+                        class: "conv",
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut opts = SimOptions::for_platform(&Platform::titan_v());
+        opts.record_trace = true;
+        let out = GpuSim::new(opts).run(&streams);
+        assert!(
+            (out.residue - (100.0 * out.makespan_us - out.used_sm_time)).abs()
+                < 1e-6 * out.makespan_us.max(1.0)
+        );
+        // Makespan bounds: at least the longest stream's critical path /
+        // full-contention bound, at most the fully serialized sum.
+        let total: f64 = streams
+            .iter()
+            .flat_map(|s| s.iter().map(|o| o.duration_us))
+            .sum();
+        assert!(out.makespan_us <= total * 3.0 + 1e-6);
+        let longest: f64 = streams
+            .iter()
+            .map(|s| s.iter().map(|o| o.duration_us).sum::<f64>())
+            .fold(0.0, f64::max);
+        assert!(out.makespan_us >= longest - 1e-6);
+    });
+}
+
+#[test]
+fn prop_gacer_never_worse_than_unregulated() {
+    // (d) the search's returned objective <= the unregulated objective.
+    let platform = Platform::titan_v();
+    let cost = CostModel::new(platform);
+    check_property("search-monotone", 6, |rng| {
+        let names: Vec<&str> = (0..3)
+            .map(|_| *rng.choose(&["Alex", "R18", "M3", "LSTM", "BST", "V16"]))
+            .collect();
+        let tenants: Vec<_> =
+            names.iter().map(|n| zoo::build_default(n).unwrap()).collect();
+        let ts = TenantSet::new(&tenants, &cost);
+        let cfg = SearchConfig {
+            max_pointers: 2,
+            rounds_per_level: 1,
+            positions_per_coordinate: 5,
+            spatial_steps_per_level: 2,
+            ..Default::default()
+        };
+        let r = GacerSearch::new(&ts, SimOptions::for_platform(&platform), cfg).run();
+        assert!(r.outcome.objective() <= r.initial.objective() + 1e-6);
+        r.plan.validate(&tenants).unwrap();
+    });
+}
+
+#[test]
+fn prop_batcher_never_drops_or_duplicates() {
+    // (e) across random push/drain interleavings every request id comes
+    // out exactly once, in FIFO order per drain.
+    check_property("batcher-no-drop-no-dup", 60, |rng| {
+        let variants = vec![1, 2, 4, 8, 16];
+        let policy = BatchPolicy::new(
+            rng.range(1, 12),
+            Duration::from_millis(rng.range(0, 4) as u64),
+            variants,
+        );
+        let mut batcher = Batcher::new(policy);
+        let mut pushed = 0u64;
+        let mut drained: Vec<u64> = Vec::new();
+        let t0 = Instant::now();
+        for step in 0..rng.range(5, 40) {
+            if rng.f64() < 0.6 {
+                batcher.push(PendingRequest {
+                    id: pushed,
+                    input: vec![0.0; 4],
+                    enqueued: t0,
+                });
+                pushed += 1;
+            }
+            if rng.f64() < 0.5 {
+                let now = t0 + Duration::from_millis(step as u64);
+                if let Some((variant, batch)) = batcher.drain(now) {
+                    assert!(variant >= batch.len());
+                    drained.extend(batch.iter().map(|r| r.id));
+                }
+            }
+        }
+        while let Some((_, batch)) = batcher.flush() {
+            drained.extend(batch.iter().map(|r| r.id));
+        }
+        assert_eq!(drained.len() as u64, pushed, "drop/dup detected");
+        let mut sorted = drained.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len() as u64, pushed);
+        // FIFO overall (single consumer, ordered drains).
+        assert!(drained.windows(2).all(|w| w[0] < w[1]), "out of order");
+    });
+}
+
+#[test]
+fn prop_pointer_matrix_segments_partition_the_dfg() {
+    let tenants = zoo::build_combo(&["Alex", "V16", "R18"]);
+    check_property("segments-partition", 40, |rng| {
+        let k = rng.range(1, 12);
+        let m = PointerMatrix::equal_segments(&tenants, k);
+        for (i, d) in tenants.iter().enumerate() {
+            let segs = m.segments_of(i, d.len());
+            assert_eq!(segs[0].0, 0);
+            assert_eq!(segs.last().unwrap().1, d.len());
+            let covered: usize = segs.iter().map(|(s, e)| e - s).sum();
+            assert_eq!(covered, d.len());
+        }
+    });
+}
