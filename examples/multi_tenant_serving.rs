@@ -1,8 +1,9 @@
-//! End-to-end serving driver (DESIGN.md's e2e validation): load the real
-//! AOT-compiled TinyCNN artifacts, serve batched requests for three
-//! tenants through the coordinator under two deployment policies —
-//! unregulated vs GACER-informed (priority order + micro-batch chunking) —
-//! and report latency/throughput. Results are recorded in EXPERIMENTS.md.
+//! End-to-end serving driver (DESIGN.md's e2e validation): build a
+//! [`GacerEngine`] over three TinyCNN tenants, let the granularity-aware
+//! search produce the deployment plan, and serve batched requests through
+//! the coordinator under two deployments — the unregulated plan vs the
+//! searched plan — both lowered by the engine (no hand-set `chunk` or
+//! `issue_order` anywhere). Results are recorded in EXPERIMENTS.md.
 //!
 //! Requires `make artifacts` first.
 //!
@@ -11,18 +12,11 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use gacer::coordinator::{BatchPolicy, Server, ServerConfig, TenantSpec};
+use gacer::coordinator::{BatchPolicy, Server};
 use gacer::metrics::LatencyHistogram;
+use gacer::plan::DeploymentPlan;
+use gacer::prelude::*;
 use gacer::util::cli::Args;
-
-fn tenant(name: &str, max_batch: usize, chunk: Option<usize>) -> TenantSpec {
-    TenantSpec {
-        name: name.to_string(),
-        family: "tiny_cnn".to_string(),
-        policy: BatchPolicy::new(max_batch, Duration::from_millis(2), vec![1, 2, 4, 8, 16, 32]),
-        chunk,
-    }
-}
 
 fn drive(server: Arc<Server>, n_tenants: usize, requests: usize) -> (Vec<LatencyHistogram>, f64) {
     let t0 = Instant::now();
@@ -50,44 +44,68 @@ fn drive(server: Arc<Server>, n_tenants: usize, requests: usize) -> (Vec<Latency
     (hists, total / elapsed)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gacer::Result<()> {
     let args = Args::from_env();
     let requests = args.opt_usize("requests", 48);
     let artifacts = args.opt_or("artifacts", "artifacts").to_string();
     if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
-        anyhow::bail!("artifacts not found — run `make artifacts` first");
+        return Err(gacer::Error::Artifact(
+            "artifacts not found — run `make artifacts` first".into(),
+        ));
     }
 
     println!("== multi-tenant serving: 3 x TinyCNN tenants, {requests} requests each ==\n");
 
-    // Policy A: unregulated (arrival order, no chunking) — the
+    // One engine owns the tenant set; the search runs once at build time.
+    let mut builder = GacerEngine::builder()
+        .platform(Platform::titan_v())
+        .artifacts(artifacts.as_str());
+    for (i, max_batch) in [16usize, 8, 4].into_iter().enumerate() {
+        builder = builder.serving_tenant(
+            format!("t{i}"),
+            "tiny_cnn",
+            BatchPolicy::new(max_batch, Duration::from_millis(2), vec![1, 2, 4, 8, 16, 32]),
+        )?;
+    }
+    let engine = builder.build()?;
+
+    // Policy A: the unregulated plan lowered to a deployment — the
     // Stream-Parallel analogue on the real path.
+    let unregulated = engine.deployment_of(&DeploymentPlan::unregulated(engine.len()))?;
+    // Policy B: the searched plan lowered to a deployment.
+    let searched = engine.deployment()?;
+    println!(
+        "searched plan: {} decomposed ops, issue order {:?}, chunks {:?}, quanta {:?}\n",
+        engine.plan().decomposed_ops(),
+        searched.config.issue_order,
+        searched.tenants.iter().map(|t| t.chunk).collect::<Vec<_>>(),
+        searched.config.issue_quanta,
+    );
+
     let plain = Arc::new(Server::start(
         &artifacts,
-        vec![tenant("t0", 8, None), tenant("t1", 8, None), tenant("t2", 8, None)],
-        ServerConfig::default(),
+        unregulated.tenants.clone(),
+        unregulated.config.clone(),
     )?);
     // Warm the executor (first batch pays PJRT compilation for its size).
     let _ = plain.infer(0, vec![0.0; 32 * 32 * 3]);
     let (hists_a, rps_a) = drive(Arc::clone(&plain), 3, requests);
 
-    // Policy B: GACER-informed — tenant 0 is decomposed into micro-batches
-    // of 4 (the plan's list_B realized with compiled variants) and the
-    // issue order prioritizes the latency-sensitive tenants.
-    let gacer = Arc::new(Server::start(
+    let gacer_server = Arc::new(Server::start(
         &artifacts,
-        vec![tenant("t0", 16, Some(4)), tenant("t1", 8, None), tenant("t2", 4, None)],
-        ServerConfig { issue_order: vec![2, 1, 0], ..Default::default() },
+        searched.tenants.clone(),
+        searched.config.clone(),
     )?);
-    let _ = gacer.infer(0, vec![0.0; 32 * 32 * 3]);
-    let (hists_b, rps_b) = drive(Arc::clone(&gacer), 3, requests);
+    let _ = gacer_server.infer(0, vec![0.0; 32 * 32 * 3]);
+    let (hists_b, rps_b) = drive(Arc::clone(&gacer_server), 3, requests);
 
     println!(
         "note: on the CPU-PJRT substrate micro-batching trades throughput for\n\
          issue-granularity (the regulated policy's win on a real GPU is\n\
          occupancy packing, which a CPU backend cannot express) — this driver\n\
-         validates the MECHANISM end to end: chunked plans produce identical\n\
-         numerics with bounded latency cost.\n"
+         validates the MECHANISM end to end: the searched plan's chunking and\n\
+         issue order reach the scheduler and produce identical numerics with\n\
+         bounded latency cost.\n"
     );
     println!("policy             throughput      per-tenant latency");
     println!(
@@ -95,10 +113,10 @@ fn main() -> anyhow::Result<()> {
         hists_a.iter().map(|h| format!("{:.1}ms", h.percentile_us(0.5) / 1e3)).collect::<Vec<_>>()
     );
     println!(
-        "gacer-informed     {rps_b:>7.1} req/s   p50 {:?}",
+        "gacer-searched     {rps_b:>7.1} req/s   p50 {:?}",
         hists_b.iter().map(|h| format!("{:.1}ms", h.percentile_us(0.5) / 1e3)).collect::<Vec<_>>()
     );
-    for (label, hists) in [("unregulated", &hists_a), ("gacer-informed", &hists_b)] {
+    for (label, hists) in [("unregulated", &hists_a), ("gacer-searched", &hists_b)] {
         for (t, h) in hists.iter().enumerate() {
             println!("  {label:<15} tenant {t}: {}", h.summary());
         }

@@ -1,66 +1,93 @@
 //! Online deployment scenario (§4.4 "Search Cost Analysis"): tenants
-//! arrive and leave; the coordinator re-runs the GACER search on each
-//! change and reports how quickly near-optimal plans are recovered —
-//! demonstrating that the modeling-based search is cheap enough for
-//! online use ("acceptable for tasks that care about throughput and are
-//! not sensitive to real-time").
+//! arrive and leave; the [`GacerEngine`] re-plans on each change via the
+//! incremental seeded re-search (`GacerSearch::run_from`) and reports how
+//! quickly near-optimal plans are recovered — demonstrating that the
+//! modeling-based search is cheap enough for online use ("acceptable for
+//! tasks that care about throughput and are not sensitive to real-time").
 //!
 //!     cargo run --release --example online_adaptation
 
 use std::time::Instant;
 
-use gacer::gpu::SimOptions;
 use gacer::models::zoo;
-use gacer::plan::{DeploymentPlan, TenantSet};
-use gacer::profile::{CostModel, Platform};
-use gacer::search::{GacerSearch, SearchConfig};
+use gacer::prelude::*;
 
-fn main() {
-    let platform = Platform::titan_v();
-    let cost = CostModel::new(platform);
-    let opts = SimOptions::for_platform(&platform);
+fn report_event(engine: &GacerEngine, event: &str, took: std::time::Duration) {
+    // SearchReport::initial is the unregulated (Stream-Parallel) outcome
+    // of the current tenant set — the fallback deployment.
+    let r = engine.last_report().expect("engine has tenants");
+    println!(
+        "{:<28} {:>8} {:>12.2} {:>12.2} {:>8.2}x {:>8} {:>12.2?}",
+        event,
+        engine.len(),
+        r.initial.makespan_us / 1e3,
+        r.outcome.makespan_us / 1e3,
+        r.initial.makespan_us / r.outcome.makespan_us,
+        r.evaluations,
+        took
+    );
+    // Online requirement: the plan must never be worse than the
+    // unregulated deployment we could fall back to (same slack as the
+    // search's own never-worse test).
+    assert!(r.outcome.makespan_us <= r.initial.makespan_us * 1.001);
+}
 
-    // A day in the life of a shared GPU: tenants join and leave.
-    let timeline: [(&str, Vec<&str>); 6] = [
-        ("boot: vision pair", vec!["R18", "M3"]),
-        ("V16 arrives", vec!["R18", "M3", "V16"]),
-        ("R18 leaves, LSTM arrives", vec!["M3", "V16", "LSTM"]),
-        ("recommender joins", vec!["M3", "V16", "LSTM", "BST"]),
-        ("V16 leaves", vec!["M3", "LSTM", "BST"]),
-        ("heavy vision returns", vec!["R50", "M3", "LSTM"]),
+fn main() -> gacer::Result<()> {
+    // A day in the life of a shared GPU: tenants join and leave. Each
+    // event is an engine call; the engine owns the tenant set and re-plans
+    // incrementally from the surviving configuration.
+    let mut engine = GacerEngine::builder()
+        .platform(Platform::titan_v())
+        .tenant(zoo::build_default("R18").unwrap())
+        .tenant(zoo::build_default("M3").unwrap())
+        .build()?;
+
+    println!("== online adaptation: engine admit/evict with incremental re-search ==\n");
+    println!(
+        "{:<28} {:>8} {:>12} {:>12} {:>9} {:>8} {:>12}",
+        "event", "tenants", "SP (ms)", "GACER (ms)", "gain", "evals", "re-plan time"
+    );
+
+    let mut ids: Vec<(String, TenantId)> = engine
+        .tenants()
+        .iter()
+        .map(|d| d.name.clone())
+        .zip(engine.tenant_ids())
+        .collect();
+
+    report_event(&engine, "boot: vision pair", std::time::Duration::ZERO);
+
+    // (event label, evict name, admit name)
+    let timeline: [(&str, Option<&str>, Option<&str>); 5] = [
+        ("V16 arrives", None, Some("V16")),
+        ("R18 leaves", Some("R18"), None),
+        ("LSTM arrives", None, Some("LSTM")),
+        ("recommender joins", None, Some("BST")),
+        ("V16 leaves, R50 returns", Some("V16"), Some("R50")),
     ];
 
-    println!("== online adaptation: re-search on every tenant change ==\n");
-    println!(
-        "{:<28} {:>8} {:>12} {:>12} {:>9} {:>12}",
-        "event", "tenants", "SP (ms)", "GACER (ms)", "gain", "search time"
-    );
-
-    let mut total_search = std::time::Duration::ZERO;
-    for (event, names) in timeline {
-        let tenants = zoo::build_combo(&names);
-        let ts = TenantSet::new(&tenants, &cost);
-        let unregulated = ts.simulate(&DeploymentPlan::unregulated(tenants.len()), opts);
+    let mut total = std::time::Duration::ZERO;
+    for (event, out_name, in_name) in timeline {
         let t0 = Instant::now();
-        let report = GacerSearch::new(&ts, opts, SearchConfig::default()).run();
+        if let Some(name) = out_name {
+            let pos = ids.iter().position(|(n, _)| n == name).expect("deployed");
+            let (_, id) = ids.remove(pos);
+            engine.evict(id)?;
+        }
+        if let Some(name) = in_name {
+            let id = engine.admit(zoo::build_default(name).unwrap())?;
+            ids.push((name.to_string(), id));
+        }
         let took = t0.elapsed();
-        total_search += took;
-        println!(
-            "{:<28} {:>8} {:>12.2} {:>12.2} {:>8.2}x {:>12.2?}",
-            event,
-            tenants.len(),
-            unregulated.makespan_us / 1e3,
-            report.outcome.makespan_us / 1e3,
-            unregulated.makespan_us / report.outcome.makespan_us,
-            took
-        );
-        // Online requirement: the plan must never be worse than the
-        // unregulated deployment we could fall back to.
-        assert!(report.outcome.makespan_us <= unregulated.makespan_us * 1.0001);
+        total += took;
+        report_event(&engine, event, took);
     }
+
     println!(
-        "\ntotal search time across 6 reconfigurations: {total_search:.2?} \
+        "\ntotal re-plan time across {} reconfigurations: {total:.2?} \
          (amortized {:.2?} per event — offline-quality plans at online cost)",
-        total_search / 6
+        timeline.len(),
+        total / timeline.len() as u32
     );
+    Ok(())
 }

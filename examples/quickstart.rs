@@ -20,7 +20,7 @@ fn main() {
     // 3. Inspect what the GACER search actually decided.
     let cost = CostModel::new(platform);
     let tenants = zoo::build_combo(&combo);
-    let ts = TenantSet::new(&tenants, &cost);
+    let ts = TenantSet::new(tenants.clone(), cost.clone());
     let report = GacerSearch::new(
         &ts,
         SimOptions::for_platform(&platform),

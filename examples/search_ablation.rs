@@ -24,7 +24,7 @@ fn main() {
     let platform = Platform::titan_v();
     let cost = CostModel::new(platform);
     let tenants = zoo::build_combo(&refs);
-    let ts = TenantSet::new(&tenants, &cost);
+    let ts = TenantSet::new(tenants.clone(), cost.clone());
     let opts = SimOptions::for_platform(&platform);
 
     println!("== temporal granularity sweep: {} ==", zoo::combo_label(&refs));

@@ -70,14 +70,14 @@ fn main() {
     });
 
     // Plan compile + simulate (the search's per-candidate evaluation).
-    let ts = TenantSet::new(&tenants, &cost);
+    let ts = TenantSet::new(tenants.clone(), cost.clone());
     let plan = DeploymentPlan::unregulated(3);
     bench("evaluate: compile + simulate (343 ops)", 2000, || {
         black_box(ts.simulate(&plan, opts));
     });
 
     let cost_deep = CostModel::new(platform);
-    let ts_deep = TenantSet::new(&deep, &cost_deep);
+    let ts_deep = TenantSet::new(deep, cost_deep);
     let plan_deep = DeploymentPlan::unregulated(3);
     bench("evaluate: compile + simulate (900 ops, deep)", 2000, || {
         black_box(ts_deep.simulate(&plan_deep, opts));

@@ -55,12 +55,12 @@ impl BaselineKind {
 
 /// Baseline runner over a tenant set.
 pub struct Baseline<'a> {
-    ts: &'a TenantSet<'a>,
+    ts: &'a TenantSet,
     opts: SimOptions,
 }
 
 impl<'a> Baseline<'a> {
-    pub fn new(ts: &'a TenantSet<'a>, opts: SimOptions) -> Self {
+    pub fn new(ts: &'a TenantSet, opts: SimOptions) -> Self {
         Baseline { ts, opts }
     }
 
@@ -140,7 +140,7 @@ mod tests {
         let platform = Platform::titan_v();
         let cost = CostModel::new(platform);
         let tenants = zoo::build_combo(names);
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         Baseline::new(&ts, SimOptions::for_platform(&platform)).run(kind)
     }
 
@@ -174,7 +174,7 @@ mod tests {
         let cost = CostModel::new(platform);
         let tenants = zoo::build_combo(&["Alex", "V16", "R18"]);
         let expected: f64 = tenants.iter().map(|d| cost.sequential_latency_us(d)).sum();
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let out = Baseline::new(&ts, SimOptions::for_platform(&platform))
             .run(BaselineKind::CudnnSeq);
         assert!((out.makespan_us - expected).abs() / expected < 1e-9);

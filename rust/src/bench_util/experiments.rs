@@ -65,7 +65,7 @@ pub fn fig8() {
     ] {
         let cost = CostModel::new(platform);
         let tenants = zoo::build_combo(&combo);
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let opts = SimOptions::for_platform(&platform).with_trace();
         let outcome = match strat {
             Strategy::Gacer => {
@@ -159,7 +159,7 @@ pub fn fig9() {
     for combo in combos {
         let cost = CostModel::new(platform);
         let tenants = zoo::build_combo(&combo);
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let opts = SimOptions::for_platform(&platform);
         print!("{:<16}", zoo::combo_label(&combo));
         for (_, segs) in &granularities {
@@ -195,7 +195,7 @@ pub fn table3() {
     for (label, v16_split, r18_split) in cases {
         let tenants =
             vec![zoo::build("V16", 32).unwrap(), zoo::build("R18", 32).unwrap()];
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let mut plan = DeploymentPlan::unregulated(2);
         if v16_split.len() > 1 {
             for op in &tenants[0].ops {
@@ -235,7 +235,7 @@ pub fn table4(base_rounds: usize) {
     for combo in combos {
         let cost = CostModel::new(platform);
         let tenants = zoo::build_combo(&combo);
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         print!("{:<16}", zoo::combo_label(&combo));
         for rounds in round_settings {
             let cfg = SearchConfig {
@@ -285,7 +285,7 @@ pub fn ablation_sensitivity() {
         for beta in [0.0, 0.08, 0.16] {
             let cost = CostModel::new(platform);
             let tenants = zoo::build_combo(&["R50", "V16", "M3"]);
-            let ts = TS::new(&tenants, &cost);
+            let ts = TS::new(tenants.clone(), cost.clone());
             let mut opts = SimOptions::for_platform(&platform);
             opts.contention_alpha = alpha;
             opts.kernel_beta = beta;

@@ -64,7 +64,7 @@ pub fn run_strategy(
 ) -> EvalCell {
     let cost = CostModel::new(*platform);
     let tenants = zoo::build_combo(names);
-    let ts = TenantSet::new(&tenants, &cost);
+    let ts = TenantSet::new(tenants.clone(), cost.clone());
     let opts = SimOptions::for_platform(platform);
     let outcome = match strategy {
         Strategy::Baseline(b) => Baseline::new(&ts, opts).run(b),

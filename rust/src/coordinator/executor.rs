@@ -11,8 +11,7 @@
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, Result};
-
+use crate::error::{Error, Result};
 use crate::runtime::Runtime;
 
 /// Response channel for one job.
@@ -70,7 +69,7 @@ impl ExecutorHandle {
                 let _ = join.join();
                 Err(e)
             }
-            Err(_) => Err(anyhow!("executor thread died during startup")),
+            Err(_) => Err(Error::ChannelClosed("executor thread (during startup)")),
         }
     }
 
@@ -83,14 +82,14 @@ impl ExecutorHandle {
         let (otx, orx) = mpsc::channel();
         self.tx
             .send(ExecJob { entry, inputs, respond: otx })
-            .map_err(|_| anyhow!("executor thread gone"))?;
+            .map_err(|_| Error::ChannelClosed("executor thread"))?;
         Ok(orx)
     }
 
     /// Submit and wait (examples/tests and the serial issue loop).
     pub fn submit_blocking(&self, entry: String, inputs: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
         let rx = self.submit(entry, inputs)?;
-        rx.recv().map_err(|_| anyhow!("executor dropped response"))?
+        rx.recv().map_err(|_| Error::ChannelClosed("executor response channel"))?
     }
 }
 

@@ -1,11 +1,15 @@
 //! The multi-tenant serving coordinator — the paper's L3 contribution on
 //! the real-execution path.
 //!
-//! Topology: tokio tasks own per-tenant request queues and dynamic
-//! batchers; a dedicated **executor thread** owns the PJRT runtime (GPU
-//! submission thread analogue) and issues compiled artifacts in the order
-//! a GACER schedule prescribes. Python never runs here: all compute is
-//! AOT-compiled HLO loaded at startup.
+//! Topology (pure std threads; the deployment binary carries no async
+//! runtime): a **scheduler thread** owns the per-tenant request queues and
+//! dynamic batchers; a dedicated **executor thread** owns the PJRT runtime
+//! (GPU submission thread analogue) and issues compiled artifacts in the
+//! order a GACER schedule prescribes. The configuration it executes —
+//! chunk sizes, issue order, issue quanta — is lowered from a searched
+//! [`crate::plan::DeploymentPlan`] by [`crate::engine::GacerEngine`].
+//! Python never runs here: all compute is AOT-compiled HLO loaded at
+//! startup.
 
 mod batcher;
 mod executor;

@@ -2,16 +2,20 @@
 //! scheduler thread, a GACER-ordered issue loop, and the PJRT executor
 //! thread. Pure std threading — the deployment binary carries no async
 //! runtime.
+//!
+//! The server never invents its own regulation: `TenantSpec.chunk`, the
+//! issue order, and the per-round issue quanta all arrive pre-lowered
+//! from a searched [`crate::plan::DeploymentPlan`] by the
+//! [`crate::engine::GacerEngine`].
 
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
-
 use super::batcher::{BatchPolicy, Batcher, PendingRequest};
 use super::executor::ExecutorHandle;
+use crate::error::{Error, Result};
 use crate::metrics::LatencyHistogram;
 use crate::runtime::{load_params, ArtifactManifest};
 
@@ -24,25 +28,80 @@ pub struct TenantSpec {
     pub family: String,
     /// Batching policy.
     pub policy: BatchPolicy,
-    /// Optional spatial regulation on the real path: execute batches as
+    /// Spatial regulation on the real path: execute batches as
     /// micro-batches of this size (GACER `list_B` realized with the
-    /// compiled batch variants).
+    /// compiled batch variants). Derived from the searched plan's chunk
+    /// maps by the engine lowering — never hand-set.
     pub chunk: Option<usize>,
 }
 
-/// Server configuration.
+/// Server configuration. Outside tests this is produced by
+/// [`crate::engine::GacerEngine::deployment`], not written by hand.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     /// Scheduler tick (batch-deadline polling resolution).
     pub tick: Duration,
     /// Tenant issue order when several batches are ready — GACER's
-    /// cross-tenant schedule on the real path (index = priority).
+    /// cross-tenant schedule on the real path (index = priority). Must be
+    /// a permutation of `0..tenants.len()` (or empty for arrival order).
     pub issue_order: Vec<usize>,
+    /// Per-tenant cap on consecutive batches issued per scheduling round —
+    /// the real-path realization of the plan's segment boundaries: a
+    /// tenant with finer temporal granularity (more pointers) yields the
+    /// issue queue sooner. Empty = unbounded (model-wise granularity).
+    pub issue_quanta: Vec<usize>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { tick: Duration::from_micros(200), issue_order: Vec::new() }
+        ServerConfig {
+            tick: Duration::from_micros(200),
+            issue_order: Vec::new(),
+            issue_quanta: Vec::new(),
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Check internal consistency against a tenant count: `issue_order`
+    /// must be a permutation of `0..n` (an out-of-range index would
+    /// otherwise panic deep inside the scheduler loop).
+    pub fn validate(&self, n_tenants: usize) -> Result<()> {
+        if !self.issue_order.is_empty() {
+            let mut seen = vec![false; n_tenants];
+            for &t in &self.issue_order {
+                if t >= n_tenants {
+                    return Err(Error::InvalidConfig(format!(
+                        "issue_order references tenant {t}, only {n_tenants} deployed"
+                    )));
+                }
+                if std::mem::replace(&mut seen[t], true) {
+                    return Err(Error::InvalidConfig(format!(
+                        "issue_order lists tenant {t} twice"
+                    )));
+                }
+            }
+            if self.issue_order.len() != n_tenants {
+                return Err(Error::InvalidConfig(format!(
+                    "issue_order covers {} of {n_tenants} tenants",
+                    self.issue_order.len()
+                )));
+            }
+        }
+        if !self.issue_quanta.is_empty() {
+            if self.issue_quanta.len() != n_tenants {
+                return Err(Error::InvalidConfig(format!(
+                    "issue_quanta has {} entries for {n_tenants} tenants",
+                    self.issue_quanta.len()
+                )));
+            }
+            if self.issue_quanta.contains(&0) {
+                return Err(Error::InvalidConfig(
+                    "issue_quanta entries must be >= 1".into(),
+                ));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -57,12 +116,17 @@ struct Incoming {
 #[derive(Clone)]
 pub struct Server {
     tx: mpsc::Sender<Incoming>,
+    /// Effective deployment, kept for introspection (tests assert the
+    /// searched plan's lowering is what the scheduler executes).
+    specs: Arc<Vec<TenantSpec>>,
+    issue_order: Arc<Vec<usize>>,
 }
 
 impl Server {
-    /// Start the server: opens the artifact dir, warms the executor, and
-    /// spawns the scheduler thread.
+    /// Start the server: validates the configuration, opens the artifact
+    /// dir, warms the executor, and spawns the scheduler thread.
     pub fn start(artifact_dir: &str, tenants: Vec<TenantSpec>, cfg: ServerConfig) -> Result<Server> {
+        cfg.validate(tenants.len())?;
         let manifest = ArtifactManifest::load(
             std::path::Path::new(artifact_dir).join("manifest.json"),
         )?;
@@ -74,7 +138,7 @@ impl Server {
         for t in &tenants {
             let v = manifest.variants_of(&t.family);
             if v.is_empty() {
-                return Err(anyhow!("no artifacts for family {}", t.family));
+                return Err(Error::MissingFamily(t.family.clone()));
             }
             warm.extend(v.values().cloned());
             variants.push(v.into_iter().collect());
@@ -88,14 +152,20 @@ impl Server {
         } else {
             cfg.issue_order.clone()
         };
+        let specs = Arc::new(tenants.clone());
+        let order = Arc::new(issue_order.clone());
+        let quanta = cfg.issue_quanta.clone();
         let (tx, rx) = mpsc::channel();
         std::thread::Builder::new()
             .name("gacer-scheduler".into())
             .spawn(move || {
-                scheduler_loop(rx, tenants, variants, params, executor, cfg.tick, issue_order)
+                scheduler_loop(
+                    rx, tenants, variants, params, executor, cfg.tick, issue_order,
+                    quanta,
+                )
             })
-            .context("spawn scheduler")?;
-        Ok(Server { tx })
+            .map_err(Error::Io)?;
+        Ok(Server { tx, specs, issue_order: order })
     }
 
     /// Submit one request and wait for its output row.
@@ -103,11 +173,22 @@ impl Server {
         let (otx, orx) = mpsc::channel();
         self.tx
             .send(Incoming { tenant, input, respond: otx })
-            .map_err(|_| anyhow!("server stopped"))?;
-        orx.recv().map_err(|_| anyhow!("server dropped request"))?
+            .map_err(|_| Error::ChannelClosed("server"))?;
+        orx.recv().map_err(|_| Error::ChannelClosed("server request"))?
+    }
+
+    /// The deployed tenant specs (as the scheduler sees them).
+    pub fn tenant_specs(&self) -> &[TenantSpec] {
+        &self.specs
+    }
+
+    /// The effective cross-tenant issue order the scheduler executes.
+    pub fn issue_order(&self) -> &[usize] {
+        &self.issue_order
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn scheduler_loop(
     rx: mpsc::Receiver<Incoming>,
     tenants: Vec<TenantSpec>,
@@ -116,6 +197,7 @@ fn scheduler_loop(
     executor: ExecutorHandle,
     tick: Duration,
     issue_order: Vec<usize>,
+    issue_quanta: Vec<usize>,
 ) {
     let n = tenants.len();
     let mut batchers: Vec<Batcher> =
@@ -135,6 +217,13 @@ fn scheduler_loop(
             }
             match rx.recv_timeout(deadline - now) {
                 Ok(msg) => {
+                    if msg.tenant >= n {
+                        let _ = msg.respond.send(Err(Error::InvalidConfig(format!(
+                            "request for tenant {}, only {n} deployed",
+                            msg.tenant
+                        ))));
+                        continue;
+                    }
                     let id = next_id;
                     next_id += 1;
                     responders[msg.tenant].insert(id, msg.respond);
@@ -152,14 +241,20 @@ fn scheduler_loop(
             }
         }
 
-        // Issue ready batches in GACER order.
+        // Issue ready batches in GACER order, bounded per tenant by its
+        // segment-derived quantum (leftovers go next round — the plan's
+        // pointer boundaries realized as issue-queue yields).
         let now = Instant::now();
         for &t in &issue_order {
-            while let Some((variant, batch)) = batchers[t].drain(now) {
+            let quantum = issue_quanta.get(t).copied().unwrap_or(usize::MAX);
+            let mut issued = 0usize;
+            while issued < quantum {
+                let Some((variant, batch)) = batchers[t].drain(now) else { break };
                 issue_batch(
                     &tenants[t], &variants[t], &params, &executor,
                     &mut responders[t], variant, batch,
                 );
+                issued += 1;
             }
         }
         if !open {
@@ -220,7 +315,7 @@ fn issue_batch(
             Err(e) => {
                 for r in piece {
                     if let Some(tx) = responders.remove(&r.id) {
-                        let _ = tx.send(Err(anyhow!("{e}")));
+                        let _ = tx.send(Err(Error::Backend(e.to_string())));
                     }
                 }
             }
@@ -248,26 +343,41 @@ impl ServeReport {
     }
 }
 
-/// The e2e demo driver: serve `n_requests` per tenant of real TinyCNN
-/// inference through the coordinator and report latency/throughput.
+/// The e2e demo driver (`gacer serve`): build a [`GacerEngine`] over DFG
+/// proxies of the requested families, let the granularity-aware search
+/// produce the deployment plan, lower it to the live server config, and
+/// serve `n_requests` per tenant of real inference through it.
+///
+/// [`GacerEngine`]: crate::engine::GacerEngine
 pub fn serve_demo(
     artifact_dir: &str,
     tenant_models: &[String],
     n_requests: usize,
 ) -> Result<ServeReport> {
-    let tenants: Vec<TenantSpec> = tenant_models
-        .iter()
-        .enumerate()
-        .map(|(i, m)| TenantSpec {
-            name: format!("{m}-{i}"),
-            family: m.clone(),
-            policy: BatchPolicy::new(8, Duration::from_millis(2), vec![1, 2, 4, 8, 16, 32]),
-            // Tenant 0 demonstrates GACER chunking on the real path.
-            chunk: if i == 0 { Some(4) } else { None },
-        })
-        .collect();
-    let n_tenants = tenants.len();
-    let server = Arc::new(Server::start(artifact_dir, tenants, ServerConfig::default())?);
+    let mut builder = crate::engine::GacerEngine::builder()
+        .platform(crate::profile::Platform::titan_v())
+        .artifacts(artifact_dir);
+    for (i, family) in tenant_models.iter().enumerate() {
+        builder = builder.serving_tenant(
+            format!("{family}-{i}"),
+            family,
+            BatchPolicy::new(8, Duration::from_millis(2), vec![1, 2, 4, 8, 16, 32]),
+        )?;
+    }
+    let engine = builder.build()?;
+    let deployment = engine.deployment()?;
+    println!(
+        "searched plan: {} decomposed ops, issue order {:?}, chunks {:?}",
+        engine.plan().decomposed_ops(),
+        deployment.config.issue_order,
+        deployment
+            .tenants
+            .iter()
+            .map(|t| t.chunk)
+            .collect::<Vec<_>>()
+    );
+    let n_tenants = deployment.tenants.len();
+    let server = Arc::new(engine.serve()?);
 
     let started = Instant::now();
     let mut handles = Vec::new();
@@ -283,8 +393,15 @@ pub fn serve_demo(
                 let t0 = Instant::now();
                 let out = server.infer(t, x)?;
                 hist.record(t0.elapsed());
-                anyhow::ensure!(out.len() == 10, "expected 10 logits, got {}", out.len());
-                anyhow::ensure!(out.iter().all(|v| v.is_finite()), "non-finite logits");
+                if out.len() != 10 {
+                    return Err(Error::InvalidData(format!(
+                        "expected 10 logits, got {}",
+                        out.len()
+                    )));
+                }
+                if !out.iter().all(|v| v.is_finite()) {
+                    return Err(Error::InvalidData("non-finite logits".into()));
+                }
             }
             Ok(hist)
         }));
@@ -292,7 +409,9 @@ pub fn serve_demo(
 
     let mut per_tenant = Vec::new();
     for (t, h) in handles.into_iter().enumerate() {
-        let hist = h.join().map_err(|_| anyhow!("client thread panicked"))??;
+        let hist = h
+            .join()
+            .map_err(|_| Error::ChannelClosed("client thread"))??;
         per_tenant.push((tenant_models[t].clone(), hist));
     }
     let report = ServeReport {
@@ -310,4 +429,36 @@ pub fn serve_demo(
         println!("  tenant {name:<12} {}", hist.summary());
     }
     Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn issue_order_must_be_permutation() {
+        let cfg = ServerConfig { issue_order: vec![2, 1, 0], ..Default::default() };
+        cfg.validate(3).unwrap();
+        // Out of range.
+        let cfg = ServerConfig { issue_order: vec![0, 3], ..Default::default() };
+        assert!(cfg.validate(2).is_err());
+        // Duplicate.
+        let cfg = ServerConfig { issue_order: vec![0, 0, 1], ..Default::default() };
+        assert!(cfg.validate(3).is_err());
+        // Incomplete.
+        let cfg = ServerConfig { issue_order: vec![0, 1], ..Default::default() };
+        assert!(cfg.validate(3).is_err());
+        // Empty = arrival order, always fine.
+        ServerConfig::default().validate(5).unwrap();
+    }
+
+    #[test]
+    fn issue_quanta_validated() {
+        let cfg = ServerConfig { issue_quanta: vec![1, 4], ..Default::default() };
+        cfg.validate(2).unwrap();
+        let cfg = ServerConfig { issue_quanta: vec![1], ..Default::default() };
+        assert!(cfg.validate(2).is_err());
+        let cfg = ServerConfig { issue_quanta: vec![1, 0], ..Default::default() };
+        assert!(cfg.validate(2).is_err());
+    }
 }

@@ -1,0 +1,662 @@
+//! The GACER deployment engine — one API from tenant admission to a live
+//! serving configuration.
+//!
+//! The paper's point (§4.4, Algorithm 1) is that the granularity-aware
+//! search *produces the plan the runtime executes*. [`GacerEngine`] closes
+//! that loop: it owns the tenant set, runs the joint search, and compiles
+//! the resulting [`DeploymentPlan`] into the live server configuration —
+//! `chunking` lowers to per-tenant micro-batch variants
+//! ([`TenantSpec::chunk`]) and the pointer matrix lowers to the
+//! scheduler's cross-tenant issue order and per-round issue quanta
+//! (segment boundaries on the real path).
+//!
+//! ```no_run
+//! use gacer::engine::GacerEngine;
+//! use gacer::models::zoo;
+//!
+//! let mut engine = GacerEngine::builder()
+//!     .tenant(zoo::build_default("R50").unwrap())
+//!     .tenant(zoo::build_default("V16").unwrap())
+//!     .build()
+//!     .unwrap();
+//! let outcome = engine.simulate();
+//! let id = engine.admit(zoo::build_default("M3").unwrap()).unwrap(); // re-plans
+//! engine.evict(id).unwrap(); // re-plans again
+//! # let _ = outcome;
+//! ```
+//!
+//! Tenants are addressed by stable [`TenantId`]s (slot indices shift on
+//! eviction; ids never do). Admission and eviction trigger an
+//! **incremental re-search** ([`crate::search::GacerSearch::run_from`])
+//! seeded with the surviving plan, so reconfiguration costs a fraction of
+//! a cold search.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::coordinator::{BatchPolicy, Server, ServerConfig, TenantSpec};
+use crate::dfg::Dfg;
+use crate::error::{Error, Result};
+use crate::gpu::{SimOptions, SimOutcome};
+use crate::models::zoo;
+use crate::plan::{ChunkMap, DeploymentPlan, TenantSet};
+use crate::profile::{CostModel, Platform};
+use crate::runtime::ArtifactManifest;
+use crate::search::{GacerSearch, SearchConfig, SearchReport};
+
+/// Stable identifier of a deployed tenant (survives other tenants'
+/// evictions, unlike slot indices).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TenantId(pub u64);
+
+impl std::fmt::Display for TenantId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "tenant#{}", self.0)
+    }
+}
+
+/// Per-tenant serving metadata kept alongside the DFG.
+#[derive(Debug, Clone)]
+struct TenantMeta {
+    id: TenantId,
+    name: String,
+    /// Artifact family (manifest `meta.op`); simulation-only tenants have
+    /// none and cannot be lowered to a serving deployment.
+    family: Option<String>,
+    policy: BatchPolicy,
+}
+
+fn default_policy() -> BatchPolicy {
+    BatchPolicy::new(8, Duration::from_millis(2), vec![1, 2, 4, 8, 16, 32])
+}
+
+/// A plan lowered to the serving coordinator's configuration: what
+/// [`Server::start`] consumes.
+#[derive(Debug, Clone)]
+pub struct Deployment {
+    pub tenants: Vec<TenantSpec>,
+    pub config: ServerConfig,
+}
+
+/// Builder for [`GacerEngine`] — `GacerEngine::builder().platform(..)
+/// .artifacts(..).tenant(..).build()`.
+pub struct EngineBuilder {
+    platform: Platform,
+    artifact_dir: Option<PathBuf>,
+    search: SearchConfig,
+    tick: Duration,
+    tenants: Vec<(Dfg, TenantMeta)>,
+    next_id: u64,
+}
+
+impl EngineBuilder {
+    fn new() -> Self {
+        EngineBuilder {
+            platform: Platform::titan_v(),
+            artifact_dir: None,
+            search: SearchConfig::default(),
+            tick: Duration::from_micros(200),
+            tenants: Vec::new(),
+            next_id: 0,
+        }
+    }
+
+    /// Target platform for the cost model and simulator.
+    pub fn platform(mut self, p: Platform) -> Self {
+        self.platform = p;
+        self
+    }
+
+    /// AOT artifact directory (enables [`GacerEngine::serve`]).
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifact_dir = Some(dir.into());
+        self
+    }
+
+    /// Search hyper-parameters (defaults to [`SearchConfig::default`]).
+    pub fn search(mut self, cfg: SearchConfig) -> Self {
+        self.search = cfg;
+        self
+    }
+
+    /// Scheduler tick of the lowered server config.
+    pub fn tick(mut self, tick: Duration) -> Self {
+        self.tick = tick;
+        self
+    }
+
+    fn push(&mut self, dfg: Dfg, family: Option<String>, policy: BatchPolicy) {
+        let id = TenantId(self.next_id);
+        self.next_id += 1;
+        let name = dfg.name.clone();
+        self.tenants.push((dfg, TenantMeta { id, name, family, policy }));
+    }
+
+    /// Add a simulation/search tenant (no serving artifacts).
+    pub fn tenant(mut self, dfg: Dfg) -> Self {
+        self.push(dfg, None, default_policy());
+        self
+    }
+
+    /// Add a serving tenant of an artifact `family`: the engine searches
+    /// over the family's cost-model proxy DFG at the policy's preferred
+    /// batch and lowers the result onto the family's compiled variants.
+    pub fn serving_tenant(
+        mut self,
+        name: impl Into<String>,
+        family: &str,
+        policy: BatchPolicy,
+    ) -> Result<Self> {
+        let mut dfg = zoo::serving_proxy(family, policy.max_batch)
+            .ok_or_else(|| Error::UnknownModel(format!("serving family {family}")))?;
+        dfg.name = name.into();
+        self.push(dfg, Some(family.to_string()), policy);
+        Ok(self)
+    }
+
+    /// Validate the tenants, open the artifact manifest (when configured),
+    /// and run the initial granularity-aware search.
+    pub fn build(self) -> Result<GacerEngine> {
+        let manifest = match &self.artifact_dir {
+            Some(dir) => Some(ArtifactManifest::load(dir.join("manifest.json"))?),
+            None => None,
+        };
+        let mut engine = GacerEngine {
+            opts: SimOptions::for_platform(&self.platform),
+            platform: self.platform,
+            search_cfg: self.search,
+            tick: self.tick,
+            set: TenantSet::new(Vec::new(), CostModel::new(self.platform)),
+            meta: Vec::new(),
+            next_id: self.next_id,
+            plan: DeploymentPlan::unregulated(0),
+            last_report: None,
+            artifact_dir: self.artifact_dir,
+            manifest,
+        };
+        for (dfg, meta) in self.tenants {
+            engine.check_admissible(&dfg, meta.family.as_deref())?;
+            engine.set.admit(dfg);
+            engine.meta.push(meta);
+        }
+        // replan() starts from the unregulated plan of the full set, so no
+        // per-tenant plan reshaping is needed here.
+        engine.replan();
+        Ok(engine)
+    }
+}
+
+/// The deployment engine: tenant set + searched plan + lowering to the
+/// live serving configuration.
+pub struct GacerEngine {
+    platform: Platform,
+    opts: SimOptions,
+    search_cfg: SearchConfig,
+    tick: Duration,
+    set: TenantSet,
+    meta: Vec<TenantMeta>,
+    next_id: u64,
+    plan: DeploymentPlan,
+    last_report: Option<SearchReport>,
+    artifact_dir: Option<PathBuf>,
+    manifest: Option<ArtifactManifest>,
+}
+
+impl GacerEngine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
+    }
+
+    /// Number of deployed tenants.
+    pub fn len(&self) -> usize {
+        self.set.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.set.is_empty()
+    }
+
+    /// The deployed tenant DFGs, in slot order.
+    pub fn tenants(&self) -> &[Dfg] {
+        &self.set.tenants
+    }
+
+    /// Stable ids, in slot order.
+    pub fn tenant_ids(&self) -> Vec<TenantId> {
+        self.meta.iter().map(|m| m.id).collect()
+    }
+
+    /// The platform the engine prices against.
+    pub fn platform(&self) -> &Platform {
+        &self.platform
+    }
+
+    /// The current searched deployment plan.
+    pub fn plan(&self) -> &DeploymentPlan {
+        &self.plan
+    }
+
+    /// Bookkeeping of the most recent (cold or incremental) search.
+    pub fn last_report(&self) -> Option<&SearchReport> {
+        self.last_report.as_ref()
+    }
+
+    /// Simulate the current plan on the engine's platform.
+    pub fn simulate(&self) -> SimOutcome {
+        self.set.simulate(&self.plan, self.opts)
+    }
+
+    fn index_of(&self, id: TenantId) -> Result<usize> {
+        self.meta
+            .iter()
+            .position(|m| m.id == id)
+            .ok_or(Error::UnknownTenant(id.0))
+    }
+
+    fn check_admissible(&self, dfg: &Dfg, family: Option<&str>) -> Result<()> {
+        crate::dfg::validate(dfg)?;
+        if let (Some(m), Some(f)) = (&self.manifest, family) {
+            if m.variants_of(f).is_empty() {
+                return Err(Error::MissingFamily(f.to_string()));
+            }
+        }
+        Ok(())
+    }
+
+    /// Admit a simulation/search tenant at runtime. Triggers an
+    /// incremental re-search seeded with the current plan (the newcomer
+    /// starts at the deployment's pointer level, Algorithm 1 resumes from
+    /// there).
+    pub fn admit(&mut self, dfg: Dfg) -> Result<TenantId> {
+        self.admit_with(dfg, None, default_policy())
+    }
+
+    /// Admit a serving tenant of an artifact family at runtime.
+    pub fn admit_serving(
+        &mut self,
+        name: impl Into<String>,
+        family: &str,
+        policy: BatchPolicy,
+    ) -> Result<TenantId> {
+        let mut dfg = zoo::serving_proxy(family, policy.max_batch)
+            .ok_or_else(|| Error::UnknownModel(format!("serving family {family}")))?;
+        dfg.name = name.into();
+        self.admit_with(dfg, Some(family.to_string()), policy)
+    }
+
+    fn admit_with(
+        &mut self,
+        dfg: Dfg,
+        family: Option<String>,
+        policy: BatchPolicy,
+    ) -> Result<TenantId> {
+        self.check_admissible(&dfg, family.as_deref())?;
+        let id = TenantId(self.next_id);
+        self.next_id += 1;
+        let name = dfg.name.clone();
+        let level = self.plan.pointers.pointers_per_tenant();
+        self.plan.push_tenant(dfg.len(), level);
+        self.set.admit(dfg);
+        self.meta.push(TenantMeta { id, name, family, policy });
+        self.research_from_current();
+        Ok(id)
+    }
+
+    /// Evict a tenant by id; the surviving tenants are incrementally
+    /// re-planned. Returns the evicted DFG.
+    pub fn evict(&mut self, id: TenantId) -> Result<Dfg> {
+        let idx = self.index_of(id)?;
+        self.meta.remove(idx);
+        self.plan.remove_tenant(idx);
+        let dfg = self.set.evict(idx);
+        self.research_from_current();
+        Ok(dfg)
+    }
+
+    /// Run a full cold search (Algorithm 1 from the unregulated plan),
+    /// replacing the current plan.
+    pub fn replan(&mut self) {
+        if self.set.is_empty() {
+            self.plan = DeploymentPlan::unregulated(0);
+            self.last_report = None;
+            return;
+        }
+        let report = GacerSearch::new(&self.set, self.opts, self.search_cfg).run();
+        self.plan = report.plan.clone();
+        self.last_report = Some(report);
+    }
+
+    /// Incremental re-search seeded with the current (already re-shaped)
+    /// plan.
+    fn research_from_current(&mut self) {
+        if self.set.is_empty() {
+            self.plan = DeploymentPlan::unregulated(0);
+            self.last_report = None;
+            return;
+        }
+        let report = GacerSearch::new(&self.set, self.opts, self.search_cfg)
+            .run_from(self.plan.clone());
+        self.plan = report.plan.clone();
+        self.last_report = Some(report);
+    }
+
+    fn family_variants(&self) -> Result<Vec<Vec<usize>>> {
+        let manifest = self
+            .manifest
+            .as_ref()
+            .ok_or_else(|| Error::InvalidConfig("engine has no artifact dir".into()))?;
+        self.meta
+            .iter()
+            .map(|m| {
+                let family = m.family.as_deref().ok_or_else(|| {
+                    Error::InvalidConfig(format!(
+                        "tenant {} ({}) has no artifact family",
+                        m.id, m.name
+                    ))
+                })?;
+                let v: Vec<usize> = manifest.variants_of(family).into_keys().collect();
+                if v.is_empty() {
+                    return Err(Error::MissingFamily(family.to_string()));
+                }
+                Ok(v)
+            })
+            .collect()
+    }
+
+    /// Lower the current searched plan to the serving configuration.
+    pub fn deployment(&self) -> Result<Deployment> {
+        self.deployment_of(&self.plan)
+    }
+
+    /// Lower an arbitrary plan (e.g. the unregulated baseline) to the
+    /// serving configuration — useful for A/B deployment comparisons.
+    pub fn deployment_of(&self, plan: &DeploymentPlan) -> Result<Deployment> {
+        let specs: Vec<(String, String, BatchPolicy)> = self
+            .meta
+            .iter()
+            .map(|m| {
+                Ok((
+                    m.name.clone(),
+                    m.family
+                        .clone()
+                        .ok_or_else(|| {
+                            Error::InvalidConfig(format!(
+                                "tenant {} ({}) has no artifact family",
+                                m.id, m.name
+                            ))
+                        })?,
+                    m.policy.clone(),
+                ))
+            })
+            .collect::<Result<_>>()?;
+        lower_plan(plan, &self.set.tenants, &specs, &self.family_variants()?, self.tick)
+    }
+
+    /// Start the serving coordinator off the searched plan: the single
+    /// call that takes "tenants admitted" to "requests served under
+    /// granularity regulation".
+    pub fn serve(&self) -> Result<Server> {
+        let dir = self
+            .artifact_dir
+            .as_ref()
+            .ok_or_else(|| Error::InvalidConfig("engine has no artifact dir".into()))?;
+        let deployment = self.deployment()?;
+        Server::start(&dir.to_string_lossy(), deployment.tenants, deployment.config)
+    }
+}
+
+/// Max consecutive batches per scheduling round for a single-segment
+/// tenant; tenants with finer temporal granularity get proportionally
+/// smaller quanta (more pointers → yield the issue queue sooner).
+const BASE_ISSUE_QUANTUM: usize = 4;
+
+/// Compile a deployment plan into the live server configuration — the
+/// plan→server lowering at the heart of the engine:
+///
+/// * **chunking → [`TenantSpec::chunk`]**: the modal micro-batch piece
+///   size of the tenant's searched `list_B`s, clamped to the largest
+///   compiled batch variant that does not exceed it (the real path can
+///   only execute batches that were AOT-compiled);
+/// * **pointer matrix → issue order**: tenants with finer temporal
+///   granularity (shorter mean segments) issue first — they are the ones
+///   the search decided must synchronize most often;
+/// * **pointer matrix → issue quanta**: per-round batch caps shrink as a
+///   tenant's segment count grows (segment boundaries realized as issue-
+///   queue yields).
+pub fn lower_plan(
+    plan: &DeploymentPlan,
+    tenants: &[Dfg],
+    specs: &[(String, String, BatchPolicy)],
+    variants: &[Vec<usize>],
+    tick: Duration,
+) -> Result<Deployment> {
+    plan.validate(tenants)?;
+    let n = tenants.len();
+    if specs.len() != n || variants.len() != n {
+        return Err(Error::InvalidConfig(format!(
+            "lowering arity mismatch: {n} tenants, {} specs, {} variant sets",
+            specs.len(),
+            variants.len()
+        )));
+    }
+
+    let mut tenant_specs = Vec::with_capacity(n);
+    for (i, (name, family, policy)) in specs.iter().enumerate() {
+        let chunk = modal_chunk(&plan.chunking[i]).and_then(|m| {
+            let mut avail = variants[i].clone();
+            avail.sort_unstable();
+            avail.into_iter().rev().find(|&v| v <= m)
+        });
+        tenant_specs.push(TenantSpec {
+            name: name.clone(),
+            family: family.clone(),
+            policy: policy.clone(),
+            chunk,
+        });
+    }
+
+    let mean_segment =
+        |i: usize| tenants[i].len() as f64 / plan.pointers.segments(i) as f64;
+    let mut issue_order: Vec<usize> = (0..n).collect();
+    issue_order.sort_by(|&a, &b| {
+        mean_segment(a)
+            .partial_cmp(&mean_segment(b))
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+
+    let issue_quanta: Vec<usize> = (0..n)
+        .map(|i| (BASE_ISSUE_QUANTUM / plan.pointers.segments(i)).max(1))
+        .collect();
+
+    let config = ServerConfig { tick, issue_order, issue_quanta };
+    config.validate(n)?;
+    Ok(Deployment { tenants: tenant_specs, config })
+}
+
+/// Most frequent micro-batch piece size across a tenant's searched
+/// decompositions (ties break toward the coarser piece — less chunk/concat
+/// overhead). `None` when the plan decomposes nothing for this tenant.
+fn modal_chunk(map: &ChunkMap) -> Option<usize> {
+    let mut counts: BTreeMap<usize, usize> = BTreeMap::new();
+    for list in map.values().filter(|l| l.len() > 1) {
+        for &b in *list {
+            *counts.entry(b).or_default() += 1;
+        }
+    }
+    counts.into_iter().max_by_key(|&(size, n)| (n, size)).map(|(size, _)| size)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> SearchConfig {
+        SearchConfig {
+            max_pointers: 2,
+            rounds_per_level: 1,
+            positions_per_coordinate: 5,
+            spatial_steps_per_level: 2,
+            ..Default::default()
+        }
+    }
+
+    fn demo_engine(names: &[&str]) -> GacerEngine {
+        let mut b = GacerEngine::builder().search(quick_cfg());
+        for n in names {
+            b = b.tenant(zoo::build_default(n).unwrap());
+        }
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn build_runs_the_search_and_plan_validates() {
+        let engine = demo_engine(&["Alex", "V16", "R18"]);
+        assert_eq!(engine.len(), 3);
+        engine.plan().validate(engine.tenants()).unwrap();
+        assert!(engine.last_report().is_some());
+        let r = engine.last_report().unwrap();
+        assert!(r.outcome.objective() <= r.initial.objective() + 1e-6);
+    }
+
+    #[test]
+    fn admit_replans_and_extends_the_plan() {
+        let mut engine = demo_engine(&["Alex", "R18"]);
+        let before = engine.tenant_ids();
+        let id = engine.admit(zoo::build_default("M3").unwrap()).unwrap();
+        assert!(!before.contains(&id));
+        assert_eq!(engine.len(), 3);
+        engine.plan().validate(engine.tenants()).unwrap();
+        // The re-planned deployment can never be worse than unregulated.
+        let r = engine.last_report().unwrap();
+        assert!(r.outcome.objective() <= r.initial.objective() + 1e-6);
+    }
+
+    #[test]
+    fn evict_shrinks_the_plan_and_keeps_ids_stable() {
+        let mut engine = demo_engine(&["Alex", "V16", "R18"]);
+        let ids = engine.tenant_ids();
+        let evicted = engine.evict(ids[1]).unwrap();
+        assert_eq!(evicted.name, "V16");
+        assert_eq!(engine.len(), 2);
+        assert_eq!(engine.tenant_ids(), vec![ids[0], ids[2]]);
+        engine.plan().validate(engine.tenants()).unwrap();
+        assert!(engine.evict(ids[1]).is_err(), "double-evict must fail");
+    }
+
+    #[test]
+    fn evict_to_empty_then_admit_again() {
+        let mut engine = demo_engine(&["Alex"]);
+        let ids = engine.tenant_ids();
+        engine.evict(ids[0]).unwrap();
+        assert!(engine.is_empty());
+        engine.admit(zoo::build_default("R18").unwrap()).unwrap();
+        assert_eq!(engine.len(), 1);
+        engine.plan().validate(engine.tenants()).unwrap();
+    }
+
+    #[test]
+    fn unknown_serving_family_rejected() {
+        let b = GacerEngine::builder();
+        assert!(b.serving_tenant("x", "no_such_family", default_policy()).is_err());
+    }
+
+    #[test]
+    fn serve_without_artifacts_is_typed_error() {
+        let engine = demo_engine(&["Alex"]);
+        match engine.serve() {
+            Err(Error::InvalidConfig(_)) => {}
+            Err(other) => panic!("expected InvalidConfig, got {other:?}"),
+            Ok(_) => panic!("expected InvalidConfig, got a running server"),
+        }
+    }
+
+    // ---- lowering ----
+
+    fn lower_fixture(
+        plan: &DeploymentPlan,
+        tenants: &[Dfg],
+        variants: Vec<Vec<usize>>,
+    ) -> Deployment {
+        let specs: Vec<(String, String, BatchPolicy)> = tenants
+            .iter()
+            .map(|d| (d.name.clone(), "tiny_cnn".to_string(), default_policy()))
+            .collect();
+        lower_plan(plan, tenants, &specs, &variants, Duration::from_micros(200))
+            .unwrap()
+    }
+
+    #[test]
+    fn lowering_maps_searched_chunks_to_compiled_variants() {
+        let tenants = zoo::build_combo(&["Alex", "V16"]);
+        let mut plan = DeploymentPlan::unregulated(2);
+        // The search split two of V16's convs into micro-batches of 4.
+        plan.chunking[1].insert(0, vec![4, 4]);
+        plan.chunking[1].insert(2, vec![4, 4]);
+        let d = lower_fixture(&plan, &tenants, vec![vec![1, 2, 4, 8], vec![1, 2, 4, 8]]);
+        assert_eq!(d.tenants[0].chunk, None, "undecomposed tenant stays whole");
+        assert_eq!(d.tenants[1].chunk, Some(4), "searched piece size reaches the spec");
+    }
+
+    #[test]
+    fn lowering_clamps_chunk_to_available_variants() {
+        let tenants = zoo::build_combo(&["Alex"]);
+        let mut plan = DeploymentPlan::unregulated(1);
+        plan.chunking[0].insert(0, vec![3, 5]);
+        // Modal piece ties 3 vs 5 -> 5 (coarser); only variants 1/2/4 exist
+        // -> clamped down to 4.
+        let d = lower_fixture(&plan, &tenants, vec![vec![1, 2, 4]]);
+        assert_eq!(d.tenants[0].chunk, Some(4));
+    }
+
+    #[test]
+    fn lowering_orders_fine_grained_tenants_first() {
+        let tenants = zoo::build_combo(&["Alex", "V16", "R18"]);
+        let mut plan = DeploymentPlan::unregulated(3);
+        // V16 gets 3 pointers (4 segments): finest granularity -> first.
+        plan.pointers.set_list(1, vec![8, 16, 24]);
+        let d =
+            lower_fixture(&plan, &tenants, vec![vec![8], vec![8], vec![8]]);
+        assert_eq!(d.config.issue_order[0], 1);
+        let mut sorted = d.config.issue_order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2], "issue order is a permutation");
+        // Segment-derived quanta: 4 segments -> 1, 1 segment -> 4.
+        assert_eq!(d.config.issue_quanta[1], 1);
+        assert_eq!(d.config.issue_quanta[0], 4);
+    }
+
+    #[test]
+    fn lowering_rejects_invalid_plans() {
+        let tenants = zoo::build_combo(&["Alex"]);
+        let plan = DeploymentPlan::unregulated(2); // tenant-count mismatch
+        let specs =
+            vec![("a".to_string(), "tiny_cnn".to_string(), default_policy())];
+        let err = lower_plan(
+            &plan,
+            &tenants,
+            &specs,
+            &[vec![8]],
+            Duration::from_micros(200),
+        );
+        assert!(matches!(err, Err(Error::InvalidPlan(_))));
+    }
+
+    #[test]
+    fn modal_chunk_prefers_frequent_then_coarse() {
+        let mut map = ChunkMap::new();
+        map.insert(0, vec![4, 4]);
+        map.insert(1, vec![4, 4]);
+        map.insert(2, vec![2, 2, 2, 2]);
+        // Piece counts tie (4x each) -> the coarser piece wins.
+        assert_eq!(modal_chunk(&map), Some(4));
+        map.insert(3, vec![2, 2, 2, 2]);
+        assert_eq!(modal_chunk(&map), Some(2), "2 now strictly more frequent");
+        // Singleton lists are not splits and don't vote.
+        let mut whole = ChunkMap::new();
+        whole.insert(0, vec![8]);
+        assert_eq!(modal_chunk(&whole), None);
+        assert_eq!(modal_chunk(&ChunkMap::new()), None);
+    }
+}

@@ -1,0 +1,113 @@
+//! Typed errors for every public API boundary of the crate.
+//!
+//! The engine, the serving coordinator, and the PJRT runtime all return
+//! [`Error`] instead of stringly ad-hoc errors, so callers can match on
+//! the failure class (reject a bad plan vs. retry a backend hiccup) and
+//! the `gacer` binary can map classes to exit codes.
+
+use std::fmt;
+
+/// Crate-wide result alias. The error type defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Failure classes at the crate's API boundaries.
+#[derive(Debug)]
+#[non_exhaustive]
+pub enum Error {
+    /// A [`crate::plan::DeploymentPlan`] failed validation against its
+    /// tenant set (chunk sums, pointer ranges, tenant-count mismatches).
+    InvalidPlan(String),
+    /// An engine/server configuration is internally inconsistent (e.g. an
+    /// `issue_order` that is not a permutation of the tenant indices).
+    InvalidConfig(String),
+    /// A tenant DFG failed structural validation on admission.
+    InvalidTenant(crate::dfg::DfgError),
+    /// An engine call referenced a tenant id that is not deployed.
+    UnknownTenant(u64),
+    /// A model name the zoo does not know.
+    UnknownModel(String),
+    /// The artifact manifest is missing, unreadable, or malformed.
+    Artifact(String),
+    /// An artifact entry name absent from the manifest.
+    UnknownArtifact(String),
+    /// A tenant family with no compiled batch variants in the manifest.
+    MissingFamily(String),
+    /// Input/output data failed a shape or content check.
+    InvalidData(String),
+    /// The PJRT backend failed (compile/execute), or the crate was built
+    /// without the `xla-runtime` feature.
+    Backend(String),
+    /// A coordinator channel closed: the named component stopped.
+    ChannelClosed(&'static str),
+    /// Filesystem failure (artifact/param loading, spawn).
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidPlan(m) => write!(f, "invalid deployment plan: {m}"),
+            Error::InvalidConfig(m) => write!(f, "invalid configuration: {m}"),
+            Error::InvalidTenant(e) => write!(f, "invalid tenant DFG: {e}"),
+            Error::UnknownTenant(id) => write!(f, "unknown tenant id {id}"),
+            Error::UnknownModel(m) => write!(f, "unknown model {m}"),
+            Error::Artifact(m) => write!(f, "artifact manifest: {m}"),
+            Error::UnknownArtifact(m) => write!(f, "unknown artifact {m}"),
+            Error::MissingFamily(m) => {
+                write!(f, "no compiled artifacts for family {m}")
+            }
+            Error::InvalidData(m) => write!(f, "invalid data: {m}"),
+            Error::Backend(m) => write!(f, "backend: {m}"),
+            Error::ChannelClosed(who) => write!(f, "{who} stopped"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            Error::InvalidTenant(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<crate::dfg::DfgError> for Error {
+    fn from(e: crate::dfg::DfgError) -> Self {
+        Error::InvalidTenant(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_class_and_detail() {
+        let e = Error::InvalidPlan("chunk sums to 7, batch is 8".into());
+        let s = e.to_string();
+        assert!(s.contains("invalid deployment plan"));
+        assert!(s.contains("batch is 8"));
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn is_send_sync_static() {
+        fn assert_bounds<T: Send + Sync + 'static>() {}
+        assert_bounds::<Error>();
+    }
+}

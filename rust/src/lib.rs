@@ -3,25 +3,31 @@
 //! A production reproduction of the GACER paper (cs.DC 2023) as a
 //! three-layer Rust + JAX + Pallas stack:
 //!
-//! * **Layer 3 (this crate)** — the multi-tenant coordinator: DFG
+//! * **Layer 3 (this crate)** — the multi-tenant deployment engine: DFG
 //!   representation, operator cost model, a multi-stream GPU simulator
 //!   substrate, the paper's spatial (operator resizing, §4.2) and temporal
 //!   (sync-pointer segmentation, §4.3) regulation, the granularity-aware
-//!   joint search (Algorithm 1), all evaluation baselines, and a tokio
-//!   serving coordinator that executes plans against real AOT-compiled
-//!   XLA artifacts via PJRT.
+//!   joint search (Algorithm 1), all evaluation baselines, the
+//!   [`engine::GacerEngine`] that compiles searched plans into live server
+//!   configurations, and a std-thread serving coordinator that executes
+//!   those plans against real AOT-compiled XLA artifacts via PJRT.
 //! * **Layer 2** — JAX operator library / models (`python/compile/`),
 //!   lowered once to HLO text (`make artifacts`); never on the request path.
 //! * **Layer 1** — Pallas kernels (tiled matmul, chunked micro-batch matmul,
 //!   fused element-wise) inside the Layer-2 functions.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index
-//! mapping every paper table/figure to a bench target.
+//! The deployment flow is `GacerEngine::builder().platform(..)
+//! .artifacts(..).tenant(..).build()` → search → [`engine::Deployment`] →
+//! [`coordinator::Server`]; see `DESIGN.md` for the layer map and the
+//! engine API contract. Errors at every public boundary are the typed
+//! [`Error`] enum.
 
 pub mod baselines;
 pub mod bench_util;
 pub mod coordinator;
 pub mod dfg;
+pub mod engine;
+mod error;
 pub mod gpu;
 pub mod metrics;
 pub mod models;
@@ -33,11 +39,15 @@ pub mod spatial;
 pub mod temporal;
 pub mod util;
 
-/// Convenience re-exports for the common "build combo → search → simulate"
+pub use error::{Error, Result};
+
+/// Convenience re-exports for the common "build combo → search → deploy"
 /// flow used by examples, benches, and the CLI.
 pub mod prelude {
     pub use crate::baselines::{Baseline, BaselineKind};
     pub use crate::dfg::{Dfg, OpId, OpKind, Operator};
+    pub use crate::engine::{Deployment, EngineBuilder, GacerEngine, TenantId};
+    pub use crate::error::{Error, Result};
     pub use crate::gpu::{GpuSim, SimOutcome, SimOptions};
     pub use crate::models::zoo;
     pub use crate::plan::{DeploymentPlan, TenantSet};

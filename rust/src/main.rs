@@ -31,7 +31,7 @@ fn platform_or_exit(name: &str) -> Platform {
     })
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gacer::Result<()> {
     let args = Args::from_env();
     let Some(cmd) = args.positional.first().map(String::as_str) else {
         eprintln!("{USAGE}");
@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
             let refs: Vec<&str> = names.iter().map(String::as_str).collect();
             let cost = CostModel::new(platform);
             let tenants = zoo::build_combo(&refs);
-            let ts = TenantSet::new(&tenants, &cost);
+            let ts = TenantSet::new(tenants.clone(), cost.clone());
             let cfg = SearchConfig {
                 max_pointers: args.opt_usize("max-pointers", 6),
                 ..Default::default()

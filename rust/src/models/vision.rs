@@ -159,6 +159,19 @@ pub fn densenet121(batch: usize) -> Dfg {
     b.finish()
 }
 
+/// TinyCNN — the e2e serving model (`python/compile/model.py`): 3 convs
+/// with BN/pool on a 32×32×3 input plus 2 FCs to 10 logits. This DFG is
+/// the cost-model proxy the engine searches over when deploying the real
+/// AOT-compiled `tiny_cnn` artifacts.
+pub fn tiny_cnn(batch: usize) -> Dfg {
+    let mut b = VisionBuilder::new("TinyCNN", batch, 32, 32, 3);
+    b.conv(3, 16, 1).relu().bn().pool(2); // 16x16x16
+    b.conv(3, 32, 1).relu().pool(2); // 8x8x32
+    b.conv(3, 32, 1).relu().pool(2); // 4x4x32
+    b.fc(64).relu().fc(10);
+    b.finish()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -62,6 +62,16 @@ pub fn combo_label(names: &[&str]) -> String {
     names.join("+")
 }
 
+/// DFG proxy for a serving artifact family (manifest `meta.op`): the
+/// model the engine prices and searches when deploying that family's
+/// AOT-compiled artifacts.
+pub fn serving_proxy(family: &str, batch: usize) -> Option<Dfg> {
+    match family {
+        "tiny_cnn" => Some(vision::tiny_cnn(batch)),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

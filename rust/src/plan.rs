@@ -12,6 +12,7 @@ use std::collections::BTreeMap;
 
 
 use crate::dfg::{Dfg, OpId, OpKind};
+use crate::error::{Error, Result};
 use crate::gpu::{SimOp, SimStage};
 use crate::profile::CostModel;
 use crate::temporal::PointerMatrix;
@@ -45,9 +46,10 @@ impl DeploymentPlan {
 
     /// Validate against a tenant set: chunk lists must sum to the op's
     /// batch (Eq. 5's constraint) and pointer positions must be in range.
-    pub fn validate(&self, tenants: &[Dfg]) -> Result<(), String> {
+    pub fn validate(&self, tenants: &[Dfg]) -> Result<()> {
+        let bad = |m: String| Err(Error::InvalidPlan(m));
         if self.chunking.len() != tenants.len() {
-            return Err(format!(
+            return bad(format!(
                 "plan has {} chunk maps for {} tenants",
                 self.chunking.len(),
                 tenants.len()
@@ -56,37 +58,86 @@ impl DeploymentPlan {
         for (ti, (map, dfg)) in self.chunking.iter().zip(tenants).enumerate() {
             for (&op, list_b) in map {
                 let Some(o) = dfg.ops.get(op) else {
-                    return Err(format!("tenant {ti}: chunk map references op {op}"));
+                    return bad(format!("tenant {ti}: chunk map references op {op}"));
                 };
                 if list_b.is_empty() || list_b.iter().any(|&b| b == 0) {
-                    return Err(format!("tenant {ti} op {op}: empty/zero chunk"));
+                    return bad(format!("tenant {ti} op {op}: empty/zero chunk"));
                 }
                 let sum: usize = list_b.iter().sum();
                 if sum != o.batch {
-                    return Err(format!(
+                    return bad(format!(
                         "tenant {ti} op {op}: list_B sums to {sum}, batch is {}",
                         o.batch
                     ));
                 }
                 if !o.chunkable() && list_b.len() > 1 {
-                    return Err(format!("tenant {ti} op {op}: not chunkable"));
+                    return bad(format!("tenant {ti} op {op}: not chunkable"));
                 }
             }
         }
         self.pointers.validate(tenants)
     }
+
+    /// Grow the plan for a newly admitted tenant: an empty chunk map and a
+    /// pointer list seeded with `n_pointers` evenly spread positions (the
+    /// paper keeps `|P|` equal across tenants, so an incremental re-search
+    /// starts the newcomer at the deployment's current pointer level).
+    pub fn push_tenant(&mut self, dfg_len: usize, n_pointers: usize) {
+        self.chunking.push(ChunkMap::new());
+        // A DFG with fewer than 2 ops has no legal pointer position
+        // (valid range is 1..len): it joins as a single segment.
+        let seeded: Vec<usize> = if dfg_len < 2 {
+            Vec::new()
+        } else {
+            (1..=n_pointers)
+                .map(|j| (j * dfg_len / (n_pointers + 1)).clamp(1, dfg_len - 1))
+                .collect()
+        };
+        self.pointers.push_tenant(seeded);
+    }
+
+    /// Drop tenant `i`'s chunk map and pointer list (eviction).
+    pub fn remove_tenant(&mut self, i: usize) {
+        self.chunking.remove(i);
+        self.pointers.remove_tenant(i);
+    }
 }
 
 /// A set of tenant DFGs deployed together, with the cost model that prices
 /// their operators.
-pub struct TenantSet<'a> {
-    pub tenants: &'a [Dfg],
-    pub cost: &'a CostModel,
+///
+/// The set **owns** its DFGs: the engine admits and evicts tenants at
+/// runtime, so the deployed population cannot be a borrow of some longer-
+/// lived slice. (Cloning a DFG is cheap — a name plus a flat operator
+/// list.)
+pub struct TenantSet {
+    pub tenants: Vec<Dfg>,
+    pub cost: CostModel,
 }
 
-impl<'a> TenantSet<'a> {
-    pub fn new(tenants: &'a [Dfg], cost: &'a CostModel) -> Self {
+impl TenantSet {
+    pub fn new(tenants: Vec<Dfg>, cost: CostModel) -> Self {
         TenantSet { tenants, cost }
+    }
+
+    /// Number of deployed tenants.
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// Add a tenant; returns its slot index.
+    pub fn admit(&mut self, dfg: Dfg) -> usize {
+        self.tenants.push(dfg);
+        self.tenants.len() - 1
+    }
+
+    /// Remove the tenant at `index` (later slots shift down).
+    pub fn evict(&mut self, index: usize) -> Dfg {
+        self.tenants.remove(index)
     }
 
     /// Lower tenants + plan to staged simulator streams.
@@ -217,7 +268,7 @@ mod tests {
     #[test]
     fn unregulated_compiles_one_simop_per_op() {
         let (tenants, cost) = setup();
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let streams = ts.compile_unregulated();
         for (s, d) in streams.iter().zip(&tenants) {
             assert_eq!(s.len(), d.len());
@@ -228,7 +279,7 @@ mod tests {
     #[test]
     fn chunking_forks_one_stage_with_overhead() {
         let (tenants, cost) = setup();
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let mut plan = DeploymentPlan::unregulated(3);
         // Chunk V16's first conv (tenant 1, op 0) into 2 pieces.
         plan.chunking[1].insert(0, vec![4, 4]);
@@ -244,7 +295,7 @@ mod tests {
     #[test]
     fn adjacent_chunked_ops_chain_one_overhead_pair() {
         let (tenants, cost) = setup();
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let mut plan = DeploymentPlan::unregulated(3);
         // V16 ops 0 (conv) and 1 (relu) chunked identically: the split
         // region opens once and closes once.
@@ -263,7 +314,7 @@ mod tests {
     #[test]
     fn chunk_pieces_have_lower_occupancy() {
         let (tenants, cost) = setup();
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let mut plan = DeploymentPlan::unregulated(3);
         plan.chunking[1].insert(2, vec![2, 2, 2, 2]);
         let full = ts.compile_unregulated()[1][2].occupancy;
@@ -274,7 +325,7 @@ mod tests {
     #[test]
     fn pointers_assign_segments() {
         let (tenants, cost) = setup();
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let mut plan = DeploymentPlan::unregulated(3);
         plan.pointers.set_list(0, vec![5, 10]);
         let streams = ts.compile(&plan);
@@ -302,7 +353,7 @@ mod tests {
     #[test]
     fn segments_monotone_within_stream() {
         let (tenants, cost) = setup();
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let mut plan = DeploymentPlan::unregulated(3);
         plan.pointers.set_list(1, vec![3, 9, 20]);
         for s in ts.compile(&plan) {
@@ -310,5 +361,72 @@ mod tests {
                 assert!(pair[1].segment() >= pair[0].segment());
             }
         }
+    }
+
+    #[test]
+    fn validate_rejects_multi_entry_list_on_non_chunkable_op() {
+        // D121's dense blocks contain channel concats, which are not
+        // batch-chunkable. A multi-entry list_B on one must be rejected; a
+        // single-entry list (mask = 0 realization) stays legal.
+        let tenants = vec![zoo::build_default("D121").unwrap()];
+        let op = tenants[0]
+            .ops
+            .iter()
+            .find(|o| !o.chunkable())
+            .expect("D121 has a non-chunkable op");
+        let (id, batch) = (op.id, op.batch);
+        let mut plan = DeploymentPlan::unregulated(1);
+        plan.chunking[0].insert(id, vec![batch / 2, batch - batch / 2]);
+        assert!(matches!(
+            plan.validate(&tenants),
+            Err(crate::error::Error::InvalidPlan(_))
+        ));
+        plan.chunking[0].insert(id, vec![batch]);
+        plan.validate(&tenants).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_pointer() {
+        let (tenants, _) = setup();
+        let mut plan = DeploymentPlan::unregulated(3);
+        plan.pointers.set_list(0, vec![tenants[0].len()]); // valid: 1..len
+        assert!(plan.validate(&tenants).is_err());
+        plan.pointers.set_list(0, vec![tenants[0].len() - 1]);
+        plan.validate(&tenants).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_unknown_op_and_zero_chunk() {
+        let (tenants, _) = setup();
+        let mut plan = DeploymentPlan::unregulated(3);
+        plan.chunking[0].insert(10_000, vec![8]);
+        assert!(plan.validate(&tenants).is_err());
+        let mut plan = DeploymentPlan::unregulated(3);
+        plan.chunking[0].insert(0, vec![8, 0]);
+        assert!(plan.validate(&tenants).is_err());
+    }
+
+    #[test]
+    fn push_and_remove_tenant_reshape_the_plan() {
+        let (tenants, _) = setup();
+        let mut plan = DeploymentPlan::unregulated(3);
+        plan.pointers.set_list(0, vec![5]);
+        plan.pointers.set_list(1, vec![7]);
+        plan.pointers.set_list(2, vec![9]);
+        // Admit a 4th tenant at the current pointer level: it gets one
+        // evenly seeded pointer.
+        let extra = zoo::build_default("M3").unwrap();
+        plan.push_tenant(extra.len(), plan.pointers.pointers_per_tenant());
+        let mut grown = tenants.clone();
+        grown.push(extra);
+        plan.validate(&grown).unwrap();
+        assert_eq!(plan.chunking.len(), 4);
+        assert_eq!(plan.pointers.list(3).len(), 1);
+        // Evict tenant 1: plan shrinks and stays valid for the survivors.
+        plan.remove_tenant(1);
+        grown.remove(1);
+        plan.validate(&grown).unwrap();
+        assert_eq!(plan.pointers.list(0), &[5]);
+        assert_eq!(plan.pointers.list(1), &[9], "slots shift down");
     }
 }

@@ -4,9 +4,12 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::error::{Error, Result};
 use crate::util::json::Json;
+
+fn malformed(msg: impl Into<String>) -> Error {
+    Error::Artifact(msg.into())
+}
 
 /// Tensor shape + dtype as the manifest records them.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -25,11 +28,11 @@ impl TensorSpec {
             shape: v
                 .get("shape")
                 .and_then(Json::as_usize_vec)
-                .ok_or_else(|| anyhow!("spec missing shape"))?,
+                .ok_or_else(|| malformed("spec missing shape"))?,
             dtype: v
                 .get("dtype")
                 .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("spec missing dtype"))?
+                .ok_or_else(|| malformed("spec missing dtype"))?
                 .to_string(),
         })
     }
@@ -55,7 +58,7 @@ impl ManifestEntry {
         let specs = |key: &str| -> Result<Vec<TensorSpec>> {
             v.get(key)
                 .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow!("entry missing {key}"))?
+                .ok_or_else(|| malformed(format!("entry missing {key}")))?
                 .iter()
                 .map(TensorSpec::from_json)
                 .collect()
@@ -65,7 +68,7 @@ impl ManifestEntry {
             path: v
                 .get("path")
                 .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("entry missing path"))?
+                .ok_or_else(|| malformed("entry missing path"))?
                 .to_string(),
             inputs: specs("inputs")?,
             outputs: specs("outputs")?,
@@ -89,13 +92,14 @@ impl ArtifactManifest {
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let path = path.as_ref();
         let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading {}", path.display()))?;
-        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+            .map_err(|e| malformed(format!("reading {}: {e}", path.display())))?;
+        Self::parse(&text)
+            .map_err(|e| malformed(format!("parsing {}: {e}", path.display())))
     }
 
     pub fn parse(text: &str) -> Result<Self> {
-        let doc = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
-        let obj = doc.as_obj().ok_or_else(|| anyhow!("manifest not an object"))?;
+        let doc = Json::parse(text).map_err(|e| malformed(format!("{e}")))?;
+        let obj = doc.as_obj().ok_or_else(|| malformed("manifest not an object"))?;
         let mut entries = BTreeMap::new();
         for (name, v) in obj {
             entries.insert(name.clone(), ManifestEntry::from_json(v)?);

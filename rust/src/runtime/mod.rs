@@ -4,33 +4,56 @@
 //!
 //! Interchange is HLO **text** (not serialized `HloModuleProto`): jax ≥0.5
 //! emits protos with 64-bit instruction ids that xla_extension 0.5.1
-//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//! rejects; the text parser reassigns ids.
+//!
+//! The `xla` FFI is gated behind the **`xla-runtime`** cargo feature so
+//! the default build is hermetic (no external crates): manifest handling
+//! and shape checking work everywhere, while `execute_f32`/`warmup`
+//! return [`Error::Backend`] until the feature (and the vendored
+//! `xla_extension` toolchain it needs) is enabled. See DESIGN.md §Runtime.
 
 mod manifest;
 
 pub use manifest::{ArtifactManifest, ManifestEntry, TensorSpec};
 
+#[cfg(feature = "xla-runtime")]
 use std::cell::RefCell;
+#[cfg(feature = "xla-runtime")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
+use crate::error::{Error, Result};
 
 /// Artifact-backed executor: manifest + lazily compiled executables.
 pub struct Runtime {
+    #[cfg(feature = "xla-runtime")]
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: ArtifactManifest,
+    #[cfg(feature = "xla-runtime")]
     cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
 }
 
 impl Runtime {
     /// Open an artifact directory (must contain `manifest.json`).
+    #[cfg(feature = "xla-runtime")]
     pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = ArtifactManifest::load(dir.join("manifest.json"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Backend(format!("PJRT cpu client: {e:?}")))?;
         Ok(Runtime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Open an artifact directory (must contain `manifest.json`).
+    ///
+    /// Without the `xla-runtime` feature the manifest still loads (shape
+    /// checks, variant lookups) but execution is unavailable.
+    #[cfg(not(feature = "xla-runtime"))]
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = ArtifactManifest::load(dir.join("manifest.json"))?;
+        Ok(Runtime { dir, manifest })
     }
 
     pub fn manifest(&self) -> &ArtifactManifest {
@@ -47,6 +70,7 @@ impl Runtime {
     }
 
     /// Compile (and cache) the executable for `name`.
+    #[cfg(feature = "xla-runtime")]
     fn executable(&self, name: &str) -> Result<()> {
         if self.cache.borrow().contains_key(name) {
             return Ok(());
@@ -54,19 +78,31 @@ impl Runtime {
         let entry = self
             .manifest
             .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+            .ok_or_else(|| Error::UnknownArtifact(name.to_string()))?;
         let path = self.dir.join(&entry.path);
         let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            path.to_str().ok_or_else(|| Error::Artifact("non-utf8 path".into()))?,
         )
-        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        .map_err(|e| Error::Backend(format!("parse {}: {e:?}", path.display())))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            .map_err(|e| Error::Backend(format!("compile {name}: {e:?}")))?;
         self.cache.borrow_mut().insert(name.to_string(), exe);
         Ok(())
+    }
+
+    #[cfg(not(feature = "xla-runtime"))]
+    fn executable(&self, name: &str) -> Result<()> {
+        self.manifest
+            .get(name)
+            .ok_or_else(|| Error::UnknownArtifact(name.to_string()))?;
+        Err(Error::Backend(format!(
+            "cannot compile {name} from {}: built without the `xla-runtime` \
+             feature",
+            self.dir.display()
+        )))
     }
 
     /// Eagerly compile a set of entries (server startup).
@@ -79,7 +115,14 @@ impl Runtime {
 
     /// Number of compiled executables currently cached.
     pub fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
+        #[cfg(feature = "xla-runtime")]
+        {
+            self.cache.borrow().len()
+        }
+        #[cfg(not(feature = "xla-runtime"))]
+        {
+            0
+        }
     }
 
     /// Execute entry `name` with f32 inputs (one flat buffer per input, in
@@ -90,53 +133,90 @@ impl Runtime {
         let entry = self
             .manifest
             .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact {name}"))?
+            .ok_or_else(|| Error::UnknownArtifact(name.to_string()))?
             .clone();
         if inputs.len() != entry.inputs.len() {
-            return Err(anyhow!(
+            return Err(Error::InvalidData(format!(
                 "{name}: got {} inputs, manifest expects {}",
                 inputs.len(),
                 entry.inputs.len()
-            ));
+            )));
         }
-        let mut literals = Vec::with_capacity(inputs.len());
         for (buf, spec) in inputs.iter().zip(&entry.inputs) {
             if buf.len() != spec.elems() {
-                return Err(anyhow!(
+                return Err(Error::InvalidData(format!(
                     "{name}: input length {} != spec {:?}",
                     buf.len(),
                     spec.shape
-                ));
+                )));
             }
+        }
+        self.execute_checked(name, &entry, inputs)
+    }
+
+    #[cfg(feature = "xla-runtime")]
+    fn execute_checked(
+        &self,
+        name: &str,
+        entry: &ManifestEntry,
+        inputs: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, spec) in inputs.iter().zip(&entry.inputs) {
             let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
             let lit = xla::Literal::vec1(buf)
                 .reshape(&dims)
-                .map_err(|e| anyhow!("reshape input: {e:?}"))?;
+                .map_err(|e| Error::Backend(format!("reshape input: {e:?}")))?;
             literals.push(lit);
         }
 
         self.executable(name)?;
         let cache = self.cache.borrow();
         let exe = cache.get(name).expect("just compiled");
-        let result = exe
+        let result_set = exe
             .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .map_err(|e| Error::Backend(format!("execute {name}: {e:?}")))?;
+        // PJRT returns one buffer list per device: never index blindly — a
+        // backend mismatch can yield an empty set.
+        let buffer = result_set
+            .first()
+            .and_then(|per_device| per_device.first())
+            .ok_or_else(|| {
+                Error::Backend(format!("execute {name}: PJRT returned no result buffers"))
+            })?;
+        let result = buffer
             .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+            .map_err(|e| Error::Backend(format!("fetch result: {e:?}")))?;
 
         // aot.py lowers with return_tuple=True: unpack the tuple elements.
         let n_out = entry.outputs.len();
         let elems = result
             .to_tuple()
-            .map_err(|e| anyhow!("decompose tuple: {e:?}"))?;
+            .map_err(|e| Error::Backend(format!("decompose tuple: {e:?}")))?;
         if elems.len() != n_out {
-            return Err(anyhow!("{name}: {} outputs, manifest says {n_out}", elems.len()));
+            return Err(Error::InvalidData(format!(
+                "{name}: {} outputs, manifest says {n_out}",
+                elems.len()
+            )));
         }
         let mut out = Vec::with_capacity(n_out);
         for lit in elems {
-            out.push(lit.to_vec::<f32>().map_err(|e| anyhow!("read output: {e:?}"))?);
+            out.push(
+                lit.to_vec::<f32>()
+                    .map_err(|e| Error::Backend(format!("read output: {e:?}")))?,
+            );
         }
         Ok(out)
+    }
+
+    #[cfg(not(feature = "xla-runtime"))]
+    fn execute_checked(
+        &self,
+        name: &str,
+        _entry: &ManifestEntry,
+        _inputs: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.executable(name).map(|_| Vec::new())
     }
 }
 
@@ -146,22 +226,27 @@ pub fn load_params(dir: impl AsRef<Path>) -> Result<Vec<Vec<f32>>> {
     use crate::util::json::Json;
     let path = dir.as_ref().join("tiny_cnn_params.json");
     let text = std::fs::read_to_string(&path)
-        .with_context(|| format!("reading {}", path.display()))?;
-    let doc = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
-    let arr = doc.as_arr().ok_or_else(|| anyhow!("params not an array"))?;
+        .map_err(|e| Error::Artifact(format!("reading {}: {e}", path.display())))?;
+    let doc = Json::parse(&text).map_err(|e| Error::Artifact(format!("{e}")))?;
+    let arr = doc
+        .as_arr()
+        .ok_or_else(|| Error::InvalidData("params not an array".into()))?;
     let mut out = Vec::with_capacity(arr.len());
     for p in arr {
         let shape = p
             .get("shape")
             .and_then(Json::as_usize_vec)
-            .ok_or_else(|| anyhow!("param missing shape"))?;
+            .ok_or_else(|| Error::InvalidData("param missing shape".into()))?;
         let data = p
             .get("data")
             .and_then(Json::as_f32_vec)
-            .ok_or_else(|| anyhow!("param missing data"))?;
+            .ok_or_else(|| Error::InvalidData("param missing data".into()))?;
         let n: usize = shape.iter().product();
         if n != data.len() {
-            return Err(anyhow!("param shape/data mismatch: {n} vs {}", data.len()));
+            return Err(Error::InvalidData(format!(
+                "param shape/data mismatch: {n} vs {}",
+                data.len()
+            )));
         }
         out.push(data);
     }

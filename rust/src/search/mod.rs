@@ -90,32 +90,50 @@ impl SearchReport {
 
 /// The GACER searcher.
 pub struct GacerSearch<'a> {
-    ts: &'a TenantSet<'a>,
+    ts: &'a TenantSet,
     opts: SimOptions,
     cfg: SearchConfig,
 }
 
 impl<'a> GacerSearch<'a> {
-    pub fn new(ts: &'a TenantSet<'a>, opts: SimOptions, cfg: SearchConfig) -> Self {
+    pub fn new(ts: &'a TenantSet, opts: SimOptions, cfg: SearchConfig) -> Self {
         GacerSearch { ts, opts, cfg }
     }
 
-    /// Run Algorithm 1 to completion.
+    /// Run Algorithm 1 to completion from the unregulated plan.
     pub fn run(&self) -> SearchReport {
+        self.run_from(DeploymentPlan::unregulated(self.ts.tenants.len()))
+    }
+
+    /// Run Algorithm 1 starting from an existing plan — the incremental
+    /// re-search the engine triggers on tenant admission/eviction. The
+    /// seed's pointers are refined by coordinate descent before any new
+    /// pointer level is added, so a near-optimal prior plan converges in a
+    /// fraction of a cold search's evaluations. `report.initial` always
+    /// refers to the unregulated deployment, keeping speedup reporting
+    /// comparable between cold and seeded runs.
+    pub fn run_from(&self, seed: DeploymentPlan) -> SearchReport {
         let start = Instant::now();
         let n = self.ts.tenants.len();
         let mut evals = 0usize;
 
-        let mut plan = DeploymentPlan::unregulated(n);
-        let initial = self.ts.simulate(&plan, self.opts);
+        let mut plan = seed;
+        let initial = self.ts.simulate(&DeploymentPlan::unregulated(n), self.opts);
         evals += 1;
+        let seeded = plan.decomposed_ops() > 0 || plan.pointers.total_pointers() > 0;
+        let mut best_obj = if seeded {
+            evals += 1;
+            self.ts.simulate(&plan, self.opts).objective()
+        } else {
+            initial.objective()
+        };
 
         let mut spatial = SpatialRegulator::new(self.opts);
         let mut best_plan = plan.clone();
-        let mut best_obj = initial.objective();
         let mut level_best = vec![best_obj];
 
-        // Level 0 may already benefit from spatial-only regulation.
+        // The starting level may already benefit from spatial-only
+        // regulation.
         if self.cfg.enable_spatial {
             let (p, o, e) = self.spatial_phase(&mut spatial, plan.clone());
             evals += e;
@@ -132,7 +150,36 @@ impl<'a> GacerSearch<'a> {
             // depends on chunking alone, so it is rebuilt only after
             // spatial phases mutate the plan.
             let mut cache = self.ts.compile(&plan);
-            for _level in 1..=self.cfg.max_pointers {
+
+            // Seeded path: refine the pre-existing pointers in place
+            // before opening new levels.
+            if plan.pointers.total_pointers() > 0 {
+                let mut refined = f64::INFINITY;
+                for _ in 0..self.cfg.rounds_per_level {
+                    let mut improved = false;
+                    for i in 0..n {
+                        for j in 0..plan.pointers.list(i).len() {
+                            let (obj, e) =
+                                self.descend_coordinate(&mut plan, &mut cache, i, j);
+                            evals += e;
+                            if obj < refined - 1e-9 {
+                                refined = obj;
+                                improved = true;
+                            }
+                        }
+                    }
+                    if !improved {
+                        break;
+                    }
+                }
+                if refined < best_obj {
+                    best_obj = refined;
+                    best_plan = plan.clone();
+                }
+            }
+
+            let first_level = plan.pointers.pointers_per_tenant() + 1;
+            for _level in first_level..=self.cfg.max_pointers {
                 // Add one pointer per tenant, seeded mid-largest-segment.
                 for i in 0..n {
                     let seed = self.seed_position(&plan.pointers, i);
@@ -184,6 +231,15 @@ impl<'a> GacerSearch<'a> {
                     break;
                 }
             }
+        }
+
+        // The unregulated deployment is always available as a fallback: a
+        // re-search seeded with a stale plan (e.g. tuned for a tenant set
+        // that has since shrunk) must never return something worse than no
+        // regulation at all — coordinate descent can move inherited
+        // pointers but never remove them.
+        if best_obj > initial.objective() + 1e-9 {
+            best_plan = DeploymentPlan::unregulated(n);
         }
 
         let outcome = self.ts.simulate(&best_plan, self.opts);
@@ -320,7 +376,7 @@ mod tests {
         let platform = Platform::titan_v();
         let cost = CostModel::new(platform);
         let tenants = zoo::build_combo(names);
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         GacerSearch::new(&ts, SimOptions::for_platform(&platform), cfg).run()
     }
 
@@ -346,7 +402,7 @@ mod tests {
         let platform = Platform::titan_v();
         let cost = CostModel::new(platform);
         let tenants = zoo::build_combo(&["R34", "LSTM", "BST"]);
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let r = GacerSearch::new(&ts, SimOptions::for_platform(&platform), quick_cfg()).run();
         r.plan.validate(&tenants).unwrap();
     }

@@ -173,7 +173,7 @@ mod tests {
         let platform = Platform::titan_v();
         let cost = CostModel::new(platform);
         let tenants = zoo::build_combo(&["R50", "V16", "M3"]);
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let plan = DeploymentPlan::unregulated(3);
         let base = ts.simulate(&plan, opts(&platform));
         let mut reg = SpatialRegulator::new(opts(&platform));
@@ -191,7 +191,7 @@ mod tests {
         let platform = Platform::titan_v();
         let cost = CostModel::new(platform);
         let tenants = zoo::build_combo(&["Alex", "V16", "R18"]);
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let mut plan = DeploymentPlan::unregulated(3);
         let mut reg = SpatialRegulator::new(opts(&platform));
         let mut last = ts.simulate(&plan, opts(&platform)).objective();
@@ -213,7 +213,7 @@ mod tests {
         let platform = Platform::titan_v();
         let cost = CostModel::new(platform);
         let tenants = zoo::build_combo(&["R50", "V16", "M3"]);
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let mut reg = SpatialRegulator::new(opts(&platform));
         let mut plan = DeploymentPlan::unregulated(3);
         for _ in 0..5 {
@@ -236,7 +236,7 @@ mod tests {
         let platform = Platform::titan_v();
         let cost = CostModel::new(platform);
         let tenants = zoo::build_combo(&["Alex", "V16", "R18"]);
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let mut reg = SpatialRegulator::new(opts(&platform));
         let plan = DeploymentPlan::unregulated(3);
         let mut seen = std::collections::HashSet::new();

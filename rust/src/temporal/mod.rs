@@ -8,6 +8,7 @@
 
 
 use crate::dfg::Dfg;
+use crate::error::{Error, Result};
 
 /// The pointer matrix `Matrix_P` (Eq. 7).
 #[derive(Debug, Clone, PartialEq, Default)]
@@ -48,6 +49,19 @@ impl PointerMatrix {
         list.sort_unstable();
         list.dedup();
         self.lists[i] = list;
+    }
+
+    /// Append a pointer list for a newly admitted tenant (kept sorted +
+    /// deduped).
+    pub fn push_tenant(&mut self, mut list: Vec<usize>) {
+        list.sort_unstable();
+        list.dedup();
+        self.lists.push(list);
+    }
+
+    /// Drop tenant `i`'s pointer list (eviction; later tenants shift down).
+    pub fn remove_tenant(&mut self, i: usize) -> Vec<usize> {
+        self.lists.remove(i)
     }
 
     /// Move tenant `i`'s `j`-th pointer to `pos` (kept sorted).
@@ -96,21 +110,21 @@ impl PointerMatrix {
     }
 
     /// Check positions are within each tenant's DFG.
-    pub fn validate(&self, tenants: &[Dfg]) -> Result<(), String> {
+    pub fn validate(&self, tenants: &[Dfg]) -> Result<()> {
         if self.lists.len() != tenants.len() {
-            return Err(format!(
+            return Err(Error::InvalidPlan(format!(
                 "pointer matrix has {} lists for {} tenants",
                 self.lists.len(),
                 tenants.len()
-            ));
+            )));
         }
         for (i, (l, d)) in self.lists.iter().zip(tenants).enumerate() {
             for &p in l {
                 if p == 0 || p >= d.len() {
-                    return Err(format!(
+                    return Err(Error::InvalidPlan(format!(
                         "tenant {i}: pointer at {p} outside 1..{}",
                         d.len()
-                    ));
+                    )));
                 }
             }
         }

@@ -1,0 +1,177 @@
+//! Integration: the `GacerEngine` deployment API — search → plan →
+//! lowered server configuration, plus runtime admit/evict re-planning.
+//!
+//! The serving half requires `make artifacts` (and the `xla-runtime`
+//! feature); those tests skip with a notice when artifacts are absent so a
+//! bare checkout still passes `cargo test`.
+
+use std::time::Duration;
+
+use gacer::coordinator::BatchPolicy;
+use gacer::engine::GacerEngine;
+use gacer::models::zoo;
+use gacer::plan::{DeploymentPlan, TenantSet};
+use gacer::prelude::*;
+
+fn artifacts_dir() -> Option<&'static str> {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("skipping engine serving test: run `make artifacts` first");
+        None
+    }
+}
+
+fn quick_cfg() -> SearchConfig {
+    SearchConfig {
+        max_pointers: 2,
+        rounds_per_level: 1,
+        positions_per_coordinate: 6,
+        spatial_steps_per_level: 2,
+        ..Default::default()
+    }
+}
+
+fn policy() -> BatchPolicy {
+    BatchPolicy::new(8, Duration::from_millis(1), vec![1, 2, 4, 8, 16, 32])
+}
+
+#[test]
+fn engine_search_never_worse_than_unregulated() {
+    let engine = GacerEngine::builder()
+        .search(quick_cfg())
+        .tenant(zoo::build_default("R50").unwrap())
+        .tenant(zoo::build_default("V16").unwrap())
+        .tenant(zoo::build_default("M3").unwrap())
+        .build()
+        .unwrap();
+    let r = engine.last_report().unwrap();
+    assert!(r.outcome.objective() <= r.initial.objective() + 1e-6);
+    engine.plan().validate(engine.tenants()).unwrap();
+}
+
+#[test]
+fn seeded_research_preserves_plan_quality() {
+    // run_from (the engine's incremental path) seeded with a cold search's
+    // plan must never end up worse than that plan.
+    let platform = Platform::titan_v();
+    let tenants = zoo::build_combo(&["Alex", "V16", "R18"]);
+    let ts = TenantSet::new(tenants, CostModel::new(platform));
+    let search = GacerSearch::new(&ts, SimOptions::for_platform(&platform), quick_cfg());
+    let cold = search.run();
+    let seeded = search.run_from(cold.plan.clone());
+    assert!(
+        seeded.outcome.objective() <= cold.outcome.objective() + 1e-6,
+        "seeded {} vs cold {}",
+        seeded.outcome.objective(),
+        cold.outcome.objective()
+    );
+    seeded.plan.validate(&ts.tenants).unwrap();
+}
+
+#[test]
+fn admit_evict_cycle_keeps_plans_valid_and_competitive() {
+    let mut engine = GacerEngine::builder()
+        .search(quick_cfg())
+        .tenant(zoo::build_default("R18").unwrap())
+        .tenant(zoo::build_default("M3").unwrap())
+        .build()
+        .unwrap();
+    let v16 = engine.admit(zoo::build_default("V16").unwrap()).unwrap();
+    engine.plan().validate(engine.tenants()).unwrap();
+    let r = engine.last_report().unwrap();
+    assert!(r.outcome.objective() <= r.initial.objective() + 1e-6);
+
+    engine.evict(v16).unwrap();
+    assert_eq!(engine.len(), 2);
+    engine.plan().validate(engine.tenants()).unwrap();
+    let r = engine.last_report().unwrap();
+    assert!(r.outcome.objective() <= r.initial.objective() + 1e-6);
+}
+
+// ---- serving path (requires artifacts) ----
+
+#[test]
+fn lowered_deployment_reaches_the_running_scheduler() {
+    // Acceptance: the searched plan's chunk sizes and issue order are what
+    // the scheduler executes — asserted against the running server's
+    // effective specs, not just the lowering output.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut builder = GacerEngine::builder().search(quick_cfg()).artifacts(dir);
+    for i in 0..3 {
+        builder = builder
+            .serving_tenant(format!("t{i}"), "tiny_cnn", policy())
+            .unwrap();
+    }
+    let engine = builder.build().unwrap();
+    let deployment = engine.deployment().unwrap();
+
+    // The lowered issue order is a permutation derived from the plan.
+    let mut sorted = deployment.config.issue_order.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, vec![0, 1, 2]);
+
+    // Every lowered chunk is a compiled variant bounded by a searched
+    // micro-batch piece of that tenant.
+    for (i, spec) in deployment.tenants.iter().enumerate() {
+        if let Some(c) = spec.chunk {
+            let max_piece = engine.plan().chunking[i]
+                .values()
+                .filter(|l| l.len() > 1)
+                .flat_map(|l| l.iter().copied())
+                .max()
+                .expect("chunk implies a searched decomposition");
+            assert!(c <= max_piece, "chunk {c} exceeds searched piece {max_piece}");
+        } else {
+            assert!(
+                engine.plan().chunking[i].values().all(|l| l.len() <= 1),
+                "searched decomposition was dropped by the lowering"
+            );
+        }
+    }
+
+    let server = engine.serve().unwrap();
+    assert_eq!(server.issue_order(), &deployment.config.issue_order[..]);
+    for (spec, lowered) in server.tenant_specs().iter().zip(&deployment.tenants) {
+        assert_eq!(spec.chunk, lowered.chunk);
+        assert_eq!(spec.family, lowered.family);
+    }
+
+    // And it actually serves: one request per tenant, correct shape.
+    for t in 0..3 {
+        let x: Vec<f32> = (0..32 * 32 * 3)
+            .map(|k| (((t * 7919 + k) % 97) as f32 / 97.0) - 0.5)
+            .collect();
+        let out = server.infer(t, x).unwrap();
+        assert_eq!(out.len(), 10);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn unregulated_and_searched_deployments_agree_numerically() {
+    // The engine's two lowerings of the same tenant set must compute the
+    // same function (GACER regulates *how*, never *what*).
+    let Some(dir) = artifacts_dir() else { return };
+    let mut builder = GacerEngine::builder().search(quick_cfg()).artifacts(dir);
+    for i in 0..2 {
+        builder = builder
+            .serving_tenant(format!("t{i}"), "tiny_cnn", policy())
+            .unwrap();
+    }
+    let engine = builder.build().unwrap();
+    let x: Vec<f32> = (0..32 * 32 * 3).map(|k| ((k % 97) as f32 / 97.0) - 0.5).collect();
+
+    let searched = engine.serve().unwrap();
+    let ys = searched.infer(0, x.clone()).unwrap();
+    drop(searched);
+
+    let unreg = engine
+        .deployment_of(&DeploymentPlan::unregulated(engine.len()))
+        .unwrap();
+    let plain = gacer::coordinator::Server::start(dir, unreg.tenants, unreg.config).unwrap();
+    let yp = plain.infer(0, x).unwrap();
+    for (a, e) in ys.iter().zip(&yp) {
+        assert!((a - e).abs() < 1e-3 + 1e-3 * e.abs(), "{a} vs {e}");
+    }
+}

@@ -11,7 +11,7 @@ use gacer::search::{GacerSearch, SearchConfig, SearchReport};
 fn search(names: &[&str], platform: &Platform, cfg: SearchConfig) -> SearchReport {
     let cost = CostModel::new(*platform);
     let tenants = zoo::build_combo(names);
-    let ts = TenantSet::new(&tenants, &cost);
+    let ts = TenantSet::new(tenants.clone(), cost.clone());
     GacerSearch::new(&ts, SimOptions::for_platform(platform), cfg).run()
 }
 
@@ -37,7 +37,7 @@ fn gacer_speedup_vs_sequential_in_paper_band() {
     let mut in_band = 0;
     for combo in zoo::PAPER_COMBOS {
         let tenants = zoo::build_combo(&combo);
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let seq = Baseline::new(&ts, SimOptions::for_platform(&platform))
             .run(BaselineKind::CudnnSeq);
         let r = search(&combo, &platform, SearchConfig::default());
@@ -96,7 +96,7 @@ fn gacer_utilization_beats_stream_parallel() {
     let platform = Platform::titan_v();
     let cost = CostModel::new(platform);
     let tenants = zoo::build_combo(&["R101", "D121", "M3"]);
-    let ts = TenantSet::new(&tenants, &cost);
+    let ts = TenantSet::new(tenants.clone(), cost.clone());
     let sp = Baseline::new(&ts, SimOptions::for_platform(&platform))
         .run(BaselineKind::StreamParallel);
     let r = search(&["R101", "D121", "M3"], &platform, SearchConfig::default());
@@ -127,7 +127,7 @@ fn search_works_on_two_and_four_tenant_sets() {
     for names in [vec!["V16", "R18"], vec!["Alex", "V16", "R18", "M3"]] {
         let tenants: Vec<_> =
             names.iter().map(|n| zoo::build_default(n).unwrap()).collect();
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let r = GacerSearch::new(
             &ts,
             SimOptions::for_platform(&platform),
@@ -145,7 +145,7 @@ fn search_cost_scales_roughly_linearly_in_rounds() {
     let platform = Platform::titan_v();
     let cost = CostModel::new(platform);
     let tenants = zoo::build_combo(&["R34", "LSTM", "BST"]);
-    let ts = TenantSet::new(&tenants, &cost);
+    let ts = TenantSet::new(tenants.clone(), cost.clone());
     let small = SearchConfig { rounds_per_level: 1, ..Default::default() };
     let large = SearchConfig { rounds_per_level: 6, ..Default::default() };
     let e1 = GacerSearch::new(&ts, SimOptions::for_platform(&platform), small)

@@ -18,7 +18,7 @@ fn all_paper_combos_simulate_on_all_platforms() {
         let cost = CostModel::new(platform);
         for combo in zoo::PAPER_COMBOS {
             let tenants = zoo::build_combo(&combo);
-            let ts = TenantSet::new(&tenants, &cost);
+            let ts = TenantSet::new(tenants.clone(), cost.clone());
             let out = ts.simulate(&DeploymentPlan::unregulated(3), opts(&platform));
             assert!(out.makespan_us > 0.0);
             assert!(out.residue >= -1e-6);
@@ -34,7 +34,7 @@ fn stream_parallel_beats_sequential_on_every_combo() {
     let cost = CostModel::new(platform);
     for combo in zoo::PAPER_COMBOS {
         let tenants = zoo::build_combo(&combo);
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let b = Baseline::new(&ts, opts(&platform));
         let seq = b.run(BaselineKind::CudnnSeq);
         let sp = b.run(BaselineKind::StreamParallel);
@@ -55,7 +55,7 @@ fn stream_parallel_speedup_in_paper_band() {
     let mut in_band = 0;
     for combo in zoo::PAPER_COMBOS {
         let tenants = zoo::build_combo(&combo);
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let b = Baseline::new(&ts, opts(&platform));
         let speedup = b.run(BaselineKind::CudnnSeq).makespan_us
             / b.run(BaselineKind::StreamParallel).makespan_us;
@@ -72,7 +72,7 @@ fn sequential_utilization_is_low() {
     let platform = Platform::titan_v();
     let cost = CostModel::new(platform);
     let tenants = zoo::build_combo(&["R101", "D121", "M3"]);
-    let ts = TenantSet::new(&tenants, &cost);
+    let ts = TenantSet::new(tenants.clone(), cost.clone());
     let b = Baseline::new(&ts, opts(&platform).with_trace());
     let seq = b.run(BaselineKind::CudnnSeq);
     let sp = b.run(BaselineKind::StreamParallel);
@@ -85,7 +85,7 @@ fn pointer_barriers_cost_sync_time() {
     let platform = Platform::titan_v();
     let cost = CostModel::new(platform);
     let tenants = zoo::build_combo(&["Alex", "V16", "R18"]);
-    let ts = TenantSet::new(&tenants, &cost);
+    let ts = TenantSet::new(tenants.clone(), cost.clone());
     let mut plan = DeploymentPlan::unregulated(3);
     plan.pointers = PointerMatrix::equal_segments(&tenants, 4);
     let out = ts.simulate(&plan, opts(&platform));
@@ -100,7 +100,7 @@ fn operator_wise_scheduling_pays_heavy_sync_penalty() {
     let platform = Platform::titan_v();
     let cost = CostModel::new(platform);
     let tenants = zoo::build_combo(&["R50", "V16", "M3"]);
-    let ts = TenantSet::new(&tenants, &cost);
+    let ts = TenantSet::new(tenants.clone(), cost.clone());
     let coarse = ts.simulate(&DeploymentPlan::unregulated(3), opts(&platform));
     let mut fine = DeploymentPlan::unregulated(3);
     fine.pointers = PointerMatrix::operator_wise(&tenants);
@@ -121,7 +121,7 @@ fn mps_is_unstable_across_combos() {
     let mut losses = 0;
     for combo in zoo::PAPER_COMBOS {
         let tenants = zoo::build_combo(&combo);
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let b = Baseline::new(&ts, opts(&platform));
         let mps = b.run(BaselineKind::Mps).makespan_us;
         let sp = b.run(BaselineKind::StreamParallel).makespan_us;
@@ -144,7 +144,7 @@ fn empty_and_single_tenant_edge_cases() {
 
     let cost = CostModel::new(platform);
     let tenants = vec![zoo::build_default("Alex").unwrap()];
-    let ts = TenantSet::new(&tenants, &cost);
+    let ts = TenantSet::new(tenants.clone(), cost.clone());
     let solo = ts.simulate(&DeploymentPlan::unregulated(1), opts(&platform));
     assert!((solo.makespan_us - cost.sequential_latency_us(&tenants[0])).abs() < 1e-6);
 }
@@ -156,7 +156,7 @@ fn slower_platforms_slower_absolute_latency() {
     for platform in [Platform::titan_v(), Platform::p6000(), Platform::gtx_1080ti()] {
         let cost = CostModel::new(platform);
         let tenants = zoo::build_combo(&["R50", "V16", "M3"]);
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let out = ts.simulate(&DeploymentPlan::unregulated(3), opts(&platform));
         assert!(out.makespan_us > last, "{} not slower", platform.name);
         last = out.makespan_us;

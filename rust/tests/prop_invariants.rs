@@ -57,7 +57,7 @@ fn prop_random_plans_validate_and_conserve_batches() {
     check_property("plan-batch-conservation", 40, |rng| {
         let plan = random_plan(rng, &tenants);
         plan.validate(&tenants).unwrap();
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let streams = ts.compile(&plan);
         for (ti, d) in tenants.iter().enumerate() {
             // Per source op: sum of piece batches equals... we verify via
@@ -82,7 +82,7 @@ fn prop_schedule_is_permutation_respecting_intra_model_order() {
     let tenants = zoo::build_combo(&["Alex", "R18", "M3"]);
     check_property("schedule-permutation", 25, |rng| {
         let plan = random_plan(rng, &tenants);
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let out = ts.simulate(&plan, SimOptions::for_platform(&platform).with_ops());
         let records = out.op_records.unwrap();
         let compiled = ts.compile(&plan);
@@ -125,7 +125,7 @@ fn prop_simulator_never_exceeds_pool_in_useful_occupancy() {
     let tenants = zoo::build_combo(&["R50", "V16", "M3"]);
     check_property("pool-cap", 20, |rng| {
         let plan = random_plan(rng, &tenants);
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let out = ts.simulate(&plan, SimOptions::for_platform(&platform).with_trace());
         for iv in out.trace.unwrap().intervals() {
             assert!(iv.occupancy <= 100.0 + 1e-9);
@@ -186,7 +186,7 @@ fn prop_gacer_never_worse_than_unregulated() {
             .collect();
         let tenants: Vec<_> =
             names.iter().map(|n| zoo::build_default(n).unwrap()).collect();
-        let ts = TenantSet::new(&tenants, &cost);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
         let cfg = SearchConfig {
             max_pointers: 2,
             rounds_per_level: 1,
