@@ -3,7 +3,8 @@
 //! search produce the deployment plan, and serve batched requests through
 //! the coordinator under two deployments — the unregulated plan vs the
 //! searched plan — both lowered by the engine (no hand-set `chunk` or
-//! `issue_order` anywhere). Results are recorded in EXPERIMENTS.md.
+//! `issue_order` anywhere). For the multi-device variant of this flow see
+//! `examples/sharded_serving.rs`.
 //!
 //! Requires `make artifacts` first.
 //!

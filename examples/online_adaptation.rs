@@ -5,6 +5,13 @@
 //! modeling-based search is cheap enough for online use ("acceptable for
 //! tasks that care about throughput and are not sensitive to real-time").
 //!
+//! The timeline runs on a single device; the engine's device dimension
+//! makes churn *cheaper still* on a pool — admission control places each
+//! newcomer on the least loaded device and re-searches only that shard
+//! (see `examples/sharded_serving.rs` and `docs/TUTORIAL.md`). The coda
+//! below replays the final tenant mix on a 2-device engine to show the
+//! sharded re-plan cost side by side.
+//!
 //!     cargo run --release --example online_adaptation
 
 use std::time::Instant;
@@ -88,6 +95,24 @@ fn main() -> gacer::Result<()> {
          (amortized {:.2?} per event — offline-quality plans at online cost)",
         timeline.len(),
         total / timeline.len() as u32
+    );
+
+    // Coda: the same surviving mix on a 2-device engine. Churn now
+    // re-searches one shard only, so each event prices at a fraction of
+    // even the single-device incremental re-plan.
+    let mut pool = GacerEngine::builder().platform(Platform::titan_v()).devices(2);
+    for dfg in engine.tenants() {
+        pool = pool.tenant(dfg.clone());
+    }
+    let mut pool = pool.build()?;
+    let t0 = Instant::now();
+    let id = pool.admit(zoo::build_default("V16").unwrap())?;
+    let took = t0.elapsed();
+    let device = pool.device_of(id)?;
+    println!(
+        "\n2-device coda: V16 admitted to device {device} in {took:.2?} \
+         (only that shard re-searched; cluster makespan {:.2} ms)",
+        pool.simulate().makespan_us / 1e3
     );
     Ok(())
 }

@@ -1,0 +1,133 @@
+//! Multi-GPU sharded deployment, end to end — the code companion of
+//! `docs/TUTORIAL.md` (the tutorial's numbered steps match the sections
+//! below).
+//!
+//! Build a tenant set, search it, shard it across 2 simulated devices,
+//! exercise cross-device admission control (admit/evict re-search only
+//! the affected shard), and — when AOT artifacts are present — serve
+//! real inference through one coordinator per device behind the
+//! [`ClusterServer`] routing front-end.
+//!
+//!     cargo run --release --example sharded_serving
+//!
+//! The simulation half needs nothing but this repo; the serving half
+//! requires `make artifacts` and is skipped with a notice otherwise.
+
+use std::time::Duration;
+
+use gacer::coordinator::BatchPolicy;
+use gacer::models::zoo;
+use gacer::prelude::*;
+
+fn main() -> gacer::Result<()> {
+    // ---- Step 1: build a multi-tenant engine on ONE device ------------
+    // Four heterogeneous tenants sharing a single simulated Titan V.
+    let combo = ["R50", "V16", "R18", "M3"];
+    let quick = SearchConfig {
+        max_pointers: 2,
+        rounds_per_level: 1,
+        positions_per_coordinate: 6,
+        spatial_steps_per_level: 2,
+        ..Default::default()
+    };
+    let mut single = GacerEngine::builder().platform(Platform::titan_v()).search(quick);
+    for name in combo {
+        single = single.tenant(zoo::build_default(name).unwrap());
+    }
+    let single = single.build()?;
+    let one_dev = single.simulate();
+    println!("== 1 device ==");
+    println!(
+        "  all {} tenants co-located: makespan {:.2} ms",
+        single.len(),
+        one_dev.makespan_us / 1e3
+    );
+
+    // ---- Step 2: the same tenants sharded across 2 devices ------------
+    // `.devices(2)` adds the device dimension: a cost-model-driven
+    // placement shards the tenant set, and each device gets its own
+    // granularity-aware search (one chunk map + pointer matrix per shard).
+    let mut sharded = GacerEngine::builder()
+        .platform(Platform::titan_v())
+        .devices(2)
+        .search(quick);
+    for name in combo {
+        sharded = sharded.tenant(zoo::build_default(name).unwrap());
+    }
+    let mut engine = sharded.build()?;
+    engine.sharded_plan().validate(engine.tenants()).unwrap();
+
+    println!("\n== 2 devices ==");
+    let sims = engine.simulate_devices();
+    for (d, sim) in sims.iter().enumerate() {
+        let names: Vec<&str> = engine
+            .placement()
+            .tenants_on(d)
+            .iter()
+            .map(|&s| engine.tenants()[s].name.as_str())
+            .collect();
+        println!(
+            "  device {d}: {names:?}  makespan {:.2} ms",
+            sim.makespan_us / 1e3
+        );
+    }
+    let cluster = engine.simulate();
+    println!(
+        "  cluster makespan (bottleneck device): {:.2} ms  ({:.2}x vs 1 device)",
+        cluster.makespan_us / 1e3,
+        one_dev.makespan_us / cluster.makespan_us
+    );
+
+    // ---- Step 3: cross-device admission control ------------------------
+    // A newcomer lands on the least loaded device; ONLY that shard is
+    // re-searched (seeded incremental re-plan), the other shard's plan is
+    // untouched.
+    let before = engine.sharded_plan().clone();
+    let id = engine.admit(zoo::build_default("Alex").unwrap())?;
+    let device = engine.device_of(id)?;
+    assert_eq!(engine.last_searched_device(), Some(device));
+    let other = 1 - device;
+    assert_eq!(
+        engine.sharded_plan().shards[other], before.shards[other],
+        "untouched shard must not be re-searched"
+    );
+    println!(
+        "\nadmit Alex -> device {device} (least loaded); \
+         device {other}'s plan untouched"
+    );
+
+    // ---- Step 4: evict, including a device's last tenant ---------------
+    engine.evict(id)?;
+    println!("evict Alex -> device {device} re-planned alone");
+    engine.sharded_plan().validate(engine.tenants()).unwrap();
+
+    // ---- Step 5: serve through one coordinator per device --------------
+    // Requires AOT artifacts (`make artifacts`); each device runs its own
+    // scheduler + executor, and the ClusterServer routes every request to
+    // its tenant's device.
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("\n(serving half skipped: run `make artifacts` first)");
+        return Ok(());
+    }
+    let policy = BatchPolicy::new(8, Duration::from_millis(2), vec![1, 2, 4, 8, 16, 32]);
+    let mut b = GacerEngine::builder()
+        .platform(Platform::titan_v())
+        .devices(2)
+        .search(quick)
+        .artifacts("artifacts");
+    for i in 0..4 {
+        b = b.serving_tenant(format!("tiny-{i}"), "tiny_cnn", policy.clone())?;
+    }
+    let serving = b.build()?;
+    let cluster = serving.serve_cluster()?;
+    println!("\nserving 4 tenants on {} devices:", cluster.n_devices());
+    for t in 0..4 {
+        let x: Vec<f32> = (0..32 * 32 * 3)
+            .map(|k| (((t * 7919 + k) % 97) as f32 / 97.0) - 0.5)
+            .collect();
+        let out = cluster.infer(t, x)?;
+        let (d, l) = cluster.route_of(t).unwrap();
+        println!("  tenant {t} -> device {d} slot {l}: {} logits", out.len());
+    }
+    Ok(())
+}

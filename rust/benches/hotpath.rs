@@ -2,8 +2,7 @@
 //! no criterion crate, so this is a hand-rolled steady-state timer with
 //! warmup + median-of-runs reporting).
 //!
-//! Targets the three L3 hot paths the performance pass optimizes
-//! (EXPERIMENTS.md §Perf):
+//! Targets the three L3 hot paths the search depends on:
 //!   * cost-model lookups (memoized `W(O^B)`/`T(O^B)`) — the search's
 //!     innermost dependency;
 //!   * plan compile + simulate — the per-candidate evaluation;

@@ -1,8 +1,8 @@
 //! The paper-experiment implementations (one per table/figure of §5).
 //!
 //! Shared by the `gacer-bench` binary and the cargo bench targets; each
-//! prints the same rows/series the paper reports. EXPERIMENTS.md records
-//! paper-vs-measured for every entry.
+//! prints the same rows/series the paper reports (DESIGN.md §6 indexes
+//! them).
 
 use crate::baselines::BaselineKind;
 use super::{fig7_header, fig7_row, run_combo, run_strategy, Strategy};

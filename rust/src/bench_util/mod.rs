@@ -9,7 +9,7 @@ use crate::gpu::{SimOptions, SimOutcome};
 use crate::models::zoo;
 use crate::plan::TenantSet;
 use crate::profile::{CostModel, Platform};
-use crate::search::{GacerSearch, SearchConfig};
+use crate::search::{GacerSearch, SearchConfig, ShardedSearch};
 
 /// Every strategy of Fig. 7.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -91,6 +91,47 @@ pub fn run_combo(names: &[&str], platform: &Platform, cfg: SearchConfig) -> Vec<
         .collect()
 }
 
+/// One device of a multi-GPU scaling measurement: who was placed there
+/// and how fast its searched shard runs.
+#[derive(Debug, Clone)]
+pub struct ShardCell {
+    pub device: usize,
+    pub tenants: Vec<String>,
+    /// Searched makespan of this device's shard (0 for idle devices).
+    pub makespan_ms: f64,
+}
+
+/// Run the sharded GACER search on a combo across `n_devices` and report
+/// per-device makespans plus the cluster makespan (the bottleneck
+/// device's) — the multi-GPU scaling axis: same tenants, more devices.
+pub fn run_sharded(
+    names: &[&str],
+    platform: &Platform,
+    n_devices: usize,
+    cfg: SearchConfig,
+) -> (Vec<ShardCell>, f64) {
+    let tenants = zoo::build_combo(names);
+    let ts = TenantSet::new(tenants.clone(), CostModel::new(*platform));
+    let report =
+        ShardedSearch::new(&ts, SimOptions::for_platform(platform), cfg).run(n_devices);
+    let cells = (0..n_devices)
+        .map(|d| ShardCell {
+            device: d,
+            tenants: report
+                .plan
+                .placement
+                .tenants_on(d)
+                .iter()
+                .map(|&s| tenants[s].name.clone())
+                .collect(),
+            makespan_ms: report.reports[d]
+                .as_ref()
+                .map_or(0.0, |r| r.outcome.makespan_us / 1e3),
+        })
+        .collect();
+    (cells, report.cluster_makespan_us() / 1e3)
+}
+
 /// Format a Fig. 7-style row: speedups normalized to CuDNN-Seq.
 pub fn fig7_row(label: &str, cells: &[EvalCell]) -> String {
     let seq = cells
@@ -139,6 +180,18 @@ mod tests {
         for c in &cells {
             assert!(c.outcome.makespan_us > 0.0, "{}", c.strategy.label());
         }
+    }
+
+    #[test]
+    fn sharded_scaling_reports_per_device_cells() {
+        let (cells, cluster_ms) =
+            run_sharded(&["Alex", "V16", "R18"], &Platform::titan_v(), 2, quick_cfg());
+        assert_eq!(cells.len(), 2);
+        let placed: usize = cells.iter().map(|c| c.tenants.len()).sum();
+        assert_eq!(placed, 3, "every tenant placed exactly once");
+        let bottleneck = cells.iter().map(|c| c.makespan_ms).fold(0.0f64, f64::max);
+        assert!((cluster_ms - bottleneck).abs() < 1e-9);
+        assert!(cluster_ms > 0.0);
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! `gacer-bench` — regenerates every table and figure of the paper's
-//! evaluation section (see DESIGN.md §5 for the experiment index).
+//! evaluation section (see DESIGN.md §6 for the experiment index).
 //!
 //! Usage: `gacer-bench <fig4|fig7|fig8|table2|fig9|table3|table4|all> [--rounds N]`
 

@@ -1,0 +1,175 @@
+//! Multi-device serving: one [`Server`] per device behind a routing
+//! front-end.
+//!
+//! A sharded deployment runs **independently scheduled** coordinators —
+//! each device has its own scheduler thread, batchers, issue order, and
+//! executor, all lowered from that device's searched shard plan. The
+//! [`ClusterServer`] adds the only cross-device piece the request path
+//! needs: a routing table from *global* tenant slots to
+//! `(device, local slot)`, fixed by the engine's [`Placement`] at
+//! deployment time. Cross-device *admission control* (placing newcomers,
+//! re-searching the affected shard) stays in the engine; by the time a
+//! configuration reaches this type every decision is already made.
+//!
+//! Startup cost note: each occupied device's [`Server`] opens the shared
+//! artifact directory itself (manifest + parameters are read per device,
+//! mirroring per-GPU weight replication); idle devices spawn nothing.
+//!
+//! [`Placement`]: crate::plan::Placement
+
+use super::server::{Server, ServerConfig, TenantSpec};
+use crate::error::{Error, Result};
+
+/// Handle to a running multi-device deployment: per-device [`Server`]s
+/// plus the placement-derived routing table. Cloneable, like [`Server`];
+/// dropping the last handle stops every device's scheduler after it
+/// drains outstanding work.
+#[derive(Clone)]
+pub struct ClusterServer {
+    /// One server per device; `None` for devices the placement left empty
+    /// (no scheduler or executor is spawned for an idle device — routing
+    /// can never point at one).
+    servers: Vec<Option<Server>>,
+    routing: Vec<(usize, usize)>,
+}
+
+impl ClusterServer {
+    /// Check a routing table against per-device tenant counts: every
+    /// global slot must map to an in-range `(device, local)` pair and
+    /// every per-device slot must be claimed by exactly one global slot —
+    /// the serving-side mirror of `Placement::validate`'s
+    /// no-overlap/no-missing partition check.
+    ///
+    /// ```
+    /// use gacer::coordinator::ClusterServer;
+    ///
+    /// // Two devices serving 3 tenants: slots 0/2 on device 0, 1 on 1.
+    /// let routing = vec![(0, 0), (1, 0), (0, 1)];
+    /// ClusterServer::validate_routing(&routing, &[2, 1]).unwrap();
+    /// // Claiming (0, 0) twice leaves (0, 1) unserved: rejected.
+    /// assert!(ClusterServer::validate_routing(&[(0, 0), (1, 0), (0, 0)], &[2, 1]).is_err());
+    /// ```
+    pub fn validate_routing(
+        routing: &[(usize, usize)],
+        tenants_per_device: &[usize],
+    ) -> Result<()> {
+        let total: usize = tenants_per_device.iter().sum();
+        if routing.len() != total {
+            return Err(Error::InvalidConfig(format!(
+                "routing covers {} global slots, devices serve {total}",
+                routing.len()
+            )));
+        }
+        let mut claimed: Vec<Vec<bool>> =
+            tenants_per_device.iter().map(|&n| vec![false; n]).collect();
+        for (slot, &(d, l)) in routing.iter().enumerate() {
+            let Some(device) = claimed.get_mut(d) else {
+                return Err(Error::InvalidConfig(format!(
+                    "slot {slot} routed to device {d}, only {} devices",
+                    tenants_per_device.len()
+                )));
+            };
+            if l >= device.len() {
+                return Err(Error::InvalidConfig(format!(
+                    "slot {slot} routed to ({d}, {l}), device {d} serves {} tenants",
+                    device.len()
+                )));
+            }
+            if std::mem::replace(&mut device[l], true) {
+                return Err(Error::InvalidConfig(format!(
+                    "two global slots routed to ({d}, {l})"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Start one [`Server`] per *occupied* device (idle devices keep their
+    /// index but spawn no threads) and the routing front-end. All servers
+    /// share the artifact directory; each consumes its own lowered
+    /// `(tenants, config)` pair — produced by
+    /// `GacerEngine::sharded_deployment`, not written by hand.
+    pub fn start(
+        artifact_dir: &str,
+        per_device: Vec<(Vec<TenantSpec>, ServerConfig)>,
+        routing: Vec<(usize, usize)>,
+    ) -> Result<ClusterServer> {
+        let sizes: Vec<usize> = per_device.iter().map(|(t, _)| t.len()).collect();
+        Self::validate_routing(&routing, &sizes)?;
+        let mut servers = Vec::with_capacity(per_device.len());
+        for (tenants, cfg) in per_device {
+            servers.push(if tenants.is_empty() {
+                None
+            } else {
+                Some(Server::start(artifact_dir, tenants, cfg)?)
+            });
+        }
+        Ok(ClusterServer { servers, routing })
+    }
+
+    /// Submit one request for a *global* tenant slot and wait for its
+    /// output row; the cluster routes it to the tenant's device.
+    pub fn infer(&self, tenant: usize, input: Vec<f32>) -> Result<Vec<f32>> {
+        let &(d, l) = self.routing.get(tenant).ok_or_else(|| {
+            Error::InvalidConfig(format!(
+                "request for tenant {tenant}, only {} deployed",
+                self.routing.len()
+            ))
+        })?;
+        // validate_routing guarantees a routed device is occupied.
+        let server = self.servers[d].as_ref().ok_or_else(|| {
+            Error::InvalidConfig(format!("tenant {tenant} routed to idle device {d}"))
+        })?;
+        server.infer(l, input)
+    }
+
+    /// Number of devices (including idle ones).
+    pub fn n_devices(&self) -> usize {
+        self.servers.len()
+    }
+
+    /// The server of one device, for introspection (each exposes its own
+    /// effective `tenant_specs()` / `issue_order()`); `None` for a device
+    /// the placement left idle.
+    pub fn server(&self, device: usize) -> Option<&Server> {
+        self.servers.get(device).and_then(Option::as_ref)
+    }
+
+    /// The global-slot routing table.
+    pub fn routing(&self) -> &[(usize, usize)] {
+        &self.routing
+    }
+
+    /// Where a global tenant slot is served: `(device, local slot)`.
+    pub fn route_of(&self, tenant: usize) -> Option<(usize, usize)> {
+        self.routing.get(tenant).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_must_partition_the_device_slots() {
+        // 3 global tenants over devices serving 2 + 1.
+        ClusterServer::validate_routing(&[(0, 0), (1, 0), (0, 1)], &[2, 1]).unwrap();
+        // Wrong arity.
+        assert!(ClusterServer::validate_routing(&[(0, 0)], &[2, 1]).is_err());
+        // Device out of range.
+        assert!(
+            ClusterServer::validate_routing(&[(0, 0), (2, 0), (0, 1)], &[2, 1]).is_err()
+        );
+        // Local slot out of range.
+        assert!(
+            ClusterServer::validate_routing(&[(0, 0), (1, 1), (0, 1)], &[2, 1]).is_err()
+        );
+        // Duplicate claim leaves another slot unserved.
+        assert!(
+            ClusterServer::validate_routing(&[(0, 0), (1, 0), (0, 0)], &[2, 1]).is_err()
+        );
+        // Empty devices are legal.
+        ClusterServer::validate_routing(&[(1, 0)], &[0, 1]).unwrap();
+        ClusterServer::validate_routing(&[], &[0, 0]).unwrap();
+    }
+}

@@ -10,11 +10,30 @@
 //! [`crate::plan::DeploymentPlan`] by [`crate::engine::GacerEngine`].
 //! Python never runs here: all compute is AOT-compiled HLO loaded at
 //! startup.
+//!
+//! Multi-device deployments replicate that topology per GPU: one
+//! independently scheduled [`Server`] per device, behind a
+//! [`ClusterServer`] front-end that routes each request to its tenant's
+//! device (the placement the engine's sharded search decided). The
+//! scheduler never coordinates across devices at request time — shards
+//! are independent by construction.
+//!
+//! ```
+//! use gacer::coordinator::ServerConfig;
+//!
+//! // A lowered config must pass validation before the scheduler runs it:
+//! // the issue order is a permutation of the deployed tenants.
+//! let cfg = ServerConfig { issue_order: vec![2, 0, 1], ..Default::default() };
+//! cfg.validate(3).unwrap();
+//! assert!(cfg.validate(2).is_err());
+//! ```
 
 mod batcher;
+mod cluster;
 mod executor;
 mod server;
 
 pub use batcher::{BatchPolicy, Batcher, PendingRequest};
+pub use cluster::ClusterServer;
 pub use executor::{ExecJob, ExecutorHandle};
 pub use server::{serve_demo, ServeReport, Server, ServerConfig, TenantSpec};

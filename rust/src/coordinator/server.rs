@@ -344,18 +344,23 @@ impl ServeReport {
 }
 
 /// The e2e demo driver (`gacer serve`): build a [`GacerEngine`] over DFG
-/// proxies of the requested families, let the granularity-aware search
-/// produce the deployment plan, lower it to the live server config, and
-/// serve `n_requests` per tenant of real inference through it.
+/// proxies of the requested families, shard them across `n_devices`
+/// (1 = the classic single-GPU deployment), let the granularity-aware
+/// search produce one plan per device, lower each to its live server
+/// config, and serve `n_requests` per tenant of real inference through
+/// the cluster front-end ([`crate::coordinator::ClusterServer`] — with a
+/// single device this is one scheduler, exactly the old behavior).
 ///
 /// [`GacerEngine`]: crate::engine::GacerEngine
 pub fn serve_demo(
     artifact_dir: &str,
     tenant_models: &[String],
     n_requests: usize,
+    n_devices: usize,
 ) -> Result<ServeReport> {
     let mut builder = crate::engine::GacerEngine::builder()
         .platform(crate::profile::Platform::titan_v())
+        .devices(n_devices)
         .artifacts(artifact_dir);
     for (i, family) in tenant_models.iter().enumerate() {
         builder = builder.serving_tenant(
@@ -365,19 +370,22 @@ pub fn serve_demo(
         )?;
     }
     let engine = builder.build()?;
-    let deployment = engine.deployment()?;
+    let deployment = engine.sharded_deployment()?;
     println!(
-        "searched plan: {} decomposed ops, issue order {:?}, chunks {:?}",
+        "searched plan: {} decomposed ops across {} device(s)",
         engine.plan().decomposed_ops(),
-        deployment.config.issue_order,
-        deployment
-            .tenants
-            .iter()
-            .map(|t| t.chunk)
-            .collect::<Vec<_>>()
+        engine.n_devices(),
     );
-    let n_tenants = deployment.tenants.len();
-    let server = Arc::new(engine.serve()?);
+    for (d, dep) in deployment.per_device.iter().enumerate() {
+        println!(
+            "  device {d}: tenants {:?}, issue order {:?}, chunks {:?}",
+            engine.placement().tenants_on(d),
+            dep.config.issue_order,
+            dep.tenants.iter().map(|t| t.chunk).collect::<Vec<_>>()
+        );
+    }
+    let n_tenants = tenant_models.len();
+    let server = Arc::new(engine.serve_cluster()?);
 
     let started = Instant::now();
     let mut handles = Vec::new();

@@ -30,20 +30,62 @@
 //! **incremental re-search** ([`crate::search::GacerSearch::run_from`])
 //! seeded with the surviving plan, so reconfiguration costs a fraction of
 //! a cold search.
+//!
+//! # Multi-GPU sharding
+//!
+//! [`EngineBuilder::devices`] gives the deployment a device dimension: the
+//! engine shards the tenant set across `n` devices with a cost-model-driven
+//! [`Placement`], runs one granularity-aware search per device, and keeps a
+//! [`ShardedDeploymentPlan`] — one chunk map + pointer matrix per shard.
+//! Cross-device admission control places a newcomer on the least loaded
+//! device and re-searches **only the affected shard** (seeded via
+//! `run_from`); eviction likewise re-plans just the shard that lost the
+//! tenant. Serving lowers to one [`coordinator::Server`] per device behind
+//! a [`ClusterServer`] front-end ([`GacerEngine::serve_cluster`]) that
+//! routes requests by tenant placement.
+//!
+//! ```
+//! use gacer::engine::GacerEngine;
+//! use gacer::models::zoo;
+//! use gacer::search::SearchConfig;
+//!
+//! let quick = SearchConfig {
+//!     max_pointers: 1,
+//!     rounds_per_level: 1,
+//!     positions_per_coordinate: 4,
+//!     spatial_steps_per_level: 1,
+//!     ..Default::default()
+//! };
+//! let mut engine = GacerEngine::builder()
+//!     .devices(2)
+//!     .search(quick)
+//!     .tenant(zoo::build_default("Alex").unwrap())
+//!     .tenant(zoo::build_default("M3").unwrap())
+//!     .build()
+//!     .unwrap();
+//! engine.sharded_plan().validate(engine.tenants()).unwrap();
+//! // Admission re-searches only the shard that received the newcomer.
+//! let id = engine.admit(zoo::build_default("R18").unwrap()).unwrap();
+//! let device = engine.device_of(id).unwrap();
+//! assert_eq!(engine.last_searched_device(), Some(device));
+//! ```
+//!
+//! [`coordinator::Server`]: crate::coordinator::Server
+//! [`ClusterServer`]: crate::coordinator::ClusterServer
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::time::Duration;
 
-use crate::coordinator::{BatchPolicy, Server, ServerConfig, TenantSpec};
+use crate::coordinator::{BatchPolicy, ClusterServer, Server, ServerConfig, TenantSpec};
 use crate::dfg::Dfg;
 use crate::error::{Error, Result};
 use crate::gpu::{SimOptions, SimOutcome};
 use crate::models::zoo;
-use crate::plan::{ChunkMap, DeploymentPlan, TenantSet};
+use crate::plan::{ChunkMap, DeploymentPlan, Placement, ShardedDeploymentPlan, TenantSet};
 use crate::profile::{CostModel, Platform};
 use crate::runtime::ArtifactManifest;
-use crate::search::{GacerSearch, SearchConfig, SearchReport};
+use crate::search::{SearchConfig, SearchReport, ShardedSearch};
 
 /// Stable identifier of a deployed tenant (survives other tenants'
 /// evictions, unlike slot indices).
@@ -75,8 +117,23 @@ fn default_policy() -> BatchPolicy {
 /// [`Server::start`] consumes.
 #[derive(Debug, Clone)]
 pub struct Deployment {
+    /// Per-tenant serving specs, in (device-local) slot order.
     pub tenants: Vec<TenantSpec>,
+    /// Scheduler configuration (tick, issue order, issue quanta).
     pub config: ServerConfig,
+}
+
+/// A sharded plan lowered per device: what [`ClusterServer::start`]
+/// consumes. One independent [`Deployment`] per device, plus the routing
+/// table that maps every global tenant slot to its `(device, local slot)`.
+#[derive(Debug, Clone)]
+pub struct ShardedDeployment {
+    /// One lowered deployment per device (empty devices get an empty
+    /// tenant list and a default scheduler config).
+    pub per_device: Vec<Deployment>,
+    /// Global tenant slot → `(device, local slot)` — the cluster front-end
+    /// routes requests with this table.
+    pub routing: Vec<(usize, usize)>,
 }
 
 /// Builder for [`GacerEngine`] — `GacerEngine::builder().platform(..)
@@ -86,6 +143,7 @@ pub struct EngineBuilder {
     artifact_dir: Option<PathBuf>,
     search: SearchConfig,
     tick: Duration,
+    n_devices: usize,
     tenants: Vec<(Dfg, TenantMeta)>,
     next_id: u64,
 }
@@ -97,6 +155,7 @@ impl EngineBuilder {
             artifact_dir: None,
             search: SearchConfig::default(),
             tick: Duration::from_micros(200),
+            n_devices: 1,
             tenants: Vec::new(),
             next_id: 0,
         }
@@ -105,6 +164,16 @@ impl EngineBuilder {
     /// Target platform for the cost model and simulator.
     pub fn platform(mut self, p: Platform) -> Self {
         self.platform = p;
+        self
+    }
+
+    /// Number of devices to shard the deployment across (default 1 —
+    /// the classic single-GPU engine; values below 1 are clamped to 1).
+    /// With `n > 1` the engine places tenants with [`Placement::balanced`],
+    /// searches each shard independently, and serves through one
+    /// coordinator per device ([`GacerEngine::serve_cluster`]).
+    pub fn devices(mut self, n: usize) -> Self {
+        self.n_devices = n.max(1);
         self
     }
 
@@ -162,16 +231,22 @@ impl EngineBuilder {
             Some(dir) => Some(ArtifactManifest::load(dir.join("manifest.json"))?),
             None => None,
         };
+        let n_devices = self.n_devices;
+        let empty = Placement::from_assignments(vec![Vec::new(); n_devices]);
         let mut engine = GacerEngine {
             opts: SimOptions::for_platform(&self.platform),
             platform: self.platform,
             search_cfg: self.search,
             tick: self.tick,
+            n_devices,
             set: TenantSet::new(Vec::new(), CostModel::new(self.platform)),
             meta: Vec::new(),
             next_id: self.next_id,
-            plan: DeploymentPlan::unregulated(0),
+            sharded: ShardedDeploymentPlan::unregulated(empty),
+            merged: DeploymentPlan::unregulated(0),
+            reports: (0..n_devices).map(|_| None).collect(),
             last_report: None,
+            last_searched_device: None,
             artifact_dir: self.artifact_dir,
             manifest,
         };
@@ -180,25 +255,36 @@ impl EngineBuilder {
             engine.set.admit(dfg);
             engine.meta.push(meta);
         }
-        // replan() starts from the unregulated plan of the full set, so no
-        // per-tenant plan reshaping is needed here.
+        // replan() computes the placement and searches every shard cold,
+        // so no per-tenant plan reshaping is needed here.
         engine.replan();
         Ok(engine)
     }
 }
 
-/// The deployment engine: tenant set + searched plan + lowering to the
-/// live serving configuration.
+/// The deployment engine: tenant set + placement + per-device searched
+/// plans + lowering to the live serving configuration.
 pub struct GacerEngine {
     platform: Platform,
     opts: SimOptions,
     search_cfg: SearchConfig,
     tick: Duration,
+    /// Device count the deployment is sharded across (>= 1).
+    n_devices: usize,
     set: TenantSet,
     meta: Vec<TenantMeta>,
     next_id: u64,
-    plan: DeploymentPlan,
+    /// The device-dimensioned plan: placement + one plan per shard.
+    sharded: ShardedDeploymentPlan,
+    /// The shards projected back onto global slot order (cached; what
+    /// [`GacerEngine::plan`] exposes).
+    merged: DeploymentPlan,
+    /// Per-device bookkeeping of the most recent search that touched the
+    /// device (`None` for empty devices).
+    reports: Vec<Option<SearchReport>>,
     last_report: Option<SearchReport>,
+    /// Device affected by the most recent admit/evict/replan event.
+    last_searched_device: Option<usize>,
     artifact_dir: Option<PathBuf>,
     manifest: Option<ArtifactManifest>,
 }
@@ -232,19 +318,90 @@ impl GacerEngine {
         &self.platform
     }
 
-    /// The current searched deployment plan.
-    pub fn plan(&self) -> &DeploymentPlan {
-        &self.plan
+    /// Number of devices the deployment is sharded across (>= 1).
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
     }
 
-    /// Bookkeeping of the most recent (cold or incremental) search.
+    /// The current searched deployment plan, projected onto global slot
+    /// order (for a single-device engine this *is* the searched plan; for
+    /// a sharded engine it is the per-tenant view of
+    /// [`GacerEngine::sharded_plan`], with the device dimension dropped).
+    pub fn plan(&self) -> &DeploymentPlan {
+        &self.merged
+    }
+
+    /// The device-dimensioned plan: the placement plus one independently
+    /// searched [`DeploymentPlan`] per device.
+    pub fn sharded_plan(&self) -> &ShardedDeploymentPlan {
+        &self.sharded
+    }
+
+    /// The current tenant→device placement.
+    pub fn placement(&self) -> &Placement {
+        &self.sharded.placement
+    }
+
+    /// The device a deployed tenant is placed on.
+    pub fn device_of(&self, id: TenantId) -> Result<usize> {
+        let idx = self.index_of(id)?;
+        self.sharded
+            .placement
+            .device_of(idx)
+            .ok_or_else(|| Error::InvalidPlan(format!("tenant {id} has no device")))
+    }
+
+    /// Bookkeeping of the most recent (cold or incremental) search — on a
+    /// sharded engine, the search of the most recently affected shard
+    /// (after a cold re-plan: the bottleneck device's). `None` when the
+    /// most recent event ran no search (e.g. an eviction emptied its
+    /// device); per-device state stays in [`GacerEngine::device_reports`].
     pub fn last_report(&self) -> Option<&SearchReport> {
         self.last_report.as_ref()
     }
 
-    /// Simulate the current plan on the engine's platform.
+    /// Per-device search bookkeeping (`None` for empty devices).
+    pub fn device_reports(&self) -> &[Option<SearchReport>] {
+        &self.reports
+    }
+
+    /// The device the most recent admit/evict/replan event re-searched —
+    /// how tests assert that tenant churn touches only the affected shard.
+    pub fn last_searched_device(&self) -> Option<usize> {
+        self.last_searched_device
+    }
+
+    /// Simulate the current deployment on the engine's platform: each
+    /// device simulates its own shard, and the cluster outcome is the
+    /// bottleneck device's (devices run independently, so the slowest
+    /// shard bounds the makespan). For a single-device engine this is
+    /// exactly the classic whole-set simulation.
     pub fn simulate(&self) -> SimOutcome {
-        self.set.simulate(&self.plan, self.opts)
+        if self.n_devices == 1 {
+            // Single device: simulate the owned set directly (no per-shard
+            // tenant cloning).
+            return self.set.simulate(&self.merged, self.opts);
+        }
+        self.simulate_devices()
+            .into_iter()
+            .max_by(|a, b| {
+                a.makespan_us
+                    .partial_cmp(&b.makespan_us)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .unwrap_or_else(|| self.set.simulate(&self.merged, self.opts))
+    }
+
+    /// Simulate every device's shard independently (empty devices report
+    /// a zero-makespan outcome).
+    pub fn simulate_devices(&self) -> Vec<SimOutcome> {
+        (0..self.n_devices)
+            .map(|d| {
+                self.set
+                    .shard(&self.sharded.placement, d)
+                    .simulate(&self.sharded.shards[d], self.opts)
+            })
+            .collect()
     }
 
     fn index_of(&self, id: TenantId) -> Result<usize> {
@@ -285,6 +442,9 @@ impl GacerEngine {
         self.admit_with(dfg, Some(family.to_string()), policy)
     }
 
+    /// Cross-device admission control: place the newcomer on the least
+    /// loaded device (cost-model load, [`Placement::least_loaded`]), grow
+    /// that shard's plan, and incrementally re-search **only that shard**.
     fn admit_with(
         &mut self,
         dfg: Dfg,
@@ -295,50 +455,92 @@ impl GacerEngine {
         let id = TenantId(self.next_id);
         self.next_id += 1;
         let name = dfg.name.clone();
-        let level = self.plan.pointers.pointers_per_tenant();
-        self.plan.push_tenant(dfg.len(), level);
+        let dfg_len = dfg.len();
+        let device = self.sharded.placement.least_loaded(&self.set);
+        let slot = self.set.len();
         self.set.admit(dfg);
         self.meta.push(TenantMeta { id, name, family, policy });
-        self.research_from_current();
+        self.sharded.placement.assign(slot, device);
+        // The newcomer lands at the end of the device's local order (its
+        // global slot is the largest), so push_tenant's slot matches.
+        let level = self.sharded.shards[device].pointers.pointers_per_tenant();
+        self.sharded.shards[device].push_tenant(dfg_len, level);
+        self.research_shard(device);
         Ok(id)
     }
 
-    /// Evict a tenant by id; the surviving tenants are incrementally
-    /// re-planned. Returns the evicted DFG.
+    /// Evict a tenant by id; **only the shard that lost the tenant** is
+    /// incrementally re-planned (evicting the last tenant on a device
+    /// simply leaves that device empty). Returns the evicted DFG.
     pub fn evict(&mut self, id: TenantId) -> Result<Dfg> {
         let idx = self.index_of(id)?;
+        let (device, local) = self
+            .sharded
+            .placement
+            .locate(idx)
+            .ok_or_else(|| Error::InvalidPlan(format!("tenant {id} has no device")))?;
         self.meta.remove(idx);
-        self.plan.remove_tenant(idx);
         let dfg = self.set.evict(idx);
-        self.research_from_current();
+        self.sharded.placement.remove_slot(idx);
+        self.sharded.shards[device].remove_tenant(local);
+        self.research_shard(device);
         Ok(dfg)
     }
 
-    /// Run a full cold search (Algorithm 1 from the unregulated plan),
-    /// replacing the current plan.
+    /// Run a full cold re-plan: recompute the balanced placement across
+    /// all devices and run Algorithm 1 from the unregulated plan on every
+    /// shard, replacing the current sharded plan.
     pub fn replan(&mut self) {
         if self.set.is_empty() {
-            self.plan = DeploymentPlan::unregulated(0);
+            let empty = Placement::from_assignments(vec![Vec::new(); self.n_devices]);
+            self.sharded = ShardedDeploymentPlan::unregulated(empty);
+            self.merged = DeploymentPlan::unregulated(0);
+            self.reports = (0..self.n_devices).map(|_| None).collect();
             self.last_report = None;
+            self.last_searched_device = None;
             return;
         }
-        let report = GacerSearch::new(&self.set, self.opts, self.search_cfg).run();
-        self.plan = report.plan.clone();
-        self.last_report = Some(report);
+        let report = ShardedSearch::new(&self.set, self.opts, self.search_cfg)
+            .run(self.n_devices);
+        let bottleneck = report.bottleneck_device();
+        self.last_report =
+            bottleneck.and_then(|d| report.reports[d].clone());
+        self.last_searched_device = bottleneck;
+        self.reports = report.reports;
+        self.sharded = report.plan;
+        self.rebuild_merged();
     }
 
-    /// Incremental re-search seeded with the current (already re-shaped)
-    /// plan.
-    fn research_from_current(&mut self) {
-        if self.set.is_empty() {
-            self.plan = DeploymentPlan::unregulated(0);
-            self.last_report = None;
-            return;
+    /// Incremental re-search of one shard, seeded with its current
+    /// (already re-shaped) plan. Other shards are left untouched.
+    fn research_shard(&mut self, device: usize) {
+        let seed = self.sharded.shards[device].clone();
+        let report = ShardedSearch::new(&self.set, self.opts, self.search_cfg)
+            .research_device(&self.sharded.placement, device, seed);
+        match report {
+            Some(report) => {
+                self.sharded.shards[device] = report.plan.clone();
+                self.reports[device] = Some(report.clone());
+                self.last_report = Some(report);
+            }
+            None => {
+                // The device is now empty: no search ran, so there is no
+                // report for this event (a stale previous report must not
+                // be attributed to it).
+                self.sharded.shards[device] = DeploymentPlan::unregulated(0);
+                self.reports[device] = None;
+                self.last_report = None;
+            }
         }
-        let report = GacerSearch::new(&self.set, self.opts, self.search_cfg)
-            .run_from(self.plan.clone());
-        self.plan = report.plan.clone();
-        self.last_report = Some(report);
+        self.last_searched_device = Some(device);
+        self.rebuild_merged();
+    }
+
+    fn rebuild_merged(&mut self) {
+        self.merged = self
+            .sharded
+            .merged()
+            .expect("engine keeps the placement covering every slot");
     }
 
     fn family_variants(&self) -> Result<Vec<Vec<usize>>> {
@@ -364,16 +566,8 @@ impl GacerEngine {
             .collect()
     }
 
-    /// Lower the current searched plan to the serving configuration.
-    pub fn deployment(&self) -> Result<Deployment> {
-        self.deployment_of(&self.plan)
-    }
-
-    /// Lower an arbitrary plan (e.g. the unregulated baseline) to the
-    /// serving configuration — useful for A/B deployment comparisons.
-    pub fn deployment_of(&self, plan: &DeploymentPlan) -> Result<Deployment> {
-        let specs: Vec<(String, String, BatchPolicy)> = self
-            .meta
+    fn serving_specs(&self) -> Result<Vec<(String, String, BatchPolicy)>> {
+        self.meta
             .iter()
             .map(|m| {
                 Ok((
@@ -389,20 +583,90 @@ impl GacerEngine {
                     m.policy.clone(),
                 ))
             })
-            .collect::<Result<_>>()?;
+            .collect()
+    }
+
+    /// Lower the current searched plan to the serving configuration.
+    ///
+    /// Single-device engines only: a sharded engine has one configuration
+    /// *per device* — use [`GacerEngine::sharded_deployment`].
+    pub fn deployment(&self) -> Result<Deployment> {
+        if self.n_devices > 1 {
+            return Err(Error::InvalidConfig(format!(
+                "engine is sharded across {} devices: use sharded_deployment()",
+                self.n_devices
+            )));
+        }
+        self.deployment_of(&self.merged)
+    }
+
+    /// Lower an arbitrary whole-set plan (e.g. the unregulated baseline)
+    /// to a single-server configuration — useful for A/B deployment
+    /// comparisons.
+    pub fn deployment_of(&self, plan: &DeploymentPlan) -> Result<Deployment> {
+        let specs = self.serving_specs()?;
         lower_plan(plan, &self.set.tenants, &specs, &self.family_variants()?, self.tick)
+    }
+
+    /// Lower the sharded plan per device: one [`Deployment`] per shard
+    /// plus the global-slot routing table — what [`ClusterServer::start`]
+    /// consumes. Works for any device count (a 1-device engine yields a
+    /// 1-entry cluster).
+    pub fn sharded_deployment(&self) -> Result<ShardedDeployment> {
+        let specs = self.serving_specs()?;
+        let variants = self.family_variants()?;
+        let placement = &self.sharded.placement;
+        let mut per_device = Vec::with_capacity(self.n_devices);
+        for d in 0..self.n_devices {
+            let tenants = placement.select(&self.set.tenants, d);
+            let dspecs = placement.select(&specs, d);
+            let dvariants = placement.select(&variants, d);
+            per_device.push(lower_plan(
+                &self.sharded.shards[d],
+                &tenants,
+                &dspecs,
+                &dvariants,
+                self.tick,
+            )?);
+        }
+        let routing = (0..self.set.len())
+            .map(|slot| {
+                placement.locate(slot).ok_or_else(|| {
+                    Error::InvalidPlan(format!("slot {slot} has no device"))
+                })
+            })
+            .collect::<Result<_>>()?;
+        Ok(ShardedDeployment { per_device, routing })
+    }
+
+    fn artifact_dir_str(&self) -> Result<String> {
+        self.artifact_dir
+            .as_ref()
+            .map(|d| d.to_string_lossy().into_owned())
+            .ok_or_else(|| Error::InvalidConfig("engine has no artifact dir".into()))
     }
 
     /// Start the serving coordinator off the searched plan: the single
     /// call that takes "tenants admitted" to "requests served under
-    /// granularity regulation".
+    /// granularity regulation". Single-device engines only — a sharded
+    /// engine serves through [`GacerEngine::serve_cluster`].
     pub fn serve(&self) -> Result<Server> {
-        let dir = self
-            .artifact_dir
-            .as_ref()
-            .ok_or_else(|| Error::InvalidConfig("engine has no artifact dir".into()))?;
+        let dir = self.artifact_dir_str()?;
         let deployment = self.deployment()?;
-        Server::start(&dir.to_string_lossy(), deployment.tenants, deployment.config)
+        Server::start(&dir, deployment.tenants, deployment.config)
+    }
+
+    /// Start one [`Server`] per device behind a routing [`ClusterServer`]
+    /// front-end — the sharded counterpart of [`GacerEngine::serve`].
+    pub fn serve_cluster(&self) -> Result<ClusterServer> {
+        let dir = self.artifact_dir_str()?;
+        let sharded = self.sharded_deployment()?;
+        let per_device = sharded
+            .per_device
+            .into_iter()
+            .map(|d| (d.tenants, d.config))
+            .collect();
+        ClusterServer::start(&dir, per_device, sharded.routing)
     }
 }
 
@@ -554,6 +818,108 @@ mod tests {
         engine.admit(zoo::build_default("R18").unwrap()).unwrap();
         assert_eq!(engine.len(), 1);
         engine.plan().validate(engine.tenants()).unwrap();
+    }
+
+    fn demo_sharded(names: &[&str], devices: usize) -> GacerEngine {
+        let mut b = GacerEngine::builder().devices(devices).search(quick_cfg());
+        for n in names {
+            b = b.tenant(zoo::build_default(n).unwrap());
+        }
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn sharded_build_validates_and_merges() {
+        let engine = demo_sharded(&["Alex", "V16", "R18"], 2);
+        assert_eq!(engine.n_devices(), 2);
+        engine.sharded_plan().validate(engine.tenants()).unwrap();
+        engine.plan().validate(engine.tenants()).unwrap();
+        // Every occupied device carries a search report.
+        for d in 0..2 {
+            let occupied = !engine.placement().tenants_on(d).is_empty();
+            assert_eq!(engine.device_reports()[d].is_some(), occupied);
+        }
+        assert_eq!(engine.simulate_devices().len(), 2);
+    }
+
+    #[test]
+    fn one_device_engine_behaves_classically() {
+        let engine = demo_sharded(&["Alex", "R18"], 1);
+        assert_eq!(engine.n_devices(), 1);
+        assert_eq!(engine.placement().tenants_on(0), &[0, 1]);
+        // The merged plan IS the single shard.
+        assert_eq!(engine.plan(), &engine.sharded_plan().shards[0]);
+        // simulate() equals the classic whole-set simulation.
+        let classic = engine.simulate();
+        assert_eq!(engine.simulate_devices()[0], classic);
+    }
+
+    #[test]
+    fn admit_researches_only_the_affected_shard() {
+        let mut engine = demo_sharded(&["Alex", "V16", "R18"], 2);
+        let before = engine.sharded_plan().clone();
+        let id = engine.admit(zoo::build_default("M3").unwrap()).unwrap();
+        let device = engine.device_of(id).unwrap();
+        assert_eq!(engine.last_searched_device(), Some(device));
+        // The other device's shard plan is bit-identical: it was not
+        // re-searched.
+        let other = 1 - device;
+        assert_eq!(
+            engine.sharded_plan().shards[other], before.shards[other],
+            "untouched shard must not change on admit"
+        );
+        engine.sharded_plan().validate(engine.tenants()).unwrap();
+    }
+
+    #[test]
+    fn evict_last_tenant_on_a_device_leaves_it_empty() {
+        // Two tenants on two devices: each is alone on its device.
+        let mut engine = demo_sharded(&["Alex", "R18"], 2);
+        let ids = engine.tenant_ids();
+        let d0 = engine.device_of(ids[0]).unwrap();
+        let d1 = engine.device_of(ids[1]).unwrap();
+        assert_ne!(d0, d1, "balanced placement spreads 2 tenants over 2 devices");
+
+        let before = engine.sharded_plan().clone();
+        engine.evict(ids[0]).unwrap();
+        assert_eq!(engine.len(), 1);
+        assert_eq!(engine.last_searched_device(), Some(d0));
+        assert!(engine.placement().tenants_on(d0).is_empty());
+        assert!(engine.device_reports()[d0].is_none());
+        // The surviving device was not re-searched.
+        assert_eq!(engine.sharded_plan().shards[d1], before.shards[d1]);
+        engine.sharded_plan().validate(engine.tenants()).unwrap();
+
+        // Admission control refills the now-empty device.
+        let id = engine.admit(zoo::build_default("M3").unwrap()).unwrap();
+        assert_eq!(engine.device_of(id).unwrap(), d0);
+        engine.sharded_plan().validate(engine.tenants()).unwrap();
+    }
+
+    #[test]
+    fn more_devices_than_tenants_is_fine() {
+        let engine = demo_sharded(&["Alex"], 4);
+        engine.sharded_plan().validate(engine.tenants()).unwrap();
+        assert_eq!(engine.n_devices(), 4);
+        let occupied: Vec<usize> = (0..4)
+            .filter(|&d| !engine.placement().tenants_on(d).is_empty())
+            .collect();
+        assert_eq!(occupied.len(), 1);
+        assert_eq!(engine.device_reports().iter().flatten().count(), 1);
+        // Empty devices simulate to a zero makespan; the bottleneck is
+        // the occupied one.
+        let sims = engine.simulate_devices();
+        assert!(sims[occupied[0]].makespan_us > 0.0);
+        assert_eq!(engine.simulate().makespan_us, sims[occupied[0]].makespan_us);
+    }
+
+    #[test]
+    fn multi_device_deployment_requires_sharded_api() {
+        let engine = demo_sharded(&["Alex", "R18"], 2);
+        match engine.deployment() {
+            Err(Error::InvalidConfig(_)) => {}
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
     }
 
     #[test]

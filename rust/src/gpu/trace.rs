@@ -102,7 +102,7 @@ impl UtilTrace {
         out
     }
 
-    /// Render a compact ASCII sparkline of the trace (reports/EXPERIMENTS).
+    /// Render a compact ASCII sparkline of the trace (for logs/reports).
     pub fn sparkline(&self, bins: usize) -> String {
         const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
         self.resample(bins)

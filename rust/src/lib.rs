@@ -17,10 +17,16 @@
 //!   fused element-wise) inside the Layer-2 functions.
 //!
 //! The deployment flow is `GacerEngine::builder().platform(..)
-//! .artifacts(..).tenant(..).build()` → search → [`engine::Deployment`] →
-//! [`coordinator::Server`]; see `DESIGN.md` for the layer map and the
-//! engine API contract. Errors at every public boundary are the typed
-//! [`Error`] enum.
+//! .artifacts(..).devices(..).tenant(..).build()` → placement
+//! ([`plan::Placement`]) → per-device search → [`plan::ShardedDeploymentPlan`]
+//! → [`engine::ShardedDeployment`] → one [`coordinator::Server`] per device
+//! behind a [`coordinator::ClusterServer`]. With the default single device
+//! this collapses to the classic pipeline: search →
+//! [`engine::Deployment`] → [`coordinator::Server`]. See `DESIGN.md` for
+//! the layer map and the engine↔server lowering contract, and
+//! `docs/TUTORIAL.md` for an end-to-end walkthrough (mirrored by
+//! `examples/sharded_serving.rs`). Errors at every public boundary are
+//! the typed [`Error`] enum.
 
 pub mod baselines;
 pub mod bench_util;
@@ -45,14 +51,19 @@ pub use error::{Error, Result};
 /// flow used by examples, benches, and the CLI.
 pub mod prelude {
     pub use crate::baselines::{Baseline, BaselineKind};
+    pub use crate::coordinator::ClusterServer;
     pub use crate::dfg::{Dfg, OpId, OpKind, Operator};
-    pub use crate::engine::{Deployment, EngineBuilder, GacerEngine, TenantId};
+    pub use crate::engine::{
+        Deployment, EngineBuilder, GacerEngine, ShardedDeployment, TenantId,
+    };
     pub use crate::error::{Error, Result};
     pub use crate::gpu::{GpuSim, SimOutcome, SimOptions};
     pub use crate::models::zoo;
-    pub use crate::plan::{DeploymentPlan, TenantSet};
+    pub use crate::plan::{DeploymentPlan, Placement, ShardedDeploymentPlan, TenantSet};
     pub use crate::profile::{CostModel, Platform};
-    pub use crate::search::{GacerSearch, SearchConfig, SearchReport};
+    pub use crate::search::{
+        GacerSearch, SearchConfig, SearchReport, ShardedSearch, ShardedSearchReport,
+    };
     pub use crate::spatial::SpatialRegulator;
     pub use crate::temporal::PointerMatrix;
 }

@@ -1,10 +1,16 @@
 //! `gacer` — the GACER leader binary: simulate combos, run the regulation
-//! search, and serve multi-tenant inference over real AOT artifacts.
+//! search (optionally sharded across devices), and serve multi-tenant
+//! inference over real AOT artifacts on one GPU or a device pool.
 //!
 //! Subcommands:
 //!   gacer simulate [--models R50,V16,M3] [--platform TitanV]
-//!   gacer search   [--models R50,V16,M3] [--platform TitanV] [--max-pointers 6]
-//!   gacer serve    [--artifacts artifacts] [--requests 64] [--tenants tiny_cnn,tiny_cnn,tiny_cnn]
+//!   gacer search   [--models R50,V16,M3] [--platform TitanV] [--max-pointers 6] [--devices 1]
+//!   gacer serve    [--artifacts artifacts] [--requests 64] [--tenants tiny_cnn,...] [--devices 1]
+//!
+//! `--devices N` gives the deployment a device dimension: tenants are
+//! placed across N devices (cost-model bin-packing), each device gets its
+//! own granularity-aware search, and `serve` runs one coordinator per
+//! device behind a routing front-end.
 
 use gacer::baselines::BaselineKind;
 use gacer::bench_util::{fig7_header, fig7_row, run_combo};
@@ -12,13 +18,18 @@ use gacer::gpu::SimOptions;
 use gacer::models::zoo;
 use gacer::plan::TenantSet;
 use gacer::profile::{CostModel, Platform};
-use gacer::search::{GacerSearch, SearchConfig};
+use gacer::search::{GacerSearch, SearchConfig, ShardedSearch};
 use gacer::util::cli::Args;
 
 const USAGE: &str = "usage: gacer <simulate|search|serve> [options]
   simulate --models R50,V16,M3 --platform TitanV
-  search   --models R50,V16,M3 --platform TitanV --max-pointers 6
-  serve    --artifacts artifacts --requests 64 --tenants tiny_cnn,tiny_cnn,tiny_cnn";
+  search   --models R50,V16,M3 --platform TitanV --max-pointers 6 --devices 1
+  serve    --artifacts artifacts --requests 64 --tenants tiny_cnn,tiny_cnn,tiny_cnn --devices 1
+
+  --devices N   shard the deployment across N devices: tenants are placed
+                by cost-model bin-packing, each device is searched
+                independently, and serving runs one coordinator per device
+                behind a placement-routing front-end (default 1)";
 
 fn parse_models(s: &str) -> Vec<String> {
     s.split(',').map(|m| m.trim().to_string()).collect()
@@ -57,6 +68,37 @@ fn main() -> gacer::Result<()> {
                 max_pointers: args.opt_usize("max-pointers", 6),
                 ..Default::default()
             };
+            let devices = args.opt_usize("devices", 1).max(1);
+            if devices > 1 {
+                let report = ShardedSearch::new(&ts, SimOptions::for_platform(&platform), cfg)
+                    .run(devices);
+                println!(
+                    "combo {} on {} x{}: cluster makespan {:.2}ms \
+                     (bottleneck device {}), {} evaluations in {:?}",
+                    zoo::combo_label(&refs),
+                    platform.name,
+                    devices,
+                    report.cluster_makespan_us() / 1e3,
+                    report.bottleneck_device().unwrap_or(0),
+                    report.total_evaluations(),
+                    report.elapsed
+                );
+                for d in 0..devices {
+                    let slots = report.plan.placement.tenants_on(d);
+                    let names: Vec<&str> =
+                        slots.iter().map(|&s| tenants[s].name.as_str()).collect();
+                    match &report.reports[d] {
+                        Some(r) => println!(
+                            "  device {d}: {names:?}  {:.2}ms -> {:.2}ms ({:.2}x)",
+                            r.initial.makespan_us / 1e3,
+                            r.outcome.makespan_us / 1e3,
+                            r.speedup_vs_initial()
+                        ),
+                        None => println!("  device {d}: idle"),
+                    }
+                }
+                return Ok(());
+            }
             let report = GacerSearch::new(&ts, SimOptions::for_platform(&platform), cfg).run();
             println!(
                 "combo {} on {}: {:.2}ms -> {:.2}ms ({:.2}x), {} evaluations in {:?}",
@@ -87,8 +129,9 @@ fn main() -> gacer::Result<()> {
         "serve" => {
             let artifacts = args.opt_or("artifacts", "artifacts").to_string();
             let requests = args.opt_usize("requests", 64);
+            let devices = args.opt_usize("devices", 1).max(1);
             let tenants = parse_models(args.opt_or("tenants", "tiny_cnn,tiny_cnn,tiny_cnn"));
-            gacer::coordinator::serve_demo(&artifacts, &tenants, requests)?;
+            gacer::coordinator::serve_demo(&artifacts, &tenants, requests, devices)?;
         }
         other => {
             eprintln!("unknown command: {other}\n{USAGE}");

@@ -55,7 +55,7 @@ impl LatencyHistogram {
         self.samples_us.iter().copied().fold(0.0, f64::max)
     }
 
-    /// One-line summary for logs/EXPERIMENTS.md.
+    /// One-line summary for logs and serving reports.
     pub fn summary(&self) -> String {
         format!(
             "n={} mean={:.1}us p50={:.1}us p99={:.1}us max={:.1}us",

@@ -1,5 +1,6 @@
 //! Deployment plans: the joint spatial/temporal configuration GACER
-//! searches over, and its compilation to simulator streams.
+//! searches over, its multi-device sharding, and its compilation to
+//! simulator streams.
 //!
 //! A [`DeploymentPlan`] carries the paper's three decision structures:
 //! the decomposition `mask` + `list_B` per operator (§4.2) and the pointer
@@ -7,6 +8,31 @@
 //! into per-stream [`SimOp`] sequences, inserting the chunk/concat overhead
 //! operators that batch decomposition costs and assigning each op its
 //! segment (cluster) index from the pointer positions.
+//!
+//! For multi-GPU deployments the plan grows a **device dimension**: a
+//! [`Placement`] assigns every tenant slot to one device (cost-model-driven
+//! bin-packing with a load-balance objective), and a
+//! [`ShardedDeploymentPlan`] carries one independently searched
+//! [`DeploymentPlan`] per device. GACER's regulation stays strictly
+//! per-GPU — sharding decides *where* a tenant runs, the per-shard plan
+//! decides *how* it is regulated there.
+//!
+//! ```
+//! use gacer::models::zoo;
+//! use gacer::plan::{DeploymentPlan, Placement, ShardedDeploymentPlan, TenantSet};
+//! use gacer::profile::{CostModel, Platform};
+//!
+//! let tenants = zoo::build_combo(&["Alex", "R18"]);
+//! let set = TenantSet::new(tenants, CostModel::new(Platform::titan_v()));
+//! // Single device: the classic plan shape.
+//! let plan = DeploymentPlan::unregulated(set.len());
+//! plan.validate(&set.tenants).unwrap();
+//! // Two devices: a placement plus one plan per shard.
+//! let placement = Placement::balanced(&set, 2);
+//! let sharded = ShardedDeploymentPlan::unregulated(placement);
+//! sharded.validate(&set.tenants).unwrap();
+//! assert_eq!(sharded.n_devices(), 2);
+//! ```
 
 use std::collections::BTreeMap;
 
@@ -103,6 +129,279 @@ impl DeploymentPlan {
     }
 }
 
+/// Assignment of tenant slots to devices — the placement stage of a
+/// multi-GPU deployment.
+///
+/// GACER's regulation (chunking + pointers) is formulated per-GPU; scaling
+/// to a device pool therefore splits into two decisions, VELTAIR-style:
+/// *placement* (which device serves which tenant — this type) and
+/// *regulation* (the per-device [`DeploymentPlan`] a per-shard search
+/// produces). A placement is a partition of the global tenant slots
+/// `0..n_tenants`: [`Placement::validate`] rejects assignments that place a
+/// slot on two devices or on none.
+///
+/// Slot indices are *global* (positions in the deployed [`TenantSet`]);
+/// each device sees its tenants through *local* indices — the position of
+/// a slot within [`Placement::tenants_on`]. Per-device lists are kept in
+/// ascending global order, so local order is stable and deterministic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    /// Global tenant slots per device (outer index = device).
+    assignments: Vec<Vec<usize>>,
+}
+
+impl Placement {
+    /// Everything on one device — the degenerate placement that reproduces
+    /// the single-GPU deployment exactly.
+    pub fn single_device(n_tenants: usize) -> Self {
+        Placement { assignments: vec![(0..n_tenants).collect()] }
+    }
+
+    /// A placement from explicit per-device slot lists (each inner list is
+    /// sorted; call [`Placement::validate`] to check partition-ness).
+    pub fn from_assignments(mut assignments: Vec<Vec<usize>>) -> Self {
+        for a in &mut assignments {
+            a.sort_unstable();
+        }
+        Placement { assignments }
+    }
+
+    /// Cost-model-driven bin-packing with a load-balance objective:
+    /// tenants are ordered by decreasing serial latency (the cost model's
+    /// `T(O^B)` summed over the DFG) and greedily assigned to the least
+    /// loaded device — the classic LPT heuristic, deterministic for a
+    /// given tenant set.
+    ///
+    /// With more devices than tenants the surplus devices stay empty; with
+    /// `n_devices == 1` this degenerates to [`Placement::single_device`].
+    pub fn balanced(set: &TenantSet, n_devices: usize) -> Self {
+        let n_devices = n_devices.max(1);
+        let weights: Vec<f64> = set
+            .tenants
+            .iter()
+            .map(|d| set.cost.sequential_latency_us(d))
+            .collect();
+        let mut order: Vec<usize> = (0..set.len()).collect();
+        order.sort_by(|&a, &b| {
+            weights[b]
+                .partial_cmp(&weights[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut assignments = vec![Vec::new(); n_devices];
+        let mut loads = vec![0.0f64; n_devices];
+        for slot in order {
+            let device = (0..n_devices)
+                .min_by(|&a, &b| {
+                    loads[a]
+                        .partial_cmp(&loads[b])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .unwrap();
+            assignments[device].push(slot);
+            loads[device] += weights[slot];
+        }
+        Self::from_assignments(assignments)
+    }
+
+    /// Number of devices (bins), including empty ones.
+    pub fn n_devices(&self) -> usize {
+        self.assignments.len()
+    }
+
+    /// Total tenant slots placed across all devices.
+    pub fn n_tenants(&self) -> usize {
+        self.assignments.iter().map(Vec::len).sum()
+    }
+
+    /// Global tenant slots on `device`, in ascending order.
+    pub fn tenants_on(&self, device: usize) -> &[usize] {
+        self.assignments.get(device).map_or(&[], |a| a.as_slice())
+    }
+
+    /// Locate a global slot: `(device, local index)`.
+    pub fn locate(&self, slot: usize) -> Option<(usize, usize)> {
+        self.assignments
+            .iter()
+            .enumerate()
+            .find_map(|(d, a)| a.iter().position(|&s| s == slot).map(|l| (d, l)))
+    }
+
+    /// The device a global slot is placed on.
+    pub fn device_of(&self, slot: usize) -> Option<usize> {
+        self.locate(slot).map(|(d, _)| d)
+    }
+
+    /// Place a (newly admitted) global slot on `device`, keeping the
+    /// device's list sorted.
+    pub fn assign(&mut self, slot: usize, device: usize) {
+        let a = &mut self.assignments[device];
+        let at = a.partition_point(|&s| s < slot);
+        a.insert(at, slot);
+    }
+
+    /// Remove a global slot (eviction) and shift the later slots down —
+    /// mirroring [`TenantSet::evict`]'s index compaction. Returns the
+    /// device the slot was placed on.
+    pub fn remove_slot(&mut self, slot: usize) -> Option<usize> {
+        let (device, local) = self.locate(slot)?;
+        self.assignments[device].remove(local);
+        for a in &mut self.assignments {
+            for s in a.iter_mut() {
+                if *s > slot {
+                    *s -= 1;
+                }
+            }
+        }
+        Some(device)
+    }
+
+    /// Per-device load under the cost model: summed serial latency of the
+    /// placed tenants (the bin-packing objective's bin heights).
+    pub fn loads(&self, set: &TenantSet) -> Vec<f64> {
+        self.assignments
+            .iter()
+            .map(|a| {
+                a.iter()
+                    .map(|&s| set.cost.sequential_latency_us(&set.tenants[s]))
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// The least loaded device under the cost model — where cross-device
+    /// admission control places a newcomer (ties break toward the lowest
+    /// device index).
+    pub fn least_loaded(&self, set: &TenantSet) -> usize {
+        let loads = self.loads(set);
+        (0..self.n_devices())
+            .min_by(|&a, &b| {
+                loads[a]
+                    .partial_cmp(&loads[b])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .unwrap_or(0)
+    }
+
+    /// Project a global per-tenant sequence down to `device`'s tenants, in
+    /// local order (used to build per-shard tenant sets, specs, variants).
+    pub fn select<T: Clone>(&self, items: &[T], device: usize) -> Vec<T> {
+        self.tenants_on(device).iter().map(|&s| items[s].clone()).collect()
+    }
+
+    /// Check the placement is a partition of `0..n_tenants`: every slot
+    /// appears on exactly one device and no slot is out of range.
+    pub fn validate(&self, n_tenants: usize) -> Result<()> {
+        if self.assignments.is_empty() {
+            return Err(Error::InvalidPlan("placement has zero devices".into()));
+        }
+        let mut owner: Vec<Option<usize>> = vec![None; n_tenants];
+        for (d, a) in self.assignments.iter().enumerate() {
+            for &s in a {
+                if s >= n_tenants {
+                    return Err(Error::InvalidPlan(format!(
+                        "placement puts slot {s} on device {d}, only {n_tenants} tenants"
+                    )));
+                }
+                if let Some(prev) = owner[s].replace(d) {
+                    return Err(Error::InvalidPlan(format!(
+                        "placement puts slot {s} on devices {prev} and {d}"
+                    )));
+                }
+            }
+        }
+        if let Some(s) = owner.iter().position(Option::is_none) {
+            return Err(Error::InvalidPlan(format!(
+                "placement leaves slot {s} unassigned"
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// A multi-device deployment configuration: the [`Placement`] plus one
+/// independently searched [`DeploymentPlan`] per device.
+///
+/// Each shard plan is expressed in the device's *local* tenant indices
+/// (position within [`Placement::tenants_on`]); [`Self::merged`] projects
+/// the shards back onto global slot order, which is what keeps the
+/// single-device plan APIs working unchanged on a sharded engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardedDeploymentPlan {
+    /// Which device serves which tenant slot.
+    pub placement: Placement,
+    /// One regulation plan per device, in the device's local tenant order.
+    pub shards: Vec<DeploymentPlan>,
+}
+
+impl ShardedDeploymentPlan {
+    /// The unregulated sharded plan for a placement: every shard starts at
+    /// Stream-Parallel (no chunking, no pointers).
+    pub fn unregulated(placement: Placement) -> Self {
+        let shards = (0..placement.n_devices())
+            .map(|d| DeploymentPlan::unregulated(placement.tenants_on(d).len()))
+            .collect();
+        ShardedDeploymentPlan { placement, shards }
+    }
+
+    /// Number of devices (== shard count).
+    pub fn n_devices(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Validate the device dimension and every shard:
+    ///
+    /// * the placement must partition `0..tenants.len()` (overlapping or
+    ///   missing tenant assignments are rejected);
+    /// * there must be exactly one shard plan per device;
+    /// * each shard plan must validate against its device's tenants
+    ///   (chunk sums, pointer ranges — [`DeploymentPlan::validate`]).
+    pub fn validate(&self, tenants: &[Dfg]) -> Result<()> {
+        self.placement.validate(tenants.len())?;
+        if self.shards.len() != self.placement.n_devices() {
+            return Err(Error::InvalidPlan(format!(
+                "{} shard plans for {} devices",
+                self.shards.len(),
+                self.placement.n_devices()
+            )));
+        }
+        for (d, shard) in self.shards.iter().enumerate() {
+            let local = self.placement.select(tenants, d);
+            shard.validate(&local).map_err(|e| {
+                Error::InvalidPlan(format!("device {d}: {e}"))
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Project the shards back onto global slot order: one chunk map and
+    /// pointer list per global tenant, pulled from the tenant's shard.
+    ///
+    /// The merged plan drops the device dimension (it says nothing about
+    /// which tenants contend), but it is exactly the right shape for
+    /// per-tenant introspection and for validating against the full
+    /// tenant set. Fails when the placement does not cover every slot.
+    pub fn merged(&self) -> Result<DeploymentPlan> {
+        let n = self.placement.n_tenants();
+        let mut chunking = Vec::with_capacity(n);
+        let mut lists = Vec::with_capacity(n);
+        for slot in 0..n {
+            let (d, l) = self.placement.locate(slot).ok_or_else(|| {
+                Error::InvalidPlan(format!("placement leaves slot {slot} unassigned"))
+            })?;
+            let shard = self.shards.get(d).ok_or_else(|| {
+                Error::InvalidPlan(format!("no shard plan for device {d}"))
+            })?;
+            chunking.push(shard.chunking.get(l).cloned().unwrap_or_default());
+            lists.push(shard.pointers.list(l).to_vec());
+        }
+        Ok(DeploymentPlan {
+            chunking,
+            pointers: PointerMatrix::from_lists(lists),
+        })
+    }
+}
+
 /// A set of tenant DFGs deployed together, with the cost model that prices
 /// their operators.
 ///
@@ -138,6 +437,12 @@ impl TenantSet {
     /// Remove the tenant at `index` (later slots shift down).
     pub fn evict(&mut self, index: usize) -> Dfg {
         self.tenants.remove(index)
+    }
+
+    /// The sub-set of tenants placed on `device` (cloned DFGs + the shared
+    /// cost model) — the per-device search input of a sharded deployment.
+    pub fn shard(&self, placement: &Placement, device: usize) -> TenantSet {
+        TenantSet::new(placement.select(&self.tenants, device), self.cost.clone())
     }
 
     /// Lower tenants + plan to staged simulator streams.
@@ -404,6 +709,149 @@ mod tests {
         let mut plan = DeploymentPlan::unregulated(3);
         plan.chunking[0].insert(0, vec![8, 0]);
         assert!(plan.validate(&tenants).is_err());
+    }
+
+    #[test]
+    fn balanced_placement_partitions_and_balances() {
+        let (tenants, cost) = setup();
+        let set = TenantSet::new(tenants, cost);
+        let p = Placement::balanced(&set, 2);
+        p.validate(set.len()).unwrap();
+        assert_eq!(p.n_devices(), 2);
+        assert_eq!(p.n_tenants(), 3);
+        // LPT with 3 tenants on 2 devices: no device is left empty.
+        assert!(!p.tenants_on(0).is_empty() && !p.tenants_on(1).is_empty());
+        // Load-balance objective: the bottleneck device carries at most
+        // the heaviest plus the lightest tenant (LPT's shape for 3-on-2).
+        let mut weights: Vec<f64> = set
+            .tenants
+            .iter()
+            .map(|d| set.cost.sequential_latency_us(d))
+            .collect();
+        weights.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let bottleneck = p.loads(&set).into_iter().fold(0.0f64, f64::max);
+        assert!(bottleneck <= weights[0] + weights[2] + 1e-9);
+    }
+
+    #[test]
+    fn single_device_placement_degenerates() {
+        let (tenants, cost) = setup();
+        let set = TenantSet::new(tenants, cost);
+        let p = Placement::balanced(&set, 1);
+        assert_eq!(p, Placement::single_device(3));
+        assert_eq!(p.tenants_on(0), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn more_devices_than_tenants_leaves_empty_bins() {
+        let (tenants, cost) = setup();
+        let set = TenantSet::new(tenants, cost);
+        let p = Placement::balanced(&set, 5);
+        p.validate(3).unwrap();
+        let occupied = (0..5).filter(|&d| !p.tenants_on(d).is_empty()).count();
+        assert_eq!(occupied, 3, "each tenant alone on its own device");
+        let sharded = ShardedDeploymentPlan::unregulated(p);
+        let (tenants, _) = setup();
+        sharded.validate(&tenants).unwrap();
+    }
+
+    #[test]
+    fn placement_validate_rejects_overlap_missing_range() {
+        // Overlap: slot 1 on both devices.
+        let p = Placement::from_assignments(vec![vec![0, 1], vec![1, 2]]);
+        assert!(matches!(p.validate(3), Err(Error::InvalidPlan(_))));
+        // Missing: slot 2 nowhere.
+        let p = Placement::from_assignments(vec![vec![0], vec![1]]);
+        assert!(matches!(p.validate(3), Err(Error::InvalidPlan(_))));
+        // Out of range.
+        let p = Placement::from_assignments(vec![vec![0, 3], vec![1, 2]]);
+        assert!(matches!(p.validate(3), Err(Error::InvalidPlan(_))));
+        // Zero devices.
+        let p = Placement::from_assignments(Vec::new());
+        assert!(p.validate(0).is_err());
+        // A valid partition passes.
+        let p = Placement::from_assignments(vec![vec![2, 0], vec![1]]);
+        p.validate(3).unwrap();
+        assert_eq!(p.tenants_on(0), &[0, 2], "lists kept sorted");
+        assert_eq!(p.locate(2), Some((0, 1)));
+        assert_eq!(p.device_of(1), Some(1));
+    }
+
+    #[test]
+    fn placement_assign_and_remove_shift_slots() {
+        let mut p = Placement::from_assignments(vec![vec![0, 2], vec![1]]);
+        p.assign(3, 1);
+        p.validate(4).unwrap();
+        assert_eq!(p.tenants_on(1), &[1, 3]);
+        // Evicting global slot 1 (device 1): later slots shift down.
+        assert_eq!(p.remove_slot(1), Some(1));
+        p.validate(3).unwrap();
+        assert_eq!(p.tenants_on(0), &[0, 1], "old slot 2 became 1");
+        assert_eq!(p.tenants_on(1), &[2], "old slot 3 became 2");
+        // Removing an unplaced slot reports None.
+        assert_eq!(p.remove_slot(9), None);
+    }
+
+    #[test]
+    fn sharded_validate_checks_shards_and_placement() {
+        let (tenants, cost) = setup();
+        let set = TenantSet::new(tenants.clone(), cost);
+        let placement = Placement::balanced(&set, 2);
+        let mut sharded = ShardedDeploymentPlan::unregulated(placement.clone());
+        sharded.validate(&tenants).unwrap();
+
+        // Shard count mismatch.
+        sharded.shards.pop();
+        assert!(matches!(
+            sharded.validate(&tenants),
+            Err(Error::InvalidPlan(_))
+        ));
+
+        // A shard plan invalid against its local tenants (bad chunk sum).
+        let mut sharded = ShardedDeploymentPlan::unregulated(placement.clone());
+        sharded.shards[0].chunking[0].insert(0, vec![1, 2]);
+        assert!(sharded.validate(&tenants).is_err());
+
+        // Overlapping placement is rejected before shard checks.
+        let mut bad = ShardedDeploymentPlan::unregulated(placement);
+        bad.placement = Placement::from_assignments(vec![vec![0, 1], vec![1, 2]]);
+        assert!(bad.validate(&tenants).is_err());
+    }
+
+    #[test]
+    fn merged_projects_shards_to_global_slots() {
+        let (tenants, _) = setup();
+        // Fixed placement: device 0 = {0, 2}, device 1 = {1}.
+        let placement = Placement::from_assignments(vec![vec![0, 2], vec![1]]);
+        let mut sharded = ShardedDeploymentPlan::unregulated(placement);
+        // Local tenant 1 of device 0 is global slot 2.
+        sharded.shards[0].pointers.set_list(1, vec![4]);
+        sharded.shards[0].chunking[1].insert(0, vec![4, 4]);
+        // Local tenant 0 of device 1 is global slot 1.
+        sharded.shards[1].pointers.set_list(0, vec![7]);
+        sharded.validate(&tenants).unwrap();
+
+        let merged = sharded.merged().unwrap();
+        merged.validate(&tenants).unwrap();
+        assert_eq!(merged.pointers.list(0), &[] as &[usize]);
+        assert_eq!(merged.pointers.list(1), &[7]);
+        assert_eq!(merged.pointers.list(2), &[4]);
+        assert_eq!(merged.chunking[2].get(&0), Some(&vec![4, 4]));
+        assert!(merged.chunking[0].is_empty());
+    }
+
+    #[test]
+    fn tenant_set_shard_selects_local_tenants() {
+        let (tenants, cost) = setup();
+        let set = TenantSet::new(tenants.clone(), cost);
+        let placement = Placement::from_assignments(vec![vec![0, 2], vec![1]]);
+        let d0 = set.shard(&placement, 0);
+        assert_eq!(d0.len(), 2);
+        assert_eq!(d0.tenants[0].name, tenants[0].name);
+        assert_eq!(d0.tenants[1].name, tenants[2].name);
+        let d1 = set.shard(&placement, 1);
+        assert_eq!(d1.len(), 1);
+        assert_eq!(d1.tenants[0].name, tenants[1].name);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! the default build is hermetic (no external crates): manifest handling
 //! and shape checking work everywhere, while `execute_f32`/`warmup`
 //! return [`Error::Backend`] until the feature (and the vendored
-//! `xla_extension` toolchain it needs) is enabled. See DESIGN.md §Runtime.
+//! `xla_extension` toolchain it needs) is enabled. See DESIGN.md §5.
 
 mod manifest;
 

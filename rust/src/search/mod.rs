@@ -18,6 +18,39 @@
 //! The evaluation is modeling-based (simulator, memoized cost lookups) —
 //! no per-candidate hardware profiling — which is what keeps the search in
 //! the seconds-to-minutes band the paper reports in Table 4.
+//!
+//! Multi-GPU deployments add an outer stage: [`ShardedSearch`] places the
+//! tenant set across devices ([`crate::plan::Placement`]) and runs one
+//! independent Algorithm-1 search per device — see the [`sharded`] module.
+//!
+//! ```
+//! use gacer::models::zoo;
+//! use gacer::plan::TenantSet;
+//! use gacer::profile::{CostModel, Platform};
+//! use gacer::gpu::SimOptions;
+//! use gacer::search::{GacerSearch, SearchConfig};
+//!
+//! let platform = Platform::titan_v();
+//! let set = TenantSet::new(
+//!     zoo::build_combo(&["Alex", "M3"]),
+//!     CostModel::new(platform),
+//! );
+//! let cfg = SearchConfig {
+//!     max_pointers: 1,
+//!     rounds_per_level: 1,
+//!     positions_per_coordinate: 4,
+//!     spatial_steps_per_level: 1,
+//!     ..Default::default()
+//! };
+//! let report = GacerSearch::new(&set, SimOptions::for_platform(&platform), cfg).run();
+//! report.plan.validate(&set.tenants).unwrap();
+//! // Algorithm 1 never returns a plan worse than Stream-Parallel.
+//! assert!(report.outcome.objective() <= report.initial.objective() + 1e-6);
+//! ```
+
+pub mod sharded;
+
+pub use sharded::{ShardedSearch, ShardedSearchReport};
 
 use std::time::Instant;
 
@@ -283,7 +316,7 @@ impl<'a> GacerSearch<'a> {
     /// Hot path: pointer moves do not change operator pricing, only
     /// segment assignment — so candidates are evaluated by restamping the
     /// cached compiled streams in place instead of recompiling the plan
-    /// (see EXPERIMENTS.md §Perf).
+    /// (`cargo bench --bench hotpath` times exactly this loop).
     fn descend_coordinate(
         &self,
         plan: &mut DeploymentPlan,

@@ -1,0 +1,227 @@
+//! Device-aware search: placement + one Algorithm-1 run per device.
+//!
+//! GACER regulates concurrency *within* one GPU; a device pool adds an
+//! outer decision — which tenants share a GPU at all. [`ShardedSearch`]
+//! stages the two: first a cost-model-driven [`Placement`] shards the
+//! tenant set across devices (bin-packing with a load-balance objective),
+//! then an independent [`GacerSearch`] runs per shard, producing a
+//! [`ShardedDeploymentPlan`] — one chunk map + pointer matrix per device.
+//! Shards never interact during search (device memory is private and the
+//! simulator models one SM pool), so per-device runs are exact, not an
+//! approximation.
+//!
+//! ```
+//! use gacer::models::zoo;
+//! use gacer::plan::TenantSet;
+//! use gacer::profile::{CostModel, Platform};
+//! use gacer::gpu::SimOptions;
+//! use gacer::search::{SearchConfig, ShardedSearch};
+//!
+//! let platform = Platform::titan_v();
+//! let set = TenantSet::new(
+//!     zoo::build_combo(&["Alex", "M3"]),
+//!     CostModel::new(platform),
+//! );
+//! let cfg = SearchConfig {
+//!     max_pointers: 1,
+//!     rounds_per_level: 1,
+//!     positions_per_coordinate: 4,
+//!     spatial_steps_per_level: 1,
+//!     ..Default::default()
+//! };
+//! let report = ShardedSearch::new(&set, SimOptions::for_platform(&platform), cfg).run(2);
+//! report.plan.validate(&set.tenants).unwrap();
+//! assert_eq!(report.plan.n_devices(), 2);
+//! assert!(report.cluster_makespan_us() > 0.0);
+//! ```
+
+use std::time::{Duration, Instant};
+
+use crate::gpu::SimOptions;
+use crate::plan::{DeploymentPlan, Placement, ShardedDeploymentPlan, TenantSet};
+
+use super::{GacerSearch, SearchConfig, SearchReport};
+
+/// Result of a sharded search: the device-dimensioned plan plus the
+/// per-device Algorithm-1 bookkeeping.
+#[derive(Debug, Clone)]
+pub struct ShardedSearchReport {
+    /// The searched multi-device plan.
+    pub plan: ShardedDeploymentPlan,
+    /// One [`SearchReport`] per device; `None` for devices the placement
+    /// left empty (more devices than tenants).
+    pub reports: Vec<Option<SearchReport>>,
+    /// Wall-clock time across all per-device searches.
+    pub elapsed: Duration,
+}
+
+impl ShardedSearchReport {
+    /// Cluster makespan: the bottleneck device's searched makespan (empty
+    /// devices finish at 0).
+    pub fn cluster_makespan_us(&self) -> f64 {
+        self.reports
+            .iter()
+            .flatten()
+            .map(|r| r.outcome.makespan_us)
+            .fold(0.0, f64::max)
+    }
+
+    /// The device that bounds the cluster makespan, if any tenant is
+    /// deployed.
+    pub fn bottleneck_device(&self) -> Option<usize> {
+        self.reports
+            .iter()
+            .enumerate()
+            .filter_map(|(d, r)| r.as_ref().map(|r| (d, r.outcome.makespan_us)))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(d, _)| d)
+    }
+
+    /// Total simulator evaluations across the per-device searches.
+    pub fn total_evaluations(&self) -> usize {
+        self.reports.iter().flatten().map(|r| r.evaluations).sum()
+    }
+}
+
+/// The placement-then-regulate searcher for multi-GPU deployments.
+pub struct ShardedSearch<'a> {
+    set: &'a TenantSet,
+    opts: SimOptions,
+    cfg: SearchConfig,
+}
+
+impl<'a> ShardedSearch<'a> {
+    pub fn new(set: &'a TenantSet, opts: SimOptions, cfg: SearchConfig) -> Self {
+        ShardedSearch { set, opts, cfg }
+    }
+
+    /// Cold sharded search: compute a balanced placement across
+    /// `n_devices`, then run Algorithm 1 per device.
+    pub fn run(&self, n_devices: usize) -> ShardedSearchReport {
+        self.run_placed(Placement::balanced(self.set, n_devices))
+    }
+
+    /// Cold per-device searches under a caller-fixed placement.
+    pub fn run_placed(&self, placement: Placement) -> ShardedSearchReport {
+        let start = Instant::now();
+        let mut shards = Vec::with_capacity(placement.n_devices());
+        let mut reports = Vec::with_capacity(placement.n_devices());
+        for d in 0..placement.n_devices() {
+            let sub = self.set.shard(&placement, d);
+            if sub.is_empty() {
+                shards.push(DeploymentPlan::unregulated(0));
+                reports.push(None);
+                continue;
+            }
+            let report = GacerSearch::new(&sub, self.opts, self.cfg).run();
+            shards.push(report.plan.clone());
+            reports.push(Some(report));
+        }
+        ShardedSearchReport {
+            plan: ShardedDeploymentPlan { placement, shards },
+            reports,
+            elapsed: start.elapsed(),
+        }
+    }
+
+    /// Incremental single-shard re-search: run Algorithm 1 on `device`'s
+    /// tenants only, seeded with that shard's current (already re-shaped)
+    /// plan — the admit/evict path of a sharded engine. Returns `None`
+    /// when the device is empty (e.g. its last tenant was just evicted).
+    pub fn research_device(
+        &self,
+        placement: &Placement,
+        device: usize,
+        seed: DeploymentPlan,
+    ) -> Option<SearchReport> {
+        let sub = self.set.shard(placement, device);
+        if sub.is_empty() {
+            return None;
+        }
+        Some(GacerSearch::new(&sub, self.opts, self.cfg).run_from(seed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+    use crate::profile::{CostModel, Platform};
+
+    fn quick_cfg() -> SearchConfig {
+        SearchConfig {
+            max_pointers: 1,
+            rounds_per_level: 1,
+            positions_per_coordinate: 4,
+            spatial_steps_per_level: 1,
+            ..Default::default()
+        }
+    }
+
+    fn set(names: &[&str]) -> TenantSet {
+        TenantSet::new(zoo::build_combo(names), CostModel::new(Platform::titan_v()))
+    }
+
+    #[test]
+    fn sharded_run_produces_valid_per_device_plans() {
+        let ts = set(&["Alex", "V16", "R18"]);
+        let opts = SimOptions::for_platform(&Platform::titan_v());
+        let r = ShardedSearch::new(&ts, opts, quick_cfg()).run(2);
+        r.plan.validate(&ts.tenants).unwrap();
+        assert_eq!(r.plan.n_devices(), 2);
+        // Every occupied device carries a report that is never worse than
+        // its own unregulated start.
+        for (d, rep) in r.reports.iter().enumerate() {
+            let occupied = !r.plan.placement.tenants_on(d).is_empty();
+            assert_eq!(rep.is_some(), occupied);
+            if let Some(rep) = rep {
+                assert!(rep.outcome.objective() <= rep.initial.objective() + 1e-6);
+            }
+        }
+        assert!(r.total_evaluations() > 0);
+        assert!(r.cluster_makespan_us() > 0.0);
+        assert!(r.bottleneck_device().is_some());
+    }
+
+    #[test]
+    fn one_device_matches_plain_search_shape() {
+        let ts = set(&["Alex", "R18"]);
+        let opts = SimOptions::for_platform(&Platform::titan_v());
+        let r = ShardedSearch::new(&ts, opts, quick_cfg()).run(1);
+        assert_eq!(r.plan.n_devices(), 1);
+        assert_eq!(r.plan.placement.tenants_on(0), &[0, 1]);
+        // The single shard is a full-set plan: its merged projection is
+        // the shard itself.
+        assert_eq!(r.plan.merged().unwrap(), r.plan.shards[0]);
+    }
+
+    #[test]
+    fn empty_devices_get_empty_plans_and_no_reports() {
+        let ts = set(&["Alex"]);
+        let opts = SimOptions::for_platform(&Platform::titan_v());
+        let r = ShardedSearch::new(&ts, opts, quick_cfg()).run(3);
+        r.plan.validate(&ts.tenants).unwrap();
+        assert_eq!(r.reports.iter().flatten().count(), 1);
+        assert_eq!(r.plan.shards.iter().filter(|s| s.chunking.is_empty()).count(), 2);
+    }
+
+    #[test]
+    fn research_device_touches_one_shard() {
+        let ts = set(&["Alex", "V16", "R18"]);
+        let opts = SimOptions::for_platform(&Platform::titan_v());
+        let search = ShardedSearch::new(&ts, opts, quick_cfg());
+        let cold = search.run(2);
+        let d = cold.bottleneck_device().unwrap();
+        let seeded = search
+            .research_device(&cold.plan.placement, d, cold.plan.shards[d].clone())
+            .unwrap();
+        // Seeded re-search of an already-searched shard must not regress.
+        let coldd = cold.reports[d].as_ref().unwrap();
+        assert!(seeded.outcome.objective() <= coldd.outcome.objective() + 1e-6);
+        // An empty device yields no report.
+        let empty = Placement::from_assignments(vec![vec![0, 1, 2], vec![]]);
+        assert!(search
+            .research_device(&empty, 1, DeploymentPlan::unregulated(0))
+            .is_none());
+    }
+}

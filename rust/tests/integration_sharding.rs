@@ -1,0 +1,231 @@
+//! Integration: the multi-GPU sharded deployment pipeline — placement →
+//! per-device search → `ShardedDeploymentPlan` → per-device lowering —
+//! plus the placement edge cases (degenerate single device, more devices
+//! than tenants, emptying a device) and the acceptance criterion that
+//! tenant churn re-searches only the affected shard.
+//!
+//! Everything here runs on the simulator substrate; no artifacts needed.
+
+use gacer::models::zoo;
+use gacer::prelude::*;
+
+fn quick_cfg() -> SearchConfig {
+    SearchConfig {
+        max_pointers: 2,
+        rounds_per_level: 1,
+        positions_per_coordinate: 5,
+        spatial_steps_per_level: 2,
+        ..Default::default()
+    }
+}
+
+fn sharded_engine(names: &[&str], devices: usize) -> GacerEngine {
+    let mut b = GacerEngine::builder().devices(devices).search(quick_cfg());
+    for n in names {
+        b = b.tenant(zoo::build_default(n).unwrap());
+    }
+    b.build().unwrap()
+}
+
+// ---- placement edge cases ----
+
+#[test]
+fn one_device_degenerates_to_single_plan_behavior() {
+    // devices(1) must reproduce today's single-plan pipeline exactly:
+    // one shard owning every slot, merged view == the shard.
+    let engine = sharded_engine(&["Alex", "V16", "R18"], 1);
+    assert_eq!(engine.n_devices(), 1);
+    assert_eq!(engine.placement().tenants_on(0), &[0, 1, 2]);
+    assert_eq!(engine.sharded_plan().shards.len(), 1);
+    assert_eq!(engine.plan(), &engine.sharded_plan().shards[0]);
+    engine.plan().validate(engine.tenants()).unwrap();
+
+    // And it matches the plain (non-sharded) default builder's shape.
+    let classic = {
+        let mut b = GacerEngine::builder().search(quick_cfg());
+        for n in ["Alex", "V16", "R18"] {
+            b = b.tenant(zoo::build_default(n).unwrap());
+        }
+        b.build().unwrap()
+    };
+    // Same tenant set, same deterministic search: identical plans.
+    assert_eq!(engine.plan(), classic.plan());
+    assert_eq!(
+        engine.simulate().makespan_us,
+        classic.simulate().makespan_us
+    );
+}
+
+#[test]
+fn more_devices_than_tenants_leaves_devices_idle() {
+    let engine = sharded_engine(&["Alex", "M3"], 4);
+    engine.sharded_plan().validate(engine.tenants()).unwrap();
+    let occupied: Vec<usize> = (0..4)
+        .filter(|&d| !engine.placement().tenants_on(d).is_empty())
+        .collect();
+    assert_eq!(occupied.len(), 2, "each tenant alone on a device");
+    // Idle devices: empty shard plans, no reports, zero simulated load.
+    for d in 0..4 {
+        if occupied.contains(&d) {
+            assert!(engine.device_reports()[d].is_some());
+        } else {
+            assert!(engine.device_reports()[d].is_none());
+            assert_eq!(engine.sharded_plan().shards[d].chunking.len(), 0);
+            assert_eq!(engine.simulate_devices()[d].makespan_us, 0.0);
+        }
+    }
+}
+
+#[test]
+fn evicting_the_last_tenant_on_a_device_empties_it() {
+    let mut engine = sharded_engine(&["V16", "M3"], 2);
+    let ids = engine.tenant_ids();
+    let d_v16 = engine.device_of(ids[0]).unwrap();
+    let d_m3 = engine.device_of(ids[1]).unwrap();
+    assert_ne!(d_v16, d_m3);
+
+    let survivor_shard = engine.sharded_plan().shards[d_m3].clone();
+    engine.evict(ids[0]).unwrap();
+
+    assert_eq!(engine.len(), 1);
+    assert!(engine.placement().tenants_on(d_v16).is_empty());
+    assert!(engine.device_reports()[d_v16].is_none());
+    assert_eq!(engine.last_searched_device(), Some(d_v16));
+    // The surviving device kept its searched plan bit-for-bit.
+    assert_eq!(engine.sharded_plan().shards[d_m3], survivor_shard);
+    engine.sharded_plan().validate(engine.tenants()).unwrap();
+
+    // Evicting the final tenant empties the whole deployment cleanly.
+    let ids = engine.tenant_ids();
+    engine.evict(ids[0]).unwrap();
+    assert!(engine.is_empty());
+    engine.sharded_plan().validate(engine.tenants()).unwrap();
+    assert!(engine.last_report().is_none());
+}
+
+#[test]
+fn sharded_plan_validate_rejects_overlap_and_missing() {
+    let tenants = zoo::build_combo(&["Alex", "V16", "R18"]);
+    let placement = Placement::from_assignments(vec![vec![0, 2], vec![1]]);
+    let good = ShardedDeploymentPlan::unregulated(placement);
+    good.validate(&tenants).unwrap();
+
+    // Overlapping assignment: slot 1 on both devices.
+    let mut bad = good.clone();
+    bad.placement = Placement::from_assignments(vec![vec![0, 1, 2], vec![1]]);
+    assert!(matches!(bad.validate(&tenants), Err(Error::InvalidPlan(_))));
+
+    // Missing assignment: slot 2 on no device.
+    let mut bad = good.clone();
+    bad.placement = Placement::from_assignments(vec![vec![0], vec![1]]);
+    assert!(matches!(bad.validate(&tenants), Err(Error::InvalidPlan(_))));
+
+    // Shard/device arity mismatch.
+    let mut bad = good.clone();
+    bad.shards.push(DeploymentPlan::unregulated(0));
+    assert!(bad.validate(&tenants).is_err());
+
+    // Per-shard plan contents are still validated (bad pointer range in
+    // device 1's shard, expressed in local indices).
+    let mut bad = good.clone();
+    bad.shards[1].pointers.set_list(0, vec![10_000]);
+    assert!(bad.validate(&tenants).is_err());
+}
+
+// ---- acceptance: devices(2) end to end ----
+
+#[test]
+fn two_device_engine_meets_the_acceptance_criteria() {
+    // GacerEngine::builder().devices(2) produces a ShardedDeploymentPlan
+    // that validates...
+    let mut engine = sharded_engine(&["R50", "V16", "R18", "M3"], 2);
+    engine.sharded_plan().validate(engine.tenants()).unwrap();
+    assert_eq!(engine.sharded_plan().n_devices(), 2);
+    assert!(!engine.placement().tenants_on(0).is_empty());
+    assert!(!engine.placement().tenants_on(1).is_empty());
+
+    // ...whose per-device searches are never worse than unregulated...
+    for report in engine.device_reports().iter().flatten() {
+        assert!(report.outcome.objective() <= report.initial.objective() + 1e-6);
+    }
+
+    // ...and admit re-searches ONLY the affected shard...
+    let before = engine.sharded_plan().clone();
+    let id = engine.admit(zoo::build_default("Alex").unwrap()).unwrap();
+    let device = engine.device_of(id).unwrap();
+    let other = 1 - device;
+    assert_eq!(engine.last_searched_device(), Some(device));
+    assert_eq!(
+        engine.sharded_plan().shards[other], before.shards[other],
+        "admit must not re-search the unaffected shard"
+    );
+    engine.sharded_plan().validate(engine.tenants()).unwrap();
+
+    // ...as does evict.
+    let before = engine.sharded_plan().clone();
+    engine.evict(id).unwrap();
+    assert_eq!(engine.last_searched_device(), Some(device));
+    assert_eq!(
+        engine.sharded_plan().shards[other], before.shards[other],
+        "evict must not re-search the unaffected shard"
+    );
+    engine.sharded_plan().validate(engine.tenants()).unwrap();
+}
+
+#[test]
+fn sharded_lowering_yields_independent_per_device_configs() {
+    // Serving tenants lower per device: each device's issue order is a
+    // permutation of ITS OWN tenants, and the routing table covers every
+    // global slot exactly once. (Uses the tiny_cnn serving proxy; no
+    // artifacts are needed to *lower*, only to *start* servers.)
+    use gacer::coordinator::{BatchPolicy, ClusterServer};
+    use std::time::Duration;
+
+    let policy = BatchPolicy::new(8, Duration::from_millis(1), vec![1, 2, 4, 8]);
+    let mut b = GacerEngine::builder().devices(2).search(quick_cfg());
+    for i in 0..4 {
+        b = b
+            .serving_tenant(format!("t{i}"), "tiny_cnn", policy.clone())
+            .unwrap();
+    }
+    let engine = b.build().unwrap();
+
+    // Lowering requires a manifest only through family_variants; fake the
+    // variant sets by lowering through the public per-plan API instead.
+    let sharded = engine.sharded_plan();
+    let mut sizes = Vec::new();
+    for d in 0..2 {
+        let tenants: Vec<Dfg> = engine
+            .placement()
+            .tenants_on(d)
+            .iter()
+            .map(|&s| engine.tenants()[s].clone())
+            .collect();
+        let specs: Vec<(String, String, BatchPolicy)> = tenants
+            .iter()
+            .map(|t| (t.name.clone(), "tiny_cnn".to_string(), policy.clone()))
+            .collect();
+        let variants = vec![vec![1, 2, 4, 8]; tenants.len()];
+        let dep = gacer::engine::lower_plan(
+            &sharded.shards[d],
+            &tenants,
+            &specs,
+            &variants,
+            Duration::from_micros(200),
+        )
+        .unwrap();
+        // The per-device issue order is a permutation of 0..n_local.
+        let mut order = dep.config.issue_order.clone();
+        order.sort_unstable();
+        let expect: Vec<usize> = (0..tenants.len()).collect();
+        assert_eq!(order, expect, "device {d} issue order is a local permutation");
+        dep.config.validate(tenants.len()).unwrap();
+        sizes.push(tenants.len());
+    }
+
+    // The engine's routing table partitions the device slots.
+    let routing: Vec<(usize, usize)> = (0..engine.len())
+        .map(|slot| engine.placement().locate(slot).unwrap())
+        .collect();
+    ClusterServer::validate_routing(&routing, &sizes).unwrap();
+}
