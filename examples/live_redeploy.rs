@@ -1,0 +1,144 @@
+//! Live re-deployment, end to end — the code companion of
+//! `docs/OPERATIONS.md` (the guide's lifecycle stages match the sections
+//! below).
+//!
+//! Walk the serving lifecycle on a 2-device deployment: build → admit
+//! (one shard re-searched) → plan diff (what a redeploy would touch) →
+//! load-drift migration (two shards re-searched) → hot swap onto running
+//! servers. The decision half runs on the simulator substrate and needs
+//! nothing but this repo — CI executes it on every push; the serving
+//! half needs AOT artifacts (`make artifacts`) and is skipped with a
+//! notice otherwise.
+//!
+//!     cargo run --release --example live_redeploy
+
+use std::time::Duration;
+
+use gacer::coordinator::BatchPolicy;
+use gacer::models::zoo;
+use gacer::prelude::*;
+
+/// Shrunk search budget so the example runs in seconds; drop it to use
+/// `SearchConfig::default()` at deployment quality.
+fn quick_cfg() -> SearchConfig {
+    SearchConfig {
+        max_pointers: 2,
+        rounds_per_level: 1,
+        positions_per_coordinate: 6,
+        spatial_steps_per_level: 2,
+        ..Default::default()
+    }
+}
+
+fn main() -> gacer::Result<()> {
+    // ---- Stage 1: build a sharded deployment ---------------------------
+    let mut b = GacerEngine::builder()
+        .platform(Platform::titan_v())
+        .devices(2)
+        .search(quick_cfg());
+    for name in ["R50", "V16", "R18", "M3"] {
+        b = b.tenant(zoo::build_default(name).unwrap());
+    }
+    let mut engine = b.build()?;
+    println!("== build ==");
+    for d in 0..engine.n_devices() {
+        println!(
+            "  device {d}: tenants {:?}",
+            engine.placement().tenants_on(d)
+        );
+    }
+
+    // ---- Stage 2: admit, and diff what changed -------------------------
+    // Admission re-searches ONE shard. The plan diff is exactly what a
+    // live redeploy consults: unaffected devices are untouched.
+    let before = engine.sharded_plan().clone();
+    let id = engine.admit(zoo::build_default("Alex").unwrap())?;
+    let changed = engine.sharded_plan().changed_devices(&before);
+    println!("\n== admit ==");
+    println!(
+        "  Alex -> device {}; changed devices: {changed:?} (one shard re-searched)",
+        engine.device_of(id)?
+    );
+    assert_eq!(changed, vec![engine.device_of(id)?]);
+
+    // ---- Stage 3: load drift -> migration ------------------------------
+    // Traffic turns out skewed: every tenant on one device runs hot. The
+    // MigrationPolicy watches the observed max/min device-load ratio and
+    // proposes the single move that best shrinks the bottleneck; the
+    // engine executes it as a TWO-shard seeded re-search.
+    let hot_device = (0..2)
+        .find(|&d| engine.placement().tenants_on(d).len() >= 2)
+        .expect("5 tenants on 2 devices: one device shares");
+    let hot_slots: Vec<usize> = engine.placement().tenants_on(hot_device).to_vec();
+    for (slot, tid) in engine.tenant_ids().into_iter().enumerate() {
+        if hot_slots.contains(&slot) {
+            engine.record_requests(tid, 10_000)?;
+        }
+    }
+    println!("\n== load drift ==");
+    println!(
+        "  observed device loads: {:?}",
+        engine
+            .observed_device_loads()
+            .iter()
+            .map(|l| format!("{l:.0}"))
+            .collect::<Vec<_>>()
+    );
+    let before = engine.sharded_plan().clone();
+    let migration = engine
+        .maybe_migrate(&MigrationPolicy::default())?
+        .expect("fully skewed load must trigger a migration");
+    println!(
+        "  migrated {} from device {} to {}; re-searched devices {:?}",
+        migration.tenant,
+        migration.from,
+        migration.to,
+        engine.last_searched_devices()
+    );
+    let mut expected = vec![migration.from, migration.to];
+    expected.sort_unstable();
+    assert_eq!(engine.sharded_plan().changed_devices(&before), expected);
+    engine.sharded_plan().validate(engine.tenants())?;
+
+    // ---- Stage 4: hot swap onto running servers ------------------------
+    // Requires AOT artifacts; everything above this line is the decision
+    // path CI executes on the simulator substrate.
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("\n(serving half skipped: run `make artifacts` first)");
+        return Ok(());
+    }
+    let policy = BatchPolicy::new(8, Duration::from_millis(2), vec![1, 2, 4, 8, 16, 32]);
+    let mut b = GacerEngine::builder()
+        .platform(Platform::titan_v())
+        .devices(2)
+        .search(quick_cfg())
+        .artifacts("artifacts");
+    for i in 0..4 {
+        b = b.serving_tenant(format!("tiny-{i}"), "tiny_cnn", policy.clone())?;
+    }
+    let mut serving = b.build()?;
+    let cluster = serving.serve_cluster()?;
+    let input = |t: usize| -> Vec<f32> {
+        (0..32 * 32 * 3)
+            .map(|k| (((t * 7919 + k) % 97) as f32 / 97.0) - 0.5)
+            .collect()
+    };
+    println!("\n== hot swap on a running cluster ==");
+    for t in 0..4 {
+        assert_eq!(cluster.infer(t, input(t))?.len(), 10);
+    }
+    // Admit against the RUNNING cluster and swap the plan in: requests
+    // keep flowing, only the admitting device is touched, and the new
+    // tenant serves immediately after the fence.
+    serving.admit_serving("tiny-live", "tiny_cnn", policy)?;
+    let touched = serving.redeploy_cluster(&cluster)?;
+    println!(
+        "  admitted tiny-live; hot-swapped devices {touched:?}; epochs {:?}",
+        cluster.epochs()
+    );
+    for t in 0..5 {
+        assert_eq!(cluster.infer(t, input(t))?.len(), 10, "tenant {t} serves");
+    }
+    println!("  all 5 tenants serving through the swapped deployment — no restart");
+    Ok(())
+}

@@ -118,16 +118,31 @@ fn main() -> gacer::Result<()> {
     for i in 0..4 {
         b = b.serving_tenant(format!("tiny-{i}"), "tiny_cnn", policy.clone())?;
     }
-    let serving = b.build()?;
+    let mut serving = b.build()?;
     let cluster = serving.serve_cluster()?;
     println!("\nserving 4 tenants on {} devices:", cluster.n_devices());
-    for t in 0..4 {
-        let x: Vec<f32> = (0..32 * 32 * 3)
+    let input = |t: usize| -> Vec<f32> {
+        (0..32 * 32 * 3)
             .map(|k| (((t * 7919 + k) % 97) as f32 / 97.0) - 0.5)
-            .collect();
-        let out = cluster.infer(t, x)?;
+            .collect()
+    };
+    for t in 0..4 {
+        let out = cluster.infer(t, input(t))?;
         let (d, l) = cluster.route_of(t).unwrap();
         println!("  tenant {t} -> device {d} slot {l}: {} logits", out.len());
     }
+
+    // ---- Step 6: admit against the RUNNING cluster, then redeploy ------
+    // No restart: the engine re-searches one shard and `redeploy_cluster`
+    // hot-swaps it into the live servers (epoch-fenced; queued requests
+    // survive). See docs/OPERATIONS.md for the full lifecycle.
+    serving.admit_serving("tiny-late", "tiny_cnn", policy)?;
+    let touched = serving.redeploy_cluster(&cluster)?;
+    let out = cluster.infer(4, input(4))?;
+    println!(
+        "\nadmit tiny-late -> hot-swapped device(s) {touched:?}; \
+         newcomer serves {} logits through the same servers",
+        out.len()
+    );
     Ok(())
 }

@@ -13,7 +13,7 @@ pub struct PendingRequest {
 }
 
 /// Batching policy: how large a batch to wait for, and for how long.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BatchPolicy {
     /// Preferred (maximum) batch size.
     pub max_batch: usize,
@@ -58,6 +58,12 @@ impl Batcher {
 
     pub fn push(&mut self, req: PendingRequest) {
         self.queue.push(req);
+    }
+
+    /// Swap the batching policy, keeping the queued requests (a hot plan
+    /// swap re-policies a tenant without dropping its pending work).
+    pub fn set_policy(&mut self, policy: BatchPolicy) {
+        self.policy = policy;
     }
 
     pub fn pending(&self) -> usize {

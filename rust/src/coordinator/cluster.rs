@@ -4,21 +4,43 @@
 //! A sharded deployment runs **independently scheduled** coordinators —
 //! each device has its own scheduler thread, batchers, issue order, and
 //! executor, all lowered from that device's searched shard plan. The
-//! [`ClusterServer`] adds the only cross-device piece the request path
+//! [`ClusterServer`] adds the only cross-device pieces the request path
 //! needs: a routing table from *global* tenant slots to
-//! `(device, local slot)`, fixed by the engine's [`Placement`] at
-//! deployment time. Cross-device *admission control* (placing newcomers,
-//! re-searching the affected shard) stays in the engine; by the time a
-//! configuration reaches this type every decision is already made.
+//! `(device, local slot)` fixed by the engine's [`Placement`], and — for
+//! **live re-deployment** — [`ClusterServer::apply`], which swaps a new
+//! [`ShardedDeployment`] into the running device servers and the routing
+//! table in one fenced step. Cross-device *decisions* (placing
+//! newcomers, migrating tenants, re-searching shards) stay in the
+//! engine; by the time a configuration reaches this type every decision
+//! is already made.
 //!
 //! Startup cost note: each occupied device's [`Server`] opens the shared
 //! artifact directory itself (manifest + parameters are read per device,
 //! mirroring per-GPU weight replication); idle devices spawn nothing.
 //!
 //! [`Placement`]: crate::plan::Placement
+//! [`ShardedDeployment`]: crate::engine::ShardedDeployment
+
+use std::sync::{Arc, RwLock};
 
 use super::server::{Server, ServerConfig, TenantSpec};
+use crate::engine::{Deployment, ShardedDeployment};
 use crate::error::{Error, Result};
+
+/// The mutable half of a running cluster: per-device servers, the last
+/// deployment applied to each, and the routing table — everything a hot
+/// swap replaces together.
+struct ClusterState {
+    /// One server per device; `None` for devices the current placement
+    /// leaves empty (no scheduler or executor runs on an idle device —
+    /// routing can never point at one).
+    servers: Vec<Option<Server>>,
+    /// The deployment each device currently executes (empty tenant list
+    /// for idle devices) — what [`ClusterServer::apply`] diffs against to
+    /// leave unchanged devices completely untouched.
+    deployments: Vec<Deployment>,
+    routing: Vec<(usize, usize)>,
+}
 
 /// Handle to a running multi-device deployment: per-device [`Server`]s
 /// plus the placement-derived routing table. Cloneable, like [`Server`];
@@ -26,11 +48,12 @@ use crate::error::{Error, Result};
 /// drains outstanding work.
 #[derive(Clone)]
 pub struct ClusterServer {
-    /// One server per device; `None` for devices the placement left empty
-    /// (no scheduler or executor is spawned for an idle device — routing
-    /// can never point at one).
-    servers: Vec<Option<Server>>,
-    routing: Vec<(usize, usize)>,
+    artifact_dir: String,
+    state: Arc<RwLock<ClusterState>>,
+}
+
+fn read_state(state: &RwLock<ClusterState>) -> std::sync::RwLockReadGuard<'_, ClusterState> {
+    state.read().unwrap_or_else(|e| e.into_inner())
 }
 
 impl ClusterServer {
@@ -97,27 +120,182 @@ impl ClusterServer {
         let sizes: Vec<usize> = per_device.iter().map(|(t, _)| t.len()).collect();
         Self::validate_routing(&routing, &sizes)?;
         let mut servers = Vec::with_capacity(per_device.len());
+        let mut deployments = Vec::with_capacity(per_device.len());
         for (tenants, cfg) in per_device {
             servers.push(if tenants.is_empty() {
                 None
             } else {
-                Some(Server::start(artifact_dir, tenants, cfg)?)
+                Some(Server::start(artifact_dir, tenants.clone(), cfg.clone())?)
             });
+            deployments.push(Deployment { tenants, config: cfg });
         }
-        Ok(ClusterServer { servers, routing })
+        Ok(ClusterServer {
+            artifact_dir: artifact_dir.to_string(),
+            state: Arc::new(RwLock::new(ClusterState { servers, deployments, routing })),
+        })
+    }
+
+    /// Hot-swap a freshly lowered [`ShardedDeployment`] into the running
+    /// cluster — the multi-device live re-deployment path
+    /// ([`crate::engine::GacerEngine::redeploy_cluster`] calls this after
+    /// `admit`/`evict`/`replan`/migration). Returns the devices that
+    /// actually changed.
+    ///
+    /// Per device, diffed against the deployment currently executing:
+    ///
+    /// * **unchanged** — the device's server is not touched at all (no
+    ///   fence, no swap): tenant churn re-searches one or two shards, so
+    ///   most devices diff empty;
+    /// * **changed, occupied → occupied** — [`Server::apply`]: an
+    ///   epoch-fenced in-place swap; queued requests of persisting
+    ///   tenants survive;
+    /// * **idle → occupied** — a fresh [`Server`] starts (this is the
+    ///   one case that pays startup cost: manifest + params + executor
+    ///   warmup for that device);
+    /// * **occupied → idle** — the device's server is dropped after its
+    ///   scheduler drains (a migrated-away tenant's queued requests were
+    ///   already flushed by the destination-side fence semantics of
+    ///   [`Server::apply`], or drain here).
+    ///
+    /// The routing table swaps in the same fenced step. Requests
+    /// **in flight** when `apply` is called complete under the routing
+    /// they started with (their device still serves them — see the
+    /// per-server fence semantics); requests submitted during the swap
+    /// block until it commits, then route by the new table. Nothing is
+    /// dropped in either case, but expect one swap's worth of added
+    /// latency (a scheduler round per changed device, plus executor
+    /// startup if a device comes online).
+    ///
+    /// Failure semantics: every fallible step runs **before** any
+    /// running server is touched — the routing table validates, each
+    /// in-place swap preflights (config, shape, name uniqueness,
+    /// variant resolution against that device's manifest), and every
+    /// newly needed server starts — so a malformed deployment or a
+    /// failed device bring-up is rejected with the running cluster
+    /// unchanged. A swap can then only fail on a device whose scheduler
+    /// has already died; the commit finishes the remaining healthy
+    /// devices, swaps the routing table so every living device ends
+    /// consistent with it, and returns that device's error (it needs a
+    /// restart — it was failing requests regardless).
+    ///
+    /// Note on fencing: `infer` holds read access for a request's
+    /// lifetime, so this method waits for in-flight requests and blocks
+    /// new ones — on *every* device, including unchanged ones — for the
+    /// duration of the swap (unchanged devices' servers are not fenced
+    /// or touched, but their new traffic waits with everyone else's).
+    /// `std::sync::RwLock`'s fairness is platform-dependent; on the
+    /// targeted futex-based platforms a queued writer blocks new
+    /// readers, so the swap cannot be starved by request traffic.
+    ///
+    /// ```no_run
+    /// use gacer::coordinator::BatchPolicy;
+    /// use gacer::engine::GacerEngine;
+    /// use std::time::Duration;
+    ///
+    /// let policy = BatchPolicy::new(8, Duration::from_millis(2), vec![1, 2, 4, 8]);
+    /// let mut engine = GacerEngine::builder()
+    ///     .devices(2)
+    ///     .artifacts("artifacts")
+    ///     .serving_tenant("t0", "tiny_cnn", policy.clone()).unwrap()
+    ///     .serving_tenant("t1", "tiny_cnn", policy.clone()).unwrap()
+    ///     .build().unwrap();
+    /// let cluster = engine.serve_cluster().unwrap();
+    /// engine.admit_serving("t2", "tiny_cnn", policy).unwrap();
+    /// // Only the device that received t2 is swapped.
+    /// let touched = cluster.apply(engine.sharded_deployment().unwrap()).unwrap();
+    /// assert_eq!(touched.len(), 1);
+    /// ```
+    pub fn apply(&self, deployment: ShardedDeployment) -> Result<Vec<usize>> {
+        let sizes: Vec<usize> =
+            deployment.per_device.iter().map(|d| d.tenants.len()).collect();
+        Self::validate_routing(&deployment.routing, &sizes)?;
+        // The write lock is the cluster-level fence: in-flight requests
+        // hold read access until answered, so the swap waits for them;
+        // new requests wait for the swap.
+        let mut st = self.state.write().unwrap_or_else(|e| e.into_inner());
+        if deployment.per_device.len() != st.servers.len() {
+            return Err(Error::InvalidConfig(format!(
+                "deployment spans {} devices, cluster runs {}",
+                deployment.per_device.len(),
+                st.servers.len()
+            )));
+        }
+        // Run every fallible step BEFORE touching any running server:
+        // preflight each in-place swap (config, shape, names, variants
+        // against that server's manifest — server.apply repeats this
+        // internally, which is cheap and keeps one code path) and bring
+        // devices coming online up (manifest/params I/O, executor
+        // warmup, config validation in Server::start). Failing anywhere
+        // here leaves the cluster exactly as it was — fresh servers are
+        // dropped without ever having been routed to.
+        let mut fresh: Vec<(usize, Server)> = Vec::new();
+        for (d, dep) in deployment.per_device.iter().enumerate() {
+            if *dep == st.deployments[d] || dep.tenants.is_empty() {
+                continue;
+            }
+            match &st.servers[d] {
+                Some(server) => {
+                    server.preflight_apply(dep)?;
+                }
+                None => fresh.push((
+                    d,
+                    Server::start(&self.artifact_dir, dep.tenants.clone(), dep.config.clone())?,
+                )),
+            }
+        }
+        // Commit. From here on the only possible failure is a device
+        // whose scheduler has died (its preflight passed); the loop
+        // finishes the remaining healthy devices and STILL swaps the
+        // routing table so every living device ends consistent with it,
+        // then reports the dead device's error.
+        let mut touched = Vec::new();
+        let mut first_err = None;
+        for (d, dep) in deployment.per_device.into_iter().enumerate() {
+            if dep == st.deployments[d] {
+                continue;
+            }
+            if dep.tenants.is_empty() {
+                // Occupied -> idle: drop the server (drains, then stops).
+                st.servers[d] = None;
+            } else if let Some(server) = &st.servers[d] {
+                if let Err(e) = server.apply(dep.clone()) {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                    continue;
+                }
+            } else {
+                let at = fresh
+                    .iter()
+                    .position(|(fd, _)| *fd == d)
+                    .expect("started above for every idle->occupied device");
+                st.servers[d] = Some(fresh.swap_remove(at).1);
+            }
+            st.deployments[d] = dep;
+            touched.push(d);
+        }
+        st.routing = deployment.routing;
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(touched),
+        }
     }
 
     /// Submit one request for a *global* tenant slot and wait for its
-    /// output row; the cluster routes it to the tenant's device.
+    /// output row; the cluster routes it to the tenant's device. Holds
+    /// read access to the routing for the request's lifetime, so a
+    /// concurrent [`ClusterServer::apply`] cannot shift slots underneath
+    /// it (the swap waits instead).
     pub fn infer(&self, tenant: usize, input: Vec<f32>) -> Result<Vec<f32>> {
-        let &(d, l) = self.routing.get(tenant).ok_or_else(|| {
+        let st = read_state(&self.state);
+        let &(d, l) = st.routing.get(tenant).ok_or_else(|| {
             Error::InvalidConfig(format!(
                 "request for tenant {tenant}, only {} deployed",
-                self.routing.len()
+                st.routing.len()
             ))
         })?;
         // validate_routing guarantees a routed device is occupied.
-        let server = self.servers[d].as_ref().ok_or_else(|| {
+        let server = st.servers[d].as_ref().ok_or_else(|| {
             Error::InvalidConfig(format!("tenant {tenant} routed to idle device {d}"))
         })?;
         server.infer(l, input)
@@ -125,24 +303,54 @@ impl ClusterServer {
 
     /// Number of devices (including idle ones).
     pub fn n_devices(&self) -> usize {
-        self.servers.len()
+        read_state(&self.state).servers.len()
     }
 
     /// The server of one device, for introspection (each exposes its own
-    /// effective `tenant_specs()` / `issue_order()`); `None` for a device
-    /// the placement left idle.
-    pub fn server(&self, device: usize) -> Option<&Server> {
-        self.servers.get(device).and_then(Option::as_ref)
+    /// effective `tenant_specs()` / `issue_order()` / `epoch()`); `None`
+    /// for a device the current placement leaves idle.
+    pub fn server(&self, device: usize) -> Option<Server> {
+        read_state(&self.state).servers.get(device).and_then(Clone::clone)
     }
 
-    /// The global-slot routing table.
-    pub fn routing(&self) -> &[(usize, usize)] {
-        &self.routing
+    /// The global-slot routing table currently in effect.
+    pub fn routing(&self) -> Vec<(usize, usize)> {
+        read_state(&self.state).routing.clone()
     }
 
     /// Where a global tenant slot is served: `(device, local slot)`.
     pub fn route_of(&self, tenant: usize) -> Option<(usize, usize)> {
-        self.routing.get(tenant).copied()
+        read_state(&self.state).routing.get(tenant).copied()
+    }
+
+    /// Per-device swap epochs (0 for idle devices and for servers still
+    /// on their start-time plan).
+    pub fn epochs(&self) -> Vec<u64> {
+        read_state(&self.state)
+            .servers
+            .iter()
+            .map(|s| s.as_ref().map_or(0, Server::epoch))
+            .collect()
+    }
+
+    /// Requests served so far per *global* tenant slot — the cluster-wide
+    /// observed-load signal (aggregated from each device's counters via
+    /// the routing table). Feed it to
+    /// [`crate::engine::GacerEngine::record_served`] to drive load-drift
+    /// migration; the engine diffs successive calls keyed by stable
+    /// tenant id, so a counter restarting when its tenant migrates (the
+    /// new device starts it fresh) is handled.
+    pub fn served_counts(&self) -> Vec<u64> {
+        let st = read_state(&self.state);
+        let per_device: Vec<Vec<u64>> = st
+            .servers
+            .iter()
+            .map(|s| s.as_ref().map(Server::served_counts).unwrap_or_default())
+            .collect();
+        st.routing
+            .iter()
+            .map(|&(d, l)| per_device[d].get(l).copied().unwrap_or(0))
+            .collect()
     }
 }
 

@@ -18,6 +18,15 @@
 //! scheduler never coordinates across devices at request time — shards
 //! are independent by construction.
 //!
+//! Both layers are **live-reconfigurable**: [`Server::apply`] hot-swaps
+//! a freshly lowered plan into a running scheduler (epoch-fenced at a
+//! round boundary — queued requests survive, the executor and compiled
+//! artifacts persist), and [`ClusterServer::apply`] swaps a sharded
+//! deployment plus its routing table across the device pool, touching
+//! only the devices whose deployment actually changed. The engine
+//! drives both through `GacerEngine::redeploy`/`redeploy_cluster`; the
+//! operational model is documented in `docs/OPERATIONS.md`.
+//!
 //! ```
 //! use gacer::coordinator::ServerConfig;
 //!

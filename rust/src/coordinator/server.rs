@@ -4,13 +4,21 @@
 //! runtime.
 //!
 //! The server never invents its own regulation: `TenantSpec.chunk`, the
-//! issue order, and the per-round issue quanta all arrive pre-lowered
-//! from a searched [`crate::plan::DeploymentPlan`] by the
-//! [`crate::engine::GacerEngine`].
+//! issue order, and the issue quanta all arrive pre-lowered from a
+//! searched [`crate::plan::DeploymentPlan`] by the
+//! [`crate::engine::GacerEngine`]. Plans are **hot-swappable**: a running
+//! server accepts a freshly lowered [`Deployment`] through
+//! [`Server::apply`] — the swap is epoch-fenced at a scheduler round
+//! boundary, so the in-flight round drains under the old plan, queued
+//! requests survive the swap, and requests submitted after `apply`
+//! returns are scheduled under the new plan. No restart, no dropped
+//! executor, no recompiled artifacts.
+//!
+//! [`Deployment`]: crate::engine::Deployment
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, Batcher, PendingRequest};
@@ -20,9 +28,14 @@ use crate::metrics::LatencyHistogram;
 use crate::runtime::{load_params, ArtifactManifest};
 
 /// One tenant of the serving deployment.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TenantSpec {
-    /// Display name.
+    /// Display name. `(name, family)` carries tenant **identity across
+    /// hot swaps**: a swap matches old and new tenants by it to decide
+    /// which queues survive (a name reused for a different family is a
+    /// new tenant). Name uniqueness per deployment is enforced at
+    /// [`Server::start`] and [`Server::apply`], and the engine rejects
+    /// duplicate serving-tenant names at admission.
     pub name: String,
     /// Artifact operator family (manifest `meta.op`), e.g. `"tiny_cnn"`.
     pub family: String,
@@ -37,7 +50,7 @@ pub struct TenantSpec {
 
 /// Server configuration. Outside tests this is produced by
 /// [`crate::engine::GacerEngine::deployment`], not written by hand.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServerConfig {
     /// Scheduler tick (batch-deadline polling resolution).
     pub tick: Duration,
@@ -111,40 +124,101 @@ struct Incoming {
     respond: mpsc::Sender<Result<Vec<f32>>>,
 }
 
+/// A validated plan swap, resolved on the caller's thread and handed to
+/// the scheduler, which applies it at the next round boundary.
+struct ApplyMsg {
+    tenants: Vec<TenantSpec>,
+    variants: Vec<HashMap<usize, String>>,
+    issue_order: Vec<usize>,
+    issue_quanta: Vec<usize>,
+    tick: Duration,
+    ack: mpsc::Sender<()>,
+}
+
+enum Msg {
+    Request(Incoming),
+    Apply(ApplyMsg),
+}
+
+/// Introspection state mirrored out of the scheduler thread: what plan
+/// the scheduler is *currently* executing (updated atomically at each
+/// epoch fence) plus per-tenant served-request counters.
+struct Shared {
+    specs: Vec<TenantSpec>,
+    issue_order: Vec<usize>,
+    epoch: u64,
+    served: Vec<u64>,
+}
+
+fn read_shared(shared: &RwLock<Shared>) -> std::sync::RwLockReadGuard<'_, Shared> {
+    shared.read().unwrap_or_else(|e| e.into_inner())
+}
+
+fn write_shared(shared: &RwLock<Shared>) -> std::sync::RwLockWriteGuard<'_, Shared> {
+    shared.write().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Handle to a running server. Cloneable; dropping the last handle stops
 /// the scheduler after it drains outstanding work.
 #[derive(Clone)]
 pub struct Server {
-    tx: mpsc::Sender<Incoming>,
-    /// Effective deployment, kept for introspection (tests assert the
-    /// searched plan's lowering is what the scheduler executes).
-    specs: Arc<Vec<TenantSpec>>,
-    issue_order: Arc<Vec<usize>>,
+    tx: mpsc::Sender<Msg>,
+    shared: Arc<RwLock<Shared>>,
+    manifest: Arc<ArtifactManifest>,
+}
+
+/// Resolve the compiled batch variants of every tenant's family, plus the
+/// union of artifact entries (the executor warm set).
+fn resolve_variants(
+    manifest: &ArtifactManifest,
+    tenants: &[TenantSpec],
+) -> Result<(Vec<HashMap<usize, String>>, Vec<String>)> {
+    let mut variants = Vec::with_capacity(tenants.len());
+    let mut warm: Vec<String> = Vec::new();
+    for t in tenants {
+        let v = manifest.variants_of(&t.family);
+        if v.is_empty() {
+            return Err(Error::MissingFamily(t.family.clone()));
+        }
+        warm.extend(v.values().cloned());
+        variants.push(v.into_iter().collect());
+    }
+    warm.sort();
+    warm.dedup();
+    Ok((variants, warm))
+}
+
+/// Names are the identity hot swaps match queues by, so a deployment
+/// with two tenants sharing a name is rejected up front — both at
+/// [`Server::start`] and at every [`Server::apply`].
+fn validate_unique_names(tenants: &[TenantSpec]) -> Result<()> {
+    let mut seen: std::collections::BTreeSet<&str> = std::collections::BTreeSet::new();
+    for t in tenants {
+        if !seen.insert(t.name.as_str()) {
+            return Err(Error::InvalidConfig(format!(
+                "duplicate tenant name {:?}: names identify tenants across hot swaps",
+                t.name
+            )));
+        }
+    }
+    Ok(())
 }
 
 impl Server {
     /// Start the server: validates the configuration, opens the artifact
     /// dir, warms the executor, and spawns the scheduler thread.
-    pub fn start(artifact_dir: &str, tenants: Vec<TenantSpec>, cfg: ServerConfig) -> Result<Server> {
+    pub fn start(
+        artifact_dir: &str,
+        tenants: Vec<TenantSpec>,
+        cfg: ServerConfig,
+    ) -> Result<Server> {
         cfg.validate(tenants.len())?;
+        validate_unique_names(&tenants)?;
         let manifest = ArtifactManifest::load(
             std::path::Path::new(artifact_dir).join("manifest.json"),
         )?;
         let params = load_params(artifact_dir)?;
-
-        // Resolve compiled batch variants per tenant family.
-        let mut variants: Vec<HashMap<usize, String>> = Vec::new();
-        let mut warm: Vec<String> = Vec::new();
-        for t in &tenants {
-            let v = manifest.variants_of(&t.family);
-            if v.is_empty() {
-                return Err(Error::MissingFamily(t.family.clone()));
-            }
-            warm.extend(v.values().cloned());
-            variants.push(v.into_iter().collect());
-        }
-        warm.sort();
-        warm.dedup();
+        let (variants, warm) = resolve_variants(&manifest, &tenants)?;
         let executor = ExecutorHandle::spawn(artifact_dir.to_string(), warm)?;
 
         let issue_order = if cfg.issue_order.is_empty() {
@@ -152,71 +226,299 @@ impl Server {
         } else {
             cfg.issue_order.clone()
         };
-        let specs = Arc::new(tenants.clone());
-        let order = Arc::new(issue_order.clone());
-        let quanta = cfg.issue_quanta.clone();
+        let shared = Arc::new(RwLock::new(Shared {
+            specs: tenants.clone(),
+            issue_order: issue_order.clone(),
+            epoch: 0,
+            served: vec![0; tenants.len()],
+        }));
+        let st = SchedulerState {
+            batchers: tenants.iter().map(|t| Batcher::new(t.policy.clone())).collect(),
+            responders: (0..tenants.len()).map(|_| HashMap::new()).collect(),
+            tenants,
+            variants,
+            issue_order,
+            issue_quanta: cfg.issue_quanta.clone(),
+            tick: cfg.tick,
+        };
+        let thread_shared = Arc::clone(&shared);
         let (tx, rx) = mpsc::channel();
         std::thread::Builder::new()
             .name("gacer-scheduler".into())
-            .spawn(move || {
-                scheduler_loop(
-                    rx, tenants, variants, params, executor, cfg.tick, issue_order,
-                    quanta,
-                )
-            })
+            .spawn(move || scheduler_loop(rx, st, params, executor, thread_shared))
             .map_err(Error::Io)?;
-        Ok(Server { tx, specs, issue_order: order })
+        Ok(Server { tx, shared, manifest: Arc::new(manifest) })
+    }
+
+    /// Hot-swap the deployment plan of a **running** server — the live
+    /// re-deployment path ([`crate::engine::GacerEngine::redeploy`] calls
+    /// this with a freshly lowered plan after `admit`/`evict`/`replan`).
+    ///
+    /// Semantics (the epoch fence):
+    ///
+    /// * the swap happens at the next scheduler **round boundary** — the
+    ///   round in flight drains under the old plan first;
+    /// * old and new tenants are matched **by name**: a persisting
+    ///   tenant keeps its queued requests (and served counter) across
+    ///   the swap, under its new chunk/policy; a tenant present only in
+    ///   the new plan starts with an empty queue; a tenant that
+    ///   disappears has its queue flushed and answered under the old
+    ///   plan at the fence — no request is lost either way;
+    /// * `apply` returns once the scheduler acknowledges the fence
+    ///   ([`Server::epoch`] has advanced), so every request submitted
+    ///   after it returns is scheduled under the new plan.
+    ///
+    /// The executor thread, compiled artifacts, and loaded parameters
+    /// all persist — a swap costs one scheduler round, not a restart.
+    ///
+    /// Note for direct users: if the swap *removes* tenants, the local
+    /// slot indices of later tenants shift, exactly as engine slots do
+    /// on `evict`. [`crate::coordinator::ClusterServer::apply`] fences
+    /// request routing around the swap for this reason.
+    ///
+    /// ```no_run
+    /// use gacer::coordinator::BatchPolicy;
+    /// use gacer::engine::GacerEngine;
+    /// use std::time::Duration;
+    ///
+    /// let policy = BatchPolicy::new(8, Duration::from_millis(2), vec![1, 2, 4, 8]);
+    /// let mut engine = GacerEngine::builder()
+    ///     .artifacts("artifacts")
+    ///     .serving_tenant("t0", "tiny_cnn", policy.clone()).unwrap()
+    ///     .build().unwrap();
+    /// let server = engine.serve().unwrap();
+    /// engine.admit_serving("t1", "tiny_cnn", policy).unwrap(); // re-plans
+    /// server.apply(engine.deployment().unwrap()).unwrap();     // hot swap
+    /// assert_eq!(server.tenant_specs().len(), 2);
+    /// assert_eq!(server.epoch(), 1);
+    /// ```
+    pub fn apply(&self, deployment: crate::engine::Deployment) -> Result<()> {
+        let variants = self.preflight_apply(&deployment)?;
+        let crate::engine::Deployment { tenants, config } = deployment;
+        let issue_order = if config.issue_order.is_empty() {
+            (0..tenants.len()).collect()
+        } else {
+            config.issue_order.clone()
+        };
+        let (ack_tx, ack_rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Apply(ApplyMsg {
+                tenants,
+                variants,
+                issue_order,
+                issue_quanta: config.issue_quanta,
+                tick: config.tick,
+                ack: ack_tx,
+            }))
+            .map_err(|_| Error::ChannelClosed("server"))?;
+        ack_rx
+            .recv()
+            .map_err(|_| Error::ChannelClosed("server apply fence"))
+    }
+
+    /// Everything fallible about a [`Server::apply`] except the fence
+    /// itself: tenant-set shape, config validity, name uniqueness, and
+    /// variant resolution against this server's manifest. Side-effect
+    /// free — [`crate::coordinator::ClusterServer::apply`] runs it for
+    /// every device *before* swapping any, so a rejected deployment
+    /// leaves the whole cluster untouched.
+    pub(crate) fn preflight_apply(
+        &self,
+        deployment: &crate::engine::Deployment,
+    ) -> Result<Vec<HashMap<usize, String>>> {
+        if deployment.tenants.is_empty() {
+            return Err(Error::InvalidConfig(
+                "cannot apply an empty tenant set to a running server; \
+                 drop the server instead"
+                    .into(),
+            ));
+        }
+        deployment.config.validate(deployment.tenants.len())?;
+        validate_unique_names(&deployment.tenants)?;
+        let (variants, _warm) = resolve_variants(&self.manifest, &deployment.tenants)?;
+        Ok(variants)
     }
 
     /// Submit one request and wait for its output row.
     pub fn infer(&self, tenant: usize, input: Vec<f32>) -> Result<Vec<f32>> {
         let (otx, orx) = mpsc::channel();
         self.tx
-            .send(Incoming { tenant, input, respond: otx })
+            .send(Msg::Request(Incoming { tenant, input, respond: otx }))
             .map_err(|_| Error::ChannelClosed("server"))?;
         orx.recv().map_err(|_| Error::ChannelClosed("server request"))?
     }
 
-    /// The deployed tenant specs (as the scheduler sees them).
-    pub fn tenant_specs(&self) -> &[TenantSpec] {
-        &self.specs
+    /// The deployed tenant specs (as the scheduler currently sees them —
+    /// after a hot swap this is the swapped-in plan).
+    pub fn tenant_specs(&self) -> Vec<TenantSpec> {
+        read_shared(&self.shared).specs.clone()
     }
 
     /// The effective cross-tenant issue order the scheduler executes.
-    pub fn issue_order(&self) -> &[usize] {
-        &self.issue_order
+    pub fn issue_order(&self) -> Vec<usize> {
+        read_shared(&self.shared).issue_order.clone()
+    }
+
+    /// Number of plans hot-swapped into this server since start (0 =
+    /// still on the start-time plan). Advances exactly when an
+    /// [`Server::apply`] fence commits.
+    pub fn epoch(&self) -> u64 {
+        read_shared(&self.shared).epoch
+    }
+
+    /// Requests served so far, per local tenant slot — the observed-load
+    /// signal a drift-aware operations loop feeds back into the engine
+    /// (see [`crate::engine::MigrationPolicy`]). A tenant that persists
+    /// across hot swaps keeps its count; a swapped-in tenant starts at 0.
+    pub fn served_counts(&self) -> Vec<u64> {
+        read_shared(&self.shared).served.clone()
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn scheduler_loop(
-    rx: mpsc::Receiver<Incoming>,
+/// Everything the scheduler owns that a hot swap replaces or remaps.
+struct SchedulerState {
     tenants: Vec<TenantSpec>,
     variants: Vec<HashMap<usize, String>>,
-    params: Vec<Vec<f32>>,
-    executor: ExecutorHandle,
-    tick: Duration,
+    batchers: Vec<Batcher>,
+    responders: Vec<HashMap<u64, mpsc::Sender<Result<Vec<f32>>>>>,
     issue_order: Vec<usize>,
     issue_quanta: Vec<usize>,
+    tick: Duration,
+}
+
+/// Claim old tenant slots for a new tenant list, by `(name, family)`
+/// identity (first unclaimed old slot wins; duplicates claim in order).
+/// `None` = a genuinely new tenant; old slots claimed by nobody are
+/// being removed. Keying on the family too means a name reused for a
+/// *different* model between swaps can never inherit the old tenant's
+/// queue — those requests are flushed under the old spec instead of
+/// being answered by the wrong model.
+fn claim_slots(old: &[TenantSpec], new: &[TenantSpec]) -> Vec<Option<usize>> {
+    let mut by_identity: HashMap<(&str, &str), VecDeque<usize>> = HashMap::new();
+    for (i, t) in old.iter().enumerate() {
+        by_identity
+            .entry((t.name.as_str(), t.family.as_str()))
+            .or_default()
+            .push_back(i);
+    }
+    new.iter()
+        .map(|t| {
+            by_identity
+                .get_mut(&(t.name.as_str(), t.family.as_str()))
+                .and_then(VecDeque::pop_front)
+        })
+        .collect()
+}
+
+fn bump_served(shared: &RwLock<Shared>, tenant: usize, n: usize) {
+    let mut sh = write_shared(shared);
+    if let Some(c) = sh.served.get_mut(tenant) {
+        *c += n as u64;
+    }
+}
+
+/// Commit a plan swap at the round boundary: flush removed tenants under
+/// the old plan, move surviving queues to their new slots, replace the
+/// regulation state, publish the new epoch, and release the fence.
+fn apply_swap(
+    st: &mut SchedulerState,
+    swap: ApplyMsg,
+    params: &[Vec<f32>],
+    executor: &ExecutorHandle,
+    shared: &RwLock<Shared>,
 ) {
-    let n = tenants.len();
-    let mut batchers: Vec<Batcher> =
-        tenants.iter().map(|t| Batcher::new(t.policy.clone())).collect();
-    let mut responders: Vec<HashMap<u64, mpsc::Sender<Result<Vec<f32>>>>> =
-        (0..n).map(|_| HashMap::new()).collect();
+    let ApplyMsg { tenants, variants, issue_order, issue_quanta, tick, ack } = swap;
+    let claims = claim_slots(&st.tenants, &tenants);
+
+    // Flush (and answer) every request queued for a tenant the new plan
+    // drops — still under the old spec/variants, before anything moves.
+    let claimed: Vec<bool> = {
+        let mut v = vec![false; st.tenants.len()];
+        for c in claims.iter().flatten() {
+            v[*c] = true;
+        }
+        v
+    };
+    for old in 0..st.tenants.len() {
+        if claimed[old] {
+            continue;
+        }
+        while let Some((variant, batch)) = st.batchers[old].flush() {
+            issue_batch(
+                &st.tenants[old],
+                &st.variants[old],
+                params,
+                executor,
+                &mut st.responders[old],
+                variant,
+                batch,
+            );
+        }
+    }
+
+    // Rebuild per-slot state in new slot order, moving surviving queues.
+    let mut old_batchers: Vec<Option<Batcher>> =
+        st.batchers.drain(..).map(Some).collect();
+    let mut old_responders: Vec<Option<HashMap<_, _>>> =
+        st.responders.drain(..).map(Some).collect();
+    let old_served = read_shared(shared).served.clone();
+    let mut served = Vec::with_capacity(tenants.len());
+    for (i, claim) in claims.iter().enumerate() {
+        match claim {
+            Some(o) => {
+                let mut b = old_batchers[*o].take().expect("slot claimed once");
+                b.set_policy(tenants[i].policy.clone());
+                st.batchers.push(b);
+                st.responders.push(old_responders[*o].take().expect("slot claimed once"));
+                served.push(old_served.get(*o).copied().unwrap_or(0));
+            }
+            None => {
+                st.batchers.push(Batcher::new(tenants[i].policy.clone()));
+                st.responders.push(HashMap::new());
+                served.push(0);
+            }
+        }
+    }
+    st.tenants = tenants;
+    st.variants = variants;
+    st.issue_order = issue_order;
+    st.issue_quanta = issue_quanta;
+    st.tick = tick;
+
+    let mut sh = write_shared(shared);
+    sh.specs = st.tenants.clone();
+    sh.issue_order = st.issue_order.clone();
+    sh.served = served;
+    sh.epoch += 1;
+    drop(sh);
+    // Release the fence: the caller's `apply` returns, and everything it
+    // submits from here on runs under the plan just installed.
+    let _ = ack.send(());
+}
+
+fn scheduler_loop(
+    rx: mpsc::Receiver<Msg>,
+    mut st: SchedulerState,
+    params: Vec<Vec<f32>>,
+    executor: ExecutorHandle,
+    shared: Arc<RwLock<Shared>>,
+) {
     let mut next_id = 0u64;
     let mut open = true;
 
-    while open || batchers.iter().any(|b| b.pending() > 0) {
-        // Collect requests for up to one tick.
-        let deadline = Instant::now() + tick;
+    while open || st.batchers.iter().any(|b| b.pending() > 0) {
+        // Collect requests for up to one tick. Plan swaps arriving here
+        // are deferred to the round boundary below (the epoch fence).
+        let mut pending_swaps: Vec<ApplyMsg> = Vec::new();
+        let deadline = Instant::now() + st.tick;
         loop {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(msg) => {
+                Ok(Msg::Request(msg)) => {
+                    let n = st.tenants.len();
                     if msg.tenant >= n {
                         let _ = msg.respond.send(Err(Error::InvalidConfig(format!(
                             "request for tenant {}, only {n} deployed",
@@ -226,13 +528,14 @@ fn scheduler_loop(
                     }
                     let id = next_id;
                     next_id += 1;
-                    responders[msg.tenant].insert(id, msg.respond);
-                    batchers[msg.tenant].push(PendingRequest {
+                    st.responders[msg.tenant].insert(id, msg.respond);
+                    st.batchers[msg.tenant].push(PendingRequest {
                         id,
                         input: msg.input,
                         enqueued: Instant::now(),
                     });
                 }
+                Ok(Msg::Apply(a)) => pending_swaps.push(a),
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
                     open = false;
@@ -245,24 +548,37 @@ fn scheduler_loop(
         // segment-derived quantum (leftovers go next round — the plan's
         // pointer boundaries realized as issue-queue yields).
         let now = Instant::now();
-        for &t in &issue_order {
-            let quantum = issue_quanta.get(t).copied().unwrap_or(usize::MAX);
+        for i in 0..st.issue_order.len() {
+            let t = st.issue_order[i];
+            let quantum = st.issue_quanta.get(t).copied().unwrap_or(usize::MAX);
             let mut issued = 0usize;
             while issued < quantum {
-                let Some((variant, batch)) = batchers[t].drain(now) else { break };
+                let Some((variant, batch)) = st.batchers[t].drain(now) else { break };
+                // Count before executing: a client holding its response
+                // must already be visible in `served_counts`.
+                bump_served(&shared, t, batch.len());
                 issue_batch(
-                    &tenants[t], &variants[t], &params, &executor,
-                    &mut responders[t], variant, batch,
+                    &st.tenants[t], &st.variants[t], &params, &executor,
+                    &mut st.responders[t], variant, batch,
                 );
                 issued += 1;
             }
         }
+
+        // Round boundary: the in-flight round has drained — commit any
+        // swaps that arrived during it, in order.
+        for swap in pending_swaps {
+            apply_swap(&mut st, swap, &params, &executor, &shared);
+        }
+
         if !open {
-            for &t in &issue_order {
-                while let Some((variant, batch)) = batchers[t].flush() {
+            for i in 0..st.issue_order.len() {
+                let t = st.issue_order[i];
+                while let Some((variant, batch)) = st.batchers[t].flush() {
+                    bump_served(&shared, t, batch.len());
                     issue_batch(
-                        &tenants[t], &variants[t], &params, &executor,
-                        &mut responders[t], variant, batch,
+                        &st.tenants[t], &st.variants[t], &params, &executor,
+                        &mut st.responders[t], variant, batch,
                     );
                 }
             }
@@ -343,6 +659,13 @@ impl ServeReport {
     }
 }
 
+fn demo_input(t: usize, i: usize) -> Vec<f32> {
+    // Deterministic pseudo-input per (tenant, request).
+    (0..32 * 32 * 3)
+        .map(|k| (((t * 7919 + i * 131 + k) % 97) as f32 / 97.0) - 0.5)
+        .collect()
+}
+
 /// The e2e demo driver (`gacer serve`): build a [`GacerEngine`] over DFG
 /// proxies of the requested families, shard them across `n_devices`
 /// (1 = the classic single-GPU deployment), let the granularity-aware
@@ -351,12 +674,20 @@ impl ServeReport {
 /// the cluster front-end ([`crate::coordinator::ClusterServer`] — with a
 /// single device this is one scheduler, exactly the old behavior).
 ///
+/// With `live_admit: Some(family)` the driver then demonstrates live
+/// re-deployment: it admits one more tenant of that family against the
+/// *running* cluster, hot-swaps the re-searched plans in with
+/// [`GacerEngine::redeploy_cluster`], and serves the newcomer's requests
+/// through the same servers — no restart.
+///
 /// [`GacerEngine`]: crate::engine::GacerEngine
+/// [`GacerEngine::redeploy_cluster`]: crate::engine::GacerEngine::redeploy_cluster
 pub fn serve_demo(
     artifact_dir: &str,
     tenant_models: &[String],
     n_requests: usize,
     n_devices: usize,
+    live_admit: Option<&str>,
 ) -> Result<ServeReport> {
     let mut builder = crate::engine::GacerEngine::builder()
         .platform(crate::profile::Platform::titan_v())
@@ -369,7 +700,7 @@ pub fn serve_demo(
             BatchPolicy::new(8, Duration::from_millis(2), vec![1, 2, 4, 8, 16, 32]),
         )?;
     }
-    let engine = builder.build()?;
+    let mut engine = builder.build()?;
     let deployment = engine.sharded_deployment()?;
     println!(
         "searched plan: {} decomposed ops across {} device(s)",
@@ -394,10 +725,7 @@ pub fn serve_demo(
         handles.push(std::thread::spawn(move || -> Result<LatencyHistogram> {
             let mut hist = LatencyHistogram::new();
             for i in 0..n_requests {
-                // Deterministic pseudo-input per (tenant, request).
-                let x: Vec<f32> = (0..32 * 32 * 3)
-                    .map(|k| (((t * 7919 + i * 131 + k) % 97) as f32 / 97.0) - 0.5)
-                    .collect();
+                let x = demo_input(t, i);
                 let t0 = Instant::now();
                 let out = server.infer(t, x)?;
                 hist.record(t0.elapsed());
@@ -422,9 +750,42 @@ pub fn serve_demo(
             .map_err(|_| Error::ChannelClosed("client thread"))??;
         per_tenant.push((tenant_models[t].clone(), hist));
     }
+    let mut total_requests = n_requests * n_tenants;
+
+    // Live re-deployment demo: admit against the RUNNING cluster, hot
+    // swap, serve the newcomer. The servers and their executors persist.
+    if let Some(family) = live_admit {
+        let policy =
+            BatchPolicy::new(8, Duration::from_millis(2), vec![1, 2, 4, 8, 16, 32]);
+        let id = engine.admit_serving(format!("{family}-live"), family, policy)?;
+        let touched = engine.redeploy_cluster(&server)?;
+        let slot = engine.len() - 1;
+        let (device, _) = server.route_of(slot).ok_or_else(|| {
+            Error::InvalidConfig(format!("live tenant {id} not routed"))
+        })?;
+        println!(
+            "live admit {family} -> device {device}; hot-swapped devices {touched:?} \
+             (no restart)"
+        );
+        let mut hist = LatencyHistogram::new();
+        for i in 0..n_requests {
+            let t0 = Instant::now();
+            let out = server.infer(slot, demo_input(slot, i))?;
+            hist.record(t0.elapsed());
+            if out.len() != 10 {
+                return Err(Error::InvalidData(format!(
+                    "expected 10 logits, got {}",
+                    out.len()
+                )));
+            }
+        }
+        total_requests += n_requests;
+        per_tenant.push((format!("{family}-live"), hist));
+    }
+
     let report = ServeReport {
         per_tenant,
-        total_requests: n_requests * n_tenants,
+        total_requests,
         elapsed: started.elapsed(),
     };
     println!(
@@ -468,5 +829,44 @@ mod tests {
         assert!(cfg.validate(2).is_err());
         let cfg = ServerConfig { issue_quanta: vec![1, 0], ..Default::default() };
         assert!(cfg.validate(2).is_err());
+    }
+
+    fn spec(name: &str) -> TenantSpec {
+        TenantSpec {
+            name: name.to_string(),
+            family: "tiny_cnn".to_string(),
+            policy: BatchPolicy::new(4, Duration::from_millis(1), vec![1, 2, 4]),
+            chunk: None,
+        }
+    }
+
+    #[test]
+    fn claim_slots_matches_by_name() {
+        let old = vec![spec("a"), spec("b"), spec("c")];
+        // b evicted, d admitted, a/c persist (c's slot shifts).
+        let new = vec![spec("a"), spec("c"), spec("d")];
+        assert_eq!(claim_slots(&old, &new), vec![Some(0), Some(2), None]);
+        // Old slot 1 (b) is claimed by nobody: it gets flushed at the
+        // fence.
+    }
+
+    #[test]
+    fn claim_slots_never_crosses_families() {
+        // A name reused for a different model is a NEW tenant: the old
+        // queue must be flushed, not inherited.
+        let old = vec![spec("a")];
+        let mut reused = spec("a");
+        reused.family = "other_model".to_string();
+        assert_eq!(claim_slots(&old, &[reused]), vec![None]);
+    }
+
+    #[test]
+    fn claim_slots_handles_duplicates_and_reorders() {
+        let old = vec![spec("x"), spec("x"), spec("y")];
+        let new = vec![spec("y"), spec("x"), spec("x")];
+        assert_eq!(claim_slots(&old, &new), vec![Some(2), Some(0), Some(1)]);
+        // More duplicates than before: the surplus is new.
+        let new = vec![spec("x"), spec("x"), spec("x")];
+        assert_eq!(claim_slots(&old, &new), vec![Some(0), Some(1), None]);
     }
 }

@@ -1,0 +1,232 @@
+//! Load-drift tenant migration policy.
+//!
+//! A tenant's device is chosen at admission from cost-model load — but
+//! traffic drifts, and a placement that was balanced under assumed
+//! uniform demand can leave one GPU saturated while another idles (the
+//! online workload-drift problem of the multi-tenant serving
+//! literature; VELTAIR makes the same argument for adaptive scheduling
+//! decisions applied to live services). [`MigrationPolicy`] is the
+//! decision rule: it watches the **observed** per-device loads
+//! ([`GacerEngine::observed_device_loads`]) and, when the max/min
+//! device-load ratio crosses a threshold, proposes moving one tenant
+//! from the hottest device to the coolest — the single move that best
+//! shrinks the bottleneck. Execution is the engine's job
+//! ([`GacerEngine::maybe_migrate`] → [`GacerEngine::migrate`]: two-shard
+//! re-search, then a cluster hot swap).
+//!
+//! [`GacerEngine::observed_device_loads`]: crate::engine::GacerEngine::observed_device_loads
+//! [`GacerEngine::maybe_migrate`]: crate::engine::GacerEngine::maybe_migrate
+//! [`GacerEngine::migrate`]: crate::engine::GacerEngine::migrate
+
+use crate::engine::TenantId;
+use crate::metrics::imbalance_ratio;
+use crate::plan::Placement;
+
+/// Threshold rule for load-drift migration: act when the max/min
+/// observed device-load ratio exceeds `max_imbalance`, and only when a
+/// single tenant move strictly shrinks the bottleneck device's load.
+///
+/// ```
+/// use gacer::engine::MigrationPolicy;
+/// use gacer::plan::Placement;
+///
+/// let placement = Placement::from_assignments(vec![vec![0, 1], vec![2]]);
+/// let policy = MigrationPolicy::default(); // max_imbalance = 2.0
+///
+/// // Device 0 carries 9.0 of 10.0 total load: ratio 9 > 2. The best
+/// // single move is the *lighter* co-tenant (moving the 8.0 tenant
+/// // would just flip the skew).
+/// let p = policy.propose(&[8.0, 1.0, 1.0], &placement).unwrap();
+/// assert_eq!((p.slot, p.from, p.to), (1, 0, 1));
+/// assert!(p.imbalance_after < p.imbalance_before);
+///
+/// // Mild skew stays put.
+/// assert!(policy.propose(&[1.0, 1.0, 1.5], &placement).is_none());
+///
+/// // A hot *singleton* tenant has no useful move: migrating it only
+/// // relocates the bottleneck.
+/// let lone = Placement::from_assignments(vec![vec![0], vec![1]]);
+/// assert!(policy.propose(&[9.0, 1.0], &lone).is_none());
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct MigrationPolicy {
+    /// Trigger threshold on the max/min device-load ratio
+    /// ([`crate::metrics::imbalance_ratio`]); must be > 1. A ratio of
+    /// `f64::INFINITY` (a loaded device next to an idle one) always
+    /// triggers.
+    pub max_imbalance: f64,
+}
+
+impl Default for MigrationPolicy {
+    fn default() -> Self {
+        MigrationPolicy { max_imbalance: 2.0 }
+    }
+}
+
+/// A concrete move proposed by [`MigrationPolicy::propose`]: global slot
+/// `slot` leaves device `from` for device `to`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MigrationProposal {
+    /// Global tenant slot to move.
+    pub slot: usize,
+    /// Device the tenant currently occupies (the hottest device).
+    pub from: usize,
+    /// Destination device (the coolest device).
+    pub to: usize,
+    /// Max/min device-load ratio before the move.
+    pub imbalance_before: f64,
+    /// Predicted ratio after the move.
+    pub imbalance_after: f64,
+}
+
+/// A migration the engine actually executed
+/// ([`crate::engine::GacerEngine::maybe_migrate`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Migration {
+    /// Stable id of the moved tenant (its global slot is unchanged —
+    /// migration never compacts slots).
+    pub tenant: TenantId,
+    pub from: usize,
+    pub to: usize,
+}
+
+impl MigrationPolicy {
+    /// Evaluate observed per-tenant load `weights` (slot order, e.g.
+    /// [`crate::engine::GacerEngine::observed_tenant_weights`]) under
+    /// `placement`. Returns the single tenant move onto the least loaded
+    /// device that best shrinks `(max device load, imbalance ratio)` —
+    /// candidates are drawn from *every* device tied at the maximum, so
+    /// two saturated GPUs beside an idle one still rebalance. `None`
+    /// when the imbalance is under threshold, the cluster has fewer than
+    /// two devices, or no move strictly improves (moving a lone hot
+    /// tenant around helps nobody).
+    pub fn propose(
+        &self,
+        weights: &[f64],
+        placement: &Placement,
+    ) -> Option<MigrationProposal> {
+        let n = placement.n_devices();
+        if n < 2 {
+            return None;
+        }
+        let loads: Vec<f64> = (0..n)
+            .map(|d| placement.tenants_on(d).iter().map(|&s| weights[s]).sum())
+            .collect();
+        let before = imbalance_ratio(&loads);
+        if before <= self.max_imbalance {
+            return None;
+        }
+        let old_max = loads.iter().copied().fold(0.0f64, f64::max);
+        let to = (0..n)
+            .reduce(|a, b| if loads[b] < loads[a] { b } else { a })
+            .expect("n >= 2");
+
+        // Best single move off any bottleneck-tied device: minimize
+        // (new max load, new ratio), require a strict improvement on
+        // that pair to be worth a re-search + swap.
+        let mut best: Option<(f64, f64, usize, usize)> = None;
+        for from in (0..n).filter(|&d| loads[d] >= old_max && d != to) {
+            for &slot in placement.tenants_on(from) {
+                let w = weights[slot];
+                if w <= 0.0 {
+                    continue;
+                }
+                let mut moved = loads.clone();
+                moved[from] -= w;
+                moved[to] += w;
+                let new_max = moved.iter().copied().fold(0.0f64, f64::max);
+                let new_ratio = imbalance_ratio(&moved);
+                if new_max > old_max || (new_max == old_max && new_ratio >= before) {
+                    continue;
+                }
+                let better = match &best {
+                    None => true,
+                    Some(&(m, r, _, _)) => new_max < m || (new_max == m && new_ratio < r),
+                };
+                if better {
+                    best = Some((new_max, new_ratio, slot, from));
+                }
+            }
+        }
+        best.map(|(_, after, slot, from)| MigrationProposal {
+            slot,
+            from,
+            to,
+            imbalance_before: before,
+            imbalance_after: after,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn placement() -> Placement {
+        // Device 0 = {0, 1}, device 1 = {2}, device 2 = {3}.
+        Placement::from_assignments(vec![vec![0, 1], vec![2], vec![3]])
+    }
+
+    #[test]
+    fn balanced_loads_propose_nothing() {
+        let p = MigrationPolicy::default();
+        assert!(p.propose(&[1.0, 1.0, 2.0, 1.9], &placement()).is_none());
+        // All idle: ratio is defined as 1.0.
+        assert!(p.propose(&[0.0, 0.0, 0.0, 0.0], &placement()).is_none());
+        // Single device: nowhere to go.
+        let single = Placement::single_device(2);
+        assert!(p.propose(&[9.0, 1.0], &single).is_none());
+    }
+
+    #[test]
+    fn skew_moves_the_best_tenant_to_the_coolest_device() {
+        let p = MigrationPolicy::default();
+        // Device 0 = 12, device 1 = 2, device 2 = 4: ratio 6.
+        let prop = p.propose(&[8.0, 4.0, 2.0, 4.0], &placement()).unwrap();
+        assert_eq!(prop.from, 0);
+        assert_eq!(prop.to, 1);
+        // Moving slot 1 (w=4): loads [8, 6, 4] (max 8). Moving slot 0
+        // (w=8): loads [4, 10, 4] (max 10). Slot 1 wins.
+        assert_eq!(prop.slot, 1);
+        assert!(prop.imbalance_after < prop.imbalance_before);
+    }
+
+    #[test]
+    fn idle_device_always_triggers_and_absorbs() {
+        let p = MigrationPolicy::default();
+        // Device 2 idle: ratio infinite.
+        let prop = p.propose(&[8.0, 4.0, 2.0, 0.0], &placement()).unwrap();
+        assert_eq!(prop.imbalance_before, f64::INFINITY);
+        assert_eq!((prop.from, prop.to), (0, 2));
+    }
+
+    #[test]
+    fn tied_maxima_still_rebalance_onto_the_idle_device() {
+        // Devices 0 and 1 both saturated at 5, device 2 idle. A
+        // strict-max-only criterion would refuse every move (the max
+        // stays 5 because the *other* saturated device is untouched);
+        // improving the ratio at an unchanged max is enough, and
+        // candidates come from every bottleneck-tied device.
+        let p = MigrationPolicy::default();
+        let prop = p.propose(&[3.0, 2.0, 5.0, 0.0], &placement()).unwrap();
+        assert_eq!((prop.slot, prop.from, prop.to), (0, 0, 2));
+        assert_eq!(prop.imbalance_before, f64::INFINITY);
+        assert!(prop.imbalance_after.is_finite());
+    }
+
+    #[test]
+    fn lone_hot_tenant_stays_put() {
+        // Device 1's singleton is the whole skew; moving it just
+        // relocates the bottleneck.
+        let p = MigrationPolicy::default();
+        assert!(p.propose(&[0.5, 0.5, 9.0, 1.0], &placement()).is_none());
+    }
+
+    #[test]
+    fn threshold_is_respected() {
+        let lax = MigrationPolicy { max_imbalance: 10.0 };
+        assert!(lax.propose(&[8.0, 4.0, 2.0, 4.0], &placement()).is_none());
+        let strict = MigrationPolicy { max_imbalance: 1.1 };
+        assert!(strict.propose(&[8.0, 4.0, 2.0, 4.0], &placement()).is_some());
+    }
+}

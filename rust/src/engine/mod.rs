@@ -70,8 +70,28 @@
 //! assert_eq!(engine.last_searched_device(), Some(device));
 //! ```
 //!
+//! # Live re-deployment and load-drift migration
+//!
+//! Searched plans reach **running** servers without a restart:
+//! [`GacerEngine::redeploy`] / [`GacerEngine::redeploy_cluster`] lower
+//! the current plan and hot-swap it in ([`Server::apply`] /
+//! [`ClusterServer::apply`] — epoch-fenced at a scheduler round
+//! boundary, queued requests survive). When observed traffic drifts
+//! away from the placement's assumptions, a [`MigrationPolicy`] over
+//! the engine's demand counters ([`GacerEngine::record_requests`])
+//! proposes moving a tenant between devices;
+//! [`GacerEngine::maybe_migrate`] executes it as a **two-shard**
+//! seeded re-search, and the next `redeploy_cluster` makes it live.
+//! The full operational loop is documented in `docs/OPERATIONS.md`.
+//!
 //! [`coordinator::Server`]: crate::coordinator::Server
+//! [`Server::apply`]: crate::coordinator::Server::apply
 //! [`ClusterServer`]: crate::coordinator::ClusterServer
+//! [`ClusterServer::apply`]: crate::coordinator::ClusterServer::apply
+
+mod migration;
+
+pub use migration::{Migration, MigrationPolicy, MigrationProposal};
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -107,6 +127,10 @@ struct TenantMeta {
     /// none and cannot be lowered to a serving deployment.
     family: Option<String>,
     policy: BatchPolicy,
+    /// Observed demand (accumulated request count fed back by the
+    /// operations loop via [`GacerEngine::record_requests`]); 0 until
+    /// traffic is observed. Drives load-drift migration.
+    demand: f64,
 }
 
 fn default_policy() -> BatchPolicy {
@@ -114,8 +138,11 @@ fn default_policy() -> BatchPolicy {
 }
 
 /// A plan lowered to the serving coordinator's configuration: what
-/// [`Server::start`] consumes.
-#[derive(Debug, Clone)]
+/// [`Server::start`] consumes and what [`Server::apply`] hot-swaps into
+/// a running server. `PartialEq` is part of the contract: live
+/// re-deployment diffs lowered deployments to leave unchanged devices
+/// untouched.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Deployment {
     /// Per-tenant serving specs, in (device-local) slot order.
     pub tenants: Vec<TenantSpec>,
@@ -124,9 +151,10 @@ pub struct Deployment {
 }
 
 /// A sharded plan lowered per device: what [`ClusterServer::start`]
-/// consumes. One independent [`Deployment`] per device, plus the routing
+/// consumes and what [`ClusterServer::apply`] hot-swaps into a running
+/// cluster. One independent [`Deployment`] per device, plus the routing
 /// table that maps every global tenant slot to its `(device, local slot)`.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ShardedDeployment {
     /// One lowered deployment per device (empty devices get an empty
     /// tenant list and a default scheduler config).
@@ -199,7 +227,8 @@ impl EngineBuilder {
         let id = TenantId(self.next_id);
         self.next_id += 1;
         let name = dfg.name.clone();
-        self.tenants.push((dfg, TenantMeta { id, name, family, policy }));
+        self.tenants
+            .push((dfg, TenantMeta { id, name, family, policy, demand: 0.0 }));
     }
 
     /// Add a simulation/search tenant (no serving artifacts).
@@ -247,6 +276,8 @@ impl EngineBuilder {
             reports: (0..n_devices).map(|_| None).collect(),
             last_report: None,
             last_searched_device: None,
+            last_searched_devices: Vec::new(),
+            served_window: crate::metrics::DemandWindow::new(),
             artifact_dir: self.artifact_dir,
             manifest,
         };
@@ -283,8 +314,16 @@ pub struct GacerEngine {
     /// device (`None` for empty devices).
     reports: Vec<Option<SearchReport>>,
     last_report: Option<SearchReport>,
-    /// Device affected by the most recent admit/evict/replan event.
+    /// Device affected by the most recent admit/evict/replan event (for
+    /// a migration: the receiving device).
     last_searched_device: Option<usize>,
+    /// Every device the most recent event re-searched: one for
+    /// admit/evict, the source and destination pair for a migration,
+    /// all occupied devices for a cold `replan`.
+    last_searched_devices: Vec<usize>,
+    /// Cumulative-counter window behind [`GacerEngine::record_served`],
+    /// keyed by stable tenant id.
+    served_window: crate::metrics::DemandWindow,
     artifact_dir: Option<PathBuf>,
     manifest: Option<ArtifactManifest>,
 }
@@ -367,8 +406,18 @@ impl GacerEngine {
 
     /// The device the most recent admit/evict/replan event re-searched —
     /// how tests assert that tenant churn touches only the affected shard.
+    /// For a migration this is the *receiving* device; the full set is
+    /// [`GacerEngine::last_searched_devices`].
     pub fn last_searched_device(&self) -> Option<usize> {
         self.last_searched_device
+    }
+
+    /// Every device the most recent event re-searched: one device for
+    /// admit/evict, exactly the `[source, destination]` pair for a
+    /// migration, all occupied devices for a cold `replan` — how tests
+    /// assert a migration re-plans two shards and nothing else.
+    pub fn last_searched_devices(&self) -> &[usize] {
+        &self.last_searched_devices
     }
 
     /// Simulate the current deployment on the engine's platform: each
@@ -413,9 +462,26 @@ impl GacerEngine {
 
     fn check_admissible(&self, dfg: &Dfg, family: Option<&str>) -> Result<()> {
         crate::dfg::validate(dfg)?;
-        if let (Some(m), Some(f)) = (&self.manifest, family) {
-            if m.variants_of(f).is_empty() {
-                return Err(Error::MissingFamily(f.to_string()));
+        if let Some(f) = family {
+            if let Some(m) = &self.manifest {
+                if m.variants_of(f).is_empty() {
+                    return Err(Error::MissingFamily(f.to_string()));
+                }
+            }
+            // Serving tenants are identified by name on the live path
+            // (hot swaps match queues by it), so a deployed serving name
+            // cannot be reused while its owner is still deployed.
+            // Simulation-only tenants never reach a server and may share
+            // names freely (e.g. two "Alex" DFGs in a combo).
+            if self
+                .meta
+                .iter()
+                .any(|m| m.family.is_some() && m.name == dfg.name)
+            {
+                return Err(Error::InvalidConfig(format!(
+                    "serving tenant name {:?} is already deployed",
+                    dfg.name
+                )));
             }
         }
         Ok(())
@@ -459,7 +525,7 @@ impl GacerEngine {
         let device = self.sharded.placement.least_loaded(&self.set);
         let slot = self.set.len();
         self.set.admit(dfg);
-        self.meta.push(TenantMeta { id, name, family, policy });
+        self.meta.push(TenantMeta { id, name, family, policy, demand: 0.0 });
         self.sharded.placement.assign(slot, device);
         // The newcomer lands at the end of the device's local order (its
         // global slot is the largest), so push_tenant's slot matches.
@@ -498,6 +564,7 @@ impl GacerEngine {
             self.reports = (0..self.n_devices).map(|_| None).collect();
             self.last_report = None;
             self.last_searched_device = None;
+            self.last_searched_devices = Vec::new();
             return;
         }
         let report = ShardedSearch::new(&self.set, self.opts, self.search_cfg)
@@ -506,6 +573,12 @@ impl GacerEngine {
         self.last_report =
             bottleneck.and_then(|d| report.reports[d].clone());
         self.last_searched_device = bottleneck;
+        self.last_searched_devices = report
+            .reports
+            .iter()
+            .enumerate()
+            .filter_map(|(d, r)| r.as_ref().map(|_| d))
+            .collect();
         self.reports = report.reports;
         self.sharded = report.plan;
         self.rebuild_merged();
@@ -533,6 +606,7 @@ impl GacerEngine {
             }
         }
         self.last_searched_device = Some(device);
+        self.last_searched_devices = vec![device];
         self.rebuild_merged();
     }
 
@@ -667,6 +741,284 @@ impl GacerEngine {
             .map(|d| (d.tenants, d.config))
             .collect();
         ClusterServer::start(&dir, per_device, sharded.routing)
+    }
+
+    // ---- live re-deployment ----
+
+    /// Propagate the engine's current plan to a **running** single-device
+    /// [`Server`] — lower it and hot-swap it in with [`Server::apply`]
+    /// (epoch-fenced; no restart). Call after `admit`/`evict`/`replan` to
+    /// make the re-searched plan live.
+    ///
+    /// Single-device engines only, like [`GacerEngine::deployment`]; a
+    /// sharded engine redeploys through
+    /// [`GacerEngine::redeploy_cluster`]. Note that an `evict` shifts the
+    /// local slot indices of later tenants, exactly as it shifts engine
+    /// slots — single-server clients address tenants by slot, so quiesce
+    /// or re-resolve slots around an evicting redeploy (the cluster path
+    /// handles this by fencing its routing table).
+    ///
+    /// ```no_run
+    /// use gacer::coordinator::BatchPolicy;
+    /// use gacer::engine::GacerEngine;
+    /// use std::time::Duration;
+    ///
+    /// let policy = BatchPolicy::new(8, Duration::from_millis(2), vec![1, 2, 4, 8]);
+    /// let mut engine = GacerEngine::builder()
+    ///     .artifacts("artifacts")
+    ///     .serving_tenant("t0", "tiny_cnn", policy.clone()).unwrap()
+    ///     .build().unwrap();
+    /// let server = engine.serve().unwrap();
+    /// engine.admit_serving("t1", "tiny_cnn", policy).unwrap();
+    /// engine.redeploy(&server).unwrap(); // the admitted tenant goes live
+    /// assert_eq!(server.tenant_specs().len(), 2);
+    /// ```
+    pub fn redeploy(&self, server: &Server) -> Result<()> {
+        server.apply(self.deployment()?)
+    }
+
+    /// Propagate the engine's current sharded plan to a **running**
+    /// [`ClusterServer`]: lower per device and hot-swap through
+    /// [`ClusterServer::apply`], which diffs against what each device is
+    /// executing and touches only the devices that changed. Returns the
+    /// touched devices. Call after `admit`/`evict`/`replan`/
+    /// [`GacerEngine::migrate`] to make the re-searched plans live
+    /// without restarting anything.
+    ///
+    /// ```no_run
+    /// use gacer::coordinator::BatchPolicy;
+    /// use gacer::engine::GacerEngine;
+    /// use std::time::Duration;
+    ///
+    /// let policy = BatchPolicy::new(8, Duration::from_millis(2), vec![1, 2, 4, 8]);
+    /// let mut engine = GacerEngine::builder()
+    ///     .devices(2)
+    ///     .artifacts("artifacts")
+    ///     .serving_tenant("t0", "tiny_cnn", policy.clone()).unwrap()
+    ///     .serving_tenant("t1", "tiny_cnn", policy.clone()).unwrap()
+    ///     .build().unwrap();
+    /// let cluster = engine.serve_cluster().unwrap();
+    /// engine.admit_serving("t2", "tiny_cnn", policy).unwrap();
+    /// let touched = engine.redeploy_cluster(&cluster).unwrap();
+    /// assert_eq!(touched.len(), 1, "only the admitting device swaps");
+    /// ```
+    pub fn redeploy_cluster(&self, cluster: &ClusterServer) -> Result<Vec<usize>> {
+        cluster.apply(self.sharded_deployment()?)
+    }
+
+    // ---- load-drift migration ----
+
+    /// Feed observed traffic back into the engine: accumulate `n`
+    /// requests onto a tenant's demand counter. Tests and simulations
+    /// inject synthetic skew here; an operations loop over a live
+    /// cluster uses [`GacerEngine::record_served`] instead.
+    pub fn record_requests(&mut self, id: TenantId, n: u64) -> Result<()> {
+        let idx = self.index_of(id)?;
+        self.meta[idx].demand += n as f64;
+        Ok(())
+    }
+
+    /// The whole observe step in one call: diff the cluster's cumulative
+    /// [`ClusterServer::served_counts`] against the previous call (an
+    /// internal [`crate::metrics::DemandWindow`] keyed by stable
+    /// [`TenantId`], so slot shifts from evictions and counter restarts
+    /// from migrations are never misattributed) and accumulate the
+    /// per-window deltas onto each tenant's demand counter. `counts`
+    /// must be in current slot order.
+    pub fn record_served(&mut self, counts: &[u64]) -> Result<()> {
+        if counts.len() != self.len() {
+            return Err(Error::InvalidConfig(format!(
+                "{} served counts for {} tenants",
+                counts.len(),
+                self.len()
+            )));
+        }
+        let keys: Vec<u64> = self.meta.iter().map(|m| m.id.0).collect();
+        for (idx, d) in self.served_window.delta(&keys, counts).into_iter().enumerate() {
+            self.meta[idx].demand += d as f64;
+        }
+        Ok(())
+    }
+
+    /// Start a fresh observation window: zero every tenant's demand
+    /// counter (stale traffic should not outvote current traffic
+    /// forever).
+    pub fn reset_demand(&mut self) {
+        for m in &mut self.meta {
+            m.demand = 0.0;
+        }
+    }
+
+    /// Per-tenant observed load weights, in slot order: observed demand
+    /// (requests) × the cost model's per-request serial latency — so a
+    /// hot light model and a warm heavy model compare fairly. Until any
+    /// demand is recorded, falls back to the cost model alone (the same
+    /// weights the initial placement balanced, i.e. "assume uniform
+    /// traffic").
+    pub fn observed_tenant_weights(&self) -> Vec<f64> {
+        let observed = self.meta.iter().any(|m| m.demand > 0.0);
+        self.set
+            .tenants
+            .iter()
+            .zip(&self.meta)
+            .map(|(dfg, m)| {
+                let per_request = self.set.cost.sequential_latency_us(dfg);
+                if observed {
+                    m.demand * per_request
+                } else {
+                    per_request
+                }
+            })
+            .collect()
+    }
+
+    /// Per-device observed load: [`GacerEngine::observed_tenant_weights`]
+    /// summed by the current placement — what [`MigrationPolicy`]
+    /// thresholds on.
+    pub fn observed_device_loads(&self) -> Vec<f64> {
+        let weights = self.observed_tenant_weights();
+        (0..self.n_devices)
+            .map(|d| {
+                self.sharded
+                    .placement
+                    .tenants_on(d)
+                    .iter()
+                    .map(|&s| weights[s])
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Migrate one tenant to another device — the load-drift correction
+    /// a [`MigrationPolicy`] proposes. The tenant keeps its stable id
+    /// *and its global slot* (migration never compacts slots, unlike
+    /// eviction); only its device changes. Exactly the **two affected
+    /// shards** are re-planned, each with an incremental seeded
+    /// re-search ([`crate::search::ShardedSearch::research_devices`]);
+    /// every other device's plan is left bit-identical. Pair with
+    /// [`GacerEngine::redeploy_cluster`] to make the move live.
+    ///
+    /// Returns the device the tenant came from.
+    pub fn migrate(&mut self, id: TenantId, to: usize) -> Result<usize> {
+        let slot = self.index_of(id)?;
+        if to >= self.n_devices {
+            return Err(Error::InvalidConfig(format!(
+                "cannot migrate {id} to device {to}: only {} devices",
+                self.n_devices
+            )));
+        }
+        let (from, local) = self
+            .sharded
+            .placement
+            .locate(slot)
+            .ok_or_else(|| Error::InvalidPlan(format!("tenant {id} has no device")))?;
+        if from == to {
+            return Err(Error::InvalidConfig(format!(
+                "tenant {id} is already on device {to}"
+            )));
+        }
+        // Reshape: drop from the source shard, insert into the
+        // destination shard at the position its global slot sorts to.
+        let dfg_len = self.set.tenants[slot].len();
+        self.sharded.shards[from].remove_tenant(local);
+        self.sharded.placement.move_slot(slot, to);
+        let dest_local = self
+            .sharded
+            .placement
+            .tenants_on(to)
+            .iter()
+            .position(|&s| s == slot)
+            .expect("slot was just placed on the destination");
+        let level = self.sharded.shards[to].pointers.pointers_per_tenant();
+        self.sharded.shards[to].insert_tenant(dest_local, dfg_len, level);
+
+        // Two-shard seeded re-search: source (may now be empty) and
+        // destination, nothing else.
+        let seeds = vec![
+            self.sharded.shards[from].clone(),
+            self.sharded.shards[to].clone(),
+        ];
+        let reports = ShardedSearch::new(&self.set, self.opts, self.search_cfg)
+            .research_devices(&self.sharded.placement, &[from, to], seeds);
+        for (&d, report) in [from, to].iter().zip(reports) {
+            match report {
+                Some(report) => {
+                    self.sharded.shards[d] = report.plan.clone();
+                    self.reports[d] = Some(report.clone());
+                    self.last_report = Some(report);
+                }
+                None => {
+                    self.sharded.shards[d] = DeploymentPlan::unregulated(0);
+                    self.reports[d] = None;
+                }
+            }
+        }
+        self.last_searched_device = Some(to);
+        self.last_searched_devices = vec![from, to];
+        // The tenant's server-side counter restarts on its new device:
+        // drop its baseline so the next `record_served` attributes the
+        // fresh counter's full value instead of guessing from direction.
+        self.served_window.forget(id.0);
+        self.rebuild_merged();
+        Ok(from)
+    }
+
+    /// Consult a [`MigrationPolicy`] against the observed device loads
+    /// and, if it proposes a move, execute it with
+    /// [`GacerEngine::migrate`]. Returns the executed migration, `None`
+    /// when the cluster is balanced enough (or no single move helps).
+    /// The operations loop calls this periodically, then
+    /// [`GacerEngine::redeploy_cluster`] when a move happened.
+    ///
+    /// ```
+    /// use gacer::engine::{GacerEngine, MigrationPolicy};
+    /// use gacer::models::zoo;
+    /// use gacer::search::SearchConfig;
+    ///
+    /// let quick = SearchConfig {
+    ///     max_pointers: 1,
+    ///     rounds_per_level: 1,
+    ///     positions_per_coordinate: 4,
+    ///     spatial_steps_per_level: 1,
+    ///     ..Default::default()
+    /// };
+    /// let mut engine = GacerEngine::builder()
+    ///     .devices(2)
+    ///     .search(quick)
+    ///     .tenant(zoo::build_default("Alex").unwrap())
+    ///     .tenant(zoo::build_default("M3").unwrap())
+    ///     .tenant(zoo::build_default("R18").unwrap())
+    ///     .build()
+    ///     .unwrap();
+    /// // Balanced so far: nothing to do.
+    /// assert!(engine.maybe_migrate(&MigrationPolicy::default()).unwrap().is_none());
+    /// // Traffic drifts: every tenant on the 2-tenant device runs hot.
+    /// let busy: Vec<_> = engine
+    ///     .tenant_ids()
+    ///     .into_iter()
+    ///     .enumerate()
+    ///     .filter(|&(slot, _)| engine.placement().tenants_on(0).contains(&slot))
+    ///     .collect();
+    /// for &(_, id) in &busy {
+    ///     engine.record_requests(id, 10_000).unwrap();
+    /// }
+    /// if busy.len() > 1 {
+    ///     let m = engine.maybe_migrate(&MigrationPolicy::default()).unwrap().unwrap();
+    ///     assert_eq!((m.from, m.to), (0, 1));
+    ///     assert_eq!(engine.last_searched_devices(), &[0, 1]);
+    /// }
+    /// ```
+    pub fn maybe_migrate(
+        &mut self,
+        policy: &MigrationPolicy,
+    ) -> Result<Option<Migration>> {
+        let weights = self.observed_tenant_weights();
+        let Some(proposal) = policy.propose(&weights, &self.sharded.placement) else {
+            return Ok(None);
+        };
+        let id = self.meta[proposal.slot].id;
+        self.migrate(id, proposal.to)?;
+        Ok(Some(Migration { tenant: id, from: proposal.from, to: proposal.to }))
     }
 }
 
@@ -914,12 +1266,126 @@ mod tests {
     }
 
     #[test]
+    fn migrate_moves_one_tenant_and_researches_both_shards() {
+        let mut engine = demo_sharded(&["Alex", "V16", "R18"], 2);
+        let ids = engine.tenant_ids();
+        let from = engine.device_of(ids[0]).unwrap();
+        let to = 1 - from;
+        assert_eq!(engine.migrate(ids[0], to).unwrap(), from);
+        // Same id, same global slot, new device.
+        assert_eq!(engine.device_of(ids[0]).unwrap(), to);
+        assert_eq!(engine.tenant_ids(), ids, "migration never compacts slots");
+        assert_eq!(engine.last_searched_devices(), &[from, to]);
+        engine.sharded_plan().validate(engine.tenants()).unwrap();
+        engine.plan().validate(engine.tenants()).unwrap();
+        // Migrating to the same device or out of range is rejected.
+        assert!(engine.migrate(ids[0], to).is_err());
+        assert!(engine.migrate(ids[0], 7).is_err());
+    }
+
+    #[test]
+    fn demand_skew_drives_maybe_migrate() {
+        let mut engine = demo_sharded(&["Alex", "V16", "R18", "M3"], 2);
+        // Balanced placement + no observed traffic: no migration.
+        assert!(engine
+            .maybe_migrate(&MigrationPolicy::default())
+            .unwrap()
+            .is_none());
+        // Drive all observed load onto one device until the policy acts:
+        // pick a device sharing >= 2 tenants (4 tenants on 2 devices
+        // guarantees one exists) so a move can actually help.
+        let ids = engine.tenant_ids();
+        let hot_device = (0..2)
+            .find(|&d| engine.placement().tenants_on(d).len() >= 2)
+            .unwrap();
+        let hot: Vec<TenantId> = ids
+            .iter()
+            .enumerate()
+            .filter(|&(slot, _)| {
+                engine.placement().tenants_on(hot_device).contains(&slot)
+            })
+            .map(|(_, &id)| id)
+            .collect();
+        assert!(hot.len() >= 2);
+        for &id in &hot {
+            engine.record_requests(id, 1_000).unwrap();
+        }
+        let m = engine
+            .maybe_migrate(&MigrationPolicy::default())
+            .unwrap()
+            .expect("fully skewed load must trigger a migration");
+        assert_eq!(m.from, hot_device);
+        assert!(hot.contains(&m.tenant));
+        assert_eq!(engine.device_of(m.tenant).unwrap(), m.to);
+        engine.sharded_plan().validate(engine.tenants()).unwrap();
+        // A fresh window forgets the skew.
+        engine.reset_demand();
+        assert!(engine.observed_tenant_weights().iter().all(|&w| w > 0.0));
+    }
+
+    #[test]
+    fn record_served_diffs_cumulative_counters_by_id() {
+        let mut engine = demo_sharded(&["Alex", "R18", "M3"], 2);
+        let ids = engine.tenant_ids();
+        engine.record_served(&[5, 3, 0]).unwrap();
+        engine.record_served(&[9, 3, 2]).unwrap();
+        assert_eq!(
+            engine.meta.iter().map(|m| m.demand).collect::<Vec<_>>(),
+            vec![9.0, 3.0, 2.0],
+            "cumulative counts diff to their totals"
+        );
+        // Evict the first tenant: later counters keep their identity even
+        // though slots compact.
+        engine.evict(ids[0]).unwrap();
+        engine.record_served(&[4, 2]).unwrap();
+        assert_eq!(
+            engine.meta.iter().map(|m| m.demand).collect::<Vec<_>>(),
+            vec![3.0 + 1.0, 2.0],
+            "no misattribution across the slot shift"
+        );
+        // Arity must match the deployment.
+        assert!(engine.record_served(&[1]).is_err());
+    }
+
+    #[test]
+    fn observed_loads_fall_back_to_cost_model() {
+        let mut engine = demo_sharded(&["Alex", "R18"], 2);
+        let static_loads = engine.placement().loads(&engine.set);
+        assert_eq!(engine.observed_device_loads(), static_loads);
+        // One observation switches to demand weighting.
+        let ids = engine.tenant_ids();
+        engine.record_requests(ids[0], 5).unwrap();
+        let loads = engine.observed_device_loads();
+        let idle = engine.device_of(ids[1]).unwrap();
+        assert_eq!(loads[idle], 0.0, "unobserved tenant carries no load");
+        assert!(engine.record_requests(TenantId(999), 1).is_err());
+    }
+
+    #[test]
     fn multi_device_deployment_requires_sharded_api() {
         let engine = demo_sharded(&["Alex", "R18"], 2);
         match engine.deployment() {
             Err(Error::InvalidConfig(_)) => {}
             other => panic!("expected InvalidConfig, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn duplicate_serving_names_rejected_sim_names_free() {
+        // A serving name is a live identity (hot swaps match queues by
+        // it): deploying it twice is rejected at admission.
+        let b = GacerEngine::builder()
+            .search(quick_cfg())
+            .serving_tenant("t0", "tiny_cnn", default_policy())
+            .unwrap()
+            .serving_tenant("t0", "tiny_cnn", default_policy())
+            .unwrap();
+        assert!(matches!(b.build(), Err(Error::InvalidConfig(_))));
+        // Simulation-only tenants never reach a server and may share
+        // names freely.
+        let mut engine = demo_engine(&["Alex"]);
+        engine.admit(zoo::build_default("Alex").unwrap()).unwrap();
+        assert_eq!(engine.len(), 2);
     }
 
     #[test]

@@ -22,8 +22,13 @@
 //! → [`engine::ShardedDeployment`] → one [`coordinator::Server`] per device
 //! behind a [`coordinator::ClusterServer`]. With the default single device
 //! this collapses to the classic pipeline: search →
-//! [`engine::Deployment`] → [`coordinator::Server`]. See `DESIGN.md` for
-//! the layer map and the engine↔server lowering contract, and
+//! [`engine::Deployment`] → [`coordinator::Server`]. Deployments are
+//! **live**: re-searched plans hot-swap into running servers
+//! ([`engine::GacerEngine::redeploy_cluster`], epoch-fenced — no
+//! restart), and an [`engine::MigrationPolicy`] moves tenants between
+//! devices when observed load drifts. See `DESIGN.md` for the layer map
+//! and the engine↔server lowering contract, `docs/OPERATIONS.md` for the
+//! serving lifecycle (mirrored by `examples/live_redeploy.rs`), and
 //! `docs/TUTORIAL.md` for an end-to-end walkthrough (mirrored by
 //! `examples/sharded_serving.rs`). Errors at every public boundary are
 //! the typed [`Error`] enum.
@@ -54,7 +59,8 @@ pub mod prelude {
     pub use crate::coordinator::ClusterServer;
     pub use crate::dfg::{Dfg, OpId, OpKind, Operator};
     pub use crate::engine::{
-        Deployment, EngineBuilder, GacerEngine, ShardedDeployment, TenantId,
+        Deployment, EngineBuilder, GacerEngine, Migration, MigrationPolicy,
+        MigrationProposal, ShardedDeployment, TenantId,
     };
     pub use crate::error::{Error, Result};
     pub use crate::gpu::{GpuSim, SimOutcome, SimOptions};

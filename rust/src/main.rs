@@ -6,11 +6,15 @@
 //!   gacer simulate [--models R50,V16,M3] [--platform TitanV]
 //!   gacer search   [--models R50,V16,M3] [--platform TitanV] [--max-pointers 6] [--devices 1]
 //!   gacer serve    [--artifacts artifacts] [--requests 64] [--tenants tiny_cnn,...] [--devices 1]
+//!                  [--live-admit tiny_cnn]
 //!
 //! `--devices N` gives the deployment a device dimension: tenants are
 //! placed across N devices (cost-model bin-packing), each device gets its
 //! own granularity-aware search, and `serve` runs one coordinator per
-//! device behind a routing front-end.
+//! device behind a routing front-end. `--live-admit FAMILY` then admits
+//! one more tenant against the *running* cluster and hot-swaps the
+//! re-searched plan in (no restart) — the live re-deployment path of
+//! `docs/OPERATIONS.md`.
 
 use gacer::baselines::BaselineKind;
 use gacer::bench_util::{fig7_header, fig7_row, run_combo};
@@ -25,11 +29,16 @@ const USAGE: &str = "usage: gacer <simulate|search|serve> [options]
   simulate --models R50,V16,M3 --platform TitanV
   search   --models R50,V16,M3 --platform TitanV --max-pointers 6 --devices 1
   serve    --artifacts artifacts --requests 64 --tenants tiny_cnn,tiny_cnn,tiny_cnn --devices 1
+           [--live-admit tiny_cnn]
 
   --devices N   shard the deployment across N devices: tenants are placed
                 by cost-model bin-packing, each device is searched
                 independently, and serving runs one coordinator per device
-                behind a placement-routing front-end (default 1)";
+                behind a placement-routing front-end (default 1)
+  --live-admit FAMILY
+                after serving the initial tenants, admit one more FAMILY
+                tenant against the running cluster and hot-swap the
+                re-searched plan in without a restart (live re-deployment)";
 
 fn parse_models(s: &str) -> Vec<String> {
     s.split(',').map(|m| m.trim().to_string()).collect()
@@ -131,7 +140,13 @@ fn main() -> gacer::Result<()> {
             let requests = args.opt_usize("requests", 64);
             let devices = args.opt_usize("devices", 1).max(1);
             let tenants = parse_models(args.opt_or("tenants", "tiny_cnn,tiny_cnn,tiny_cnn"));
-            gacer::coordinator::serve_demo(&artifacts, &tenants, requests, devices)?;
+            gacer::coordinator::serve_demo(
+                &artifacts,
+                &tenants,
+                requests,
+                devices,
+                args.opt("live-admit"),
+            )?;
         }
         other => {
             eprintln!("unknown command: {other}\n{USAGE}");

@@ -1,7 +1,102 @@
 //! Serving + evaluation metrics: latency histograms, throughput counters,
-//! and report-ready summaries.
+//! load-imbalance measures for migration decisions, and report-ready
+//! summaries.
 
 use std::time::Duration;
+
+/// Max/min device-load ratio — the imbalance measure
+/// [`crate::engine::MigrationPolicy`] thresholds on. `1.0` for an empty
+/// or all-idle cluster (nothing to balance), `f64::INFINITY` when some
+/// device carries load while another sits idle.
+///
+/// ```
+/// use gacer::metrics::imbalance_ratio;
+///
+/// assert_eq!(imbalance_ratio(&[4.0, 2.0]), 2.0);
+/// assert_eq!(imbalance_ratio(&[3.0, 0.0]), f64::INFINITY);
+/// assert_eq!(imbalance_ratio(&[0.0, 0.0]), 1.0);
+/// assert_eq!(imbalance_ratio(&[]), 1.0);
+/// ```
+pub fn imbalance_ratio(loads: &[f64]) -> f64 {
+    let max = loads.iter().copied().fold(0.0f64, f64::max);
+    if loads.is_empty() || max <= 0.0 {
+        return 1.0;
+    }
+    let min = loads.iter().copied().fold(f64::INFINITY, f64::min);
+    if min <= 0.0 {
+        f64::INFINITY
+    } else {
+        max / min
+    }
+}
+
+/// Delta extractor over cumulative per-slot counters (e.g.
+/// [`crate::coordinator::ClusterServer::served_counts`]): each call
+/// returns the requests observed since the previous call — the per-window
+/// demand signal an operations loop feeds into
+/// [`crate::engine::GacerEngine::record_requests`].
+///
+/// Counters are tracked by a caller-supplied stable **key** per slot
+/// (e.g. `TenantId.0`), not by slot position — so admissions, evictions
+/// (which compact slot indices), and any combination of the two within
+/// one window can never attribute one tenant's history to another. A
+/// key seen for the first time contributes its full cumulative value
+/// (everything it served since admission); a known key whose counter
+/// went *backwards* (the server-side counter restarted, e.g. the tenant
+/// migrated to a fresh device) contributes its new cumulative value.
+/// That direction heuristic can under-count when a restarted counter
+/// passes its old value within a single window — a caller that *knows*
+/// a restart happened should [`DemandWindow::forget`] the key instead
+/// of relying on it. Engine users can skip this type entirely:
+/// [`crate::engine::GacerEngine::record_served`] wraps it keyed by
+/// [`TenantId`], forgetting a tenant's baseline whenever the engine
+/// itself migrates it.
+///
+/// [`TenantId`]: crate::engine::TenantId
+#[derive(Debug, Clone, Default)]
+pub struct DemandWindow {
+    last: std::collections::BTreeMap<u64, u64>,
+}
+
+impl DemandWindow {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Requests per slot since the previous call. `keys[i]` is the
+    /// stable identity of the tenant occupying slot `i`, parallel to
+    /// `cumulative`. Keys absent from this call (evicted tenants) are
+    /// forgotten.
+    ///
+    /// # Panics
+    /// If `keys` and `cumulative` differ in length.
+    pub fn delta(&mut self, keys: &[u64], cumulative: &[u64]) -> Vec<u64> {
+        assert_eq!(keys.len(), cumulative.len(), "one key per counter");
+        let out = keys
+            .iter()
+            .zip(cumulative)
+            .map(|(&k, &c)| {
+                let prev = self.last.get(&k).copied().unwrap_or(0);
+                if c >= prev {
+                    c - prev
+                } else {
+                    c
+                }
+            })
+            .collect();
+        self.last = keys.iter().copied().zip(cumulative.iter().copied()).collect();
+        out
+    }
+
+    /// Drop a key's baseline: its next appearance is treated as
+    /// first-seen (full cumulative value = the delta). Call when the
+    /// underlying counter is known to restart — e.g. the engine forgets
+    /// a tenant on migration, since its new device starts counting from
+    /// zero.
+    pub fn forget(&mut self, key: u64) {
+        self.last.remove(&key);
+    }
+}
 
 /// Latency sample recorder with percentile queries.
 ///
@@ -133,6 +228,38 @@ mod tests {
         let mut h = LatencyHistogram::new();
         h.record(Duration::from_micros(123));
         assert!(h.summary().contains("n=1"));
+    }
+
+    #[test]
+    fn demand_window_deltas() {
+        let mut w = DemandWindow::new();
+        // Tenants A=10, B=11 at slots 0, 1.
+        assert_eq!(w.delta(&[10, 11], &[3, 5]), vec![3, 5], "first window = total");
+        assert_eq!(w.delta(&[10, 11], &[4, 5]), vec![1, 0]);
+        // Counter restart for a known key (migration to a fresh device).
+        assert_eq!(w.delta(&[10, 11], &[6, 2]), vec![2, 2]);
+        // Admission: C=12 appears, contributing its full count.
+        assert_eq!(w.delta(&[10, 11, 12], &[6, 3, 7]), vec![0, 1, 7]);
+        // Evict A + admit D in one window: B compacts to slot 0 keeping
+        // its counter — tracked by key, nothing is misattributed.
+        assert_eq!(w.delta(&[11, 13], &[3, 4]), vec![0, 4]);
+    }
+
+    #[test]
+    fn demand_window_forget_rebaselines_a_key() {
+        let mut w = DemandWindow::new();
+        w.delta(&[10], &[5]);
+        // The counter restarted and already caught up past its old
+        // value: the direction heuristic alone would report 10-5=5.
+        // Forgetting the key makes the restart explicit: all 10 count.
+        w.forget(10);
+        assert_eq!(w.delta(&[10], &[10]), vec![10]);
+    }
+
+    #[test]
+    #[should_panic(expected = "one key per counter")]
+    fn demand_window_rejects_arity_mismatch() {
+        DemandWindow::new().delta(&[1], &[2, 3]);
     }
 
     #[test]

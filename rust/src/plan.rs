@@ -110,22 +110,60 @@ impl DeploymentPlan {
     /// starts the newcomer at the deployment's current pointer level).
     pub fn push_tenant(&mut self, dfg_len: usize, n_pointers: usize) {
         self.chunking.push(ChunkMap::new());
-        // A DFG with fewer than 2 ops has no legal pointer position
-        // (valid range is 1..len): it joins as a single segment.
-        let seeded: Vec<usize> = if dfg_len < 2 {
-            Vec::new()
-        } else {
-            (1..=n_pointers)
-                .map(|j| (j * dfg_len / (n_pointers + 1)).clamp(1, dfg_len - 1))
-                .collect()
-        };
-        self.pointers.push_tenant(seeded);
+        self.pointers.push_tenant(seeded_pointers(dfg_len, n_pointers));
+    }
+
+    /// Insert a tenant at local slot `at` (a migrated tenant's global slot
+    /// can fall anywhere in the destination device's ascending local
+    /// order, unlike an admission, which always appends). Seeded like
+    /// [`DeploymentPlan::push_tenant`].
+    pub fn insert_tenant(&mut self, at: usize, dfg_len: usize, n_pointers: usize) {
+        self.chunking.insert(at, ChunkMap::new());
+        self.pointers.insert_tenant(at, seeded_pointers(dfg_len, n_pointers));
     }
 
     /// Drop tenant `i`'s chunk map and pointer list (eviction).
     pub fn remove_tenant(&mut self, i: usize) {
         self.chunking.remove(i);
         self.pointers.remove_tenant(i);
+    }
+
+    /// Plan diff: the tenant slots whose regulation actually changed
+    /// between `old` and `self` — a different chunk map or pointer list
+    /// (slots present in only one plan count as changed). Unchanged slots
+    /// lower to bit-identical serving specs, which is what lets a live
+    /// re-deployment skip untouched tenants.
+    ///
+    /// ```
+    /// use gacer::plan::DeploymentPlan;
+    ///
+    /// let old = DeploymentPlan::unregulated(3);
+    /// let mut new = old.clone();
+    /// new.pointers.set_list(1, vec![4]);
+    /// assert_eq!(new.changed_tenants(&old), vec![1]);
+    /// assert!(old.changed_tenants(&old).is_empty());
+    /// ```
+    pub fn changed_tenants(&self, old: &DeploymentPlan) -> Vec<usize> {
+        let n = self.chunking.len().max(old.chunking.len());
+        (0..n)
+            .filter(|&i| {
+                self.chunking.get(i) != old.chunking.get(i)
+                    || self.pointers.list(i) != old.pointers.list(i)
+            })
+            .collect()
+    }
+}
+
+/// Evenly spread pointer positions for a tenant joining a deployment at
+/// pointer level `n_pointers`. A DFG with fewer than 2 ops has no legal
+/// pointer position (valid range is `1..len`): it joins as one segment.
+fn seeded_pointers(dfg_len: usize, n_pointers: usize) -> Vec<usize> {
+    if dfg_len < 2 {
+        Vec::new()
+    } else {
+        (1..=n_pointers)
+            .map(|j| (j * dfg_len / (n_pointers + 1)).clamp(1, dfg_len - 1))
+            .collect()
     }
 }
 
@@ -238,6 +276,20 @@ impl Placement {
         let a = &mut self.assignments[device];
         let at = a.partition_point(|&s| s < slot);
         a.insert(at, slot);
+    }
+
+    /// Re-home a placed slot onto `device` without compacting slot
+    /// indices (tenant **migration**: the tenant keeps its global slot,
+    /// only its device changes). Returns the device the slot came from,
+    /// `None` if the slot is unplaced. Moving a slot onto its own device
+    /// is a no-op.
+    pub fn move_slot(&mut self, slot: usize, device: usize) -> Option<usize> {
+        let (from, local) = self.locate(slot)?;
+        if from != device {
+            self.assignments[from].remove(local);
+            self.assign(slot, device);
+        }
+        Some(from)
     }
 
     /// Remove a global slot (eviction) and shift the later slots down —
@@ -372,6 +424,45 @@ impl ShardedDeploymentPlan {
             })?;
         }
         Ok(())
+    }
+
+    /// Device-level plan diff: the devices whose deployment changed
+    /// between `old` and `self` — a different tenant slot membership
+    /// (placement) or a different shard plan.
+    ///
+    /// The comparison is by **global slot number**. Admission appends a
+    /// slot and migration preserves them, so for those events exactly
+    /// the re-searched devices diff; an *eviction* compacts every later
+    /// slot down, which renumbers other devices' membership lists too —
+    /// they then diff as changed even though their tenants and shard
+    /// plans are identical. The serving-path diff is immune to this:
+    /// [`crate::coordinator::ClusterServer::apply`] compares lowered
+    /// deployments (tenant specs, no slot numbers), so an eviction still
+    /// hot-swaps only the device that lost the tenant.
+    ///
+    /// ```
+    /// use gacer::plan::{Placement, ShardedDeploymentPlan};
+    ///
+    /// let p = Placement::from_assignments(vec![vec![0], vec![1], vec![2]]);
+    /// let old = ShardedDeploymentPlan::unregulated(p);
+    /// let mut new = old.clone();
+    /// new.shards[2].pointers.set_list(0, vec![3]);
+    /// assert_eq!(new.changed_devices(&old), vec![2]);
+    /// // Migrating slot 0 onto device 1 changes devices 0 and 1 only.
+    /// let mut moved = old.clone();
+    /// moved.placement.move_slot(0, 1);
+    /// moved.shards[0] = gacer::plan::DeploymentPlan::unregulated(0);
+    /// moved.shards[1] = gacer::plan::DeploymentPlan::unregulated(2);
+    /// assert_eq!(moved.changed_devices(&old), vec![0, 1]);
+    /// ```
+    pub fn changed_devices(&self, old: &ShardedDeploymentPlan) -> Vec<usize> {
+        let n = self.n_devices().max(old.n_devices());
+        (0..n)
+            .filter(|&d| {
+                self.placement.tenants_on(d) != old.placement.tenants_on(d)
+                    || self.shards.get(d) != old.shards.get(d)
+            })
+            .collect()
     }
 
     /// Project the shards back onto global slot order: one chunk map and
@@ -852,6 +943,82 @@ mod tests {
         let d1 = set.shard(&placement, 1);
         assert_eq!(d1.len(), 1);
         assert_eq!(d1.tenants[0].name, tenants[1].name);
+    }
+
+    #[test]
+    fn move_slot_rehomes_without_compaction() {
+        let mut p = Placement::from_assignments(vec![vec![0, 2], vec![1]]);
+        assert_eq!(p.move_slot(2, 1), Some(0));
+        p.validate(3).unwrap();
+        assert_eq!(p.tenants_on(0), &[0]);
+        assert_eq!(p.tenants_on(1), &[1, 2], "global slots unchanged");
+        // Moving onto the same device is a no-op.
+        assert_eq!(p.move_slot(1, 1), Some(1));
+        assert_eq!(p.tenants_on(1), &[1, 2]);
+        // Unplaced slots report None.
+        assert_eq!(p.move_slot(9, 0), None);
+    }
+
+    #[test]
+    fn insert_tenant_lands_mid_plan() {
+        let mut plan = DeploymentPlan::unregulated(2);
+        plan.pointers.set_list(0, vec![3]);
+        plan.pointers.set_list(1, vec![5]);
+        // A migrated tenant whose global slot sorts between the two.
+        plan.insert_tenant(1, 10, 1);
+        assert_eq!(plan.chunking.len(), 3);
+        assert_eq!(plan.pointers.list(0), &[3]);
+        assert_eq!(plan.pointers.list(1).len(), 1, "seeded at current level");
+        assert_eq!(plan.pointers.list(2), &[5], "old slot 1 shifted up");
+    }
+
+    #[test]
+    fn changed_tenants_reports_exact_slots() {
+        let (tenants, _) = setup();
+        let old = DeploymentPlan::unregulated(3);
+        assert!(old.changed_tenants(&old).is_empty());
+        let mut new = old.clone();
+        new.pointers.set_list(2, vec![4]);
+        new.chunking[0].insert(0, vec![4, 4]);
+        assert_eq!(new.changed_tenants(&old), vec![0, 2]);
+        new.validate(&tenants).unwrap();
+        // Arity mismatch: the extra slot counts as changed.
+        let mut grown = old.clone();
+        grown.push_tenant(12, 0);
+        assert_eq!(grown.changed_tenants(&old), vec![3]);
+    }
+
+    #[test]
+    fn changed_devices_tracks_membership_and_shards() {
+        let p = Placement::from_assignments(vec![vec![0, 1], vec![2]]);
+        let old = ShardedDeploymentPlan::unregulated(p);
+        assert!(old.changed_devices(&old).is_empty());
+        // A re-searched shard changes its device only.
+        let mut new = old.clone();
+        new.shards[1].pointers.set_list(0, vec![2]);
+        assert_eq!(new.changed_devices(&old), vec![1]);
+        // A migration changes exactly the two affected devices.
+        let mut moved = old.clone();
+        moved.placement.move_slot(1, 1);
+        moved.shards[0] = DeploymentPlan::unregulated(1);
+        moved.shards[1] = DeploymentPlan::unregulated(2);
+        assert_eq!(moved.changed_devices(&old), vec![0, 1]);
+    }
+
+    #[test]
+    fn changed_devices_after_evict_reflects_slot_renumbering() {
+        // Evicting slot 1 (device 0) compacts device 1's slots 2 -> 1:
+        // the slot-number diff reports BOTH devices, by design — device
+        // 1's membership list renumbered even though its tenant and
+        // shard plan are untouched (the serving-path diff in
+        // ClusterServer::apply compares lowered specs and is immune).
+        let old = ShardedDeploymentPlan::unregulated(Placement::from_assignments(
+            vec![vec![0, 1], vec![2]],
+        ));
+        let mut evicted = old.clone();
+        evicted.placement.remove_slot(1);
+        evicted.shards[0] = DeploymentPlan::unregulated(1);
+        assert_eq!(evicted.changed_devices(&old), vec![0, 1]);
     }
 
     #[test]

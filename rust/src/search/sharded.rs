@@ -140,6 +140,26 @@ impl<'a> ShardedSearch<'a> {
         }
         Some(GacerSearch::new(&sub, self.opts, self.cfg).run_from(seed))
     }
+
+    /// Seeded re-search of several shards in one event — tenant
+    /// **migration** re-plans exactly two devices (source and
+    /// destination) and nothing else. One seed per entry of `devices`,
+    /// in order; the result has one report slot per entry (`None` for a
+    /// device the event left empty, e.g. a source device that lost its
+    /// last tenant).
+    pub fn research_devices(
+        &self,
+        placement: &Placement,
+        devices: &[usize],
+        seeds: Vec<DeploymentPlan>,
+    ) -> Vec<Option<SearchReport>> {
+        assert_eq!(devices.len(), seeds.len(), "one seed per re-searched device");
+        devices
+            .iter()
+            .zip(seeds)
+            .map(|(&d, seed)| self.research_device(placement, d, seed))
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -203,6 +223,22 @@ mod tests {
         r.plan.validate(&ts.tenants).unwrap();
         assert_eq!(r.reports.iter().flatten().count(), 1);
         assert_eq!(r.plan.shards.iter().filter(|s| s.chunking.is_empty()).count(), 2);
+    }
+
+    #[test]
+    fn research_devices_runs_one_seeded_search_per_entry() {
+        let ts = set(&["Alex", "V16", "R18"]);
+        let opts = SimOptions::for_platform(&Platform::titan_v());
+        let search = ShardedSearch::new(&ts, opts, quick_cfg());
+        // The migration shape: re-search both devices, one seed each; a
+        // device emptied by the event yields None.
+        let reports = search.research_devices(
+            &Placement::from_assignments(vec![vec![0, 1, 2], vec![]]),
+            &[0, 1],
+            vec![DeploymentPlan::unregulated(3), DeploymentPlan::unregulated(0)],
+        );
+        assert!(reports[0].is_some());
+        assert!(reports[1].is_none());
     }
 
     #[test]

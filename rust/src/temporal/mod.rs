@@ -59,6 +59,15 @@ impl PointerMatrix {
         self.lists.push(list);
     }
 
+    /// Insert a pointer list at tenant position `i` (kept sorted +
+    /// deduped) — a migrated tenant's global slot can fall anywhere in
+    /// its destination device's local order, unlike an admission.
+    pub fn insert_tenant(&mut self, i: usize, mut list: Vec<usize>) {
+        list.sort_unstable();
+        list.dedup();
+        self.lists.insert(i, list);
+    }
+
     /// Drop tenant `i`'s pointer list (eviction; later tenants shift down).
     pub fn remove_tenant(&mut self, i: usize) -> Vec<usize> {
         self.lists.remove(i)
