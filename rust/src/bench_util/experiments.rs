@@ -5,8 +5,11 @@
 //! them).
 
 use crate::baselines::BaselineKind;
-use super::{fig7_header, fig7_row, run_combo, run_strategy, Strategy};
-use crate::dfg::OpKind;
+use super::{
+    compare_placements, fig7_header, fig7_row, interference_demo_mix, run_combo,
+    run_strategy, Strategy,
+};
+use crate::dfg::{Dfg, OpKind};
 use crate::gpu::SimOptions;
 use crate::models::zoo;
 use crate::plan::{DeploymentPlan, TenantSet};
@@ -259,6 +262,68 @@ pub fn table4(base_rounds: usize) {
             print!(" {:>9.2}s", t0.elapsed().as_secs_f64());
         }
         println!();
+    }
+}
+
+/// Placement objectives: LoadBalance vs InterferenceAware over
+/// heterogeneous tenant mixes on 2 devices (decision-level comparison —
+/// per-device load, predicted co-location slowdown, and the max
+/// `load × slowdown` score each objective commits to).
+pub fn placement_objectives() {
+    println!("== Placement objectives: LoadBalance vs InterferenceAware (2 devices) ==");
+    let platform = Platform::titan_v();
+    let mixes: Vec<(&str, Vec<Dfg>)> = vec![
+        // The canonical disagreement: two pool-saturating tenants whose
+        // serial weights trick LPT into pairing them.
+        ("2 saturating + 2 bandwidth-light", interference_demo_mix(&platform)),
+        // Heterogeneous zoo mixes: large-batch vision tenants saturate,
+        // the mobile/sequence tenants keep the occupancy spread wide.
+        (
+            "V16(32)+R18(32)+M3+LSTM",
+            vec![
+                zoo::build("V16", 32).unwrap(),
+                zoo::build("R18", 32).unwrap(),
+                zoo::build_default("M3").unwrap(),
+                zoo::build_default("LSTM").unwrap(),
+            ],
+        ),
+        ("R50+V16+M3+Alex", zoo::build_combo(&["R50", "V16", "M3", "Alex"])),
+        (
+            "R101(16)+D121(16)+M3+BST",
+            vec![
+                zoo::build("R101", 16).unwrap(),
+                zoo::build("D121", 16).unwrap(),
+                zoo::build_default("M3").unwrap(),
+                zoo::build_default("BST").unwrap(),
+            ],
+        ),
+    ];
+    for (label, tenants) in mixes {
+        println!("-- {label}");
+        let arms = compare_placements(tenants, &platform, 2);
+        for arm in &arms {
+            println!(
+                "  {:<17} max score {:>8.2} ms  (max load {:>8.2} ms, max slowdown {:.2}x)",
+                arm.objective.label(),
+                arm.max_score_ms,
+                arm.max_load_ms(),
+                arm.max_slowdown()
+            );
+            for (d, tenants) in arm.per_device.iter().enumerate() {
+                println!(
+                    "      device {d}: {tenants:?}  load {:.2} ms, slowdown {:.2}x",
+                    arm.loads_ms[d], arm.slowdowns[d]
+                );
+            }
+        }
+        let (lb, ia) = (&arms[0], &arms[1]);
+        println!(
+            "  => interference-aware lowers the predicted bottleneck score by {:.1}% \
+             (slowdown {:.2}x -> {:.2}x)",
+            (1.0 - ia.max_score_ms / lb.max_score_ms.max(f64::MIN_POSITIVE)) * 100.0,
+            lb.max_slowdown(),
+            ia.max_slowdown()
+        );
     }
 }
 

@@ -5,9 +5,10 @@
 pub mod experiments;
 
 use crate::baselines::{Baseline, BaselineKind};
+use crate::dfg::{Dfg, OpKind};
 use crate::gpu::{SimOptions, SimOutcome};
 use crate::models::zoo;
-use crate::plan::TenantSet;
+use crate::plan::{Placement, PlacementObjective, TenantSet};
 use crate::profile::{CostModel, Platform};
 use crate::search::{GacerSearch, SearchConfig, ShardedSearch};
 
@@ -99,6 +100,9 @@ pub struct ShardCell {
     pub tenants: Vec<String>,
     /// Searched makespan of this device's shard (0 for idle devices).
     pub makespan_ms: f64,
+    /// Predicted co-location slowdown of the device's tenant group under
+    /// the cost model's occupancy curves (1.0 = interference-free).
+    pub predicted_slowdown: f64,
 }
 
 /// Run the sharded GACER search on a combo across `n_devices` and report
@@ -114,6 +118,7 @@ pub fn run_sharded(
     let ts = TenantSet::new(tenants.clone(), CostModel::new(*platform));
     let report =
         ShardedSearch::new(&ts, SimOptions::for_platform(platform), cfg).run(n_devices);
+    let slowdowns = report.plan.placement.predicted_slowdowns(&ts);
     let cells = (0..n_devices)
         .map(|d| ShardCell {
             device: d,
@@ -127,9 +132,100 @@ pub fn run_sharded(
             makespan_ms: report.reports[d]
                 .as_ref()
                 .map_or(0.0, |r| r.outcome.makespan_us / 1e3),
+            predicted_slowdown: slowdowns[d],
         })
         .collect();
     (cells, report.cluster_makespan_us() / 1e3)
+}
+
+/// One arm of a placement-objective comparison: how one objective shards
+/// a tenant mix and what contention it predicts.
+#[derive(Debug, Clone)]
+pub struct PlacementArm {
+    pub objective: PlacementObjective,
+    /// Tenant names per device.
+    pub per_device: Vec<Vec<String>>,
+    /// Cost-model load per device (summed serial latency, ms).
+    pub loads_ms: Vec<f64>,
+    /// Predicted co-location slowdown per device (1.0 = free).
+    pub slowdowns: Vec<f64>,
+    /// The interference objective's figure of merit: max per-device
+    /// `load × slowdown` (ms).
+    pub max_score_ms: f64,
+}
+
+impl PlacementArm {
+    /// The bottleneck device's predicted slowdown.
+    pub fn max_slowdown(&self) -> f64 {
+        self.slowdowns.iter().copied().fold(1.0, f64::max)
+    }
+
+    /// The bottleneck device's raw load (ms).
+    pub fn max_load_ms(&self) -> f64 {
+        self.loads_ms.iter().copied().fold(0.0, f64::max)
+    }
+}
+
+/// Compare placement objectives on one tenant mix: how LoadBalance vs
+/// InterferenceAware shard it across `n_devices` and the contention each
+/// predicts — the decision-level comparison (no per-shard search, so it
+/// is cheap enough to sweep mixes).
+pub fn compare_placements(
+    tenants: Vec<Dfg>,
+    platform: &Platform,
+    n_devices: usize,
+) -> Vec<PlacementArm> {
+    let set = TenantSet::new(tenants, CostModel::new(*platform));
+    [PlacementObjective::LoadBalance, PlacementObjective::InterferenceAware]
+        .into_iter()
+        .map(|objective| {
+            let p = Placement::with_objective(&set, n_devices, objective);
+            let scores = p.interference_scores(&set);
+            PlacementArm {
+                objective,
+                per_device: (0..p.n_devices())
+                    .map(|d| {
+                        p.tenants_on(d)
+                            .iter()
+                            .map(|&s| set.tenants[s].name.clone())
+                            .collect()
+                    })
+                    .collect(),
+                loads_ms: p.loads(&set).into_iter().map(|l| l / 1e3).collect(),
+                slowdowns: p.predicted_slowdowns(&set),
+                max_score_ms: scores.into_iter().fold(0.0, f64::max) / 1e3,
+            }
+        })
+        .collect()
+}
+
+/// A heterogeneous tenant mix on which the two placement objectives
+/// disagree: two SM-pool-saturating tenants (`hi-a`, `hi-b`, batch-32
+/// convs) whose serial weights trick plain LPT into co-locating them,
+/// plus two low-occupancy tenants (`lo-a`, `lo-b`, batch-1 convs at
+/// ~10% pool occupancy) that idle the other device's SMs. Op counts are
+/// calibrated against the platform's cost model (weights ≈
+/// `[4, 2.4, 2.2, 2] ×` one batch-32 conv), so the shape survives
+/// calibration changes: LPT packs `hi-a` with `hi-b`; the
+/// interference-aware objective keeps them apart.
+pub fn interference_demo_mix(platform: &Platform) -> Vec<Dfg> {
+    let cost = CostModel::new(*platform);
+    let conv = OpKind::Conv { h: 56, w: 56, cin: 256, cout: 256, k: 3, stride: 1 };
+    let d_hi = cost.cost_of(&conv, 32).duration_us;
+    let d_lo = cost.cost_of(&conv, 1).duration_us;
+    let net = |name: &str, batch: usize, n: usize| {
+        let mut d = Dfg::new(name);
+        for i in 0..n.max(1) {
+            d.push(conv, batch, format!("conv{i}"));
+        }
+        d
+    };
+    vec![
+        net("hi-a", 32, 4),
+        net("lo-a", 1, (2.4 * d_hi / d_lo).round() as usize),
+        net("lo-b", 1, (2.2 * d_hi / d_lo).round() as usize),
+        net("hi-b", 32, 2),
+    ]
 }
 
 /// Format a Fig. 7-style row: speedups normalized to CuDNN-Seq.
@@ -192,6 +288,26 @@ mod tests {
         let bottleneck = cells.iter().map(|c| c.makespan_ms).fold(0.0f64, f64::max);
         assert!((cluster_ms - bottleneck).abs() < 1e-9);
         assert!(cluster_ms > 0.0);
+        assert!(cells.iter().all(|c| c.predicted_slowdown >= 1.0));
+    }
+
+    #[test]
+    fn placement_comparison_separates_saturating_tenants() {
+        let platform = Platform::titan_v();
+        let arms = compare_placements(interference_demo_mix(&platform), &platform, 2);
+        assert_eq!(arms.len(), 2);
+        let (lb, ia) = (&arms[0], &arms[1]);
+        assert_eq!(lb.objective, PlacementObjective::LoadBalance);
+        assert_eq!(ia.objective, PlacementObjective::InterferenceAware);
+        let together = |arm: &PlacementArm| {
+            arm.per_device.iter().any(|d| {
+                d.contains(&"hi-a".to_string()) && d.contains(&"hi-b".to_string())
+            })
+        };
+        assert!(together(lb), "LPT co-locates the saturating pair");
+        assert!(!together(ia), "interference-aware separates it");
+        assert!(ia.max_slowdown() < lb.max_slowdown());
+        assert!(ia.max_score_ms < lb.max_score_ms);
     }
 
     #[test]

@@ -1,7 +1,11 @@
 //! `gacer-bench` — regenerates every table and figure of the paper's
 //! evaluation section (see DESIGN.md §6 for the experiment index).
 //!
-//! Usage: `gacer-bench <fig4|fig7|fig8|table2|fig9|table3|table4|all> [--rounds N]`
+//! Usage: `gacer-bench <fig4|fig7|fig8|table2|fig9|table3|table4|placement|all>
+//! [--rounds N]`
+//!
+//! `placement` is this repo's multi-GPU extension: LoadBalance vs
+//! InterferenceAware placement objectives over heterogeneous tenant mixes.
 
 use gacer::bench_util::experiments;
 use gacer::util::cli::Args;
@@ -15,7 +19,10 @@ fn main() {
         .unwrap_or_else(|| "all".to_string());
     let rounds = args.opt_usize("rounds", 3);
     let ids: Vec<&str> = if experiment == "all" {
-        vec!["fig4", "fig7", "fig8", "table2", "fig9", "table3", "table4"]
+        vec![
+            "fig4", "fig7", "fig8", "table2", "fig9", "table3", "table4",
+            "placement",
+        ]
     } else {
         vec![experiment.as_str()]
     };
@@ -28,6 +35,7 @@ fn main() {
             "fig9" => experiments::fig9(),
             "table3" => experiments::table3(),
             "table4" => experiments::table4(rounds),
+            "placement" => experiments::placement_objectives(),
             other => {
                 eprintln!("unknown experiment: {other}");
                 std::process::exit(2);

@@ -13,9 +13,15 @@ pub struct PendingRequest {
 }
 
 /// Batching policy: how large a batch to wait for, and for how long.
+///
+/// Invariant: `max_batch` never exceeds the largest compiled variant — a
+/// drained batch must fit the variant that runs it (`variant_for` caps at
+/// the largest variant, so a larger batch would silently overflow the
+/// compiled executable's batch dimension). [`BatchPolicy::new`] clamps at
+/// construction and [`Batcher::set_policy`] re-clamps hand-built values.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BatchPolicy {
-    /// Preferred (maximum) batch size.
+    /// Preferred (maximum) batch size; at most the largest variant.
     pub max_batch: usize,
     /// Maximum time the oldest request may wait before a partial batch is
     /// flushed.
@@ -30,6 +36,10 @@ impl BatchPolicy {
         variants.sort_unstable();
         variants.retain(|&v| v > 0);
         assert!(!variants.is_empty(), "need at least one compiled variant");
+        // Clamp to the executable range: no batch larger than the largest
+        // compiled variant, and never 0 (a zero cap would drain empty
+        // batches forever).
+        let max_batch = max_batch.clamp(1, *variants.last().unwrap());
         BatchPolicy { max_batch, max_wait, variants }
     }
 
@@ -62,8 +72,12 @@ impl Batcher {
 
     /// Swap the batching policy, keeping the queued requests (a hot plan
     /// swap re-policies a tenant without dropping its pending work).
+    /// Hand-built values are routed through the same normalization as
+    /// [`BatchPolicy::new`] — variants sorted and stripped of zeros,
+    /// `max_batch` re-clamped to the largest compiled variant — so the
+    /// [`BatchPolicy`] invariant holds however the policy was made.
     pub fn set_policy(&mut self, policy: BatchPolicy) {
-        self.policy = policy;
+        self.policy = BatchPolicy::new(policy.max_batch, policy.max_wait, policy.variants);
     }
 
     pub fn pending(&self) -> usize {
@@ -163,6 +177,44 @@ mod tests {
         let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
         assert_eq!(ids, (0..8).collect::<Vec<_>>());
         assert_eq!(b.pending(), 2);
+    }
+
+    #[test]
+    fn max_batch_clamped_to_largest_variant() {
+        // Regression: a policy asking for batches of 32 over variants
+        // [1, 2, 4] used to drain 32-request batches while reporting
+        // variant 4 — every batch overflowed the executable it named.
+        let p = BatchPolicy::new(32, Duration::from_millis(5), vec![1, 2, 4]);
+        assert_eq!(p.max_batch, 4);
+        let mut b = Batcher::new(p);
+        for i in 0..32 {
+            b.push(req(i));
+        }
+        let mut drained = 0;
+        let mut next_id = 0;
+        while let Some((variant, batch)) = b.drain(Instant::now()) {
+            assert!(batch.len() <= variant, "batch must fit its variant");
+            assert_eq!(variant, 4);
+            for r in &batch {
+                assert_eq!(r.id, next_id, "FIFO preserved across the clamp");
+                next_id += 1;
+            }
+            drained += batch.len();
+        }
+        assert_eq!(drained, 32);
+        // `set_policy` upholds the invariant on hand-built policies too.
+        b.set_policy(BatchPolicy {
+            max_batch: 99,
+            max_wait: Duration::from_millis(5),
+            variants: vec![1, 2, 4],
+        });
+        for i in 0..8 {
+            b.push(req(i));
+        }
+        let (variant, batch) = b.drain(Instant::now()).unwrap();
+        assert_eq!((variant, batch.len()), (4, 4));
+        // Zero is clamped up to a runnable batch size.
+        assert_eq!(BatchPolicy::new(0, Duration::ZERO, vec![2, 4]).max_batch, 1);
     }
 
     #[test]

@@ -25,6 +25,7 @@ use super::batcher::{BatchPolicy, Batcher, PendingRequest};
 use super::executor::ExecutorHandle;
 use crate::error::{Error, Result};
 use crate::metrics::LatencyHistogram;
+use crate::plan::PlacementObjective;
 use crate::runtime::{load_params, ArtifactManifest};
 
 /// One tenant of the serving deployment.
@@ -687,11 +688,13 @@ pub fn serve_demo(
     tenant_models: &[String],
     n_requests: usize,
     n_devices: usize,
+    objective: PlacementObjective,
     live_admit: Option<&str>,
 ) -> Result<ServeReport> {
     let mut builder = crate::engine::GacerEngine::builder()
         .platform(crate::profile::Platform::titan_v())
         .devices(n_devices)
+        .placement_objective(objective)
         .artifacts(artifact_dir);
     for (i, family) in tenant_models.iter().enumerate() {
         builder = builder.serving_tenant(

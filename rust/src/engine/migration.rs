@@ -20,7 +20,8 @@
 
 use crate::engine::TenantId;
 use crate::metrics::imbalance_ratio;
-use crate::plan::Placement;
+use crate::plan::{Placement, TenantSet};
+use crate::profile::slowdown_from_phases;
 
 /// Threshold rule for load-drift migration: act when the max/min
 /// observed device-load ratio exceeds `max_imbalance`, and only when a
@@ -55,11 +56,21 @@ pub struct MigrationPolicy {
     /// `f64::INFINITY` (a loaded device next to an idle one) always
     /// triggers.
     pub max_imbalance: f64,
+    /// Hysteresis against migration thrash: after an executed migration,
+    /// proposals that would move the same tenant straight back onto the
+    /// device it left are suppressed for this many observe windows (one
+    /// window = one [`GacerEngine::maybe_migrate`] consultation). Under
+    /// alternating skew this damps the A→B→A ping-pong: the reverse move
+    /// only executes once the skew outlives the cooldown. `0` disables
+    /// the cooldown.
+    ///
+    /// [`GacerEngine::maybe_migrate`]: crate::engine::GacerEngine::maybe_migrate
+    pub cooldown_windows: usize,
 }
 
 impl Default for MigrationPolicy {
     fn default() -> Self {
-        MigrationPolicy { max_imbalance: 2.0 }
+        MigrationPolicy { max_imbalance: 2.0, cooldown_windows: 1 }
     }
 }
 
@@ -106,7 +117,7 @@ impl MigrationPolicy {
         placement: &Placement,
     ) -> Option<MigrationProposal> {
         let n = placement.n_devices();
-        if n < 2 {
+        if n < 2 || !covers_placement(weights.len(), placement) {
             return None;
         }
         let loads: Vec<f64> = (0..n)
@@ -156,11 +167,127 @@ impl MigrationPolicy {
             imbalance_after: after,
         })
     }
+
+    /// Objective-consistent sibling of [`MigrationPolicy::propose`] for
+    /// [`PlacementObjective::InterferenceAware`] deployments. The trigger
+    /// is the same observed max/min load ratio, but candidate moves are
+    /// scored by the predicted max per-device **interference score**
+    /// (observed load × [`CostModel::colocation_slowdown`] over the
+    /// co-located DFGs' occupancy curves), and destinations are drawn
+    /// from *every* other device, not just the coolest — relieving
+    /// SM-pool contention can beat raw load smoothing. Requires a strict
+    /// improvement in the max score; declines on a weights/placement
+    /// arity mismatch exactly like `propose`.
+    ///
+    /// [`PlacementObjective::InterferenceAware`]:
+    ///     crate::plan::PlacementObjective::InterferenceAware
+    /// [`CostModel::colocation_slowdown`]:
+    ///     crate::profile::CostModel::colocation_slowdown
+    pub fn propose_interference_aware(
+        &self,
+        weights: &[f64],
+        placement: &Placement,
+        set: &TenantSet,
+    ) -> Option<MigrationProposal> {
+        let n = placement.n_devices();
+        if n < 2 || !covers_placement(weights.len().min(set.len()), placement) {
+            return None;
+        }
+        let loads: Vec<f64> = (0..n)
+            .map(|d| placement.tenants_on(d).iter().map(|&s| weights[s]).sum())
+            .collect();
+        let before = imbalance_ratio(&loads);
+        if before <= self.max_imbalance {
+            return None;
+        }
+        // Sample each tenant's occupancy timeline once; every candidate
+        // group below scores by summing the pre-sampled profiles.
+        let profiles: Vec<Vec<f64>> =
+            set.tenants.iter().map(|d| set.cost.occupancy_profile(d)).collect();
+        let slowdown_of = |slots: &[usize]| -> f64 {
+            let refs: Vec<&[f64]> =
+                slots.iter().map(|&s| profiles[s].as_slice()).collect();
+            slowdown_from_phases(&refs)
+        };
+        let scores: Vec<f64> = (0..n)
+            .map(|d| loads[d] * slowdown_of(placement.tenants_on(d)))
+            .collect();
+        let current_max = scores.iter().copied().fold(0.0f64, f64::max);
+
+        // Best single move off any score-bottleneck device: minimize
+        // (new max score, new load ratio), require a strict improvement
+        // on the max score to be worth a re-search + swap.
+        let mut best: Option<(f64, f64, usize, usize, usize)> = None;
+        for from in (0..n).filter(|&d| scores[d] >= current_max) {
+            for &slot in placement.tenants_on(from) {
+                let w = weights[slot];
+                if w <= 0.0 {
+                    continue;
+                }
+                let src_slots: Vec<usize> = placement
+                    .tenants_on(from)
+                    .iter()
+                    .copied()
+                    .filter(|&s| s != slot)
+                    .collect();
+                for to in (0..n).filter(|&t| t != from) {
+                    let mut dst_slots = placement.tenants_on(to).to_vec();
+                    dst_slots.push(slot);
+                    let mut moved = loads.clone();
+                    moved[from] -= w;
+                    moved[to] += w;
+                    let src_score = moved[from].max(0.0) * slowdown_of(&src_slots);
+                    let dst_score = moved[to] * slowdown_of(&dst_slots);
+                    let new_max = scores
+                        .iter()
+                        .enumerate()
+                        .map(|(d, &s)| {
+                            if d == from {
+                                src_score
+                            } else if d == to {
+                                dst_score
+                            } else {
+                                s
+                            }
+                        })
+                        .fold(0.0f64, f64::max);
+                    if new_max >= current_max * (1.0 - 1e-9) {
+                        continue;
+                    }
+                    let new_ratio = imbalance_ratio(&moved);
+                    let better = match &best {
+                        None => true,
+                        Some(&(m, r, ..)) => new_max < m || (new_max == m && new_ratio < r),
+                    };
+                    if better {
+                        best = Some((new_max, new_ratio, slot, from, to));
+                    }
+                }
+            }
+        }
+        best.map(|(_, after, slot, from, to)| MigrationProposal {
+            slot,
+            from,
+            to,
+            imbalance_before: before,
+            imbalance_after: after,
+        })
+    }
+}
+
+/// Whether every slot the placement places is below `len` (the observed
+/// weights' — and, for the interference variant, the tenant set's —
+/// arity). A stale observation taken before an admission grew the slot
+/// count must make the policy decline, not index out of bounds.
+fn covers_placement(len: usize, placement: &Placement) -> bool {
+    (0..placement.n_devices())
+        .all(|d| placement.tenants_on(d).iter().all(|&s| s < len))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dfg::Dfg;
 
     fn placement() -> Placement {
         // Device 0 = {0, 1}, device 1 = {2}, device 2 = {3}.
@@ -224,9 +351,90 @@ mod tests {
 
     #[test]
     fn threshold_is_respected() {
-        let lax = MigrationPolicy { max_imbalance: 10.0 };
+        let lax = MigrationPolicy { max_imbalance: 10.0, ..Default::default() };
         assert!(lax.propose(&[8.0, 4.0, 2.0, 4.0], &placement()).is_none());
-        let strict = MigrationPolicy { max_imbalance: 1.1 };
+        let strict = MigrationPolicy { max_imbalance: 1.1, ..Default::default() };
         assert!(strict.propose(&[8.0, 4.0, 2.0, 4.0], &placement()).is_some());
+    }
+
+    #[test]
+    fn stale_short_weights_decline_instead_of_panicking() {
+        // The placement knows 4 slots; the observation predates the last
+        // two admissions. Indexing would panic — the policy must decline.
+        let p = MigrationPolicy::default();
+        assert!(p.propose(&[9.0, 0.5], &placement()).is_none());
+        assert!(p.propose(&[], &placement()).is_none());
+        // A matching observation still proposes.
+        assert!(p.propose(&[8.0, 4.0, 2.0, 0.0], &placement()).is_some());
+    }
+
+    fn conv_net(name: &str, batch: usize, n: usize) -> Dfg {
+        use crate::dfg::OpKind;
+        let kind = OpKind::Conv { h: 56, w: 56, cin: 256, cout: 256, k: 3, stride: 1 };
+        let mut d = Dfg::new(name);
+        for i in 0..n {
+            d.push(kind, batch, format!("conv{i}"));
+        }
+        d
+    }
+
+    fn interference_set() -> TenantSet {
+        // Slots 0..=2 saturate the SM pool (batch-32 convs); slot 3 is a
+        // low-occupancy tenant (batch-1 convs, ~10% of the pool).
+        let cost = crate::profile::CostModel::new(crate::profile::Platform::titan_v());
+        TenantSet::new(
+            vec![
+                conv_net("hi-a", 32, 2),
+                conv_net("hi-b", 32, 2),
+                conv_net("hi-c", 32, 2),
+                conv_net("lo", 1, 16),
+            ],
+            cost,
+        )
+    }
+
+    #[test]
+    fn interference_destination_avoids_the_saturated_device() {
+        // Device 0 runs hot with two saturating tenants; device 1 (the
+        // coolest by load) holds another saturating tenant, device 2 a
+        // low-occupancy one. Load-based propose picks the coolest device
+        // — co-locating two saturating tenants; the interference-aware
+        // variant pays the slowdown and routes to device 2 instead.
+        let set = interference_set();
+        let placement =
+            Placement::from_assignments(vec![vec![0, 1], vec![2], vec![3]]);
+        let weights = [6.0, 4.0, 1.0, 2.0];
+        let policy = MigrationPolicy::default();
+
+        let by_load = policy.propose(&weights, &placement).unwrap();
+        assert_eq!((by_load.slot, by_load.from, by_load.to), (1, 0, 1));
+
+        let by_score = policy
+            .propose_interference_aware(&weights, &placement, &set)
+            .unwrap();
+        assert_eq!((by_score.slot, by_score.from), (1, 0));
+        assert_eq!(by_score.to, 2, "destination scored by interference");
+        assert!(by_score.imbalance_before > policy.max_imbalance);
+    }
+
+    #[test]
+    fn interference_variant_shares_the_guards() {
+        let set = interference_set();
+        let placement =
+            Placement::from_assignments(vec![vec![0, 1], vec![2], vec![3]]);
+        let policy = MigrationPolicy::default();
+        // Under-threshold skew stays put.
+        assert!(policy
+            .propose_interference_aware(&[1.0, 1.0, 1.5, 1.0], &placement, &set)
+            .is_none());
+        // Stale short weights decline.
+        assert!(policy
+            .propose_interference_aware(&[9.0, 0.5], &placement, &set)
+            .is_none());
+        // Fewer than two devices: nowhere to go.
+        let single = Placement::single_device(4);
+        assert!(policy
+            .propose_interference_aware(&[9.0, 1.0, 1.0, 1.0], &single, &set)
+            .is_none());
     }
 }

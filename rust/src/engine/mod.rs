@@ -102,7 +102,10 @@ use crate::dfg::Dfg;
 use crate::error::{Error, Result};
 use crate::gpu::{SimOptions, SimOutcome};
 use crate::models::zoo;
-use crate::plan::{ChunkMap, DeploymentPlan, Placement, ShardedDeploymentPlan, TenantSet};
+use crate::plan::{
+    ChunkMap, DeploymentPlan, Placement, PlacementObjective, ShardedDeploymentPlan,
+    TenantSet,
+};
 use crate::profile::{CostModel, Platform};
 use crate::runtime::ArtifactManifest;
 use crate::search::{SearchConfig, SearchReport, ShardedSearch};
@@ -116,6 +119,16 @@ impl std::fmt::Display for TenantId {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "tenant#{}", self.0)
     }
+}
+
+/// One executed migration remembered for the policy cooldown: while
+/// `remaining > 0`, proposals moving `tenant` back onto `from` (the
+/// device it migrated off) are suppressed.
+#[derive(Debug, Clone, Copy)]
+struct Cooldown {
+    tenant: TenantId,
+    from: usize,
+    remaining: usize,
 }
 
 /// Per-tenant serving metadata kept alongside the DFG.
@@ -172,6 +185,7 @@ pub struct EngineBuilder {
     search: SearchConfig,
     tick: Duration,
     n_devices: usize,
+    objective: PlacementObjective,
     tenants: Vec<(Dfg, TenantMeta)>,
     next_id: u64,
 }
@@ -184,6 +198,7 @@ impl EngineBuilder {
             search: SearchConfig::default(),
             tick: Duration::from_micros(200),
             n_devices: 1,
+            objective: PlacementObjective::default(),
             tenants: Vec::new(),
             next_id: 0,
         }
@@ -202,6 +217,20 @@ impl EngineBuilder {
     /// coordinator per device ([`GacerEngine::serve_cluster`]).
     pub fn devices(mut self, n: usize) -> Self {
         self.n_devices = n.max(1);
+        self
+    }
+
+    /// Placement objective for the device dimension (default
+    /// [`PlacementObjective::LoadBalance`]). With
+    /// [`PlacementObjective::InterferenceAware`] the whole
+    /// observe→decide→apply loop is objective-consistent: the initial
+    /// placement and every cold `replan` minimize the max per-device
+    /// `load × predicted slowdown`, cross-device admission places through
+    /// [`Placement::least_interfering`], and
+    /// [`GacerEngine::maybe_migrate`] scores migration destinations with
+    /// [`MigrationPolicy::propose_interference_aware`].
+    pub fn placement_objective(mut self, objective: PlacementObjective) -> Self {
+        self.objective = objective;
         self
     }
 
@@ -268,6 +297,7 @@ impl EngineBuilder {
             search_cfg: self.search,
             tick: self.tick,
             n_devices,
+            objective: self.objective,
             set: TenantSet::new(Vec::new(), CostModel::new(self.platform)),
             meta: Vec::new(),
             next_id: self.next_id,
@@ -278,6 +308,7 @@ impl EngineBuilder {
             last_searched_device: None,
             last_searched_devices: Vec::new(),
             served_window: crate::metrics::DemandWindow::new(),
+            cooldowns: Vec::new(),
             artifact_dir: self.artifact_dir,
             manifest,
         };
@@ -302,6 +333,8 @@ pub struct GacerEngine {
     tick: Duration,
     /// Device count the deployment is sharded across (>= 1).
     n_devices: usize,
+    /// Placement objective for placement, admission, and migration.
+    objective: PlacementObjective,
     set: TenantSet,
     meta: Vec<TenantMeta>,
     next_id: u64,
@@ -324,6 +357,12 @@ pub struct GacerEngine {
     /// Cumulative-counter window behind [`GacerEngine::record_served`],
     /// keyed by stable tenant id.
     served_window: crate::metrics::DemandWindow,
+    /// Executed-migration memory for the policy cooldown
+    /// ([`MigrationPolicy::cooldown_windows`]): while an entry's
+    /// `remaining > 0`, a proposal moving its tenant back onto the device
+    /// it left is suppressed. Aged by one window per
+    /// [`GacerEngine::maybe_migrate`] consultation.
+    cooldowns: Vec<Cooldown>,
     artifact_dir: Option<PathBuf>,
     manifest: Option<ArtifactManifest>,
 }
@@ -360,6 +399,12 @@ impl GacerEngine {
     /// Number of devices the deployment is sharded across (>= 1).
     pub fn n_devices(&self) -> usize {
         self.n_devices
+    }
+
+    /// The placement objective the engine places, admits, and migrates
+    /// under.
+    pub fn placement_objective(&self) -> PlacementObjective {
+        self.objective
     }
 
     /// The current searched deployment plan, projected onto global slot
@@ -508,9 +553,14 @@ impl GacerEngine {
         self.admit_with(dfg, Some(family.to_string()), policy)
     }
 
-    /// Cross-device admission control: place the newcomer on the least
-    /// loaded device (cost-model load, [`Placement::least_loaded`]), grow
-    /// that shard's plan, and incrementally re-search **only that shard**.
+    /// Cross-device admission control: place the newcomer per the
+    /// engine's objective — the least loaded device
+    /// ([`Placement::least_loaded`]) under
+    /// [`PlacementObjective::LoadBalance`], the device whose max
+    /// interference score the newcomer least raises
+    /// ([`Placement::least_interfering`]) under
+    /// [`PlacementObjective::InterferenceAware`] — grow that shard's
+    /// plan, and incrementally re-search **only that shard**.
     fn admit_with(
         &mut self,
         dfg: Dfg,
@@ -522,7 +572,12 @@ impl GacerEngine {
         self.next_id += 1;
         let name = dfg.name.clone();
         let dfg_len = dfg.len();
-        let device = self.sharded.placement.least_loaded(&self.set);
+        let device = match self.objective {
+            PlacementObjective::LoadBalance => self.sharded.placement.least_loaded(&self.set),
+            PlacementObjective::InterferenceAware => {
+                self.sharded.placement.least_interfering(&self.set, &dfg)
+            }
+        };
         let slot = self.set.len();
         self.set.admit(dfg);
         self.meta.push(TenantMeta { id, name, family, policy, demand: 0.0 });
@@ -553,9 +608,10 @@ impl GacerEngine {
         Ok(dfg)
     }
 
-    /// Run a full cold re-plan: recompute the balanced placement across
-    /// all devices and run Algorithm 1 from the unregulated plan on every
-    /// shard, replacing the current sharded plan.
+    /// Run a full cold re-plan: recompute the placement across all
+    /// devices under the engine's [`PlacementObjective`] and run
+    /// Algorithm 1 from the unregulated plan on every shard, replacing
+    /// the current sharded plan.
     pub fn replan(&mut self) {
         if self.set.is_empty() {
             let empty = Placement::from_assignments(vec![Vec::new(); self.n_devices]);
@@ -568,6 +624,7 @@ impl GacerEngine {
             return;
         }
         let report = ShardedSearch::new(&self.set, self.opts, self.search_cfg)
+            .objective(self.objective)
             .run(self.n_devices);
         let bottleneck = report.bottleneck_device();
         self.last_report =
@@ -1013,11 +1070,45 @@ impl GacerEngine {
         policy: &MigrationPolicy,
     ) -> Result<Option<Migration>> {
         let weights = self.observed_tenant_weights();
-        let Some(proposal) = policy.propose(&weights, &self.sharded.placement) else {
+        let proposal = match self.objective {
+            PlacementObjective::LoadBalance => policy.propose(&weights, &self.sharded.placement),
+            PlacementObjective::InterferenceAware => policy.propose_interference_aware(
+                &weights,
+                &self.sharded.placement,
+                &self.set,
+            ),
+        };
+        // Cooldown ([`MigrationPolicy::cooldown_windows`]): a proposal
+        // that would move a recently migrated tenant straight back is
+        // suppressed, damping A→B→A thrash under alternating skew. One
+        // consultation = one observe window; entries age before any new
+        // migration is recorded, so a fresh cooldown survives intact
+        // until the next consultation.
+        let suppressed = proposal.as_ref().is_some_and(|p| {
+            let id = self.meta[p.slot].id;
+            self.cooldowns
+                .iter()
+                .any(|c| c.remaining > 0 && c.tenant == id && c.from == p.to)
+        });
+        for c in &mut self.cooldowns {
+            c.remaining = c.remaining.saturating_sub(1);
+        }
+        self.cooldowns.retain(|c| c.remaining > 0);
+        let Some(proposal) = proposal else {
             return Ok(None);
         };
+        if suppressed {
+            return Ok(None);
+        }
         let id = self.meta[proposal.slot].id;
         self.migrate(id, proposal.to)?;
+        if policy.cooldown_windows > 0 {
+            self.cooldowns.push(Cooldown {
+                tenant: id,
+                from: proposal.from,
+                remaining: policy.cooldown_windows,
+            });
+        }
         Ok(Some(Migration { tenant: id, from: proposal.from, to: proposal.to }))
     }
 }
@@ -1321,6 +1412,70 @@ mod tests {
         // A fresh window forgets the skew.
         engine.reset_demand();
         assert!(engine.observed_tenant_weights().iter().all(|&w| w > 0.0));
+    }
+
+    /// Drive one A→B→A oscillation attempt: skew one device pair hot so a
+    /// tenant migrates, then invert the skew so the policy's best move is
+    /// that same tenant straight back. Returns the engine mid-oscillation
+    /// (after the first migration and the inverted skew are in place)
+    /// plus the first migration.
+    fn oscillating_engine(policy: &MigrationPolicy) -> (GacerEngine, Migration) {
+        // Four identical tenants: per-request latencies are equal, so
+        // observed weights are exactly proportional to recorded demand.
+        let mut engine = demo_sharded(&["R18", "R18", "R18", "R18"], 2);
+        let ids = engine.tenant_ids();
+        let hot: Vec<usize> = engine.placement().tenants_on(0).to_vec();
+        let cold: Vec<usize> = engine.placement().tenants_on(1).to_vec();
+        assert_eq!((hot.len(), cold.len()), (2, 2), "2/2 split of equals");
+
+        // Window 0: device 0 runs hot; the lighter co-tenant (hot[1])
+        // yields the smaller post-move bottleneck and migrates to 1.
+        engine.record_requests(ids[hot[0]], 6_000).unwrap();
+        engine.record_requests(ids[hot[1]], 4_000).unwrap();
+        for &c in &cold {
+            engine.record_requests(ids[c], 1_000).unwrap();
+        }
+        let m1 = engine.maybe_migrate(policy).unwrap().expect("skew migrates");
+        assert_eq!((m1.from, m1.to), (0, 1));
+        assert_eq!(m1.tenant, ids[hot[1]]);
+
+        // Invert the skew so moving m1.tenant back to device 0 is the
+        // policy's best single move (its weight sits between halving the
+        // new bottleneck and overloading the old one).
+        engine.reset_demand();
+        engine.record_requests(m1.tenant, 6_000).unwrap();
+        for &c in &cold {
+            engine.record_requests(ids[c], 4_000).unwrap();
+        }
+        engine.record_requests(ids[hot[0]], 1_000).unwrap();
+        (engine, m1)
+    }
+
+    #[test]
+    fn migration_cooldown_damps_oscillation() {
+        let policy = MigrationPolicy { max_imbalance: 2.0, cooldown_windows: 1 };
+        let (mut engine, m1) = oscillating_engine(&policy);
+        // Window 1: the reverse move is proposed but suppressed by the
+        // cooldown — the tenant stays put for this window.
+        assert!(engine.maybe_migrate(&policy).unwrap().is_none());
+        assert_eq!(engine.device_of(m1.tenant).unwrap(), m1.to);
+        // Window 2: the skew persisted past the cooldown — now the move
+        // is real load drift, not thrash, and it executes.
+        let m2 = engine.maybe_migrate(&policy).unwrap().expect("cooldown expired");
+        assert_eq!(m2.tenant, m1.tenant);
+        assert_eq!((m2.from, m2.to), (m1.to, m1.from));
+        engine.sharded_plan().validate(engine.tenants()).unwrap();
+    }
+
+    #[test]
+    fn zero_cooldown_reproduces_the_thrash() {
+        // The contrast case: without a cooldown the same alternating skew
+        // ping-pongs the tenant straight back in the very next window.
+        let policy = MigrationPolicy { max_imbalance: 2.0, cooldown_windows: 0 };
+        let (mut engine, m1) = oscillating_engine(&policy);
+        let back = engine.maybe_migrate(&policy).unwrap().expect("thrash");
+        assert_eq!(back.tenant, m1.tenant);
+        assert_eq!((back.from, back.to), (m1.to, m1.from));
     }
 
     #[test]

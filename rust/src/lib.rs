@@ -65,7 +65,9 @@ pub mod prelude {
     pub use crate::error::{Error, Result};
     pub use crate::gpu::{GpuSim, SimOutcome, SimOptions};
     pub use crate::models::zoo;
-    pub use crate::plan::{DeploymentPlan, Placement, ShardedDeploymentPlan, TenantSet};
+    pub use crate::plan::{
+        DeploymentPlan, Placement, PlacementObjective, ShardedDeploymentPlan, TenantSet,
+    };
     pub use crate::profile::{CostModel, Platform};
     pub use crate::search::{
         GacerSearch, SearchConfig, SearchReport, ShardedSearch, ShardedSearchReport,

@@ -5,13 +5,18 @@
 //! Subcommands:
 //!   gacer simulate [--models R50,V16,M3] [--platform TitanV]
 //!   gacer search   [--models R50,V16,M3] [--platform TitanV] [--max-pointers 6] [--devices 1]
+//!                  [--placement balanced|interference]
 //!   gacer serve    [--artifacts artifacts] [--requests 64] [--tenants tiny_cnn,...] [--devices 1]
-//!                  [--live-admit tiny_cnn]
+//!                  [--placement balanced|interference] [--live-admit tiny_cnn]
 //!
 //! `--devices N` gives the deployment a device dimension: tenants are
 //! placed across N devices (cost-model bin-packing), each device gets its
 //! own granularity-aware search, and `serve` runs one coordinator per
-//! device behind a routing front-end. `--live-admit FAMILY` then admits
+//! device behind a routing front-end. `--placement interference` swaps
+//! the placement objective from plain load balance to the
+//! interference-aware one: co-location is priced with the cost model's
+//! occupancy curves, so two SM-pool-saturating tenants land on different
+//! devices even when their latency totals would balance. `--live-admit FAMILY` then admits
 //! one more tenant against the *running* cluster and hot-swaps the
 //! re-searched plan in (no restart) — the live re-deployment path of
 //! `docs/OPERATIONS.md`.
@@ -20,7 +25,7 @@ use gacer::baselines::BaselineKind;
 use gacer::bench_util::{fig7_header, fig7_row, run_combo};
 use gacer::gpu::SimOptions;
 use gacer::models::zoo;
-use gacer::plan::TenantSet;
+use gacer::plan::{PlacementObjective, TenantSet};
 use gacer::profile::{CostModel, Platform};
 use gacer::search::{GacerSearch, SearchConfig, ShardedSearch};
 use gacer::util::cli::Args;
@@ -28,13 +33,20 @@ use gacer::util::cli::Args;
 const USAGE: &str = "usage: gacer <simulate|search|serve> [options]
   simulate --models R50,V16,M3 --platform TitanV
   search   --models R50,V16,M3 --platform TitanV --max-pointers 6 --devices 1
+           [--placement balanced|interference]
   serve    --artifacts artifacts --requests 64 --tenants tiny_cnn,tiny_cnn,tiny_cnn --devices 1
-           [--live-admit tiny_cnn]
+           [--placement balanced|interference] [--live-admit tiny_cnn]
 
   --devices N   shard the deployment across N devices: tenants are placed
                 by cost-model bin-packing, each device is searched
                 independently, and serving runs one coordinator per device
                 behind a placement-routing front-end (default 1)
+  --placement balanced|interference
+                placement objective for the device dimension: 'balanced'
+                equalizes summed serial latency (LPT); 'interference'
+                minimizes the max per-device load x predicted co-location
+                slowdown from the cost model's occupancy curves, keeping
+                pool-saturating tenants apart (default balanced)
   --live-admit FAMILY
                 after serving the initial tenants, admit one more FAMILY
                 tenant against the running cluster and hot-swap the
@@ -47,6 +59,13 @@ fn parse_models(s: &str) -> Vec<String> {
 fn platform_or_exit(name: &str) -> Platform {
     Platform::by_name(name).unwrap_or_else(|| {
         eprintln!("unknown platform {name}; expected TitanV|P6000|1080Ti");
+        std::process::exit(2);
+    })
+}
+
+fn placement_or_exit(name: &str) -> PlacementObjective {
+    PlacementObjective::parse(name).unwrap_or_else(|| {
+        eprintln!("unknown placement objective {name}; expected balanced|interference");
         std::process::exit(2);
     })
 }
@@ -78,30 +97,36 @@ fn main() -> gacer::Result<()> {
                 ..Default::default()
             };
             let devices = args.opt_usize("devices", 1).max(1);
+            let objective = placement_or_exit(args.opt_or("placement", "balanced"));
             if devices > 1 {
                 let report = ShardedSearch::new(&ts, SimOptions::for_platform(&platform), cfg)
+                    .objective(objective)
                     .run(devices);
                 println!(
-                    "combo {} on {} x{}: cluster makespan {:.2}ms \
+                    "combo {} on {} x{} ({}): cluster makespan {:.2}ms \
                      (bottleneck device {}), {} evaluations in {:?}",
                     zoo::combo_label(&refs),
                     platform.name,
                     devices,
+                    objective.label(),
                     report.cluster_makespan_us() / 1e3,
                     report.bottleneck_device().unwrap_or(0),
                     report.total_evaluations(),
                     report.elapsed
                 );
+                let slowdowns = report.plan.placement.predicted_slowdowns(&ts);
                 for d in 0..devices {
                     let slots = report.plan.placement.tenants_on(d);
                     let names: Vec<&str> =
                         slots.iter().map(|&s| tenants[s].name.as_str()).collect();
                     match &report.reports[d] {
                         Some(r) => println!(
-                            "  device {d}: {names:?}  {:.2}ms -> {:.2}ms ({:.2}x)",
+                            "  device {d}: {names:?}  {:.2}ms -> {:.2}ms ({:.2}x), \
+                             predicted co-location slowdown {:.2}x",
                             r.initial.makespan_us / 1e3,
                             r.outcome.makespan_us / 1e3,
-                            r.speedup_vs_initial()
+                            r.speedup_vs_initial(),
+                            slowdowns[d]
                         ),
                         None => println!("  device {d}: idle"),
                     }
@@ -140,11 +165,13 @@ fn main() -> gacer::Result<()> {
             let requests = args.opt_usize("requests", 64);
             let devices = args.opt_usize("devices", 1).max(1);
             let tenants = parse_models(args.opt_or("tenants", "tiny_cnn,tiny_cnn,tiny_cnn"));
+            let objective = placement_or_exit(args.opt_or("placement", "balanced"));
             gacer::coordinator::serve_demo(
                 &artifacts,
                 &tenants,
                 requests,
                 devices,
+                objective,
                 args.opt("live-admit"),
             )?;
         }

@@ -11,7 +11,8 @@
 //!
 //! For multi-GPU deployments the plan grows a **device dimension**: a
 //! [`Placement`] assigns every tenant slot to one device (cost-model-driven
-//! bin-packing with a load-balance objective), and a
+//! bin-packing under a [`PlacementObjective`] — load balance, or
+//! interference-aware co-location scored on the occupancy curves), and a
 //! [`ShardedDeploymentPlan`] carries one independently searched
 //! [`DeploymentPlan`] per device. GACER's regulation stays strictly
 //! per-GPU — sharding decides *where* a tenant runs, the per-shard plan
@@ -167,6 +168,163 @@ fn seeded_pointers(dfg_len: usize, n_pointers: usize) -> Vec<usize> {
     }
 }
 
+/// The objective [`Placement`] construction optimizes across devices.
+///
+/// [`LoadBalance`](PlacementObjective::LoadBalance) is the classic LPT
+/// bin-packing on summed serial latency. But load balance is blind to
+/// *contention*: two tenants whose summed per-phase `W(O^B)` blows past
+/// the SM pool slow each other down however evenly the latency totals are
+/// spread. [`InterferenceAware`](PlacementObjective::InterferenceAware)
+/// prices that with the cost model's occupancy curves
+/// ([`CostModel::colocation_slowdown`]) and minimizes the max per-device
+/// `load × predicted slowdown`, so two pool-saturating tenants are placed
+/// apart even when raw load balance would pair them (VELTAIR-style
+/// interference-aware co-location).
+///
+/// ```
+/// use gacer::plan::PlacementObjective;
+///
+/// assert_eq!(PlacementObjective::parse("balanced"),
+///            Some(PlacementObjective::LoadBalance));
+/// assert_eq!(PlacementObjective::parse("interference"),
+///            Some(PlacementObjective::InterferenceAware));
+/// assert!(PlacementObjective::parse("magic").is_none());
+/// assert_eq!(PlacementObjective::default(), PlacementObjective::LoadBalance);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementObjective {
+    /// Equalize summed serial latency per device (LPT bin-packing).
+    #[default]
+    LoadBalance,
+    /// Minimize the max per-device `load × predicted co-location
+    /// slowdown` (greedy seeding + local move refinement).
+    InterferenceAware,
+}
+
+impl PlacementObjective {
+    /// Parse a CLI spelling (`balanced` | `interference`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "balanced" | "load-balance" | "lpt" => Some(Self::LoadBalance),
+            "interference" | "interference-aware" => Some(Self::InterferenceAware),
+            _ => None,
+        }
+    }
+
+    /// Display name (`LoadBalance` / `InterferenceAware`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::LoadBalance => "LoadBalance",
+            Self::InterferenceAware => "InterferenceAware",
+        }
+    }
+}
+
+/// Pre-sampled interference-scoring context: one serial-latency weight
+/// and one occupancy timeline ([`CostModel::occupancy_profile`]) per
+/// tenant slot, computed **once** per placement decision and reused
+/// across every candidate group the search scores.
+struct InterferenceCtx {
+    weights: Vec<f64>,
+    profiles: Vec<Vec<f64>>,
+}
+
+impl InterferenceCtx {
+    fn new(set: &TenantSet) -> Self {
+        InterferenceCtx {
+            weights: set
+                .tenants
+                .iter()
+                .map(|d| set.cost.sequential_latency_us(d))
+                .collect(),
+            profiles: set.tenants.iter().map(|d| set.cost.occupancy_profile(d)).collect(),
+        }
+    }
+
+    /// Interference score of one co-located slot group — summed serial
+    /// latency × predicted slowdown, the per-device quantity
+    /// [`Placement::interference_aware`] minimizes the maximum of —
+    /// optionally with one extra (not-yet-admitted) tenant's weight and
+    /// timeline appended.
+    fn score_with(&self, slots: &[usize], extra: Option<(f64, &[f64])>) -> f64 {
+        let mut load: f64 = slots.iter().map(|&s| self.weights[s]).sum();
+        let mut refs: Vec<&[f64]> =
+            slots.iter().map(|&s| self.profiles[s].as_slice()).collect();
+        if let Some((w, p)) = extra {
+            load += w;
+            refs.push(p);
+        }
+        load * crate::profile::slowdown_from_phases(&refs)
+    }
+
+    fn score(&self, slots: &[usize]) -> f64 {
+        self.score_with(slots, None)
+    }
+}
+
+/// Max local-refinement passes [`Placement::interference_aware`] runs
+/// after greedy seeding (each pass moves at most one tenant off the
+/// bottleneck device; the loop also stops at the first pass with no
+/// strictly improving move).
+const REFINE_PASSES: usize = 16;
+
+/// Local refinement for [`Placement::interference_aware`]: repeatedly
+/// move one tenant off the bottleneck (max-score) device when the move
+/// strictly lowers the max per-device interference score. Scans in
+/// ascending slot/device order with first-wins ties, so the result is
+/// deterministic.
+fn refine_interference(ctx: &InterferenceCtx, assignments: &mut [Vec<usize>]) {
+    let n_devices = assignments.len();
+    for _ in 0..REFINE_PASSES {
+        let scores: Vec<f64> = assignments.iter().map(|a| ctx.score(a)).collect();
+        let bottleneck = (0..n_devices)
+            .reduce(|a, b| if scores[b] > scores[a] { b } else { a })
+            .unwrap_or(0);
+        let current_max = scores[bottleneck];
+        if current_max <= 0.0 {
+            return;
+        }
+        let mut best: Option<(f64, usize, usize)> = None;
+        for &slot in &assignments[bottleneck] {
+            let remaining: Vec<usize> = assignments[bottleneck]
+                .iter()
+                .copied()
+                .filter(|&s| s != slot)
+                .collect();
+            let src_score = ctx.score(&remaining);
+            for to in (0..n_devices).filter(|&t| t != bottleneck) {
+                let mut dst = assignments[to].clone();
+                dst.push(slot);
+                let dst_score = ctx.score(&dst);
+                let new_max = scores
+                    .iter()
+                    .enumerate()
+                    .map(|(d, &s)| {
+                        if d == bottleneck {
+                            src_score
+                        } else if d == to {
+                            dst_score
+                        } else {
+                            s
+                        }
+                    })
+                    .fold(0.0f64, f64::max);
+                let improves = new_max < current_max * (1.0 - 1e-9);
+                let beats_best = match best {
+                    None => true,
+                    Some((m, _, _)) => new_max < m,
+                };
+                if improves && beats_best {
+                    best = Some((new_max, slot, to));
+                }
+            }
+        }
+        let Some((_, slot, to)) = best else { return };
+        assignments[bottleneck].retain(|&s| s != slot);
+        assignments[to].push(slot);
+    }
+}
+
 /// Assignment of tenant slots to devices — the placement stage of a
 /// multi-GPU deployment.
 ///
@@ -239,6 +397,71 @@ impl Placement {
             assignments[device].push(slot);
             loads[device] += weights[slot];
         }
+        Self::from_assignments(assignments)
+    }
+
+    /// Build a placement under a caller-chosen [`PlacementObjective`].
+    pub fn with_objective(
+        set: &TenantSet,
+        n_devices: usize,
+        objective: PlacementObjective,
+    ) -> Self {
+        match objective {
+            PlacementObjective::LoadBalance => Self::balanced(set, n_devices),
+            PlacementObjective::InterferenceAware => Self::interference_aware(set, n_devices),
+        }
+    }
+
+    /// Interference-aware placement: minimize the max per-device
+    /// `load × predicted co-location slowdown`
+    /// ([`CostModel::colocation_slowdown`] over the occupancy curves).
+    ///
+    /// Greedy seeding in LPT order (each tenant goes where the resulting
+    /// max score is smallest), then bounded local refinement (move one
+    /// tenant off the bottleneck device while it strictly lowers the max
+    /// score). Deterministic for a given tenant set: every scan is in
+    /// ascending slot/device order and ties keep the first candidate.
+    /// When no co-location overflows the pool, every slowdown is 1.0 and
+    /// this reduces to load balancing.
+    pub fn interference_aware(set: &TenantSet, n_devices: usize) -> Self {
+        let n_devices = n_devices.max(1);
+        let ctx = InterferenceCtx::new(set);
+        let mut order: Vec<usize> = (0..set.len()).collect();
+        order.sort_by(|&a, &b| {
+            ctx.weights[b]
+                .partial_cmp(&ctx.weights[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut assignments: Vec<Vec<usize>> = vec![Vec::new(); n_devices];
+        let mut scores = vec![0.0f64; n_devices];
+        for slot in order {
+            let mut best: Option<(f64, f64, usize)> = None;
+            for (d, a) in assignments.iter().enumerate() {
+                let mut trial = a.clone();
+                trial.push(slot);
+                let trial_score = ctx.score(&trial);
+                let resulting_max = scores
+                    .iter()
+                    .enumerate()
+                    .map(|(o, &s)| if o == d { trial_score } else { s })
+                    .fold(0.0f64, f64::max);
+                let beats = |m: f64, s: f64| {
+                    resulting_max < m || (resulting_max == m && trial_score < s)
+                };
+                let better = match best {
+                    None => true,
+                    Some((m, s, _)) => beats(m, s),
+                };
+                if better {
+                    best = Some((resulting_max, trial_score, d));
+                }
+            }
+            let (_, score, device) = best.expect("n_devices >= 1");
+            assignments[device].push(slot);
+            scores[device] = score;
+        }
+        refine_interference(&ctx, &mut assignments);
         Self::from_assignments(assignments)
     }
 
@@ -333,6 +556,60 @@ impl Placement {
                     .unwrap_or(std::cmp::Ordering::Equal)
             })
             .unwrap_or(0)
+    }
+
+    /// Per-device predicted co-location slowdown under the cost model's
+    /// occupancy curves ([`CostModel::colocation_slowdown`]); `1.0` means
+    /// the device's tenants never overflow the SM pool together (empty
+    /// and single-tenant devices are always `1.0`).
+    pub fn predicted_slowdowns(&self, set: &TenantSet) -> Vec<f64> {
+        self.assignments
+            .iter()
+            .map(|a| {
+                let dfgs: Vec<&Dfg> = a.iter().map(|&s| &set.tenants[s]).collect();
+                set.cost.colocation_slowdown(&dfgs)
+            })
+            .collect()
+    }
+
+    /// Per-device interference score: `load × predicted slowdown` — the
+    /// quantity [`Placement::interference_aware`] minimizes the maximum
+    /// of, and what interference-aware admission/migration compare.
+    pub fn interference_scores(&self, set: &TenantSet) -> Vec<f64> {
+        let ctx = InterferenceCtx::new(set);
+        self.assignments.iter().map(|a| ctx.score(a)).collect()
+    }
+
+    /// The interference-scored sibling of [`Placement::least_loaded`]:
+    /// the device where admitting `newcomer` least raises the cluster's
+    /// max per-device interference score (ties break toward the smaller
+    /// resulting device score, then the lowest device index). This is
+    /// what cross-device admission control uses when the deployment's
+    /// objective is [`PlacementObjective::InterferenceAware`] — a
+    /// pool-saturating newcomer avoids devices already holding a
+    /// saturating tenant even when they are the least loaded.
+    pub fn least_interfering(&self, set: &TenantSet, newcomer: &Dfg) -> usize {
+        let ctx = InterferenceCtx::new(set);
+        let extra_weight = set.cost.sequential_latency_us(newcomer);
+        let extra_profile = set.cost.occupancy_profile(newcomer);
+        let scores: Vec<f64> = self.assignments.iter().map(|a| ctx.score(a)).collect();
+        let mut best = 0usize;
+        let mut best_key = (f64::INFINITY, f64::INFINITY);
+        for (d, a) in self.assignments.iter().enumerate() {
+            let trial = ctx.score_with(a, Some((extra_weight, extra_profile.as_slice())));
+            let resulting_max = scores
+                .iter()
+                .enumerate()
+                .map(|(o, &s)| if o == d { trial } else { s })
+                .fold(0.0f64, f64::max);
+            if resulting_max < best_key.0
+                || (resulting_max == best_key.0 && trial < best_key.1)
+            {
+                best = d;
+                best_key = (resulting_max, trial);
+            }
+        }
+        best
     }
 
     /// Project a global per-tenant sequence down to `device`'s tenants, in
@@ -822,6 +1099,113 @@ mod tests {
         weights.sort_by(|a, b| b.partial_cmp(a).unwrap());
         let bottleneck = p.loads(&set).into_iter().fold(0.0f64, f64::max);
         assert!(bottleneck <= weights[0] + weights[2] + 1e-9);
+    }
+
+    /// The mid-network conv whose occupancy curve the cost model tests
+    /// plot: batch 32 saturates the pool (`W = 100`), batch 1 holds ~10%.
+    fn mid_conv() -> OpKind {
+        OpKind::Conv { h: 56, w: 56, cin: 256, cout: 256, k: 3, stride: 1 }
+    }
+
+    /// A net of `n` identical mid-network convs at `batch`.
+    fn conv_net(name: &str, batch: usize, n: usize) -> Dfg {
+        let mut d = Dfg::new(name);
+        for i in 0..n {
+            d.push(mid_conv(), batch, format!("conv{i}"));
+        }
+        d
+    }
+
+    #[test]
+    fn with_objective_dispatches() {
+        let (tenants, cost) = setup();
+        let set = TenantSet::new(tenants, cost);
+        assert_eq!(
+            Placement::with_objective(&set, 2, PlacementObjective::LoadBalance),
+            Placement::balanced(&set, 2)
+        );
+        assert_eq!(
+            Placement::with_objective(&set, 2, PlacementObjective::InterferenceAware),
+            Placement::interference_aware(&set, 2)
+        );
+    }
+
+    #[test]
+    fn interference_aware_single_device_degenerates() {
+        let (tenants, cost) = setup();
+        let set = TenantSet::new(tenants, cost);
+        let p = Placement::interference_aware(&set, 1);
+        assert_eq!(p, Placement::single_device(3));
+        // And 0 devices clamps to 1, like `balanced`.
+        assert_eq!(Placement::interference_aware(&set, 0), p);
+    }
+
+    #[test]
+    fn interference_aware_spreads_saturating_tenants() {
+        // Two pool-saturating tenants and one bandwidth-light tenant
+        // whose load exceeds either: load balance pairs the two
+        // saturating tenants with nobody, interference still must not
+        // pair them with each other.
+        let cost = CostModel::new(Platform::titan_v());
+        let d_hi = cost.cost_of(&mid_conv(), 32).duration_us;
+        let d_lo = cost.cost_of(&mid_conv(), 1).duration_us;
+        // Weights ~ [2, 2, 3] * d_hi: LPT puts the low-occupancy tenant
+        // alone and pairs the two saturating ones.
+        let n_lo = ((3.0 * d_hi) / d_lo).round() as usize;
+        let tenants = vec![
+            conv_net("hi-a", 32, 2),
+            conv_net("hi-b", 32, 2),
+            conv_net("lo", 1, n_lo.max(1)),
+        ];
+        let set = TenantSet::new(tenants, cost);
+        let lb = Placement::balanced(&set, 2);
+        assert_eq!(
+            lb.device_of(0),
+            lb.device_of(1),
+            "precondition: LPT co-locates the saturating pair"
+        );
+        let ia = Placement::interference_aware(&set, 2);
+        ia.validate(3).unwrap();
+        assert_ne!(ia.device_of(0), ia.device_of(1), "saturating pair split");
+        let max = |v: Vec<f64>| v.into_iter().fold(0.0f64, f64::max);
+        assert!(
+            max(ia.interference_scores(&set)) < max(lb.interference_scores(&set)),
+            "interference objective must beat LPT on its own score"
+        );
+        assert!(max(ia.predicted_slowdowns(&set)) < max(lb.predicted_slowdowns(&set)));
+    }
+
+    #[test]
+    fn predicted_slowdowns_are_free_without_colocation() {
+        let (tenants, cost) = setup();
+        let set = TenantSet::new(tenants, cost);
+        // One tenant per device (plus an empty bin): nothing contends.
+        let p = Placement::from_assignments(vec![vec![0], vec![1], vec![2], vec![]]);
+        assert_eq!(p.predicted_slowdowns(&set), vec![1.0; 4]);
+        let scores = p.interference_scores(&set);
+        let loads = p.loads(&set);
+        for (s, l) in scores.iter().zip(&loads) {
+            assert!((s - l).abs() < 1e-9, "free co-location: score == load");
+        }
+    }
+
+    #[test]
+    fn least_interfering_avoids_the_saturated_device() {
+        let cost = CostModel::new(Platform::titan_v());
+        let d_hi = cost.cost_of(&mid_conv(), 32).duration_us;
+        let d_lo = cost.cost_of(&mid_conv(), 1).duration_us;
+        // Device 0 holds a saturating tenant (lighter load), device 1 a
+        // low-occupancy tenant (heavier load).
+        let n_lo = ((3.0 * d_hi) / d_lo).round() as usize;
+        let tenants = vec![conv_net("hi", 32, 2), conv_net("lo", 1, n_lo.max(1))];
+        let set = TenantSet::new(tenants, cost);
+        let p = Placement::from_assignments(vec![vec![0], vec![1]]);
+        // Raw load admission picks the saturated-but-lighter device...
+        assert_eq!(p.least_loaded(&set), 0);
+        // ...interference-scored admission sends a saturating newcomer to
+        // the low-occupancy device instead.
+        let newcomer = conv_net("hi-new", 32, 2);
+        assert_eq!(p.least_interfering(&set, &newcomer), 1);
     }
 
     #[test]

@@ -49,6 +49,9 @@ const MIN_OCCUPANCY: f64 = 1.5;
 /// modestly sub-linear below — this matches.
 const PENALTY_EXP: f64 = 0.45;
 const PENALTY_CAP: f64 = 4.0;
+/// Evenly spaced phase samples [`CostModel::colocation_slowdown`] draws
+/// per tenant timeline when integrating SM-pool overflow.
+const PHASE_SAMPLES: usize = 64;
 
 /// Cost of one operator at one batch size — one row of the paper's
 /// profiling lookup table.
@@ -146,6 +149,79 @@ impl CostModel {
     pub fn sequential_latency_us(&self, dfg: &crate::dfg::Dfg) -> f64 {
         dfg.ops.iter().map(|o| self.cost(o).duration_us).sum()
     }
+
+    /// The tenant's occupancy timeline sampled at `k` evenly spaced
+    /// phases of its serial execution: entry `j` is `W(O^B)` of the
+    /// operator active at time fraction `(j + 0.5) / k` of the DFG's
+    /// sequential latency. This is the per-tenant ingredient of the
+    /// co-location interference score — it captures *when* a tenant holds
+    /// the SM pool, not just how much of it on average.
+    pub fn occupancy_phases(&self, dfg: &crate::dfg::Dfg, k: usize) -> Vec<f64> {
+        let costs: Vec<OpCost> = dfg.ops.iter().map(|o| self.cost(o)).collect();
+        let total: f64 = costs.iter().map(|c| c.duration_us).sum();
+        if costs.is_empty() || total <= 0.0 {
+            return vec![0.0; k];
+        }
+        let mut samples = Vec::with_capacity(k);
+        let mut op = 0usize;
+        let mut cum_end = costs[0].duration_us;
+        for j in 0..k {
+            let t = (j as f64 + 0.5) / k as f64 * total;
+            while t > cum_end && op + 1 < costs.len() {
+                op += 1;
+                cum_end += costs[op].duration_us;
+            }
+            samples.push(costs[op].sm_occupancy);
+        }
+        samples
+    }
+
+    /// [`CostModel::occupancy_phases`] at the resolution
+    /// [`CostModel::colocation_slowdown`] integrates over — the
+    /// pre-sampled per-tenant timeline a placement search computes once
+    /// and then scores many candidate groups with
+    /// ([`slowdown_from_phases`]).
+    pub fn occupancy_profile(&self, dfg: &crate::dfg::Dfg) -> Vec<f64> {
+        self.occupancy_phases(dfg, PHASE_SAMPLES)
+    }
+
+    /// Predicted co-location slowdown of a tenant set sharing one SM pool
+    /// — the interference half of a VELTAIR-style placement objective,
+    /// derived from the existing occupancy curves rather than a separate
+    /// contention profile.
+    ///
+    /// Each tenant's occupancy timeline is sampled at 64 evenly spaced
+    /// normalized phases; per phase, the summed demand's overflow past the
+    /// pool (`max(0, Σ W − 100)`) is integrated and expressed as a
+    /// fraction of the pool: the excess work has no SMs to run on and
+    /// must serialize. `1.0` means the set never overflows — co-location
+    /// is predicted free; two pool-saturating tenants score `≈ 2.0`.
+    pub fn colocation_slowdown(&self, tenants: &[&crate::dfg::Dfg]) -> f64 {
+        let phases: Vec<Vec<f64>> = tenants.iter().map(|d| self.occupancy_profile(d)).collect();
+        let refs: Vec<&[f64]> = phases.iter().map(Vec::as_slice).collect();
+        slowdown_from_phases(&refs)
+    }
+}
+
+/// [`CostModel::colocation_slowdown`] over pre-sampled tenant timelines
+/// (equal-length phase vectors from [`CostModel::occupancy_profile`]).
+/// Placement search and the migration policy sample each tenant **once**
+/// per decision and score all candidate groups through this, instead of
+/// re-walking every DFG per candidate.
+pub fn slowdown_from_phases(phases: &[&[f64]]) -> f64 {
+    if phases.len() < 2 {
+        return 1.0;
+    }
+    let k = phases.iter().map(|p| p.len()).min().unwrap_or(0);
+    if k == 0 {
+        return 1.0;
+    }
+    let mut overflow = 0.0;
+    for j in 0..k {
+        let demand: f64 = phases.iter().map(|p| p[j]).sum();
+        overflow += (demand - 100.0).max(0.0);
+    }
+    1.0 + overflow / (k as f64 * 100.0)
 }
 
 #[cfg(test)]
@@ -261,6 +337,78 @@ mod tests {
         let vgg = crate::models::zoo::build("V16", 8).unwrap();
         let ms = m.sequential_latency_us(&vgg) / 1e3;
         assert!(ms > 4.0 && ms < 60.0, "VGG16 b8 seq = {ms} ms");
+    }
+
+    fn conv_net(name: &str, batch: usize, n: usize) -> crate::dfg::Dfg {
+        let mut d = crate::dfg::Dfg::new(name);
+        for i in 0..n {
+            d.push(conv_mid(), batch, format!("conv{i}"));
+        }
+        d
+    }
+
+    fn bn_net(name: &str, n: usize) -> crate::dfg::Dfg {
+        let mut d = crate::dfg::Dfg::new(name);
+        for i in 0..n {
+            d.push(OpKind::BatchNorm { elems: 56 * 56 * 256 }, 8, format!("bn{i}"));
+        }
+        d
+    }
+
+    #[test]
+    fn occupancy_phases_sample_the_timeline() {
+        let m = model();
+        // A uniform net samples to a constant timeline at the op's W.
+        let net = conv_net("uniform", 8, 3);
+        let w = m.cost_of(&conv_mid(), 8).sm_occupancy;
+        let samples = m.occupancy_phases(&net, 16);
+        assert_eq!(samples.len(), 16);
+        assert!(samples.iter().all(|&s| (s - w).abs() < 1e-9));
+        // A mixed net's samples cover both classes, duration-weighted.
+        let mut mixed = crate::dfg::Dfg::new("mixed");
+        mixed.push(conv_mid(), 8, "c");
+        mixed.push(OpKind::BatchNorm { elems: 56 * 56 * 256 }, 8, "b");
+        let samples = m.occupancy_phases(&mixed, 64);
+        let conv_w = m.cost_of(&conv_mid(), 8).sm_occupancy;
+        let bn_w = m
+            .cost_of(&OpKind::BatchNorm { elems: 56 * 56 * 256 }, 8)
+            .sm_occupancy;
+        assert!(samples.contains(&conv_w));
+        assert!(samples.contains(&bn_w));
+        // Empty DFG: an all-zero timeline, never a panic.
+        let empty = crate::dfg::Dfg::new("empty");
+        assert_eq!(m.occupancy_phases(&empty, 4), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn colocation_is_free_under_pool_capacity() {
+        let m = model();
+        // Bandwidth-bound tenants hold a few percent of the pool each:
+        // their summed demand never overflows, co-location is free.
+        let a = bn_net("bn-a", 6);
+        let b = bn_net("bn-b", 4);
+        assert_eq!(m.colocation_slowdown(&[&a, &b]), 1.0);
+        // A single tenant is free by definition.
+        let c = conv_net("conv", 32, 4);
+        assert_eq!(m.colocation_slowdown(&[&c]), 1.0);
+        assert_eq!(m.colocation_slowdown(&[]), 1.0);
+    }
+
+    #[test]
+    fn colocation_prices_saturating_pairs() {
+        let m = model();
+        // Two tenants that each saturate the pool roughly halve each
+        // other's speed; a saturating tenant beside a bandwidth-bound one
+        // barely overflows.
+        let hi_a = conv_net("hi-a", 32, 4);
+        let hi_b = conv_net("hi-b", 32, 2);
+        let lo = bn_net("lo", 6);
+        let both_hi = m.colocation_slowdown(&[&hi_a, &hi_b]);
+        let mixed = m.colocation_slowdown(&[&hi_a, &lo]);
+        assert!(both_hi > 1.8, "saturating pair = {both_hi}");
+        assert!(both_hi <= 2.0 + 1e-9);
+        assert!(mixed > 1.0 && mixed < 1.3, "mixed pair = {mixed}");
+        assert!(mixed < both_hi);
     }
 
     #[test]

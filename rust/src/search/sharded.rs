@@ -38,7 +38,9 @@
 use std::time::{Duration, Instant};
 
 use crate::gpu::SimOptions;
-use crate::plan::{DeploymentPlan, Placement, ShardedDeploymentPlan, TenantSet};
+use crate::plan::{
+    DeploymentPlan, Placement, PlacementObjective, ShardedDeploymentPlan, TenantSet,
+};
 
 use super::{GacerSearch, SearchConfig, SearchReport};
 
@@ -88,17 +90,25 @@ pub struct ShardedSearch<'a> {
     set: &'a TenantSet,
     opts: SimOptions,
     cfg: SearchConfig,
+    objective: PlacementObjective,
 }
 
 impl<'a> ShardedSearch<'a> {
     pub fn new(set: &'a TenantSet, opts: SimOptions, cfg: SearchConfig) -> Self {
-        ShardedSearch { set, opts, cfg }
+        ShardedSearch { set, opts, cfg, objective: PlacementObjective::default() }
     }
 
-    /// Cold sharded search: compute a balanced placement across
-    /// `n_devices`, then run Algorithm 1 per device.
+    /// Placement objective [`ShardedSearch::run`] shards with (default
+    /// [`PlacementObjective::LoadBalance`]).
+    pub fn objective(mut self, objective: PlacementObjective) -> Self {
+        self.objective = objective;
+        self
+    }
+
+    /// Cold sharded search: compute a placement across `n_devices` under
+    /// the configured objective, then run Algorithm 1 per device.
     pub fn run(&self, n_devices: usize) -> ShardedSearchReport {
-        self.run_placed(Placement::balanced(self.set, n_devices))
+        self.run_placed(Placement::with_objective(self.set, n_devices, self.objective))
     }
 
     /// Cold per-device searches under a caller-fixed placement.
@@ -223,6 +233,20 @@ mod tests {
         r.plan.validate(&ts.tenants).unwrap();
         assert_eq!(r.reports.iter().flatten().count(), 1);
         assert_eq!(r.plan.shards.iter().filter(|s| s.chunking.is_empty()).count(), 2);
+    }
+
+    #[test]
+    fn objective_threads_through_to_the_placement() {
+        let ts = set(&["Alex", "V16", "R18"]);
+        let opts = SimOptions::for_platform(&Platform::titan_v());
+        let r = ShardedSearch::new(&ts, opts, quick_cfg())
+            .objective(PlacementObjective::InterferenceAware)
+            .run(2);
+        assert_eq!(r.plan.placement, Placement::interference_aware(&ts, 2));
+        r.plan.validate(&ts.tenants).unwrap();
+        // The default objective is load balance.
+        let r = ShardedSearch::new(&ts, opts, quick_cfg()).run(2);
+        assert_eq!(r.plan.placement, Placement::balanced(&ts, 2));
     }
 
     #[test]

@@ -1,0 +1,162 @@
+//! Interference-aware placement acceptance tests: for a heterogeneous
+//! mix where two SM-pool-saturating tenants dominate, `LoadBalance`
+//! happily co-locates them while `InterferenceAware` keeps them apart —
+//! end to end through the placement, the bench comparison, and the
+//! engine (initial placement + objective-consistent admission).
+
+use gacer::bench_util::{compare_placements, interference_demo_mix, PlacementArm};
+use gacer::engine::GacerEngine;
+use gacer::plan::{Placement, PlacementObjective, TenantSet};
+use gacer::profile::{CostModel, Platform};
+use gacer::search::SearchConfig;
+
+fn demo_set() -> TenantSet {
+    let platform = Platform::titan_v();
+    TenantSet::new(interference_demo_mix(&platform), CostModel::new(platform))
+}
+
+fn quick_cfg() -> SearchConfig {
+    SearchConfig {
+        max_pointers: 1,
+        rounds_per_level: 1,
+        positions_per_coordinate: 4,
+        spatial_steps_per_level: 1,
+        ..Default::default()
+    }
+}
+
+/// The mix's shape (slots 0/3 saturate the pool, 1/2 are light) plus the
+/// weight ordering that makes LPT pair the saturating tenants.
+#[test]
+fn demo_mix_preconditions_hold() {
+    let set = demo_set();
+    assert_eq!(set.len(), 4);
+    let weights: Vec<f64> = set
+        .tenants
+        .iter()
+        .map(|d| set.cost.sequential_latency_us(d))
+        .collect();
+    // hi-a > lo-a > lo-b > hi-b: exactly the ordering that tricks LPT.
+    assert!(weights[0] > weights[1]);
+    assert!(weights[1] > weights[2]);
+    assert!(weights[2] > weights[3]);
+    // The two saturating tenants dominate occupancy: alone they are
+    // interference-free, together they halve each other.
+    let pair = set.cost.colocation_slowdown(&[&set.tenants[0], &set.tenants[3]]);
+    assert!(pair > 1.8, "saturating pair slowdown = {pair}");
+    let light = set.cost.colocation_slowdown(&[&set.tenants[1], &set.tenants[2]]);
+    assert!(light < 1.05, "light pair slowdown = {light}");
+}
+
+#[test]
+fn load_balance_colocates_but_interference_separates() {
+    let set = demo_set();
+    let lb = Placement::balanced(&set, 2);
+    let ia = Placement::interference_aware(&set, 2);
+    lb.validate(set.len()).unwrap();
+    ia.validate(set.len()).unwrap();
+
+    assert_eq!(
+        lb.device_of(0),
+        lb.device_of(3),
+        "LPT pairs the two saturating tenants (the bug this PR prices)"
+    );
+    assert_ne!(
+        ia.device_of(0),
+        ia.device_of(3),
+        "interference-aware places them on different devices"
+    );
+
+    let max = |v: Vec<f64>| v.into_iter().fold(0.0f64, f64::max);
+    assert!(
+        max(ia.predicted_slowdowns(&set)) < max(lb.predicted_slowdowns(&set)),
+        "lower predicted max device slowdown"
+    );
+    assert!(max(ia.interference_scores(&set)) < max(lb.interference_scores(&set)));
+}
+
+#[test]
+fn bench_comparison_reports_the_win() {
+    // The bench_util experiment surface of the same acceptance check:
+    // the LoadBalance-vs-InterferenceAware comparison must show a lower
+    // predicted max device slowdown for the interference arm.
+    let platform = Platform::titan_v();
+    let arms = compare_placements(interference_demo_mix(&platform), &platform, 2);
+    let (lb, ia) = (&arms[0], &arms[1]);
+    assert_eq!(lb.objective, PlacementObjective::LoadBalance);
+    assert_eq!(ia.objective, PlacementObjective::InterferenceAware);
+    let together = |arm: &PlacementArm| {
+        arm.per_device.iter().any(|d| {
+            d.contains(&"hi-a".to_string()) && d.contains(&"hi-b".to_string())
+        })
+    };
+    assert!(together(lb) && !together(ia));
+    assert!(ia.max_slowdown() < lb.max_slowdown());
+    assert!(ia.max_score_ms < lb.max_score_ms);
+    // Every device's slowdown is a real multiplier.
+    assert!(ia.slowdowns.iter().chain(&lb.slowdowns).all(|&s| s >= 1.0));
+}
+
+#[test]
+fn engine_builds_objective_consistent_deployments() {
+    let platform = Platform::titan_v();
+
+    // Interference-aware engine: the saturating tenants end up apart.
+    let mut b = GacerEngine::builder()
+        .devices(2)
+        .placement_objective(PlacementObjective::InterferenceAware)
+        .search(quick_cfg());
+    for dfg in interference_demo_mix(&platform) {
+        b = b.tenant(dfg);
+    }
+    let mut engine = b.build().unwrap();
+    assert_eq!(
+        engine.placement_objective(),
+        PlacementObjective::InterferenceAware
+    );
+    let ids = engine.tenant_ids();
+    let d_hi_a = engine.device_of(ids[0]).unwrap();
+    let d_hi_b = engine.device_of(ids[3]).unwrap();
+    assert_ne!(d_hi_a, d_hi_b, "engine placement separates the pair");
+    engine.sharded_plan().validate(engine.tenants()).unwrap();
+    engine.plan().validate(engine.tenants()).unwrap();
+
+    // Admission stays objective-consistent: the newcomer lands on the
+    // interference-scored device and only that shard is re-searched.
+    let newcomer = engine.tenants()[3].clone();
+    let id = engine.admit(newcomer).unwrap();
+    let device = engine.device_of(id).unwrap();
+    assert_eq!(engine.last_searched_device(), Some(device));
+    let expected = {
+        // Recompute the admission decision the engine must have made.
+        let set = demo_set();
+        Placement::from_assignments(
+            (0..2)
+                .map(|d| {
+                    (0..4)
+                        .filter(|&s| {
+                            engine.placement().tenants_on(d).contains(&s)
+                        })
+                        .collect()
+                })
+                .collect(),
+        )
+        .least_interfering(&set, &set.tenants[3])
+    };
+    assert_eq!(device, expected);
+    engine.sharded_plan().validate(engine.tenants()).unwrap();
+
+    // The default-objective engine reproduces the co-location.
+    let mut b = GacerEngine::builder().devices(2).search(quick_cfg());
+    for dfg in interference_demo_mix(&platform) {
+        b = b.tenant(dfg);
+    }
+    let engine = b.build().unwrap();
+    assert_eq!(engine.placement_objective(), PlacementObjective::LoadBalance);
+    let ids = engine.tenant_ids();
+    assert_eq!(
+        engine.device_of(ids[0]).unwrap(),
+        engine.device_of(ids[3]).unwrap(),
+        "load balance still pairs them — the objectives genuinely differ"
+    );
+}

@@ -8,7 +8,7 @@ use std::time::{Duration, Instant};
 use gacer::coordinator::{BatchPolicy, Batcher, PendingRequest};
 use gacer::gpu::{GpuSim, SimOp, SimOptions};
 use gacer::models::zoo;
-use gacer::plan::{DeploymentPlan, TenantSet};
+use gacer::plan::{DeploymentPlan, Placement, TenantSet};
 use gacer::profile::{CostModel, Platform};
 use gacer::search::{GacerSearch, SearchConfig};
 use gacer::temporal::PointerMatrix;
@@ -242,6 +242,68 @@ fn prop_batcher_never_drops_or_duplicates() {
         assert_eq!(sorted.len() as u64, pushed);
         // FIFO overall (single consumer, ordered drains).
         assert!(drained.windows(2).all(|w| w[0] < w[1]), "out of order");
+    });
+}
+
+#[test]
+fn prop_interference_placement_is_a_deterministic_partition() {
+    // (f) for random zoo subsets at random batches and device counts,
+    // `Placement::interference_aware` always yields a valid partition and
+    // is deterministic (same inputs → identical placement).
+    let platform = Platform::titan_v();
+    check_property("interference-placement-partition", 25, |rng| {
+        let n_tenants = rng.range(1, 6);
+        let tenants: Vec<gacer::dfg::Dfg> = (0..n_tenants)
+            .map(|_| {
+                let name = *rng.choose(&["Alex", "R18", "V16", "M3", "LSTM"]);
+                let batch = *rng.choose(&[1, 2, 8, 32]);
+                zoo::build(name, batch).unwrap()
+            })
+            .collect();
+        let set = TenantSet::new(tenants, CostModel::new(platform));
+        let n_devices = rng.range(1, 4);
+        let p = Placement::interference_aware(&set, n_devices);
+        p.validate(set.len()).unwrap();
+        assert_eq!(p.n_devices(), n_devices);
+        assert_eq!(
+            p,
+            Placement::interference_aware(&set, n_devices),
+            "placement must be deterministic"
+        );
+        // Scores/slowdowns are well-formed multipliers.
+        assert!(p.predicted_slowdowns(&set).iter().all(|&s| s >= 1.0));
+        assert!(p.interference_scores(&set).iter().all(|&s| s >= 0.0));
+    });
+}
+
+#[test]
+fn prop_identical_tenants_degenerate_to_lpt_max_load() {
+    // (g) with identical occupancy profiles the interference term cannot
+    // discriminate: interference-aware placement must match LPT's
+    // bottleneck load (the LoadBalance objective) exactly.
+    let platform = Platform::titan_v();
+    check_property("interference-degenerates-to-lpt", 15, |rng| {
+        let n_tenants = rng.range(2, 8);
+        let name = *rng.choose(&["R18", "Alex", "M3"]);
+        let tenants: Vec<gacer::dfg::Dfg> = (0..n_tenants)
+            .map(|i| {
+                let mut d = zoo::build_default(name).unwrap();
+                d.name = format!("{name}-{i}");
+                d
+            })
+            .collect();
+        let set = TenantSet::new(tenants, CostModel::new(platform));
+        let n_devices = rng.range(2, 4);
+        let ia = Placement::interference_aware(&set, n_devices);
+        let lb = Placement::balanced(&set, n_devices);
+        ia.validate(set.len()).unwrap();
+        let max_load =
+            |p: &Placement| p.loads(&set).into_iter().fold(0.0f64, f64::max);
+        let (ia_max, lb_max) = (max_load(&ia), max_load(&lb));
+        assert!(
+            (ia_max - lb_max).abs() <= 1e-6 * lb_max.max(1.0),
+            "identical tenants: interference max load {ia_max} vs LPT {lb_max}"
+        );
     });
 }
 
