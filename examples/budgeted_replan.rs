@@ -1,0 +1,136 @@
+//! Budgeted anytime re-search with warm-started search state — the code
+//! companion of `docs/SEARCH.md` (and of TUTORIAL.md step 7: admit under
+//! a re-plan budget). Runs entirely on the simulator substrate; CI
+//! executes it on every push.
+//!
+//! Walkthrough:
+//!
+//! 1. deploy 8 tenants on 2 devices with a bounded replan budget;
+//! 2. admit a 9th tenant: the one-shard re-search is warm-started
+//!    (incumbent streams reused) and budget-truncated, yet never worse
+//!    than the inherited plan;
+//! 3. a no-change re-search short-circuits to the cached plan at zero
+//!    evaluations (the warm-start invalidation rules at work);
+//! 4. a stale seed is a typed error, not an out-of-bounds panic;
+//! 5. cost/gain migration: a marginal skew the ratio rule would chase
+//!    is declined when the predicted gain cannot pay the re-plan + swap
+//!    bill, and a large skew still migrates.
+//!
+//!     cargo run --release --example budgeted_replan
+
+use gacer::models::zoo;
+use gacer::prelude::*;
+
+/// Shrunk search budget so the example runs in seconds; drop it to use
+/// `SearchConfig::default()` at deployment quality.
+fn quick_cfg() -> SearchConfig {
+    SearchConfig {
+        max_pointers: 2,
+        rounds_per_level: 1,
+        positions_per_coordinate: 6,
+        spatial_steps_per_level: 2,
+        ..Default::default()
+    }
+}
+
+fn main() -> gacer::Result<()> {
+    // ---- Stage 1: deploy under a replan budget -------------------------
+    // The budget applies to every *incremental* re-search (admit, evict,
+    // migrate); the initial build stays unbudgeted (offline quality).
+    let budget = SearchBudget::evaluations(60);
+    let mut b = GacerEngine::builder()
+        .platform(Platform::titan_v())
+        .devices(2)
+        .search(quick_cfg())
+        .replan_budget(budget);
+    for name in ["R50", "V16", "M3", "Alex", "R18", "R34", "LSTM", "BST"] {
+        b = b.tenant(zoo::build_default(name).unwrap());
+    }
+    let mut engine = b.build()?;
+    println!("== build: 8 tenants, 2 devices, replan budget {} ==", budget.label());
+    assert!(!engine.last_report().unwrap().truncated, "cold build is unbudgeted");
+
+    // ---- Stage 2: budgeted, warm-started admit -------------------------
+    let id = engine.admit(zoo::build_default("D121").unwrap())?;
+    let r = engine.last_report().expect("admit ran a search");
+    println!("\n== admit D121 -> device {} ==", engine.device_of(id)?);
+    println!(
+        "  {} evaluations in {:.1}ms under {} ({}); {} incumbent streams \
+         reused from the warm state",
+        r.evaluations,
+        r.elapsed.as_secs_f64() * 1e3,
+        r.budget.label(),
+        if r.truncated { "truncated" } else { "converged" },
+        r.warm_hits
+    );
+    // The anytime guarantee: truncated or not, never worse than the
+    // unregulated fallback (and the plan always validates).
+    assert!(r.outcome.objective() <= r.initial.objective() + 1e-6);
+    engine.sharded_plan().validate(engine.tenants())?;
+
+    // ---- Stage 3: a no-change re-search costs nothing ------------------
+    // Searching a shard again with its own plan as the seed hits the
+    // warm state's converged entry: bit-for-bit reproduction, zero
+    // evaluations. (Standalone searcher, same mechanism the engine uses.)
+    let ts = TenantSet::new(
+        vec![zoo::build_default("Alex").unwrap(), zoo::build_default("M3").unwrap()],
+        CostModel::new(Platform::titan_v()),
+    );
+    let opts = SimOptions::for_platform(&Platform::titan_v());
+    let search = GacerSearch::new(&ts, opts, quick_cfg());
+    let mut state = SearchState::new();
+    let cold = search.run_with_state(&mut state);
+    let warm = search.run_from_state(cold.plan.clone(), &mut state)?;
+    assert_eq!(warm.plan, cold.plan, "bit-for-bit reproduction");
+    assert_eq!(warm.evaluations, 0, "short-circuit costs nothing");
+    println!(
+        "\n== no-change re-search == short-circuited: {} evaluations, plan \
+         identical",
+        warm.evaluations
+    );
+
+    // ---- Stage 4: stale seeds are typed errors -------------------------
+    // A seed whose arity predates the last admit/evict is rejected with
+    // Error::InvalidPlan instead of indexing out of bounds.
+    let stale = DeploymentPlan::unregulated(5);
+    match search.run_from(stale) {
+        Err(Error::InvalidPlan(msg)) => {
+            println!("\n== stale seed == rejected as typed error: {msg}")
+        }
+        other => panic!("expected InvalidPlan, got {other:?}"),
+    }
+
+    // ---- Stage 5: cost/gain migration ----------------------------------
+    // Marginal skew: device 0 carries 4.2 of 5.2 load units — the ratio
+    // rule (max/min > 2) would chase it, but the best move only shaves
+    // 1.2 off the bottleneck. With a predicted bill of 2.0 units the
+    // cost/gain policy declines; a large skew still migrates.
+    let placement = Placement::from_assignments(vec![vec![0, 1], vec![2]]);
+    let marginal = [3.0, 1.2, 1.0];
+    let ratio_rule = MigrationPolicy::default();
+    let priced = MigrationPolicy::cost_aware(MigrationCost {
+        replan_us: 1.5,
+        swap_pause_us: 0.25,
+        payback_windows: 1.0,
+    });
+    assert!(ratio_rule.propose(&marginal, &placement).is_some());
+    assert!(priced.propose(&marginal, &placement).is_none());
+    let big = priced.propose(&[30.0, 12.0, 1.0], &placement).unwrap();
+    println!(
+        "\n== cost/gain migration ==\n  marginal skew {marginal:?}: ratio rule \
+         proposes, cost/gain declines (gain 1.2 < bill 2.0)\n  large skew \
+         [30, 12, 1]: migrates slot {} (gain {:.0} >= bill {:.0})",
+        big.slot, big.gain, big.cost
+    );
+
+    // On the engine, the bill comes from observed telemetry: the EWMA of
+    // the budgeted re-searches this very example just ran.
+    let cost = engine.migration_cost(1.0);
+    println!(
+        "  engine telemetry: re-plan {:.0}us + 2x swap pause {:.0}us per move",
+        cost.replan_us, cost.swap_pause_us
+    );
+
+    println!("\nall budgeted-replan invariants hold");
+    Ok(())
+}

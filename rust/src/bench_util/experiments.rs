@@ -7,14 +7,14 @@
 use crate::baselines::BaselineKind;
 use super::{
     compare_placements, fig7_header, fig7_row, interference_demo_mix, run_combo,
-    run_strategy, Strategy,
+    run_replan, run_strategy, ReplanCell, Strategy,
 };
 use crate::dfg::{Dfg, OpKind};
 use crate::gpu::SimOptions;
 use crate::models::zoo;
 use crate::plan::{DeploymentPlan, TenantSet};
 use crate::profile::{CostModel, Platform};
-use crate::search::{GacerSearch, SearchConfig};
+use crate::search::{GacerSearch, SearchBudget, SearchConfig};
 use crate::temporal::PointerMatrix;
 
 fn cfg() -> SearchConfig {
@@ -325,6 +325,65 @@ pub fn placement_objectives() {
             ia.max_slowdown()
         );
     }
+}
+
+/// Re-plan latency & plan quality vs budget, cold vs warm — the
+/// budgeted anytime re-search experiment (`docs/SEARCH.md`): an
+/// 8-tenant deployment admits a 9th tenant, and the admit re-search runs
+/// cold (Algorithm 1 from scratch on the grown set) and warm-started
+/// from the deployment's [`crate::search::SearchState`] under a sweep of
+/// evaluation budgets. Demonstrates (a) warm admit re-search evaluates
+/// far fewer candidates than cold for comparable final plan quality, and
+/// (b) under any eval budget the returned plan is never worse than the
+/// inherited seed, with truncation correctly flagged.
+pub fn replan() {
+    println!("== Re-plan: budgeted anytime re-search, cold vs warm (Titan V) ==");
+    let platform = Platform::titan_v();
+    let base = ["R50", "V16", "M3", "Alex", "R18", "R34", "LSTM", "BST"];
+    let budgets = [
+        SearchBudget::evaluations(50),
+        SearchBudget::evaluations(200),
+        SearchBudget::evaluations(1000),
+        SearchBudget::unbounded(),
+    ];
+    let (seed_obj, cold, warm) =
+        run_replan(&base, "D121", &platform, SearchConfig::default(), &budgets);
+    println!(
+        "8-tenant deployment ({}) admits D121; inherited seed objective {seed_obj:.0}",
+        base.join("+")
+    );
+    println!(
+        "{:<24} {:>8} {:>14} {:>9} {:>10} {:>10} {:>12}",
+        "arm", "evals", "objective", "vs seed", "truncated", "warm hits", "elapsed"
+    );
+    let row = |c: &ReplanCell| {
+        println!(
+            "{:<24} {:>8} {:>14.0} {:>9} {:>10} {:>10} {:>10.1}ms",
+            c.label,
+            c.evaluations,
+            c.objective,
+            format!("{:.3}x", c.objective / seed_obj),
+            if c.truncated { "yes" } else { "no" },
+            c.warm_hits,
+            c.elapsed_ms
+        );
+    };
+    row(&cold);
+    for c in &warm {
+        row(c);
+        let ok = c.objective <= seed_obj * (1.0 + 1e-9);
+        assert!(ok, "anytime guarantee violated: {} > seed {seed_obj}", c.objective);
+    }
+    let full = warm.last().expect("unbounded arm");
+    println!(
+        "\n=> warm admit re-search: {:.1}x fewer evaluations than cold \
+         ({} vs {}), final objective {:.1}% of cold's; every budgeted arm \
+         stayed at or below the inherited seed (anytime guarantee)",
+        cold.evaluations as f64 / full.evaluations.max(1) as f64,
+        full.evaluations,
+        cold.evaluations,
+        full.objective / cold.objective * 100.0
+    );
 }
 
 /// Ablation: calibration-constant sensitivity (DESIGN.md §2).

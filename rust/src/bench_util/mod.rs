@@ -10,7 +10,9 @@ use crate::gpu::{SimOptions, SimOutcome};
 use crate::models::zoo;
 use crate::plan::{Placement, PlacementObjective, TenantSet};
 use crate::profile::{CostModel, Platform};
-use crate::search::{GacerSearch, SearchConfig, ShardedSearch};
+use crate::search::{
+    GacerSearch, SearchBudget, SearchConfig, SearchReport, SearchState, ShardedSearch,
+};
 
 /// Every strategy of Fig. 7.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -228,6 +230,86 @@ pub fn interference_demo_mix(platform: &Platform) -> Vec<Dfg> {
     ]
 }
 
+/// One measured arm of the re-plan experiment (`gacer-bench replan`):
+/// how an admit re-search behaved under one budget, cold vs warm.
+#[derive(Debug, Clone)]
+pub struct ReplanCell {
+    /// Arm label (e.g. `"cold (from scratch)"`, `"warm, <=200 evals"`).
+    pub label: String,
+    /// Simulator evaluations the search spent.
+    pub evaluations: usize,
+    /// Objective of the returned plan (Eq. 8 residue; lower is better).
+    pub objective: f64,
+    /// Whether the budget truncated convergence.
+    pub truncated: bool,
+    /// Tenant streams reused from the warm [`SearchState`].
+    pub warm_hits: usize,
+    /// Wall-clock search time (ms).
+    pub elapsed_ms: f64,
+}
+
+impl ReplanCell {
+    fn of(label: impl Into<String>, r: &SearchReport) -> Self {
+        ReplanCell {
+            label: label.into(),
+            evaluations: r.evaluations,
+            objective: r.outcome.objective(),
+            truncated: r.truncated,
+            warm_hits: r.warm_hits,
+            elapsed_ms: r.elapsed.as_secs_f64() * 1e3,
+        }
+    }
+}
+
+/// The admit re-plan experiment: deploy `names` (cold search, filling a
+/// warm [`SearchState`]), then admit `newcomer` and re-search the grown
+/// set three ways — cold from scratch, and warm-started from the
+/// deployment's state under each of `budgets`. Returns the inherited
+/// seed's objective (the anytime floor every warm arm must stay at or
+/// below), the cold cell, and one warm cell per budget.
+pub fn run_replan(
+    names: &[&str],
+    newcomer: &str,
+    platform: &Platform,
+    cfg: SearchConfig,
+    budgets: &[SearchBudget],
+) -> (f64, ReplanCell, Vec<ReplanCell>) {
+    let cost = CostModel::new(*platform);
+    let opts = SimOptions::for_platform(platform);
+    let mut tenants = zoo::build_combo(names);
+    let ts = TenantSet::new(tenants.clone(), cost.clone());
+    let mut state = SearchState::new();
+    let deployed = GacerSearch::new(&ts, opts, cfg).run_with_state(&mut state);
+
+    // The admit event: the newcomer joins at the deployment's pointer
+    // level, exactly as `GacerEngine::admit` reshapes the shard plan.
+    tenants.push(zoo::build_default(newcomer).expect("zoo model"));
+    let grown = TenantSet::new(tenants.clone(), cost);
+    let mut seed = deployed.plan.clone();
+    seed.push_tenant(
+        tenants.last().unwrap().len(),
+        seed.pointers.pointers_per_tenant(),
+    );
+    let seed_objective = grown.simulate(&seed, opts).objective();
+
+    let cold = ReplanCell::of(
+        "cold (from scratch)",
+        &GacerSearch::new(&grown, opts, cfg).run(),
+    );
+    let warm = budgets
+        .iter()
+        .map(|&budget| {
+            let mut s = state.clone();
+            let r = GacerSearch::new(&grown, opts, cfg)
+                .budget(budget)
+                .run_from_state(seed.clone(), &mut s)
+                .expect("the admit seed matches the grown tenant set");
+            ReplanCell::of(format!("warm, {}", budget.label()), &r)
+        })
+        .collect();
+    (seed_objective, cold, warm)
+}
+
 /// Format a Fig. 7-style row: speedups normalized to CuDNN-Seq.
 pub fn fig7_row(label: &str, cells: &[EvalCell]) -> String {
     let seq = cells
@@ -308,6 +390,36 @@ mod tests {
         assert!(!together(ia), "interference-aware separates it");
         assert!(ia.max_slowdown() < lb.max_slowdown());
         assert!(ia.max_score_ms < lb.max_score_ms);
+    }
+
+    #[test]
+    fn replan_arms_respect_the_anytime_floor() {
+        let platform = Platform::titan_v();
+        let budgets = [SearchBudget::evaluations(5), SearchBudget::unbounded()];
+        let (seed_obj, cold, warm) = run_replan(
+            &["Alex", "V16", "R18", "M3"],
+            "R18",
+            &platform,
+            quick_cfg(),
+            &budgets,
+        );
+        assert!(cold.evaluations > 0);
+        assert!(!cold.truncated);
+        assert_eq!(warm.len(), 2);
+        for cell in &warm {
+            // The anytime guarantee: never worse than the inherited seed.
+            assert!(
+                cell.objective <= seed_obj + 1e-6,
+                "{}: {} > seed {seed_obj}",
+                cell.label,
+                cell.objective
+            );
+        }
+        // 5 evaluations cannot finish an admit re-search on 5 tenants.
+        assert!(warm[0].truncated);
+        assert!(!warm[1].truncated);
+        // The unbounded warm arm reuses the deployment's streams.
+        assert!(warm[1].label.contains("unbounded"));
     }
 
     #[test]

@@ -1,11 +1,14 @@
 //! `gacer-bench` — regenerates every table and figure of the paper's
 //! evaluation section (see DESIGN.md §6 for the experiment index).
 //!
-//! Usage: `gacer-bench <fig4|fig7|fig8|table2|fig9|table3|table4|placement|all>
+//! Usage: `gacer-bench <fig4|fig7|fig8|table2|fig9|table3|table4|placement|replan|all>
 //! [--rounds N]`
 //!
 //! `placement` is this repo's multi-GPU extension: LoadBalance vs
 //! InterferenceAware placement objectives over heterogeneous tenant mixes.
+//! `replan` is the online-serving extension: re-plan latency and plan
+//! quality vs search budget on an admit event, cold vs warm-started
+//! (`docs/SEARCH.md`).
 
 use gacer::bench_util::experiments;
 use gacer::util::cli::Args;
@@ -21,7 +24,7 @@ fn main() {
     let ids: Vec<&str> = if experiment == "all" {
         vec![
             "fig4", "fig7", "fig8", "table2", "fig9", "table3", "table4",
-            "placement",
+            "placement", "replan",
         ]
     } else {
         vec![experiment.as_str()]
@@ -36,6 +39,7 @@ fn main() {
             "table3" => experiments::table3(),
             "table4" => experiments::table4(rounds),
             "placement" => experiments::placement_objectives(),
+            "replan" => experiments::replan(),
             other => {
                 eprintln!("unknown experiment: {other}");
                 std::process::exit(2);

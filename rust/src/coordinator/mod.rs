@@ -45,4 +45,4 @@ mod server;
 pub use batcher::{BatchPolicy, Batcher, PendingRequest};
 pub use cluster::ClusterServer;
 pub use executor::{ExecJob, ExecutorHandle};
-pub use server::{serve_demo, ServeReport, Server, ServerConfig, TenantSpec};
+pub use server::{serve_demo, ServeOptions, ServeReport, Server, ServerConfig, TenantSpec};

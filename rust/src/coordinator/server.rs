@@ -27,6 +27,7 @@ use crate::error::{Error, Result};
 use crate::metrics::LatencyHistogram;
 use crate::plan::PlacementObjective;
 use crate::runtime::{load_params, ArtifactManifest};
+use crate::search::SearchBudget;
 
 /// One tenant of the serving deployment.
 #[derive(Debug, Clone, PartialEq)]
@@ -667,34 +668,76 @@ fn demo_input(t: usize, i: usize) -> Vec<f32> {
         .collect()
 }
 
+/// Options of the [`serve_demo`] driver beyond the artifact dir and the
+/// tenant list (`gacer serve`'s flags).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Requests served per tenant.
+    pub n_requests: usize,
+    /// Devices to shard the deployment across (1 = classic single GPU).
+    pub n_devices: usize,
+    /// Placement objective for the device dimension.
+    pub objective: PlacementObjective,
+    /// Admit one more tenant of this family against the *running*
+    /// cluster and hot-swap the re-searched plan in (no restart).
+    pub live_admit: Option<String>,
+    /// Budget for the engine's incremental re-searches — bounds the
+    /// live-admit re-plan latency (`--replan-budget-ms`).
+    pub replan_budget: SearchBudget,
+    /// After serving, consult a cost/gain-aware
+    /// [`MigrationPolicy`](crate::engine::MigrationPolicy) built from
+    /// the engine's observed re-plan telemetry against the served
+    /// counts, and report (and hot-swap) the decision
+    /// (`--migration-cost-aware`).
+    pub cost_aware_migration: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            n_requests: 64,
+            n_devices: 1,
+            objective: PlacementObjective::default(),
+            live_admit: None,
+            replan_budget: SearchBudget::unbounded(),
+            cost_aware_migration: false,
+        }
+    }
+}
+
 /// The e2e demo driver (`gacer serve`): build a [`GacerEngine`] over DFG
-/// proxies of the requested families, shard them across `n_devices`
-/// (1 = the classic single-GPU deployment), let the granularity-aware
-/// search produce one plan per device, lower each to its live server
-/// config, and serve `n_requests` per tenant of real inference through
-/// the cluster front-end ([`crate::coordinator::ClusterServer`] — with a
-/// single device this is one scheduler, exactly the old behavior).
+/// proxies of the requested families, shard them across
+/// `opts.n_devices` (1 = the classic single-GPU deployment), let the
+/// granularity-aware search produce one plan per device, lower each to
+/// its live server config, and serve `opts.n_requests` per tenant of
+/// real inference through the cluster front-end
+/// ([`crate::coordinator::ClusterServer`] — with a single device this is
+/// one scheduler, exactly the old behavior).
 ///
-/// With `live_admit: Some(family)` the driver then demonstrates live
-/// re-deployment: it admits one more tenant of that family against the
-/// *running* cluster, hot-swaps the re-searched plans in with
-/// [`GacerEngine::redeploy_cluster`], and serves the newcomer's requests
-/// through the same servers — no restart.
+/// With `opts.live_admit: Some(family)` the driver then demonstrates
+/// live re-deployment: it admits one more tenant of that family against
+/// the *running* cluster — under `opts.replan_budget`, printing the
+/// re-search's budget telemetry — hot-swaps the re-searched plans in
+/// with [`GacerEngine::redeploy_cluster`], and serves the newcomer's
+/// requests through the same servers, no restart. With
+/// `opts.cost_aware_migration` it closes the loop: the served counts
+/// feed the engine's demand counters and a cost/gain-aware migration
+/// policy decides whether any move pays for its own re-plan + swap
+/// disruption.
 ///
 /// [`GacerEngine`]: crate::engine::GacerEngine
 /// [`GacerEngine::redeploy_cluster`]: crate::engine::GacerEngine::redeploy_cluster
 pub fn serve_demo(
     artifact_dir: &str,
     tenant_models: &[String],
-    n_requests: usize,
-    n_devices: usize,
-    objective: PlacementObjective,
-    live_admit: Option<&str>,
+    opts: &ServeOptions,
 ) -> Result<ServeReport> {
+    let n_requests = opts.n_requests;
     let mut builder = crate::engine::GacerEngine::builder()
         .platform(crate::profile::Platform::titan_v())
-        .devices(n_devices)
-        .placement_objective(objective)
+        .devices(opts.n_devices)
+        .placement_objective(opts.objective)
+        .replan_budget(opts.replan_budget)
         .artifacts(artifact_dir);
     for (i, family) in tenant_models.iter().enumerate() {
         builder = builder.serving_tenant(
@@ -757,7 +800,7 @@ pub fn serve_demo(
 
     // Live re-deployment demo: admit against the RUNNING cluster, hot
     // swap, serve the newcomer. The servers and their executors persist.
-    if let Some(family) = live_admit {
+    if let Some(family) = opts.live_admit.as_deref() {
         let policy =
             BatchPolicy::new(8, Duration::from_millis(2), vec![1, 2, 4, 8, 16, 32]);
         let id = engine.admit_serving(format!("{family}-live"), family, policy)?;
@@ -770,6 +813,17 @@ pub fn serve_demo(
             "live admit {family} -> device {device}; hot-swapped devices {touched:?} \
              (no restart)"
         );
+        if let Some(r) = engine.last_report() {
+            println!(
+                "  admit re-search: {} evaluations in {:.1}ms under budget {} \
+                 ({}), {} warm stream hits",
+                r.evaluations,
+                r.elapsed.as_secs_f64() * 1e3,
+                r.budget.label(),
+                if r.truncated { "truncated" } else { "converged" },
+                r.warm_hits
+            );
+        }
         let mut hist = LatencyHistogram::new();
         for i in 0..n_requests {
             let t0 = Instant::now();
@@ -784,6 +838,34 @@ pub fn serve_demo(
         }
         total_requests += n_requests;
         per_tenant.push((format!("{family}-live"), hist));
+    }
+
+    // Cost/gain migration consult: close the observe→decide loop once
+    // with a policy priced from the engine's own re-plan telemetry.
+    if opts.cost_aware_migration {
+        engine.record_served(&server.served_counts())?;
+        let cost = engine.migration_cost(1.0);
+        let policy = crate::engine::MigrationPolicy::cost_aware(cost);
+        match engine.maybe_migrate(&policy)? {
+            Some(m) => {
+                let touched = engine.redeploy_cluster(&server)?;
+                println!(
+                    "cost/gain migration: moved {} from device {} to {} \
+                     (predicted bill {:.0}us); hot-swapped devices {touched:?}",
+                    m.tenant,
+                    m.from,
+                    m.to,
+                    cost.total_us()
+                );
+            }
+            None => println!(
+                "cost/gain migration: no move pays its predicted bill of \
+                 {:.0}us (re-plan {:.0}us + 2x swap pause {:.0}us) — staying put",
+                cost.total_us(),
+                cost.replan_us,
+                cost.swap_pause_us
+            ),
+        }
     }
 
     let report = ServeReport {

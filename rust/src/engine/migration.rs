@@ -14,9 +14,19 @@
 //! ([`GacerEngine::maybe_migrate`] → [`GacerEngine::migrate`]: two-shard
 //! re-search, then a cluster hot swap).
 //!
+//! A migration is not free: it costs a two-shard seeded re-search plus
+//! an epoch-fenced swap pause on both devices. The **cost/gain mode**
+//! ([`MigrationCost`], [`MigrationPolicy::cost_aware`]) prices that from
+//! observed budgeted-search telemetry
+//! ([`GacerEngine::migration_cost`]) and declines a triggered move whose
+//! predicted bottleneck reduction would not pay the bill back within the
+//! configured number of observe windows — so marginal skew is tolerated
+//! and large skew still migrates.
+//!
 //! [`GacerEngine::observed_device_loads`]: crate::engine::GacerEngine::observed_device_loads
 //! [`GacerEngine::maybe_migrate`]: crate::engine::GacerEngine::maybe_migrate
 //! [`GacerEngine::migrate`]: crate::engine::GacerEngine::migrate
+//! [`GacerEngine::migration_cost`]: crate::engine::GacerEngine::migration_cost
 
 use crate::engine::TenantId;
 use crate::metrics::imbalance_ratio;
@@ -66,11 +76,62 @@ pub struct MigrationPolicy {
     ///
     /// [`GacerEngine::maybe_migrate`]: crate::engine::GacerEngine::maybe_migrate
     pub cooldown_windows: usize,
+    /// `None` (the default): the classic ratio-threshold rule — every
+    /// triggered, bottleneck-shrinking move is proposed. `Some(cost)`:
+    /// **cost/gain mode** — the move must additionally pay for itself:
+    /// its predicted per-window gain (the bottleneck load/score
+    /// reduction) times [`MigrationCost::payback_windows`] must reach
+    /// [`MigrationCost::total_us`]. Feed it from observed telemetry with
+    /// [`GacerEngine::migration_cost`].
+    ///
+    /// [`GacerEngine::migration_cost`]: crate::engine::GacerEngine::migration_cost
+    pub cost: Option<MigrationCost>,
 }
 
 impl Default for MigrationPolicy {
     fn default() -> Self {
-        MigrationPolicy { max_imbalance: 2.0, cooldown_windows: 1 }
+        MigrationPolicy { max_imbalance: 2.0, cooldown_windows: 1, cost: None }
+    }
+}
+
+/// Predicted one-time cost of executing a migration, for
+/// [`MigrationPolicy`]'s cost/gain mode. All figures are in
+/// microseconds, the same unit as the observed load weights the gain is
+/// measured in (demand × per-request latency per observe window).
+///
+/// The engine derives one from its own telemetry
+/// ([`GacerEngine::migration_cost`]): `replan_us` from the EWMA of
+/// recent budgeted incremental re-search wall-times (×2 — a migration
+/// re-searches the source and the destination shard), `swap_pause_us`
+/// from the scheduler tick (the epoch-fence commit each affected device
+/// pays, see `docs/OPERATIONS.md`).
+///
+/// [`GacerEngine::migration_cost`]: crate::engine::GacerEngine::migration_cost
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MigrationCost {
+    /// Predicted two-shard re-plan wall-time (µs).
+    pub replan_us: f64,
+    /// Predicted swap-pause disruption per affected device (µs); charged
+    /// twice (source and destination both fence).
+    pub swap_pause_us: f64,
+    /// How many observe windows the per-window gain may take to pay the
+    /// one-time cost back (≥ `total_us / gain` windows decline the
+    /// move). `1.0` demands the very next window already break even;
+    /// larger values migrate more eagerly on persistent skew.
+    pub payback_windows: f64,
+}
+
+impl Default for MigrationCost {
+    fn default() -> Self {
+        MigrationCost { replan_us: 0.0, swap_pause_us: 0.0, payback_windows: 1.0 }
+    }
+}
+
+impl MigrationCost {
+    /// The full predicted bill of one migration: the two-shard re-plan
+    /// plus both devices' swap pauses.
+    pub fn total_us(&self) -> f64 {
+        self.replan_us + 2.0 * self.swap_pause_us
     }
 }
 
@@ -88,6 +149,13 @@ pub struct MigrationProposal {
     pub imbalance_before: f64,
     /// Predicted ratio after the move.
     pub imbalance_after: f64,
+    /// Predicted per-window gain: the reduction of the bottleneck
+    /// device's observed load (µs-weighted; for the interference-aware
+    /// variant, of the max `load × slowdown` score).
+    pub gain: f64,
+    /// Predicted one-time migration cost ([`MigrationCost::total_us`];
+    /// `0.0` under the classic ratio-threshold rule).
+    pub cost: f64,
 }
 
 /// A migration the engine actually executed
@@ -102,6 +170,60 @@ pub struct Migration {
 }
 
 impl MigrationPolicy {
+    /// The cost/gain policy: the default trigger and cooldown, plus a
+    /// [`MigrationCost`] gate — a triggered move is only proposed when
+    /// its predicted gain pays the migration bill back within
+    /// `cost.payback_windows` observe windows.
+    ///
+    /// ```
+    /// use gacer::engine::{MigrationCost, MigrationPolicy};
+    /// use gacer::plan::Placement;
+    ///
+    /// let placement = Placement::from_assignments(vec![vec![0, 1], vec![2]]);
+    /// let cost = MigrationCost {
+    ///     replan_us: 2.0,
+    ///     swap_pause_us: 0.0,
+    ///     payback_windows: 1.0,
+    /// };
+    /// let policy = MigrationPolicy::cost_aware(cost);
+    ///
+    /// // Marginal skew: the ratio (4.2 / 1.0) triggers and the classic
+    /// // rule would chase it, but moving slot 1 only shaves 1.2 off the
+    /// // bottleneck — less than the 2.0 bill, so cost/gain declines.
+    /// let weights = [3.0, 1.2, 1.0];
+    /// assert!(MigrationPolicy::default().propose(&weights, &placement).is_some());
+    /// assert!(policy.propose(&weights, &placement).is_none());
+    ///
+    /// // Large skew: the same move now shaves 12.0 — it migrates, and
+    /// // the proposal reports the predicted gain and cost.
+    /// let p = policy.propose(&[30.0, 12.0, 1.0], &placement).unwrap();
+    /// assert_eq!((p.slot, p.from, p.to), (1, 0, 1));
+    /// assert_eq!(p.gain, 12.0);
+    /// assert_eq!(p.cost, 2.0);
+    /// ```
+    pub fn cost_aware(cost: MigrationCost) -> Self {
+        MigrationPolicy { cost: Some(cost), ..Default::default() }
+    }
+
+    /// Attach a [`MigrationCost`] gate to an existing policy.
+    pub fn with_cost(mut self, cost: MigrationCost) -> Self {
+        self.cost = Some(cost);
+        self
+    }
+
+    /// Whether a predicted per-window `gain` pays for the configured
+    /// migration cost (always true without a cost model).
+    fn gain_pays(&self, gain: f64) -> bool {
+        match &self.cost {
+            None => true,
+            Some(c) => gain * c.payback_windows.max(0.0) >= c.total_us(),
+        }
+    }
+
+    fn bill(&self) -> f64 {
+        self.cost.as_ref().map_or(0.0, MigrationCost::total_us)
+    }
+
     /// Evaluate observed per-tenant load `weights` (slot order, e.g.
     /// [`crate::engine::GacerEngine::observed_tenant_weights`]) under
     /// `placement`. Returns the single tenant move onto the least loaded
@@ -159,12 +281,22 @@ impl MigrationPolicy {
                 }
             }
         }
-        best.map(|(_, after, slot, from)| MigrationProposal {
-            slot,
-            from,
-            to,
-            imbalance_before: before,
-            imbalance_after: after,
+        best.and_then(|(new_max, after, slot, from)| {
+            // Cost/gain gate: the bottleneck reduction must pay the
+            // re-plan + swap-pause bill back within the payback horizon.
+            let gain = old_max - new_max;
+            if !self.gain_pays(gain) {
+                return None;
+            }
+            Some(MigrationProposal {
+                slot,
+                from,
+                to,
+                imbalance_before: before,
+                imbalance_after: after,
+                gain,
+                cost: self.bill(),
+            })
         })
     }
 
@@ -265,12 +397,22 @@ impl MigrationPolicy {
                 }
             }
         }
-        best.map(|(_, after, slot, from, to)| MigrationProposal {
-            slot,
-            from,
-            to,
-            imbalance_before: before,
-            imbalance_after: after,
+        best.and_then(|(new_max, after, slot, from, to)| {
+            // Same cost/gain gate as `propose`, on the interference
+            // score: relieving the bottleneck must out-earn the bill.
+            let gain = current_max - new_max;
+            if !self.gain_pays(gain) {
+                return None;
+            }
+            Some(MigrationProposal {
+                slot,
+                from,
+                to,
+                imbalance_before: before,
+                imbalance_after: after,
+                gain,
+                cost: self.bill(),
+            })
         })
     }
 }
@@ -355,6 +497,78 @@ mod tests {
         assert!(lax.propose(&[8.0, 4.0, 2.0, 4.0], &placement()).is_none());
         let strict = MigrationPolicy { max_imbalance: 1.1, ..Default::default() };
         assert!(strict.propose(&[8.0, 4.0, 2.0, 4.0], &placement()).is_some());
+    }
+
+    #[test]
+    fn cost_gain_declines_marginal_skew_that_ratio_rule_would_chase() {
+        // Device 0 = {0, 1} carries 4.2 of 5.2 total load: ratio > 2
+        // triggers, and the ratio-threshold policy proposes moving
+        // slot 1 (shaving 1.2 off the bottleneck).
+        let p = Placement::from_assignments(vec![vec![0, 1], vec![2]]);
+        let weights = [3.0, 1.2, 1.0];
+        let ratio_rule = MigrationPolicy::default();
+        let chased = ratio_rule.propose(&weights, &p).unwrap();
+        assert_eq!(chased.slot, 1);
+        assert_eq!(chased.cost, 0.0, "classic rule prices nothing");
+
+        // Cost/gain mode with a 2.0 bill: the 1.2 gain does not pay it
+        // back within one window — declined.
+        let cost = MigrationCost {
+            replan_us: 1.5,
+            swap_pause_us: 0.25,
+            payback_windows: 1.0,
+        };
+        assert_eq!(cost.total_us(), 2.0);
+        let priced = MigrationPolicy::cost_aware(cost);
+        assert!(priced.propose(&weights, &p).is_none());
+
+        // A longer payback horizon tolerates the same bill (2 windows of
+        // 1.2 > 2.0).
+        let patient = MigrationPolicy::cost_aware(MigrationCost {
+            payback_windows: 2.0,
+            ..cost
+        });
+        assert!(patient.propose(&weights, &p).is_some());
+
+        // Large skew pays for itself immediately: still migrates, and
+        // the proposal carries the gain/cost audit trail.
+        let moved = priced.propose(&[30.0, 12.0, 1.0], &p).unwrap();
+        assert_eq!((moved.slot, moved.from, moved.to), (1, 0, 1));
+        assert_eq!(moved.gain, 12.0);
+        assert_eq!(moved.cost, 2.0);
+    }
+
+    #[test]
+    fn cost_gain_gate_applies_to_the_interference_variant() {
+        let set = interference_set();
+        let placement =
+            Placement::from_assignments(vec![vec![0, 1], vec![2], vec![3]]);
+        let weights = [6.0, 4.0, 1.0, 2.0];
+        // The ungated interference policy proposes a move (see
+        // interference_destination_avoids_the_saturated_device).
+        let free = MigrationPolicy::default();
+        let m = free.propose_interference_aware(&weights, &placement, &set).unwrap();
+        assert!(m.gain > 0.0);
+        // A bill larger than that gain vetoes the same move.
+        let pricey = MigrationPolicy::cost_aware(MigrationCost {
+            replan_us: m.gain * 10.0,
+            swap_pause_us: 0.0,
+            payback_windows: 1.0,
+        });
+        assert!(pricey
+            .propose_interference_aware(&weights, &placement, &set)
+            .is_none());
+        // A bill the gain covers still migrates, with the bill recorded.
+        let fair = MigrationPolicy::cost_aware(MigrationCost {
+            replan_us: m.gain * 0.5,
+            swap_pause_us: 0.0,
+            payback_windows: 1.0,
+        });
+        let priced = fair
+            .propose_interference_aware(&weights, &placement, &set)
+            .unwrap();
+        assert_eq!((priced.slot, priced.to), (m.slot, m.to));
+        assert_eq!(priced.cost, m.gain * 0.5);
     }
 
     #[test]

@@ -29,7 +29,13 @@
 //! eviction; ids never do). Admission and eviction trigger an
 //! **incremental re-search** ([`crate::search::GacerSearch::run_from`])
 //! seeded with the surviving plan, so reconfiguration costs a fraction of
-//! a cold search.
+//! a cold search. The re-search is **warm-started and budgeted**: the
+//! engine keeps one [`crate::search::SearchState`] per device (compiled
+//! tenant streams are reused; only tenants whose chunking changed
+//! recompile) and [`EngineBuilder::replan_budget`] caps each event's
+//! re-plan latency — the anytime search returns its best-so-far plan and
+//! flags truncation on the event's report. Internals:
+//! `docs/SEARCH.md`.
 //!
 //! # Multi-GPU sharding
 //!
@@ -91,7 +97,7 @@
 
 mod migration;
 
-pub use migration::{Migration, MigrationPolicy, MigrationProposal};
+pub use migration::{Migration, MigrationCost, MigrationPolicy, MigrationProposal};
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -108,7 +114,7 @@ use crate::plan::{
 };
 use crate::profile::{CostModel, Platform};
 use crate::runtime::ArtifactManifest;
-use crate::search::{SearchConfig, SearchReport, ShardedSearch};
+use crate::search::{SearchBudget, SearchConfig, SearchReport, SearchState, ShardedSearch};
 
 /// Stable identifier of a deployed tenant (survives other tenants'
 /// evictions, unlike slot indices).
@@ -183,6 +189,7 @@ pub struct EngineBuilder {
     platform: Platform,
     artifact_dir: Option<PathBuf>,
     search: SearchConfig,
+    replan_budget: SearchBudget,
     tick: Duration,
     n_devices: usize,
     objective: PlacementObjective,
@@ -196,6 +203,7 @@ impl EngineBuilder {
             platform: Platform::titan_v(),
             artifact_dir: None,
             search: SearchConfig::default(),
+            replan_budget: SearchBudget::unbounded(),
             tick: Duration::from_micros(200),
             n_devices: 1,
             objective: PlacementObjective::default(),
@@ -243,6 +251,25 @@ impl EngineBuilder {
     /// Search hyper-parameters (defaults to [`SearchConfig::default`]).
     pub fn search(mut self, cfg: SearchConfig) -> Self {
         self.search = cfg;
+        self
+    }
+
+    /// Budget for every **incremental** re-search the engine triggers at
+    /// runtime — `admit`/`evict` (one shard) and `migrate` (two shards).
+    /// Default [`SearchBudget::unbounded`]. A bounded budget (e.g.
+    /// [`SearchBudget::deadline_ms`], the CLI's `--replan-budget-ms`)
+    /// caps re-plan latency per re-searched shard: the anytime search
+    /// returns its best-so-far plan, never worse than the inherited
+    /// seed, and flags [`SearchReport::truncated`] on the event's report
+    /// ([`GacerEngine::last_report`]).
+    ///
+    /// The initial build and explicit [`GacerEngine::replan`] calls stay
+    /// unbudgeted — a cold re-plan is the offline-quality path; the
+    /// budget exists to keep the *online* regulation loop responsive.
+    ///
+    /// [`SearchReport::truncated`]: crate::search::SearchReport::truncated
+    pub fn replan_budget(mut self, budget: SearchBudget) -> Self {
+        self.replan_budget = budget;
         self
     }
 
@@ -295,6 +322,7 @@ impl EngineBuilder {
             opts: SimOptions::for_platform(&self.platform),
             platform: self.platform,
             search_cfg: self.search,
+            replan_budget: self.replan_budget,
             tick: self.tick,
             n_devices,
             objective: self.objective,
@@ -304,6 +332,8 @@ impl EngineBuilder {
             sharded: ShardedDeploymentPlan::unregulated(empty),
             merged: DeploymentPlan::unregulated(0),
             reports: (0..n_devices).map(|_| None).collect(),
+            search_states: vec![SearchState::default(); n_devices],
+            replan_cost_ewma_us: None,
             last_report: None,
             last_searched_device: None,
             last_searched_devices: Vec::new(),
@@ -330,6 +360,9 @@ pub struct GacerEngine {
     platform: Platform,
     opts: SimOptions,
     search_cfg: SearchConfig,
+    /// Budget for incremental (admit/evict/migrate) re-searches; cold
+    /// re-plans stay unbounded ([`EngineBuilder::replan_budget`]).
+    replan_budget: SearchBudget,
     tick: Duration,
     /// Device count the deployment is sharded across (>= 1).
     n_devices: usize,
@@ -346,6 +379,16 @@ pub struct GacerEngine {
     /// Per-device bookkeeping of the most recent search that touched the
     /// device (`None` for empty devices).
     reports: Vec<Option<SearchReport>>,
+    /// One persistent warm-start cache per device
+    /// ([`crate::search::SearchState`]): compiled tenant streams, last
+    /// converged plan, descent cursor. Filled by the cold build/replan
+    /// searches and reused by every incremental re-search, which
+    /// recompiles only the tenants whose chunking actually changed.
+    search_states: Vec<SearchState>,
+    /// EWMA of recent incremental re-search wall-times (µs) — the
+    /// observed-telemetry input to cost/gain-aware migration
+    /// ([`GacerEngine::migration_cost`]).
+    replan_cost_ewma_us: Option<f64>,
     last_report: Option<SearchReport>,
     /// Device affected by the most recent admit/evict/replan event (for
     /// a migration: the receiving device).
@@ -586,7 +629,7 @@ impl GacerEngine {
         // global slot is the largest), so push_tenant's slot matches.
         let level = self.sharded.shards[device].pointers.pointers_per_tenant();
         self.sharded.shards[device].push_tenant(dfg_len, level);
-        self.research_shard(device);
+        self.research_shard(device)?;
         Ok(id)
     }
 
@@ -604,7 +647,7 @@ impl GacerEngine {
         let dfg = self.set.evict(idx);
         self.sharded.placement.remove_slot(idx);
         self.sharded.shards[device].remove_tenant(local);
-        self.research_shard(device);
+        self.research_shard(device)?;
         Ok(dfg)
     }
 
@@ -618,14 +661,20 @@ impl GacerEngine {
             self.sharded = ShardedDeploymentPlan::unregulated(empty);
             self.merged = DeploymentPlan::unregulated(0);
             self.reports = (0..self.n_devices).map(|_| None).collect();
+            self.search_states = vec![SearchState::default(); self.n_devices];
             self.last_report = None;
             self.last_searched_device = None;
             self.last_searched_devices = Vec::new();
             return;
         }
+        // Cold searches also refill the per-device warm states, so the
+        // next incremental event starts from this re-plan's compiled
+        // streams and converged plans.
+        let mut states = vec![SearchState::default(); self.n_devices];
         let report = ShardedSearch::new(&self.set, self.opts, self.search_cfg)
             .objective(self.objective)
-            .run(self.n_devices);
+            .run_warm(self.n_devices, &mut states);
+        self.search_states = states;
         let bottleneck = report.bottleneck_device();
         self.last_report =
             bottleneck.and_then(|d| report.reports[d].clone());
@@ -642,13 +691,33 @@ impl GacerEngine {
     }
 
     /// Incremental re-search of one shard, seeded with its current
-    /// (already re-shaped) plan. Other shards are left untouched.
-    fn research_shard(&mut self, device: usize) {
+    /// (already re-shaped) plan, warm-started from the device's
+    /// [`SearchState`] and bounded by the engine's replan budget. Other
+    /// shards are left untouched.
+    fn research_shard(&mut self, device: usize) -> Result<()> {
         let seed = self.sharded.shards[device].clone();
         let report = ShardedSearch::new(&self.set, self.opts, self.search_cfg)
-            .research_device(&self.sharded.placement, device, seed);
+            .budget(self.replan_budget)
+            .research_device_warm(
+                &self.sharded.placement,
+                device,
+                seed,
+                &mut self.search_states[device],
+            );
+        let report = match report {
+            Ok(r) => r,
+            Err(e) => {
+                // Unreachable for engine-built seeds (the reshape keeps
+                // them valid), but if it ever fires the reshaped
+                // un-researched plan is still consistent — keep the
+                // merged view coherent before surfacing the error.
+                self.rebuild_merged();
+                return Err(e);
+            }
+        };
         match report {
             Some(report) => {
+                self.note_replan_cost(report.elapsed);
                 self.sharded.shards[device] = report.plan.clone();
                 self.reports[device] = Some(report.clone());
                 self.last_report = Some(report);
@@ -665,6 +734,59 @@ impl GacerEngine {
         self.last_searched_device = Some(device);
         self.last_searched_devices = vec![device];
         self.rebuild_merged();
+        Ok(())
+    }
+
+    /// Fold one incremental re-search's wall-time into the telemetry the
+    /// cost/gain migration mode consumes (a 50/50 EWMA: recent events
+    /// dominate, one outlier does not).
+    fn note_replan_cost(&mut self, elapsed: Duration) {
+        let us = elapsed.as_secs_f64() * 1e6;
+        self.replan_cost_ewma_us = Some(match self.replan_cost_ewma_us {
+            Some(prev) => 0.5 * prev + 0.5 * us,
+            None => us,
+        });
+    }
+
+    /// Observed cost of one incremental shard re-search (µs, EWMA over
+    /// the budgeted-search telemetry of recent admit/evict/migrate
+    /// events). `None` until the engine has re-searched anything.
+    pub fn observed_replan_cost_us(&self) -> Option<f64> {
+        self.replan_cost_ewma_us
+    }
+
+    /// The budget incremental re-searches run under
+    /// ([`EngineBuilder::replan_budget`]).
+    pub fn replan_budget(&self) -> SearchBudget {
+        self.replan_budget
+    }
+
+    /// Build a [`MigrationCost`] from the engine's own observed
+    /// telemetry: re-plan cost is twice the EWMA of recent incremental
+    /// re-search wall-times (a migration re-searches the source and
+    /// destination shards), swap pause is one scheduler tick per
+    /// affected device (the epoch-fence commit latency of
+    /// `docs/OPERATIONS.md`). Before any incremental event has run, the
+    /// re-plan cost falls back to the slowest *cold* per-device search
+    /// of the current deployment — a conservative upper bound (a cold
+    /// search costs more than a seeded one), so the gate never prices an
+    /// unknown re-plan as free. Pair it with
+    /// [`MigrationPolicy::cost_aware`] to get a policy that only moves a
+    /// tenant when the predicted gain pays for the disruption within
+    /// `payback_windows` observe windows.
+    pub fn migration_cost(&self, payback_windows: f64) -> MigrationCost {
+        let per_shard = self.replan_cost_ewma_us.unwrap_or_else(|| {
+            self.reports
+                .iter()
+                .flatten()
+                .map(|r| r.elapsed.as_secs_f64() * 1e6)
+                .fold(0.0, f64::max)
+        });
+        MigrationCost {
+            replan_us: 2.0 * per_shard,
+            swap_pause_us: self.tick.as_secs_f64() * 1e6,
+            payback_windows,
+        }
     }
 
     fn rebuild_merged(&mut self) {
@@ -990,16 +1112,33 @@ impl GacerEngine {
         self.sharded.shards[to].insert_tenant(dest_local, dfg_len, level);
 
         // Two-shard seeded re-search: source (may now be empty) and
-        // destination, nothing else.
+        // destination, nothing else — warm-started from each device's
+        // state and bounded by the engine's replan budget.
         let seeds = vec![
             self.sharded.shards[from].clone(),
             self.sharded.shards[to].clone(),
         ];
         let reports = ShardedSearch::new(&self.set, self.opts, self.search_cfg)
-            .research_devices(&self.sharded.placement, &[from, to], seeds);
+            .budget(self.replan_budget)
+            .research_devices_warm(
+                &self.sharded.placement,
+                &[from, to],
+                seeds,
+                &mut self.search_states,
+            );
+        let reports = match reports {
+            Ok(r) => r,
+            Err(e) => {
+                // Same contract as research_shard: the reshaped plan is
+                // consistent even un-researched; keep views coherent.
+                self.rebuild_merged();
+                return Err(e);
+            }
+        };
         for (&d, report) in [from, to].iter().zip(reports) {
             match report {
                 Some(report) => {
+                    self.note_replan_cost(report.elapsed);
                     self.sharded.shards[d] = report.plan.clone();
                     self.reports[d] = Some(report.clone());
                     self.last_report = Some(report);
@@ -1026,6 +1165,11 @@ impl GacerEngine {
     /// when the cluster is balanced enough (or no single move helps).
     /// The operations loop calls this periodically, then
     /// [`GacerEngine::redeploy_cluster`] when a move happened.
+    ///
+    /// With a cost/gain policy ([`MigrationPolicy::cost_aware`], fed
+    /// from [`GacerEngine::migration_cost`]'s observed telemetry) a
+    /// marginal move that would not pay for its own re-plan + swap-pause
+    /// disruption is declined even when the imbalance ratio triggers.
     ///
     /// ```
     /// use gacer::engine::{GacerEngine, MigrationPolicy};
@@ -1453,7 +1597,11 @@ mod tests {
 
     #[test]
     fn migration_cooldown_damps_oscillation() {
-        let policy = MigrationPolicy { max_imbalance: 2.0, cooldown_windows: 1 };
+        let policy = MigrationPolicy {
+            max_imbalance: 2.0,
+            cooldown_windows: 1,
+            ..Default::default()
+        };
         let (mut engine, m1) = oscillating_engine(&policy);
         // Window 1: the reverse move is proposed but suppressed by the
         // cooldown — the tenant stays put for this window.
@@ -1471,11 +1619,95 @@ mod tests {
     fn zero_cooldown_reproduces_the_thrash() {
         // The contrast case: without a cooldown the same alternating skew
         // ping-pongs the tenant straight back in the very next window.
-        let policy = MigrationPolicy { max_imbalance: 2.0, cooldown_windows: 0 };
+        let policy = MigrationPolicy {
+            max_imbalance: 2.0,
+            cooldown_windows: 0,
+            ..Default::default()
+        };
         let (mut engine, m1) = oscillating_engine(&policy);
         let back = engine.maybe_migrate(&policy).unwrap().expect("thrash");
         assert_eq!(back.tenant, m1.tenant);
         assert_eq!((back.from, back.to), (m1.to, m1.from));
+    }
+
+    #[test]
+    fn replan_budget_bounds_incremental_research() {
+        let mut engine = GacerEngine::builder()
+            .search(quick_cfg())
+            .replan_budget(SearchBudget::evaluations(4))
+            .tenant(zoo::build_default("R50").unwrap())
+            .tenant(zoo::build_default("V16").unwrap())
+            .build()
+            .unwrap();
+        // The cold build is unbudgeted: never truncated.
+        assert!(!engine.last_report().unwrap().truncated);
+        assert_eq!(engine.replan_budget(), SearchBudget::evaluations(4));
+        engine.admit(zoo::build_default("M3").unwrap()).unwrap();
+        let r = engine.last_report().unwrap();
+        assert!(r.truncated, "4-eval budget must truncate the admit re-search");
+        // Anytime guarantee survives truncation.
+        assert!(r.outcome.objective() <= r.initial.objective() + 1e-6);
+        engine.plan().validate(engine.tenants()).unwrap();
+    }
+
+    #[test]
+    fn admit_reuses_warm_search_state() {
+        // Spatial off keeps chunking empty, so the incumbents' stream
+        // fingerprints survive the admit and hit the warm cache.
+        let cfg = SearchConfig { enable_spatial: false, ..quick_cfg() };
+        let mut engine = GacerEngine::builder()
+            .search(cfg)
+            .tenant(zoo::build_default("Alex").unwrap())
+            .tenant(zoo::build_default("R18").unwrap())
+            .build()
+            .unwrap();
+        engine.admit(zoo::build_default("M3").unwrap()).unwrap();
+        let r = engine.last_report().unwrap();
+        assert!(r.warm_hits >= 2, "incumbent streams reused, got {}", r.warm_hits);
+    }
+
+    #[test]
+    fn replan_cost_telemetry_feeds_the_cost_model() {
+        let mut engine = demo_sharded(&["Alex", "V16", "R18"], 2);
+        assert!(engine.observed_replan_cost_us().is_none(), "no event yet");
+        // Without incremental telemetry the bill falls back to the cold
+        // per-device search cost — never pricing a re-plan as free.
+        assert!(engine.migration_cost(1.0).replan_us > 0.0);
+        engine.admit(zoo::build_default("M3").unwrap()).unwrap();
+        let per_shard = engine.observed_replan_cost_us().unwrap();
+        assert!(per_shard > 0.0);
+        let cost = engine.migration_cost(1.0);
+        assert_eq!(cost.replan_us, 2.0 * per_shard, "two shards re-search");
+        assert!(cost.swap_pause_us > 0.0, "one tick per fenced device");
+        assert!(MigrationPolicy::cost_aware(cost).cost.is_some());
+    }
+
+    #[test]
+    fn cost_aware_policy_gates_engine_migration() {
+        let mut engine = demo_sharded(&["R18", "R18", "R18", "R18"], 2);
+        let ids = engine.tenant_ids();
+        let hot: Vec<usize> = engine.placement().tenants_on(0).to_vec();
+        assert_eq!(hot.len(), 2, "2/2 split of identical tenants");
+        for (slot, id) in ids.iter().enumerate() {
+            let n = if hot.contains(&slot) { 5_000 } else { 1_000 };
+            engine.record_requests(*id, n).unwrap();
+        }
+        // An exorbitant predicted cost vetoes the triggered move...
+        let pricey = MigrationPolicy::cost_aware(MigrationCost {
+            replan_us: f64::MAX / 8.0,
+            swap_pause_us: 0.0,
+            payback_windows: 1.0,
+        });
+        assert!(engine.maybe_migrate(&pricey).unwrap().is_none());
+        // ...while a free cost model lets the same skew migrate.
+        let free = MigrationPolicy::cost_aware(MigrationCost {
+            replan_us: 0.0,
+            swap_pause_us: 0.0,
+            payback_windows: 1.0,
+        });
+        let m = engine.maybe_migrate(&free).unwrap().expect("skew migrates");
+        assert_eq!(m.from, 0);
+        engine.sharded_plan().validate(engine.tenants()).unwrap();
     }
 
     #[test]

@@ -59,8 +59,8 @@ pub mod prelude {
     pub use crate::coordinator::ClusterServer;
     pub use crate::dfg::{Dfg, OpId, OpKind, Operator};
     pub use crate::engine::{
-        Deployment, EngineBuilder, GacerEngine, Migration, MigrationPolicy,
-        MigrationProposal, ShardedDeployment, TenantId,
+        Deployment, EngineBuilder, GacerEngine, Migration, MigrationCost,
+        MigrationPolicy, MigrationProposal, ShardedDeployment, TenantId,
     };
     pub use crate::error::{Error, Result};
     pub use crate::gpu::{GpuSim, SimOutcome, SimOptions};
@@ -70,7 +70,8 @@ pub mod prelude {
     };
     pub use crate::profile::{CostModel, Platform};
     pub use crate::search::{
-        GacerSearch, SearchConfig, SearchReport, ShardedSearch, ShardedSearchReport,
+        GacerSearch, SearchBudget, SearchConfig, SearchReport, SearchState,
+        ShardedSearch, ShardedSearchReport,
     };
     pub use crate::spatial::SpatialRegulator;
     pub use crate::temporal::PointerMatrix;

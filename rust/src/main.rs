@@ -5,9 +5,10 @@
 //! Subcommands:
 //!   gacer simulate [--models R50,V16,M3] [--platform TitanV]
 //!   gacer search   [--models R50,V16,M3] [--platform TitanV] [--max-pointers 6] [--devices 1]
-//!                  [--placement balanced|interference]
+//!                  [--placement balanced|interference] [--replan-budget-ms N]
 //!   gacer serve    [--artifacts artifacts] [--requests 64] [--tenants tiny_cnn,...] [--devices 1]
 //!                  [--placement balanced|interference] [--live-admit tiny_cnn]
+//!                  [--replan-budget-ms N] [--migration-cost-aware]
 //!
 //! `--devices N` gives the deployment a device dimension: tenants are
 //! placed across N devices (cost-model bin-packing), each device gets its
@@ -23,19 +24,21 @@
 
 use gacer::baselines::BaselineKind;
 use gacer::bench_util::{fig7_header, fig7_row, run_combo};
+use gacer::coordinator::ServeOptions;
 use gacer::gpu::SimOptions;
 use gacer::models::zoo;
 use gacer::plan::{PlacementObjective, TenantSet};
 use gacer::profile::{CostModel, Platform};
-use gacer::search::{GacerSearch, SearchConfig, ShardedSearch};
+use gacer::search::{GacerSearch, SearchBudget, SearchConfig, ShardedSearch};
 use gacer::util::cli::Args;
 
 const USAGE: &str = "usage: gacer <simulate|search|serve> [options]
   simulate --models R50,V16,M3 --platform TitanV
   search   --models R50,V16,M3 --platform TitanV --max-pointers 6 --devices 1
-           [--placement balanced|interference]
+           [--placement balanced|interference] [--replan-budget-ms N]
   serve    --artifacts artifacts --requests 64 --tenants tiny_cnn,tiny_cnn,tiny_cnn --devices 1
            [--placement balanced|interference] [--live-admit tiny_cnn]
+           [--replan-budget-ms N] [--migration-cost-aware]
 
   --devices N   shard the deployment across N devices: tenants are placed
                 by cost-model bin-packing, each device is searched
@@ -50,7 +53,18 @@ const USAGE: &str = "usage: gacer <simulate|search|serve> [options]
   --live-admit FAMILY
                 after serving the initial tenants, admit one more FAMILY
                 tenant against the running cluster and hot-swap the
-                re-searched plan in without a restart (live re-deployment)";
+                re-searched plan in without a restart (live re-deployment)
+  --replan-budget-ms N
+                wall-clock budget for re-search: under `search`, bound the
+                search itself; under `serve`, bound each incremental
+                re-search (e.g. the live admit). The anytime search returns
+                its best-so-far plan and reports truncation (0 = unbounded,
+                the default; see docs/SEARCH.md for tuning)
+  --migration-cost-aware
+                under `serve`: after serving, consult a cost/gain-aware
+                migration policy priced from the engine's observed re-plan
+                telemetry (a move must pay for its re-plan + swap pause)
+                and hot-swap the decision in";
 
 fn parse_models(s: &str) -> Vec<String> {
     s.split(',').map(|m| m.trim().to_string()).collect()
@@ -68,6 +82,14 @@ fn placement_or_exit(name: &str) -> PlacementObjective {
         eprintln!("unknown placement objective {name}; expected balanced|interference");
         std::process::exit(2);
     })
+}
+
+/// `--replan-budget-ms N` (0 or absent = unbounded).
+fn replan_budget(args: &Args) -> SearchBudget {
+    match args.opt_usize("replan-budget-ms", 0) {
+        0 => SearchBudget::unbounded(),
+        ms => SearchBudget::deadline_ms(ms as u64),
+    }
 }
 
 fn main() -> gacer::Result<()> {
@@ -98,13 +120,15 @@ fn main() -> gacer::Result<()> {
             };
             let devices = args.opt_usize("devices", 1).max(1);
             let objective = placement_or_exit(args.opt_or("placement", "balanced"));
+            let budget = replan_budget(&args);
             if devices > 1 {
                 let report = ShardedSearch::new(&ts, SimOptions::for_platform(&platform), cfg)
                     .objective(objective)
+                    .budget(budget)
                     .run(devices);
                 println!(
                     "combo {} on {} x{} ({}): cluster makespan {:.2}ms \
-                     (bottleneck device {}), {} evaluations in {:?}",
+                     (bottleneck device {}), {} evaluations in {:?}{}",
                     zoo::combo_label(&refs),
                     platform.name,
                     devices,
@@ -112,7 +136,12 @@ fn main() -> gacer::Result<()> {
                     report.cluster_makespan_us() / 1e3,
                     report.bottleneck_device().unwrap_or(0),
                     report.total_evaluations(),
-                    report.elapsed
+                    report.elapsed,
+                    if report.truncated() {
+                        format!(" (budget {} truncated convergence)", budget.label())
+                    } else {
+                        String::new()
+                    }
                 );
                 let slowdowns = report.plan.placement.predicted_slowdowns(&ts);
                 for d in 0..devices {
@@ -133,16 +162,23 @@ fn main() -> gacer::Result<()> {
                 }
                 return Ok(());
             }
-            let report = GacerSearch::new(&ts, SimOptions::for_platform(&platform), cfg).run();
+            let report = GacerSearch::new(&ts, SimOptions::for_platform(&platform), cfg)
+                .budget(budget)
+                .run();
             println!(
-                "combo {} on {}: {:.2}ms -> {:.2}ms ({:.2}x), {} evaluations in {:?}",
+                "combo {} on {}: {:.2}ms -> {:.2}ms ({:.2}x), {} evaluations in {:?}{}",
                 zoo::combo_label(&refs),
                 platform.name,
                 report.initial.makespan_us / 1e3,
                 report.outcome.makespan_us / 1e3,
                 report.speedup_vs_initial(),
                 report.evaluations,
-                report.elapsed
+                report.elapsed,
+                if report.truncated {
+                    format!(" (budget {} truncated convergence)", budget.label())
+                } else {
+                    String::new()
+                }
             );
             for (i, d) in tenants.iter().enumerate() {
                 println!(
@@ -162,18 +198,16 @@ fn main() -> gacer::Result<()> {
         }
         "serve" => {
             let artifacts = args.opt_or("artifacts", "artifacts").to_string();
-            let requests = args.opt_usize("requests", 64);
-            let devices = args.opt_usize("devices", 1).max(1);
             let tenants = parse_models(args.opt_or("tenants", "tiny_cnn,tiny_cnn,tiny_cnn"));
-            let objective = placement_or_exit(args.opt_or("placement", "balanced"));
-            gacer::coordinator::serve_demo(
-                &artifacts,
-                &tenants,
-                requests,
-                devices,
-                objective,
-                args.opt("live-admit"),
-            )?;
+            let opts = ServeOptions {
+                n_requests: args.opt_usize("requests", 64),
+                n_devices: args.opt_usize("devices", 1).max(1),
+                objective: placement_or_exit(args.opt_or("placement", "balanced")),
+                live_admit: args.opt("live-admit").map(String::from),
+                replan_budget: replan_budget(&args),
+                cost_aware_migration: args.flag("migration-cost-aware"),
+            };
+            gacer::coordinator::serve_demo(&artifacts, &tenants, &opts)?;
         }
         other => {
             eprintln!("unknown command: {other}\n{USAGE}");

@@ -824,74 +824,79 @@ impl TenantSet {
     /// inherit the source op's segment ("decomposed operators are inserted
     /// between the pointers without affecting `Matrix_P`", §4.4).
     pub fn compile(&self, plan: &DeploymentPlan) -> Vec<Vec<SimStage>> {
-        self.tenants
-            .iter()
-            .enumerate()
-            .map(|(ti, dfg)| {
-                let empty = ChunkMap::new();
-                let chunks = plan.chunking.get(ti).unwrap_or(&empty);
-                let pointers = plan.pointers.list(ti);
-                let mut stream: Vec<SimStage> = Vec::with_capacity(dfg.len());
-                let mut open_split: Option<&Vec<usize>> = None;
-                for op in &dfg.ops {
-                    // Segment = number of pointers at positions <= op.id.
-                    let segment = pointers.iter().filter(|&&p| p <= op.id).count();
-                    let split = chunks.get(&op.id).filter(|l| l.len() > 1);
-                    // Close an open split region on change/end. The concat
-                    // belongs to the previous op (its segment follows that
-                    // op's pointer count) so segment restamping from
-                    // `source_op` stays exact.
-                    if let Some(prev) = open_split {
-                        if split != Some(prev) {
-                            let elems = dfg.ops[op.id - 1].kind.out_elems();
-                            let prev_segment =
-                                pointers.iter().filter(|&&p| p <= op.id - 1).count();
-                            stream.push(SimStage::solo(self.sim_op(
-                                &OpKind::Concat { elems },
-                                dfg.ops[op.id - 1].batch,
-                                prev_segment,
-                                op.id - 1,
-                            )));
-                            open_split = None;
-                        }
-                    }
-                    match split {
-                        Some(list_b) => {
-                            if open_split.is_none() {
-                                let elems = op.kind.out_elems();
-                                stream.push(SimStage::solo(self.sim_op(
-                                    &OpKind::Chunk { elems },
-                                    op.batch,
-                                    segment,
-                                    op.id,
-                                )));
-                                open_split = Some(list_b);
-                            }
-                            let pieces = list_b
-                                .iter()
-                                .map(|&b| self.sim_op(&op.kind, b, segment, op.id))
-                                .collect();
-                            stream.push(SimStage { pieces });
-                        }
-                        None => stream.push(SimStage::solo(self.sim_op(
-                            &op.kind, op.batch, segment, op.id,
-                        ))),
-                    }
-                }
-                if open_split.is_some() {
-                    let last = dfg.ops.last().unwrap();
-                    let elems = last.kind.out_elems();
-                    let segment = pointers.iter().filter(|&&p| p <= last.id).count();
+        (0..self.tenants.len()).map(|ti| self.compile_tenant(ti, plan)).collect()
+    }
+
+    /// Compile one tenant's stream — the per-tenant unit of
+    /// [`TenantSet::compile`]. Streams are independent across tenants
+    /// (each depends only on its own DFG, chunk map, and pointer list),
+    /// which is what lets the search's warm-start cache
+    /// ([`crate::search::SearchState`]) recompile only the tenants whose
+    /// chunking actually changed.
+    pub fn compile_tenant(&self, ti: usize, plan: &DeploymentPlan) -> Vec<SimStage> {
+        let dfg = &self.tenants[ti];
+        let empty = ChunkMap::new();
+        let chunks = plan.chunking.get(ti).unwrap_or(&empty);
+        let pointers = plan.pointers.list(ti);
+        let mut stream: Vec<SimStage> = Vec::with_capacity(dfg.len());
+        let mut open_split: Option<&Vec<usize>> = None;
+        for op in &dfg.ops {
+            // Segment = number of pointers at positions <= op.id.
+            let segment = pointers.iter().filter(|&&p| p <= op.id).count();
+            let split = chunks.get(&op.id).filter(|l| l.len() > 1);
+            // Close an open split region on change/end. The concat
+            // belongs to the previous op (its segment follows that
+            // op's pointer count) so segment restamping from
+            // `source_op` stays exact.
+            if let Some(prev) = open_split {
+                if split != Some(prev) {
+                    let elems = dfg.ops[op.id - 1].kind.out_elems();
+                    let prev_segment =
+                        pointers.iter().filter(|&&p| p <= op.id - 1).count();
                     stream.push(SimStage::solo(self.sim_op(
                         &OpKind::Concat { elems },
-                        last.batch,
-                        segment,
-                        last.id,
+                        dfg.ops[op.id - 1].batch,
+                        prev_segment,
+                        op.id - 1,
                     )));
+                    open_split = None;
                 }
-                stream
-            })
-            .collect()
+            }
+            match split {
+                Some(list_b) => {
+                    if open_split.is_none() {
+                        let elems = op.kind.out_elems();
+                        stream.push(SimStage::solo(self.sim_op(
+                            &OpKind::Chunk { elems },
+                            op.batch,
+                            segment,
+                            op.id,
+                        )));
+                        open_split = Some(list_b);
+                    }
+                    let pieces = list_b
+                        .iter()
+                        .map(|&b| self.sim_op(&op.kind, b, segment, op.id))
+                        .collect();
+                    stream.push(SimStage { pieces });
+                }
+                None => stream.push(SimStage::solo(self.sim_op(
+                    &op.kind, op.batch, segment, op.id,
+                ))),
+            }
+        }
+        if open_split.is_some() {
+            let last = dfg.ops.last().unwrap();
+            let elems = last.kind.out_elems();
+            let segment = pointers.iter().filter(|&&p| p <= last.id).count();
+            stream.push(SimStage::solo(self.sim_op(
+                &OpKind::Concat { elems },
+                last.batch,
+                segment,
+                last.id,
+            )));
+        }
+        stream
     }
 
     fn sim_op(&self, kind: &OpKind, batch: usize, segment: usize, source: OpId) -> SimOp {

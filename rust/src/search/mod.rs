@@ -19,6 +19,22 @@
 //! no per-candidate hardware profiling — which is what keeps the search in
 //! the seconds-to-minutes band the paper reports in Table 4.
 //!
+//! Online serving adds two requirements the offline algorithm does not
+//! have, both implemented here (the internals guide is `docs/SEARCH.md`):
+//!
+//! * **Anytime budgets** ([`SearchBudget`]): a wall-clock deadline and/or
+//!   an evaluation cap threaded through [`GacerSearch::run`]/
+//!   [`GacerSearch::run_from`]. The search checkpoints its best-so-far
+//!   plan between atomic steps, so truncation returns a plan never worse
+//!   than the seed; [`SearchReport::truncated`] records whether the
+//!   budget cut convergence short.
+//! * **Warm starts** ([`SearchState`]): a persistent cache of compiled
+//!   tenant streams (keyed by per-tenant fingerprints), the last
+//!   converged plan/objective, and the descent cursor. Re-searches seeded
+//!   from it recompile only the tenants whose chunking actually changed,
+//!   and a re-search whose seed equals the cached converged plan
+//!   short-circuits to the cached result at zero evaluations.
+//!
 //! Multi-GPU deployments add an outer stage: [`ShardedSearch`] places the
 //! tenant set across devices ([`crate::plan::Placement`]) and runs one
 //! independent Algorithm-1 search per device — see the [`sharded`] module.
@@ -52,15 +68,19 @@ pub mod sharded;
 
 pub use sharded::{ShardedSearch, ShardedSearchReport};
 
-use std::time::Instant;
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+use std::time::{Duration, Instant};
 
-use crate::gpu::{SimOptions, SimOutcome};
-use crate::plan::{DeploymentPlan, TenantSet};
+use crate::dfg::Dfg;
+use crate::error::{Error, Result};
+use crate::gpu::{SimOptions, SimOutcome, SimStage};
+use crate::plan::{ChunkMap, DeploymentPlan, TenantSet};
 use crate::spatial::SpatialRegulator;
 use crate::temporal::PointerMatrix;
 
 /// Search hyper-parameters.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SearchConfig {
     /// Maximum pointers per tenant (`|P|` cap).
     pub max_pointers: usize,
@@ -101,18 +121,311 @@ impl SearchConfig {
     }
 }
 
-/// Search result: the chosen plan plus bookkeeping for Tables 4 / Fig. 9.
+/// Resource budget for one Algorithm-1 run — what turns the search into
+/// an **anytime** algorithm. The coordinate-descent loop checkpoints its
+/// best-so-far plan between atomic steps (one coordinate scan, one
+/// spatial decomposition step) and consults the budget before starting
+/// the next one, so a truncated run still returns a valid plan that is
+/// never worse than its seed. Because checks sit *between* steps, the
+/// reported evaluation count can overshoot `max_evaluations` by at most
+/// one step's worth of evaluations.
+///
+/// The default is [`SearchBudget::unbounded`]: run Algorithm 1 to its own
+/// convergence criterion, exactly the pre-budget behavior.
+///
+/// ```
+/// use gacer::search::SearchBudget;
+/// use std::time::Duration;
+///
+/// let b = SearchBudget::evaluations(100);
+/// assert!(!b.exhausted(99, Duration::ZERO));
+/// assert!(b.exhausted(100, Duration::ZERO));
+///
+/// let d = SearchBudget::deadline_ms(5);
+/// assert!(d.exhausted(0, Duration::from_millis(5)));
+///
+/// assert!(SearchBudget::unbounded().is_unbounded());
+/// assert_eq!(SearchBudget::default(), SearchBudget::unbounded());
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SearchBudget {
+    /// Cap on simulator evaluations (the search's unit cost; `None` =
+    /// unlimited). Evaluation-count budgets are deterministic: the same
+    /// seed and budget always return the same plan, and a larger cap
+    /// never returns a worse one (monotone-anytime, property-tested).
+    pub max_evaluations: Option<usize>,
+    /// Wall-clock deadline for the run (`None` = unlimited). Deadlines
+    /// bound re-plan latency on the serving path (`--replan-budget-ms`),
+    /// at the price of machine-dependent truncation points.
+    pub max_elapsed: Option<Duration>,
+}
+
+impl SearchBudget {
+    /// No limits: Algorithm 1 runs to its own convergence criterion.
+    pub fn unbounded() -> Self {
+        SearchBudget::default()
+    }
+
+    /// Cap the number of simulator evaluations.
+    pub fn evaluations(n: usize) -> Self {
+        SearchBudget { max_evaluations: Some(n), max_elapsed: None }
+    }
+
+    /// Cap the wall-clock time of the run.
+    pub fn deadline(d: Duration) -> Self {
+        SearchBudget { max_evaluations: None, max_elapsed: Some(d) }
+    }
+
+    /// Convenience spelling of [`SearchBudget::deadline`] in milliseconds
+    /// (the CLI's `--replan-budget-ms`).
+    pub fn deadline_ms(ms: u64) -> Self {
+        Self::deadline(Duration::from_millis(ms))
+    }
+
+    /// Whether neither limit is set.
+    pub fn is_unbounded(&self) -> bool {
+        self.max_evaluations.is_none() && self.max_elapsed.is_none()
+    }
+
+    /// Whether a run that has spent `evaluations` / `elapsed` must stop.
+    pub fn exhausted(&self, evaluations: usize, elapsed: Duration) -> bool {
+        self.max_evaluations.is_some_and(|m| evaluations >= m)
+            || self.max_elapsed.is_some_and(|d| elapsed >= d)
+    }
+
+    /// Human-readable form for reports and bench tables.
+    pub fn label(&self) -> String {
+        match (self.max_evaluations, self.max_elapsed) {
+            (None, None) => "unbounded".to_string(),
+            (Some(n), None) => format!("<={n} evals"),
+            (None, Some(d)) => format!("<={:.1}ms", d.as_secs_f64() * 1e3),
+            (Some(n), Some(d)) => {
+                format!("<={n} evals, <={:.1}ms", d.as_secs_f64() * 1e3)
+            }
+        }
+    }
+}
+
+/// Budget accounting for one run: charges evaluations and latches the
+/// truncation flag the first time the budget is consulted after being
+/// exceeded. Natural convergence never consults it again, so a search
+/// that finishes on its own terms is not flagged.
+struct Meter {
+    start: Instant,
+    budget: SearchBudget,
+    evals: usize,
+    truncated: bool,
+}
+
+impl Meter {
+    fn new(budget: SearchBudget) -> Self {
+        Meter { start: Instant::now(), budget, evals: 0, truncated: false }
+    }
+
+    fn charge(&mut self, n: usize) {
+        self.evals += n;
+    }
+
+    /// Consult the budget before the next atomic step; latches
+    /// `truncated` once exhausted.
+    fn exhausted(&mut self) -> bool {
+        if !self.truncated && self.budget.exhausted(self.evals, self.start.elapsed()) {
+            self.truncated = true;
+        }
+        self.truncated
+    }
+}
+
+/// Fingerprint of one tenant as the compiled-stream cache sees it: the
+/// DFG (name, ops, batches) plus the plan's chunk map for it. Pointer
+/// positions are deliberately excluded — segment stamps are refreshed by
+/// `restamp` on every evaluation, so a cached stream survives arbitrary
+/// pointer movement and is invalidated only when *chunking* changes.
+fn tenant_fingerprint(dfg: &Dfg, chunks: &ChunkMap) -> u64 {
+    let mut h = DefaultHasher::new();
+    dfg.name.hash(&mut h);
+    dfg.len().hash(&mut h);
+    for op in &dfg.ops {
+        op.id.hash(&mut h);
+        op.batch.hash(&mut h);
+        op.kind.hash(&mut h);
+    }
+    chunks.hash(&mut h);
+    h.finish()
+}
+
+/// Fingerprint of the whole tenant set (what the unregulated baseline
+/// and the converged-plan cache depend on).
+fn set_fingerprint(ts: &TenantSet) -> u64 {
+    let mut h = DefaultHasher::new();
+    for dfg in &ts.tenants {
+        tenant_fingerprint(dfg, &ChunkMap::new()).hash(&mut h);
+    }
+    h.finish()
+}
+
+/// The last completed search recorded in a [`SearchState`]: a re-search
+/// whose seed equals `plan` (same tenant set, same config, previous run
+/// not truncated) short-circuits to this result without evaluating
+/// anything.
+#[derive(Debug, Clone)]
+struct Converged {
+    set_fingerprint: u64,
+    cfg: SearchConfig,
+    plan: DeploymentPlan,
+    outcome: SimOutcome,
+    initial: SimOutcome,
+    truncated: bool,
+}
+
+/// Persistent warm-start state for incremental re-search — the cache a
+/// [`GacerSearch`] reads and refreshes across admit/evict/migrate events
+/// (`docs/SEARCH.md` documents the invalidation rules).
+///
+/// Contents:
+///
+/// * **compiled tenant streams** of the last returned plan, keyed by a
+///   per-tenant fingerprint of (DFG, chunk map) — a warm re-search
+///   recompiles only the tenants whose chunking actually changed;
+/// * **the last converged plan + outcome** — a re-search seeded with
+///   exactly that plan on an unchanged tenant set returns it bit-for-bit
+///   at zero evaluations;
+/// * **the unregulated baseline outcome** — reused whenever the tenant
+///   set is unchanged (it does not depend on the plan);
+/// * **the descent cursor** — a budget-truncated re-search resumes its
+///   coordinate-descent rotation at the tenant it was refining, instead
+///   of re-descending tenant 0 on every event.
+///
+/// A state belongs to one logical device of one deployment: the engine
+/// owns one per device and never shares them across platforms or
+/// simulator options (fingerprints cover tenants and plans, not the cost
+/// model).
+///
+/// ```
+/// use gacer::models::zoo;
+/// use gacer::plan::TenantSet;
+/// use gacer::profile::{CostModel, Platform};
+/// use gacer::gpu::SimOptions;
+/// use gacer::search::{GacerSearch, SearchConfig, SearchState};
+///
+/// let platform = Platform::titan_v();
+/// let set = TenantSet::new(
+///     zoo::build_combo(&["Alex", "M3"]),
+///     CostModel::new(platform),
+/// );
+/// let cfg = SearchConfig {
+///     max_pointers: 1,
+///     rounds_per_level: 1,
+///     positions_per_coordinate: 4,
+///     spatial_steps_per_level: 1,
+///     ..Default::default()
+/// };
+/// let search = GacerSearch::new(&set, SimOptions::for_platform(&platform), cfg);
+/// let mut state = SearchState::new();
+/// let cold = search.run_with_state(&mut state);
+/// assert_eq!(state.cached_tenants(), 2);
+/// // Nothing changed: the warm re-search short-circuits, bit-for-bit.
+/// let warm = search.run_from_state(cold.plan.clone(), &mut state).unwrap();
+/// assert_eq!(warm.plan, cold.plan);
+/// assert_eq!(warm.evaluations, 0);
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct SearchState {
+    /// Per-tenant compiled streams of the last returned plan, keyed by
+    /// the (DFG, chunk map) fingerprint.
+    streams: Vec<(u64, Vec<SimStage>)>,
+    converged: Option<Converged>,
+    /// Tenant index the next warm refine pass starts at.
+    cursor: usize,
+}
+
+impl SearchState {
+    /// An empty (cold) state.
+    pub fn new() -> Self {
+        SearchState::default()
+    }
+
+    /// Whether the state holds nothing reusable yet.
+    pub fn is_empty(&self) -> bool {
+        self.streams.is_empty() && self.converged.is_none()
+    }
+
+    /// Number of tenant streams currently cached.
+    pub fn cached_tenants(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Drop everything (e.g. the deployment this state described is
+    /// gone). Equivalent to replacing the state with a fresh one.
+    pub fn invalidate(&mut self) {
+        *self = SearchState::default();
+    }
+
+    fn stream_for(&self, fingerprint: u64) -> Option<&Vec<SimStage>> {
+        self.streams.iter().find(|(f, _)| *f == fingerprint).map(|(_, s)| s)
+    }
+}
+
+/// Search result: the chosen plan plus bookkeeping for Tables 4 / Fig. 9
+/// and the anytime/warm-start telemetry the serving path consumes.
+///
+/// The truncation fields make budgeted runs auditable:
+///
+/// ```
+/// use gacer::models::zoo;
+/// use gacer::plan::TenantSet;
+/// use gacer::profile::{CostModel, Platform};
+/// use gacer::gpu::SimOptions;
+/// use gacer::search::{GacerSearch, SearchBudget, SearchConfig};
+///
+/// let platform = Platform::titan_v();
+/// let set = TenantSet::new(
+///     zoo::build_combo(&["Alex", "M3"]),
+///     CostModel::new(platform),
+/// );
+/// let cfg = SearchConfig {
+///     max_pointers: 1,
+///     rounds_per_level: 1,
+///     positions_per_coordinate: 4,
+///     spatial_steps_per_level: 1,
+///     ..Default::default()
+/// };
+/// let report = GacerSearch::new(&set, SimOptions::for_platform(&platform), cfg)
+///     .budget(SearchBudget::evaluations(3))
+///     .run();
+/// // The budget cut convergence short — flagged, and the checkpointed
+/// // plan is still never worse than the unregulated start.
+/// assert!(report.truncated);
+/// assert_eq!(report.budget, SearchBudget::evaluations(3));
+/// assert!(report.outcome.objective() <= report.initial.objective() + 1e-6);
+/// ```
 #[derive(Debug, Clone)]
 pub struct SearchReport {
     pub plan: DeploymentPlan,
     pub outcome: SimOutcome,
     pub initial: SimOutcome,
-    /// Simulator evaluations performed (the search's unit cost).
+    /// Simulator evaluations performed (the search's unit cost). May
+    /// overshoot an evaluation budget by at most one atomic step — see
+    /// [`SearchBudget`].
     pub evaluations: usize,
     /// Best objective found at each pointer level (index = |P|).
     pub level_best: Vec<f64>,
     /// Wall-clock search time.
     pub elapsed: std::time::Duration,
+    /// The budget this run was under ([`SearchBudget::unbounded`] when
+    /// none was set).
+    pub budget: SearchBudget,
+    /// `true` when the budget stopped the run before Algorithm 1's own
+    /// convergence criterion (line 9's level comparison). The returned
+    /// plan is the best-so-far checkpoint: never worse than the seed,
+    /// never worse than the unregulated fallback. `false` means the
+    /// search converged — re-running with a larger budget changes
+    /// nothing.
+    pub truncated: bool,
+    /// Tenant streams reused from a warm [`SearchState`] instead of
+    /// being recompiled (0 on cold runs; `n_tenants` on a short-circuited
+    /// no-change re-search).
+    pub warm_hits: usize,
 }
 
 impl SearchReport {
@@ -126,16 +439,36 @@ pub struct GacerSearch<'a> {
     ts: &'a TenantSet,
     opts: SimOptions,
     cfg: SearchConfig,
+    budget: SearchBudget,
 }
 
 impl<'a> GacerSearch<'a> {
     pub fn new(ts: &'a TenantSet, opts: SimOptions, cfg: SearchConfig) -> Self {
-        GacerSearch { ts, opts, cfg }
+        GacerSearch { ts, opts, cfg, budget: SearchBudget::unbounded() }
     }
 
-    /// Run Algorithm 1 to completion from the unregulated plan.
+    /// Budget the run under ([`SearchBudget::unbounded`] by default): the
+    /// search becomes anytime — it checkpoints the best-so-far plan and
+    /// returns it when the budget runs out, flagging
+    /// [`SearchReport::truncated`].
+    pub fn budget(mut self, budget: SearchBudget) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Run Algorithm 1 from the unregulated plan (to completion, or to
+    /// the configured [`SearchBudget`]).
     pub fn run(&self) -> SearchReport {
         self.run_from(DeploymentPlan::unregulated(self.ts.tenants.len()))
+            .expect("the unregulated seed always matches the tenant set")
+    }
+
+    /// [`GacerSearch::run`], reading and refreshing a warm
+    /// [`SearchState`] so a later incremental re-search starts from this
+    /// run's compiled streams and converged plan.
+    pub fn run_with_state(&self, state: &mut SearchState) -> SearchReport {
+        self.run_from_state(DeploymentPlan::unregulated(self.ts.tenants.len()), state)
+            .expect("the unregulated seed always matches the tenant set")
     }
 
     /// Run Algorithm 1 starting from an existing plan — the incremental
@@ -145,20 +478,85 @@ impl<'a> GacerSearch<'a> {
     /// fraction of a cold search's evaluations. `report.initial` always
     /// refers to the unregulated deployment, keeping speedup reporting
     /// comparable between cold and seeded runs.
-    pub fn run_from(&self, seed: DeploymentPlan) -> SearchReport {
+    ///
+    /// The seed is validated against the tenant set first: a stale seed
+    /// (wrong tenant arity, out-of-range pointers, chunk lists that no
+    /// longer sum to their op's batch) is a typed
+    /// [`Error::InvalidPlan`](crate::Error::InvalidPlan), not an
+    /// out-of-bounds panic.
+    pub fn run_from(&self, seed: DeploymentPlan) -> Result<SearchReport> {
+        self.run_from_state(seed, &mut SearchState::default())
+    }
+
+    /// [`GacerSearch::run_from`] with a warm [`SearchState`]: compiled
+    /// tenant streams are reused for every tenant whose chunking is
+    /// unchanged since the state's last run, the unregulated baseline is
+    /// reused when the tenant set is unchanged, and a seed equal to the
+    /// state's converged plan short-circuits to the cached result at
+    /// zero evaluations. The state is refreshed with this run's result
+    /// before returning.
+    pub fn run_from_state(
+        &self,
+        seed: DeploymentPlan,
+        state: &mut SearchState,
+    ) -> Result<SearchReport> {
         let start = Instant::now();
         let n = self.ts.tenants.len();
-        let mut evals = 0usize;
+        seed.validate(&self.ts.tenants).map_err(|e| {
+            Error::InvalidPlan(format!("re-search seed rejected: {e}"))
+        })?;
+        let set_fp = set_fingerprint(self.ts);
 
+        // Warm short-circuit: the seed IS the plan the last completed
+        // search on this state returned, and nothing else changed — the
+        // cached result is the answer, bit-for-bit.
+        if let Some(c) = &state.converged {
+            if !c.truncated
+                && c.set_fingerprint == set_fp
+                && c.cfg == self.cfg
+                && c.plan == seed
+            {
+                return Ok(SearchReport {
+                    plan: c.plan.clone(),
+                    outcome: c.outcome.clone(),
+                    initial: c.initial.clone(),
+                    evaluations: 0,
+                    level_best: vec![c.outcome.objective()],
+                    elapsed: start.elapsed(),
+                    budget: self.budget,
+                    truncated: false,
+                    warm_hits: n,
+                });
+            }
+        }
+
+        let mut meter = Meter::new(self.budget);
+        let mut warm_hits = 0usize;
         let mut plan = seed;
-        let initial = self.ts.simulate(&DeploymentPlan::unregulated(n), self.opts);
-        evals += 1;
+
+        // Baseline outcomes. The unregulated baseline depends only on the
+        // tenant set, so an unchanged set reuses the cached one; a seed
+        // equal to a cached (possibly truncated) result reuses its
+        // objective — that is how a budget-truncated search *resumes*.
+        let initial = match &state.converged {
+            Some(c) if c.set_fingerprint == set_fp => c.initial.clone(),
+            _ => {
+                meter.charge(1);
+                self.ts.simulate(&DeploymentPlan::unregulated(n), self.opts)
+            }
+        };
         let seeded = plan.decomposed_ops() > 0 || plan.pointers.total_pointers() > 0;
-        let mut best_obj = if seeded {
-            evals += 1;
-            self.ts.simulate(&plan, self.opts).objective()
-        } else {
-            initial.objective()
+        let mut best_obj = match &state.converged {
+            Some(c)
+                if c.set_fingerprint == set_fp && c.cfg == self.cfg && c.plan == plan =>
+            {
+                c.outcome.objective()
+            }
+            _ if seeded => {
+                meter.charge(1);
+                self.ts.simulate(&plan, self.opts).objective()
+            }
+            _ => initial.objective(),
         };
 
         let mut spatial = SpatialRegulator::new(self.opts);
@@ -167,9 +565,8 @@ impl<'a> GacerSearch<'a> {
 
         // The starting level may already benefit from spatial-only
         // regulation.
-        if self.cfg.enable_spatial {
-            let (p, o, e) = self.spatial_phase(&mut spatial, plan.clone());
-            evals += e;
+        if self.cfg.enable_spatial && !meter.exhausted() {
+            let (p, o) = self.spatial_phase(&mut spatial, plan.clone(), &mut meter);
             if o < best_obj {
                 best_obj = o;
                 best_plan = p.clone();
@@ -178,23 +575,32 @@ impl<'a> GacerSearch<'a> {
             plan = p;
         }
 
-        if self.cfg.enable_temporal {
+        if self.cfg.enable_temporal && !meter.exhausted() {
             // Compiled-stream cache for pointer-only evaluations: pricing
             // depends on chunking alone, so it is rebuilt only after
-            // spatial phases mutate the plan.
-            let mut cache = self.ts.compile(&plan);
+            // spatial phases mutate the plan — and warm entries cover
+            // every tenant whose chunking matches the state's last run.
+            let (mut cache, hits) = self.compile_warm(&plan, state);
+            warm_hits += hits;
 
             // Seeded path: refine the pre-existing pointers in place
-            // before opening new levels.
+            // before opening new levels, resuming the tenant rotation at
+            // the state's cursor (where a truncated run left off).
             if plan.pointers.total_pointers() > 0 {
+                let start_at = if state.cursor < n { state.cursor } else { 0 };
                 let mut refined = f64::INFINITY;
-                for _ in 0..self.cfg.rounds_per_level {
+                'refine: for _ in 0..self.cfg.rounds_per_level {
                     let mut improved = false;
-                    for i in 0..n {
+                    for k in 0..n {
+                        let i = (start_at + k) % n;
                         for j in 0..plan.pointers.list(i).len() {
+                            if meter.exhausted() {
+                                state.cursor = i;
+                                break 'refine;
+                            }
                             let (obj, e) =
                                 self.descend_coordinate(&mut plan, &mut cache, i, j);
-                            evals += e;
+                            meter.charge(e);
                             if obj < refined - 1e-9 {
                                 refined = obj;
                                 improved = true;
@@ -213,23 +619,33 @@ impl<'a> GacerSearch<'a> {
 
             let first_level = plan.pointers.pointers_per_tenant() + 1;
             for _level in first_level..=self.cfg.max_pointers {
+                if meter.exhausted() {
+                    break;
+                }
                 // Add one pointer per tenant, seeded mid-largest-segment.
                 for i in 0..n {
-                    let seed = self.seed_position(&plan.pointers, i);
+                    let pos = self.seed_position(&plan.pointers, i);
                     let mut list = plan.pointers.list(i).to_vec();
-                    list.push(seed);
+                    list.push(pos);
                     plan.pointers.set_list(i, list);
                 }
 
                 // Coordinate descent rounds.
                 let mut level_obj = f64::INFINITY;
-                for _ in 0..self.cfg.rounds_per_level {
+                'rounds: for _ in 0..self.cfg.rounds_per_level {
                     let mut improved = false;
                     for i in 0..n {
                         for j in 0..plan.pointers.list(i).len() {
+                            if meter.exhausted() {
+                                // Resume the next warm re-search's refine
+                                // rotation at the tenant being descended,
+                                // exactly as the 'refine break does.
+                                state.cursor = i;
+                                break 'rounds;
+                            }
                             let (obj, e) =
                                 self.descend_coordinate(&mut plan, &mut cache, i, j);
-                            evals += e;
+                            meter.charge(e);
                             if obj < level_obj - 1e-9 {
                                 level_obj = obj;
                                 improved = true;
@@ -242,18 +658,26 @@ impl<'a> GacerSearch<'a> {
                 }
 
                 // Spatial alternation: decomposed ops slot between pointers.
-                if self.cfg.enable_spatial {
+                if self.cfg.enable_spatial && !meter.exhausted() {
                     spatial.reset_memory();
-                    let (p, o, e) = self.spatial_phase(&mut spatial, plan.clone());
-                    evals += e;
+                    let (p, o) =
+                        self.spatial_phase(&mut spatial, plan.clone(), &mut meter);
                     let chunking_changed = p.chunking != plan.chunking;
                     plan = p;
                     level_obj = level_obj.min(o);
                     if chunking_changed {
-                        cache = self.ts.compile(&plan);
+                        let (c, hits) = self.compile_warm(&plan, state);
+                        cache = c;
+                        warm_hits += hits;
                     }
                 }
 
+                if !level_obj.is_finite() {
+                    // The budget cut this level before any candidate was
+                    // evaluated: the partially opened level never beat
+                    // the checkpoint, which is what gets returned.
+                    break;
+                }
                 level_best.push(level_obj);
                 if level_obj < best_obj - 1e-9 {
                     best_obj = level_obj;
@@ -275,39 +699,100 @@ impl<'a> GacerSearch<'a> {
             best_plan = DeploymentPlan::unregulated(n);
         }
 
-        let outcome = self.ts.simulate(&best_plan, self.opts);
-        SearchReport {
+        // Final outcome, compiled once — the same streams then refresh
+        // the warm state for the next event (uncharged, like the final
+        // simulation always was).
+        let streams = self.ts.compile(&best_plan);
+        let outcome = crate::gpu::GpuSim::new(self.opts).run_staged(&streams);
+        state.streams = streams
+            .into_iter()
+            .enumerate()
+            .map(|(ti, s)| {
+                let empty = ChunkMap::new();
+                let chunks = best_plan.chunking.get(ti).unwrap_or(&empty);
+                (tenant_fingerprint(&self.ts.tenants[ti], chunks), s)
+            })
+            .collect();
+        state.converged = Some(Converged {
+            set_fingerprint: set_fp,
+            cfg: self.cfg,
+            plan: best_plan.clone(),
+            outcome: outcome.clone(),
+            initial: initial.clone(),
+            truncated: meter.truncated,
+        });
+        if !meter.truncated {
+            state.cursor = 0;
+        }
+
+        Ok(SearchReport {
             plan: best_plan,
             outcome,
             initial,
-            evaluations: evals,
+            evaluations: meter.evals,
             level_best,
             elapsed: start.elapsed(),
-        }
+            budget: self.budget,
+            truncated: meter.truncated,
+            warm_hits,
+        })
     }
 
-    /// Greedy spatial phase: apply improving decompositions until none.
+    /// Compile `plan` into per-tenant simulator streams, reusing every
+    /// tenant whose (DFG, chunk map) fingerprint is cached in `state` —
+    /// the warm-start path recompiles only the tenants whose chunking
+    /// actually changed. Returns the streams and the cache-hit count.
+    fn compile_warm(
+        &self,
+        plan: &DeploymentPlan,
+        state: &SearchState,
+    ) -> (Vec<Vec<SimStage>>, usize) {
+        let mut hits = 0usize;
+        let empty = ChunkMap::new();
+        let streams = self
+            .ts
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(ti, dfg)| {
+                let chunks = plan.chunking.get(ti).unwrap_or(&empty);
+                match state.stream_for(tenant_fingerprint(dfg, chunks)) {
+                    Some(s) => {
+                        hits += 1;
+                        s.clone()
+                    }
+                    None => self.ts.compile_tenant(ti, plan),
+                }
+            })
+            .collect();
+        (streams, hits)
+    }
+
+    /// Greedy spatial phase: apply improving decompositions until none is
+    /// left or the budget runs out (each decomposition step is one atomic
+    /// budget unit).
     fn spatial_phase(
         &self,
         reg: &mut SpatialRegulator,
         mut plan: DeploymentPlan,
-    ) -> (DeploymentPlan, f64, usize) {
-        let mut evals = 0usize;
-        let mut obj = {
-            evals += 1;
-            self.ts.simulate(&plan, self.opts).objective()
-        };
+        meter: &mut Meter,
+    ) -> (DeploymentPlan, f64) {
+        meter.charge(1);
+        let mut obj = self.ts.simulate(&plan, self.opts).objective();
         for _ in 0..self.cfg.spatial_steps_per_level {
+            if meter.exhausted() {
+                break;
+            }
             match reg.step(self.ts, &plan) {
                 Some(step) => {
-                    evals += reg.candidates_per_step + 1;
+                    meter.charge(reg.candidates_per_step + 1);
                     obj = step.outcome.objective();
                     plan = step.plan;
                 }
                 None => break,
             }
         }
-        (plan, obj, evals)
+        (plan, obj)
     }
 
     /// Optimize pointer (i, j) by scanning a position grid while all other
@@ -462,5 +947,106 @@ mod tests {
         let r = run_combo(&["Alex", "V16", "R18"], quick_cfg());
         assert!(r.evaluations > 1);
         assert!(!r.level_best.is_empty());
+        // Unbudgeted runs converge: never flagged as truncated.
+        assert!(!r.truncated);
+        assert!(r.budget.is_unbounded());
+        assert_eq!(r.warm_hits, 0, "cold run has no warm state to hit");
+    }
+
+    fn tenant_set(names: &[&str]) -> TenantSet {
+        let platform = Platform::titan_v();
+        TenantSet::new(zoo::build_combo(names), CostModel::new(platform))
+    }
+
+    #[test]
+    fn budgeted_run_truncates_but_never_regresses() {
+        let ts = tenant_set(&["R50", "V16", "M3"]);
+        let opts = SimOptions::for_platform(&Platform::titan_v());
+        let search = GacerSearch::new(&ts, opts, quick_cfg())
+            .budget(SearchBudget::evaluations(4));
+        let r = search.run();
+        assert!(r.truncated, "a 4-eval budget must interrupt the search");
+        assert!(r.evaluations >= 4);
+        assert!(r.outcome.objective() <= r.initial.objective() + 1e-6);
+        r.plan.validate(&ts.tenants).unwrap();
+    }
+
+    #[test]
+    fn budget_labels_render() {
+        assert_eq!(SearchBudget::unbounded().label(), "unbounded");
+        assert_eq!(SearchBudget::evaluations(100).label(), "<=100 evals");
+        assert!(SearchBudget::deadline_ms(5).label().contains("ms"));
+    }
+
+    #[test]
+    fn stale_seed_is_a_typed_error_not_a_panic() {
+        let ts = tenant_set(&["Alex", "V16", "R18"]);
+        let opts = SimOptions::for_platform(&Platform::titan_v());
+        let search = GacerSearch::new(&ts, opts, quick_cfg());
+        // Wrong arity: a seed from before an eviction/admission.
+        let stale = DeploymentPlan::unregulated(5);
+        assert!(matches!(
+            search.run_from(stale),
+            Err(crate::error::Error::InvalidPlan(_))
+        ));
+        // Out-of-range pointer: a seed tuned for a longer DFG.
+        let mut bad = DeploymentPlan::unregulated(3);
+        bad.pointers.set_list(0, vec![ts.tenants[0].len() + 5]);
+        assert!(matches!(
+            search.run_from(bad),
+            Err(crate::error::Error::InvalidPlan(_))
+        ));
+    }
+
+    #[test]
+    fn warm_state_short_circuits_unchanged_research() {
+        let ts = tenant_set(&["Alex", "R18"]);
+        let opts = SimOptions::for_platform(&Platform::titan_v());
+        let search = GacerSearch::new(&ts, opts, quick_cfg());
+        let mut state = SearchState::new();
+        assert!(state.is_empty());
+        let cold = search.run_with_state(&mut state);
+        assert_eq!(state.cached_tenants(), 2);
+        // Nothing changed: bit-for-bit reproduction at zero evaluations.
+        let warm = search.run_from_state(cold.plan.clone(), &mut state).unwrap();
+        assert_eq!(warm.plan, cold.plan);
+        assert_eq!(warm.outcome, cold.outcome);
+        assert_eq!(warm.evaluations, 0);
+        assert_eq!(warm.warm_hits, 2);
+        assert!(!warm.truncated);
+        // Invalidation drops everything.
+        state.invalidate();
+        assert!(state.is_empty());
+    }
+
+    #[test]
+    fn warm_state_reuses_streams_across_an_admit() {
+        // Deploy 2 tenants with spatial off (chunking stays empty, so
+        // stream fingerprints survive the event), then admit a third:
+        // the two incumbents' streams come from the warm cache.
+        let cfg = SearchConfig { enable_spatial: false, ..quick_cfg() };
+        let platform = Platform::titan_v();
+        let opts = SimOptions::for_platform(&platform);
+        let cost = CostModel::new(platform);
+        let mut tenants = zoo::build_combo(&["Alex", "R18"]);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
+        let mut state = SearchState::new();
+        let deployed = GacerSearch::new(&ts, opts, cfg).run_with_state(&mut state);
+
+        tenants.push(zoo::build_default("M3").unwrap());
+        let grown = TenantSet::new(tenants.clone(), cost);
+        let mut seed = deployed.plan.clone();
+        seed.push_tenant(
+            tenants.last().unwrap().len(),
+            seed.pointers.pointers_per_tenant(),
+        );
+        let warm = GacerSearch::new(&grown, opts, cfg)
+            .run_from_state(seed.clone(), &mut state)
+            .unwrap();
+        assert!(warm.warm_hits >= 2, "incumbent streams reused, got {}", warm.warm_hits);
+        // Anytime guarantee: never worse than the inherited seed.
+        let seed_obj = grown.simulate(&seed, opts).objective();
+        assert!(warm.outcome.objective() <= seed_obj + 1e-6);
+        warm.plan.validate(&grown.tenants).unwrap();
     }
 }

@@ -37,12 +37,13 @@
 
 use std::time::{Duration, Instant};
 
+use crate::error::Result;
 use crate::gpu::SimOptions;
 use crate::plan::{
     DeploymentPlan, Placement, PlacementObjective, ShardedDeploymentPlan, TenantSet,
 };
 
-use super::{GacerSearch, SearchConfig, SearchReport};
+use super::{GacerSearch, SearchBudget, SearchConfig, SearchReport, SearchState};
 
 /// Result of a sharded search: the device-dimensioned plan plus the
 /// per-device Algorithm-1 bookkeeping.
@@ -83,6 +84,13 @@ impl ShardedSearchReport {
     pub fn total_evaluations(&self) -> usize {
         self.reports.iter().flatten().map(|r| r.evaluations).sum()
     }
+
+    /// Whether any device's search was cut short by its
+    /// [`SearchBudget`] (budgets apply **per device search**, not to the
+    /// whole sharded run).
+    pub fn truncated(&self) -> bool {
+        self.reports.iter().flatten().any(|r| r.truncated)
+    }
 }
 
 /// The placement-then-regulate searcher for multi-GPU deployments.
@@ -91,11 +99,18 @@ pub struct ShardedSearch<'a> {
     opts: SimOptions,
     cfg: SearchConfig,
     objective: PlacementObjective,
+    budget: SearchBudget,
 }
 
 impl<'a> ShardedSearch<'a> {
     pub fn new(set: &'a TenantSet, opts: SimOptions, cfg: SearchConfig) -> Self {
-        ShardedSearch { set, opts, cfg, objective: PlacementObjective::default() }
+        ShardedSearch {
+            set,
+            opts,
+            cfg,
+            objective: PlacementObjective::default(),
+            budget: SearchBudget::unbounded(),
+        }
     }
 
     /// Placement objective [`ShardedSearch::run`] shards with (default
@@ -105,25 +120,66 @@ impl<'a> ShardedSearch<'a> {
         self
     }
 
+    /// Budget for **each per-device search** (default
+    /// [`SearchBudget::unbounded`]). Shards search independently, so the
+    /// budget bounds one device's run, not their sum;
+    /// [`ShardedSearchReport::truncated`] reports whether any shard was
+    /// cut short.
+    pub fn budget(mut self, budget: SearchBudget) -> Self {
+        self.budget = budget;
+        self
+    }
+
     /// Cold sharded search: compute a placement across `n_devices` under
     /// the configured objective, then run Algorithm 1 per device.
     pub fn run(&self, n_devices: usize) -> ShardedSearchReport {
         self.run_placed(Placement::with_objective(self.set, n_devices, self.objective))
     }
 
+    /// [`ShardedSearch::run`], also (re)filling one warm [`SearchState`]
+    /// per device so later incremental re-searches
+    /// ([`ShardedSearch::research_device_warm`]) start from this run's
+    /// compiled streams and converged plans. `states.len()` must equal
+    /// `n_devices`.
+    pub fn run_warm(
+        &self,
+        n_devices: usize,
+        states: &mut [SearchState],
+    ) -> ShardedSearchReport {
+        self.run_placed_warm(
+            Placement::with_objective(self.set, n_devices, self.objective),
+            states,
+        )
+    }
+
     /// Cold per-device searches under a caller-fixed placement.
     pub fn run_placed(&self, placement: Placement) -> ShardedSearchReport {
+        let mut states = vec![SearchState::default(); placement.n_devices()];
+        self.run_placed_warm(placement, &mut states)
+    }
+
+    /// [`ShardedSearch::run_placed`] with caller-owned warm states (one
+    /// per device; reset for devices the placement leaves empty).
+    pub fn run_placed_warm(
+        &self,
+        placement: Placement,
+        states: &mut [SearchState],
+    ) -> ShardedSearchReport {
+        assert_eq!(states.len(), placement.n_devices(), "one warm state per device");
         let start = Instant::now();
         let mut shards = Vec::with_capacity(placement.n_devices());
         let mut reports = Vec::with_capacity(placement.n_devices());
         for d in 0..placement.n_devices() {
             let sub = self.set.shard(&placement, d);
             if sub.is_empty() {
+                states[d].invalidate();
                 shards.push(DeploymentPlan::unregulated(0));
                 reports.push(None);
                 continue;
             }
-            let report = GacerSearch::new(&sub, self.opts, self.cfg).run();
+            let report = GacerSearch::new(&sub, self.opts, self.cfg)
+                .budget(self.budget)
+                .run_with_state(&mut states[d]);
             shards.push(report.plan.clone());
             reports.push(Some(report));
         }
@@ -136,19 +192,41 @@ impl<'a> ShardedSearch<'a> {
 
     /// Incremental single-shard re-search: run Algorithm 1 on `device`'s
     /// tenants only, seeded with that shard's current (already re-shaped)
-    /// plan — the admit/evict path of a sharded engine. Returns `None`
-    /// when the device is empty (e.g. its last tenant was just evicted).
+    /// plan — the admit/evict path of a sharded engine. Returns
+    /// `Ok(None)` when the device is empty (e.g. its last tenant was just
+    /// evicted) and [`Error::InvalidPlan`](crate::Error::InvalidPlan)
+    /// when the seed does not match the shard's tenants (a stale seed
+    /// must not index out of bounds).
     pub fn research_device(
         &self,
         placement: &Placement,
         device: usize,
         seed: DeploymentPlan,
-    ) -> Option<SearchReport> {
+    ) -> Result<Option<SearchReport>> {
+        self.research_device_warm(placement, device, seed, &mut SearchState::default())
+    }
+
+    /// [`ShardedSearch::research_device`] with the device's persistent
+    /// warm [`SearchState`]: compiled streams are reused for tenants
+    /// whose chunking is unchanged, and a no-change re-search
+    /// short-circuits to the cached plan. An emptied device invalidates
+    /// its state.
+    pub fn research_device_warm(
+        &self,
+        placement: &Placement,
+        device: usize,
+        seed: DeploymentPlan,
+        state: &mut SearchState,
+    ) -> Result<Option<SearchReport>> {
         let sub = self.set.shard(placement, device);
         if sub.is_empty() {
-            return None;
+            state.invalidate();
+            return Ok(None);
         }
-        Some(GacerSearch::new(&sub, self.opts, self.cfg).run_from(seed))
+        let report = GacerSearch::new(&sub, self.opts, self.cfg)
+            .budget(self.budget)
+            .run_from_state(seed, state)?;
+        Ok(Some(report))
     }
 
     /// Seeded re-search of several shards in one event — tenant
@@ -162,13 +240,31 @@ impl<'a> ShardedSearch<'a> {
         placement: &Placement,
         devices: &[usize],
         seeds: Vec<DeploymentPlan>,
-    ) -> Vec<Option<SearchReport>> {
+    ) -> Result<Vec<Option<SearchReport>>> {
         assert_eq!(devices.len(), seeds.len(), "one seed per re-searched device");
         devices
             .iter()
             .zip(seeds)
             .map(|(&d, seed)| self.research_device(placement, d, seed))
             .collect()
+    }
+
+    /// [`ShardedSearch::research_devices`] with the deployment's warm
+    /// states, indexed by device id (`states.len()` must cover every
+    /// entry of `devices`).
+    pub fn research_devices_warm(
+        &self,
+        placement: &Placement,
+        devices: &[usize],
+        seeds: Vec<DeploymentPlan>,
+        states: &mut [SearchState],
+    ) -> Result<Vec<Option<SearchReport>>> {
+        assert_eq!(devices.len(), seeds.len(), "one seed per re-searched device");
+        let mut out = Vec::with_capacity(devices.len());
+        for (&d, seed) in devices.iter().zip(seeds) {
+            out.push(self.research_device_warm(placement, d, seed, &mut states[d])?);
+        }
+        Ok(out)
     }
 }
 
@@ -256,13 +352,22 @@ mod tests {
         let search = ShardedSearch::new(&ts, opts, quick_cfg());
         // The migration shape: re-search both devices, one seed each; a
         // device emptied by the event yields None.
-        let reports = search.research_devices(
-            &Placement::from_assignments(vec![vec![0, 1, 2], vec![]]),
-            &[0, 1],
-            vec![DeploymentPlan::unregulated(3), DeploymentPlan::unregulated(0)],
-        );
+        let reports = search
+            .research_devices(
+                &Placement::from_assignments(vec![vec![0, 1, 2], vec![]]),
+                &[0, 1],
+                vec![DeploymentPlan::unregulated(3), DeploymentPlan::unregulated(0)],
+            )
+            .unwrap();
         assert!(reports[0].is_some());
         assert!(reports[1].is_none());
+        // A stale seed (arity from before the event) is a typed error.
+        let err = search.research_devices(
+            &Placement::from_assignments(vec![vec![0, 1, 2], vec![]]),
+            &[0],
+            vec![DeploymentPlan::unregulated(7)],
+        );
+        assert!(matches!(err, Err(crate::error::Error::InvalidPlan(_))));
     }
 
     #[test]
@@ -274,6 +379,7 @@ mod tests {
         let d = cold.bottleneck_device().unwrap();
         let seeded = search
             .research_device(&cold.plan.placement, d, cold.plan.shards[d].clone())
+            .unwrap()
             .unwrap();
         // Seeded re-search of an already-searched shard must not regress.
         let coldd = cold.reports[d].as_ref().unwrap();
@@ -282,6 +388,64 @@ mod tests {
         let empty = Placement::from_assignments(vec![vec![0, 1, 2], vec![]]);
         assert!(search
             .research_device(&empty, 1, DeploymentPlan::unregulated(0))
+            .unwrap()
             .is_none());
+    }
+
+    #[test]
+    fn warm_states_fill_on_cold_runs_and_short_circuit_research() {
+        let ts = set(&["Alex", "V16", "R18"]);
+        let opts = SimOptions::for_platform(&Platform::titan_v());
+        let search = ShardedSearch::new(&ts, opts, quick_cfg());
+        let mut states = vec![SearchState::default(); 2];
+        let cold = search.run_warm(2, &mut states);
+        for d in 0..2 {
+            let occupied = !cold.plan.placement.tenants_on(d).is_empty();
+            assert_eq!(!states[d].is_empty(), occupied);
+        }
+        // Re-searching an unchanged shard off its warm state costs zero
+        // evaluations and reproduces the shard plan bit-for-bit.
+        let d = cold.bottleneck_device().unwrap();
+        let warm = search
+            .research_device_warm(
+                &cold.plan.placement,
+                d,
+                cold.plan.shards[d].clone(),
+                &mut states[d],
+            )
+            .unwrap()
+            .unwrap();
+        assert_eq!(warm.plan, cold.plan.shards[d]);
+        assert_eq!(warm.evaluations, 0);
+        // An emptied device invalidates its state.
+        let empty = Placement::from_assignments(vec![vec![0, 1, 2], vec![]]);
+        assert!(search
+            .research_device_warm(
+                &empty,
+                1,
+                DeploymentPlan::unregulated(0),
+                &mut states[d]
+            )
+            .unwrap()
+            .is_none());
+        assert!(states[d].is_empty());
+    }
+
+    #[test]
+    fn per_device_budget_flags_sharded_truncation() {
+        let ts = set(&["R50", "V16", "R18", "M3"]);
+        let opts = SimOptions::for_platform(&Platform::titan_v());
+        let r = ShardedSearch::new(&ts, opts, quick_cfg())
+            .budget(SearchBudget::evaluations(4))
+            .run(2);
+        assert!(r.truncated(), "4 evals per device must truncate");
+        r.plan.validate(&ts.tenants).unwrap();
+        // Every occupied device still never regresses vs unregulated.
+        for rep in r.reports.iter().flatten() {
+            assert!(rep.outcome.objective() <= rep.initial.objective() + 1e-6);
+        }
+        // Unbudgeted sharded runs never truncate.
+        let r = ShardedSearch::new(&ts, opts, quick_cfg()).run(2);
+        assert!(!r.truncated());
     }
 }

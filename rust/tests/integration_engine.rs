@@ -59,7 +59,7 @@ fn seeded_research_preserves_plan_quality() {
     let ts = TenantSet::new(tenants, CostModel::new(platform));
     let search = GacerSearch::new(&ts, SimOptions::for_platform(&platform), quick_cfg());
     let cold = search.run();
-    let seeded = search.run_from(cold.plan.clone());
+    let seeded = search.run_from(cold.plan.clone()).unwrap();
     assert!(
         seeded.outcome.objective() <= cold.outcome.objective() + 1e-6,
         "seeded {} vs cold {}",

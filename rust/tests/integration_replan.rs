@@ -1,0 +1,205 @@
+//! Integration: budgeted anytime re-search and warm-started search
+//! state, end to end — the online-serving requirements of
+//! `docs/SEARCH.md` (ROADMAP: "warm-start caches across admit/evict
+//! events and bound re-plan latency").
+
+use gacer::engine::{GacerEngine, MigrationCost, MigrationPolicy};
+use gacer::gpu::SimOptions;
+use gacer::models::zoo;
+use gacer::plan::{DeploymentPlan, TenantSet};
+use gacer::profile::{CostModel, Platform};
+use gacer::search::{GacerSearch, SearchBudget, SearchConfig, SearchState};
+
+fn quick_cfg() -> SearchConfig {
+    SearchConfig {
+        max_pointers: 2,
+        rounds_per_level: 1,
+        positions_per_coordinate: 6,
+        spatial_steps_per_level: 2,
+        ..Default::default()
+    }
+}
+
+fn tenant_set(names: &[&str]) -> TenantSet {
+    TenantSet::new(zoo::build_combo(names), CostModel::new(Platform::titan_v()))
+}
+
+fn opts() -> SimOptions {
+    SimOptions::for_platform(&Platform::titan_v())
+}
+
+#[test]
+fn eval_budget_sweep_is_anytime_and_flags_truncation() {
+    // An admit-shaped seed: the searched 3-tenant plan grown by one
+    // tenant, re-searched under a sweep of evaluation budgets.
+    let ts = tenant_set(&["R50", "V16", "M3"]);
+    let searched = GacerSearch::new(&ts, opts(), quick_cfg()).run();
+    assert!(!searched.truncated);
+
+    let grown = tenant_set(&["R50", "V16", "M3", "R18"]);
+    let mut seed = searched.plan.clone();
+    seed.push_tenant(
+        grown.tenants[3].len(),
+        seed.pointers.pointers_per_tenant(),
+    );
+    let seed_obj = grown.simulate(&seed, opts()).objective();
+
+    let mut last_obj = f64::INFINITY;
+    for evals in [4usize, 16, 64, 256] {
+        let search = GacerSearch::new(&grown, opts(), quick_cfg())
+            .budget(SearchBudget::evaluations(evals));
+        let r = search.run_from(seed.clone()).unwrap();
+        // (b) of the acceptance criteria: never worse than the seed,
+        // truncation flagged while the budget binds.
+        assert!(
+            r.outcome.objective() <= seed_obj + 1e-6,
+            "budget {evals}: {} > seed {seed_obj}",
+            r.outcome.objective()
+        );
+        r.plan.validate(&grown.tenants).unwrap();
+        assert_eq!(r.budget, SearchBudget::evaluations(evals));
+        if evals == 4 {
+            assert!(r.truncated, "4 evals cannot converge a 4-tenant re-search");
+        }
+        // Monotone-anytime: a larger budget never returns a worse plan.
+        assert!(
+            r.outcome.objective() <= last_obj + 1e-6,
+            "budget {evals} regressed: {} > {last_obj}",
+            r.outcome.objective()
+        );
+        last_obj = r.outcome.objective();
+    }
+}
+
+#[test]
+fn deadline_budget_truncates_gracefully() {
+    // A 1-nanosecond deadline is exhausted before any optional work: the
+    // search returns the seed (or the unregulated fallback) immediately,
+    // still valid, still flagged.
+    let ts = tenant_set(&["R50", "V16", "M3"]);
+    let search = GacerSearch::new(&ts, opts(), quick_cfg())
+        .budget(SearchBudget::deadline(std::time::Duration::from_nanos(1)));
+    let r = search.run();
+    assert!(r.truncated);
+    assert!(r.outcome.objective() <= r.initial.objective() + 1e-6);
+    r.plan.validate(&ts.tenants).unwrap();
+}
+
+#[test]
+fn warm_research_reproduces_cold_plan_bit_for_bit() {
+    let ts = tenant_set(&["Alex", "V16", "R18"]);
+    let search = GacerSearch::new(&ts, opts(), quick_cfg());
+    let mut state = SearchState::new();
+    let cold = search.run_with_state(&mut state);
+    // Nothing changed: the warm re-search short-circuits to the exact
+    // cold result.
+    let warm = search.run_from_state(cold.plan.clone(), &mut state).unwrap();
+    assert_eq!(warm.plan, cold.plan, "bit-for-bit reproduction");
+    assert_eq!(warm.outcome, cold.outcome);
+    assert_eq!(warm.evaluations, 0);
+    assert_eq!(warm.warm_hits, 3);
+    // And it is idempotent: the state still short-circuits.
+    let again = search.run_from_state(cold.plan.clone(), &mut state).unwrap();
+    assert_eq!(again.plan, cold.plan);
+    assert_eq!(again.evaluations, 0);
+}
+
+#[test]
+fn stale_seed_arity_is_rejected_not_a_panic() {
+    let ts = tenant_set(&["Alex", "V16", "R18"]);
+    let search = GacerSearch::new(&ts, opts(), quick_cfg());
+    // Too many tenants (seed predates an eviction)...
+    assert!(matches!(
+        search.run_from(DeploymentPlan::unregulated(4)),
+        Err(gacer::Error::InvalidPlan(_))
+    ));
+    // ...too few (seed predates an admission)...
+    assert!(matches!(
+        search.run_from(DeploymentPlan::unregulated(2)),
+        Err(gacer::Error::InvalidPlan(_))
+    ));
+    // ...and a matching seed works.
+    assert!(search.run_from(DeploymentPlan::unregulated(3)).is_ok());
+}
+
+#[test]
+fn engine_admit_under_budget_keeps_plans_valid_and_reuses_state() {
+    // Spatial off keeps chunking empty so incumbent stream fingerprints
+    // survive events deterministically.
+    let cfg = SearchConfig { enable_spatial: false, ..quick_cfg() };
+    let mut engine = GacerEngine::builder()
+        .devices(2)
+        .search(cfg)
+        .replan_budget(SearchBudget::evaluations(40))
+        .tenant(zoo::build_default("R50").unwrap())
+        .tenant(zoo::build_default("V16").unwrap())
+        .tenant(zoo::build_default("M3").unwrap())
+        .tenant(zoo::build_default("R18").unwrap())
+        .build()
+        .unwrap();
+    assert!(!engine.last_report().unwrap().truncated, "cold build unbudgeted");
+
+    // A run of churn events, all budgeted: plans stay valid and never
+    // regress past the unregulated fallback.
+    let a = engine.admit(zoo::build_default("Alex").unwrap()).unwrap();
+    let r = engine.last_report().unwrap().clone();
+    assert!(r.warm_hits > 0, "admit re-search reuses the build's streams");
+    assert!(r.outcome.objective() <= r.initial.objective() + 1e-6);
+    engine.sharded_plan().validate(engine.tenants()).unwrap();
+
+    engine.evict(a).unwrap();
+    engine.sharded_plan().validate(engine.tenants()).unwrap();
+    if let Some(r) = engine.last_report() {
+        assert!(r.outcome.objective() <= r.initial.objective() + 1e-6);
+    }
+
+    // Telemetry accumulated from the budgeted events prices migration.
+    let cost = engine.migration_cost(1.0);
+    assert!(cost.replan_us > 0.0);
+    assert!(MigrationPolicy::cost_aware(cost).cost.is_some());
+}
+
+#[test]
+fn cost_gain_contrast_marginal_declined_large_migrates() {
+    // The satellite contrast test at the engine level: identical
+    // tenants, controlled demand skew.
+    let mut engine = GacerEngine::builder()
+        .devices(2)
+        .search(quick_cfg())
+        .tenant(zoo::build_default("R18").unwrap())
+        .tenant(zoo::build_default("R18").unwrap())
+        .tenant(zoo::build_default("R18").unwrap())
+        .tenant(zoo::build_default("R18").unwrap())
+        .build()
+        .unwrap();
+    let ids = engine.tenant_ids();
+    let hot: Vec<usize> = engine.placement().tenants_on(0).to_vec();
+    assert_eq!(hot.len(), 2, "identical tenants split 2/2");
+    for (slot, id) in ids.iter().enumerate() {
+        let n = if hot.contains(&slot) { 5_000 } else { 1_000 };
+        engine.record_requests(*id, n).unwrap();
+    }
+    // The ratio rule would migrate this skew (ratio 5 > 2); a bill
+    // larger than any achievable gain declines it.
+    let weights = engine.observed_tenant_weights();
+    assert!(MigrationPolicy::default()
+        .propose(&weights, engine.placement())
+        .is_some());
+    let pricey = MigrationPolicy::cost_aware(MigrationCost {
+        replan_us: f64::MAX / 8.0,
+        swap_pause_us: 0.0,
+        payback_windows: 1.0,
+    });
+    assert!(engine.maybe_migrate(&pricey).unwrap().is_none());
+    // The same skew with an affordable bill migrates: gain is the
+    // bottleneck reduction (3/5 of device 0's load in weight units).
+    let gain = weights[hot[0]].min(weights[hot[1]]);
+    let fair = MigrationPolicy::cost_aware(MigrationCost {
+        replan_us: gain * 0.1,
+        swap_pause_us: 0.0,
+        payback_windows: 1.0,
+    });
+    let m = engine.maybe_migrate(&fair).unwrap().expect("large skew migrates");
+    assert_eq!(m.from, 0);
+    engine.sharded_plan().validate(engine.tenants()).unwrap();
+}

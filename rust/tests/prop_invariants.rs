@@ -10,7 +10,7 @@ use gacer::gpu::{GpuSim, SimOp, SimOptions};
 use gacer::models::zoo;
 use gacer::plan::{DeploymentPlan, Placement, TenantSet};
 use gacer::profile::{CostModel, Platform};
-use gacer::search::{GacerSearch, SearchConfig};
+use gacer::search::{GacerSearch, SearchBudget, SearchConfig, SearchState};
 use gacer::temporal::PointerMatrix;
 use gacer::util::rng::{check_property, Rng};
 
@@ -197,6 +197,82 @@ fn prop_gacer_never_worse_than_unregulated() {
         let r = GacerSearch::new(&ts, SimOptions::for_platform(&platform), cfg).run();
         assert!(r.outcome.objective() <= r.initial.objective() + 1e-6);
         r.plan.validate(&tenants).unwrap();
+    });
+}
+
+#[test]
+fn prop_budgeted_search_is_monotone_anytime() {
+    // (d') budgeted search is monotone-anytime: for random seeds and
+    // random eval budgets b < 2b, the returned objective is never worse
+    // than the seed's, and never worse with the larger budget (eval
+    // budgets are deterministic, so the larger run extends the smaller).
+    let platform = Platform::titan_v();
+    let cost = CostModel::new(platform);
+    let tenants = zoo::build_combo(&["Alex", "V16", "R18"]);
+    let cfg = SearchConfig {
+        max_pointers: 2,
+        rounds_per_level: 1,
+        positions_per_coordinate: 5,
+        spatial_steps_per_level: 2,
+        ..Default::default()
+    };
+    check_property("budgeted-monotone-anytime", 10, |rng| {
+        let seed = random_plan(rng, &tenants);
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
+        let opts = SimOptions::for_platform(&platform);
+        let seed_obj = ts.simulate(&seed, opts).objective();
+        let b = rng.range(3, 60);
+        let mut objectives = Vec::new();
+        for budget in [b, 2 * b] {
+            let r = GacerSearch::new(&ts, opts, cfg)
+                .budget(SearchBudget::evaluations(budget))
+                .run_from(seed.clone())
+                .unwrap();
+            assert!(
+                r.outcome.objective() <= seed_obj + 1e-6,
+                "budget {budget}: {} > seed {seed_obj}",
+                r.outcome.objective()
+            );
+            r.plan.validate(&tenants).unwrap();
+            objectives.push(r.outcome.objective());
+        }
+        assert!(
+            objectives[1] <= objectives[0] + 1e-6,
+            "doubling the budget regressed: {} > {}",
+            objectives[1],
+            objectives[0]
+        );
+    });
+}
+
+#[test]
+fn prop_warm_research_reproduces_cold_when_nothing_changed() {
+    // (d'') for random tenant combos, a warm re-search seeded with the
+    // cold search's own plan on an unchanged set reproduces that plan
+    // bit-for-bit at zero evaluations.
+    let platform = Platform::titan_v();
+    let cost = CostModel::new(platform);
+    let cfg = SearchConfig {
+        max_pointers: 1,
+        rounds_per_level: 1,
+        positions_per_coordinate: 4,
+        spatial_steps_per_level: 1,
+        ..Default::default()
+    };
+    check_property("warm-reproduces-cold", 8, |rng| {
+        let names: Vec<&str> = (0..rng.range(2, 4))
+            .map(|_| *rng.choose(&["Alex", "R18", "M3", "LSTM", "V16"]))
+            .collect();
+        let tenants: Vec<_> =
+            names.iter().map(|n| zoo::build_default(n).unwrap()).collect();
+        let ts = TenantSet::new(tenants.clone(), cost.clone());
+        let search = GacerSearch::new(&ts, SimOptions::for_platform(&platform), cfg);
+        let mut state = SearchState::new();
+        let cold = search.run_with_state(&mut state);
+        let warm = search.run_from_state(cold.plan.clone(), &mut state).unwrap();
+        assert_eq!(warm.plan, cold.plan, "{names:?}: warm diverged from cold");
+        assert_eq!(warm.evaluations, 0, "{names:?}: warm re-search did work");
+        assert_eq!(warm.warm_hits, tenants.len());
     });
 }
 
