@@ -1,0 +1,180 @@
+//! SLO-driven regulation, end to end — the code companion of
+//! `docs/SLO.md` (the guide's stages match the sections below).
+//!
+//! Walk the SLO loop: a saturated cluster where tier-major issue holds
+//! the interactive p99 that fair sharing violates (the `gacer-bench slo`
+//! experiment), then the engine side — SLO-tracked tenants burn their
+//! error budget, admission control locks out lower tiers, and sustained
+//! burn triggers `maybe_regulate` (migration or re-search). The decision
+//! half runs on the simulator substrate and needs nothing but this repo
+//! — CI executes it on every push; the serving half needs AOT artifacts
+//! (`make artifacts`) and is skipped with a notice otherwise.
+//!
+//!     cargo run --release --example slo_serving
+
+use std::time::Duration;
+
+use gacer::bench_util::slo_sim::{run_slo_sim, saturated_mix, SloSimConfig};
+use gacer::coordinator::BatchPolicy;
+use gacer::models::zoo;
+use gacer::prelude::*;
+
+/// Shrunk search budget so the example runs in seconds; drop it to use
+/// `SearchConfig::default()` at deployment quality.
+fn quick_cfg() -> SearchConfig {
+    SearchConfig {
+        max_pointers: 2,
+        rounds_per_level: 1,
+        positions_per_coordinate: 6,
+        spatial_steps_per_level: 2,
+        ..Default::default()
+    }
+}
+
+fn main() -> gacer::Result<()> {
+    // ---- Stage 1: why tiers — the saturation experiment ----------------
+    // One interactive tenant shares a saturated device with batch
+    // tenants. Fair sharing gives it less than its arrival rate, so its
+    // backlog (and p99) grows without bound; tier-major issue plus
+    // bounded batch queues hold the target by shedding batch arrivals.
+    let cfg = SloSimConfig::default();
+    let regulated = run_slo_sim(&saturated_mix(), &cfg, true);
+    let fair = run_slo_sim(&saturated_mix(), &cfg, false);
+    println!("== saturation: tier-major issue vs fair sharing ==");
+    println!(
+        "  interactive p99: {:.0}us regulated vs {:.0}us fair (target {:.0}us)",
+        regulated.interactive_p99_us(),
+        fair.interactive_p99_us(),
+        cfg.target.target_us
+    );
+    assert!(regulated.interactive_p99_us() <= cfg.target.target_us);
+    assert!(fair.interactive_p99_us() > cfg.target.target_us);
+
+    // ---- Stage 2: the engine's SLO loop --------------------------------
+    // An interactive tenant carries an SloTarget; latency windows feed
+    // the burn monitor through `record_latencies`.
+    let target = SloTarget::p99_ms(1.0);
+    let engine_builder = GacerEngine::builder()
+        .platform(Platform::titan_v())
+        .devices(2)
+        .search(quick_cfg())
+        .tenant_with_slo(
+            zoo::build_default("R50").unwrap(),
+            SloPolicy::new(Tier::Interactive),
+            Some(target),
+        )?
+        .tenant(zoo::build_default("V16").unwrap())
+        .tenant(zoo::build_default("M3").unwrap());
+    let mut engine = engine_builder.build()?;
+    let ids = engine.tenant_ids();
+
+    // Serving turns out hot: every window of the interactive tenant's
+    // latencies blows the 1ms target.
+    let needed = engine.slo_monitor().config().sustained_page_windows;
+    for _ in 0..needed {
+        engine.record_latencies(&[vec![5_000.0; 100], Vec::new(), Vec::new()])?;
+    }
+    let pressure = engine.slo_pressure(ids[0]).expect("tracked tenant");
+    println!("\n== error-budget burn ==");
+    println!(
+        "  tenant {}: health {} (fast burn {:.0}x, {} paging windows)",
+        ids[0],
+        pressure.health.label(),
+        pressure.burn_fast,
+        pressure.page_streak
+    );
+    assert_eq!(pressure.health, SloHealth::Page);
+
+    // While the interactive tier burns, admission control refuses
+    // lower-tier newcomers — the burning tier keeps its headroom.
+    let refused = engine.admit(zoo::build_default("Alex").unwrap());
+    assert!(matches!(refused, Err(Error::Overloaded(_))));
+    println!("  admission of a standard-tier newcomer refused while paging");
+
+    // Sustained burn is a regulation trigger: the engine migrates the
+    // burning tenant to the least-loaded device (or re-searches its
+    // shard at finer granularity when it is alone).
+    let action = engine
+        .maybe_regulate(&MigrationPolicy::default())?
+        .expect("sustained burn must trigger regulation");
+    println!("\n== regulation ==");
+    match action {
+        RegulationAction::Migrated(m) => println!(
+            "  migrated burning tenant {} from device {} to {}",
+            m.tenant, m.from, m.to
+        ),
+        RegulationAction::Resharded { device } => {
+            println!("  re-searched device {device} at finer granularity")
+        }
+    }
+    // One burn episode, one action: the monitor history restarts, so
+    // the burn trigger stays quiet until violations re-accumulate...
+    let after = engine.slo_pressure(ids[0]).expect("still tracked after acting");
+    assert_eq!(after.page_streak, 0, "burn history restarted");
+    // ...and the admission gate opens again.
+    let admitted = engine.admit(zoo::build_default("Alex").unwrap())?;
+    println!(
+        "  burn history restarted; admission gate open again (Alex -> device {})",
+        engine.device_of(admitted)?
+    );
+
+    // ---- Stage 3: tiered serving on real artifacts ---------------------
+    // Requires AOT artifacts; everything above this line is the decision
+    // path CI executes on the simulator substrate.
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("\n(serving half skipped: run `make artifacts` first)");
+        return Ok(());
+    }
+    let policy = BatchPolicy::new(8, Duration::from_millis(2), vec![1, 2, 4, 8, 16, 32]);
+    let mut serving = GacerEngine::builder()
+        .platform(Platform::titan_v())
+        .devices(2)
+        .search(quick_cfg())
+        .artifacts("artifacts")
+        .serving_tenant_with_slo(
+            "chat",
+            "tiny_cnn",
+            policy.clone(),
+            SloPolicy::new(Tier::Interactive).with_deadline(Duration::from_millis(200)),
+            Some(SloTarget::p99_ms(50.0)),
+        )?
+        .serving_tenant_with_slo(
+            "batch",
+            "tiny_cnn",
+            policy,
+            SloPolicy::new(Tier::Batch).with_queue_cap(64),
+            None,
+        )?
+        .build()?;
+    let cluster = serving.serve_cluster()?;
+    let input: Vec<f32> =
+        (0..32 * 32 * 3).map(|k| ((k % 97) as f32 / 97.0) - 0.5).collect();
+    println!("\n== tiered serving ==");
+    let mut samples: Vec<Vec<f64>> = vec![Vec::new(); 2];
+    for _ in 0..16 {
+        for (t, window) in samples.iter_mut().enumerate() {
+            let t0 = std::time::Instant::now();
+            match cluster.infer(t, input.clone()) {
+                Ok(out) => {
+                    assert_eq!(out.len(), 10);
+                    window.push(t0.elapsed().as_secs_f64() * 1e6);
+                }
+                // Shed requests are the scheduler doing its job under
+                // overload, not failures.
+                Err(Error::Overloaded(_)) | Err(Error::DeadlineExceeded(_)) => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+    serving.record_latencies(&samples)?;
+    for (id, p) in serving.slo_pressures() {
+        println!(
+            "  tenant {id}: health {} (fast burn {:.2}, slow burn {:.2})",
+            p.health.label(),
+            p.burn_fast,
+            p.burn_slow
+        );
+    }
+    println!("  interactive issues first; late or over-cap requests shed typed errors");
+    Ok(())
+}

@@ -430,3 +430,73 @@ pub fn ablation_sensitivity() {
         if all_hold { "HOLDS" } else { "does NOT hold" }
     );
 }
+
+/// `gacer-bench slo` — SLO-driven regulation on a saturated two-device
+/// cluster (docs/SLO.md): one interactive tenant co-resident with batch
+/// tenants whose combined demand exceeds device capacity. The regulated
+/// arm issues tier-major and sheds over-cap batch arrivals; the
+/// unregulated arm is fair round-robin with unbounded queues. The
+/// interactive p99 holds its target only under regulation; both arms are
+/// recorded in `BENCH_slo.json`.
+pub fn slo() {
+    use super::slo_sim::{
+        run_slo_sim, saturated_mix, slo_report_json, SloSimConfig, SloSimOutcome,
+    };
+
+    let cfg = SloSimConfig::default();
+    println!(
+        "== SLO: interactive p99 under saturation ({} rounds, {} req/round/device, \
+         target p99 {:.1}ms) ==",
+        cfg.rounds,
+        cfg.capacity_per_round,
+        cfg.target.target_us / 1e3
+    );
+    let mix = saturated_mix();
+    let arms = [
+        ("slo-regulated", run_slo_sim(&mix, &cfg, true)),
+        ("unregulated", run_slo_sim(&mix, &cfg, false)),
+    ];
+    for (label, out) in &arms {
+        println!("{label}:");
+        println!(
+            "  {:<12} {:>3} {:>11} {:>7} {:>6} {:>9} {:>9} {:>9}  {}",
+            "tenant", "dev", "tier", "served", "shed", "p50(us)", "p99(us)", "max(us)",
+            "health"
+        );
+        for t in &out.tenants {
+            println!(
+                "  {:<12} {:>3} {:>11} {:>7} {:>6} {:>9.0} {:>9.0} {:>9.0}  {}",
+                t.name,
+                t.device,
+                t.tier.label(),
+                t.served,
+                t.shed,
+                t.latency.p50_us,
+                t.latency.p99_us,
+                t.latency.max_us,
+                t.pressure.map_or("-", |p| p.health.label())
+            );
+        }
+    }
+    let p99 = |o: &SloSimOutcome| o.interactive_p99_us();
+    let (reg, unreg) = (&arms[0].1, &arms[1].1);
+    println!(
+        "interactive p99: {:.0}us regulated vs {:.0}us unregulated (target {:.0}us)",
+        p99(reg),
+        p99(unreg),
+        cfg.target.target_us
+    );
+    assert!(
+        p99(reg) <= cfg.target.target_us,
+        "regulated interactive p99 must hold the target"
+    );
+    assert!(
+        p99(unreg) > cfg.target.target_us,
+        "unregulated interactive p99 must violate the target"
+    );
+    let json = slo_report_json(&cfg, reg, unreg).to_string_compact();
+    match std::fs::write("BENCH_slo.json", &json) {
+        Ok(()) => println!("wrote BENCH_slo.json ({} bytes)", json.len()),
+        Err(e) => eprintln!("could not write BENCH_slo.json: {e}"),
+    }
+}

@@ -3,6 +3,7 @@
 //! rows. `experiments` holds the per-table/figure drivers.
 
 pub mod experiments;
+pub mod slo_sim;
 
 use crate::baselines::{Baseline, BaselineKind};
 use crate::dfg::{Dfg, OpKind};

@@ -1,0 +1,396 @@
+//! Deterministic discrete-time queueing simulator behind `gacer-bench
+//! slo`: a saturated multi-device cluster serving an interactive tenant
+//! next to batch tenants, with and without SLO regulation.
+//!
+//! The simulator is intentionally tiny — FIFO queues, fixed per-round
+//! device capacity, no randomness — so the bench is reproducible
+//! bit-for-bit and the effect it demonstrates is structural, not
+//! statistical: under saturation, *fair* sharing starves the interactive
+//! tenant (its backlog and therefore its latency grow without bound),
+//! while tier-major issue plus bounded batch queues (the
+//! [`crate::slo`] policies) hold the interactive p99 at the cost of
+//! shedding batch arrivals. The same [`crate::slo::SloMonitor`] the
+//! engine runs is fed one observe window per simulated interval, so the
+//! bench also exercises the burn-rate verdicts end to end.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::metrics::{LatencyHistogram, Quantiles};
+use crate::slo::{BurnConfig, SloMonitor, SloPressure, SloTarget, Tier};
+use crate::util::json::Json;
+
+/// Wall-clock length of one simulated scheduling round, microseconds.
+/// A request served in its arrival round costs one round of latency.
+pub const SLO_ROUND_US: f64 = 1_000.0;
+
+/// One tenant of the simulated cluster.
+#[derive(Debug, Clone)]
+pub struct SloSimTenant {
+    pub name: String,
+    pub device: usize,
+    pub tier: Tier,
+    /// New requests arriving at the head of every round.
+    pub arrivals_per_round: usize,
+    /// Queue bound honored only by the regulated arm: arrivals beyond it
+    /// are shed (the simulator's stand-in for
+    /// [`crate::slo::SloPolicy::queue_cap`]).
+    pub queue_cap: Option<usize>,
+}
+
+/// Knobs for one simulation run.
+#[derive(Debug, Clone)]
+pub struct SloSimConfig {
+    /// Scheduling rounds to simulate.
+    pub rounds: usize,
+    /// Requests each device can serve per round.
+    pub capacity_per_round: usize,
+    /// Rounds per [`SloMonitor::observe`] window.
+    pub window_rounds: usize,
+    /// Latency target tracked for interactive tenants.
+    pub target: SloTarget,
+}
+
+impl Default for SloSimConfig {
+    fn default() -> Self {
+        SloSimConfig {
+            rounds: 400,
+            capacity_per_round: 8,
+            window_rounds: 50,
+            target: SloTarget::p99_ms(2.0),
+        }
+    }
+}
+
+/// Per-tenant result of one arm.
+#[derive(Debug, Clone)]
+pub struct SloTenantOutcome {
+    pub name: String,
+    pub device: usize,
+    pub tier: Tier,
+    /// Requests served over the whole run.
+    pub served: u64,
+    /// Arrivals shed at the queue cap (always `0` in the unregulated arm).
+    pub shed: u64,
+    /// Latency distribution of the served requests.
+    pub latency: Quantiles,
+    /// Final burn-monitor verdict (tracked tenants only — the monitor
+    /// watches the interactive tier).
+    pub pressure: Option<SloPressure>,
+}
+
+/// One arm of the experiment: the whole cluster, regulated or not.
+#[derive(Debug, Clone)]
+pub struct SloSimOutcome {
+    pub regulated: bool,
+    pub tenants: Vec<SloTenantOutcome>,
+}
+
+impl SloSimOutcome {
+    pub fn tenant(&self, name: &str) -> Option<&SloTenantOutcome> {
+        self.tenants.iter().find(|t| t.name == name)
+    }
+
+    /// The interactive tenant's p99 (the experiment's headline number).
+    pub fn interactive_p99_us(&self) -> f64 {
+        self.tenants
+            .iter()
+            .filter(|t| t.tier == Tier::Interactive)
+            .map(|t| t.latency.p99_us)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// The saturated two-device mix of `gacer-bench slo`: device 0 hosts one
+/// interactive tenant (3 req/round) against two batch analytics tenants
+/// (5 req/round each) — demand 13 against capacity 8 — while device 1
+/// runs two batch tenants at milder oversubscription. Fair sharing gives
+/// the interactive tenant 8/3 ≈ 2.67 req/round, below its arrival rate,
+/// so its backlog grows without bound; tier-major issue serves it first.
+pub fn saturated_mix() -> Vec<SloSimTenant> {
+    let t = |name: &str, device, tier, arrivals_per_round, queue_cap| SloSimTenant {
+        name: name.to_string(),
+        device,
+        tier,
+        arrivals_per_round,
+        queue_cap,
+    };
+    vec![
+        t("chat", 0, Tier::Interactive, 3, None),
+        t("analytics-a", 0, Tier::Batch, 5, Some(32)),
+        t("analytics-b", 0, Tier::Batch, 5, Some(32)),
+        t("train-a", 1, Tier::Batch, 5, Some(32)),
+        t("train-b", 1, Tier::Batch, 5, Some(32)),
+    ]
+}
+
+/// Run one arm. `regulated` turns on the two SLO mechanisms the engine's
+/// lowered [`crate::coordinator::ServerConfig`] applies: tier-major
+/// issue order (higher tiers drain first each round, mirroring
+/// `tiered_issue_order`) and bounded batch queues (over-cap arrivals
+/// shed). The unregulated arm is fair round-robin with unbounded queues
+/// — the pre-SLO server. Both arms feed an interactive-tier
+/// [`SloMonitor`] so the final outcome carries a burn verdict.
+pub fn run_slo_sim(
+    tenants: &[SloSimTenant],
+    cfg: &SloSimConfig,
+    regulated: bool,
+) -> SloSimOutcome {
+    let n = tenants.len();
+    let n_devices = tenants.iter().map(|t| t.device + 1).max().unwrap_or(0);
+    let mut queues: Vec<VecDeque<usize>> = vec![VecDeque::new(); n];
+    let mut served = vec![0u64; n];
+    let mut shed = vec![0u64; n];
+    let mut hist: Vec<LatencyHistogram> = vec![LatencyHistogram::new(); n];
+    let mut window: Vec<Vec<f64>> = vec![Vec::new(); n];
+    let mut monitor = SloMonitor::new(BurnConfig::default());
+    for (i, t) in tenants.iter().enumerate() {
+        if t.tier == Tier::Interactive {
+            monitor.track(i as u64, t.tier, cfg.target).expect("sim target is valid");
+        }
+    }
+
+    // Issue groups per device: the regulated arm drains tiers in
+    // descending priority (tier-major, like `tiered_issue_order`); the
+    // unregulated arm treats every tenant as one fair-share group.
+    // Within a group, service is round-robin one request per tenant,
+    // rotated by round so no tenant owns the leftover slot.
+    let groups: Vec<Vec<Vec<usize>>> = (0..n_devices)
+        .map(|d| {
+            let on_dev: Vec<usize> =
+                (0..n).filter(|&i| tenants[i].device == d).collect();
+            if !regulated {
+                return vec![on_dev];
+            }
+            let mut prios: Vec<u8> =
+                on_dev.iter().map(|&i| tenants[i].tier.priority()).collect();
+            prios.sort_unstable();
+            prios.dedup();
+            prios.reverse();
+            prios
+                .into_iter()
+                .map(|p| {
+                    on_dev
+                        .iter()
+                        .copied()
+                        .filter(|&i| tenants[i].tier.priority() == p)
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+
+    for round in 0..cfg.rounds {
+        // Arrivals (shed at the cap only under regulation).
+        for (i, t) in tenants.iter().enumerate() {
+            for _ in 0..t.arrivals_per_round {
+                if regulated && t.queue_cap.is_some_and(|cap| queues[i].len() >= cap) {
+                    shed[i] += 1;
+                } else {
+                    queues[i].push_back(round);
+                }
+            }
+        }
+        // Service: each device spends its capacity group by group.
+        for device_groups in &groups {
+            let mut budget = cfg.capacity_per_round;
+            for group in device_groups {
+                if group.is_empty() {
+                    continue;
+                }
+                while budget > 0 {
+                    let mut progressed = false;
+                    for k in 0..group.len() {
+                        if budget == 0 {
+                            break;
+                        }
+                        let i = group[(k + round) % group.len()];
+                        if let Some(arrived) = queues[i].pop_front() {
+                            let us = (round - arrived + 1) as f64 * SLO_ROUND_US;
+                            hist[i].record_us(us);
+                            window[i].push(us);
+                            served[i] += 1;
+                            budget -= 1;
+                            progressed = true;
+                        }
+                    }
+                    if !progressed {
+                        break;
+                    }
+                }
+            }
+        }
+        // Close an observe window for the burn monitor.
+        if (round + 1) % cfg.window_rounds == 0 {
+            for (i, t) in tenants.iter().enumerate() {
+                if t.tier == Tier::Interactive {
+                    monitor.observe(i as u64, &window[i]);
+                }
+                window[i].clear();
+            }
+        }
+    }
+    // Flush a trailing partial window so no samples escape the verdict.
+    for (i, t) in tenants.iter().enumerate() {
+        if t.tier == Tier::Interactive && !window[i].is_empty() {
+            monitor.observe(i as u64, &window[i]);
+        }
+    }
+
+    let tenants = tenants
+        .iter()
+        .enumerate()
+        .map(|(i, t)| SloTenantOutcome {
+            name: t.name.clone(),
+            device: t.device,
+            tier: t.tier,
+            served: served[i],
+            shed: shed[i],
+            latency: hist[i].quantiles(),
+            pressure: monitor.pressure(i as u64),
+        })
+        .collect();
+    SloSimOutcome { regulated, tenants }
+}
+
+/// Serialize both arms into the `BENCH_slo.json` payload: per-tenant
+/// rows for each arm plus an `interactive` headline block recording the
+/// p99 of each arm and whether it held the target.
+pub fn slo_report_json(
+    cfg: &SloSimConfig,
+    regulated: &SloSimOutcome,
+    unregulated: &SloSimOutcome,
+) -> Json {
+    let arm = |o: &SloSimOutcome| {
+        Json::Arr(
+            o.tenants
+                .iter()
+                .map(|t| {
+                    let mut m = BTreeMap::new();
+                    m.insert("name".to_string(), Json::Str(t.name.clone()));
+                    m.insert("device".to_string(), Json::Num(t.device as f64));
+                    m.insert("tier".to_string(), Json::Str(t.tier.label().to_string()));
+                    m.insert("served".to_string(), Json::Num(t.served as f64));
+                    m.insert("shed".to_string(), Json::Num(t.shed as f64));
+                    m.insert("p50_us".to_string(), Json::Num(t.latency.p50_us));
+                    m.insert("p99_us".to_string(), Json::Num(t.latency.p99_us));
+                    m.insert("max_us".to_string(), Json::Num(t.latency.max_us));
+                    if let Some(p) = t.pressure {
+                        m.insert(
+                            "health".to_string(),
+                            Json::Str(p.health.label().to_string()),
+                        );
+                        m.insert("burn_slow".to_string(), Json::Num(p.burn_slow));
+                    }
+                    Json::Obj(m)
+                })
+                .collect(),
+        )
+    };
+    let target_us = cfg.target.target_us;
+    let mut headline = BTreeMap::new();
+    headline.insert(
+        "regulated_p99_us".to_string(),
+        Json::Num(regulated.interactive_p99_us()),
+    );
+    headline.insert(
+        "unregulated_p99_us".to_string(),
+        Json::Num(unregulated.interactive_p99_us()),
+    );
+    headline.insert(
+        "regulated_holds_target".to_string(),
+        Json::Bool(regulated.interactive_p99_us() <= target_us),
+    );
+    headline.insert(
+        "unregulated_holds_target".to_string(),
+        Json::Bool(unregulated.interactive_p99_us() <= target_us),
+    );
+    let mut root = BTreeMap::new();
+    root.insert("experiment".to_string(), Json::Str("slo".to_string()));
+    root.insert("round_us".to_string(), Json::Num(SLO_ROUND_US));
+    root.insert("rounds".to_string(), Json::Num(cfg.rounds as f64));
+    root.insert(
+        "capacity_per_round".to_string(),
+        Json::Num(cfg.capacity_per_round as f64),
+    );
+    root.insert("target_p99_us".to_string(), Json::Num(target_us));
+    root.insert("regulated".to_string(), arm(regulated));
+    root.insert("unregulated".to_string(), arm(unregulated));
+    root.insert("interactive".to_string(), Json::Obj(headline));
+    Json::Obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slo::SloHealth;
+
+    #[test]
+    fn regulated_arm_holds_interactive_p99_and_sheds_batch() {
+        let cfg = SloSimConfig::default();
+        let out = run_slo_sim(&saturated_mix(), &cfg, true);
+        let chat = out.tenant("chat").expect("interactive tenant");
+        assert!(
+            chat.latency.p99_us <= cfg.target.target_us,
+            "tier-major issue must hold the interactive p99: {} > {}",
+            chat.latency.p99_us,
+            cfg.target.target_us
+        );
+        assert_eq!(chat.shed, 0, "interactive requests are never shed");
+        let batch_shed: u64 = out
+            .tenants
+            .iter()
+            .filter(|t| t.tier == Tier::Batch)
+            .map(|t| t.shed)
+            .sum();
+        assert!(batch_shed > 0, "saturated batch tenants shed at their cap");
+        assert_eq!(chat.pressure.expect("tracked").health, SloHealth::Healthy);
+    }
+
+    #[test]
+    fn unregulated_arm_blows_the_interactive_budget() {
+        let cfg = SloSimConfig::default();
+        let out = run_slo_sim(&saturated_mix(), &cfg, false);
+        let chat = out.tenant("chat").expect("interactive tenant");
+        assert!(
+            chat.latency.p99_us > cfg.target.target_us,
+            "fair sharing under saturation must violate the target"
+        );
+        let total_shed: u64 = out.tenants.iter().map(|t| t.shed).sum();
+        assert_eq!(total_shed, 0, "no queue caps without regulation");
+        assert!(chat.pressure.expect("tracked").health.is_burning());
+    }
+
+    #[test]
+    fn every_request_is_served_or_shed_or_queued() {
+        let cfg = SloSimConfig { rounds: 60, ..Default::default() };
+        let mix = saturated_mix();
+        for regulated in [true, false] {
+            let out = run_slo_sim(&mix, &cfg, regulated);
+            for (t, spec) in out.tenants.iter().zip(&mix) {
+                let arrived = (spec.arrivals_per_round * cfg.rounds) as u64;
+                assert!(
+                    t.served + t.shed <= arrived,
+                    "{}: served {} + shed {} > arrived {arrived}",
+                    t.name,
+                    t.served,
+                    t.shed
+                );
+                assert_eq!(t.latency.n as u64, t.served);
+            }
+        }
+    }
+
+    #[test]
+    fn report_json_round_trips() {
+        let cfg = SloSimConfig { rounds: 100, ..Default::default() };
+        let reg = run_slo_sim(&saturated_mix(), &cfg, true);
+        let unreg = run_slo_sim(&saturated_mix(), &cfg, false);
+        let json = slo_report_json(&cfg, &reg, &unreg);
+        let text = json.to_string_compact();
+        assert!(text.contains("\"experiment\":\"slo\""));
+        assert!(text.contains("\"regulated_holds_target\":true"));
+        assert!(text.contains("\"unregulated_holds_target\":false"));
+        let back = Json::parse(&text).expect("self-emitted JSON parses");
+        assert_eq!(back.to_string_compact(), text);
+    }
+}

@@ -1,14 +1,16 @@
 //! `gacer-bench` — regenerates every table and figure of the paper's
 //! evaluation section (see DESIGN.md §6 for the experiment index).
 //!
-//! Usage: `gacer-bench <fig4|fig7|fig8|table2|fig9|table3|table4|placement|replan|all>
+//! Usage: `gacer-bench <fig4|fig7|fig8|table2|fig9|table3|table4|placement|replan|slo|all>
 //! [--rounds N]`
 //!
 //! `placement` is this repo's multi-GPU extension: LoadBalance vs
 //! InterferenceAware placement objectives over heterogeneous tenant mixes.
 //! `replan` is the online-serving extension: re-plan latency and plan
 //! quality vs search budget on an admit event, cold vs warm-started
-//! (`docs/SEARCH.md`).
+//! (`docs/SEARCH.md`). `slo` is the SLO-regulation extension: interactive
+//! p99 on a saturated cluster with and without tier-major issue and
+//! overload shedding, recorded in `BENCH_slo.json` (`docs/SLO.md`).
 
 use gacer::bench_util::experiments;
 use gacer::util::cli::Args;
@@ -24,7 +26,7 @@ fn main() {
     let ids: Vec<&str> = if experiment == "all" {
         vec![
             "fig4", "fig7", "fig8", "table2", "fig9", "table3", "table4",
-            "placement", "replan",
+            "placement", "replan", "slo",
         ]
     } else {
         vec![experiment.as_str()]
@@ -40,6 +42,7 @@ fn main() {
             "table4" => experiments::table4(rounds),
             "placement" => experiments::placement_objectives(),
             "replan" => experiments::replan(),
+            "slo" => experiments::slo(),
             other => {
                 eprintln!("unknown experiment: {other}");
                 std::process::exit(2);

@@ -105,6 +105,20 @@ impl Batcher {
         Some((variant, batch))
     }
 
+    /// Remove and return every request that has been queued for at least
+    /// `deadline` (FIFO order preserved among survivors). The scheduler
+    /// answers each expired request with a typed shed error
+    /// ([`crate::Error::DeadlineExceeded`]) instead of letting it occupy
+    /// an issue round it can no longer benefit from.
+    pub fn expire(&mut self, now: Instant, deadline: Duration) -> Vec<PendingRequest> {
+        let (expired, keep): (Vec<PendingRequest>, Vec<PendingRequest>) = self
+            .queue
+            .drain(..)
+            .partition(|r| now.duration_since(r.enqueued) >= deadline);
+        self.queue = keep;
+        expired
+    }
+
     /// Force-drain everything regardless of readiness (shutdown path).
     pub fn flush(&mut self) -> Option<(usize, Vec<PendingRequest>)> {
         if self.queue.is_empty() {
@@ -215,6 +229,26 @@ mod tests {
         assert_eq!((variant, batch.len()), (4, 4));
         // Zero is clamped up to a runnable batch size.
         assert_eq!(BatchPolicy::new(0, Duration::ZERO, vec![2, 4]).max_batch, 1);
+    }
+
+    #[test]
+    fn expire_sheds_only_overdue_requests_and_keeps_fifo() {
+        let mut b = Batcher::new(policy());
+        let t0 = Instant::now();
+        b.push(PendingRequest { id: 0, input: vec![], enqueued: t0 });
+        b.push(PendingRequest { id: 1, input: vec![], enqueued: t0 + Duration::from_millis(3) });
+        b.push(PendingRequest { id: 2, input: vec![], enqueued: t0 + Duration::from_millis(9) });
+        // At t0+10ms with a 5ms deadline: ids 0 and 1 are overdue.
+        let expired = b.expire(t0 + Duration::from_millis(10), Duration::from_millis(5));
+        assert_eq!(expired.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.pending(), 1);
+        let (_, batch) = b.flush().unwrap();
+        assert_eq!(batch[0].id, 2, "survivor keeps its place");
+        // Nothing overdue: expire is a no-op.
+        let mut b = Batcher::new(policy());
+        b.push(req(7));
+        assert!(b.expire(Instant::now(), Duration::from_secs(60)).is_empty());
+        assert_eq!(b.pending(), 1);
     }
 
     #[test]

@@ -352,6 +352,43 @@ impl ClusterServer {
             .map(|&(d, l)| per_device[d].get(l).copied().unwrap_or(0))
             .collect()
     }
+
+    /// Requests shed so far per *global* tenant slot (queue-cap +
+    /// deadline sheds, aggregated from each device's
+    /// [`Server::shed_counts`] via the routing table). The
+    /// cluster-wide proof that overload protection answered — rather
+    /// than dropped — every rejected request.
+    pub fn shed_counts(&self) -> Vec<u64> {
+        let st = read_state(&self.state);
+        let per_device: Vec<Vec<u64>> = st
+            .servers
+            .iter()
+            .map(|s| s.as_ref().map(Server::shed_counts).unwrap_or_default())
+            .collect();
+        st.routing
+            .iter()
+            .map(|&(d, l)| per_device[d].get(l).copied().unwrap_or(0))
+            .collect()
+    }
+
+    /// Drain the server-observed latency samples per *global* tenant
+    /// slot (each device's [`Server::take_latencies`], reordered by the
+    /// routing table) — the per-window feed for
+    /// [`crate::engine::GacerEngine::record_latencies`].
+    pub fn take_latencies(&self) -> Vec<Vec<f64>> {
+        let st = read_state(&self.state);
+        let mut per_device: Vec<Vec<Vec<f64>>> = st
+            .servers
+            .iter()
+            .map(|s| s.as_ref().map(Server::take_latencies).unwrap_or_default())
+            .collect();
+        st.routing
+            .iter()
+            .map(|&(d, l)| {
+                per_device[d].get_mut(l).map(std::mem::take).unwrap_or_default()
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]

@@ -28,6 +28,7 @@ use crate::metrics::LatencyHistogram;
 use crate::plan::PlacementObjective;
 use crate::runtime::{load_params, ArtifactManifest};
 use crate::search::SearchBudget;
+use crate::slo::{SloPolicy, Tier};
 
 /// One tenant of the serving deployment.
 #[derive(Debug, Clone, PartialEq)]
@@ -65,6 +66,15 @@ pub struct ServerConfig {
     /// tenant with finer temporal granularity (more pointers) yields the
     /// issue queue sooner. Empty = unbounded (model-wise granularity).
     pub issue_quanta: Vec<usize>,
+    /// Per-tenant SLO scheduling contract (tier priority, per-request
+    /// deadline, queue-depth bound), parallel to the tenant list. Empty =
+    /// SLO regulation off (the pre-SLO scheduler, exactly). When set, the
+    /// scheduler walks the issue order **tier-major**: higher tiers issue
+    /// first, the plan's GACER order is preserved within each tier,
+    /// deadline-expired requests are answered with
+    /// [`Error::DeadlineExceeded`], and arrivals beyond a tenant's
+    /// `queue_cap` are answered with [`Error::Overloaded`].
+    pub slo: Vec<SloPolicy>,
 }
 
 impl Default for ServerConfig {
@@ -73,6 +83,7 @@ impl Default for ServerConfig {
             tick: Duration::from_micros(200),
             issue_order: Vec::new(),
             issue_quanta: Vec::new(),
+            slo: Vec::new(),
         }
     }
 }
@@ -116,8 +127,35 @@ impl ServerConfig {
                 ));
             }
         }
+        if !self.slo.is_empty() {
+            if self.slo.len() != n_tenants {
+                return Err(Error::InvalidConfig(format!(
+                    "slo has {} entries for {n_tenants} tenants",
+                    self.slo.len()
+                )));
+            }
+            for p in &self.slo {
+                p.validate()?;
+            }
+        }
         Ok(())
     }
+}
+
+/// The order the scheduler actually walks each round: the plan's GACER
+/// issue order, stable-sorted so higher [`Tier`]s issue first. The sort
+/// is stable, so the granularity-aware order the search produced is
+/// preserved *within* each tier — SLO priority decides between tiers,
+/// GACER decides within them. With no SLO policies the plan order passes
+/// through unchanged.
+fn tiered_issue_order(order: &[usize], slo: &[SloPolicy]) -> Vec<usize> {
+    let mut o = order.to_vec();
+    if !slo.is_empty() {
+        o.sort_by_key(|&t| {
+            std::cmp::Reverse(slo.get(t).map_or(Tier::Standard.priority(), |p| p.tier.priority()))
+        });
+    }
+    o
 }
 
 struct Incoming {
@@ -133,6 +171,7 @@ struct ApplyMsg {
     variants: Vec<HashMap<usize, String>>,
     issue_order: Vec<usize>,
     issue_quanta: Vec<usize>,
+    slo: Vec<SloPolicy>,
     tick: Duration,
     ack: mpsc::Sender<()>,
 }
@@ -144,13 +183,29 @@ enum Msg {
 
 /// Introspection state mirrored out of the scheduler thread: what plan
 /// the scheduler is *currently* executing (updated atomically at each
-/// epoch fence) plus per-tenant served-request counters.
+/// epoch fence) plus per-tenant served/shed counters and the
+/// server-observed latency samples an SLO observe loop drains.
 struct Shared {
     specs: Vec<TenantSpec>,
     issue_order: Vec<usize>,
     epoch: u64,
     served: Vec<u64>,
+    /// Requests answered with a typed shed error (queue cap + deadline),
+    /// per local tenant slot. Shed requests are *answered*, never
+    /// silently dropped — this counter makes that auditable.
+    shed: Vec<u64>,
+    /// Arrival→response latency samples (µs) per local tenant slot,
+    /// drained by [`Server::take_latencies`]. Bounded at
+    /// [`LATENCY_BUFFER_CAP`] per tenant so a deployment that never
+    /// drains cannot grow without bound.
+    latency_us: Vec<Vec<f64>>,
 }
+
+/// Per-tenant bound on buffered latency samples between
+/// [`Server::take_latencies`] drains. An observe loop draining once per
+/// window stays far below this; a deployment that never drains just
+/// stops buffering instead of leaking.
+const LATENCY_BUFFER_CAP: usize = 16_384;
 
 fn read_shared(shared: &RwLock<Shared>) -> std::sync::RwLockReadGuard<'_, Shared> {
     shared.read().unwrap_or_else(|e| e.into_inner())
@@ -228,11 +283,14 @@ impl Server {
         } else {
             cfg.issue_order.clone()
         };
+        let issue_order = tiered_issue_order(&issue_order, &cfg.slo);
         let shared = Arc::new(RwLock::new(Shared {
             specs: tenants.clone(),
             issue_order: issue_order.clone(),
             epoch: 0,
             served: vec![0; tenants.len()],
+            shed: vec![0; tenants.len()],
+            latency_us: vec![Vec::new(); tenants.len()],
         }));
         let st = SchedulerState {
             batchers: tenants.iter().map(|t| Batcher::new(t.policy.clone())).collect(),
@@ -241,6 +299,7 @@ impl Server {
             variants,
             issue_order,
             issue_quanta: cfg.issue_quanta.clone(),
+            slo: cfg.slo.clone(),
             tick: cfg.tick,
         };
         let thread_shared = Arc::clone(&shared);
@@ -302,6 +361,7 @@ impl Server {
         } else {
             config.issue_order.clone()
         };
+        let issue_order = tiered_issue_order(&issue_order, &config.slo);
         let (ack_tx, ack_rx) = mpsc::channel();
         self.tx
             .send(Msg::Apply(ApplyMsg {
@@ -309,6 +369,7 @@ impl Server {
                 variants,
                 issue_order,
                 issue_quanta: config.issue_quanta,
+                slo: config.slo,
                 tick: config.tick,
                 ack: ack_tx,
             }))
@@ -375,6 +436,28 @@ impl Server {
     pub fn served_counts(&self) -> Vec<u64> {
         read_shared(&self.shared).served.clone()
     }
+
+    /// Requests shed so far per local tenant slot — queue-cap rejections
+    /// ([`Error::Overloaded`]) plus deadline expiries
+    /// ([`Error::DeadlineExceeded`]). Every shed request was *answered*
+    /// with its typed error; this counter is the introspection proof that
+    /// nothing was silently dropped. Counters survive hot swaps exactly
+    /// like [`Server::served_counts`] (by `(name, family)` identity).
+    pub fn shed_counts(&self) -> Vec<u64> {
+        read_shared(&self.shared).shed.clone()
+    }
+
+    /// Drain the server-observed latency samples per local tenant slot:
+    /// arrival→response microseconds for every request answered since the
+    /// previous drain. This is the per-window sample feed for
+    /// [`crate::slo::SloMonitor::observe`] (via
+    /// [`crate::engine::GacerEngine::record_latencies`]). Buffers are
+    /// bounded, so an operations loop that never drains costs memory
+    /// once, not per request.
+    pub fn take_latencies(&self) -> Vec<Vec<f64>> {
+        let mut sh = write_shared(&self.shared);
+        sh.latency_us.iter_mut().map(std::mem::take).collect()
+    }
 }
 
 /// Everything the scheduler owns that a hot swap replaces or remaps.
@@ -385,6 +468,7 @@ struct SchedulerState {
     responders: Vec<HashMap<u64, mpsc::Sender<Result<Vec<f32>>>>>,
     issue_order: Vec<usize>,
     issue_quanta: Vec<usize>,
+    slo: Vec<SloPolicy>,
     tick: Duration,
 }
 
@@ -419,6 +503,26 @@ fn bump_served(shared: &RwLock<Shared>, tenant: usize, n: usize) {
     }
 }
 
+fn bump_shed(shared: &RwLock<Shared>, tenant: usize, n: usize) {
+    let mut sh = write_shared(shared);
+    if let Some(c) = sh.shed.get_mut(tenant) {
+        *c += n as u64;
+    }
+}
+
+/// Buffer arrival→response latency samples for one tenant, bounded at
+/// [`LATENCY_BUFFER_CAP`].
+fn record_latency(shared: &RwLock<Shared>, tenant: usize, samples_us: &[f64]) {
+    if samples_us.is_empty() {
+        return;
+    }
+    let mut sh = write_shared(shared);
+    if let Some(buf) = sh.latency_us.get_mut(tenant) {
+        let room = LATENCY_BUFFER_CAP.saturating_sub(buf.len());
+        buf.extend(samples_us.iter().take(room));
+    }
+}
+
 /// Commit a plan swap at the round boundary: flush removed tenants under
 /// the old plan, move surviving queues to their new slots, replace the
 /// regulation state, publish the new epoch, and release the fence.
@@ -429,7 +533,7 @@ fn apply_swap(
     executor: &ExecutorHandle,
     shared: &RwLock<Shared>,
 ) {
-    let ApplyMsg { tenants, variants, issue_order, issue_quanta, tick, ack } = swap;
+    let ApplyMsg { tenants, variants, issue_order, issue_quanta, slo, tick, ack } = swap;
     let claims = claim_slots(&st.tenants, &tenants);
 
     // Flush (and answer) every request queued for a tenant the new plan
@@ -454,6 +558,8 @@ fn apply_swap(
                 &mut st.responders[old],
                 variant,
                 batch,
+                shared,
+                old,
             );
         }
     }
@@ -463,8 +569,12 @@ fn apply_swap(
         st.batchers.drain(..).map(Some).collect();
     let mut old_responders: Vec<Option<HashMap<_, _>>> =
         st.responders.drain(..).map(Some).collect();
-    let old_served = read_shared(shared).served.clone();
+    let (old_served, old_shed) = {
+        let sh = read_shared(shared);
+        (sh.served.clone(), sh.shed.clone())
+    };
     let mut served = Vec::with_capacity(tenants.len());
+    let mut shed = Vec::with_capacity(tenants.len());
     for (i, claim) in claims.iter().enumerate() {
         match claim {
             Some(o) => {
@@ -473,11 +583,13 @@ fn apply_swap(
                 st.batchers.push(b);
                 st.responders.push(old_responders[*o].take().expect("slot claimed once"));
                 served.push(old_served.get(*o).copied().unwrap_or(0));
+                shed.push(old_shed.get(*o).copied().unwrap_or(0));
             }
             None => {
                 st.batchers.push(Batcher::new(tenants[i].policy.clone()));
                 st.responders.push(HashMap::new());
                 served.push(0);
+                shed.push(0);
             }
         }
     }
@@ -485,12 +597,23 @@ fn apply_swap(
     st.variants = variants;
     st.issue_order = issue_order;
     st.issue_quanta = issue_quanta;
+    st.slo = slo;
     st.tick = tick;
 
     let mut sh = write_shared(shared);
+    // Latency buffers follow their tenants like the counters do.
+    let mut old_lat: Vec<Vec<f64>> = std::mem::take(&mut sh.latency_us);
+    sh.latency_us = claims
+        .iter()
+        .map(|claim| match claim {
+            Some(o) => std::mem::take(&mut old_lat[*o]),
+            None => Vec::new(),
+        })
+        .collect();
     sh.specs = st.tenants.clone();
     sh.issue_order = st.issue_order.clone();
     sh.served = served;
+    sh.shed = shed;
     sh.epoch += 1;
     drop(sh);
     // Release the fence: the caller's `apply` returns, and everything it
@@ -528,6 +651,20 @@ fn scheduler_loop(
                         ))));
                         continue;
                     }
+                    // Overload protection: a bounded queue sheds at
+                    // arrival with a typed error — answered, not dropped,
+                    // and no unbounded memory behind a slow tenant.
+                    if let Some(cap) = st.slo.get(msg.tenant).and_then(|p| p.queue_cap) {
+                        let pending = st.batchers[msg.tenant].pending();
+                        if pending >= cap {
+                            let _ = msg.respond.send(Err(Error::Overloaded(format!(
+                                "tenant {}: queue full ({pending} pending, cap {cap})",
+                                st.tenants[msg.tenant].name
+                            ))));
+                            bump_shed(&shared, msg.tenant, 1);
+                            continue;
+                        }
+                    }
                     let id = next_id;
                     next_id += 1;
                     st.responders[msg.tenant].insert(id, msg.respond);
@@ -546,10 +683,32 @@ fn scheduler_loop(
             }
         }
 
-        // Issue ready batches in GACER order, bounded per tenant by its
-        // segment-derived quantum (leftovers go next round — the plan's
-        // pointer boundaries realized as issue-queue yields).
+        // Deadline shedding before the round issues: a request already
+        // past its per-request deadline is answered with the typed shed
+        // error instead of occupying issue capacity it cannot benefit
+        // from (late answers would only push the requests behind it past
+        // their own deadlines).
         let now = Instant::now();
+        for t in 0..st.batchers.len() {
+            let Some(dl) = st.slo.get(t).and_then(|p| p.deadline) else { continue };
+            let expired = st.batchers[t].expire(now, dl);
+            if expired.is_empty() {
+                continue;
+            }
+            bump_shed(&shared, t, expired.len());
+            for r in expired {
+                if let Some(tx) = st.responders[t].remove(&r.id) {
+                    let _ = tx.send(Err(Error::DeadlineExceeded(format!(
+                        "tenant {}: request queued past its {dl:?} deadline",
+                        st.tenants[t].name
+                    ))));
+                }
+            }
+        }
+
+        // Issue ready batches in (tier-major) GACER order, bounded per
+        // tenant by its segment-derived quantum (leftovers go next round —
+        // the plan's pointer boundaries realized as issue-queue yields).
         for i in 0..st.issue_order.len() {
             let t = st.issue_order[i];
             let quantum = st.issue_quanta.get(t).copied().unwrap_or(usize::MAX);
@@ -561,7 +720,7 @@ fn scheduler_loop(
                 bump_served(&shared, t, batch.len());
                 issue_batch(
                     &st.tenants[t], &st.variants[t], &params, &executor,
-                    &mut st.responders[t], variant, batch,
+                    &mut st.responders[t], variant, batch, &shared, t,
                 );
                 issued += 1;
             }
@@ -580,7 +739,7 @@ fn scheduler_loop(
                     bump_served(&shared, t, batch.len());
                     issue_batch(
                         &st.tenants[t], &st.variants[t], &params, &executor,
-                        &mut st.responders[t], variant, batch,
+                        &mut st.responders[t], variant, batch, &shared, t,
                     );
                 }
             }
@@ -590,7 +749,10 @@ fn scheduler_loop(
 }
 
 /// Execute one drained batch — possibly as GACER micro-batches — and
-/// distribute output rows to the requesters.
+/// distribute output rows to the requesters, recording each answered
+/// request's arrival→response latency into the tenant's shared buffer
+/// (the SLO observe feed).
+#[allow(clippy::too_many_arguments)]
 fn issue_batch(
     tenant: &TenantSpec,
     variants: &HashMap<usize, String>,
@@ -599,6 +761,8 @@ fn issue_batch(
     responders: &mut HashMap<u64, mpsc::Sender<Result<Vec<f32>>>>,
     variant: usize,
     batch: Vec<PendingRequest>,
+    shared: &RwLock<Shared>,
+    slot: usize,
 ) {
     let per_input = batch[0].input.len();
     // Spatial regulation on the real path: split into chunk-sized
@@ -623,12 +787,15 @@ fn issue_batch(
             Ok(outputs) => {
                 let out = &outputs[0];
                 let per_out = out.len() / v;
+                let mut latencies = Vec::with_capacity(piece.len());
                 for (i, r) in piece.iter().enumerate() {
                     if let Some(tx) = responders.remove(&r.id) {
                         let row = out[i * per_out..(i + 1) * per_out].to_vec();
                         let _ = tx.send(Ok(row));
+                        latencies.push(r.enqueued.elapsed().as_secs_f64() * 1e6);
                     }
                 }
+                record_latency(shared, slot, &latencies);
             }
             Err(e) => {
                 for r in piece {
@@ -690,6 +857,15 @@ pub struct ServeOptions {
     /// counts, and report (and hot-swap) the decision
     /// (`--migration-cost-aware`).
     pub cost_aware_migration: bool,
+    /// Per-tenant priority tiers, parallel to the tenant list (`--tier`).
+    /// Missing entries default to [`Tier::Standard`]. Any entry (or an
+    /// `slo_p99_ms`) switches SLO regulation on: issue order becomes
+    /// tier-major, batch tenants get bounded queues.
+    pub tiers: Vec<Tier>,
+    /// p99 latency target in milliseconds for Interactive tenants
+    /// (`--slo`). Attaches an [`crate::slo::SloTarget`] (tracked by the
+    /// engine's monitor) and a per-request deadline of 4x the target.
+    pub slo_p99_ms: Option<f64>,
 }
 
 impl Default for ServeOptions {
@@ -701,6 +877,8 @@ impl Default for ServeOptions {
             live_admit: None,
             replan_budget: SearchBudget::unbounded(),
             cost_aware_migration: false,
+            tiers: Vec::new(),
+            slo_p99_ms: None,
         }
     }
 }
@@ -739,12 +917,35 @@ pub fn serve_demo(
         .placement_objective(opts.objective)
         .replan_budget(opts.replan_budget)
         .artifacts(artifact_dir);
+    let slo_on = opts.slo_p99_ms.is_some() || !opts.tiers.is_empty();
     for (i, family) in tenant_models.iter().enumerate() {
-        builder = builder.serving_tenant(
-            format!("{family}-{i}"),
-            family,
-            BatchPolicy::new(8, Duration::from_millis(2), vec![1, 2, 4, 8, 16, 32]),
-        )?;
+        let batch_policy =
+            BatchPolicy::new(8, Duration::from_millis(2), vec![1, 2, 4, 8, 16, 32]);
+        if slo_on {
+            let tier = opts.tiers.get(i).copied().unwrap_or_default();
+            let mut slo = SloPolicy::new(tier);
+            let mut target = None;
+            if let Some(ms) = opts.slo_p99_ms {
+                match tier {
+                    Tier::Interactive => {
+                        slo = slo.with_deadline(Duration::from_micros((ms * 4e3) as u64));
+                        target = Some(crate::slo::SloTarget::p99_ms(ms));
+                    }
+                    Tier::Standard => {}
+                    Tier::Batch => slo = slo.with_queue_cap(64),
+                }
+            }
+            builder = builder.serving_tenant_with_slo(
+                format!("{family}-{i}"),
+                family,
+                batch_policy,
+                slo,
+                target,
+            )?;
+        } else {
+            builder =
+                builder.serving_tenant(format!("{family}-{i}"), family, batch_policy)?;
+        }
     }
     let mut engine = builder.build()?;
     let deployment = engine.sharded_deployment()?;
@@ -773,7 +974,13 @@ pub fn serve_demo(
             for i in 0..n_requests {
                 let x = demo_input(t, i);
                 let t0 = Instant::now();
-                let out = server.infer(t, x)?;
+                let out = match server.infer(t, x) {
+                    Ok(out) => out,
+                    // Typed sheds are the overload protocol working, not
+                    // a failure: the client backs off and moves on.
+                    Err(Error::Overloaded(_)) | Err(Error::DeadlineExceeded(_)) => continue,
+                    Err(e) => return Err(e),
+                };
                 hist.record(t0.elapsed());
                 if out.len() != 10 {
                     return Err(Error::InvalidData(format!(
@@ -882,6 +1089,24 @@ pub fn serve_demo(
     for (name, hist) in &report.per_tenant {
         println!("  tenant {name:<12} {}", hist.summary());
     }
+    if slo_on {
+        // Close the SLO observe loop once: shed accounting plus one
+        // monitor window over the server-observed latencies.
+        let shed = server.shed_counts();
+        println!("  shed per tenant slot: {shed:?}");
+        engine.record_latencies(&server.take_latencies())?;
+        for id in engine.tenant_ids() {
+            if let Some(p) = engine.slo_pressure(id) {
+                println!(
+                    "  {id} [{}] slo {}: burn fast {:.2} / slow {:.2}",
+                    p.tier,
+                    p.health.label(),
+                    p.burn_fast,
+                    p.burn_slow
+                );
+            }
+        }
+    }
     Ok(report)
 }
 
@@ -914,6 +1139,45 @@ mod tests {
         assert!(cfg.validate(2).is_err());
         let cfg = ServerConfig { issue_quanta: vec![1, 0], ..Default::default() };
         assert!(cfg.validate(2).is_err());
+    }
+
+    #[test]
+    fn slo_policies_validated() {
+        let cfg = ServerConfig {
+            slo: vec![SloPolicy::default(), SloPolicy::new(Tier::Batch).with_queue_cap(8)],
+            ..Default::default()
+        };
+        cfg.validate(2).unwrap();
+        // Arity mismatch.
+        assert!(cfg.validate(3).is_err());
+        // A zero queue cap sheds everything: rejected up front.
+        let cfg = ServerConfig {
+            slo: vec![SloPolicy::new(Tier::Batch).with_queue_cap(0)],
+            ..Default::default()
+        };
+        assert!(cfg.validate(1).is_err());
+        // Empty = SLO off, any tenant count.
+        ServerConfig::default().validate(5).unwrap();
+    }
+
+    #[test]
+    fn tiered_order_is_tier_major_and_stable_within_tiers() {
+        use crate::slo::Tier;
+        // Plan order 3,1,0,2; tiers: 0=batch 1=interactive 2=standard
+        // 3=batch. Tier-major: interactive (1), standard (2), then the
+        // batch tenants in their plan order (3 before 0).
+        let slo = vec![
+            SloPolicy::new(Tier::Batch),
+            SloPolicy::new(Tier::Interactive),
+            SloPolicy::new(Tier::Standard),
+            SloPolicy::new(Tier::Batch),
+        ];
+        assert_eq!(tiered_issue_order(&[3, 1, 0, 2], &slo), vec![1, 2, 3, 0]);
+        // No SLO: the plan order passes through untouched.
+        assert_eq!(tiered_issue_order(&[3, 1, 0, 2], &[]), vec![3, 1, 0, 2]);
+        // Uniform tiers: plan order preserved exactly (stable sort).
+        let uniform = vec![SloPolicy::default(); 4];
+        assert_eq!(tiered_issue_order(&[3, 1, 0, 2], &uniform), vec![3, 1, 0, 2]);
     }
 
     fn spec(name: &str) -> TenantSpec {

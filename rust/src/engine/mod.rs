@@ -99,7 +99,7 @@ mod migration;
 
 pub use migration::{Migration, MigrationCost, MigrationPolicy, MigrationProposal};
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::PathBuf;
 use std::time::Duration;
 
@@ -115,6 +115,7 @@ use crate::plan::{
 use crate::profile::{CostModel, Platform};
 use crate::runtime::ArtifactManifest;
 use crate::search::{SearchBudget, SearchConfig, SearchReport, SearchState, ShardedSearch};
+use crate::slo::{BurnConfig, SloMonitor, SloPolicy, SloPressure, SloTarget};
 
 /// Stable identifier of a deployed tenant (survives other tenants'
 /// evictions, unlike slot indices).
@@ -150,6 +151,13 @@ struct TenantMeta {
     /// operations loop via [`GacerEngine::record_requests`]); 0 until
     /// traffic is observed. Drives load-drift migration.
     demand: f64,
+    /// SLO scheduling contract lowered into the server config (tier
+    /// priority, deadline, queue cap). Defaults to
+    /// [`SloPolicy::default`] — regulation off for this tenant.
+    slo: SloPolicy,
+    /// Latency objective the [`SloMonitor`] judges this tenant against;
+    /// `None` = not SLO-tracked.
+    target: Option<SloTarget>,
 }
 
 fn default_policy() -> BatchPolicy {
@@ -193,6 +201,7 @@ pub struct EngineBuilder {
     tick: Duration,
     n_devices: usize,
     objective: PlacementObjective,
+    burn: BurnConfig,
     tenants: Vec<(Dfg, TenantMeta)>,
     next_id: u64,
 }
@@ -207,6 +216,7 @@ impl EngineBuilder {
             tick: Duration::from_micros(200),
             n_devices: 1,
             objective: PlacementObjective::default(),
+            burn: BurnConfig::default(),
             tenants: Vec::new(),
             next_id: 0,
         }
@@ -279,18 +289,54 @@ impl EngineBuilder {
         self
     }
 
-    fn push(&mut self, dfg: Dfg, family: Option<String>, policy: BatchPolicy) {
+    /// Burn-rate thresholds for the engine's [`SloMonitor`] (defaults to
+    /// [`BurnConfig::default`] — the classic fast/slow dual-window
+    /// page/warn pair). Validated at [`EngineBuilder::build`].
+    pub fn slo_burn(mut self, cfg: BurnConfig) -> Self {
+        self.burn = cfg;
+        self
+    }
+
+    fn push(
+        &mut self,
+        dfg: Dfg,
+        family: Option<String>,
+        policy: BatchPolicy,
+        slo: SloPolicy,
+        target: Option<SloTarget>,
+    ) {
         let id = TenantId(self.next_id);
         self.next_id += 1;
         let name = dfg.name.clone();
-        self.tenants
-            .push((dfg, TenantMeta { id, name, family, policy, demand: 0.0 }));
+        self.tenants.push((
+            dfg,
+            TenantMeta { id, name, family, policy, demand: 0.0, slo, target },
+        ));
     }
 
     /// Add a simulation/search tenant (no serving artifacts).
     pub fn tenant(mut self, dfg: Dfg) -> Self {
-        self.push(dfg, None, default_policy());
+        self.push(dfg, None, default_policy(), SloPolicy::default(), None);
         self
+    }
+
+    /// Add a simulation/search tenant with an SLO contract. `target`,
+    /// when set, registers the tenant with the engine's [`SloMonitor`]
+    /// so [`GacerEngine::record_latencies`] feeds its error-budget burn
+    /// and [`GacerEngine::maybe_regulate`] reacts to sustained burn —
+    /// the decision half of the SLO loop, no artifacts required.
+    pub fn tenant_with_slo(
+        mut self,
+        dfg: Dfg,
+        slo: SloPolicy,
+        target: Option<SloTarget>,
+    ) -> Result<Self> {
+        slo.validate()?;
+        if let Some(t) = &target {
+            t.validate()?;
+        }
+        self.push(dfg, None, default_policy(), slo, target);
+        Ok(self)
     }
 
     /// Add a serving tenant of an artifact `family`: the engine searches
@@ -302,10 +348,36 @@ impl EngineBuilder {
         family: &str,
         policy: BatchPolicy,
     ) -> Result<Self> {
+        self.serving_tenant_with_slo(
+            name,
+            family,
+            policy,
+            SloPolicy::default(),
+            None,
+        )
+    }
+
+    /// Add a serving tenant with an SLO contract: `slo` lowers into the
+    /// scheduler (tier-priority issue order, deadline shedding, queue
+    /// cap) and `target`, when set, registers the tenant with the
+    /// engine's [`SloMonitor`] so [`GacerEngine::record_latencies`]
+    /// feeds its error-budget burn rate.
+    pub fn serving_tenant_with_slo(
+        mut self,
+        name: impl Into<String>,
+        family: &str,
+        policy: BatchPolicy,
+        slo: SloPolicy,
+        target: Option<SloTarget>,
+    ) -> Result<Self> {
+        slo.validate()?;
+        if let Some(t) = &target {
+            t.validate()?;
+        }
         let mut dfg = zoo::serving_proxy(family, policy.max_batch)
             .ok_or_else(|| Error::UnknownModel(format!("serving family {family}")))?;
         dfg.name = name.into();
-        self.push(dfg, Some(family.to_string()), policy);
+        self.push(dfg, Some(family.to_string()), policy, slo, target);
         Ok(self)
     }
 
@@ -316,6 +388,7 @@ impl EngineBuilder {
             Some(dir) => Some(ArtifactManifest::load(dir.join("manifest.json"))?),
             None => None,
         };
+        self.burn.validate()?;
         let n_devices = self.n_devices;
         let empty = Placement::from_assignments(vec![Vec::new(); n_devices]);
         let mut engine = GacerEngine {
@@ -339,11 +412,17 @@ impl EngineBuilder {
             last_searched_devices: Vec::new(),
             served_window: crate::metrics::DemandWindow::new(),
             cooldowns: Vec::new(),
+            slo_monitor: SloMonitor::new(self.burn),
+            pending_baseline_seed: BTreeSet::new(),
+            evicted_serving: Vec::new(),
             artifact_dir: self.artifact_dir,
             manifest,
         };
         for (dfg, meta) in self.tenants {
             engine.check_admissible(&dfg, meta.family.as_deref())?;
+            if let Some(t) = meta.target {
+                engine.slo_monitor.track(meta.id.0, meta.slo.tier, t)?;
+            }
             engine.set.admit(dfg);
             engine.meta.push(meta);
         }
@@ -406,6 +485,22 @@ pub struct GacerEngine {
     /// it left is suppressed. Aged by one window per
     /// [`GacerEngine::maybe_migrate`] consultation.
     cooldowns: Vec<Cooldown>,
+    /// Error-budget burn monitor over SLO-tracked tenants, keyed by
+    /// stable id. Fed by [`GacerEngine::record_latencies`], read by
+    /// [`GacerEngine::slo_pressure`] and the admission gate, and acted
+    /// on by [`GacerEngine::maybe_regulate`].
+    slo_monitor: SloMonitor,
+    /// Tenant ids whose served-counter baseline must be seeded at the
+    /// next [`GacerEngine::record_served`]: a readmitted serving tenant
+    /// inherits its predecessor's cumulative server counter (the server
+    /// matches counters by name/family across hot swaps), and none of
+    /// that history belongs to the new tenant.
+    pending_baseline_seed: BTreeSet<u64>,
+    /// `(name, family)` of recently evicted serving tenants — how
+    /// [`GacerEngine::admit_with`] recognizes an evict→readmit of the
+    /// same serving identity. Bounded at `EVICTED_SERVING_MEMORY`
+    /// entries (oldest dropped).
+    evicted_serving: Vec<(String, String)>,
     artifact_dir: Option<PathBuf>,
     manifest: Option<ArtifactManifest>,
 }
@@ -580,7 +675,7 @@ impl GacerEngine {
     /// starts at the deployment's pointer level, Algorithm 1 resumes from
     /// there).
     pub fn admit(&mut self, dfg: Dfg) -> Result<TenantId> {
-        self.admit_with(dfg, None, default_policy())
+        self.admit_with(dfg, None, default_policy(), SloPolicy::default(), None)
     }
 
     /// Admit a serving tenant of an artifact family at runtime.
@@ -590,10 +685,34 @@ impl GacerEngine {
         family: &str,
         policy: BatchPolicy,
     ) -> Result<TenantId> {
+        self.admit_serving_with_slo(
+            name,
+            family,
+            policy,
+            SloPolicy::default(),
+            None,
+        )
+    }
+
+    /// Admit a serving tenant with an SLO contract at runtime — the
+    /// runtime counterpart of [`EngineBuilder::serving_tenant_with_slo`].
+    /// Subject to SLO admission control: while any tracked tenant of a
+    /// strictly higher [`crate::slo::Tier`] is burning its error budget,
+    /// the newcomer is refused with [`Error::Overloaded`] — capacity
+    /// under pressure goes to the tiers already struggling, not to new
+    /// load.
+    pub fn admit_serving_with_slo(
+        &mut self,
+        name: impl Into<String>,
+        family: &str,
+        policy: BatchPolicy,
+        slo: SloPolicy,
+        target: Option<SloTarget>,
+    ) -> Result<TenantId> {
         let mut dfg = zoo::serving_proxy(family, policy.max_batch)
             .ok_or_else(|| Error::UnknownModel(format!("serving family {family}")))?;
         dfg.name = name.into();
-        self.admit_with(dfg, Some(family.to_string()), policy)
+        self.admit_with(dfg, Some(family.to_string()), policy, slo, target)
     }
 
     /// Cross-device admission control: place the newcomer per the
@@ -609,12 +728,42 @@ impl GacerEngine {
         dfg: Dfg,
         family: Option<String>,
         policy: BatchPolicy,
+        slo: SloPolicy,
+        target: Option<SloTarget>,
     ) -> Result<TenantId> {
+        slo.validate()?;
         self.check_admissible(&dfg, family.as_deref())?;
+        // SLO admission control: a burning higher tier keeps its
+        // headroom — lower-or-equal tiers wait until the burn clears.
+        if self.slo_monitor.any_burning_above(slo.tier) {
+            return Err(Error::Overloaded(format!(
+                "admission of {:?} (tier {}) refused: a higher tier is \
+                 burning its error budget",
+                dfg.name, slo.tier
+            )));
+        }
         let id = TenantId(self.next_id);
         self.next_id += 1;
         let name = dfg.name.clone();
         let dfg_len = dfg.len();
+        // Evict→readmit of the same serving identity: the server-side
+        // cumulative counter (matched by name/family across hot swaps)
+        // survives the churn, but its history belongs to the evicted
+        // tenant. Seed the new id's baseline at the next record_served
+        // so only post-readmission increments count as its demand.
+        if let Some(f) = &family {
+            if let Some(pos) = self
+                .evicted_serving
+                .iter()
+                .position(|(n, ef)| n == &name && ef == f)
+            {
+                self.evicted_serving.remove(pos);
+                self.pending_baseline_seed.insert(id.0);
+            }
+        }
+        if let Some(t) = target {
+            self.slo_monitor.track(id.0, slo.tier, t)?;
+        }
         let device = match self.objective {
             PlacementObjective::LoadBalance => self.sharded.placement.least_loaded(&self.set),
             PlacementObjective::InterferenceAware => {
@@ -623,7 +772,8 @@ impl GacerEngine {
         };
         let slot = self.set.len();
         self.set.admit(dfg);
-        self.meta.push(TenantMeta { id, name, family, policy, demand: 0.0 });
+        self.meta
+            .push(TenantMeta { id, name, family, policy, demand: 0.0, slo, target });
         self.sharded.placement.assign(slot, device);
         // The newcomer lands at the end of the device's local order (its
         // global slot is the largest), so push_tenant's slot matches.
@@ -643,7 +793,19 @@ impl GacerEngine {
             .placement
             .locate(idx)
             .ok_or_else(|| Error::InvalidPlan(format!("tenant {id} has no device")))?;
-        self.meta.remove(idx);
+        let meta = self.meta.remove(idx);
+        // Remember the serving identity so a readmission under the same
+        // name/family gets its served-counter baseline seeded (the
+        // server's cumulative counter survives the churn).
+        if let Some(f) = meta.family {
+            self.evicted_serving.push((meta.name, f));
+            if self.evicted_serving.len() > EVICTED_SERVING_MEMORY {
+                self.evicted_serving.remove(0);
+            }
+        }
+        self.slo_monitor.forget(id.0);
+        self.served_window.forget(id.0);
+        self.pending_baseline_seed.remove(&id.0);
         let dfg = self.set.evict(idx);
         self.sharded.placement.remove_slot(idx);
         self.sharded.shards[device].remove_tenant(local);
@@ -819,7 +981,7 @@ impl GacerEngine {
             .collect()
     }
 
-    fn serving_specs(&self) -> Result<Vec<(String, String, BatchPolicy)>> {
+    fn serving_specs(&self) -> Result<Vec<(String, String, BatchPolicy, SloPolicy)>> {
         self.meta
             .iter()
             .map(|m| {
@@ -834,6 +996,7 @@ impl GacerEngine {
                             ))
                         })?,
                     m.policy.clone(),
+                    m.slo.clone(),
                 ))
             })
             .collect()
@@ -1013,6 +1176,16 @@ impl GacerEngine {
             )));
         }
         let keys: Vec<u64> = self.meta.iter().map(|m| m.id.0).collect();
+        // Readmitted serving identities inherit their predecessor's
+        // cumulative counter: seed their baseline at the current value so
+        // this window attributes none of the inherited history to them.
+        if !self.pending_baseline_seed.is_empty() {
+            for (idx, key) in keys.iter().enumerate() {
+                if self.pending_baseline_seed.remove(key) {
+                    self.served_window.seed(*key, counts[idx]);
+                }
+            }
+        }
         for (idx, d) in self.served_window.delta(&keys, counts).into_iter().enumerate() {
             self.meta[idx].demand += d as f64;
         }
@@ -1026,6 +1199,50 @@ impl GacerEngine {
         for m in &mut self.meta {
             m.demand = 0.0;
         }
+    }
+
+    // ---- SLO observation ----
+
+    /// Close one SLO observe window: feed each tenant's latency samples
+    /// (microseconds, in current slot order — what
+    /// [`crate::coordinator::Server::take_latencies`] /
+    /// [`crate::coordinator::ClusterServer::take_latencies`] drain) into
+    /// the engine's [`SloMonitor`]. Tenants without an [`SloTarget`] are
+    /// ignored by the monitor, so the full cluster drain can be fed
+    /// unfiltered. The operations loop calls this beside
+    /// [`GacerEngine::record_served`] once per observe window.
+    pub fn record_latencies(&mut self, samples: &[Vec<f64>]) -> Result<()> {
+        if samples.len() != self.len() {
+            return Err(Error::InvalidConfig(format!(
+                "{} latency buffers for {} tenants",
+                samples.len(),
+                self.len()
+            )));
+        }
+        for (m, s) in self.meta.iter().zip(samples) {
+            self.slo_monitor.observe(m.id.0, s);
+        }
+        Ok(())
+    }
+
+    /// The current burn-rate verdict for one tenant, or `None` when the
+    /// tenant carries no [`SloTarget`] (or the id is unknown).
+    pub fn slo_pressure(&self, id: TenantId) -> Option<SloPressure> {
+        self.slo_monitor.pressure(id.0)
+    }
+
+    /// Every SLO-tracked tenant's pressure, keyed by stable id.
+    pub fn slo_pressures(&self) -> Vec<(TenantId, SloPressure)> {
+        self.slo_monitor
+            .pressures()
+            .into_iter()
+            .map(|(k, p)| (TenantId(k), p))
+            .collect()
+    }
+
+    /// The engine's error-budget monitor (read-only introspection).
+    pub fn slo_monitor(&self) -> &SloMonitor {
+        &self.slo_monitor
     }
 
     /// Per-tenant observed load weights, in slot order: observed demand
@@ -1255,7 +1472,98 @@ impl GacerEngine {
         }
         Ok(Some(Migration { tenant: id, from: proposal.from, to: proposal.to }))
     }
+
+    /// The SLO-aware regulation step: treat **sustained** error-budget
+    /// burn as a placement problem before falling back to load-drift
+    /// migration.
+    ///
+    /// A tenant that has been paging for at least
+    /// [`BurnConfig::sustained_page_windows`] consecutive windows (the
+    /// highest tier / longest streak first) is acted on directly:
+    ///
+    /// * sharing its device with other tenants on a multi-device engine —
+    ///   **migrate** it to the least-loaded other device (two-shard
+    ///   seeded re-search, like [`GacerEngine::migrate`]);
+    /// * alone on its device, or single-device engine — **re-search its
+    ///   shard** seeded with the current plan, letting the
+    ///   granularity-aware search re-cut the schedule around the observed
+    ///   pressure.
+    ///
+    /// After acting, the tenant's burn history restarts so the follow-up
+    /// windows judge the *new* plan on fresh evidence (one sustained burn
+    /// triggers one action, not one per window). With no sustained burn
+    /// the call degrades to exactly [`GacerEngine::maybe_migrate`].
+    /// Pair with [`GacerEngine::redeploy_cluster`] to make the action
+    /// live.
+    pub fn maybe_regulate(
+        &mut self,
+        policy: &MigrationPolicy,
+    ) -> Result<Option<RegulationAction>> {
+        let needed = self.slo_monitor.config().sustained_page_windows;
+        let burning = self
+            .slo_monitor
+            .pressures()
+            .into_iter()
+            .filter(|(_, p)| p.page_streak >= needed)
+            .max_by_key(|&(_, p)| (p.tier.priority(), p.page_streak));
+        let Some((key, _)) = burning else {
+            return self
+                .maybe_migrate(policy)
+                .map(|m| m.map(RegulationAction::Migrated));
+        };
+        let id = TenantId(key);
+        let slot = self.index_of(id)?;
+        let from = self
+            .sharded
+            .placement
+            .device_of(slot)
+            .ok_or_else(|| Error::InvalidPlan(format!("tenant {id} has no device")))?;
+        let crowded = self.sharded.placement.tenants_on(from).len() > 1;
+        let action = if self.n_devices > 1 && crowded {
+            let loads = self.observed_device_loads();
+            let to = (0..self.n_devices)
+                .filter(|&d| d != from)
+                .min_by(|&a, &b| {
+                    loads[a]
+                        .partial_cmp(&loads[b])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .expect("n_devices > 1 leaves at least one other device");
+            self.migrate(id, to)?;
+            RegulationAction::Migrated(Migration { tenant: id, from, to })
+        } else {
+            self.research_shard(from)?;
+            RegulationAction::Resharded { device: from }
+        };
+        // Restart the acted-on tenant's burn history: the new plan gets a
+        // clean slate, so one sustained burn triggers one action.
+        if let Some(t) = self.meta[slot].target {
+            let tier = self.meta[slot].slo.tier;
+            self.slo_monitor.track(key, tier, t)?;
+        }
+        Ok(Some(action))
+    }
 }
+
+/// The action [`GacerEngine::maybe_regulate`] executed in response to
+/// sustained error-budget burn (or plain load drift).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegulationAction {
+    /// A tenant moved between devices (sustained burn on a shared
+    /// device, or a load-drift proposal from the fallback
+    /// [`GacerEngine::maybe_migrate`] path).
+    Migrated(Migration),
+    /// The burning tenant's shard was incrementally re-searched in place
+    /// (it was alone on its device, or the engine is single-device).
+    Resharded {
+        /// The re-searched device.
+        device: usize,
+    },
+}
+
+/// How many evicted serving identities the engine remembers for
+/// evict→readmit served-counter seeding (oldest entries are dropped).
+const EVICTED_SERVING_MEMORY: usize = 64;
 
 /// Max consecutive batches per scheduling round for a single-segment
 /// tenant; tenants with finer temporal granularity get proportionally
@@ -1274,11 +1582,16 @@ const BASE_ISSUE_QUANTUM: usize = 4;
 ///   the search decided must synchronize most often;
 /// * **pointer matrix → issue quanta**: per-round batch caps shrink as a
 ///   tenant's segment count grows (segment boundaries realized as issue-
-///   queue yields).
+///   queue yields);
+/// * **SLO contracts → [`ServerConfig::slo`]**: per-tenant
+///   [`SloPolicy`]s reach the scheduler (tier-major issue order,
+///   deadline shedding, queue caps) — but only when at least one tenant
+///   carries a non-default policy, so an SLO-free deployment lowers to
+///   the exact pre-SLO configuration (hot-swap diffs stay clean).
 pub fn lower_plan(
     plan: &DeploymentPlan,
     tenants: &[Dfg],
-    specs: &[(String, String, BatchPolicy)],
+    specs: &[(String, String, BatchPolicy, SloPolicy)],
     variants: &[Vec<usize>],
     tick: Duration,
 ) -> Result<Deployment> {
@@ -1293,7 +1606,7 @@ pub fn lower_plan(
     }
 
     let mut tenant_specs = Vec::with_capacity(n);
-    for (i, (name, family, policy)) in specs.iter().enumerate() {
+    for (i, (name, family, policy, _slo)) in specs.iter().enumerate() {
         let chunk = modal_chunk(&plan.chunking[i]).and_then(|m| {
             let mut avail = variants[i].clone();
             avail.sort_unstable();
@@ -1321,7 +1634,13 @@ pub fn lower_plan(
         .map(|i| (BASE_ISSUE_QUANTUM / plan.pointers.segments(i)).max(1))
         .collect();
 
-    let config = ServerConfig { tick, issue_order, issue_quanta };
+    let slo: Vec<SloPolicy> = if specs.iter().any(|s| s.3 != SloPolicy::default()) {
+        specs.iter().map(|s| s.3.clone()).collect()
+    } else {
+        Vec::new()
+    };
+
+    let config = ServerConfig { tick, issue_order, issue_quanta, slo };
     config.validate(n)?;
     Ok(Deployment { tenants: tenant_specs, config })
 }
@@ -1798,9 +2117,16 @@ mod tests {
         tenants: &[Dfg],
         variants: Vec<Vec<usize>>,
     ) -> Deployment {
-        let specs: Vec<(String, String, BatchPolicy)> = tenants
+        let specs: Vec<(String, String, BatchPolicy, SloPolicy)> = tenants
             .iter()
-            .map(|d| (d.name.clone(), "tiny_cnn".to_string(), default_policy()))
+            .map(|d| {
+                (
+                    d.name.clone(),
+                    "tiny_cnn".to_string(),
+                    default_policy(),
+                    SloPolicy::default(),
+                )
+            })
             .collect();
         lower_plan(plan, tenants, &specs, &variants, Duration::from_micros(200))
             .unwrap()
@@ -1850,8 +2176,12 @@ mod tests {
     fn lowering_rejects_invalid_plans() {
         let tenants = zoo::build_combo(&["Alex"]);
         let plan = DeploymentPlan::unregulated(2); // tenant-count mismatch
-        let specs =
-            vec![("a".to_string(), "tiny_cnn".to_string(), default_policy())];
+        let specs = vec![(
+            "a".to_string(),
+            "tiny_cnn".to_string(),
+            default_policy(),
+            SloPolicy::default(),
+        )];
         let err = lower_plan(
             &plan,
             &tenants,
@@ -1860,6 +2190,189 @@ mod tests {
             Duration::from_micros(200),
         );
         assert!(matches!(err, Err(Error::InvalidPlan(_))));
+    }
+
+    #[test]
+    fn lowering_emits_slo_policies_only_when_regulating() {
+        let tenants = zoo::build_combo(&["Alex", "V16"]);
+        let plan = DeploymentPlan::unregulated(2);
+        let mut specs: Vec<(String, String, BatchPolicy, SloPolicy)> = tenants
+            .iter()
+            .map(|d| {
+                (
+                    d.name.clone(),
+                    "tiny_cnn".to_string(),
+                    default_policy(),
+                    SloPolicy::default(),
+                )
+            })
+            .collect();
+        let variants = vec![vec![8], vec![8]];
+        let d =
+            lower_plan(&plan, &tenants, &specs, &variants, Duration::from_micros(200))
+                .unwrap();
+        assert!(
+            d.config.slo.is_empty(),
+            "all-default policies lower to regulation off (pre-SLO config)"
+        );
+        specs[0].3 = SloPolicy::new(crate::slo::Tier::Interactive);
+        let d =
+            lower_plan(&plan, &tenants, &specs, &variants, Duration::from_micros(200))
+                .unwrap();
+        assert_eq!(d.config.slo.len(), 2, "one non-default policy lowers all");
+        assert_eq!(d.config.slo[0].tier, crate::slo::Tier::Interactive);
+    }
+
+    // ---- SLO regulation ----
+
+    #[test]
+    fn admission_gate_rejects_lower_tiers_while_higher_burns() {
+        use crate::slo::{SloHealth, Tier};
+        let mut engine = GacerEngine::builder()
+            .search(quick_cfg())
+            .serving_tenant_with_slo(
+                "hi",
+                "tiny_cnn",
+                default_policy(),
+                SloPolicy::new(Tier::Interactive),
+                Some(SloTarget::p99_ms(1.0)),
+            )
+            .unwrap()
+            .build()
+            .unwrap();
+        let id = engine.tenant_ids()[0];
+        // Healthy monitor: admission at any tier is open.
+        engine
+            .admit_serving_with_slo(
+                "lo",
+                "tiny_cnn",
+                default_policy(),
+                SloPolicy::new(Tier::Batch),
+                None,
+            )
+            .unwrap();
+        // Every request in the window blows the 1ms target: instant Page.
+        let hot = vec![5_000.0; 100];
+        engine.record_latencies(&[hot, Vec::new()]).unwrap();
+        assert_eq!(engine.slo_pressure(id).unwrap().health, SloHealth::Page);
+        // A lower tier is refused while Interactive burns...
+        let err = engine.admit_serving_with_slo(
+            "lo2",
+            "tiny_cnn",
+            default_policy(),
+            SloPolicy::new(Tier::Batch),
+            None,
+        );
+        assert!(matches!(err, Err(Error::Overloaded(_))));
+        // ...but a peer tier is not (Interactive does not outrank itself).
+        engine
+            .admit_serving_with_slo(
+                "hi2",
+                "tiny_cnn",
+                default_policy(),
+                SloPolicy::new(Tier::Interactive),
+                None,
+            )
+            .unwrap();
+        assert_eq!(engine.len(), 3);
+    }
+
+    #[test]
+    fn sustained_burn_triggers_regulation_once() {
+        use crate::slo::Tier;
+        let mut engine = GacerEngine::builder()
+            .devices(2)
+            .search(quick_cfg())
+            .serving_tenant_with_slo(
+                "a",
+                "tiny_cnn",
+                default_policy(),
+                SloPolicy::new(Tier::Interactive),
+                Some(SloTarget::p99_ms(1.0)),
+            )
+            .unwrap()
+            .serving_tenant("b", "tiny_cnn", default_policy())
+            .unwrap()
+            .serving_tenant("c", "tiny_cnn", default_policy())
+            .unwrap()
+            .build()
+            .unwrap();
+        let id = engine.tenant_ids()[0];
+        let from = engine.device_of(id).unwrap();
+        // No burn, no skew: nothing to regulate.
+        let policy = MigrationPolicy::default();
+        assert!(engine.maybe_regulate(&policy).unwrap().is_none());
+        // Page for `sustained_page_windows` consecutive windows.
+        let needed = engine.slo_monitor().config().sustained_page_windows;
+        for _ in 0..needed {
+            let samples =
+                vec![vec![5_000.0; 100], Vec::new(), Vec::new()];
+            engine.record_latencies(&samples).unwrap();
+        }
+        let action = engine
+            .maybe_regulate(&policy)
+            .unwrap()
+            .expect("sustained burn must trigger an action");
+        match action {
+            RegulationAction::Migrated(m) => {
+                assert_eq!(m.tenant, id);
+                assert_eq!(m.from, from);
+                assert_eq!(engine.device_of(id).unwrap(), m.to);
+            }
+            RegulationAction::Resharded { device } => assert_eq!(device, from),
+        }
+        engine.sharded_plan().validate(engine.tenants()).unwrap();
+        // The burn history restarted with the action: the next consult
+        // has no sustained page streak (and no demand skew) to act on.
+        assert!(engine.maybe_regulate(&policy).unwrap().is_none());
+    }
+
+    #[test]
+    fn evict_then_readmit_reseeds_served_baseline() {
+        let mut engine = GacerEngine::builder()
+            .search(quick_cfg())
+            .serving_tenant("t0", "tiny_cnn", default_policy())
+            .unwrap()
+            .serving_tenant("t1", "tiny_cnn", default_policy())
+            .unwrap()
+            .build()
+            .unwrap();
+        let ids = engine.tenant_ids();
+        engine.record_served(&[10, 4]).unwrap();
+        engine.evict(ids[0]).unwrap();
+        // Readmit the same serving identity: on the server, t0's
+        // cumulative counter survived the churn (claimed by name/family
+        // across the hot swaps) — the engine must not bill the new
+        // tenant for the evicted tenant's history.
+        let id2 = engine
+            .admit_serving("t0", "tiny_cnn", default_policy())
+            .unwrap();
+        assert_eq!(engine.tenant_ids(), vec![ids[1], id2]);
+        // First window after readmission: t1 went 4 -> 6, t0's inherited
+        // counter reads 12. Seeding pins t0's baseline at 12.
+        engine.record_served(&[6, 12]).unwrap();
+        assert_eq!(
+            engine.meta.iter().map(|m| m.demand).collect::<Vec<_>>(),
+            vec![6.0, 0.0],
+            "inherited history must not count as the new tenant's demand"
+        );
+        // From here increments attribute normally.
+        engine.record_served(&[6, 15]).unwrap();
+        assert_eq!(
+            engine.meta.iter().map(|m| m.demand).collect::<Vec<_>>(),
+            vec![6.0, 3.0]
+        );
+    }
+
+    #[test]
+    fn record_latencies_checks_arity() {
+        let mut engine = demo_engine(&["Alex", "R18"]);
+        assert!(engine.record_latencies(&[Vec::new()]).is_err());
+        engine.record_latencies(&[Vec::new(), Vec::new()]).unwrap();
+        // Untracked tenants never acquire pressure.
+        let ids = engine.tenant_ids();
+        assert!(engine.slo_pressure(ids[0]).is_none());
+        assert!(engine.slo_pressures().is_empty());
     }
 
     #[test]

@@ -39,6 +39,17 @@ pub enum Error {
     Backend(String),
     /// A coordinator channel closed: the named component stopped.
     ChannelClosed(&'static str),
+    /// A request was shed by overload protection: the tenant's bounded
+    /// queue ([`crate::slo::SloPolicy::queue_cap`]) was full at arrival,
+    /// or SLO admission control refused a new tenant while a higher
+    /// [`crate::slo::Tier`] was burning its error budget. The request
+    /// was answered, not dropped — clients can back off and retry.
+    Overloaded(String),
+    /// A request was shed because its per-request deadline
+    /// ([`crate::slo::SloPolicy::deadline`]) expired while it was still
+    /// queued: answering it late would only burn budget for the requests
+    /// behind it.
+    DeadlineExceeded(String),
     /// Filesystem failure (artifact/param loading, spawn).
     Io(std::io::Error),
 }
@@ -59,6 +70,8 @@ impl fmt::Display for Error {
             Error::InvalidData(m) => write!(f, "invalid data: {m}"),
             Error::Backend(m) => write!(f, "backend: {m}"),
             Error::ChannelClosed(who) => write!(f, "{who} stopped"),
+            Error::Overloaded(m) => write!(f, "overloaded: {m}"),
+            Error::DeadlineExceeded(m) => write!(f, "deadline exceeded: {m}"),
             Error::Io(e) => write!(f, "io: {e}"),
         }
     }
@@ -103,6 +116,16 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: Error = io.into();
         assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn shed_errors_are_matchable_and_descriptive() {
+        let e = Error::Overloaded("tenant a: queue full (cap 8)".into());
+        assert!(matches!(e, Error::Overloaded(_)));
+        assert!(e.to_string().contains("overloaded"));
+        let e = Error::DeadlineExceeded("tenant a: queued past 5ms deadline".into());
+        assert!(matches!(e, Error::DeadlineExceeded(_)));
+        assert!(e.to_string().contains("deadline exceeded"));
     }
 
     #[test]

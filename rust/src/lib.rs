@@ -25,8 +25,13 @@
 //! [`engine::Deployment`] → [`coordinator::Server`]. Deployments are
 //! **live**: re-searched plans hot-swap into running servers
 //! ([`engine::GacerEngine::redeploy_cluster`], epoch-fenced — no
-//! restart), and an [`engine::MigrationPolicy`] moves tenants between
-//! devices when observed load drifts. See `DESIGN.md` for the layer map
+//! restart), an [`engine::MigrationPolicy`] moves tenants between
+//! devices when observed load drifts, and the [`slo`] subsystem turns
+//! per-tenant latency into regulation pressure: priority [`slo::Tier`]s
+//! issue first, deadline-expired or over-cap requests are shed with
+//! typed errors, and an [`slo::SloMonitor`] tracks error-budget burn
+//! rate so sustained burn triggers migration/re-search
+//! ([`engine::GacerEngine::maybe_regulate`]). See `DESIGN.md` for the layer map
 //! and the engine↔server lowering contract, `docs/OPERATIONS.md` for the
 //! serving lifecycle (mirrored by `examples/live_redeploy.rs`), and
 //! `docs/TUTORIAL.md` for an end-to-end walkthrough (mirrored by
@@ -46,6 +51,7 @@ pub mod plan;
 pub mod profile;
 pub mod runtime;
 pub mod search;
+pub mod slo;
 pub mod spatial;
 pub mod temporal;
 pub mod util;
@@ -60,7 +66,8 @@ pub mod prelude {
     pub use crate::dfg::{Dfg, OpId, OpKind, Operator};
     pub use crate::engine::{
         Deployment, EngineBuilder, GacerEngine, Migration, MigrationCost,
-        MigrationPolicy, MigrationProposal, ShardedDeployment, TenantId,
+        MigrationPolicy, MigrationProposal, RegulationAction, ShardedDeployment,
+        TenantId,
     };
     pub use crate::error::{Error, Result};
     pub use crate::gpu::{GpuSim, SimOutcome, SimOptions};
@@ -72,6 +79,9 @@ pub mod prelude {
     pub use crate::search::{
         GacerSearch, SearchBudget, SearchConfig, SearchReport, SearchState,
         ShardedSearch, ShardedSearchReport,
+    };
+    pub use crate::slo::{
+        BurnConfig, SloHealth, SloMonitor, SloPolicy, SloPressure, SloTarget, Tier,
     };
     pub use crate::spatial::SpatialRegulator;
     pub use crate::temporal::PointerMatrix;

@@ -9,6 +9,7 @@
 //!   gacer serve    [--artifacts artifacts] [--requests 64] [--tenants tiny_cnn,...] [--devices 1]
 //!                  [--placement balanced|interference] [--live-admit tiny_cnn]
 //!                  [--replan-budget-ms N] [--migration-cost-aware]
+//!                  [--tier interactive,batch,...] [--slo MS]
 //!
 //! `--devices N` gives the deployment a device dimension: tenants are
 //! placed across N devices (cost-model bin-packing), each device gets its
@@ -39,6 +40,7 @@ const USAGE: &str = "usage: gacer <simulate|search|serve> [options]
   serve    --artifacts artifacts --requests 64 --tenants tiny_cnn,tiny_cnn,tiny_cnn --devices 1
            [--placement balanced|interference] [--live-admit tiny_cnn]
            [--replan-budget-ms N] [--migration-cost-aware]
+           [--tier interactive,batch,...] [--slo MS]
 
   --devices N   shard the deployment across N devices: tenants are placed
                 by cost-model bin-packing, each device is searched
@@ -64,7 +66,18 @@ const USAGE: &str = "usage: gacer <simulate|search|serve> [options]
                 under `serve`: after serving, consult a cost/gain-aware
                 migration policy priced from the engine's observed re-plan
                 telemetry (a move must pay for its re-plan + swap pause)
-                and hot-swap the decision in";
+                and hot-swap the decision in
+  --tier interactive,standard,batch
+                under `serve`: per-tenant SLO tier, comma list parallel to
+                --tenants (missing entries default to standard). Higher
+                tiers issue first each scheduling round; see docs/SLO.md
+  --slo MS
+                under `serve`: p99 latency target in milliseconds for
+                interactive-tier tenants. Interactive tenants get the
+                target plus a 4xMS per-request deadline (late requests are
+                shed with a typed error), batch tenants get a bounded
+                queue, and the engine reports per-tenant error-budget
+                burn after serving";
 
 fn parse_models(s: &str) -> Vec<String> {
     s.split(',').map(|m| m.trim().to_string()).collect()
@@ -82,6 +95,32 @@ fn placement_or_exit(name: &str) -> PlacementObjective {
         eprintln!("unknown placement objective {name}; expected balanced|interference");
         std::process::exit(2);
     })
+}
+
+/// `--tier interactive,standard,batch` — a comma list parallel to
+/// `--tenants` (unknown names abort; absent = no tiers).
+fn parse_tiers(s: Option<&str>) -> Vec<gacer::slo::Tier> {
+    let Some(s) = s else { return Vec::new() };
+    s.split(',')
+        .map(|t| {
+            gacer::slo::Tier::parse(t.trim()).unwrap_or_else(|| {
+                eprintln!("unknown tier {t:?}; expected interactive|standard|batch");
+                std::process::exit(2);
+            })
+        })
+        .collect()
+}
+
+/// `--slo MS` — p99 target in milliseconds (absent = no SLO target).
+fn parse_slo_ms(s: Option<&str>) -> Option<f64> {
+    let s = s?;
+    match s.parse::<f64>() {
+        Ok(ms) if ms.is_finite() && ms > 0.0 => Some(ms),
+        _ => {
+            eprintln!("--slo expects a positive latency in milliseconds, got {s:?}");
+            std::process::exit(2);
+        }
+    }
 }
 
 /// `--replan-budget-ms N` (0 or absent = unbounded).
@@ -206,6 +245,8 @@ fn main() -> gacer::Result<()> {
                 live_admit: args.opt("live-admit").map(String::from),
                 replan_budget: replan_budget(&args),
                 cost_aware_migration: args.flag("migration-cost-aware"),
+                tiers: parse_tiers(args.opt("tier")),
+                slo_p99_ms: parse_slo_ms(args.opt("slo")),
             };
             gacer::coordinator::serve_demo(&artifacts, &tenants, &opts)?;
         }

@@ -96,14 +96,30 @@ impl DemandWindow {
     pub fn forget(&mut self, key: u64) {
         self.last.remove(&key);
     }
+
+    /// Set a key's baseline explicitly: the key's next delta counts only
+    /// requests *beyond* `cumulative`. The mirror of
+    /// [`DemandWindow::forget`] — call it when a key is new to the window
+    /// but the underlying counter is **not** (e.g. a tenant evicted and
+    /// readmitted under the same `(name, family)` identity inherits the
+    /// server-side counter of its predecessor across a hot swap; its
+    /// history belongs to the predecessor, not to the newcomer).
+    pub fn seed(&mut self, key: u64, cumulative: u64) {
+        self.last.insert(key, cumulative);
+    }
 }
 
 /// Latency sample recorder with percentile queries.
 ///
-/// Stores raw microsecond samples; percentile queries sort a snapshot.
-/// Intended for request-scale counts (thousands), not packet-scale.
+/// Samples are kept **sorted on insert** (binary search + `O(n)`
+/// memmove), so every percentile query is an `O(1)` index instead of a
+/// clone-and-sort of the whole sample set. Intended for request-scale
+/// counts (thousands), not packet-scale. Non-finite inputs (NaN, ±inf)
+/// are dropped on record — they carry no latency information and a NaN
+/// would poison the ordering invariant.
 #[derive(Debug, Clone, Default)]
 pub struct LatencyHistogram {
+    /// Invariant: ascending order, all values finite.
     samples_us: Vec<f64>,
 }
 
@@ -113,11 +129,16 @@ impl LatencyHistogram {
     }
 
     pub fn record(&mut self, d: Duration) {
-        self.samples_us.push(d.as_secs_f64() * 1e6);
+        self.record_us(d.as_secs_f64() * 1e6);
     }
 
+    /// Record one sample in microseconds. Non-finite values are ignored.
     pub fn record_us(&mut self, us: f64) {
-        self.samples_us.push(us);
+        if !us.is_finite() {
+            return;
+        }
+        let at = self.samples_us.partition_point(|&s| s <= us);
+        self.samples_us.insert(at, us);
     }
 
     pub fn len(&self) -> usize {
@@ -128,15 +149,22 @@ impl LatencyHistogram {
         self.samples_us.is_empty()
     }
 
-    /// `q` in [0, 1]; nearest-rank percentile.
+    /// The recorded samples in ascending order, microseconds. Feed these
+    /// to [`crate::slo::SloMonitor::observe`] (or any consumer that wants
+    /// raw samples rather than fixed quantiles).
+    pub fn samples_us(&self) -> &[f64] {
+        &self.samples_us
+    }
+
+    /// `q` in [0, 1]; nearest-rank percentile. `O(1)` — samples are
+    /// already sorted.
     pub fn percentile_us(&self, q: f64) -> f64 {
         if self.samples_us.is_empty() {
             return 0.0;
         }
-        let mut s = self.samples_us.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((q * (s.len() - 1) as f64).round() as usize).min(s.len() - 1);
-        s[idx]
+        let idx = ((q * (self.samples_us.len() - 1) as f64).round() as usize)
+            .min(self.samples_us.len() - 1);
+        self.samples_us[idx]
     }
 
     pub fn mean_us(&self) -> f64 {
@@ -147,20 +175,42 @@ impl LatencyHistogram {
     }
 
     pub fn max_us(&self) -> f64 {
-        self.samples_us.iter().copied().fold(0.0, f64::max)
+        self.samples_us.last().copied().unwrap_or(0.0)
+    }
+
+    /// Multi-quantile snapshot in one pass over the (already sorted)
+    /// samples — the monitor-facing alternative to calling
+    /// [`LatencyHistogram::percentile_us`] three times per window.
+    pub fn quantiles(&self) -> Quantiles {
+        Quantiles {
+            n: self.len(),
+            mean_us: self.mean_us(),
+            p50_us: self.percentile_us(0.50),
+            p95_us: self.percentile_us(0.95),
+            p99_us: self.percentile_us(0.99),
+            max_us: self.max_us(),
+        }
     }
 
     /// One-line summary for logs and serving reports.
     pub fn summary(&self) -> String {
+        let q = self.quantiles();
         format!(
             "n={} mean={:.1}us p50={:.1}us p99={:.1}us max={:.1}us",
-            self.len(),
-            self.mean_us(),
-            self.percentile_us(0.50),
-            self.percentile_us(0.99),
-            self.max_us()
+            q.n, q.mean_us, q.p50_us, q.p99_us, q.max_us
         )
     }
+}
+
+/// Fixed multi-quantile snapshot of a [`LatencyHistogram`].
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Quantiles {
+    pub n: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
 }
 
 /// Throughput window: completed items over elapsed wall time.
@@ -231,6 +281,45 @@ mod tests {
     }
 
     #[test]
+    fn samples_stay_sorted_under_any_insert_order() {
+        let mut h = LatencyHistogram::new();
+        for us in [50.0, 10.0, 90.0, 10.0, 70.0, 30.0] {
+            h.record_us(us);
+        }
+        assert_eq!(h.samples_us(), &[10.0, 10.0, 30.0, 50.0, 70.0, 90.0]);
+        assert_eq!(h.percentile_us(0.0), 10.0);
+        assert_eq!(h.percentile_us(1.0), 90.0);
+    }
+
+    #[test]
+    fn non_finite_samples_are_dropped() {
+        let mut h = LatencyHistogram::new();
+        h.record_us(f64::NAN);
+        h.record_us(f64::INFINITY);
+        h.record_us(f64::NEG_INFINITY);
+        assert!(h.is_empty());
+        h.record_us(42.0);
+        h.record_us(f64::NAN);
+        assert_eq!(h.len(), 1);
+        assert_eq!(h.percentile_us(0.99), 42.0);
+    }
+
+    #[test]
+    fn quantiles_snapshot_matches_individual_queries() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=200 {
+            h.record_us(i as f64);
+        }
+        let q = h.quantiles();
+        assert_eq!(q.n, 200);
+        assert_eq!(q.p50_us, h.percentile_us(0.50));
+        assert_eq!(q.p95_us, h.percentile_us(0.95));
+        assert_eq!(q.p99_us, h.percentile_us(0.99));
+        assert_eq!(q.max_us, 200.0);
+        assert!(q.p50_us <= q.p95_us && q.p95_us <= q.p99_us);
+    }
+
+    #[test]
     fn demand_window_deltas() {
         let mut w = DemandWindow::new();
         // Tenants A=10, B=11 at slots 0, 1.
@@ -254,6 +343,35 @@ mod tests {
         // Forgetting the key makes the restart explicit: all 10 count.
         w.forget(10);
         assert_eq!(w.delta(&[10], &[10]), vec![10]);
+    }
+
+    #[test]
+    fn demand_window_restart_undercount_is_bounded_to_the_heuristic() {
+        // Regression for the documented under-count: a restarted counter
+        // that passes its old value within a single window looks like
+        // forward progress to the direction heuristic.
+        let mut w = DemandWindow::new();
+        w.delta(&[7], &[5]);
+        // Counter restarted at 0 and reached 10 before the next window
+        // closed: the true demand is 10, the heuristic reports 10-5=5.
+        // This test pins the heuristic's answer so the docs stay honest;
+        // callers that *know* about the restart must forget() instead.
+        assert_eq!(w.delta(&[7], &[10]), vec![5]);
+    }
+
+    #[test]
+    fn demand_window_seed_sets_an_explicit_baseline() {
+        // An evict→readmit under the same serving identity inherits the
+        // predecessor's server-side counter across a hot swap. Seeding
+        // attributes that inherited history to nobody: the readmitted
+        // key's first delta counts only what it served itself.
+        let mut w = DemandWindow::new();
+        w.seed(9, 40);
+        assert_eq!(w.delta(&[9], &[46]), vec![6], "only post-seed requests count");
+        // Without the seed the same key would contribute its full
+        // inherited cumulative value.
+        let mut unseeded = DemandWindow::new();
+        assert_eq!(unseeded.delta(&[9], &[46]), vec![46]);
     }
 
     #[test]

@@ -1,0 +1,601 @@
+//! SLO-driven regulation: priority tiers, latency targets, and
+//! error-budget burn-rate monitoring.
+//!
+//! GACER's regulation loop (observe → decide → apply, see
+//! `docs/OPERATIONS.md`) historically reacted to one signal: device-load
+//! imbalance. Production multi-tenant serving reacts to *latency SLOs* —
+//! tail latency under co-location is the binding constraint, not
+//! throughput. This module turns per-tenant latency samples into a
+//! regulation pressure signal:
+//!
+//! - [`Tier`] — Interactive / Standard / Batch scheduling priority.
+//!   Higher tiers issue first in the coordinator's round
+//!   ([`crate::coordinator::ServerConfig`]) and are protected by
+//!   admission control in [`crate::engine::GacerEngine`].
+//! - [`SloTarget`] — a percentile latency target (`p99 < 20ms`) and an
+//!   optional per-request deadline.
+//! - [`SloPolicy`] — the *scheduler-side* per-tenant contract: tier,
+//!   deadline, and a bound on queue depth. Requests beyond the bound are
+//!   shed with [`crate::Error::Overloaded`]; requests whose deadline
+//!   passed before issue are shed with [`crate::Error::DeadlineExceeded`].
+//! - [`SloMonitor`] — consumes one window of latency samples per tenant
+//!   per observe tick and tracks **error-budget burn rate** over dual
+//!   windows: a fast window that pages quickly on acute burn and a slow
+//!   window that warns on chronic burn. Emits [`SloPressure`] per tenant.
+//!
+//! # Burn-rate semantics
+//!
+//! A target `p99 < 20ms` grants an error budget of 1% of requests — the
+//! fraction allowed to exceed 20ms. The *burn rate* over a span of
+//! windows is `violation_fraction / budget_fraction`: `1.0` means the
+//! budget is being consumed exactly at the sustainable rate, `10.0`
+//! means ten times too fast. Following SRE multi-window practice, the
+//! monitor evaluates burn over a short span (default 3 windows) against
+//! a high threshold to catch acute regressions ([`SloHealth::Page`]) and
+//! over a long span (default 12 windows) against a low threshold to
+//! catch slow leaks ([`SloHealth::Warn`]).
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use crate::{Error, Result};
+
+/// Scheduling priority tier. Ordering is by *priority*: `Interactive`
+/// outranks `Standard` outranks `Batch`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Tier {
+    /// Latency-critical, user-facing traffic. Issues first, protected by
+    /// admission control while its budget burns.
+    Interactive,
+    /// Ordinary serving traffic.
+    #[default]
+    Standard,
+    /// Throughput-oriented background work: first to queue, first to
+    /// shed under overload.
+    Batch,
+}
+
+impl Tier {
+    /// Numeric priority; higher outranks lower.
+    pub fn priority(self) -> u8 {
+        match self {
+            Tier::Interactive => 2,
+            Tier::Standard => 1,
+            Tier::Batch => 0,
+        }
+    }
+
+    /// True when `self` strictly outranks `other`.
+    pub fn outranks(self, other: Tier) -> bool {
+        self.priority() > other.priority()
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Tier::Interactive => "interactive",
+            Tier::Standard => "standard",
+            Tier::Batch => "batch",
+        }
+    }
+
+    /// Parse a CLI spelling (`interactive|standard|batch`).
+    pub fn parse(s: &str) -> Option<Tier> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "interactive" => Some(Tier::Interactive),
+            "standard" => Some(Tier::Standard),
+            "batch" => Some(Tier::Batch),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Tier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// A per-tenant latency objective: a percentile target (the SLO proper)
+/// plus an optional per-request deadline for the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloTarget {
+    /// Percentile in (0, 1), e.g. `0.99`.
+    pub percentile: f64,
+    /// Latency bound at that percentile, microseconds.
+    pub target_us: f64,
+    /// Optional per-request deadline: a request still queued this long
+    /// after arrival is shed rather than issued.
+    pub deadline: Option<Duration>,
+}
+
+impl SloTarget {
+    /// `p99 < ms` milliseconds.
+    pub fn p99_ms(ms: f64) -> Self {
+        SloTarget { percentile: 0.99, target_us: ms * 1e3, deadline: None }
+    }
+
+    /// `p95 < ms` milliseconds.
+    pub fn p95_ms(ms: f64) -> Self {
+        SloTarget { percentile: 0.95, target_us: ms * 1e3, deadline: None }
+    }
+
+    /// Attach a per-request deadline.
+    pub fn with_deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// The error budget: the fraction of requests allowed to exceed
+    /// `target_us` (`0.01` for a p99 target).
+    pub fn budget_fraction(&self) -> f64 {
+        1.0 - self.percentile
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(self.percentile > 0.0 && self.percentile < 1.0) {
+            return Err(Error::InvalidConfig(format!(
+                "SLO percentile must be in (0,1), got {}",
+                self.percentile
+            )));
+        }
+        if !(self.target_us.is_finite() && self.target_us > 0.0) {
+            return Err(Error::InvalidConfig(format!(
+                "SLO target must be a positive latency, got {}us",
+                self.target_us
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// The scheduler-side per-tenant contract lowered into
+/// [`crate::coordinator::ServerConfig`]: issue priority, per-request
+/// deadline, and a bound on queue depth.
+///
+/// The default policy (Standard tier, no deadline, unbounded queue) is
+/// exactly the pre-SLO scheduler behavior; a config whose tenants all
+/// carry the default lowers to "regulation off".
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SloPolicy {
+    pub tier: Tier,
+    /// Requests still queued this long after arrival are answered with
+    /// [`crate::Error::DeadlineExceeded`] instead of occupying a round.
+    pub deadline: Option<Duration>,
+    /// Maximum queued requests per tenant; arrivals beyond it are
+    /// answered with [`crate::Error::Overloaded`]. `None` = unbounded.
+    pub queue_cap: Option<usize>,
+}
+
+impl SloPolicy {
+    pub fn new(tier: Tier) -> Self {
+        SloPolicy { tier, deadline: None, queue_cap: None }
+    }
+
+    pub fn with_deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    pub fn with_queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = Some(cap);
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.queue_cap == Some(0) {
+            return Err(Error::InvalidConfig(
+                "SLO queue_cap of 0 would shed every request; use a positive bound".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Dual-window burn-rate thresholds for the monitor. Spans are measured
+/// in observe windows (one [`SloMonitor::observe`] call = one window).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BurnConfig {
+    /// Short span for acute-burn detection (windows).
+    pub fast_windows: usize,
+    /// Long span for chronic-burn detection (windows).
+    pub slow_windows: usize,
+    /// Burn rate over the fast span at or above which health is
+    /// [`SloHealth::Page`].
+    pub page_burn: f64,
+    /// Burn rate over the slow span at or above which health is at
+    /// least [`SloHealth::Warn`].
+    pub warn_burn: f64,
+    /// Consecutive paging windows before the engine treats the burn as
+    /// *sustained* and acts (migrate / re-search) in
+    /// [`crate::engine::GacerEngine::maybe_regulate`].
+    pub sustained_page_windows: usize,
+}
+
+impl Default for BurnConfig {
+    fn default() -> Self {
+        BurnConfig {
+            fast_windows: 3,
+            slow_windows: 12,
+            page_burn: 8.0,
+            warn_burn: 2.0,
+            sustained_page_windows: 3,
+        }
+    }
+}
+
+impl BurnConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.fast_windows == 0 || self.slow_windows < self.fast_windows {
+            return Err(Error::InvalidConfig(format!(
+                "burn windows must satisfy 0 < fast ({}) <= slow ({})",
+                self.fast_windows, self.slow_windows
+            )));
+        }
+        if self.page_burn < self.warn_burn || self.warn_burn <= 0.0 {
+            return Err(Error::InvalidConfig(format!(
+                "burn thresholds must satisfy 0 < warn ({}) <= page ({})",
+                self.warn_burn, self.page_burn
+            )));
+        }
+        if self.sustained_page_windows == 0 {
+            return Err(Error::InvalidConfig(
+                "sustained_page_windows must be at least 1".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Health verdict for one tenant, ordered by severity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SloHealth {
+    /// No samples in the slow span — nothing to judge.
+    Idle,
+    /// Burning within budget on both windows.
+    Healthy,
+    /// Chronic burn: the slow window exceeds `warn_burn`.
+    Warn,
+    /// Acute burn: the fast window exceeds `page_burn`.
+    Page,
+}
+
+impl SloHealth {
+    pub fn label(self) -> &'static str {
+        match self {
+            SloHealth::Idle => "idle",
+            SloHealth::Healthy => "healthy",
+            SloHealth::Warn => "warn",
+            SloHealth::Page => "page",
+        }
+    }
+
+    /// Budget is being burned faster than sustainable (Warn or Page).
+    pub fn is_burning(self) -> bool {
+        matches!(self, SloHealth::Warn | SloHealth::Page)
+    }
+}
+
+/// Per-tenant pressure emitted by the monitor each window: the two burn
+/// rates, the health verdict, and how long the tenant has been paging.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloPressure {
+    pub tier: Tier,
+    /// Burn rate over the fast span (`violations / budget`, `1.0` =
+    /// sustainable).
+    pub burn_fast: f64,
+    /// Burn rate over the slow span.
+    pub burn_slow: f64,
+    pub health: SloHealth,
+    /// Consecutive windows at [`SloHealth::Page`], including the
+    /// current one; `0` when not paging.
+    pub page_streak: usize,
+}
+
+/// Per-tenant tracking state inside the monitor.
+#[derive(Debug, Clone)]
+struct Tracked {
+    tier: Tier,
+    target: SloTarget,
+    /// Ring of the last `slow_windows` observe windows, oldest first:
+    /// `(violations, total_samples)` per window.
+    windows: VecDeque<(u64, u64)>,
+    page_streak: usize,
+}
+
+impl Tracked {
+    fn burn_over(&self, span: usize, budget: f64) -> f64 {
+        let (mut bad, mut total) = (0u64, 0u64);
+        for &(v, n) in self.windows.iter().rev().take(span) {
+            bad += v;
+            total += n;
+        }
+        if total == 0 {
+            0.0
+        } else {
+            (bad as f64 / total as f64) / budget
+        }
+    }
+
+    fn samples_in(&self, span: usize) -> u64 {
+        self.windows.iter().rev().take(span).map(|&(_, n)| n).sum()
+    }
+}
+
+/// Error-budget burn-rate monitor over all SLO-tracked tenants.
+///
+/// Keyed by a caller-supplied stable id (the engine uses
+/// `TenantId.0`). Feed one window of latency samples per tenant per
+/// observe tick via [`SloMonitor::observe`]; read the verdict back via
+/// [`SloMonitor::pressure`]. Tenants without an [`SloTarget`] are simply
+/// never tracked — the monitor only ever judges what it was told to
+/// watch.
+#[derive(Debug, Clone, Default)]
+pub struct SloMonitor {
+    cfg: BurnConfig,
+    tenants: BTreeMap<u64, Tracked>,
+}
+
+impl SloMonitor {
+    pub fn new(cfg: BurnConfig) -> Self {
+        SloMonitor { cfg, tenants: BTreeMap::new() }
+    }
+
+    pub fn config(&self) -> &BurnConfig {
+        &self.cfg
+    }
+
+    /// Number of tracked tenants.
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// Start tracking `key` against `target`. Replaces any existing
+    /// tracking state for the key (history restarts).
+    pub fn track(&mut self, key: u64, tier: Tier, target: SloTarget) -> Result<()> {
+        target.validate()?;
+        self.tenants.insert(
+            key,
+            Tracked { tier, target, windows: VecDeque::new(), page_streak: 0 },
+        );
+        Ok(())
+    }
+
+    /// Stop tracking `key` (evicted tenant). Unknown keys are a no-op.
+    pub fn forget(&mut self, key: u64) {
+        self.tenants.remove(&key);
+    }
+
+    /// Close one observe window for `key` with that window's latency
+    /// samples (microseconds). Untracked keys are ignored — callers can
+    /// feed every tenant's samples without filtering.
+    pub fn observe(&mut self, key: u64, samples_us: &[f64]) {
+        let (fast, slow) = (self.cfg.fast_windows, self.cfg.slow_windows);
+        let page = self.cfg.page_burn;
+        let Some(t) = self.tenants.get_mut(&key) else { return };
+        let violations =
+            samples_us.iter().filter(|&&s| s.is_finite() && s > t.target.target_us).count() as u64;
+        let total = samples_us.iter().filter(|&&s| s.is_finite()).count() as u64;
+        t.windows.push_back((violations, total));
+        while t.windows.len() > slow {
+            t.windows.pop_front();
+        }
+        let budget = t.target.budget_fraction();
+        let paging = t.samples_in(fast) > 0 && t.burn_over(fast, budget) >= page;
+        t.page_streak = if paging { t.page_streak + 1 } else { 0 };
+    }
+
+    /// The current pressure verdict for `key`, or `None` if untracked.
+    pub fn pressure(&self, key: u64) -> Option<SloPressure> {
+        let t = self.tenants.get(&key)?;
+        let budget = t.target.budget_fraction();
+        let burn_fast = t.burn_over(self.cfg.fast_windows, budget);
+        let burn_slow = t.burn_over(self.cfg.slow_windows, budget);
+        let health = if t.samples_in(self.cfg.slow_windows) == 0 {
+            SloHealth::Idle
+        } else if t.samples_in(self.cfg.fast_windows) > 0 && burn_fast >= self.cfg.page_burn {
+            SloHealth::Page
+        } else if burn_slow >= self.cfg.warn_burn {
+            SloHealth::Warn
+        } else {
+            SloHealth::Healthy
+        };
+        Some(SloPressure {
+            tier: t.tier,
+            burn_fast,
+            burn_slow,
+            health,
+            page_streak: if health == SloHealth::Page { t.page_streak } else { 0 },
+        })
+    }
+
+    /// All tracked tenants' pressures, keyed.
+    pub fn pressures(&self) -> Vec<(u64, SloPressure)> {
+        self.tenants
+            .keys()
+            .filter_map(|&k| self.pressure(k).map(|p| (k, p)))
+            .collect()
+    }
+
+    /// True when any tracked tenant whose tier strictly outranks `tier`
+    /// is currently burning budget (Warn or Page) — the admission-control
+    /// gate: while it holds, newcomers at `tier` are rejected so the
+    /// burning higher tier keeps its headroom.
+    pub fn any_burning_above(&self, tier: Tier) -> bool {
+        self.tenants.keys().any(|&k| {
+            self.pressure(k)
+                .map(|p| p.tier.outranks(tier) && p.health.is_burning())
+                .unwrap_or(false)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn target() -> SloTarget {
+        // p99 < 1ms => budget fraction 0.01.
+        SloTarget::p99_ms(1.0)
+    }
+
+    /// 100 samples with `bad` of them over the 1ms target.
+    fn window(bad: usize) -> Vec<f64> {
+        let mut v = vec![100.0; 100 - bad];
+        v.extend(vec![5_000.0; bad]);
+        v
+    }
+
+    #[test]
+    fn tier_ordering_and_parse() {
+        assert!(Tier::Interactive.outranks(Tier::Standard));
+        assert!(Tier::Standard.outranks(Tier::Batch));
+        assert!(!Tier::Batch.outranks(Tier::Batch));
+        assert_eq!(Tier::parse("Interactive"), Some(Tier::Interactive));
+        assert_eq!(Tier::parse("batch"), Some(Tier::Batch));
+        assert_eq!(Tier::parse("gold"), None);
+        assert_eq!(Tier::default(), Tier::Standard);
+    }
+
+    #[test]
+    fn target_validation() {
+        assert!(target().validate().is_ok());
+        assert!(SloTarget { percentile: 1.0, target_us: 10.0, deadline: None }
+            .validate()
+            .is_err());
+        assert!(SloTarget { percentile: 0.99, target_us: f64::NAN, deadline: None }
+            .validate()
+            .is_err());
+        assert!((target().budget_fraction() - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn policy_validation_rejects_zero_cap() {
+        assert!(SloPolicy::default().validate().is_ok());
+        assert!(SloPolicy::new(Tier::Batch).with_queue_cap(0).validate().is_err());
+        assert!(SloPolicy::new(Tier::Batch).with_queue_cap(1).validate().is_ok());
+    }
+
+    #[test]
+    fn burn_config_validation() {
+        assert!(BurnConfig::default().validate().is_ok());
+        assert!(BurnConfig { fast_windows: 0, ..Default::default() }.validate().is_err());
+        assert!(BurnConfig { slow_windows: 1, ..Default::default() }.validate().is_err());
+        assert!(BurnConfig { warn_burn: 10.0, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn healthy_within_budget() {
+        let mut m = SloMonitor::new(BurnConfig::default());
+        m.track(1, Tier::Interactive, target()).unwrap();
+        for _ in 0..12 {
+            m.observe(1, &window(0));
+        }
+        let p = m.pressure(1).unwrap();
+        assert_eq!(p.health, SloHealth::Healthy);
+        assert_eq!(p.burn_fast, 0.0);
+        assert_eq!(p.page_streak, 0);
+    }
+
+    #[test]
+    fn idle_without_samples() {
+        let mut m = SloMonitor::new(BurnConfig::default());
+        m.track(1, Tier::Standard, target()).unwrap();
+        assert_eq!(m.pressure(1).unwrap().health, SloHealth::Idle);
+        m.observe(1, &[]);
+        assert_eq!(m.pressure(1).unwrap().health, SloHealth::Idle);
+        assert!(m.pressure(99).is_none(), "untracked key has no pressure");
+    }
+
+    #[test]
+    fn acute_burn_pages_on_the_fast_window() {
+        let mut m = SloMonitor::new(BurnConfig::default());
+        m.track(1, Tier::Interactive, target()).unwrap();
+        // 10% violations against a 1% budget = burn 10 >= page_burn 8.
+        m.observe(1, &window(10));
+        let p = m.pressure(1).unwrap();
+        assert_eq!(p.health, SloHealth::Page);
+        assert!((p.burn_fast - 10.0).abs() < 1e-9);
+        assert_eq!(p.page_streak, 1);
+        m.observe(1, &window(10));
+        assert_eq!(m.pressure(1).unwrap().page_streak, 2);
+        // Recovery clears the streak.
+        for _ in 0..3 {
+            m.observe(1, &window(0));
+        }
+        let p = m.pressure(1).unwrap();
+        assert_ne!(p.health, SloHealth::Page);
+        assert_eq!(p.page_streak, 0);
+    }
+
+    #[test]
+    fn chronic_burn_warns_on_the_slow_window() {
+        let mut m = SloMonitor::new(BurnConfig::default());
+        m.track(1, Tier::Standard, target()).unwrap();
+        // 3% violations: burn 3 — under page_burn 8, over warn_burn 2.
+        for _ in 0..12 {
+            m.observe(1, &window(3));
+        }
+        let p = m.pressure(1).unwrap();
+        assert_eq!(p.health, SloHealth::Warn);
+        assert!(p.health.is_burning());
+        assert!((p.burn_slow - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn old_windows_age_out_of_the_slow_span() {
+        let mut m = SloMonitor::new(BurnConfig::default());
+        m.track(1, Tier::Standard, target()).unwrap();
+        for _ in 0..12 {
+            m.observe(1, &window(10));
+        }
+        assert_eq!(m.pressure(1).unwrap().health, SloHealth::Page);
+        // 12 clean windows push every violation out of the slow ring.
+        for _ in 0..12 {
+            m.observe(1, &window(0));
+        }
+        let p = m.pressure(1).unwrap();
+        assert_eq!(p.health, SloHealth::Healthy);
+        assert_eq!(p.burn_slow, 0.0);
+    }
+
+    #[test]
+    fn admission_gate_sees_burning_higher_tiers_only() {
+        let mut m = SloMonitor::new(BurnConfig::default());
+        m.track(1, Tier::Interactive, target()).unwrap();
+        m.track(2, Tier::Batch, target()).unwrap();
+        // Batch burning does not gate anyone above or beside it.
+        m.observe(2, &window(50));
+        assert!(!m.any_burning_above(Tier::Batch));
+        assert!(!m.any_burning_above(Tier::Interactive));
+        // Interactive burning gates Standard and Batch, not Interactive.
+        m.observe(1, &window(50));
+        assert!(m.any_burning_above(Tier::Batch));
+        assert!(m.any_burning_above(Tier::Standard));
+        assert!(!m.any_burning_above(Tier::Interactive));
+    }
+
+    #[test]
+    fn non_finite_samples_are_ignored_by_observe() {
+        let mut m = SloMonitor::new(BurnConfig::default());
+        m.track(1, Tier::Interactive, target()).unwrap();
+        m.observe(1, &[f64::NAN, f64::INFINITY]);
+        assert_eq!(m.pressure(1).unwrap().health, SloHealth::Idle);
+    }
+
+    #[test]
+    fn forget_stops_tracking() {
+        let mut m = SloMonitor::new(BurnConfig::default());
+        m.track(1, Tier::Interactive, target()).unwrap();
+        m.observe(1, &window(50));
+        assert!(m.any_burning_above(Tier::Batch));
+        m.forget(1);
+        assert!(!m.any_burning_above(Tier::Batch));
+        assert!(m.pressure(1).is_none());
+        assert!(m.is_empty());
+    }
+}

@@ -1,0 +1,144 @@
+//! Integration: SLO regulation on the serving path — typed overload
+//! shedding (queue caps, deadlines), per-tenant shed accounting, and the
+//! latency-sample flow an engine observe loop drains.
+//!
+//! The serving tests require `make artifacts` and skip with a notice
+//! when absent; the simulation test at the bottom runs everywhere.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gacer::coordinator::{BatchPolicy, Server, ServerConfig, TenantSpec};
+use gacer::slo::{SloPolicy, Tier};
+use gacer::Error;
+
+fn artifacts_dir() -> Option<&'static str> {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("skipping SLO integration test: run `make artifacts` first");
+        None
+    }
+}
+
+fn tenant(name: &str, policy: BatchPolicy) -> TenantSpec {
+    TenantSpec {
+        name: name.to_string(),
+        family: "tiny_cnn".to_string(),
+        policy,
+        chunk: None,
+    }
+}
+
+fn pseudo_input(seed: usize) -> Vec<f32> {
+    (0..32 * 32 * 3)
+        .map(|k| (((seed * 131 + k) % 97) as f32 / 97.0) - 0.5)
+        .collect()
+}
+
+#[test]
+fn expired_deadline_sheds_with_typed_error_and_is_counted() {
+    let Some(dir) = artifacts_dir() else { return };
+    // A 1ns deadline is unmeetable: every request is already past it by
+    // the time a scheduling round looks at the queue, so each infer is
+    // answered with the typed shed error (not a hang, not a panic).
+    let policy = BatchPolicy::new(4, Duration::from_millis(1), vec![1, 2, 4, 8, 16, 32]);
+    let cfg = ServerConfig {
+        slo: vec![SloPolicy::new(Tier::Interactive)
+            .with_deadline(Duration::from_nanos(1))],
+        ..Default::default()
+    };
+    let server = Server::start(dir, vec![tenant("a", policy)], cfg).unwrap();
+    for i in 0..3 {
+        match server.infer(0, pseudo_input(i)) {
+            Err(Error::DeadlineExceeded(msg)) => {
+                assert!(msg.contains("deadline"), "unhelpful shed message: {msg}")
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+    }
+    assert_eq!(server.shed_counts(), vec![3], "every shed is counted");
+}
+
+#[test]
+fn full_queue_sheds_concurrent_overload_per_tenant() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Long batching window + queue cap 1: the first request occupies the
+    // queue while the batcher waits out its timeout, so concurrent
+    // arrivals overflow the cap and are answered with Overloaded.
+    let policy = BatchPolicy::new(32, Duration::from_millis(300), vec![1, 2, 4, 8, 16, 32]);
+    let capped = SloPolicy::new(Tier::Batch).with_queue_cap(1);
+    let cfg = ServerConfig { slo: vec![capped, SloPolicy::default()], ..Default::default() };
+    let server = Arc::new(
+        Server::start(
+            dir,
+            vec![tenant("capped", policy.clone()), tenant("free", policy)],
+            cfg,
+        )
+        .unwrap(),
+    );
+    let mut handles = Vec::new();
+    for i in 0..6 {
+        let server = Arc::clone(&server);
+        handles.push(std::thread::spawn(move || server.infer(0, pseudo_input(i))));
+    }
+    let mut ok = 0u64;
+    let mut overloaded = 0u64;
+    for h in handles {
+        match h.join().unwrap() {
+            Ok(out) => {
+                assert_eq!(out.len(), 10);
+                ok += 1;
+            }
+            Err(Error::Overloaded(msg)) => {
+                assert!(msg.contains("queue"), "unhelpful shed message: {msg}");
+                overloaded += 1;
+            }
+            Err(e) => panic!("unexpected error under overload: {e}"),
+        }
+    }
+    assert_eq!(ok + overloaded, 6);
+    assert!(ok >= 1, "the queued request must still be served");
+    assert!(overloaded >= 1, "cap 1 under 6 concurrent clients must shed");
+    // Shed accounting is per tenant: only the capped tenant's counter
+    // moves, and it matches the client-visible rejections exactly.
+    assert_eq!(server.shed_counts(), vec![overloaded, 0]);
+}
+
+#[test]
+fn served_latency_samples_drain_once() {
+    let Some(dir) = artifacts_dir() else { return };
+    let policy = BatchPolicy::new(4, Duration::from_millis(1), vec![1, 2, 4, 8, 16, 32]);
+    let server =
+        Server::start(dir, vec![tenant("a", policy)], ServerConfig::default()).unwrap();
+    for i in 0..4 {
+        assert_eq!(server.infer(0, pseudo_input(i)).unwrap().len(), 10);
+    }
+    let samples = server.take_latencies();
+    assert_eq!(samples.len(), 1);
+    assert_eq!(samples[0].len(), 4, "one arrival->response sample per request");
+    assert!(samples[0].iter().all(|&us| us.is_finite() && us > 0.0));
+    // The drain is destructive — the next observe window starts empty.
+    assert!(server.take_latencies()[0].is_empty());
+    assert_eq!(server.shed_counts(), vec![0], "served requests are not sheds");
+}
+
+// ---- No artifacts needed below this line ------------------------------
+
+#[test]
+fn saturation_sim_holds_interactive_p99_only_under_regulation() {
+    use gacer::bench_util::slo_sim::{run_slo_sim, saturated_mix, SloSimConfig};
+
+    let cfg = SloSimConfig::default();
+    let regulated = run_slo_sim(&saturated_mix(), &cfg, true);
+    let fair = run_slo_sim(&saturated_mix(), &cfg, false);
+    assert!(regulated.interactive_p99_us() <= cfg.target.target_us);
+    assert!(fair.interactive_p99_us() > cfg.target.target_us);
+    let batch_shed: u64 = regulated
+        .tenants
+        .iter()
+        .filter(|t| t.tier == Tier::Batch)
+        .map(|t| t.shed)
+        .sum();
+    assert!(batch_shed > 0, "regulation pays with batch sheds, not magic");
+}
