@@ -500,3 +500,180 @@ pub fn slo() {
         Err(e) => eprintln!("could not write BENCH_slo.json: {e}"),
     }
 }
+
+/// `gacer-bench throughput` — request-path throughput under open-loop
+/// load (docs/BENCHMARKS.md): sweep offered rates through the load
+/// generator against a synthetic-backend cluster, once per
+/// [`CompletionMode`] arm, and record achieved throughput, p50/p99
+/// latency, and shed rate per point in `BENCH_throughput.json`. With
+/// `--min-throughput R`, exits non-zero if the batched arm fails to
+/// achieve `R` req/s at the highest offered rate — the CI smoke floor.
+///
+/// [`CompletionMode`]: crate::coordinator::CompletionMode
+pub fn throughput(args: &crate::util::cli::Args) {
+    use super::loadgen::{run_loadgen, LoadgenOptions, LoadgenReport, TraceShape};
+    use crate::coordinator::CompletionMode;
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+
+    let opt_f64 = |key: &str, default: f64| {
+        args.opt(key).and_then(|v| v.parse::<f64>().ok()).unwrap_or(default)
+    };
+    let duration_ms = opt_f64("duration-ms", 800.0);
+    let seed = args.opt_usize("seed", 7) as u64;
+    let n_tenants = args.opt_usize("tenants", 4).max(1);
+    let queue_cap = args.opt_usize("queue-cap", 0);
+    let submitters = args.opt_usize("submitters", 4);
+    let trace = args.opt_or("trace", "poisson").to_string();
+    let min_throughput = opt_f64("min-throughput", 0.0);
+    let rates: Vec<f64> = args
+        .opt_or("rates", "2000,8000,20000")
+        .split(',')
+        .filter_map(|r| r.trim().parse::<f64>().ok())
+        .filter(|&r| r > 0.0)
+        .collect();
+    if rates.is_empty() {
+        eprintln!("--rates must name at least one positive req/s value");
+        std::process::exit(2);
+    }
+    if TraceShape::parse(&trace, 1.0).is_none() {
+        eprintln!("unknown trace shape {trace:?} (poisson|bursty|diurnal)");
+        std::process::exit(2);
+    }
+
+    println!(
+        "== Throughput: open-loop {trace} sweep, {n_tenants} tenants, {duration_ms:.0}ms \
+         per point, per-request vs batched completions =="
+    );
+    let run_point = |mode: CompletionMode, rate: f64| -> LoadgenReport {
+        let shape = TraceShape::parse(&trace, rate).expect("validated above");
+        run_loadgen(&LoadgenOptions {
+            n_tenants,
+            duration_ms,
+            shape,
+            seed,
+            queue_cap,
+            mode,
+            submitters,
+            ..LoadgenOptions::default()
+        })
+        .expect("synthetic loadgen run")
+    };
+    println!(
+        "{:<12} {:>10} {:>10} {:>9} {:>9} {:>9} {:>7}",
+        "arm", "offered", "achieved", "p50(us)", "p99(us)", "max(us)", "shed%"
+    );
+    let mut arms: Vec<(CompletionMode, Vec<LoadgenReport>)> = Vec::new();
+    for mode in [CompletionMode::PerRequest, CompletionMode::Batched] {
+        let mut points = Vec::with_capacity(rates.len());
+        for &rate in &rates {
+            let r = run_point(mode, rate);
+            println!(
+                "{:<12} {:>10.0} {:>10.0} {:>9.0} {:>9.0} {:>9.0} {:>7.2}",
+                mode.label(),
+                r.offered_rps,
+                r.achieved_rps(),
+                r.latency.p50_us,
+                r.latency.p99_us,
+                r.latency.max_us,
+                r.shed_rate() * 100.0
+            );
+            points.push(r);
+        }
+        arms.push((mode, points));
+    }
+
+    // Headline: both arms at the highest offered rate.
+    let last = |mode: CompletionMode| -> &LoadgenReport {
+        &arms.iter().find(|(m, _)| *m == mode).expect("both arms ran").1[rates.len() - 1]
+    };
+    let (pr, ba) = (last(CompletionMode::PerRequest), last(CompletionMode::Batched));
+    println!(
+        "at {:.0} req/s offered: batched {:.0} req/s p99 {:.0}us vs per-request {:.0} req/s \
+         p99 {:.0}us",
+        ba.offered_rps,
+        ba.achieved_rps(),
+        ba.latency.p99_us,
+        pr.achieved_rps(),
+        pr.latency.p99_us
+    );
+
+    let arm_json = |points: &[LoadgenReport]| {
+        Json::Arr(
+            points
+                .iter()
+                .map(|r| {
+                    let mut m = BTreeMap::new();
+                    m.insert("offered_rps".to_string(), Json::Num(r.offered_rps));
+                    m.insert("achieved_rps".to_string(), Json::Num(r.achieved_rps()));
+                    m.insert("submitted".to_string(), Json::Num(r.submitted as f64));
+                    m.insert("completed".to_string(), Json::Num(r.completed as f64));
+                    m.insert("shed".to_string(), Json::Num(r.shed as f64));
+                    m.insert("errors".to_string(), Json::Num(r.errors as f64));
+                    m.insert("shed_rate".to_string(), Json::Num(r.shed_rate()));
+                    m.insert("p50_us".to_string(), Json::Num(r.latency.p50_us));
+                    m.insert("p99_us".to_string(), Json::Num(r.latency.p99_us));
+                    m.insert("max_us".to_string(), Json::Num(r.latency.max_us));
+                    m.insert(
+                        "elapsed_ms".to_string(),
+                        Json::Num(r.elapsed.as_secs_f64() * 1e3),
+                    );
+                    Json::Obj(m)
+                })
+                .collect(),
+        )
+    };
+    let mut headline = BTreeMap::new();
+    headline.insert("offered_rps".to_string(), Json::Num(ba.offered_rps));
+    headline.insert("batched_rps".to_string(), Json::Num(ba.achieved_rps()));
+    headline.insert("per_request_rps".to_string(), Json::Num(pr.achieved_rps()));
+    headline.insert("batched_p99_us".to_string(), Json::Num(ba.latency.p99_us));
+    headline.insert("per_request_p99_us".to_string(), Json::Num(pr.latency.p99_us));
+    headline.insert(
+        "batched_sustains_higher_throughput".to_string(),
+        Json::Bool(ba.achieved_rps() >= pr.achieved_rps()),
+    );
+    // 10% slack: wall-clock p99 on shared CI hardware jitters; the claim
+    // is "no worse", not "identical to the microsecond".
+    headline.insert(
+        "batched_p99_no_worse".to_string(),
+        Json::Bool(ba.latency.p99_us <= pr.latency.p99_us * 1.10),
+    );
+    let mut root = BTreeMap::new();
+    root.insert("experiment".to_string(), Json::Str("throughput".to_string()));
+    root.insert("trace".to_string(), Json::Str(trace));
+    root.insert("seed".to_string(), Json::Num(seed as f64));
+    root.insert("tenants".to_string(), Json::Num(n_tenants as f64));
+    root.insert("duration_ms".to_string(), Json::Num(duration_ms));
+    root.insert("queue_cap".to_string(), Json::Num(queue_cap as f64));
+    root.insert("offered_rps".to_string(), Json::Arr(rates.iter().map(|&r| Json::Num(r)).collect()));
+    for (mode, points) in &arms {
+        let key = match mode {
+            CompletionMode::Batched => "batched",
+            CompletionMode::PerRequest => "per_request",
+        };
+        root.insert(key.to_string(), arm_json(points));
+    }
+    root.insert("headline".to_string(), Json::Obj(headline));
+    let json = Json::Obj(root).to_string_compact();
+    match std::fs::write("BENCH_throughput.json", &json) {
+        Ok(()) => println!("wrote BENCH_throughput.json ({} bytes)", json.len()),
+        Err(e) => eprintln!("could not write BENCH_throughput.json: {e}"),
+    }
+
+    if min_throughput > 0.0 && ba.achieved_rps() < min_throughput {
+        eprintln!(
+            "FAIL: batched arm achieved {:.0} req/s, below the --min-throughput floor {:.0}",
+            ba.achieved_rps(),
+            min_throughput
+        );
+        std::process::exit(1);
+    }
+    if min_throughput > 0.0 {
+        println!(
+            "floor: batched {:.0} req/s >= {:.0} req/s required",
+            ba.achieved_rps(),
+            min_throughput
+        );
+    }
+}

@@ -3,6 +3,7 @@
 //! rows. `experiments` holds the per-table/figure drivers.
 
 pub mod experiments;
+pub mod loadgen;
 pub mod slo_sim;
 
 use crate::baselines::{Baseline, BaselineKind};

@@ -1,7 +1,8 @@
 //! `gacer-bench` — regenerates every table and figure of the paper's
 //! evaluation section (see DESIGN.md §6 for the experiment index).
 //!
-//! Usage: `gacer-bench <fig4|fig7|fig8|table2|fig9|table3|table4|placement|replan|slo|all>
+//! Usage: `gacer-bench
+//! <fig4|fig7|fig8|table2|fig9|table3|table4|placement|replan|slo|throughput|all>
 //! [--rounds N]`
 //!
 //! `placement` is this repo's multi-GPU extension: LoadBalance vs
@@ -11,6 +12,12 @@
 //! (`docs/SEARCH.md`). `slo` is the SLO-regulation extension: interactive
 //! p99 on a saturated cluster with and without tier-major issue and
 //! overload shedding, recorded in `BENCH_slo.json` (`docs/SLO.md`).
+//! `throughput` is the request-path extension: an open-loop offered-load
+//! sweep comparing per-request vs batched completion fabrics, recorded in
+//! `BENCH_throughput.json` (`docs/BENCHMARKS.md`); it takes
+//! `--duration-ms`, `--rates R1,R2,...`, `--trace poisson|bursty|diurnal`,
+//! `--tenants N`, `--queue-cap N`, `--seed S`, `--submitters N`, and a CI
+//! floor `--min-throughput R` (exit 1 if the batched arm achieves less).
 
 use gacer::bench_util::experiments;
 use gacer::util::cli::Args;
@@ -26,7 +33,7 @@ fn main() {
     let ids: Vec<&str> = if experiment == "all" {
         vec![
             "fig4", "fig7", "fig8", "table2", "fig9", "table3", "table4",
-            "placement", "replan", "slo",
+            "placement", "replan", "slo", "throughput",
         ]
     } else {
         vec![experiment.as_str()]
@@ -43,6 +50,7 @@ fn main() {
             "placement" => experiments::placement_objectives(),
             "replan" => experiments::replan(),
             "slo" => experiments::slo(),
+            "throughput" => experiments::throughput(&args),
             other => {
                 eprintln!("unknown experiment: {other}");
                 std::process::exit(2);

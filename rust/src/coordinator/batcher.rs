@@ -4,12 +4,36 @@
 
 use std::time::{Duration, Instant};
 
+use super::completion::Reply;
+
 /// One queued inference request (payload is the flat f32 input).
+///
+/// The request carries its own reply handle (`reply`, crate-internal):
+/// wherever the request travels — across batcher drains, deadline
+/// expiry, or a hot-swap slot move — the scheduler answers it directly,
+/// with no per-request side-table lookup. Tests and benchmarks build
+/// waiter-less requests with [`PendingRequest::detached`].
 #[derive(Debug)]
 pub struct PendingRequest {
     pub id: u64,
     pub input: Vec<f32>,
     pub enqueued: Instant,
+    pub(crate) reply: Reply,
+}
+
+impl PendingRequest {
+    /// A request with no waiter attached — for exercising the batcher in
+    /// isolation (unit/property tests, benchmarks). The scheduler
+    /// constructs live requests with real reply handles internally.
+    pub fn detached(id: u64, input: Vec<f32>) -> PendingRequest {
+        PendingRequest::detached_at(id, input, Instant::now())
+    }
+
+    /// [`PendingRequest::detached`] with an explicit enqueue time, so
+    /// deadline/timeout behavior can be driven deterministically.
+    pub fn detached_at(id: u64, input: Vec<f32>, enqueued: Instant) -> PendingRequest {
+        PendingRequest { id, input, enqueued, reply: Reply::Detached }
+    }
 }
 
 /// Batching policy: how large a batch to wait for, and for how long.
@@ -140,7 +164,7 @@ mod tests {
     }
 
     fn req(id: u64) -> PendingRequest {
-        PendingRequest { id, input: vec![0.0; 4], enqueued: Instant::now() }
+        PendingRequest::detached(id, vec![0.0; 4])
     }
 
     #[test]
@@ -235,9 +259,9 @@ mod tests {
     fn expire_sheds_only_overdue_requests_and_keeps_fifo() {
         let mut b = Batcher::new(policy());
         let t0 = Instant::now();
-        b.push(PendingRequest { id: 0, input: vec![], enqueued: t0 });
-        b.push(PendingRequest { id: 1, input: vec![], enqueued: t0 + Duration::from_millis(3) });
-        b.push(PendingRequest { id: 2, input: vec![], enqueued: t0 + Duration::from_millis(9) });
+        b.push(PendingRequest::detached_at(0, vec![], t0));
+        b.push(PendingRequest::detached_at(1, vec![], t0 + Duration::from_millis(3)));
+        b.push(PendingRequest::detached_at(2, vec![], t0 + Duration::from_millis(9)));
         // At t0+10ms with a 5ms deadline: ids 0 and 1 are overdue.
         let expired = b.expire(t0 + Duration::from_millis(10), Duration::from_millis(5));
         assert_eq!(expired.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
@@ -261,5 +285,105 @@ mod tests {
         assert_eq!(variant, 4);
         assert_eq!(batch.len(), 3);
         assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn prop_drain_expire_flush_answer_every_request_exactly_once() {
+        // Seeded property: across random push/drain/expire/flush
+        // interleavings under random policies, every request leaves the
+        // batcher exactly once — either drained/flushed (FIFO within and
+        // across batches) or expired (exactly the overdue set) — and no
+        // drained batch ever exceeds the variant that runs it.
+        crate::util::rng::check_property("batcher-exactly-once", 80, |rng| {
+            let policy = BatchPolicy::new(
+                rng.range(1, 12),
+                Duration::from_millis(rng.range(1, 6) as u64),
+                vec![1, 2, 4, 8, 16],
+            );
+            let deadline = Duration::from_millis(rng.range(2, 12) as u64);
+            let mut b = Batcher::new(policy);
+            let t0 = Instant::now();
+            let mut pushed = 0u64;
+            let mut answered: Vec<u64> = Vec::new(); // drained or flushed
+            let mut expired_ids: Vec<u64> = Vec::new();
+            for step in 0..rng.range(10, 60) {
+                let now = t0 + Duration::from_millis(step as u64);
+                match rng.below(4) {
+                    0 | 1 => {
+                        b.push(PendingRequest::detached_at(pushed, vec![], now));
+                        pushed += 1;
+                    }
+                    2 => {
+                        if let Some((variant, batch)) = b.drain(now) {
+                            assert!(batch.len() <= variant, "batch overflows variant");
+                            answered.extend(batch.iter().map(|r| r.id));
+                        }
+                    }
+                    _ => {
+                        // Every expired request must genuinely be overdue,
+                        // and no overdue request may survive the sweep.
+                        let swept = b.expire(now, deadline);
+                        for r in &swept {
+                            assert!(
+                                now.duration_since(r.enqueued) >= deadline,
+                                "expired a request before its deadline"
+                            );
+                        }
+                        expired_ids.extend(swept.iter().map(|r| r.id));
+                    }
+                }
+            }
+            while let Some((variant, batch)) = b.flush() {
+                assert!(batch.len() <= variant);
+                answered.extend(batch.iter().map(|r| r.id));
+            }
+            // FIFO among issued requests: drains and flushes preserve
+            // arrival order end to end (expiry removes, never reorders).
+            assert!(
+                answered.windows(2).all(|w| w[0] < w[1]),
+                "drained requests out of FIFO order"
+            );
+            // Exactly once overall: issued ∪ expired = pushed, disjoint.
+            let mut all: Vec<u64> = answered;
+            all.extend(&expired_ids);
+            all.sort_unstable();
+            let n = all.len();
+            all.dedup();
+            assert_eq!(all.len(), n, "a request was answered twice");
+            assert_eq!(all, (0..pushed).collect::<Vec<u64>>(), "a request was lost");
+        });
+    }
+
+    #[test]
+    fn prop_pending_never_exceeds_pushes_minus_removals() {
+        // Seeded property: the queue depth visible to the scheduler's
+        // queue-cap check is exact — pushes minus drains/expiries — so a
+        // cap enforced against `pending()` can never be overshot by
+        // batcher-internal buffering.
+        crate::util::rng::check_property("batcher-pending-exact", 40, |rng| {
+            let mut b = Batcher::new(BatchPolicy::new(
+                rng.range(1, 8),
+                Duration::from_millis(1),
+                vec![1, 2, 4, 8],
+            ));
+            let t0 = Instant::now();
+            let mut inside = 0usize;
+            for step in 0..rng.range(10, 50) {
+                let now = t0 + Duration::from_millis(step as u64);
+                if rng.f64() < 0.6 {
+                    b.push(PendingRequest::detached_at(step as u64, vec![], now));
+                    inside += 1;
+                }
+                if rng.f64() < 0.4 {
+                    if let Some((_, batch)) = b.drain(now) {
+                        inside -= batch.len();
+                    }
+                }
+                if rng.f64() < 0.2 {
+                    inside -= b.expire(now, Duration::from_millis(3)).len();
+                }
+                assert_eq!(b.pending(), inside, "pending() drifted from truth");
+            }
+        });
     }
 }

@@ -14,16 +14,32 @@
 //! engine; by the time a configuration reaches this type every decision
 //! is already made.
 //!
+//! **Lock discipline on the hot path:** the routing `RwLock` is held
+//! only long enough to resolve a route and enqueue the request on its
+//! device's scheduler ([`ClusterServer::submit`]); waiting for the
+//! result happens entirely outside the lock. A concurrent
+//! [`ClusterServer::apply`] therefore blocks request *submission* only
+//! for the epoch fences themselves — in-flight requests keep completing
+//! throughout a swap — where the previous design parked every `infer`
+//! for a request's whole lifetime behind any queued writer. Correctness
+//! across the shorter fence rests on channel FIFO order: a request
+//! enqueued before the fence reaches its scheduler before the swap
+//! commits, and survives it under its tenant's `(name, family)`
+//! identity.
+//!
 //! Startup cost note: each occupied device's [`Server`] opens the shared
 //! artifact directory itself (manifest + parameters are read per device,
 //! mirroring per-GPU weight replication); idle devices spawn nothing.
+//! Synthetic backends ([`ServerBackend::Synthetic`], via
+//! [`ClusterServer::start_with_backend`]) skip artifact I/O entirely.
 //!
 //! [`Placement`]: crate::plan::Placement
 //! [`ShardedDeployment`]: crate::engine::ShardedDeployment
 
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
-use super::server::{Server, ServerConfig, TenantSpec};
+use super::completion::Pending;
+use super::server::{Server, ServerBackend, ServerConfig, TenantSpec};
 use crate::engine::{Deployment, ShardedDeployment};
 use crate::error::{Error, Result};
 
@@ -42,18 +58,27 @@ struct ClusterState {
     routing: Vec<(usize, usize)>,
 }
 
+/// Shared innards of a cluster handle: the routing state plus the
+/// appliers' serialization lock (held across an `apply`'s preflight so
+/// two concurrent appliers cannot both validate against the same
+/// snapshot and then clobber each other's commits).
+struct ClusterShared {
+    state: RwLock<ClusterState>,
+    apply_lock: Mutex<()>,
+}
+
 /// Handle to a running multi-device deployment: per-device [`Server`]s
 /// plus the placement-derived routing table. Cloneable, like [`Server`];
 /// dropping the last handle stops every device's scheduler after it
 /// drains outstanding work.
 #[derive(Clone)]
 pub struct ClusterServer {
-    artifact_dir: String,
-    state: Arc<RwLock<ClusterState>>,
+    backend: ServerBackend,
+    shared: Arc<ClusterShared>,
 }
 
-fn read_state(state: &RwLock<ClusterState>) -> std::sync::RwLockReadGuard<'_, ClusterState> {
-    state.read().unwrap_or_else(|e| e.into_inner())
+fn read_state(shared: &ClusterShared) -> std::sync::RwLockReadGuard<'_, ClusterState> {
+    shared.state.read().unwrap_or_else(|e| e.into_inner())
 }
 
 impl ClusterServer {
@@ -117,6 +142,23 @@ impl ClusterServer {
         per_device: Vec<(Vec<TenantSpec>, ServerConfig)>,
         routing: Vec<(usize, usize)>,
     ) -> Result<ClusterServer> {
+        Self::start_with_backend(
+            ServerBackend::Artifacts(artifact_dir.to_string()),
+            per_device,
+            routing,
+        )
+    }
+
+    /// [`ClusterServer::start`] over an explicit [`ServerBackend`] —
+    /// with [`ServerBackend::Synthetic`] the whole cluster (routing,
+    /// per-device schedulers, hot swaps) runs without artifacts, which
+    /// is how the load generator and the concurrency stress tests drive
+    /// the production request path everywhere.
+    pub fn start_with_backend(
+        backend: ServerBackend,
+        per_device: Vec<(Vec<TenantSpec>, ServerConfig)>,
+        routing: Vec<(usize, usize)>,
+    ) -> Result<ClusterServer> {
         let sizes: Vec<usize> = per_device.iter().map(|(t, _)| t.len()).collect();
         Self::validate_routing(&routing, &sizes)?;
         let mut servers = Vec::with_capacity(per_device.len());
@@ -125,13 +167,20 @@ impl ClusterServer {
             servers.push(if tenants.is_empty() {
                 None
             } else {
-                Some(Server::start(artifact_dir, tenants.clone(), cfg.clone())?)
+                Some(Server::start_with_backend(
+                    backend.clone(),
+                    tenants.clone(),
+                    cfg.clone(),
+                )?)
             });
             deployments.push(Deployment { tenants, config: cfg });
         }
         Ok(ClusterServer {
-            artifact_dir: artifact_dir.to_string(),
-            state: Arc::new(RwLock::new(ClusterState { servers, deployments, routing })),
+            backend,
+            shared: Arc::new(ClusterShared {
+                state: RwLock::new(ClusterState { servers, deployments, routing }),
+                apply_lock: Mutex::new(()),
+            }),
         })
     }
 
@@ -157,35 +206,25 @@ impl ClusterServer {
     ///   already flushed by the destination-side fence semantics of
     ///   [`Server::apply`], or drain here).
     ///
-    /// The routing table swaps in the same fenced step. Requests
-    /// **in flight** when `apply` is called complete under the routing
-    /// they started with (their device still serves them — see the
-    /// per-server fence semantics); requests submitted during the swap
-    /// block until it commits, then route by the new table. Nothing is
-    /// dropped in either case, but expect one swap's worth of added
-    /// latency (a scheduler round per changed device, plus executor
-    /// startup if a device comes online).
+    /// Concurrency: appliers serialize on a dedicated lock, and all the
+    /// *expensive* fallible work — routing validation, per-device
+    /// preflight, and bringing fresh servers up — happens **before** the
+    /// routing write lock is taken, so request submission keeps flowing
+    /// while a swap validates and warms up. The write lock is held only
+    /// for the epoch fences and the routing-table swap — exactly the
+    /// window the fence semantics require. Requests **in flight** when
+    /// the lock is taken are unaffected (waiting happens outside the
+    /// lock; their batcher entries survive by tenant identity); requests
+    /// submitted during the fence block briefly, then route by the new
+    /// table. Nothing is dropped in either case.
     ///
-    /// Failure semantics: every fallible step runs **before** any
-    /// running server is touched — the routing table validates, each
-    /// in-place swap preflights (config, shape, name uniqueness,
-    /// variant resolution against that device's manifest), and every
-    /// newly needed server starts — so a malformed deployment or a
-    /// failed device bring-up is rejected with the running cluster
-    /// unchanged. A swap can then only fail on a device whose scheduler
-    /// has already died; the commit finishes the remaining healthy
-    /// devices, swaps the routing table so every living device ends
-    /// consistent with it, and returns that device's error (it needs a
-    /// restart — it was failing requests regardless).
-    ///
-    /// Note on fencing: `infer` holds read access for a request's
-    /// lifetime, so this method waits for in-flight requests and blocks
-    /// new ones — on *every* device, including unchanged ones — for the
-    /// duration of the swap (unchanged devices' servers are not fenced
-    /// or touched, but their new traffic waits with everyone else's).
-    /// `std::sync::RwLock`'s fairness is platform-dependent; on the
-    /// targeted futex-based platforms a queued writer blocks new
-    /// readers, so the swap cannot be starved by request traffic.
+    /// Failure semantics: a malformed deployment or a failed device
+    /// bring-up is rejected with the running cluster unchanged (every
+    /// fallible step precedes the commit). A swap can then only fail on
+    /// a device whose scheduler has already died; the commit finishes
+    /// the remaining healthy devices, swaps the routing table so every
+    /// living device ends consistent with it, and returns that device's
+    /// error (it needs a restart — it was failing requests regardless).
     ///
     /// ```no_run
     /// use gacer::coordinator::BatchPolicy;
@@ -206,48 +245,64 @@ impl ClusterServer {
     /// assert_eq!(touched.len(), 1);
     /// ```
     pub fn apply(&self, deployment: ShardedDeployment) -> Result<Vec<usize>> {
+        // One applier at a time: the preflight below validates against a
+        // snapshot, and this lock guarantees no other applier commits
+        // between that snapshot and ours.
+        let _serialized = self.shared.apply_lock.lock().unwrap_or_else(|e| e.into_inner());
+
         let sizes: Vec<usize> =
             deployment.per_device.iter().map(|d| d.tenants.len()).collect();
         Self::validate_routing(&deployment.routing, &sizes)?;
-        // The write lock is the cluster-level fence: in-flight requests
-        // hold read access until answered, so the swap waits for them;
-        // new requests wait for the swap.
-        let mut st = self.state.write().unwrap_or_else(|e| e.into_inner());
-        if deployment.per_device.len() != st.servers.len() {
+
+        // Snapshot under a read lock (server handles are cheap clones);
+        // request traffic keeps flowing through everything below until
+        // the commit.
+        let (servers, deployments) = {
+            let st = read_state(&self.shared);
+            (st.servers.clone(), st.deployments.clone())
+        };
+        if deployment.per_device.len() != servers.len() {
             return Err(Error::InvalidConfig(format!(
                 "deployment spans {} devices, cluster runs {}",
                 deployment.per_device.len(),
-                st.servers.len()
+                servers.len()
             )));
         }
-        // Run every fallible step BEFORE touching any running server:
-        // preflight each in-place swap (config, shape, names, variants
-        // against that server's manifest — server.apply repeats this
-        // internally, which is cheap and keeps one code path) and bring
-        // devices coming online up (manifest/params I/O, executor
-        // warmup, config validation in Server::start). Failing anywhere
-        // here leaves the cluster exactly as it was — fresh servers are
-        // dropped without ever having been routed to.
+        // Run every fallible step BEFORE touching any running server or
+        // taking the write lock: preflight each in-place swap (config,
+        // shape, names, variants against that server's backend —
+        // server.apply repeats this internally, which is cheap and keeps
+        // one code path) and bring devices coming online up (manifest/
+        // params I/O, executor warmup, config validation in
+        // Server::start). Failing anywhere here leaves the cluster
+        // exactly as it was — fresh servers are dropped without ever
+        // having been routed to.
         let mut fresh: Vec<(usize, Server)> = Vec::new();
         for (d, dep) in deployment.per_device.iter().enumerate() {
-            if *dep == st.deployments[d] || dep.tenants.is_empty() {
+            if *dep == deployments[d] || dep.tenants.is_empty() {
                 continue;
             }
-            match &st.servers[d] {
+            match &servers[d] {
                 Some(server) => {
                     server.preflight_apply(dep)?;
                 }
                 None => fresh.push((
                     d,
-                    Server::start(&self.artifact_dir, dep.tenants.clone(), dep.config.clone())?,
+                    Server::start_with_backend(
+                        self.backend.clone(),
+                        dep.tenants.clone(),
+                        dep.config.clone(),
+                    )?,
                 )),
             }
         }
-        // Commit. From here on the only possible failure is a device
-        // whose scheduler has died (its preflight passed); the loop
-        // finishes the remaining healthy devices and STILL swaps the
-        // routing table so every living device ends consistent with it,
-        // then reports the dead device's error.
+        // Commit under the write lock: epoch fences + routing swap only.
+        // From here on the only possible failure is a device whose
+        // scheduler has died (its preflight passed); the loop finishes
+        // the remaining healthy devices and STILL swaps the routing
+        // table so every living device ends consistent with it, then
+        // reports the dead device's error.
+        let mut st = self.shared.state.write().unwrap_or_else(|e| e.into_inner());
         let mut touched = Vec::new();
         let mut first_err = None;
         for (d, dep) in deployment.per_device.into_iter().enumerate() {
@@ -281,13 +336,15 @@ impl ClusterServer {
         }
     }
 
-    /// Submit one request for a *global* tenant slot and wait for its
-    /// output row; the cluster routes it to the tenant's device. Holds
-    /// read access to the routing for the request's lifetime, so a
-    /// concurrent [`ClusterServer::apply`] cannot shift slots underneath
-    /// it (the swap waits instead).
-    pub fn infer(&self, tenant: usize, input: Vec<f32>) -> Result<Vec<f32>> {
-        let st = read_state(&self.state);
+    /// Submit one request for a *global* tenant slot without waiting:
+    /// resolve the route and enqueue on the tenant's device under a
+    /// **short** read lock, then return the [`Pending`] handle — waiting
+    /// happens entirely outside the routing lock, so a concurrent
+    /// [`ClusterServer::apply`] is never stuck behind in-flight
+    /// requests (and vice versa). Open-loop clients (the load generator)
+    /// keep thousands of these outstanding.
+    pub fn submit(&self, tenant: usize, input: Vec<f32>) -> Result<Pending> {
+        let st = read_state(&self.shared);
         let &(d, l) = st.routing.get(tenant).ok_or_else(|| {
             Error::InvalidConfig(format!(
                 "request for tenant {tenant}, only {} deployed",
@@ -298,35 +355,43 @@ impl ClusterServer {
         let server = st.servers[d].as_ref().ok_or_else(|| {
             Error::InvalidConfig(format!("tenant {tenant} routed to idle device {d}"))
         })?;
-        server.infer(l, input)
+        server.submit(l, input)
+        // Read guard drops here: the request is enqueued FIFO ahead of
+        // any later fence, so a swap can never strand or re-route it.
+    }
+
+    /// Submit one request and wait for its output row (the closed-loop
+    /// convenience over [`ClusterServer::submit`]).
+    pub fn infer(&self, tenant: usize, input: Vec<f32>) -> Result<Vec<f32>> {
+        self.submit(tenant, input)?.wait()
     }
 
     /// Number of devices (including idle ones).
     pub fn n_devices(&self) -> usize {
-        read_state(&self.state).servers.len()
+        read_state(&self.shared).servers.len()
     }
 
     /// The server of one device, for introspection (each exposes its own
     /// effective `tenant_specs()` / `issue_order()` / `epoch()`); `None`
     /// for a device the current placement leaves idle.
     pub fn server(&self, device: usize) -> Option<Server> {
-        read_state(&self.state).servers.get(device).and_then(Clone::clone)
+        read_state(&self.shared).servers.get(device).and_then(Clone::clone)
     }
 
     /// The global-slot routing table currently in effect.
     pub fn routing(&self) -> Vec<(usize, usize)> {
-        read_state(&self.state).routing.clone()
+        read_state(&self.shared).routing.clone()
     }
 
     /// Where a global tenant slot is served: `(device, local slot)`.
     pub fn route_of(&self, tenant: usize) -> Option<(usize, usize)> {
-        read_state(&self.state).routing.get(tenant).copied()
+        read_state(&self.shared).routing.get(tenant).copied()
     }
 
     /// Per-device swap epochs (0 for idle devices and for servers still
     /// on their start-time plan).
     pub fn epochs(&self) -> Vec<u64> {
-        read_state(&self.state)
+        read_state(&self.shared)
             .servers
             .iter()
             .map(|s| s.as_ref().map_or(0, Server::epoch))
@@ -341,7 +406,7 @@ impl ClusterServer {
     /// tenant id, so a counter restarting when its tenant migrates (the
     /// new device starts it fresh) is handled.
     pub fn served_counts(&self) -> Vec<u64> {
-        let st = read_state(&self.state);
+        let st = read_state(&self.shared);
         let per_device: Vec<Vec<u64>> = st
             .servers
             .iter()
@@ -359,7 +424,7 @@ impl ClusterServer {
     /// cluster-wide proof that overload protection answered — rather
     /// than dropped — every rejected request.
     pub fn shed_counts(&self) -> Vec<u64> {
-        let st = read_state(&self.state);
+        let st = read_state(&self.shared);
         let per_device: Vec<Vec<u64>> = st
             .servers
             .iter()
@@ -376,7 +441,7 @@ impl ClusterServer {
     /// routing table) — the per-window feed for
     /// [`crate::engine::GacerEngine::record_latencies`].
     pub fn take_latencies(&self) -> Vec<Vec<f64>> {
-        let st = read_state(&self.state);
+        let st = read_state(&self.shared);
         let mut per_device: Vec<Vec<Vec<f64>>> = st
             .servers
             .iter()

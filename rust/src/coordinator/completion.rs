@@ -1,0 +1,324 @@
+//! Sharded, batch-notified completion queues — the request hot path's
+//! reply fabric.
+//!
+//! The original coordinator answered every request over its own
+//! `mpsc::channel`: one allocation, one `HashMap` registration, and one
+//! wakeup syscall per request. Under open-loop load (see
+//! `bench_util::loadgen`) that per-request machinery is pure scheduling
+//! overhead — the multi-tenant serving literature identifies exactly this
+//! layer as a first-order throughput ceiling. This module replaces it:
+//!
+//! * a waiter takes a **ticket** (one atomic increment, no allocation)
+//!   and parks on the condvar of the shard its ticket hashes to;
+//! * the scheduler answers a whole drained batch with **one lock
+//!   acquisition and one `notify_all` per touched shard**
+//!   ([`CompletionQueues::complete_batch`]) instead of one channel send
+//!   per request;
+//! * sharding (power-of-two shard count, ticket id modulo) keeps
+//!   concurrent waiters of different requests off each other's locks.
+//!
+//! The legacy per-request channel path is preserved behind
+//! [`CompletionMode::PerRequest`] so the `gacer-bench throughput` sweep
+//! can measure both arms from one binary.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+
+use crate::error::{Error, Result};
+
+/// How a [`Server`](super::Server) hands request results back to waiting
+/// clients. Chosen per server at start time (a hot swap does not change
+/// it: the mode is a property of the submit-side handle, not of the
+/// plan).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CompletionMode {
+    /// Sharded completion queues with batched wakeups (the default):
+    /// ticket per request, one notify per shard per drained batch.
+    #[default]
+    Batched,
+    /// One `mpsc::channel` per request — the pre-refactor hot path, kept
+    /// as the measured baseline arm of `gacer-bench throughput`.
+    PerRequest,
+}
+
+impl CompletionMode {
+    /// Stable label for reports and `BENCH_throughput.json`.
+    pub fn label(&self) -> &'static str {
+        match self {
+            CompletionMode::Batched => "batched",
+            CompletionMode::PerRequest => "per-request",
+        }
+    }
+
+    /// Parse a CLI spelling (`batched` / `per-request`).
+    pub fn parse(s: &str) -> Option<CompletionMode> {
+        match s {
+            "batched" => Some(CompletionMode::Batched),
+            "per-request" | "per_request" | "channel" => Some(CompletionMode::PerRequest),
+            _ => None,
+        }
+    }
+}
+
+/// Shard count. Power of two so `id % N_SHARDS` compiles to a mask; 16
+/// shards keep dozens of concurrent client threads from contending on
+/// one mutex while staying small enough that a batch completion rarely
+/// touches more than a few locks.
+const N_SHARDS: usize = 16;
+
+struct ShardState {
+    /// Results whose waiters have not collected them yet.
+    done: HashMap<u64, Result<Vec<f32>>>,
+    /// Set once by [`CompletionQueues::close`] when the scheduler exits:
+    /// waiters drain any result already posted, then fail fast instead
+    /// of parking forever.
+    closed: bool,
+}
+
+struct Shard {
+    state: Mutex<ShardState>,
+    cv: Condvar,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            state: Mutex::new(ShardState { done: HashMap::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, ShardState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// The sharded completion fabric of one running server. Shared between
+/// the scheduler thread (producer) and every client thread parked in
+/// [`Pending::wait`] (consumers).
+pub(crate) struct CompletionQueues {
+    shards: [Shard; N_SHARDS],
+    next_id: AtomicU64,
+}
+
+impl CompletionQueues {
+    pub(crate) fn new() -> Arc<CompletionQueues> {
+        Arc::new(CompletionQueues {
+            shards: std::array::from_fn(|_| Shard::new()),
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    /// Allocate a fresh ticket id (one relaxed atomic increment — the
+    /// whole per-request submit-side cost of the batched path).
+    pub(crate) fn ticket(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn shard_of(&self, id: u64) -> &Shard {
+        &self.shards[(id as usize) % N_SHARDS]
+    }
+
+    /// Post one result (degenerate batch of one).
+    pub(crate) fn complete(&self, id: u64, result: Result<Vec<f32>>) {
+        self.complete_batch(std::iter::once((id, result)));
+    }
+
+    /// Post a batch of results: group by shard, then take each touched
+    /// shard's lock **once** and wake all of its waiters with **one**
+    /// `notify_all` — batch-granular wakeups instead of per-request
+    /// notification.
+    pub(crate) fn complete_batch<I>(&self, results: I)
+    where
+        I: IntoIterator<Item = (u64, Result<Vec<f32>>)>,
+    {
+        let mut per_shard: [Vec<(u64, Result<Vec<f32>>)>; N_SHARDS] =
+            std::array::from_fn(|_| Vec::new());
+        for (id, r) in results {
+            per_shard[(id as usize) % N_SHARDS].push((id, r));
+        }
+        for (shard, batch) in self.shards.iter().zip(per_shard) {
+            if batch.is_empty() {
+                continue;
+            }
+            let mut st = shard.lock();
+            for (id, r) in batch {
+                st.done.insert(id, r);
+            }
+            drop(st);
+            shard.cv.notify_all();
+        }
+    }
+
+    /// Block until the result of `id` is posted and take it. Errors with
+    /// [`Error::ChannelClosed`] if the scheduler closed the fabric
+    /// without answering this ticket (scheduler death — a drained
+    /// shutdown answers everything first).
+    pub(crate) fn wait(&self, id: u64) -> Result<Vec<f32>> {
+        let shard = self.shard_of(id);
+        let mut st = shard.lock();
+        loop {
+            if let Some(r) = st.done.remove(&id) {
+                return r;
+            }
+            if st.closed {
+                return Err(Error::ChannelClosed("server completion queue"));
+            }
+            st = shard.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Mark the fabric closed and wake every parked waiter. Results
+    /// already posted stay collectable (waiters check the table before
+    /// the closed flag); unanswered tickets fail with
+    /// [`Error::ChannelClosed`] instead of hanging.
+    pub(crate) fn close(&self) {
+        for shard in &self.shards {
+            let mut st = shard.lock();
+            st.closed = true;
+            drop(st);
+            shard.cv.notify_all();
+        }
+    }
+}
+
+/// How the scheduler answers one queued request. Carried inside the
+/// request itself (`PendingRequest::reply`) so answering needs no
+/// side-table lookup and survives hot-swap slot moves by construction.
+#[derive(Debug)]
+pub(crate) enum Reply {
+    /// Batched path: post to the completion fabric under this ticket.
+    Ticket(u64),
+    /// Legacy path: answer on the request's own channel.
+    Channel(mpsc::Sender<Result<Vec<f32>>>),
+    /// No waiter (batcher unit tests / detached benchmark requests).
+    Detached,
+}
+
+/// An in-flight request handle: redeem with [`Pending::wait`] for the
+/// output row. Returned by `Server::submit` / `ClusterServer::submit` so
+/// open-loop clients can decouple submission from collection — the load
+/// generator keeps tens of thousands of these outstanding.
+pub struct Pending {
+    inner: PendingInner,
+}
+
+enum PendingInner {
+    Ticket { id: u64, queues: Arc<CompletionQueues> },
+    Channel(mpsc::Receiver<Result<Vec<f32>>>),
+}
+
+impl Pending {
+    pub(crate) fn ticket(id: u64, queues: Arc<CompletionQueues>) -> Pending {
+        Pending { inner: PendingInner::Ticket { id, queues } }
+    }
+
+    pub(crate) fn channel(rx: mpsc::Receiver<Result<Vec<f32>>>) -> Pending {
+        Pending { inner: PendingInner::Channel(rx) }
+    }
+
+    /// Block until the request is answered. Every submitted request is
+    /// answered exactly once — with its output row or a typed error
+    /// (shed, backend failure, or [`Error::ChannelClosed`] if the server
+    /// died mid-flight).
+    pub fn wait(self) -> Result<Vec<f32>> {
+        match self.inner {
+            PendingInner::Ticket { id, queues } => queues.wait(id),
+            PendingInner::Channel(rx) => {
+                rx.recv().map_err(|_| Error::ChannelClosed("server request"))?
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Pending {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.inner {
+            PendingInner::Ticket { id, .. } => write!(f, "Pending::Ticket({id})"),
+            PendingInner::Channel(_) => write!(f, "Pending::Channel"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ticket_ids_are_unique_and_dense() {
+        let q = CompletionQueues::new();
+        let ids: Vec<u64> = (0..100).map(|_| q.ticket()).collect();
+        assert_eq!(ids, (0..100).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn complete_then_wait_returns_the_result() {
+        let q = CompletionQueues::new();
+        let id = q.ticket();
+        q.complete(id, Ok(vec![1.0, 2.0]));
+        assert_eq!(q.wait(id).unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn wait_blocks_until_batch_completion_lands() {
+        let q = CompletionQueues::new();
+        // Tickets spanning several shards, answered in one batch from
+        // another thread while the main thread waits.
+        let ids: Vec<u64> = (0..40).map(|_| q.ticket()).collect();
+        let producer = {
+            let q = Arc::clone(&q);
+            let ids = ids.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                q.complete_batch(ids.into_iter().map(|id| (id, Ok(vec![id as f32]))));
+            })
+        };
+        for id in ids {
+            assert_eq!(q.wait(id).unwrap(), vec![id as f32]);
+        }
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn close_fails_unanswered_tickets_but_keeps_posted_results() {
+        let q = CompletionQueues::new();
+        let answered = q.ticket();
+        let orphaned = q.ticket();
+        q.complete(answered, Ok(vec![7.0]));
+        q.close();
+        assert_eq!(q.wait(answered).unwrap(), vec![7.0], "posted result survives close");
+        match q.wait(orphaned) {
+            Err(Error::ChannelClosed(_)) => {}
+            other => panic!("expected ChannelClosed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn close_wakes_a_parked_waiter() {
+        let q = CompletionQueues::new();
+        let id = q.ticket();
+        let waiter = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || q.wait(id))
+        };
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        q.close();
+        match waiter.join().unwrap() {
+            Err(Error::ChannelClosed(_)) => {}
+            other => panic!("expected ChannelClosed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn completion_mode_parses_labels() {
+        assert_eq!(CompletionMode::parse("batched"), Some(CompletionMode::Batched));
+        assert_eq!(
+            CompletionMode::parse("per-request"),
+            Some(CompletionMode::PerRequest)
+        );
+        assert_eq!(CompletionMode::parse("bogus"), None);
+        assert_eq!(CompletionMode::default().label(), "batched");
+        assert_eq!(CompletionMode::PerRequest.label(), "per-request");
+    }
+}

@@ -9,6 +9,7 @@
 //! schedule controls.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::error::{Error, Result};
@@ -17,10 +18,17 @@ use crate::runtime::Runtime;
 /// Response channel for one job.
 pub type Responder = mpsc::Sender<Result<Vec<Vec<f32>>>>;
 
-/// One execution job: artifact entry + input buffers.
+/// One execution job: artifact entry, the packed batch input, and the
+/// shared parameter buffers. Parameters are behind an `Arc` — submitting
+/// a job costs a refcount bump, not a copy of every weight buffer (the
+/// scheduler issues thousands of micro-batches per second against the
+/// same parameters).
 pub struct ExecJob {
     pub entry: String,
-    pub inputs: Vec<Vec<f32>>,
+    /// Packed `[variant * per_input]` batch input (argument 0).
+    pub x: Vec<f32>,
+    /// Loaded parameter buffers (arguments 1..), shared across jobs.
+    pub params: Arc<Vec<Vec<f32>>>,
     pub respond: Responder,
 }
 
@@ -56,7 +64,9 @@ impl ExecutorHandle {
                 }
                 let _ = ready_tx.send(Ok(()));
                 while let Ok(job) = rx.recv() {
-                    let refs: Vec<&[f32]> = job.inputs.iter().map(Vec::as_slice).collect();
+                    let mut refs: Vec<&[f32]> = Vec::with_capacity(1 + job.params.len());
+                    refs.push(job.x.as_slice());
+                    refs.extend(job.params.iter().map(Vec::as_slice));
                     let result = runtime.execute_f32(&job.entry, &refs);
                     // Receiver may have given up; dropping the result then
                     // is correct.
@@ -77,18 +87,24 @@ impl ExecutorHandle {
     pub fn submit(
         &self,
         entry: String,
-        inputs: Vec<Vec<f32>>,
+        x: Vec<f32>,
+        params: Arc<Vec<Vec<f32>>>,
     ) -> Result<mpsc::Receiver<Result<Vec<Vec<f32>>>>> {
         let (otx, orx) = mpsc::channel();
         self.tx
-            .send(ExecJob { entry, inputs, respond: otx })
+            .send(ExecJob { entry, x, params, respond: otx })
             .map_err(|_| Error::ChannelClosed("executor thread"))?;
         Ok(orx)
     }
 
     /// Submit and wait (examples/tests and the serial issue loop).
-    pub fn submit_blocking(&self, entry: String, inputs: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
-        let rx = self.submit(entry, inputs)?;
+    pub fn submit_blocking(
+        &self,
+        entry: String,
+        x: Vec<f32>,
+        params: Arc<Vec<Vec<f32>>>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let rx = self.submit(entry, x, params)?;
         rx.recv().map_err(|_| Error::ChannelClosed("executor response channel"))?
     }
 }

@@ -27,6 +27,16 @@
 //! drives both through `GacerEngine::redeploy`/`redeploy_cluster`; the
 //! operational model is documented in `docs/OPERATIONS.md`.
 //!
+//! Two request-path design points matter for throughput (measured by
+//! `gacer-bench throughput`, see `docs/BENCHMARKS.md`): results travel
+//! back over **sharded, batch-notified completion queues**
+//! ([`CompletionMode::Batched`]) rather than one channel per request,
+//! and [`Server::submit`] / [`ClusterServer::submit`] return a
+//! [`Pending`] handle so open-loop clients decouple submission from
+//! collection. A [`SyntheticModel`] backend
+//! ([`ServerBackend::Synthetic`]) runs the full path without compiled
+//! artifacts for load generation and concurrency tests.
+//!
 //! ```
 //! use gacer::coordinator::ServerConfig;
 //!
@@ -39,10 +49,15 @@
 
 mod batcher;
 mod cluster;
+mod completion;
 mod executor;
 mod server;
 
 pub use batcher::{BatchPolicy, Batcher, PendingRequest};
 pub use cluster::ClusterServer;
+pub use completion::{CompletionMode, Pending};
 pub use executor::{ExecJob, ExecutorHandle};
-pub use server::{serve_demo, ServeOptions, ServeReport, Server, ServerConfig, TenantSpec};
+pub use server::{
+    name_tag, serve_demo, ServeOptions, ServeReport, Server, ServerBackend, ServerConfig,
+    SyntheticModel, TenantSpec,
+};

@@ -14,6 +14,24 @@
 //! returns are scheduled under the new plan. No restart, no dropped
 //! executor, no recompiled artifacts.
 //!
+//! Two hot-path design points (measured by `gacer-bench throughput`,
+//! see `docs/BENCHMARKS.md`):
+//!
+//! * **Completion fabric.** Results flow back through sharded completion
+//!   queues with batch-granular wakeups ([`super::CompletionMode`],
+//!   default `Batched`) instead of one `mpsc::channel` per request;
+//!   [`Server::submit`] returns a [`Pending`] handle so open-loop
+//!   clients can keep thousands of requests in flight.
+//! * **Backends.** Besides the real artifact/PJRT executor, a server can
+//!   run a [`SyntheticModel`] ([`Server::start_synthetic`]): an
+//!   in-process stand-in that echoes each request's first input element
+//!   (request↔response pairing stays verifiable) and tags rows with the
+//!   serving tenant's name hash (mis-routing stays detectable). The
+//!   scheduler, batchers, SLO shedding, and hot-swap machinery are
+//!   byte-for-byte the production path — only the FLOPs are fake — which
+//!   is what lets the stress/property tests and the load generator run
+//!   without compiled artifacts.
+//!
 //! [`Deployment`]: crate::engine::Deployment
 
 use std::collections::{HashMap, VecDeque};
@@ -22,6 +40,7 @@ use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, Batcher, PendingRequest};
+use super::completion::{CompletionMode, CompletionQueues, Pending, Reply};
 use super::executor::ExecutorHandle;
 use crate::error::{Error, Result};
 use crate::metrics::LatencyHistogram;
@@ -75,6 +94,12 @@ pub struct ServerConfig {
     /// [`Error::DeadlineExceeded`], and arrivals beyond a tenant's
     /// `queue_cap` are answered with [`Error::Overloaded`].
     pub slo: Vec<SloPolicy>,
+    /// How results travel back to waiting clients: sharded
+    /// batch-notified completion queues (default) or the legacy
+    /// per-request channels. A property of the server handle fixed at
+    /// start — a hot swap carrying a different mode does not change it
+    /// (requests already carry their reply handles).
+    pub completion: CompletionMode,
 }
 
 impl Default for ServerConfig {
@@ -84,6 +109,7 @@ impl Default for ServerConfig {
             issue_order: Vec::new(),
             issue_quanta: Vec::new(),
             slo: Vec::new(),
+            completion: CompletionMode::default(),
         }
     }
 }
@@ -161,7 +187,63 @@ fn tiered_issue_order(order: &[usize], slo: &[SloPolicy]) -> Vec<usize> {
 struct Incoming {
     tenant: usize,
     input: Vec<f32>,
-    respond: mpsc::Sender<Result<Vec<f32>>>,
+    reply: Reply,
+}
+
+/// What actually executes issued batches.
+#[derive(Debug, Clone)]
+pub enum ServerBackend {
+    /// Compiled AOT artifacts in this directory, run on the dedicated
+    /// PJRT executor thread — the production path.
+    Artifacts(String),
+    /// An in-process synthetic model: no artifacts, no executor thread,
+    /// no `xla-runtime` feature. The full scheduler/batcher/SLO/hot-swap
+    /// path runs unchanged; only execution is simulated. This is the
+    /// backend of the load generator, the stress tests, and any
+    /// environment without compiled artifacts.
+    Synthetic(SyntheticModel),
+}
+
+/// The synthetic execution model of [`ServerBackend::Synthetic`].
+///
+/// Output contract, per batch row (`output_len` values, zero-padded):
+///
+/// * `row[0]` echoes the request's first input element — a client that
+///   submits a unique marker can verify its response is *its own*
+///   (exactly-once pairing across batching, chunking, and hot swaps);
+/// * `row[1]` (when `output_len >= 2`) is the serving tenant's
+///   [`name_tag`]: a request answered by the wrong tenant's queue —
+///   e.g. routed to a stale slot across a swap — is detectable.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SyntheticModel {
+    /// Output elements per request row (>= 1).
+    pub output_len: usize,
+    /// Busy-wait this long per *issued micro-batch*, simulating device
+    /// time. `0.0` measures pure scheduling overhead.
+    pub service_us_per_batch: f64,
+}
+
+impl SyntheticModel {
+    /// Echo model: 2-element rows (marker echo + tenant tag), zero
+    /// service time — the pure-overhead configuration.
+    pub fn echo() -> SyntheticModel {
+        SyntheticModel { output_len: 2, service_us_per_batch: 0.0 }
+    }
+
+    /// Echo model with a fixed per-batch service time in microseconds.
+    pub fn with_service_us(us: f64) -> SyntheticModel {
+        SyntheticModel { output_len: 2, service_us_per_batch: us.max(0.0) }
+    }
+}
+
+/// Stable tag of a tenant name, embedded in synthetic output rows (see
+/// [`SyntheticModel`]): a small integer-valued f32, exact under f32
+/// round-trips, so tests can assert which tenant's queue answered.
+pub fn name_tag(name: &str) -> f32 {
+    let h = name
+        .bytes()
+        .fold(0u32, |acc, b| acc.wrapping_mul(31).wrapping_add(u32::from(b)));
+    (h % 8192) as f32
 }
 
 /// A validated plan swap, resolved on the caller's thread and handed to
@@ -221,7 +303,12 @@ fn write_shared(shared: &RwLock<Shared>) -> std::sync::RwLockWriteGuard<'_, Shar
 pub struct Server {
     tx: mpsc::Sender<Msg>,
     shared: Arc<RwLock<Shared>>,
-    manifest: Arc<ArtifactManifest>,
+    completions: Arc<CompletionQueues>,
+    mode: CompletionMode,
+    /// `Some` for artifact backends (preflight resolves variants against
+    /// it), `None` for synthetic ones.
+    manifest: Option<Arc<ArtifactManifest>>,
+    synthetic: Option<SyntheticModel>,
 }
 
 /// Resolve the compiled batch variants of every tenant's family, plus the
@@ -245,6 +332,22 @@ fn resolve_variants(
     Ok((variants, warm))
 }
 
+/// Variant maps for a synthetic backend: every size the tenant's batch
+/// policy names is "compiled" (entry names are synthesized; the
+/// synthetic executor never looks one up).
+fn synthetic_variants(tenants: &[TenantSpec]) -> Vec<HashMap<usize, String>> {
+    tenants
+        .iter()
+        .map(|t| {
+            t.policy
+                .variants
+                .iter()
+                .map(|&v| (v, format!("{}#b{v}", t.family)))
+                .collect()
+        })
+        .collect()
+}
+
 /// Names are the identity hot swaps match queues by, so a deployment
 /// with two tenants sharing a name is rejected up front — both at
 /// [`Server::start`] and at every [`Server::apply`].
@@ -262,21 +365,70 @@ fn validate_unique_names(tenants: &[TenantSpec]) -> Result<()> {
 }
 
 impl Server {
-    /// Start the server: validates the configuration, opens the artifact
-    /// dir, warms the executor, and spawns the scheduler thread.
+    /// Start a server over compiled artifacts: validates the
+    /// configuration, opens the artifact dir, warms the executor, and
+    /// spawns the scheduler thread.
     pub fn start(
         artifact_dir: &str,
         tenants: Vec<TenantSpec>,
         cfg: ServerConfig,
     ) -> Result<Server> {
+        Server::start_with_backend(
+            ServerBackend::Artifacts(artifact_dir.to_string()),
+            tenants,
+            cfg,
+        )
+    }
+
+    /// Start a server over a [`SyntheticModel`]: the identical scheduler
+    /// pipeline with simulated execution — no artifacts or PJRT needed.
+    pub fn start_synthetic(
+        model: SyntheticModel,
+        tenants: Vec<TenantSpec>,
+        cfg: ServerConfig,
+    ) -> Result<Server> {
+        Server::start_with_backend(ServerBackend::Synthetic(model), tenants, cfg)
+    }
+
+    /// Start a server over an explicit [`ServerBackend`].
+    pub fn start_with_backend(
+        backend: ServerBackend,
+        tenants: Vec<TenantSpec>,
+        cfg: ServerConfig,
+    ) -> Result<Server> {
         cfg.validate(tenants.len())?;
         validate_unique_names(&tenants)?;
-        let manifest = ArtifactManifest::load(
-            std::path::Path::new(artifact_dir).join("manifest.json"),
-        )?;
-        let params = load_params(artifact_dir)?;
-        let (variants, warm) = resolve_variants(&manifest, &tenants)?;
-        let executor = ExecutorHandle::spawn(artifact_dir.to_string(), warm)?;
+        if let ServerBackend::Synthetic(m) = &backend {
+            if m.output_len == 0 {
+                return Err(Error::InvalidConfig(
+                    "synthetic model needs output_len >= 1".into(),
+                ));
+            }
+        }
+        let (manifest, synthetic, variants, params, exec) = match &backend {
+            ServerBackend::Artifacts(dir) => {
+                let manifest =
+                    ArtifactManifest::load(std::path::Path::new(dir).join("manifest.json"))?;
+                let params = load_params(dir)?;
+                let (variants, warm) = resolve_variants(&manifest, &tenants)?;
+                let executor = ExecutorHandle::spawn(dir.clone(), warm)?;
+                (
+                    Some(Arc::new(manifest)),
+                    None,
+                    variants,
+                    params,
+                    Exec::Executor(executor),
+                )
+            }
+            ServerBackend::Synthetic(m) => (
+                None,
+                Some(*m),
+                synthetic_variants(&tenants),
+                Vec::new(),
+                Exec::Synthetic(*m),
+            ),
+        };
+        let params: Arc<Vec<Vec<f32>>> = Arc::new(params);
 
         let issue_order = if cfg.issue_order.is_empty() {
             (0..tenants.len()).collect()
@@ -294,7 +446,6 @@ impl Server {
         }));
         let st = SchedulerState {
             batchers: tenants.iter().map(|t| Batcher::new(t.policy.clone())).collect(),
-            responders: (0..tenants.len()).map(|_| HashMap::new()).collect(),
             tenants,
             variants,
             issue_order,
@@ -302,13 +453,24 @@ impl Server {
             slo: cfg.slo.clone(),
             tick: cfg.tick,
         };
+        let completions = CompletionQueues::new();
         let thread_shared = Arc::clone(&shared);
+        let thread_completions = Arc::clone(&completions);
         let (tx, rx) = mpsc::channel();
         std::thread::Builder::new()
             .name("gacer-scheduler".into())
-            .spawn(move || scheduler_loop(rx, st, params, executor, thread_shared))
+            .spawn(move || {
+                scheduler_loop(rx, st, params, exec, thread_shared, thread_completions)
+            })
             .map_err(Error::Io)?;
-        Ok(Server { tx, shared, manifest: Arc::new(manifest) })
+        Ok(Server {
+            tx,
+            shared,
+            completions,
+            mode: cfg.completion,
+            manifest,
+            synthetic,
+        })
     }
 
     /// Hot-swap the deployment plan of a **running** server — the live
@@ -398,17 +560,51 @@ impl Server {
         }
         deployment.config.validate(deployment.tenants.len())?;
         validate_unique_names(&deployment.tenants)?;
-        let (variants, _warm) = resolve_variants(&self.manifest, &deployment.tenants)?;
+        let variants = match &self.manifest {
+            Some(m) => resolve_variants(m, &deployment.tenants)?.0,
+            None => synthetic_variants(&deployment.tenants),
+        };
         Ok(variants)
+    }
+
+    /// Submit one request without waiting: returns a [`Pending`] handle
+    /// to redeem later. This is the open-loop client path — submission
+    /// costs one ticket allocation and one channel send, so a load
+    /// generator can keep tens of thousands of requests in flight from
+    /// a few threads.
+    pub fn submit(&self, tenant: usize, input: Vec<f32>) -> Result<Pending> {
+        match self.mode {
+            CompletionMode::Batched => {
+                let id = self.completions.ticket();
+                self.tx
+                    .send(Msg::Request(Incoming { tenant, input, reply: Reply::Ticket(id) }))
+                    .map_err(|_| Error::ChannelClosed("server"))?;
+                Ok(Pending::ticket(id, Arc::clone(&self.completions)))
+            }
+            CompletionMode::PerRequest => {
+                let (otx, orx) = mpsc::channel();
+                self.tx
+                    .send(Msg::Request(Incoming { tenant, input, reply: Reply::Channel(otx) }))
+                    .map_err(|_| Error::ChannelClosed("server"))?;
+                Ok(Pending::channel(orx))
+            }
+        }
     }
 
     /// Submit one request and wait for its output row.
     pub fn infer(&self, tenant: usize, input: Vec<f32>) -> Result<Vec<f32>> {
-        let (otx, orx) = mpsc::channel();
-        self.tx
-            .send(Msg::Request(Incoming { tenant, input, respond: otx }))
-            .map_err(|_| Error::ChannelClosed("server"))?;
-        orx.recv().map_err(|_| Error::ChannelClosed("server request"))?
+        self.submit(tenant, input)?.wait()
+    }
+
+    /// The completion mode this handle submits under (fixed at start).
+    pub fn completion_mode(&self) -> CompletionMode {
+        self.mode
+    }
+
+    /// The synthetic model this server runs, if its backend is
+    /// [`ServerBackend::Synthetic`].
+    pub fn synthetic_model(&self) -> Option<SyntheticModel> {
+        self.synthetic
     }
 
     /// The deployed tenant specs (as the scheduler currently sees them —
@@ -461,15 +657,74 @@ impl Server {
 }
 
 /// Everything the scheduler owns that a hot swap replaces or remaps.
+/// (No per-request responder table: each queued request carries its own
+/// reply handle, so answering is table-free and slot moves cannot strand
+/// a waiter.)
 struct SchedulerState {
     tenants: Vec<TenantSpec>,
     variants: Vec<HashMap<usize, String>>,
     batchers: Vec<Batcher>,
-    responders: Vec<HashMap<u64, mpsc::Sender<Result<Vec<f32>>>>>,
     issue_order: Vec<usize>,
     issue_quanta: Vec<usize>,
     slo: Vec<SloPolicy>,
     tick: Duration,
+}
+
+/// The execution substrate behind the scheduler: the PJRT executor
+/// thread, or an inline synthetic model.
+enum Exec {
+    Executor(ExecutorHandle),
+    Synthetic(SyntheticModel),
+}
+
+impl Exec {
+    /// Run one issued micro-batch: `x` is the packed `[rows * per_input]`
+    /// input buffer, padded to `rows` (the compiled variant size).
+    fn run(
+        &self,
+        entry: &str,
+        x: Vec<f32>,
+        params: &Arc<Vec<Vec<f32>>>,
+        rows: usize,
+        per_input: usize,
+        tag: f32,
+    ) -> Result<Vec<Vec<f32>>> {
+        match self {
+            Exec::Executor(executor) => {
+                executor.submit_blocking(entry.to_string(), x, Arc::clone(params))
+            }
+            Exec::Synthetic(model) => {
+                if model.service_us_per_batch > 0.0 {
+                    let until = Instant::now()
+                        + Duration::from_nanos((model.service_us_per_batch * 1e3) as u64);
+                    while Instant::now() < until {
+                        std::hint::spin_loop();
+                    }
+                }
+                let len = model.output_len;
+                let mut out = vec![0.0f32; rows * len];
+                for i in 0..rows {
+                    out[i * len] = if per_input > 0 { x[i * per_input] } else { 0.0 };
+                    if len >= 2 {
+                        out[i * len + 1] = tag;
+                    }
+                }
+                Ok(vec![out])
+            }
+        }
+    }
+}
+
+/// Answer one request's reply outside a batch context (admission errors,
+/// queue-cap sheds).
+fn answer(reply: Reply, completions: &CompletionQueues, result: Result<Vec<f32>>) {
+    match reply {
+        Reply::Ticket(id) => completions.complete(id, result),
+        Reply::Channel(tx) => {
+            let _ = tx.send(result);
+        }
+        Reply::Detached => {}
+    }
 }
 
 /// Claim old tenant slots for a new tenant list, by `(name, family)`
@@ -529,9 +784,10 @@ fn record_latency(shared: &RwLock<Shared>, tenant: usize, samples_us: &[f64]) {
 fn apply_swap(
     st: &mut SchedulerState,
     swap: ApplyMsg,
-    params: &[Vec<f32>],
-    executor: &ExecutorHandle,
+    params: &Arc<Vec<Vec<f32>>>,
+    exec: &Exec,
     shared: &RwLock<Shared>,
+    completions: &CompletionQueues,
 ) {
     let ApplyMsg { tenants, variants, issue_order, issue_quanta, slo, tick, ack } = swap;
     let claims = claim_slots(&st.tenants, &tenants);
@@ -550,12 +806,13 @@ fn apply_swap(
             continue;
         }
         while let Some((variant, batch)) = st.batchers[old].flush() {
+            bump_served(shared, old, batch.len());
             issue_batch(
                 &st.tenants[old],
                 &st.variants[old],
                 params,
-                executor,
-                &mut st.responders[old],
+                exec,
+                completions,
                 variant,
                 batch,
                 shared,
@@ -564,11 +821,10 @@ fn apply_swap(
         }
     }
 
-    // Rebuild per-slot state in new slot order, moving surviving queues.
+    // Rebuild per-slot state in new slot order, moving surviving queues
+    // (requests carry their reply handles with them — nothing to remap).
     let mut old_batchers: Vec<Option<Batcher>> =
         st.batchers.drain(..).map(Some).collect();
-    let mut old_responders: Vec<Option<HashMap<_, _>>> =
-        st.responders.drain(..).map(Some).collect();
     let (old_served, old_shed) = {
         let sh = read_shared(shared);
         (sh.served.clone(), sh.shed.clone())
@@ -581,13 +837,11 @@ fn apply_swap(
                 let mut b = old_batchers[*o].take().expect("slot claimed once");
                 b.set_policy(tenants[i].policy.clone());
                 st.batchers.push(b);
-                st.responders.push(old_responders[*o].take().expect("slot claimed once"));
                 served.push(old_served.get(*o).copied().unwrap_or(0));
                 shed.push(old_shed.get(*o).copied().unwrap_or(0));
             }
             None => {
                 st.batchers.push(Batcher::new(tenants[i].policy.clone()));
-                st.responders.push(HashMap::new());
                 served.push(0);
                 shed.push(0);
             }
@@ -621,19 +875,36 @@ fn apply_swap(
     let _ = ack.send(());
 }
 
+/// Drop guard: whatever path the scheduler exits by (drained shutdown or
+/// panic), the completion fabric is closed so no client stays parked on
+/// a ticket that will never be answered.
+struct CloseOnExit(Arc<CompletionQueues>);
+
+impl Drop for CloseOnExit {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
 fn scheduler_loop(
     rx: mpsc::Receiver<Msg>,
     mut st: SchedulerState,
-    params: Vec<Vec<f32>>,
-    executor: ExecutorHandle,
+    params: Arc<Vec<Vec<f32>>>,
+    exec: Exec,
     shared: Arc<RwLock<Shared>>,
+    completions: Arc<CompletionQueues>,
 ) {
+    let _close_guard = CloseOnExit(Arc::clone(&completions));
     let mut next_id = 0u64;
     let mut open = true;
 
     while open || st.batchers.iter().any(|b| b.pending() > 0) {
         // Collect requests for up to one tick. Plan swaps arriving here
         // are deferred to the round boundary below (the epoch fence).
+        // The channel is FIFO, so every request submitted before an
+        // `apply`'s fence message is queued under the pre-swap slot
+        // numbering — by the time the swap commits, those requests sit
+        // in batchers and move by (name, family) identity.
         let mut pending_swaps: Vec<ApplyMsg> = Vec::new();
         let deadline = Instant::now() + st.tick;
         loop {
@@ -645,10 +916,14 @@ fn scheduler_loop(
                 Ok(Msg::Request(msg)) => {
                     let n = st.tenants.len();
                     if msg.tenant >= n {
-                        let _ = msg.respond.send(Err(Error::InvalidConfig(format!(
-                            "request for tenant {}, only {n} deployed",
-                            msg.tenant
-                        ))));
+                        answer(
+                            msg.reply,
+                            &completions,
+                            Err(Error::InvalidConfig(format!(
+                                "request for tenant {}, only {n} deployed",
+                                msg.tenant
+                            ))),
+                        );
                         continue;
                     }
                     // Overload protection: a bounded queue sheds at
@@ -657,21 +932,25 @@ fn scheduler_loop(
                     if let Some(cap) = st.slo.get(msg.tenant).and_then(|p| p.queue_cap) {
                         let pending = st.batchers[msg.tenant].pending();
                         if pending >= cap {
-                            let _ = msg.respond.send(Err(Error::Overloaded(format!(
-                                "tenant {}: queue full ({pending} pending, cap {cap})",
-                                st.tenants[msg.tenant].name
-                            ))));
+                            answer(
+                                msg.reply,
+                                &completions,
+                                Err(Error::Overloaded(format!(
+                                    "tenant {}: queue full ({pending} pending, cap {cap})",
+                                    st.tenants[msg.tenant].name
+                                ))),
+                            );
                             bump_shed(&shared, msg.tenant, 1);
                             continue;
                         }
                     }
                     let id = next_id;
                     next_id += 1;
-                    st.responders[msg.tenant].insert(id, msg.respond);
                     st.batchers[msg.tenant].push(PendingRequest {
                         id,
                         input: msg.input,
                         enqueued: Instant::now(),
+                        reply: msg.reply,
                     });
                 }
                 Ok(Msg::Apply(a)) => pending_swaps.push(a),
@@ -687,8 +966,10 @@ fn scheduler_loop(
         // past its per-request deadline is answered with the typed shed
         // error instead of occupying issue capacity it cannot benefit
         // from (late answers would only push the requests behind it past
-        // their own deadlines).
+        // their own deadlines). All of a round's expiries are answered
+        // with one batched completion.
         let now = Instant::now();
+        let mut shed_replies: Vec<(Reply, Result<Vec<f32>>)> = Vec::new();
         for t in 0..st.batchers.len() {
             let Some(dl) = st.slo.get(t).and_then(|p| p.deadline) else { continue };
             let expired = st.batchers[t].expire(now, dl);
@@ -697,14 +978,16 @@ fn scheduler_loop(
             }
             bump_shed(&shared, t, expired.len());
             for r in expired {
-                if let Some(tx) = st.responders[t].remove(&r.id) {
-                    let _ = tx.send(Err(Error::DeadlineExceeded(format!(
+                shed_replies.push((
+                    r.reply,
+                    Err(Error::DeadlineExceeded(format!(
                         "tenant {}: request queued past its {dl:?} deadline",
                         st.tenants[t].name
-                    ))));
-                }
+                    ))),
+                ));
             }
         }
+        answer_all(shed_replies, &completions);
 
         // Issue ready batches in (tier-major) GACER order, bounded per
         // tenant by its segment-derived quantum (leftovers go next round —
@@ -719,8 +1002,8 @@ fn scheduler_loop(
                 // must already be visible in `served_counts`.
                 bump_served(&shared, t, batch.len());
                 issue_batch(
-                    &st.tenants[t], &st.variants[t], &params, &executor,
-                    &mut st.responders[t], variant, batch, &shared, t,
+                    &st.tenants[t], &st.variants[t], &params, &exec,
+                    &completions, variant, batch, &shared, t,
                 );
                 issued += 1;
             }
@@ -729,7 +1012,7 @@ fn scheduler_loop(
         // Round boundary: the in-flight round has drained — commit any
         // swaps that arrived during it, in order.
         for swap in pending_swaps {
-            apply_swap(&mut st, swap, &params, &executor, &shared);
+            apply_swap(&mut st, swap, &params, &exec, &shared, &completions);
         }
 
         if !open {
@@ -738,8 +1021,8 @@ fn scheduler_loop(
                 while let Some((variant, batch)) = st.batchers[t].flush() {
                     bump_served(&shared, t, batch.len());
                     issue_batch(
-                        &st.tenants[t], &st.variants[t], &params, &executor,
-                        &mut st.responders[t], variant, batch, &shared, t,
+                        &st.tenants[t], &st.variants[t], &params, &exec,
+                        &completions, variant, batch, &shared, t,
                     );
                 }
             }
@@ -748,17 +1031,38 @@ fn scheduler_loop(
     }
 }
 
+/// Answer a set of replies, batching every ticket into one completion
+/// call (one lock + one wakeup per touched shard).
+fn answer_all(replies: Vec<(Reply, Result<Vec<f32>>)>, completions: &CompletionQueues) {
+    let mut tickets: Vec<(u64, Result<Vec<f32>>)> = Vec::with_capacity(replies.len());
+    for (reply, result) in replies {
+        match reply {
+            Reply::Ticket(id) => tickets.push((id, result)),
+            Reply::Channel(tx) => {
+                let _ = tx.send(result);
+            }
+            Reply::Detached => {}
+        }
+    }
+    if !tickets.is_empty() {
+        completions.complete_batch(tickets);
+    }
+}
+
 /// Execute one drained batch — possibly as GACER micro-batches — and
 /// distribute output rows to the requesters, recording each answered
 /// request's arrival→response latency into the tenant's shared buffer
-/// (the SLO observe feed).
+/// (the SLO observe feed). The whole batch is answered with **one**
+/// batched completion (per-shard wakeups), not one notification per
+/// request; parameters travel by `Arc`, not by clone, so issuing a
+/// micro-batch no longer copies every weight buffer.
 #[allow(clippy::too_many_arguments)]
 fn issue_batch(
     tenant: &TenantSpec,
     variants: &HashMap<usize, String>,
-    params: &[Vec<f32>],
-    executor: &ExecutorHandle,
-    responders: &mut HashMap<u64, mpsc::Sender<Result<Vec<f32>>>>,
+    params: &Arc<Vec<Vec<f32>>>,
+    exec: &Exec,
+    completions: &CompletionQueues,
     variant: usize,
     batch: Vec<PendingRequest>,
     shared: &RwLock<Shared>,
@@ -767,44 +1071,60 @@ fn issue_batch(
     let per_input = batch[0].input.len();
     // Spatial regulation on the real path: split into chunk-sized
     // micro-batches when the plan asks for it (and a variant exists).
-    let pieces: Vec<&[PendingRequest]> = match tenant.chunk {
-        Some(c) if c < variant && variants.contains_key(&c) => batch.chunks(c).collect(),
-        _ => vec![&batch[..]],
+    let chunk = match tenant.chunk {
+        Some(c) if c < variant && variants.contains_key(&c) => c,
+        _ => batch.len(),
     };
+    let tag = name_tag(&tenant.name);
 
-    for piece in pieces {
+    let mut completed: Vec<(u64, Result<Vec<f32>>)> = Vec::with_capacity(batch.len());
+    let mut latencies = Vec::with_capacity(batch.len());
+    let mut rest = batch;
+    while !rest.is_empty() {
+        let take = chunk.min(rest.len()).max(1);
+        let tail = rest.split_off(take);
+        let piece = std::mem::replace(&mut rest, tail);
+
         let v = pick_variant(variants, piece.len());
         let entry = &variants[&v];
         let mut x = vec![0.0f32; v * per_input];
         for (i, r) in piece.iter().enumerate() {
             x[i * per_input..(i + 1) * per_input].copy_from_slice(&r.input);
         }
-        let mut inputs = Vec::with_capacity(1 + params.len());
-        inputs.push(x);
-        inputs.extend(params.iter().cloned());
 
-        match executor.submit_blocking(entry.clone(), inputs) {
+        match exec.run(entry, x, params, v, per_input, tag) {
             Ok(outputs) => {
                 let out = &outputs[0];
                 let per_out = out.len() / v;
-                let mut latencies = Vec::with_capacity(piece.len());
-                for (i, r) in piece.iter().enumerate() {
-                    if let Some(tx) = responders.remove(&r.id) {
-                        let row = out[i * per_out..(i + 1) * per_out].to_vec();
-                        let _ = tx.send(Ok(row));
-                        latencies.push(r.enqueued.elapsed().as_secs_f64() * 1e6);
+                for (i, r) in piece.into_iter().enumerate() {
+                    let row = out[i * per_out..(i + 1) * per_out].to_vec();
+                    latencies.push(r.enqueued.elapsed().as_secs_f64() * 1e6);
+                    match r.reply {
+                        Reply::Ticket(id) => completed.push((id, Ok(row))),
+                        Reply::Channel(tx) => {
+                            let _ = tx.send(Ok(row));
+                        }
+                        Reply::Detached => {}
                     }
                 }
-                record_latency(shared, slot, &latencies);
             }
             Err(e) => {
                 for r in piece {
-                    if let Some(tx) = responders.remove(&r.id) {
-                        let _ = tx.send(Err(Error::Backend(e.to_string())));
+                    let err = Err(Error::Backend(e.to_string()));
+                    match r.reply {
+                        Reply::Ticket(id) => completed.push((id, err)),
+                        Reply::Channel(tx) => {
+                            let _ = tx.send(err);
+                        }
+                        Reply::Detached => {}
                     }
                 }
             }
         }
+    }
+    record_latency(shared, slot, &latencies);
+    if !completed.is_empty() {
+        completions.complete_batch(completed);
     }
 }
 

@@ -1640,7 +1640,8 @@ pub fn lower_plan(
         Vec::new()
     };
 
-    let config = ServerConfig { tick, issue_order, issue_quanta, slo };
+    let config =
+        ServerConfig { tick, issue_order, issue_quanta, slo, ..ServerConfig::default() };
     config.validate(n)?;
     Ok(Deployment { tenants: tenant_specs, config })
 }

@@ -31,7 +31,14 @@
 //! issue first, deadline-expired or over-cap requests are shed with
 //! typed errors, and an [`slo::SloMonitor`] tracks error-budget burn
 //! rate so sustained burn triggers migration/re-search
-//! ([`engine::GacerEngine::maybe_regulate`]). See `DESIGN.md` for the layer map
+//! ([`engine::GacerEngine::maybe_regulate`]). The request path itself is
+//! measured, not assumed: requests complete through sharded, batch-notified
+//! completion queues ([`coordinator::CompletionMode`]), clients can overlap
+//! submissions via [`coordinator::Server::submit`] /
+//! [`coordinator::Pending`], and [`bench_util::loadgen`] drives the whole
+//! stack open-loop against the artifact-free
+//! [`coordinator::SyntheticModel`] backend (`gacer-bench throughput`,
+//! `docs/BENCHMARKS.md`). See `DESIGN.md` for the layer map
 //! and the engine↔server lowering contract, `docs/OPERATIONS.md` for the
 //! serving lifecycle (mirrored by `examples/live_redeploy.rs`), and
 //! `docs/TUTORIAL.md` for an end-to-end walkthrough (mirrored by
@@ -62,7 +69,9 @@ pub use error::{Error, Result};
 /// flow used by examples, benches, and the CLI.
 pub mod prelude {
     pub use crate::baselines::{Baseline, BaselineKind};
-    pub use crate::coordinator::ClusterServer;
+    pub use crate::coordinator::{
+        ClusterServer, CompletionMode, Pending, ServerBackend, SyntheticModel,
+    };
     pub use crate::dfg::{Dfg, OpId, OpKind, Operator};
     pub use crate::engine::{
         Deployment, EngineBuilder, GacerEngine, Migration, MigrationCost,

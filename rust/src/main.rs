@@ -10,6 +10,14 @@
 //!                  [--placement balanced|interference] [--live-admit tiny_cnn]
 //!                  [--replan-budget-ms N] [--migration-cost-aware]
 //!                  [--tier interactive,batch,...] [--slo MS]
+//!   gacer loadtest [--rate 4000] [--duration-ms 1000] [--trace poisson|bursty|diurnal]
+//!                  [--tenants 4] [--seed 7] [--queue-cap N] [--completion batched|per-request]
+//!                  [--service-us F] [--submitters 4]
+//!
+//! `loadtest` drives the production request path (scheduler, batchers,
+//! SLO shedding, completion fabric) with the open-loop load generator
+//! against a synthetic backend — no artifacts or GPU needed, runs
+//! anywhere (`docs/BENCHMARKS.md`).
 //!
 //! `--devices N` gives the deployment a device dimension: tenants are
 //! placed across N devices (cost-model bin-packing), each device gets its
@@ -33,7 +41,7 @@ use gacer::profile::{CostModel, Platform};
 use gacer::search::{GacerSearch, SearchBudget, SearchConfig, ShardedSearch};
 use gacer::util::cli::Args;
 
-const USAGE: &str = "usage: gacer <simulate|search|serve> [options]
+const USAGE: &str = "usage: gacer <simulate|search|serve|loadtest> [options]
   simulate --models R50,V16,M3 --platform TitanV
   search   --models R50,V16,M3 --platform TitanV --max-pointers 6 --devices 1
            [--placement balanced|interference] [--replan-budget-ms N]
@@ -41,6 +49,12 @@ const USAGE: &str = "usage: gacer <simulate|search|serve> [options]
            [--placement balanced|interference] [--live-admit tiny_cnn]
            [--replan-budget-ms N] [--migration-cost-aware]
            [--tier interactive,batch,...] [--slo MS]
+  loadtest --rate 4000 --duration-ms 1000 [--trace poisson|bursty|diurnal]
+           [--tenants 4] [--seed 7] [--queue-cap N]
+           [--completion batched|per-request] [--service-us F] [--submitters 4]
+           open-loop load against the production request path on a
+           synthetic backend (no artifacts/GPU); reports achieved
+           throughput, latency quantiles, and shed rate
 
   --devices N   shard the deployment across N devices: tenants are placed
                 by cost-model bin-packing, each device is searched
@@ -249,6 +263,61 @@ fn main() -> gacer::Result<()> {
                 slo_p99_ms: parse_slo_ms(args.opt("slo")),
             };
             gacer::coordinator::serve_demo(&artifacts, &tenants, &opts)?;
+        }
+        "loadtest" => {
+            use gacer::bench_util::loadgen::{run_loadgen, LoadgenOptions, TraceShape};
+            use gacer::coordinator::CompletionMode;
+
+            let opt_f64 = |key: &str, default: f64| {
+                args.opt(key).and_then(|v| v.parse::<f64>().ok()).unwrap_or(default)
+            };
+            let rate = opt_f64("rate", 4000.0);
+            let trace = args.opt_or("trace", "poisson");
+            let shape = TraceShape::parse(trace, rate).unwrap_or_else(|| {
+                eprintln!("unknown trace shape {trace:?}; expected poisson|bursty|diurnal");
+                std::process::exit(2);
+            });
+            let mode_name = args.opt_or("completion", "batched");
+            let mode = CompletionMode::parse(mode_name).unwrap_or_else(|| {
+                eprintln!("unknown completion mode {mode_name:?}; expected batched|per-request");
+                std::process::exit(2);
+            });
+            let opts = LoadgenOptions {
+                n_tenants: args.opt_usize("tenants", 4).max(1),
+                duration_ms: opt_f64("duration-ms", 1000.0),
+                shape,
+                seed: args.opt_usize("seed", 7) as u64,
+                queue_cap: args.opt_usize("queue-cap", 0),
+                mode,
+                submitters: args.opt_usize("submitters", 4).max(1),
+                service_us_per_batch: opt_f64("service-us", 0.0),
+                ..LoadgenOptions::default()
+            };
+            let r = run_loadgen(&opts)?;
+            println!(
+                "{} trace, {} completions: offered {:.0} req/s over {:.0}ms, {} tenants",
+                shape.label(),
+                mode.label(),
+                r.offered_rps,
+                opts.duration_ms,
+                opts.n_tenants
+            );
+            println!(
+                "  submitted {}  completed {}  shed {} ({:.2}%)  errors {}",
+                r.submitted,
+                r.completed,
+                r.shed,
+                r.shed_rate() * 100.0,
+                r.errors
+            );
+            println!(
+                "  achieved {:.0} req/s  p50 {:.0}us  p95 {:.0}us  p99 {:.0}us  max {:.0}us",
+                r.achieved_rps(),
+                r.latency.p50_us,
+                r.latency.p95_us,
+                r.latency.p99_us,
+                r.latency.max_us
+            );
         }
         other => {
             eprintln!("unknown command: {other}\n{USAGE}");

@@ -109,23 +109,72 @@ impl DemandWindow {
     }
 }
 
-/// Latency sample recorder with percentile queries.
+/// Latency sample recorder with percentile queries — **bounded memory**
+/// regardless of how many samples are recorded.
 ///
-/// Samples are kept **sorted on insert** (binary search + `O(n)`
+/// Retains at most `cap` samples (default
+/// [`LatencyHistogram::DEFAULT_CAP`]) as a uniform random **reservoir**
+/// (Vitter's Algorithm R, driven by a fixed-seed deterministic
+/// [`Rng`](crate::util::rng::Rng) so results reproduce): while fewer
+/// than `cap` samples have been recorded every one is kept and all
+/// statistics are exact; beyond that, each new sample replaces a
+/// uniformly random retained one with probability `cap / count`, so the
+/// reservoir stays a uniform sample of the whole stream and percentile
+/// queries are unbiased estimates. **Count, mean, and max remain exact
+/// at any scale** — they are tracked outside the reservoir. A long-lived
+/// server recording millions of request latencies therefore holds a few
+/// KB here, not an unbounded `Vec` (previously this grew by one `f64`
+/// per request forever — an O(requests) leak on the serving path).
+///
+/// The reservoir is kept **sorted on insert** (binary search + `O(cap)`
 /// memmove), so every percentile query is an `O(1)` index instead of a
-/// clone-and-sort of the whole sample set. Intended for request-scale
-/// counts (thousands), not packet-scale. Non-finite inputs (NaN, ±inf)
-/// are dropped on record — they carry no latency information and a NaN
-/// would poison the ordering invariant.
-#[derive(Debug, Clone, Default)]
+/// clone-and-sort. Non-finite inputs (NaN, ±inf) are dropped on record —
+/// they carry no latency information and a NaN would poison the ordering
+/// invariant.
+#[derive(Debug, Clone)]
 pub struct LatencyHistogram {
-    /// Invariant: ascending order, all values finite.
+    /// Retained reservoir. Invariant: ascending order, all values
+    /// finite, length ≤ `cap`.
     samples_us: Vec<f64>,
+    /// Total samples ever recorded (exact, independent of the cap).
+    count: u64,
+    /// Exact running sum of every recorded sample.
+    sum_us: f64,
+    /// Exact maximum of every recorded sample.
+    max_us: f64,
+    cap: usize,
+    rng: crate::util::rng::Rng,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::with_cap(Self::DEFAULT_CAP)
+    }
 }
 
 impl LatencyHistogram {
+    /// Default reservoir capacity: large enough that a p99 over the
+    /// reservoir has ~1% relative rank error, small enough (64 KiB of
+    /// `f64`s) to keep per-tenant recorders cheap.
+    pub const DEFAULT_CAP: usize = 8192;
+
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A histogram retaining at most `cap` samples (`cap >= 1`).
+    pub fn with_cap(cap: usize) -> Self {
+        assert!(cap >= 1, "reservoir capacity must be >= 1");
+        LatencyHistogram {
+            samples_us: Vec::new(),
+            count: 0,
+            sum_us: 0.0,
+            max_us: 0.0,
+            cap,
+            // Fixed seed: recorded streams reproduce exactly; two
+            // histograms fed the same stream retain the same reservoir.
+            rng: crate::util::rng::Rng::new(0x1A7E_4C1),
+        }
     }
 
     pub fn record(&mut self, d: Duration) {
@@ -137,45 +186,80 @@ impl LatencyHistogram {
         if !us.is_finite() {
             return;
         }
-        let at = self.samples_us.partition_point(|&s| s <= us);
-        self.samples_us.insert(at, us);
+        self.count += 1;
+        self.sum_us += us;
+        if us > self.max_us || self.count == 1 {
+            self.max_us = us;
+        }
+        if self.samples_us.len() < self.cap {
+            let at = self.samples_us.partition_point(|&s| s <= us);
+            self.samples_us.insert(at, us);
+            return;
+        }
+        // Algorithm R: keep the newcomer with probability cap/count,
+        // evicting a uniformly random retained sample.
+        let j = self.rng.next_u64() % self.count;
+        if (j as usize) < self.cap {
+            self.samples_us.remove(j as usize);
+            let at = self.samples_us.partition_point(|&s| s <= us);
+            self.samples_us.insert(at, us);
+        }
     }
 
+    /// Total number of samples ever recorded (exact — not bounded by the
+    /// reservoir capacity).
     pub fn len(&self) -> usize {
-        self.samples_us.len()
+        self.count as usize
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples_us.is_empty()
+        self.count == 0
     }
 
-    /// The recorded samples in ascending order, microseconds. Feed these
-    /// to [`crate::slo::SloMonitor::observe`] (or any consumer that wants
-    /// raw samples rather than fixed quantiles).
+    /// Number of samples currently retained in the reservoir:
+    /// `min(len, cap)`.
+    pub fn retained(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    /// The retained samples in ascending order, microseconds — every
+    /// recorded sample while under the cap, a uniform random subset
+    /// beyond it. Feed these to [`crate::slo::SloMonitor::observe`] (or
+    /// any consumer that wants raw samples rather than fixed quantiles).
     pub fn samples_us(&self) -> &[f64] {
         &self.samples_us
     }
 
-    /// `q` in [0, 1]; nearest-rank percentile. `O(1)` — samples are
-    /// already sorted.
+    /// `q` in [0, 1]; nearest-rank percentile over the reservoir (exact
+    /// while under the cap, an unbiased estimate beyond it — except
+    /// `q = 1.0`, which returns the exact tracked maximum). `O(1)` —
+    /// samples are already sorted.
     pub fn percentile_us(&self, q: f64) -> f64 {
         if self.samples_us.is_empty() {
             return 0.0;
+        }
+        if q >= 1.0 {
+            return self.max_us;
         }
         let idx = ((q * (self.samples_us.len() - 1) as f64).round() as usize)
             .min(self.samples_us.len() - 1);
         self.samples_us[idx]
     }
 
+    /// Exact mean over every recorded sample.
     pub fn mean_us(&self) -> f64 {
-        if self.samples_us.is_empty() {
+        if self.count == 0 {
             return 0.0;
         }
-        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+        self.sum_us / self.count as f64
     }
 
+    /// Exact maximum over every recorded sample.
     pub fn max_us(&self) -> f64 {
-        self.samples_us.last().copied().unwrap_or(0.0)
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.max_us
     }
 
     /// Multi-quantile snapshot in one pass over the (already sorted)
@@ -317,6 +401,70 @@ mod tests {
         assert_eq!(q.p99_us, h.percentile_us(0.99));
         assert_eq!(q.max_us, 200.0);
         assert!(q.p50_us <= q.p95_us && q.p95_us <= q.p99_us);
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_over_a_million_samples() {
+        // Regression: the histogram previously kept every sample in a
+        // sorted Vec — one f64 per request, forever. Drive >1M samples
+        // and assert memory stays capped while count/mean/max stay exact.
+        let mut h = LatencyHistogram::new();
+        let n: u64 = 1_200_000;
+        for i in 0..n {
+            // Deterministic spread over [0, 1000) with one late spike.
+            h.record_us((i % 1000) as f64);
+        }
+        h.record_us(5000.0);
+        assert_eq!(h.len(), n as usize + 1, "count is exact, not capped");
+        assert!(!h.is_empty());
+        assert_eq!(
+            h.retained(),
+            LatencyHistogram::DEFAULT_CAP,
+            "reservoir never exceeds its capacity"
+        );
+        assert_eq!(h.samples_us().len(), h.retained());
+        assert_eq!(h.max_us(), 5000.0, "max is tracked exactly outside the reservoir");
+        assert_eq!(h.percentile_us(1.0), 5000.0);
+        // Exact mean of 0..1000 repeated is 499.5; one 5000 barely moves it.
+        assert!((h.mean_us() - 499.5).abs() < 0.1, "mean {}", h.mean_us());
+        // The reservoir is a uniform sample of a uniform stream: p50
+        // should land near 500 (generous tolerance — this is a sanity
+        // bound, not a statistical test).
+        let p50 = h.percentile_us(0.5);
+        assert!((400.0..600.0).contains(&p50), "p50 {p50}");
+        // Sorted invariant survives a million evictions.
+        assert!(h.samples_us().windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn under_the_cap_every_sample_is_retained_exactly() {
+        let mut h = LatencyHistogram::with_cap(100);
+        for i in 1..=100 {
+            h.record_us(i as f64);
+        }
+        assert_eq!(h.len(), 100);
+        assert_eq!(h.retained(), 100);
+        assert_eq!(h.percentile_us(0.5), 50.0, "exact while under the cap");
+        assert_eq!(h.percentile_us(1.0), 100.0);
+    }
+
+    #[test]
+    fn reservoir_histograms_are_deterministic() {
+        let feed = |h: &mut LatencyHistogram| {
+            for i in 0..10_000u32 {
+                h.record_us((i % 777) as f64);
+            }
+        };
+        let (mut a, mut b) = (LatencyHistogram::with_cap(64), LatencyHistogram::with_cap(64));
+        feed(&mut a);
+        feed(&mut b);
+        assert_eq!(a.samples_us(), b.samples_us(), "fixed-seed reservoirs agree");
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity must be >= 1")]
+    fn zero_capacity_is_rejected() {
+        LatencyHistogram::with_cap(0);
     }
 
     #[test]

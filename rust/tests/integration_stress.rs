@@ -1,0 +1,215 @@
+//! Concurrency stress: producers hammer the cluster request path while
+//! hot swaps re-deploy tenants mid-traffic.
+//!
+//! Runs everywhere — the servers use the synthetic backend
+//! (`ServerBackend::Synthetic`), so the full production pipeline
+//! (routing, scheduler, batchers, SLO shedding, completion fabric, epoch
+//! fences) is exercised without compiled artifacts or a GPU. The
+//! synthetic output contract makes correctness *observable* per
+//! response: `out[0]` echoes the request's marker (lost/duplicated/
+//! cross-paired responses would break the echo) and `out[1]` carries the
+//! serving tenant's `name_tag` (a response computed under the wrong
+//! tenant's queue — e.g. routed to a stale slot across a swap — would
+//! carry the wrong tag).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use gacer::coordinator::{
+    name_tag, BatchPolicy, ClusterServer, Server, ServerBackend, ServerConfig,
+    SyntheticModel, TenantSpec,
+};
+use gacer::engine::{Deployment, ShardedDeployment};
+use gacer::slo::{SloPolicy, Tier};
+use gacer::Error;
+
+fn tenant(name: &str) -> TenantSpec {
+    TenantSpec {
+        name: name.to_string(),
+        family: "synthetic".to_string(),
+        policy: BatchPolicy::new(8, Duration::from_micros(300), vec![1, 2, 4, 8]),
+        chunk: None,
+    }
+}
+
+fn deployment(names: &[&str]) -> Deployment {
+    Deployment { tenants: names.iter().map(|n| tenant(n)).collect(), config: ServerConfig::default() }
+}
+
+/// Tenants a/b/c on two devices; `b` migrates between the devices on
+/// every swap while global slots stay `[a, b, c]`.
+fn plan_b_on_device0() -> ShardedDeployment {
+    ShardedDeployment {
+        per_device: vec![deployment(&["a", "b"]), deployment(&["c"])],
+        routing: vec![(0, 0), (0, 1), (1, 0)],
+    }
+}
+
+fn plan_b_on_device1() -> ShardedDeployment {
+    ShardedDeployment {
+        per_device: vec![deployment(&["a"]), deployment(&["c", "b"])],
+        routing: vec![(0, 0), (1, 1), (1, 0)],
+    }
+}
+
+/// N producers per tenant submit uniquely marked requests in a closed
+/// loop while the main thread alternates cluster-wide hot swaps that
+/// migrate tenant `b` between the two devices. Every successful response
+/// must echo its own marker and carry its own tenant's tag — no
+/// response lost, duplicated, cross-paired, or served by a stale slot.
+#[test]
+fn hot_swap_under_fire_loses_and_misroutes_nothing() {
+    let names = ["a", "b", "c"];
+    let start = plan_b_on_device0();
+    let cluster = ClusterServer::start_with_backend(
+        ServerBackend::Synthetic(SyntheticModel::echo()),
+        start.per_device.iter().map(|d| (d.tenants.clone(), d.config.clone())).collect(),
+        start.routing.clone(),
+    )
+    .unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut producers = Vec::new();
+    for (slot, name) in names.iter().enumerate() {
+        for lane in 0..2u64 {
+            let cluster = cluster.clone();
+            let stop = Arc::clone(&stop);
+            let expected_tag = name_tag(name);
+            producers.push(std::thread::spawn(move || -> (u64, u64) {
+                let (mut oks, mut i) = (0u64, 0u64);
+                while !stop.load(Ordering::Relaxed) {
+                    // Unique marker, exact in f32 (stays far below 2^24).
+                    let marker = ((lane * 1_000_000 + i) % 1_000_000) as f32;
+                    i += 1;
+                    let out = cluster.infer(slot, vec![marker, 0.0]).unwrap_or_else(|e| {
+                        panic!("tenant {slot} request {i} failed mid-swap: {e:?}")
+                    });
+                    assert_eq!(out[0], marker, "response paired with the wrong request");
+                    assert_eq!(out[1], expected_tag, "response served by the wrong tenant");
+                    oks += 1;
+                }
+                (oks, i)
+            }));
+        }
+    }
+
+    // Hot-swap `b` back and forth under fire.
+    let mut swaps = 0u64;
+    for round in 0..30 {
+        let plan = if round % 2 == 0 { plan_b_on_device1() } else { plan_b_on_device0() };
+        let touched = cluster.apply(plan).unwrap();
+        assert_eq!(touched, vec![0, 1], "both devices change on every migration");
+        swaps += 1;
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    stop.store(true, Ordering::Relaxed);
+
+    let mut total_oks = 0u64;
+    for p in producers {
+        let (oks, submitted) = p.join().expect("producer panicked");
+        assert_eq!(oks, submitted, "closed loop: every submission answered Ok");
+        assert!(oks > 0, "producer made progress under swaps");
+        total_oks += oks;
+    }
+    assert!(total_oks > 0);
+    let epochs = cluster.epochs();
+    assert!(
+        epochs.iter().all(|&e| e >= swaps / 2),
+        "every device fenced repeatedly: epochs {epochs:?} after {swaps} swaps"
+    );
+    // `b` ends where the last swap (round 29, odd) put it: device 0.
+    assert_eq!(cluster.route_of(1), Some((0, 1)));
+}
+
+/// Producers hammer one synthetic server through tiny queue caps and an
+/// unmeetable deadline: every submission must be answered exactly once —
+/// an output row or a *typed* shed — and the server-side served/shed
+/// counters must reconcile exactly with what clients observed.
+#[test]
+fn sheds_and_serves_reconcile_exactly_once_under_pressure() {
+    let cfg = ServerConfig {
+        slo: vec![
+            SloPolicy::new(Tier::Standard).with_queue_cap(4),
+            SloPolicy::new(Tier::Standard).with_deadline(Duration::from_nanos(1)),
+        ],
+        ..ServerConfig::default()
+    };
+    let server = Server::start_synthetic(
+        SyntheticModel::echo(),
+        vec![tenant("capped"), tenant("doomed")],
+        cfg,
+    )
+    .unwrap();
+
+    let mut workers = Vec::new();
+    for w in 0..4u64 {
+        let server = server.clone();
+        workers.push(std::thread::spawn(move || -> (u64, u64, u64) {
+            let (mut oks, mut sheds, mut submitted) = (0u64, 0u64, 0u64);
+            for i in 0..400u64 {
+                let tenant = (i % 2) as usize;
+                let marker = ((w * 1000 + i) % 4000) as f32;
+                submitted += 1;
+                match server.infer(tenant, vec![marker, 0.0]) {
+                    Ok(out) => {
+                        assert_eq!(out[0], marker, "pairing survives shedding around it");
+                        assert_eq!(
+                            tenant, 0,
+                            "the 1ns-deadline tenant can never be served"
+                        );
+                        oks += 1;
+                    }
+                    Err(Error::Overloaded(_) | Error::DeadlineExceeded(_)) => sheds += 1,
+                    Err(other) => panic!("untyped failure under pressure: {other:?}"),
+                }
+            }
+            (oks, sheds, submitted)
+        }));
+    }
+    let (mut oks, mut sheds, mut submitted) = (0u64, 0u64, 0u64);
+    for worker in workers {
+        let (o, s, n) = worker.join().expect("worker panicked");
+        oks += o;
+        sheds += s;
+        submitted += n;
+    }
+    assert_eq!(oks + sheds, submitted, "every request answered exactly once");
+    assert!(oks > 0, "the capped tenant is served between sheds");
+    assert!(sheds > 0, "the doomed tenant sheds");
+    // Server-side accounting agrees with the clients exactly.
+    assert_eq!(server.served_counts().iter().sum::<u64>(), oks);
+    assert_eq!(server.shed_counts().iter().sum::<u64>(), sheds);
+    assert_eq!(server.served_counts()[1], 0, "1ns deadline serves nothing");
+}
+
+/// Per-tenant FIFO survives the batched completion path: one producer
+/// pins a tenant and submits ordered markers without waiting (open
+/// loop); collecting the pending handles in submission order must yield
+/// the markers in submission order.
+#[test]
+fn open_loop_submissions_complete_fifo_per_tenant() {
+    let server = Server::start_synthetic(
+        SyntheticModel::echo(),
+        vec![tenant("x"), tenant("y")],
+        ServerConfig::default(),
+    )
+    .unwrap();
+    let mut lanes = Vec::new();
+    for t in 0..2 {
+        let server = server.clone();
+        lanes.push(std::thread::spawn(move || {
+            let pendings: Vec<_> = (0..500)
+                .map(|i| server.submit(t, vec![i as f32, 0.0]).unwrap())
+                .collect();
+            for (i, p) in pendings.into_iter().enumerate() {
+                let out = p.wait().unwrap();
+                assert_eq!(out[0], i as f32, "tenant {t}: FIFO broken at {i}");
+            }
+        }));
+    }
+    for lane in lanes {
+        lane.join().expect("lane panicked");
+    }
+    assert_eq!(server.served_counts(), vec![500, 500]);
+}

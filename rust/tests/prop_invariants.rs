@@ -293,11 +293,7 @@ fn prop_batcher_never_drops_or_duplicates() {
         let t0 = Instant::now();
         for step in 0..rng.range(5, 40) {
             if rng.f64() < 0.6 {
-                batcher.push(PendingRequest {
-                    id: pushed,
-                    input: vec![0.0; 4],
-                    enqueued: t0,
-                });
+                batcher.push(PendingRequest::detached_at(pushed, vec![0.0; 4], t0));
                 pushed += 1;
             }
             if rng.f64() < 0.5 {
