@@ -6,8 +6,9 @@
 
 use crate::baselines::BaselineKind;
 use super::{
-    compare_placements, fig7_header, fig7_row, interference_demo_mix, run_combo,
-    run_replan, run_strategy, ReplanCell, Strategy,
+    compare_placements, fig7_header, fig7_row, interference_demo_mix,
+    memory_demo_mix, run_combo, run_replan, run_strategy, PlacementArm, ReplanCell,
+    Strategy,
 };
 use crate::dfg::{Dfg, OpKind};
 use crate::gpu::SimOptions;
@@ -270,7 +271,10 @@ pub fn table4(base_rounds: usize) {
 /// per-device load, predicted co-location slowdown, and the max
 /// `load × slowdown` score each objective commits to).
 pub fn placement_objectives() {
-    println!("== Placement objectives: LoadBalance vs InterferenceAware (2 devices) ==");
+    println!(
+        "== Placement objectives: LoadBalance vs InterferenceAware vs MemoryAware \
+         (2 devices) =="
+    );
     let platform = Platform::titan_v();
     let mixes: Vec<(&str, Vec<Dfg>)> = vec![
         // The canonical disagreement: two pool-saturating tenants whose
@@ -324,6 +328,175 @@ pub fn placement_objectives() {
             lb.max_slowdown(),
             ia.max_slowdown()
         );
+    }
+}
+
+/// `gacer-bench memory` — memory-bandwidth contention as a second cost
+/// dimension (docs/BENCHMARKS.md): on a bandwidth-bound mix
+/// ([`memory_demo_mix`]: two HBM-saturating BatchNorm tenants + two
+/// low-bandwidth conv fillers) every memory-blind objective — LPT *and*
+/// the occupancy-only interference objective — pairs the hogs, while
+/// the two-dimensional roofline ([`PlacementObjective::MemoryAware`])
+/// separates them. Each arm's committed placement is then simulated
+/// per device (the simulator prices bandwidth oversubscription via
+/// `r_mem`), and the contrast — predicted roofline slowdown, simulated
+/// cluster makespan, per-device HBM residency — is recorded in
+/// `BENCH_memory.json`.
+///
+/// [`PlacementObjective::MemoryAware`]:
+///     crate::plan::PlacementObjective::MemoryAware
+pub fn memory() {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+
+    println!(
+        "== Memory: bandwidth-bound placement, occupancy-only vs memory-aware \
+         (Titan V, 2 devices) =="
+    );
+    let platform = Platform::titan_v();
+    let mix = memory_demo_mix(&platform);
+    let arms = compare_placements(mix.clone(), &platform, 2);
+    let cost = CostModel::new(platform);
+    let opts = SimOptions::for_platform(&platform);
+
+    // Simulated cluster makespan of each committed placement: every
+    // device's tenant group runs unregulated on its own simulated GPU;
+    // the cluster finishes with its bottleneck device.
+    let simulate_arm = |arm: &PlacementArm| -> Vec<f64> {
+        arm.per_device
+            .iter()
+            .map(|names| {
+                if names.is_empty() {
+                    return 0.0;
+                }
+                let tenants: Vec<Dfg> = names
+                    .iter()
+                    .map(|n| {
+                        mix.iter().find(|d| &d.name == n).expect("mix tenant").clone()
+                    })
+                    .collect();
+                let n = tenants.len();
+                let ts = TenantSet::new(tenants, cost.clone());
+                ts.simulate(&DeploymentPlan::unregulated(n), opts).makespan_us / 1e3
+            })
+            .collect()
+    };
+
+    let mut sim_ms: Vec<Vec<f64>> = Vec::new();
+    for arm in &arms {
+        let per_device = simulate_arm(arm);
+        let cluster = per_device.iter().copied().fold(0.0f64, f64::max);
+        println!(
+            "{:<17} roofline slowdown {:.2}x (occupancy-only sees {:.2}x)  \
+             simulated cluster {:.2} ms",
+            arm.objective.label(),
+            arm.max_slowdown(),
+            arm.max_occupancy_slowdown(),
+            cluster
+        );
+        for (d, tenants) in arm.per_device.iter().enumerate() {
+            println!(
+                "    device {d}: {tenants:?}  load {:.2} ms, slowdown {:.2}x, \
+                 HBM {:.2} GB, simulated {:.2} ms",
+                arm.loads_ms[d], arm.slowdowns[d], arm.hbm_gb[d], per_device[d]
+            );
+        }
+        sim_ms.push(per_device);
+    }
+
+    let cluster = |i: usize| sim_ms[i].iter().copied().fold(0.0f64, f64::max);
+    let (ia, ma) = (&arms[1], &arms[2]);
+    println!(
+        "\n=> memory-aware placement cuts the predicted bottleneck slowdown \
+         {:.2}x -> {:.2}x and the simulated cluster makespan {:.2} ms -> {:.2} ms \
+         on a mix the occupancy axis prices as contention-free",
+        ia.max_slowdown(),
+        ma.max_slowdown(),
+        cluster(1),
+        cluster(2)
+    );
+    assert!(
+        ma.max_slowdown() < ia.max_slowdown(),
+        "memory-aware must strictly reduce the predicted max slowdown"
+    );
+
+    let arm_json = |arm: &PlacementArm, per_device: &[f64]| {
+        let mut m = BTreeMap::new();
+        m.insert("objective".to_string(), Json::Str(arm.objective.label().to_string()));
+        m.insert(
+            "per_device".to_string(),
+            Json::Arr(
+                arm.per_device
+                    .iter()
+                    .map(|names| {
+                        Json::Arr(
+                            names.iter().map(|n| Json::Str(n.clone())).collect(),
+                        )
+                    })
+                    .collect(),
+            ),
+        );
+        let nums = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
+        m.insert("loads_ms".to_string(), nums(&arm.loads_ms));
+        m.insert("roofline_slowdowns".to_string(), nums(&arm.slowdowns));
+        m.insert("occupancy_slowdowns".to_string(), nums(&arm.occupancy_slowdowns));
+        m.insert("hbm_gb".to_string(), nums(&arm.hbm_gb));
+        m.insert("simulated_ms".to_string(), nums(per_device));
+        m.insert(
+            "simulated_cluster_ms".to_string(),
+            Json::Num(per_device.iter().copied().fold(0.0f64, f64::max)),
+        );
+        m.insert("max_roofline_slowdown".to_string(), Json::Num(arm.max_slowdown()));
+        m.insert(
+            "max_occupancy_slowdown".to_string(),
+            Json::Num(arm.max_occupancy_slowdown()),
+        );
+        Json::Obj(m)
+    };
+    let mut headline = BTreeMap::new();
+    headline.insert(
+        "occupancy_only_max_slowdown".to_string(),
+        Json::Num(ia.max_slowdown()),
+    );
+    headline.insert(
+        "memory_aware_max_slowdown".to_string(),
+        Json::Num(ma.max_slowdown()),
+    );
+    headline.insert(
+        "memory_aware_strictly_better".to_string(),
+        Json::Bool(ma.max_slowdown() < ia.max_slowdown()),
+    );
+    headline.insert(
+        "occupancy_only_simulated_cluster_ms".to_string(),
+        Json::Num(cluster(1)),
+    );
+    headline.insert(
+        "memory_aware_simulated_cluster_ms".to_string(),
+        Json::Num(cluster(2)),
+    );
+    headline.insert(
+        "simulated_makespan_reduced".to_string(),
+        Json::Bool(cluster(2) < cluster(1)),
+    );
+    let mut root = BTreeMap::new();
+    root.insert("experiment".to_string(), Json::Str("memory".to_string()));
+    root.insert("platform".to_string(), Json::Str(platform.name.to_string()));
+    root.insert("devices".to_string(), Json::Num(2.0));
+    root.insert(
+        "tenants".to_string(),
+        Json::Arr(mix.iter().map(|d| Json::Str(d.name.clone())).collect()),
+    );
+    root.insert(
+        "arms".to_string(),
+        Json::Arr(
+            arms.iter().zip(&sim_ms).map(|(a, s)| arm_json(a, s)).collect(),
+        ),
+    );
+    root.insert("headline".to_string(), Json::Obj(headline));
+    let json = Json::Obj(root).to_string_compact();
+    match std::fs::write("BENCH_memory.json", &json) {
+        Ok(()) => println!("wrote BENCH_memory.json ({} bytes)", json.len()),
+        Err(e) => eprintln!("could not write BENCH_memory.json: {e}"),
     }
 }
 

@@ -151,17 +151,28 @@ pub struct PlacementArm {
     pub per_device: Vec<Vec<String>>,
     /// Cost-model load per device (summed serial latency, ms).
     pub loads_ms: Vec<f64>,
-    /// Predicted co-location slowdown per device (1.0 = free).
+    /// Predicted co-location slowdown per device on the full
+    /// compute+memory roofline (1.0 = free).
     pub slowdowns: Vec<f64>,
+    /// Predicted slowdown per device on the **occupancy axis only** —
+    /// what the memory-blind models believe they committed to.
+    pub occupancy_slowdowns: Vec<f64>,
+    /// Resident HBM footprint per device (GB).
+    pub hbm_gb: Vec<f64>,
     /// The interference objective's figure of merit: max per-device
     /// `load × slowdown` (ms).
     pub max_score_ms: f64,
 }
 
 impl PlacementArm {
-    /// The bottleneck device's predicted slowdown.
+    /// The bottleneck device's predicted roofline slowdown.
     pub fn max_slowdown(&self) -> f64 {
         self.slowdowns.iter().copied().fold(1.0, f64::max)
+    }
+
+    /// The bottleneck device's predicted occupancy-only slowdown.
+    pub fn max_occupancy_slowdown(&self) -> f64 {
+        self.occupancy_slowdowns.iter().copied().fold(1.0, f64::max)
     }
 
     /// The bottleneck device's raw load (ms).
@@ -170,37 +181,45 @@ impl PlacementArm {
     }
 }
 
-/// Compare placement objectives on one tenant mix: how LoadBalance vs
-/// InterferenceAware shard it across `n_devices` and the contention each
-/// predicts — the decision-level comparison (no per-shard search, so it
-/// is cheap enough to sweep mixes).
+/// Compare every placement objective (LoadBalance, InterferenceAware,
+/// MemoryAware) on one tenant mix: how each shards it across `n_devices`
+/// and the contention each predicts — the decision-level comparison (no
+/// per-shard search, so it is cheap enough to sweep mixes). Every arm
+/// reports both the occupancy-only and the roofline slowdown, so
+/// memory-blindness is visible as a gap between the two.
 pub fn compare_placements(
     tenants: Vec<Dfg>,
     platform: &Platform,
     n_devices: usize,
 ) -> Vec<PlacementArm> {
     let set = TenantSet::new(tenants, CostModel::new(*platform));
-    [PlacementObjective::LoadBalance, PlacementObjective::InterferenceAware]
-        .into_iter()
-        .map(|objective| {
-            let p = Placement::with_objective(&set, n_devices, objective);
-            let scores = p.interference_scores(&set);
-            PlacementArm {
-                objective,
-                per_device: (0..p.n_devices())
-                    .map(|d| {
-                        p.tenants_on(d)
-                            .iter()
-                            .map(|&s| set.tenants[s].name.clone())
-                            .collect()
-                    })
-                    .collect(),
-                loads_ms: p.loads(&set).into_iter().map(|l| l / 1e3).collect(),
-                slowdowns: p.predicted_slowdowns(&set),
-                max_score_ms: scores.into_iter().fold(0.0, f64::max) / 1e3,
-            }
-        })
-        .collect()
+    [
+        PlacementObjective::LoadBalance,
+        PlacementObjective::InterferenceAware,
+        PlacementObjective::MemoryAware,
+    ]
+    .into_iter()
+    .map(|objective| {
+        let p = Placement::with_objective(&set, n_devices, objective);
+        let scores = p.interference_scores(&set);
+        PlacementArm {
+            objective,
+            per_device: (0..p.n_devices())
+                .map(|d| {
+                    p.tenants_on(d)
+                        .iter()
+                        .map(|&s| set.tenants[s].name.clone())
+                        .collect()
+                })
+                .collect(),
+            loads_ms: p.loads(&set).into_iter().map(|l| l / 1e3).collect(),
+            slowdowns: p.predicted_slowdowns(&set),
+            occupancy_slowdowns: p.predicted_occupancy_slowdowns(&set),
+            hbm_gb: p.hbm_usage(&set).into_iter().map(|b| b / 1e9).collect(),
+            max_score_ms: scores.into_iter().fold(0.0, f64::max) / 1e3,
+        }
+    })
+    .collect()
 }
 
 /// A heterogeneous tenant mix on which the two placement objectives
@@ -229,6 +248,45 @@ pub fn interference_demo_mix(platform: &Platform) -> Vec<Dfg> {
         net("lo-a", 1, (2.4 * d_hi / d_lo).round() as usize),
         net("lo-b", 1, (2.2 * d_hi / d_lo).round() as usize),
         net("hi-b", 32, 2),
+    ]
+}
+
+/// A **bandwidth-bound** tenant mix on which even the occupancy-aware
+/// objective fails: two HBM-saturating tenants (`hog-a`, `hog-b`,
+/// batch-8 BatchNorm chains at ~96% of peak bandwidth but floor SM
+/// occupancy) plus two low-bandwidth conv fillers (`lo-a`, `lo-b`,
+/// batch-1 convs at <1% bandwidth). Serial weights are calibrated to
+/// ≈ `[4, 2.8, 2.8, 2] × u`, so LPT pairs the hogs — and the
+/// occupancy-only interference objective, seeing slowdown 1.0
+/// everywhere (the hogs barely hold SMs), pairs them too. Only the
+/// two-dimensional roofline ([`PlacementObjective::MemoryAware`])
+/// prices the paired ~192% bandwidth demand and separates them.
+pub fn memory_demo_mix(platform: &Platform) -> Vec<Dfg> {
+    let cost = CostModel::new(*platform);
+    let bn = OpKind::BatchNorm { elems: 56 * 56 * 256 };
+    let conv = OpKind::Conv { h: 56, w: 56, cin: 256, cout: 256, k: 3, stride: 1 };
+    let d_bn = cost.cost_of(&bn, 8).duration_us;
+    let d_conv = cost.cost_of(&conv, 1).duration_us;
+    let bn_net = |name: &str, n: usize| {
+        let mut d = Dfg::new(name);
+        for i in 0..n.max(1) {
+            d.push(bn, 8, format!("bn{i}"));
+        }
+        d
+    };
+    let conv_net = |name: &str, n: usize| {
+        let mut d = Dfg::new(name);
+        for i in 0..n.max(1) {
+            d.push(conv, 1, format!("conv{i}"));
+        }
+        d
+    };
+    let u = 12.0 * d_bn;
+    vec![
+        bn_net("hog-a", 48),
+        conv_net("lo-a", (2.8 * u / d_conv).round().max(1.0) as usize),
+        conv_net("lo-b", (2.8 * u / d_conv).round().max(1.0) as usize),
+        bn_net("hog-b", 24),
     ]
 }
 
@@ -379,10 +437,11 @@ mod tests {
     fn placement_comparison_separates_saturating_tenants() {
         let platform = Platform::titan_v();
         let arms = compare_placements(interference_demo_mix(&platform), &platform, 2);
-        assert_eq!(arms.len(), 2);
+        assert_eq!(arms.len(), 3);
         let (lb, ia) = (&arms[0], &arms[1]);
         assert_eq!(lb.objective, PlacementObjective::LoadBalance);
         assert_eq!(ia.objective, PlacementObjective::InterferenceAware);
+        assert_eq!(arms[2].objective, PlacementObjective::MemoryAware);
         let together = |arm: &PlacementArm| {
             arm.per_device.iter().any(|d| {
                 d.contains(&"hi-a".to_string()) && d.contains(&"hi-b".to_string())
@@ -392,6 +451,27 @@ mod tests {
         assert!(!together(ia), "interference-aware separates it");
         assert!(ia.max_slowdown() < lb.max_slowdown());
         assert!(ia.max_score_ms < lb.max_score_ms);
+    }
+
+    #[test]
+    fn memory_mix_defeats_every_memory_blind_objective() {
+        let platform = Platform::titan_v();
+        let arms = compare_placements(memory_demo_mix(&platform), &platform, 2);
+        let hogs_together = |arm: &PlacementArm| {
+            arm.per_device.iter().any(|d| {
+                d.contains(&"hog-a".to_string()) && d.contains(&"hog-b".to_string())
+            })
+        };
+        let (lb, ia, ma) = (&arms[0], &arms[1], &arms[2]);
+        assert!(hogs_together(lb), "LPT pairs the bandwidth hogs");
+        assert!(hogs_together(ia), "occupancy scoring is blind to the hogs");
+        assert!(!hogs_together(ma), "the roofline separates them");
+        // Both blind arms report occupancy slowdown 1.0 — the roofline
+        // exposes the contention they actually committed to.
+        assert!(lb.max_occupancy_slowdown() < 1.01);
+        assert!(lb.max_slowdown() > 1.5);
+        assert!(ma.max_slowdown() < lb.max_slowdown());
+        assert!(arms.iter().all(|a| a.hbm_gb.iter().all(|&g| g >= 0.0)));
     }
 
     #[test]

@@ -2,11 +2,15 @@
 //! evaluation section (see DESIGN.md §6 for the experiment index).
 //!
 //! Usage: `gacer-bench
-//! <fig4|fig7|fig8|table2|fig9|table3|table4|placement|replan|slo|throughput|all>
+//! <fig4|fig7|fig8|table2|fig9|table3|table4|placement|memory|replan|slo|throughput|all>
 //! [--rounds N]`
 //!
 //! `placement` is this repo's multi-GPU extension: LoadBalance vs
-//! InterferenceAware placement objectives over heterogeneous tenant mixes.
+//! InterferenceAware vs MemoryAware placement objectives over
+//! heterogeneous tenant mixes. `memory` isolates the second cost
+//! dimension: on a bandwidth-bound mix, occupancy-only placement pairs
+//! two HBM-saturating tenants that the two-dimensional roofline
+//! separates, recorded in `BENCH_memory.json` (`docs/BENCHMARKS.md`).
 //! `replan` is the online-serving extension: re-plan latency and plan
 //! quality vs search budget on an admit event, cold vs warm-started
 //! (`docs/SEARCH.md`). `slo` is the SLO-regulation extension: interactive
@@ -33,7 +37,7 @@ fn main() {
     let ids: Vec<&str> = if experiment == "all" {
         vec![
             "fig4", "fig7", "fig8", "table2", "fig9", "table3", "table4",
-            "placement", "replan", "slo", "throughput",
+            "placement", "memory", "replan", "slo", "throughput",
         ]
     } else {
         vec![experiment.as_str()]
@@ -48,6 +52,7 @@ fn main() {
             "table3" => experiments::table3(),
             "table4" => experiments::table4(rounds),
             "placement" => experiments::placement_objectives(),
+            "memory" => experiments::memory(),
             "replan" => experiments::replan(),
             "slo" => experiments::slo(),
             "throughput" => experiments::throughput(&args),

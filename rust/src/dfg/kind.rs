@@ -70,31 +70,48 @@ impl OpKind {
 
     /// HBM bytes moved at batch `b` (activations in+out plus weights).
     pub fn bytes(&self, b: usize) -> f64 {
+        self.weight_bytes() + self.activation_bytes(b)
+    }
+
+    /// Resident parameter bytes (batch-independent: weights live in HBM
+    /// for the lifetime of the tenant).
+    pub fn weight_bytes(&self) -> f64 {
+        match *self {
+            OpKind::Conv { cin, cout, k, .. } => (k * k * cin * cout) as f64 * F32,
+            OpKind::DwConv { c, k, .. } => (k * k * c) as f64 * F32,
+            OpKind::Linear { fin, fout } => (fin * fout) as f64 * F32,
+            OpKind::LstmCell { i, h } => (4 * h * (i + h)) as f64 * F32,
+            OpKind::Attention { dim, .. } => (4 * dim * dim) as f64 * F32,
+            OpKind::BatchNorm { .. }
+            | OpKind::ReLU { .. }
+            | OpKind::Pool { .. }
+            | OpKind::Add { .. }
+            | OpKind::Embed { .. }
+            | OpKind::Softmax { .. }
+            | OpKind::Chunk { .. }
+            | OpKind::Concat { .. } => 0.0,
+        }
+    }
+
+    /// Activation bytes moved at batch `b` (input + output working set;
+    /// scales with the executed micro-batch, so chunking shrinks it).
+    pub fn activation_bytes(&self, b: usize) -> f64 {
         let bf = b as f64;
         match *self {
-            OpKind::Conv { h, w, cin, cout, k, stride } => {
+            OpKind::Conv { h, w, cin, cout, k: _, stride } => {
                 let input = (h * stride * w * stride * cin) as f64;
                 let output = (h * w * cout) as f64;
-                let weights = (k * k * cin * cout) as f64;
-                (bf * (input + output) + weights) * F32
+                bf * (input + output) * F32
             }
-            OpKind::DwConv { h, w, c, k } => {
-                (bf * (2 * h * w * c) as f64 + (k * k * c) as f64) * F32
-            }
-            OpKind::Linear { fin, fout } => {
-                (bf * (fin + fout) as f64 + (fin * fout) as f64) * F32
-            }
+            OpKind::DwConv { h, w, c, .. } => bf * (2 * h * w * c) as f64 * F32,
+            OpKind::Linear { fin, fout } => bf * (fin + fout) as f64 * F32,
             OpKind::BatchNorm { elems } | OpKind::ReLU { elems } | OpKind::Add { elems } => {
                 bf * (2 * elems) as f64 * F32
             }
             OpKind::Pool { h, w, c, k } => bf * ((h * w * c * k * k) + h * w * c) as f64 * F32,
             OpKind::Embed { seq, dim } => bf * (2 * seq * dim) as f64 * F32,
-            OpKind::LstmCell { i, h } => {
-                (bf * (i + 5 * h) as f64 + (4 * h * (i + h)) as f64) * F32
-            }
-            OpKind::Attention { seq, dim } => {
-                (bf * (6 * seq * dim + seq * seq) as f64 + (4 * dim * dim) as f64) * F32
-            }
+            OpKind::LstmCell { i, h } => bf * (i + 5 * h) as f64 * F32,
+            OpKind::Attention { seq, dim } => bf * (6 * seq * dim + seq * seq) as f64 * F32,
             OpKind::Softmax { elems } => bf * (2 * elems) as f64 * F32,
             OpKind::Chunk { elems } | OpKind::Concat { elems } => {
                 bf * (2 * elems) as f64 * F32
@@ -184,6 +201,37 @@ mod tests {
         assert!(!OpKind::Chunk { elems: 8 }.chunkable());
         assert!(!OpKind::Concat { elems: 8 }.chunkable());
         assert!(OpKind::Conv { h: 1, w: 1, cin: 1, cout: 1, k: 1, stride: 1 }.chunkable());
+    }
+
+    #[test]
+    fn bytes_is_weights_plus_activations() {
+        let kinds = [
+            OpKind::Conv { h: 8, w: 8, cin: 32, cout: 64, k: 3, stride: 2 },
+            OpKind::DwConv { h: 8, w: 8, c: 32, k: 3 },
+            OpKind::Linear { fin: 128, fout: 64 },
+            OpKind::BatchNorm { elems: 512 },
+            OpKind::LstmCell { i: 64, h: 128 },
+            OpKind::Attention { seq: 32, dim: 16 },
+            OpKind::Pool { h: 8, w: 8, c: 32, k: 2 },
+            OpKind::Chunk { elems: 256 },
+        ];
+        for k in kinds {
+            for b in [1usize, 4, 32] {
+                let total = k.bytes(b);
+                let split = k.weight_bytes() + k.activation_bytes(b);
+                assert!((total - split).abs() < 1e-9, "{k:?} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn weight_bytes_batch_independent_elementwise_weightless() {
+        assert_eq!(OpKind::ReLU { elems: 1 << 20 }.weight_bytes(), 0.0);
+        assert_eq!(OpKind::BatchNorm { elems: 1 << 20 }.weight_bytes(), 0.0);
+        let lin = OpKind::Linear { fin: 100, fout: 10 };
+        // weights don't scale with batch; activations do.
+        assert_eq!(lin.weight_bytes(), 4000.0);
+        assert!(lin.activation_bytes(8) > lin.activation_bytes(1) * 7.9);
     }
 
     #[test]

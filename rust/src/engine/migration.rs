@@ -31,7 +31,7 @@
 use crate::engine::TenantId;
 use crate::metrics::imbalance_ratio;
 use crate::plan::{Placement, TenantSet};
-use crate::profile::slowdown_from_phases;
+use crate::profile::{roofline_slowdown, slowdown_from_phases};
 
 /// Threshold rule for load-drift migration: act when the max/min
 /// observed device-load ratio exceeds `max_imbalance`, and only when a
@@ -415,6 +415,135 @@ impl MigrationPolicy {
             })
         })
     }
+
+    /// Objective-consistent sibling of
+    /// [`MigrationPolicy::propose_interference_aware`] for
+    /// [`PlacementObjective::MemoryAware`] deployments. Candidate groups
+    /// are scored on the two-dimensional roofline
+    /// ([`crate::profile::roofline_slowdown`]): a device is a bottleneck
+    /// when either its summed SM demand *or* its summed bandwidth demand
+    /// oversubscribes, so a move that separates two bandwidth hogs wins
+    /// even when occupancy alone sees no contention. Destinations whose
+    /// resident HBM footprint would overflow the platform's capacity
+    /// ([`crate::profile::Platform::hbm_bytes`]) are never proposed —
+    /// migration must not create a placement that admission would refuse.
+    ///
+    /// [`PlacementObjective::MemoryAware`]:
+    ///     crate::plan::PlacementObjective::MemoryAware
+    pub fn propose_memory_aware(
+        &self,
+        weights: &[f64],
+        placement: &Placement,
+        set: &TenantSet,
+    ) -> Option<MigrationProposal> {
+        let n = placement.n_devices();
+        if n < 2 || !covers_placement(weights.len().min(set.len()), placement) {
+            return None;
+        }
+        let loads: Vec<f64> = (0..n)
+            .map(|d| placement.tenants_on(d).iter().map(|&s| weights[s]).sum())
+            .collect();
+        let before = imbalance_ratio(&loads);
+        // Sample both demand timelines once per tenant; candidate groups
+        // below score by summing the pre-sampled profiles.
+        let occ: Vec<Vec<f64>> =
+            set.tenants.iter().map(|d| set.cost.occupancy_profile(d)).collect();
+        let mem: Vec<Vec<f64>> =
+            set.tenants.iter().map(|d| set.cost.bandwidth_profile(d)).collect();
+        let footprints: Vec<f64> =
+            set.tenants.iter().map(|d| TenantSet::dfg_footprint(d, None)).collect();
+        let capacity = set.cost.platform.hbm_bytes();
+        let slowdown_of = |slots: &[usize]| -> f64 {
+            let o: Vec<&[f64]> = slots.iter().map(|&s| occ[s].as_slice()).collect();
+            let m: Vec<&[f64]> = slots.iter().map(|&s| mem[s].as_slice()).collect();
+            roofline_slowdown(&o, &m)
+        };
+        let usage_of = |slots: &[usize]| -> f64 {
+            slots.iter().map(|&s| footprints[s]).sum()
+        };
+        let scores: Vec<f64> = (0..n)
+            .map(|d| loads[d] * slowdown_of(placement.tenants_on(d)))
+            .collect();
+        let current_max = scores.iter().copied().fold(0.0f64, f64::max);
+        // Trigger on observed load skew *or* a predicted roofline
+        // bottleneck: two bandwidth hogs paired on one device can be
+        // perfectly load-balanced yet still worth separating.
+        let contended = (0..n)
+            .any(|d| slowdown_of(placement.tenants_on(d)) > 1.0 + 1e-9);
+        if before <= self.max_imbalance && !contended {
+            return None;
+        }
+
+        let mut best: Option<(f64, f64, usize, usize, usize)> = None;
+        for from in (0..n).filter(|&d| scores[d] >= current_max) {
+            for &slot in placement.tenants_on(from) {
+                let w = weights[slot];
+                if w <= 0.0 {
+                    continue;
+                }
+                let src_slots: Vec<usize> = placement
+                    .tenants_on(from)
+                    .iter()
+                    .copied()
+                    .filter(|&s| s != slot)
+                    .collect();
+                for to in (0..n).filter(|&t| t != from) {
+                    // Hard capacity gate on the destination.
+                    if usage_of(placement.tenants_on(to)) + footprints[slot]
+                        > capacity
+                    {
+                        continue;
+                    }
+                    let mut dst_slots = placement.tenants_on(to).to_vec();
+                    dst_slots.push(slot);
+                    let mut moved = loads.clone();
+                    moved[from] -= w;
+                    moved[to] += w;
+                    let src_score = moved[from].max(0.0) * slowdown_of(&src_slots);
+                    let dst_score = moved[to] * slowdown_of(&dst_slots);
+                    let new_max = scores
+                        .iter()
+                        .enumerate()
+                        .map(|(d, &s)| {
+                            if d == from {
+                                src_score
+                            } else if d == to {
+                                dst_score
+                            } else {
+                                s
+                            }
+                        })
+                        .fold(0.0f64, f64::max);
+                    if new_max >= current_max * (1.0 - 1e-9) {
+                        continue;
+                    }
+                    let new_ratio = imbalance_ratio(&moved);
+                    let better = match &best {
+                        None => true,
+                        Some(&(m, r, ..)) => new_max < m || (new_max == m && new_ratio < r),
+                    };
+                    if better {
+                        best = Some((new_max, new_ratio, slot, from, to));
+                    }
+                }
+            }
+        }
+        best.and_then(|(new_max, after, slot, from, to)| {
+            let gain = current_max - new_max;
+            if !self.gain_pays(gain) {
+                return None;
+            }
+            Some(MigrationProposal {
+                slot,
+                from,
+                to,
+                imbalance_before: before,
+                imbalance_after: after,
+                gain,
+                cost: self.bill(),
+            })
+        })
+    }
 }
 
 /// Whether every slot the placement places is below `len` (the observed
@@ -650,5 +779,69 @@ mod tests {
         assert!(policy
             .propose_interference_aware(&[9.0, 1.0, 1.0, 1.0], &single, &set)
             .is_none());
+    }
+
+    fn bn_net(name: &str, n: usize) -> Dfg {
+        use crate::dfg::OpKind;
+        // Batch-8 BatchNorm over 56×56×256: ~96% of peak bandwidth but
+        // only ~1.5% SM occupancy — invisible to the occupancy model.
+        let mut d = Dfg::new(name);
+        for i in 0..n {
+            d.push(OpKind::BatchNorm { elems: 56 * 56 * 256 }, 8, format!("bn{i}"));
+        }
+        d
+    }
+
+    #[test]
+    fn memory_variant_separates_bandwidth_hogs_occupancy_cannot_see() {
+        // Two bandwidth-saturating BN tenants share device 0; the loads
+        // are perfectly balanced (ratio 2.0 == threshold), so both the
+        // load rule and the interference rule decline. The roofline sees
+        // the paired ~96% bandwidth demands oversubscribing HBM and
+        // separates them.
+        let cost = crate::profile::CostModel::new(crate::profile::Platform::titan_v());
+        let set = TenantSet::new(
+            vec![bn_net("hog-a", 24), bn_net("hog-b", 24), conv_net("lo", 1, 4)],
+            cost,
+        );
+        let placement = Placement::from_assignments(vec![vec![0, 1], vec![2]]);
+        let weights = [2.0, 2.0, 2.0];
+        let policy = MigrationPolicy::default();
+        assert!(policy.propose(&weights, &placement).is_none());
+        assert!(policy
+            .propose_interference_aware(&weights, &placement, &set)
+            .is_none());
+        let m = policy
+            .propose_memory_aware(&weights, &placement, &set)
+            .expect("roofline contention triggers without load skew");
+        assert_eq!(m.from, 0);
+        assert_eq!(m.to, 1);
+        assert!(m.gain > 0.0);
+    }
+
+    #[test]
+    fn memory_variant_never_overflows_the_destination() {
+        // Device 1 already holds a ~14.4 GB tenant (over the Titan V's
+        // 12 GB by itself); the only capacity-respecting destination is
+        // the empty device 2.
+        use crate::dfg::OpKind;
+        let cost = crate::profile::CostModel::new(crate::profile::Platform::titan_v());
+        let mut giant = Dfg::new("giant");
+        giant.push(OpKind::Linear { fin: 60_000, fout: 60_000 }, 1, "g0");
+        let set =
+            TenantSet::new(vec![bn_net("hog-a", 24), bn_net("hog-b", 24), giant], cost);
+        let placement =
+            Placement::from_assignments(vec![vec![0, 1], vec![2], vec![]]);
+        let weights = [2.0, 2.0, 2.0];
+        let policy = MigrationPolicy::default();
+        let m = policy
+            .propose_memory_aware(&weights, &placement, &set)
+            .expect("the empty device absorbs a hog");
+        assert_eq!(m.from, 0);
+        assert_eq!(m.to, 2, "full device is never a destination");
+
+        // With the full device as the only alternative, no move at all.
+        let two = Placement::from_assignments(vec![vec![0, 1], vec![2]]);
+        assert!(policy.propose_memory_aware(&weights, &two, &set).is_none());
     }
 }

@@ -247,6 +247,12 @@ impl EngineBuilder {
     /// [`Placement::least_interfering`], and
     /// [`GacerEngine::maybe_migrate`] scores migration destinations with
     /// [`MigrationPolicy::propose_interference_aware`].
+    /// [`PlacementObjective::MemoryAware`] extends the loop to the
+    /// two-dimensional roofline: slowdowns price bandwidth as well as
+    /// occupancy, admission routes through
+    /// [`Placement::fit_memory_aware`] — refusing with
+    /// [`Error::MemoryCapacity`] when no device has the HBM headroom —
+    /// and migration uses [`MigrationPolicy::propose_memory_aware`].
     pub fn placement_objective(mut self, objective: PlacementObjective) -> Self {
         self.objective = objective;
         self
@@ -721,8 +727,13 @@ impl GacerEngine {
     /// [`PlacementObjective::LoadBalance`], the device whose max
     /// interference score the newcomer least raises
     /// ([`Placement::least_interfering`]) under
-    /// [`PlacementObjective::InterferenceAware`] — grow that shard's
-    /// plan, and incrementally re-search **only that shard**.
+    /// [`PlacementObjective::InterferenceAware`], the HBM-fitting device
+    /// whose roofline score it least raises
+    /// ([`Placement::fit_memory_aware`], refusing with
+    /// [`Error::MemoryCapacity`] when the newcomer's resident footprint
+    /// fits nowhere) under [`PlacementObjective::MemoryAware`] — grow
+    /// that shard's plan, and incrementally re-search **only that
+    /// shard**.
     fn admit_with(
         &mut self,
         dfg: Dfg,
@@ -742,6 +753,17 @@ impl GacerEngine {
                 dfg.name, slo.tier
             )));
         }
+        // Device selection happens before any engine state mutates: a
+        // memory-capacity refusal must leave no trace of the newcomer.
+        let device = match self.objective {
+            PlacementObjective::LoadBalance => self.sharded.placement.least_loaded(&self.set),
+            PlacementObjective::InterferenceAware => {
+                self.sharded.placement.least_interfering(&self.set, &dfg)
+            }
+            PlacementObjective::MemoryAware => {
+                self.sharded.placement.fit_memory_aware(&self.set, &dfg)?
+            }
+        };
         let id = TenantId(self.next_id);
         self.next_id += 1;
         let name = dfg.name.clone();
@@ -764,12 +786,6 @@ impl GacerEngine {
         if let Some(t) = target {
             self.slo_monitor.track(id.0, slo.tier, t)?;
         }
-        let device = match self.objective {
-            PlacementObjective::LoadBalance => self.sharded.placement.least_loaded(&self.set),
-            PlacementObjective::InterferenceAware => {
-                self.sharded.placement.least_interfering(&self.set, &dfg)
-            }
-        };
         let slot = self.set.len();
         self.set.admit(dfg);
         self.meta
@@ -1434,6 +1450,11 @@ impl GacerEngine {
         let proposal = match self.objective {
             PlacementObjective::LoadBalance => policy.propose(&weights, &self.sharded.placement),
             PlacementObjective::InterferenceAware => policy.propose_interference_aware(
+                &weights,
+                &self.sharded.placement,
+                &self.set,
+            ),
+            PlacementObjective::MemoryAware => policy.propose_memory_aware(
                 &weights,
                 &self.sharded.placement,
                 &self.set,

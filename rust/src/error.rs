@@ -50,6 +50,11 @@ pub enum Error {
     /// queued: answering it late would only burn budget for the requests
     /// behind it.
     DeadlineExceeded(String),
+    /// Admission/placement refused because no device has enough free HBM
+    /// for the tenant's resident footprint (weights + chunk-scaled
+    /// activations), even if it would fit by compute. The message names
+    /// the tenant, its footprint, and the tightest device's free bytes.
+    MemoryCapacity(String),
     /// Filesystem failure (artifact/param loading, spawn).
     Io(std::io::Error),
 }
@@ -72,6 +77,7 @@ impl fmt::Display for Error {
             Error::ChannelClosed(who) => write!(f, "{who} stopped"),
             Error::Overloaded(m) => write!(f, "overloaded: {m}"),
             Error::DeadlineExceeded(m) => write!(f, "deadline exceeded: {m}"),
+            Error::MemoryCapacity(m) => write!(f, "memory capacity: {m}"),
             Error::Io(e) => write!(f, "io: {e}"),
         }
     }
@@ -126,6 +132,17 @@ mod tests {
         let e = Error::DeadlineExceeded("tenant a: queued past 5ms deadline".into());
         assert!(matches!(e, Error::DeadlineExceeded(_)));
         assert!(e.to_string().contains("deadline exceeded"));
+    }
+
+    #[test]
+    fn memory_capacity_is_matchable_and_descriptive() {
+        let e = Error::MemoryCapacity(
+            "tenant big: footprint 14.4 GB exceeds 12.0 GB free on device 0".into(),
+        );
+        assert!(matches!(e, Error::MemoryCapacity(_)));
+        let s = e.to_string();
+        assert!(s.contains("memory capacity"));
+        assert!(s.contains("14.4 GB"));
     }
 
     #[test]

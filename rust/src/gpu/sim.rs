@@ -135,6 +135,13 @@ pub struct SimOutcome {
     pub avg_utilization: f64,
     /// Idle time spent on cluster-barrier synchronization (microseconds).
     pub sync_idle_us: f64,
+    /// HBM-oversubscription pressure in percent-microsecond-comparable
+    /// units ([`crate::plan::TenantSet::hbm_pressure_us`]): zero for any
+    /// plan whose resident footprint fits the device, positive when the
+    /// tenants' weights + chunk-scaled activations exceed HBM capacity.
+    /// Stamped by `TenantSet::simulate`; raw `GpuSim` runs leave it `0.0`
+    /// (the simulator sees streams, not footprints).
+    pub hbm_pressure_us: f64,
     /// Per-interval utilization trace, when requested.
     pub trace: Option<UtilTrace>,
     /// Per-op records, when requested.
@@ -142,11 +149,13 @@ pub struct SimOutcome {
 }
 
 impl SimOutcome {
-    /// The search objective: Eq. 8's overhead-aware residue. Equals
-    /// `S_GPU * makespan - useful work`, with chunk/concat overhead also
-    /// counted against the plan.
+    /// The search objective: Eq. 8's overhead-aware residue — `S_GPU *
+    /// makespan - useful work`, with chunk/concat overhead counted
+    /// against the plan — plus the HBM-oversubscription pressure, so a
+    /// decomposition that shrinks an over-capacity resident footprint is
+    /// rewarded (footprint-vs-occupancy trade; zero for ordinary mixes).
     pub fn objective(&self) -> f64 {
-        self.residue + self.overhead_sm_time
+        self.residue + self.overhead_sm_time + self.hbm_pressure_us
     }
 }
 
@@ -350,6 +359,7 @@ impl GpuSim {
             overhead_sm_time,
             avg_utilization: if t > 0.0 { used_sm_time / t } else { 0.0 },
             sync_idle_us: sync_idle,
+            hbm_pressure_us: 0.0,
             trace,
             op_records: records,
         }

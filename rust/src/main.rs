@@ -5,9 +5,9 @@
 //! Subcommands:
 //!   gacer simulate [--models R50,V16,M3] [--platform TitanV]
 //!   gacer search   [--models R50,V16,M3] [--platform TitanV] [--max-pointers 6] [--devices 1]
-//!                  [--placement balanced|interference] [--replan-budget-ms N]
+//!                  [--placement balanced|interference|memory] [--replan-budget-ms N]
 //!   gacer serve    [--artifacts artifacts] [--requests 64] [--tenants tiny_cnn,...] [--devices 1]
-//!                  [--placement balanced|interference] [--live-admit tiny_cnn]
+//!                  [--placement balanced|interference|memory] [--live-admit tiny_cnn]
 //!                  [--replan-budget-ms N] [--migration-cost-aware]
 //!                  [--tier interactive,batch,...] [--slo MS]
 //!   gacer loadtest [--rate 4000] [--duration-ms 1000] [--trace poisson|bursty|diurnal]
@@ -26,7 +26,11 @@
 //! the placement objective from plain load balance to the
 //! interference-aware one: co-location is priced with the cost model's
 //! occupancy curves, so two SM-pool-saturating tenants land on different
-//! devices even when their latency totals would balance. `--live-admit FAMILY` then admits
+//! devices even when their latency totals would balance.
+//! `--placement memory` goes one dimension further: co-location is priced
+//! on the full compute+memory roofline and admission enforces the device
+//! HBM capacity (a tenant whose resident footprint fits nowhere is
+//! refused with a typed error, see docs/OPERATIONS.md). `--live-admit FAMILY` then admits
 //! one more tenant against the *running* cluster and hot-swaps the
 //! re-searched plan in (no restart) — the live re-deployment path of
 //! `docs/OPERATIONS.md`.
@@ -44,9 +48,9 @@ use gacer::util::cli::Args;
 const USAGE: &str = "usage: gacer <simulate|search|serve|loadtest> [options]
   simulate --models R50,V16,M3 --platform TitanV
   search   --models R50,V16,M3 --platform TitanV --max-pointers 6 --devices 1
-           [--placement balanced|interference] [--replan-budget-ms N]
+           [--placement balanced|interference|memory] [--replan-budget-ms N]
   serve    --artifacts artifacts --requests 64 --tenants tiny_cnn,tiny_cnn,tiny_cnn --devices 1
-           [--placement balanced|interference] [--live-admit tiny_cnn]
+           [--placement balanced|interference|memory] [--live-admit tiny_cnn]
            [--replan-budget-ms N] [--migration-cost-aware]
            [--tier interactive,batch,...] [--slo MS]
   loadtest --rate 4000 --duration-ms 1000 [--trace poisson|bursty|diurnal]
@@ -60,12 +64,15 @@ const USAGE: &str = "usage: gacer <simulate|search|serve|loadtest> [options]
                 by cost-model bin-packing, each device is searched
                 independently, and serving runs one coordinator per device
                 behind a placement-routing front-end (default 1)
-  --placement balanced|interference
+  --placement balanced|interference|memory
                 placement objective for the device dimension: 'balanced'
                 equalizes summed serial latency (LPT); 'interference'
                 minimizes the max per-device load x predicted co-location
                 slowdown from the cost model's occupancy curves, keeping
-                pool-saturating tenants apart (default balanced)
+                pool-saturating tenants apart; 'memory' prices the full
+                compute+memory roofline and enforces device HBM capacity
+                (bandwidth hogs are separated, oversized tenants refused)
+                (default balanced)
   --live-admit FAMILY
                 after serving the initial tenants, admit one more FAMILY
                 tenant against the running cluster and hot-swap the
@@ -106,7 +113,9 @@ fn platform_or_exit(name: &str) -> Platform {
 
 fn placement_or_exit(name: &str) -> PlacementObjective {
     PlacementObjective::parse(name).unwrap_or_else(|| {
-        eprintln!("unknown placement objective {name}; expected balanced|interference");
+        eprintln!(
+            "unknown placement objective {name}; expected balanced|interference|memory"
+        );
         std::process::exit(2);
     })
 }

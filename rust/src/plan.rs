@@ -181,6 +181,17 @@ fn seeded_pointers(dfg_len: usize, n_pointers: usize) -> Vec<usize> {
 /// apart even when raw load balance would pair them (VELTAIR-style
 /// interference-aware co-location).
 ///
+/// Both interference objectives score `load × predicted slowdown`;
+/// they differ in the slowdown model.
+/// [`InterferenceAware`](PlacementObjective::InterferenceAware) is
+/// occupancy-only — blind to memory: two bandwidth-saturating,
+/// low-occupancy tenants look free to it.
+/// [`MemoryAware`](PlacementObjective::MemoryAware) scores the full
+/// two-dimensional roofline ([`crate::profile::roofline_slowdown`]:
+/// per phase, the max of SM overflow and bandwidth oversubscription)
+/// and additionally enforces the device HBM capacity during greedy
+/// construction, refinement, and admission.
+///
 /// ```
 /// use gacer::plan::PlacementObjective;
 ///
@@ -188,6 +199,8 @@ fn seeded_pointers(dfg_len: usize, n_pointers: usize) -> Vec<usize> {
 ///            Some(PlacementObjective::LoadBalance));
 /// assert_eq!(PlacementObjective::parse("interference"),
 ///            Some(PlacementObjective::InterferenceAware));
+/// assert_eq!(PlacementObjective::parse("memory"),
+///            Some(PlacementObjective::MemoryAware));
 /// assert!(PlacementObjective::parse("magic").is_none());
 /// assert_eq!(PlacementObjective::default(), PlacementObjective::LoadBalance);
 /// ```
@@ -197,39 +210,62 @@ pub enum PlacementObjective {
     #[default]
     LoadBalance,
     /// Minimize the max per-device `load × predicted co-location
-    /// slowdown` (greedy seeding + local move refinement).
+    /// slowdown` over the **occupancy** curves only (greedy seeding +
+    /// local move refinement).
     InterferenceAware,
+    /// Minimize the max per-device `load × predicted slowdown` over the
+    /// two-dimensional compute+memory roofline, under the device HBM
+    /// capacity constraint.
+    MemoryAware,
 }
 
 impl PlacementObjective {
-    /// Parse a CLI spelling (`balanced` | `interference`).
+    /// Parse a CLI spelling (`balanced` | `interference` | `memory`).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "balanced" | "load-balance" | "lpt" => Some(Self::LoadBalance),
             "interference" | "interference-aware" => Some(Self::InterferenceAware),
+            "memory" | "memory-aware" => Some(Self::MemoryAware),
             _ => None,
         }
     }
 
-    /// Display name (`LoadBalance` / `InterferenceAware`).
+    /// Display name (`LoadBalance` / `InterferenceAware` / `MemoryAware`).
     pub fn label(&self) -> &'static str {
         match self {
             Self::LoadBalance => "LoadBalance",
             Self::InterferenceAware => "InterferenceAware",
+            Self::MemoryAware => "MemoryAware",
         }
     }
 }
 
 /// Pre-sampled interference-scoring context: one serial-latency weight
 /// and one occupancy timeline ([`CostModel::occupancy_profile`]) per
-/// tenant slot, computed **once** per placement decision and reused
-/// across every candidate group the search scores.
+/// tenant slot — plus, for the memory-aware objective, a bandwidth
+/// timeline ([`CostModel::bandwidth_profile`]), an HBM footprint per
+/// slot, and the device capacity — computed **once** per placement
+/// decision and reused across every candidate group the search scores.
 struct InterferenceCtx {
     weights: Vec<f64>,
     profiles: Vec<Vec<f64>>,
+    /// Bandwidth-demand timelines; empty when the ctx scores the
+    /// occupancy axis only ([`PlacementObjective::InterferenceAware`]).
+    mem_profiles: Vec<Vec<f64>>,
+    /// Per-slot resident HBM footprint in bytes; empty when capacity is
+    /// not enforced.
+    footprints: Vec<f64>,
+    /// Device HBM capacity in bytes (only read when `footprints` is
+    /// non-empty).
+    capacity: f64,
 }
 
+/// An extra (not-yet-admitted) tenant appended to a candidate group:
+/// serial-latency weight, occupancy timeline, bandwidth timeline.
+type ExtraTenant<'a> = (f64, &'a [f64], &'a [f64]);
+
 impl InterferenceCtx {
+    /// Occupancy-only scoring (the `InterferenceAware` objective).
     fn new(set: &TenantSet) -> Self {
         InterferenceCtx {
             weights: set
@@ -238,27 +274,67 @@ impl InterferenceCtx {
                 .map(|d| set.cost.sequential_latency_us(d))
                 .collect(),
             profiles: set.tenants.iter().map(|d| set.cost.occupancy_profile(d)).collect(),
+            mem_profiles: Vec::new(),
+            footprints: Vec::new(),
+            capacity: f64::INFINITY,
         }
+    }
+
+    /// Two-dimensional roofline scoring with HBM capacity enforcement
+    /// (the `MemoryAware` objective).
+    fn roofline(set: &TenantSet) -> Self {
+        let mut ctx = Self::new(set);
+        ctx.mem_profiles =
+            set.tenants.iter().map(|d| set.cost.bandwidth_profile(d)).collect();
+        ctx.footprints = (0..set.len()).map(|s| set.hbm_footprint(s, None)).collect();
+        ctx.capacity = set.cost.platform.hbm_bytes();
+        ctx
     }
 
     /// Interference score of one co-located slot group — summed serial
     /// latency × predicted slowdown, the per-device quantity
-    /// [`Placement::interference_aware`] minimizes the maximum of —
-    /// optionally with one extra (not-yet-admitted) tenant's weight and
-    /// timeline appended.
-    fn score_with(&self, slots: &[usize], extra: Option<(f64, &[f64])>) -> f64 {
+    /// [`Placement::interference_aware`] / [`Placement::memory_aware`]
+    /// minimize the maximum of — optionally with one extra
+    /// (not-yet-admitted) tenant appended.
+    fn score_with(&self, slots: &[usize], extra: Option<ExtraTenant<'_>>) -> f64 {
         let mut load: f64 = slots.iter().map(|&s| self.weights[s]).sum();
-        let mut refs: Vec<&[f64]> =
+        let mut occ: Vec<&[f64]> =
             slots.iter().map(|&s| self.profiles[s].as_slice()).collect();
-        if let Some((w, p)) = extra {
-            load += w;
-            refs.push(p);
+        if self.mem_profiles.is_empty() {
+            if let Some((w, p, _)) = extra {
+                load += w;
+                occ.push(p);
+            }
+            return load * crate::profile::slowdown_from_phases(&occ);
         }
-        load * crate::profile::slowdown_from_phases(&refs)
+        let mut mem: Vec<&[f64]> =
+            slots.iter().map(|&s| self.mem_profiles[s].as_slice()).collect();
+        if let Some((w, p, m)) = extra {
+            load += w;
+            occ.push(p);
+            mem.push(m);
+        }
+        load * crate::profile::roofline_slowdown(&occ, &mem)
     }
 
     fn score(&self, slots: &[usize]) -> f64 {
         self.score_with(slots, None)
+    }
+
+    /// Whether adding a tenant with footprint `extra_bytes` to `slots`
+    /// stays within the device HBM capacity. Always true when the ctx
+    /// does not enforce capacity.
+    fn fits(&self, slots: &[usize], extra_bytes: f64) -> bool {
+        if self.footprints.is_empty() {
+            return true;
+        }
+        let used: f64 = slots.iter().map(|&s| self.footprints[s]).sum();
+        used + extra_bytes <= self.capacity
+    }
+
+    /// `slot`'s resident footprint, `0.0` when capacity is not enforced.
+    fn slot_footprint(&self, slot: usize) -> f64 {
+        self.footprints.get(slot).copied().unwrap_or(0.0)
     }
 }
 
@@ -293,6 +369,9 @@ fn refine_interference(ctx: &InterferenceCtx, assignments: &mut [Vec<usize>]) {
                 .collect();
             let src_score = ctx.score(&remaining);
             for to in (0..n_devices).filter(|&t| t != bottleneck) {
+                if !ctx.fits(&assignments[to], ctx.slot_footprint(slot)) {
+                    continue;
+                }
                 let mut dst = assignments[to].clone();
                 dst.push(slot);
                 let dst_score = ctx.score(&dst);
@@ -409,12 +488,13 @@ impl Placement {
         match objective {
             PlacementObjective::LoadBalance => Self::balanced(set, n_devices),
             PlacementObjective::InterferenceAware => Self::interference_aware(set, n_devices),
+            PlacementObjective::MemoryAware => Self::memory_aware(set, n_devices),
         }
     }
 
     /// Interference-aware placement: minimize the max per-device
-    /// `load × predicted co-location slowdown`
-    /// ([`CostModel::colocation_slowdown`] over the occupancy curves).
+    /// `load × predicted co-location slowdown` over the **occupancy**
+    /// curves only ([`CostModel::occupancy_slowdown`]).
     ///
     /// Greedy seeding in LPT order (each tenant goes where the resulting
     /// max score is smallest), then bounded local refinement (move one
@@ -424,8 +504,28 @@ impl Placement {
     /// When no co-location overflows the pool, every slowdown is 1.0 and
     /// this reduces to load balancing.
     pub fn interference_aware(set: &TenantSet, n_devices: usize) -> Self {
+        Self::min_max_greedy(set, n_devices, &InterferenceCtx::new(set))
+    }
+
+    /// Memory-aware placement: same greedy + refinement as
+    /// [`Placement::interference_aware`], but scoring the full
+    /// two-dimensional roofline ([`CostModel::colocation_slowdown`]:
+    /// per phase, `max(SM overflow, bandwidth oversubscription)`) and
+    /// preferring devices whose remaining HBM capacity fits the slot's
+    /// resident footprint ([`TenantSet::hbm_footprint`]). Construction is
+    /// total — if no device can fit a slot, the best-scoring device takes
+    /// it anyway (hard refusal lives on the admission path,
+    /// [`Placement::fit_memory_aware`], which returns
+    /// [`Error::MemoryCapacity`]).
+    pub fn memory_aware(set: &TenantSet, n_devices: usize) -> Self {
+        Self::min_max_greedy(set, n_devices, &InterferenceCtx::roofline(set))
+    }
+
+    /// Shared greedy min-max seeding + local refinement for the two
+    /// interference objectives; the `ctx` decides the slowdown model and
+    /// whether HBM capacity constrains candidate devices.
+    fn min_max_greedy(set: &TenantSet, n_devices: usize, ctx: &InterferenceCtx) -> Self {
         let n_devices = n_devices.max(1);
-        let ctx = InterferenceCtx::new(set);
         let mut order: Vec<usize> = (0..set.len()).collect();
         order.sort_by(|&a, &b| {
             ctx.weights[b]
@@ -436,8 +536,16 @@ impl Placement {
         let mut assignments: Vec<Vec<usize>> = vec![Vec::new(); n_devices];
         let mut scores = vec![0.0f64; n_devices];
         for slot in order {
+            let footprint = ctx.slot_footprint(slot);
+            let any_fits =
+                assignments.iter().any(|a| ctx.fits(a, footprint));
             let mut best: Option<(f64, f64, usize)> = None;
             for (d, a) in assignments.iter().enumerate() {
+                // Capacity constraint: skip devices the slot cannot fit
+                // on, unless no device fits (best-effort construction).
+                if any_fits && !ctx.fits(a, footprint) {
+                    continue;
+                }
                 let mut trial = a.clone();
                 trial.push(slot);
                 let trial_score = ctx.score(&trial);
@@ -461,7 +569,7 @@ impl Placement {
             assignments[device].push(slot);
             scores[device] = score;
         }
-        refine_interference(&ctx, &mut assignments);
+        refine_interference(ctx, &mut assignments);
         Self::from_assignments(assignments)
     }
 
@@ -559,9 +667,11 @@ impl Placement {
     }
 
     /// Per-device predicted co-location slowdown under the cost model's
-    /// occupancy curves ([`CostModel::colocation_slowdown`]); `1.0` means
-    /// the device's tenants never overflow the SM pool together (empty
-    /// and single-tenant devices are always `1.0`).
+    /// two-dimensional roofline ([`CostModel::colocation_slowdown`]:
+    /// per phase, the max of SM-pool overflow and memory-bandwidth
+    /// oversubscription); `1.0` means the device's tenants saturate
+    /// neither dimension together (empty and single-tenant devices are
+    /// always `1.0`).
     pub fn predicted_slowdowns(&self, set: &TenantSet) -> Vec<f64> {
         self.assignments
             .iter()
@@ -572,12 +682,44 @@ impl Placement {
             .collect()
     }
 
-    /// Per-device interference score: `load × predicted slowdown` — the
-    /// quantity [`Placement::interference_aware`] minimizes the maximum
-    /// of, and what interference-aware admission/migration compare.
+    /// The occupancy-only sibling of [`Placement::predicted_slowdowns`]
+    /// ([`CostModel::occupancy_slowdown`]) — what the
+    /// `InterferenceAware` objective sees, kept as the comparison arm of
+    /// the `gacer-bench memory` experiment.
+    pub fn predicted_occupancy_slowdowns(&self, set: &TenantSet) -> Vec<f64> {
+        self.assignments
+            .iter()
+            .map(|a| {
+                let dfgs: Vec<&Dfg> = a.iter().map(|&s| &set.tenants[s]).collect();
+                set.cost.occupancy_slowdown(&dfgs)
+            })
+            .collect()
+    }
+
+    /// Per-device interference score: `load × predicted occupancy-only
+    /// slowdown` — the quantity [`Placement::interference_aware`]
+    /// minimizes the maximum of, and what interference-aware
+    /// admission/migration compare.
     pub fn interference_scores(&self, set: &TenantSet) -> Vec<f64> {
         let ctx = InterferenceCtx::new(set);
         self.assignments.iter().map(|a| ctx.score(a)).collect()
+    }
+
+    /// Per-device memory-aware score: `load × predicted roofline
+    /// slowdown` — the quantity [`Placement::memory_aware`] minimizes
+    /// the maximum of, and what memory-aware admission/migration compare.
+    pub fn memory_scores(&self, set: &TenantSet) -> Vec<f64> {
+        let ctx = InterferenceCtx::roofline(set);
+        self.assignments.iter().map(|a| ctx.score(a)).collect()
+    }
+
+    /// Per-device resident HBM usage in bytes: the summed unregulated
+    /// footprints ([`TenantSet::hbm_footprint`]) of the placed tenants.
+    pub fn hbm_usage(&self, set: &TenantSet) -> Vec<f64> {
+        self.assignments
+            .iter()
+            .map(|a| a.iter().map(|&s| set.hbm_footprint(s, None)).sum())
+            .collect()
     }
 
     /// The interference-scored sibling of [`Placement::least_loaded`]:
@@ -596,7 +738,8 @@ impl Placement {
         let mut best = 0usize;
         let mut best_key = (f64::INFINITY, f64::INFINITY);
         for (d, a) in self.assignments.iter().enumerate() {
-            let trial = ctx.score_with(a, Some((extra_weight, extra_profile.as_slice())));
+            let trial =
+                ctx.score_with(a, Some((extra_weight, extra_profile.as_slice(), &[])));
             let resulting_max = scores
                 .iter()
                 .enumerate()
@@ -610,6 +753,63 @@ impl Placement {
             }
         }
         best
+    }
+
+    /// The memory-aware admission chooser: the device where admitting
+    /// `newcomer` least raises the cluster's max per-device roofline
+    /// score, **restricted to devices whose remaining HBM capacity fits
+    /// the newcomer's resident footprint**. When no device fits — the
+    /// tenant would fit by compute but not by memory — returns the typed
+    /// [`Error::MemoryCapacity`] instead of placing it anyway (ties break
+    /// toward the smaller resulting device score, then the lowest device
+    /// index).
+    pub fn fit_memory_aware(&self, set: &TenantSet, newcomer: &Dfg) -> Result<usize> {
+        let ctx = InterferenceCtx::roofline(set);
+        let footprint = TenantSet::dfg_footprint(newcomer, None);
+        let usage = self.hbm_usage(set);
+        let capacity = set.cost.platform.hbm_bytes();
+        if !usage.iter().any(|&u| u + footprint <= capacity) {
+            let gb = 1e-9;
+            let min_used = usage.iter().copied().fold(f64::INFINITY, f64::min);
+            return Err(Error::MemoryCapacity(format!(
+                "tenant {}: footprint {:.2} GB exceeds the {:.2} GB free on the \
+                 emptiest of {} device(s) ({:.2} GB HBM each)",
+                newcomer.name,
+                footprint * gb,
+                (capacity - min_used).max(0.0) * gb,
+                self.n_devices(),
+                capacity * gb,
+            )));
+        }
+        let extra_weight = set.cost.sequential_latency_us(newcomer);
+        let extra_occ = set.cost.occupancy_profile(newcomer);
+        let extra_mem = set.cost.bandwidth_profile(newcomer);
+        let scores: Vec<f64> = self.assignments.iter().map(|a| ctx.score(a)).collect();
+        let mut best: Option<(usize, f64, f64)> = None;
+        for (d, a) in self.assignments.iter().enumerate() {
+            if usage[d] + footprint > capacity {
+                continue;
+            }
+            let trial = ctx.score_with(
+                a,
+                Some((extra_weight, extra_occ.as_slice(), extra_mem.as_slice())),
+            );
+            let resulting_max = scores
+                .iter()
+                .enumerate()
+                .map(|(o, &s)| if o == d { trial } else { s })
+                .fold(0.0f64, f64::max);
+            let better = match best {
+                None => true,
+                Some((_, m, s)) => {
+                    resulting_max < m || (resulting_max == m && trial < s)
+                }
+            };
+            if better {
+                best = Some((d, resulting_max, trial));
+            }
+        }
+        Ok(best.expect("at least one device fits").0)
     }
 
     /// Project a global per-tenant sequence down to `device`'s tenants, in
@@ -813,6 +1013,62 @@ impl TenantSet {
         TenantSet::new(placement.select(&self.tenants, device), self.cost.clone())
     }
 
+    /// Resident HBM footprint of `dfg` in bytes under an optional chunk
+    /// map: every operator's weights stay resident for the tenant's
+    /// lifetime ([`OpKind::weight_bytes`]), plus the peak activation
+    /// working set across operators at each operator's *effective* batch
+    /// — the largest `list_B` piece when the op is decomposed
+    /// ([`OpKind::activation_bytes`]), so chunking shrinks the resident
+    /// variant a memory-bound tenant must hold.
+    pub fn dfg_footprint(dfg: &Dfg, chunks: Option<&ChunkMap>) -> f64 {
+        let mut weights = 0.0;
+        let mut peak_act = 0.0f64;
+        for op in &dfg.ops {
+            weights += op.kind.weight_bytes();
+            let eff = chunks
+                .and_then(|m| m.get(&op.id))
+                .and_then(|l| l.iter().copied().max())
+                .unwrap_or(op.batch);
+            peak_act = peak_act.max(op.kind.activation_bytes(eff));
+        }
+        weights + peak_act
+    }
+
+    /// [`TenantSet::dfg_footprint`] of the deployed tenant at `slot`.
+    pub fn hbm_footprint(&self, slot: usize, chunks: Option<&ChunkMap>) -> f64 {
+        Self::dfg_footprint(&self.tenants[slot], chunks)
+    }
+
+    /// Total resident footprint of the set under a plan's chunking.
+    pub fn hbm_footprint_total(&self, plan: &DeploymentPlan) -> f64 {
+        (0..self.len())
+            .map(|t| self.hbm_footprint(t, plan.chunking.get(t)))
+            .sum()
+    }
+
+    /// Soft HBM-oversubscription pressure in microseconds — the
+    /// footprint half of the search objective's footprint-vs-occupancy
+    /// trade. Zero whenever the set's resident footprint under `plan`
+    /// fits the platform's HBM (every ordinary mix); above capacity, the
+    /// overflow fraction scaled by the set's summed serial latency, so
+    /// a decomposition that brings the resident variants back under
+    /// capacity is worth as much as removing that fraction of the
+    /// makespan. Depends only on the plan's chunking — pointer moves
+    /// never change it.
+    pub fn hbm_pressure_us(&self, plan: &DeploymentPlan) -> f64 {
+        let capacity = self.cost.platform.hbm_bytes();
+        let footprint = self.hbm_footprint_total(plan);
+        if footprint <= capacity {
+            return 0.0;
+        }
+        let total_work: f64 = self
+            .tenants
+            .iter()
+            .map(|d| self.cost.sequential_latency_us(d))
+            .sum();
+        (footprint / capacity - 1.0) * total_work
+    }
+
     /// Lower tenants + plan to staged simulator streams.
     ///
     /// A decomposed operator becomes one fork-join stage whose micro-batch
@@ -922,13 +1178,18 @@ impl TenantSet {
 
     /// Compile + simulate a plan under `opts` — the modeling-based
     /// evaluation every regulation step uses (no hardware profiling per
-    /// candidate, §4.4 "Search Cost Analysis").
+    /// candidate, §4.4 "Search Cost Analysis"). The outcome is stamped
+    /// with the plan's HBM-oversubscription pressure
+    /// ([`TenantSet::hbm_pressure_us`]), so the search objective trades
+    /// resident footprint against occupancy when memory is tight.
     pub fn simulate(
         &self,
         plan: &DeploymentPlan,
         opts: crate::gpu::SimOptions,
     ) -> crate::gpu::SimOutcome {
-        crate::gpu::GpuSim::new(opts).run_staged(&self.compile(plan))
+        let mut out = crate::gpu::GpuSim::new(opts).run_staged(&self.compile(plan));
+        out.hbm_pressure_us = self.hbm_pressure_us(plan);
+        out
     }
 }
 
@@ -1178,6 +1439,126 @@ mod tests {
             "interference objective must beat LPT on its own score"
         );
         assert!(max(ia.predicted_slowdowns(&set)) < max(lb.predicted_slowdowns(&set)));
+    }
+
+    /// A net of `n` bandwidth-saturating BatchNorm ops at batch 8: high
+    /// `mem_util` (~96 %), floor occupancy — the tenant class the memory
+    /// axis exists for.
+    fn bn_net(name: &str, n: usize) -> Dfg {
+        let mut d = Dfg::new(name);
+        for i in 0..n {
+            d.push(OpKind::BatchNorm { elems: 56 * 56 * 256 }, 8, format!("bn{i}"));
+        }
+        d
+    }
+
+    #[test]
+    fn hbm_footprint_is_weights_plus_peak_activation() {
+        let mut d = Dfg::new("t");
+        d.push(OpKind::Linear { fin: 100, fout: 50 }, 4, "fc0");
+        d.push(OpKind::ReLU { elems: 50 }, 4, "act");
+        let weights = (100.0 * 50.0) * 4.0;
+        let act_fc = 4.0 * (100.0 + 50.0) * 4.0;
+        let act_relu = 4.0 * (2.0 * 50.0) * 4.0;
+        let expect = weights + act_fc.max(act_relu);
+        assert!((TenantSet::dfg_footprint(&d, None) - expect).abs() < 1e-9);
+        // Chunking the peak op to max piece 1 shrinks the activation term.
+        let mut chunks = ChunkMap::new();
+        chunks.insert(0, vec![1, 1, 1, 1]);
+        chunks.insert(1, vec![1, 1, 1, 1]);
+        let chunked = TenantSet::dfg_footprint(&d, Some(&chunks));
+        assert!(chunked < TenantSet::dfg_footprint(&d, None));
+        assert!(chunked >= weights);
+    }
+
+    #[test]
+    fn hbm_pressure_zero_in_capacity_and_scales_past_it() {
+        let cost = CostModel::new(Platform::titan_v());
+        // Ordinary mixes are far under 12 GB: zero pressure.
+        let set = TenantSet::new(zoo::build_combo(&["Alex", "V16", "R18"]), cost.clone());
+        let plan = DeploymentPlan::unregulated(3);
+        assert_eq!(set.hbm_pressure_us(&plan), 0.0);
+        assert!(set.hbm_footprint_total(&plan) < cost.platform.hbm_bytes());
+        // A tenant with >12 GB of weights oversubscribes: positive
+        // pressure, and it survives into the simulated objective.
+        let mut giant = Dfg::new("giant");
+        giant.push(OpKind::Linear { fin: 60_000, fout: 60_000 }, 1, "fc");
+        let set = TenantSet::new(vec![giant], cost);
+        let plan = DeploymentPlan::unregulated(1);
+        assert!(set.hbm_pressure_us(&plan) > 0.0);
+        let opts = crate::gpu::SimOptions::for_platform(&set.cost.platform);
+        let out = set.simulate(&plan, opts);
+        assert!(out.hbm_pressure_us > 0.0);
+    }
+
+    #[test]
+    fn memory_aware_separates_bandwidth_hogs() {
+        let cost = CostModel::new(Platform::titan_v());
+        // Two bandwidth hogs (BN nets: mem ≈ 96 % each, floor occupancy)
+        // and two low-occupancy conv fillers, with serial-latency weights
+        // ≈ [4, 2.8, 2.8, 2] × u so plain LPT pairs the hogs on the
+        // same device.
+        let tenants = vec![
+            bn_net("hog-a", 48),
+            conv_net("lo-a", 1, 2),
+            conv_net("lo-b", 1, 2),
+            bn_net("hog-b", 24),
+        ];
+        let set = TenantSet::new(tenants, cost);
+        let lb = Placement::balanced(&set, 2);
+        assert_eq!(
+            lb.device_of(0),
+            lb.device_of(3),
+            "precondition: LPT co-locates the bandwidth hogs"
+        );
+        // Occupancy-only interference sees slowdown 1.0 everywhere here
+        // (the hogs barely hold SMs) and pairs them too.
+        let ia = Placement::interference_aware(&set, 2);
+        assert_eq!(
+            ia.device_of(0),
+            ia.device_of(3),
+            "precondition: occupancy-only scoring is blind to the hogs"
+        );
+        let ma = Placement::memory_aware(&set, 2);
+        ma.validate(4).unwrap();
+        assert_ne!(ma.device_of(0), ma.device_of(3), "hogs split");
+        let max = |v: Vec<f64>| v.into_iter().fold(0.0f64, f64::max);
+        assert!(
+            max(ma.predicted_slowdowns(&set)) < max(lb.predicted_slowdowns(&set)),
+            "roofline max slowdown strictly reduced"
+        );
+        assert!(max(ma.memory_scores(&set)) < max(lb.memory_scores(&set)));
+    }
+
+    #[test]
+    fn fit_memory_aware_prefers_fitting_devices_and_refuses_overflow() {
+        let cost = CostModel::new(Platform::titan_v());
+        let set = TenantSet::new(
+            vec![bn_net("a", 4), conv_net("b", 1, 2)],
+            cost,
+        );
+        let p = Placement::from_assignments(vec![vec![0], vec![1]]);
+        // A small newcomer is placed somewhere valid.
+        let ok = p.fit_memory_aware(&set, &conv_net("new", 1, 1)).unwrap();
+        assert!(ok < 2);
+        // A 14.4 GB tenant fits no 12 GB device: typed refusal.
+        let mut giant = Dfg::new("giant");
+        giant.push(OpKind::Linear { fin: 60_000, fout: 60_000 }, 1, "fc");
+        let err = p.fit_memory_aware(&set, &giant).unwrap_err();
+        assert!(matches!(err, Error::MemoryCapacity(_)), "got {err:?}");
+        assert!(err.to_string().contains("giant"));
+    }
+
+    #[test]
+    fn hbm_usage_sums_placed_footprints() {
+        let (tenants, cost) = setup();
+        let set = TenantSet::new(tenants, cost);
+        let p = Placement::from_assignments(vec![vec![0, 2], vec![1]]);
+        let usage = p.hbm_usage(&set);
+        let f = |s: usize| set.hbm_footprint(s, None);
+        assert!((usage[0] - (f(0) + f(2))).abs() < 1e-6);
+        assert!((usage[1] - f(1)).abs() < 1e-6);
+        assert!(usage.iter().all(|&u| u > 0.0));
     }
 
     #[test]

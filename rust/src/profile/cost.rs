@@ -157,6 +157,24 @@ impl CostModel {
     /// co-location interference score — it captures *when* a tenant holds
     /// the SM pool, not just how much of it on average.
     pub fn occupancy_phases(&self, dfg: &crate::dfg::Dfg, k: usize) -> Vec<f64> {
+        self.sample_phases(dfg, k, |c| c.sm_occupancy)
+    }
+
+    /// The tenant's bandwidth-demand timeline sampled at `k` evenly spaced
+    /// phases, in percent of the platform's peak `bytes_per_us` — the
+    /// memory axis of the two-dimensional contention roofline. Same
+    /// sampling walk as [`CostModel::occupancy_phases`], reading
+    /// `mem_util` instead of `sm_occupancy`.
+    pub fn bandwidth_phases(&self, dfg: &crate::dfg::Dfg, k: usize) -> Vec<f64> {
+        self.sample_phases(dfg, k, |c| c.mem_util)
+    }
+
+    fn sample_phases(
+        &self,
+        dfg: &crate::dfg::Dfg,
+        k: usize,
+        metric: impl Fn(&OpCost) -> f64,
+    ) -> Vec<f64> {
         let costs: Vec<OpCost> = dfg.ops.iter().map(|o| self.cost(o)).collect();
         let total: f64 = costs.iter().map(|c| c.duration_us).sum();
         if costs.is_empty() || total <= 0.0 {
@@ -171,7 +189,7 @@ impl CostModel {
                 op += 1;
                 cum_end += costs[op].duration_us;
             }
-            samples.push(costs[op].sm_occupancy);
+            samples.push(metric(&costs[op]));
         }
         samples
     }
@@ -185,18 +203,39 @@ impl CostModel {
         self.occupancy_phases(dfg, PHASE_SAMPLES)
     }
 
-    /// Predicted co-location slowdown of a tenant set sharing one SM pool
-    /// — the interference half of a VELTAIR-style placement objective,
-    /// derived from the existing occupancy curves rather than a separate
-    /// contention profile.
+    /// [`CostModel::bandwidth_phases`] at the same resolution as
+    /// [`CostModel::occupancy_profile`] — the pre-sampled memory-axis
+    /// timeline placement computes once per tenant.
+    pub fn bandwidth_profile(&self, dfg: &crate::dfg::Dfg) -> Vec<f64> {
+        self.bandwidth_phases(dfg, PHASE_SAMPLES)
+    }
+
+    /// Predicted co-location slowdown of a tenant set sharing one GPU —
+    /// the interference half of a VELTAIR-style placement objective,
+    /// generalized to a two-dimensional compute+memory roofline
+    /// (MoCA-style: arxiv 2305.05843).
     ///
-    /// Each tenant's occupancy timeline is sampled at 64 evenly spaced
-    /// normalized phases; per phase, the summed demand's overflow past the
-    /// pool (`max(0, Σ W − 100)`) is integrated and expressed as a
-    /// fraction of the pool: the excess work has no SMs to run on and
-    /// must serialize. `1.0` means the set never overflows — co-location
-    /// is predicted free; two pool-saturating tenants score `≈ 2.0`.
+    /// Each tenant's occupancy and bandwidth-demand timelines are sampled
+    /// at 64 evenly spaced normalized phases; per phase the slowdown is
+    /// the **max** of SM-pool overflow (`max(0, Σ W − 100)`) and
+    /// bandwidth oversubscription (`max(0, Σ m − 100)`, with the
+    /// platform's `bytes_per_us` as the 100 % ceiling) — whichever
+    /// resource is the bottleneck serializes the excess. `1.0` means the
+    /// set saturates neither dimension in any phase; two pool- (or
+    /// bandwidth-) saturating tenants score `≈ 2.0`.
     pub fn colocation_slowdown(&self, tenants: &[&crate::dfg::Dfg]) -> f64 {
+        let occ: Vec<Vec<f64>> = tenants.iter().map(|d| self.occupancy_profile(d)).collect();
+        let mem: Vec<Vec<f64>> = tenants.iter().map(|d| self.bandwidth_profile(d)).collect();
+        let occ_refs: Vec<&[f64]> = occ.iter().map(Vec::as_slice).collect();
+        let mem_refs: Vec<&[f64]> = mem.iter().map(Vec::as_slice).collect();
+        roofline_slowdown(&occ_refs, &mem_refs)
+    }
+
+    /// The occupancy-only slowdown — [`CostModel::colocation_slowdown`]
+    /// before the memory axis existed. Kept as the comparison arm (the
+    /// `gacer-bench memory` baseline) and as the compute half of the
+    /// roofline invariants in the property suite.
+    pub fn occupancy_slowdown(&self, tenants: &[&crate::dfg::Dfg]) -> f64 {
         let phases: Vec<Vec<f64>> = tenants.iter().map(|d| self.occupancy_profile(d)).collect();
         let refs: Vec<&[f64]> = phases.iter().map(Vec::as_slice).collect();
         slowdown_from_phases(&refs)
@@ -220,6 +259,36 @@ pub fn slowdown_from_phases(phases: &[&[f64]]) -> f64 {
     for j in 0..k {
         let demand: f64 = phases.iter().map(|p| p[j]).sum();
         overflow += (demand - 100.0).max(0.0);
+    }
+    1.0 + overflow / (k as f64 * 100.0)
+}
+
+/// Two-dimensional roofline slowdown over pre-sampled per-tenant
+/// timelines: `occupancy[i]` and `bandwidth[i]` are tenant `i`'s SM and
+/// memory-bandwidth demand curves (percent of the respective ceiling,
+/// from [`CostModel::occupancy_profile`] / [`CostModel::bandwidth_profile`]).
+/// Per phase the integrated overflow is
+/// `max(max(0, Σ W − 100), max(0, Σ m − 100))` — the binding resource
+/// serializes the excess; the other rides along for free. Reduces to
+/// [`slowdown_from_phases`] when no tenant moves memory.
+pub fn roofline_slowdown(occupancy: &[&[f64]], bandwidth: &[&[f64]]) -> f64 {
+    if occupancy.len() < 2 {
+        return 1.0;
+    }
+    let k = occupancy
+        .iter()
+        .chain(bandwidth.iter())
+        .map(|p| p.len())
+        .min()
+        .unwrap_or(0);
+    if k == 0 {
+        return 1.0;
+    }
+    let mut overflow = 0.0;
+    for j in 0..k {
+        let sm: f64 = occupancy.iter().map(|p| p[j]).sum();
+        let mem: f64 = bandwidth.iter().map(|p| p[j]).sum();
+        overflow += (sm - 100.0).max(0.0).max((mem - 100.0).max(0.0));
     }
     1.0 + overflow / (k as f64 * 100.0)
 }
@@ -381,17 +450,72 @@ mod tests {
     }
 
     #[test]
-    fn colocation_is_free_under_pool_capacity() {
+    fn bandwidth_axis_prices_what_occupancy_misses() {
         let m = model();
-        // Bandwidth-bound tenants hold a few percent of the pool each:
-        // their summed demand never overflows, co-location is free.
+        // Two bandwidth-saturating tenants hold a few percent of the SM
+        // pool each — the occupancy-only model calls co-location free —
+        // but together they oversubscribe DRAM bandwidth ~2x, and the
+        // roofline prices that.
         let a = bn_net("bn-a", 6);
         let b = bn_net("bn-b", 4);
-        assert_eq!(m.colocation_slowdown(&[&a, &b]), 1.0);
-        // A single tenant is free by definition.
+        assert_eq!(m.occupancy_slowdown(&[&a, &b]), 1.0);
+        let roofline = m.colocation_slowdown(&[&a, &b]);
+        assert!(roofline > 1.5, "bandwidth pair = {roofline}");
+        assert!(roofline <= 2.0 + 1e-9);
+        // A single tenant is free by definition, in both models.
         let c = conv_net("conv", 32, 4);
         assert_eq!(m.colocation_slowdown(&[&c]), 1.0);
         assert_eq!(m.colocation_slowdown(&[]), 1.0);
+        assert_eq!(m.occupancy_slowdown(&[&c]), 1.0);
+        assert_eq!(m.occupancy_slowdown(&[]), 1.0);
+    }
+
+    #[test]
+    fn bandwidth_phases_mirror_occupancy_sampling() {
+        let m = model();
+        // Uniform BN net: constant bandwidth timeline at the op's mem_util.
+        let net = bn_net("bn", 3);
+        let mu = m.cost_of(&OpKind::BatchNorm { elems: 56 * 56 * 256 }, 8).mem_util;
+        let samples = m.bandwidth_phases(&net, 16);
+        assert_eq!(samples.len(), 16);
+        assert!(samples.iter().all(|&s| (s - mu).abs() < 1e-9));
+        // Empty DFG: all-zero timeline, never a panic.
+        let empty = crate::dfg::Dfg::new("empty");
+        assert_eq!(m.bandwidth_phases(&empty, 4), vec![0.0; 4]);
+        assert_eq!(m.bandwidth_profile(&empty).len(), 64);
+    }
+
+    #[test]
+    fn roofline_reduces_to_occupancy_without_memory_demand() {
+        let occ: Vec<&[f64]> = vec![&[80.0, 60.0], &[50.0, 20.0]];
+        let mem: Vec<&[f64]> = vec![&[0.0, 0.0], &[0.0, 0.0]];
+        assert!(
+            (roofline_slowdown(&occ, &mem) - slowdown_from_phases(&occ)).abs() < 1e-12
+        );
+        // Memory binds in phase 0 (150 > 130), occupancy in phase 1.
+        let mem2: Vec<&[f64]> = vec![&[90.0, 10.0], &[60.0, 10.0]];
+        let expect = 1.0 + (50.0 + 0.0).max(0.0) / 200.0;
+        assert!((roofline_slowdown(&occ, &mem2) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sm_work_edge_cases() {
+        let m = model();
+        // Batch-1 weight-dominated Linear: duration is memory-bound on the
+        // weight stream, occupancy pinned at the floor, sm_work tiny but
+        // positive.
+        let lin = m.cost_of(&OpKind::Linear { fin: 4096, fout: 4096 }, 1);
+        assert!(lin.sm_occupancy >= MIN_OCCUPANCY);
+        assert!(lin.sm_work() > 0.0);
+        assert!(lin.mem_util > 50.0, "weight-stream bound: {}", lin.mem_util);
+        // Degenerate 1-element op: floor occupancy, launch-dominated
+        // duration, sm_work ≈ MIN_OCCUPANCY * launch.
+        let tiny = m.cost_of(&OpKind::ReLU { elems: 1 }, 1);
+        assert_eq!(tiny.sm_occupancy, MIN_OCCUPANCY);
+        assert!(tiny.sm_work() >= MIN_OCCUPANCY * m.platform.launch_us);
+        // Zero-op DFG: sequential latency 0, phases all-zero.
+        let empty = crate::dfg::Dfg::new("empty");
+        assert_eq!(m.sequential_latency_us(&empty), 0.0);
     }
 
     #[test]

@@ -11,5 +11,5 @@
 mod cost;
 mod platform;
 
-pub use cost::{slowdown_from_phases, CostModel, OpCost};
+pub use cost::{roofline_slowdown, slowdown_from_phases, CostModel, OpCost};
 pub use platform::Platform;

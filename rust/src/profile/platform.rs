@@ -18,6 +18,9 @@ pub struct Platform {
     pub sm_count: usize,
     /// Peak memory bandwidth in GB/s.
     pub mem_bw_gbps: f64,
+    /// Device memory (HBM/GDDR) capacity in GB — the placement-time
+    /// footprint ceiling (weights + resident activations must fit).
+    pub hbm_gb: f64,
     /// CPU-GPU synchronization wait `T_SW` in microseconds (per pointer).
     pub sync_wait_us: f64,
     /// Kernel launch/issue overhead in microseconds (per operator).
@@ -39,6 +42,7 @@ impl Platform {
             peak_tflops: 14.9,
             sm_count: 80,
             mem_bw_gbps: 653.0,
+            hbm_gb: 12.0,
             sync_wait_us: 5.0,
             launch_us: 3.0,
             contention_alpha: 0.25,
@@ -53,6 +57,7 @@ impl Platform {
             peak_tflops: 12.6,
             sm_count: 60,
             mem_bw_gbps: 432.0,
+            hbm_gb: 24.0,
             sync_wait_us: 6.0,
             launch_us: 3.5,
             contention_alpha: 0.28,
@@ -67,6 +72,7 @@ impl Platform {
             peak_tflops: 10.4,
             sm_count: 56,
             mem_bw_gbps: 484.0,
+            hbm_gb: 11.0,
             sync_wait_us: 7.0,
             launch_us: 4.0,
             contention_alpha: 0.30,
@@ -94,6 +100,11 @@ impl Platform {
     /// Peak bytes per microsecond.
     pub fn bytes_per_us(&self) -> f64 {
         self.mem_bw_gbps * 1e9 / 1e6
+    }
+
+    /// Device memory capacity in bytes.
+    pub fn hbm_bytes(&self) -> f64 {
+        self.hbm_gb * 1e9
     }
 }
 
@@ -127,5 +138,34 @@ mod tests {
         let t = Platform::titan_v();
         assert!((t.flops_per_us() - 14.9e6).abs() < 1.0);
         assert!((t.bytes_per_us() - 653e3).abs() < 1.0);
+    }
+
+    #[test]
+    fn by_name_roundtrips_every_platform() {
+        for p in Platform::all() {
+            let found = Platform::by_name(p.name).expect("own name resolves");
+            assert_eq!(found, p);
+            // Case-insensitive both ways.
+            assert_eq!(Platform::by_name(&p.name.to_uppercase()).unwrap(), p);
+            assert_eq!(Platform::by_name(&p.name.to_lowercase()).unwrap(), p);
+        }
+        assert!(Platform::by_name("").is_none());
+        assert!(Platform::by_name("titan v").is_none()); // space, not a name
+    }
+
+    #[test]
+    fn unit_conversions_all_platforms() {
+        for p in Platform::all() {
+            assert!((p.flops_per_us() - p.peak_tflops * 1e6).abs() < 1e-3);
+            assert!((p.bytes_per_us() - p.mem_bw_gbps * 1e3).abs() < 1e-6);
+            assert!(p.hbm_bytes() > 10e9, "{} HBM too small", p.name);
+        }
+    }
+
+    #[test]
+    fn hbm_capacity_matches_spec_sheets() {
+        assert_eq!(Platform::titan_v().hbm_gb, 12.0);
+        assert_eq!(Platform::p6000().hbm_gb, 24.0);
+        assert_eq!(Platform::gtx_1080ti().hbm_gb, 11.0);
     }
 }

@@ -703,7 +703,8 @@ impl<'a> GacerSearch<'a> {
         // the warm state for the next event (uncharged, like the final
         // simulation always was).
         let streams = self.ts.compile(&best_plan);
-        let outcome = crate::gpu::GpuSim::new(self.opts).run_staged(&streams);
+        let mut outcome = crate::gpu::GpuSim::new(self.opts).run_staged(&streams);
+        outcome.hbm_pressure_us = self.ts.hbm_pressure_us(&best_plan);
         state.streams = streams
             .into_iter()
             .enumerate()
@@ -812,9 +813,13 @@ impl<'a> GacerSearch<'a> {
         let len = self.ts.tenants[i].len();
         let mut evals = 0usize;
         let mut best_pos = plan.pointers.list(i)[j];
+        // Pointer moves never change chunking, so the plan's HBM-pressure
+        // term is a per-descent constant — added so pointer objectives stay
+        // comparable with the simulate-based objectives of other phases.
+        let pressure = self.ts.hbm_pressure_us(plan);
         let mut best_obj = {
             evals += 1;
-            self.eval_pointers(cache, &plan.pointers)
+            self.eval_pointers(cache, &plan.pointers, pressure)
         };
         let step = (len / self.cfg.positions_per_coordinate).max(1);
         let mut pointers = plan.pointers.clone();
@@ -823,7 +828,7 @@ impl<'a> GacerSearch<'a> {
             if pos != best_pos {
                 pointers.set_pointer(i, j, pos);
                 evals += 1;
-                let obj = self.eval_pointers(cache, &pointers);
+                let obj = self.eval_pointers(cache, &pointers, pressure);
                 if obj < best_obj - 1e-9 {
                     best_obj = obj;
                     best_pos = pos;
@@ -839,13 +844,17 @@ impl<'a> GacerSearch<'a> {
     }
 
     /// Restamp cached streams' segments from `pointers` and simulate.
+    /// `pressure` is the plan's chunking-determined HBM-pressure term
+    /// ([`crate::plan::TenantSet::hbm_pressure_us`]), constant across
+    /// pointer candidates.
     fn eval_pointers(
         &self,
         cache: &mut Vec<Vec<crate::gpu::SimStage>>,
         pointers: &PointerMatrix,
+        pressure: f64,
     ) -> f64 {
         self.restamp(cache, pointers);
-        crate::gpu::GpuSim::new(self.opts).run_staged(cache).objective()
+        crate::gpu::GpuSim::new(self.opts).run_staged(cache).objective() + pressure
     }
 
     fn restamp(&self, cache: &mut [Vec<crate::gpu::SimStage>], pointers: &PointerMatrix) {

@@ -1,0 +1,211 @@
+//! Memory-bandwidth contention acceptance tests: on a bandwidth-bound
+//! mix, every occupancy-only placement objective (LPT load balance and
+//! interference-aware scoring alike) pairs two HBM-saturating tenants
+//! on one device; only the two-dimensional roofline
+//! (`PlacementObjective::MemoryAware`) prices their combined bandwidth
+//! demand and separates them — with a strictly lower predicted max
+//! slowdown AND a lower simulated cluster makespan. Admission of a
+//! tenant whose resident footprint exceeds every device's HBM returns
+//! the typed `Error::MemoryCapacity` and leaves the engine untouched.
+
+use gacer::bench_util::{compare_placements, memory_demo_mix, PlacementArm};
+use gacer::dfg::{Dfg, OpKind};
+use gacer::engine::GacerEngine;
+use gacer::gpu::SimOptions;
+use gacer::plan::{DeploymentPlan, Placement, PlacementObjective, TenantSet};
+use gacer::profile::{CostModel, Platform};
+use gacer::search::SearchConfig;
+use gacer::Error;
+
+fn demo_set() -> TenantSet {
+    let platform = Platform::titan_v();
+    TenantSet::new(memory_demo_mix(&platform), CostModel::new(platform))
+}
+
+fn quick_cfg() -> SearchConfig {
+    SearchConfig {
+        max_pointers: 1,
+        rounds_per_level: 1,
+        positions_per_coordinate: 4,
+        spatial_steps_per_level: 1,
+        ..Default::default()
+    }
+}
+
+/// A ~14.4 GB single-op tenant — larger than any supported device's HBM
+/// (Titan V holds 12 GB), so memory-aware admission must refuse it.
+fn giant() -> Dfg {
+    let mut d = Dfg::new("giant");
+    d.push(OpKind::Linear { fin: 60_000, fout: 60_000 }, 1, "fc");
+    d
+}
+
+/// Max over devices of the simulated unregulated makespan when each
+/// device runs exactly the tenants the placement assigns to it.
+fn simulated_cluster_us(p: &Placement, set: &TenantSet) -> f64 {
+    let opts = SimOptions::for_platform(&set.cost.platform);
+    (0..p.n_devices())
+        .map(|dev| {
+            let tenants: Vec<Dfg> = p
+                .tenants_on(dev)
+                .iter()
+                .map(|&slot| set.tenants[slot].clone())
+                .collect();
+            if tenants.is_empty() {
+                return 0.0;
+            }
+            let n = tenants.len();
+            let ts = TenantSet::new(tenants, set.cost.clone());
+            ts.simulate(&DeploymentPlan::unregulated(n), opts).makespan_us
+        })
+        .fold(0.0f64, f64::max)
+}
+
+/// The mix's shape: the two BN nets saturate bandwidth while barely
+/// holding SMs, and the serial-latency ordering tricks LPT into pairing
+/// them — the blind spot this PR prices.
+#[test]
+fn demo_mix_preconditions_hold() {
+    let set = demo_set();
+    assert_eq!(set.len(), 4);
+    assert_eq!(set.tenants[0].name, "hog-a");
+    assert_eq!(set.tenants[3].name, "hog-b");
+    // hog-a > lo-a ≈ lo-b > hog-b by serial latency: LPT pairs 0 and 3.
+    let weights: Vec<f64> = set
+        .tenants
+        .iter()
+        .map(|d| set.cost.sequential_latency_us(d))
+        .collect();
+    assert!(weights[0] > weights[1]);
+    assert!(weights[2] > weights[3]);
+    // Together the hogs oversubscribe HBM: roofline sees ~1.9×, the
+    // occupancy-only model sees nothing.
+    let pair = set.cost.colocation_slowdown(&[&set.tenants[0], &set.tenants[3]]);
+    assert!(pair > 1.8, "paired-hog roofline slowdown = {pair}");
+    let occ = set.cost.occupancy_slowdown(&[&set.tenants[0], &set.tenants[3]]);
+    assert!(occ < 1.05, "occupancy-only slowdown = {occ}");
+}
+
+#[test]
+fn occupancy_only_pairs_hogs_but_memory_aware_separates() {
+    let set = demo_set();
+    let lb = Placement::balanced(&set, 2);
+    let ia = Placement::interference_aware(&set, 2);
+    let ma = Placement::memory_aware(&set, 2);
+    for p in [&lb, &ia, &ma] {
+        p.validate(set.len()).unwrap();
+    }
+
+    // Both memory-blind objectives co-locate the hogs.
+    assert_eq!(lb.device_of(0), lb.device_of(3), "LPT pairs the hogs");
+    assert_eq!(
+        ia.device_of(0),
+        ia.device_of(3),
+        "occupancy-only interference cannot see the bandwidth wall"
+    );
+    assert_ne!(ma.device_of(0), ma.device_of(3), "roofline splits them");
+
+    // Strictly lower predicted max slowdown...
+    let max = |v: Vec<f64>| v.into_iter().fold(0.0f64, f64::max);
+    let ma_pred = max(ma.predicted_slowdowns(&set));
+    assert!(ma_pred < max(lb.predicted_slowdowns(&set)));
+    assert!(ma_pred < max(ia.predicted_slowdowns(&set)));
+    // ...and a lower simulated cluster makespan: the simulator prices
+    // bandwidth independently, so this is a second witness, not an echo
+    // of the predictor.
+    let ma_sim = simulated_cluster_us(&ma, &set);
+    assert!(
+        ma_sim < simulated_cluster_us(&lb, &set),
+        "memory-aware must also win under simulation"
+    );
+    assert!(ma_sim < simulated_cluster_us(&ia, &set));
+    // Every device stays within HBM capacity.
+    let capacity = set.cost.platform.hbm_bytes();
+    assert!(ma.hbm_usage(&set).iter().all(|&b| b <= capacity));
+}
+
+#[test]
+fn bench_comparison_reports_the_win() {
+    // The `gacer-bench memory` surface of the same acceptance check.
+    let platform = Platform::titan_v();
+    let arms = compare_placements(memory_demo_mix(&platform), &platform, 2);
+    assert_eq!(arms.len(), 3);
+    let (ia, ma) = (&arms[1], &arms[2]);
+    assert_eq!(ia.objective, PlacementObjective::InterferenceAware);
+    assert_eq!(ma.objective, PlacementObjective::MemoryAware);
+    let together = |arm: &PlacementArm| {
+        arm.per_device.iter().any(|d| {
+            d.contains(&"hog-a".to_string()) && d.contains(&"hog-b".to_string())
+        })
+    };
+    assert!(together(ia) && !together(ma));
+    assert!(ma.max_slowdown() < ia.max_slowdown());
+    // The occupancy-only column shows why the old model missed this:
+    // it predicts a near-free cluster while the roofline sees ~1.9×.
+    assert!(ia.max_occupancy_slowdown() < 1.05);
+    assert!(ia.max_slowdown() > 1.5);
+    assert!(arms.iter().all(|a| a.hbm_gb.iter().all(|&g| g > 0.0)));
+}
+
+#[test]
+fn engine_memory_aware_placement_and_admission() {
+    let platform = Platform::titan_v();
+    let mut b = GacerEngine::builder()
+        .devices(2)
+        .placement_objective(PlacementObjective::MemoryAware)
+        .search(quick_cfg());
+    for dfg in memory_demo_mix(&platform) {
+        b = b.tenant(dfg);
+    }
+    let mut engine = b.build().unwrap();
+    assert_eq!(engine.placement_objective(), PlacementObjective::MemoryAware);
+    let ids = engine.tenant_ids();
+    assert_ne!(
+        engine.device_of(ids[0]).unwrap(),
+        engine.device_of(ids[3]).unwrap(),
+        "engine's initial placement separates the hogs"
+    );
+    engine.sharded_plan().validate(engine.tenants()).unwrap();
+
+    // A small newcomer fits and lands on the roofline-scored device.
+    let before = engine.tenants().len();
+    let newcomer = engine.tenants()[1].clone();
+    engine.admit(newcomer).unwrap();
+    assert_eq!(engine.tenants().len(), before + 1);
+    engine.sharded_plan().validate(engine.tenants()).unwrap();
+
+    // An over-capacity newcomer is refused with the typed error and
+    // leaves no trace: tenant count, ids, and plan are unchanged.
+    let before = engine.tenants().len();
+    let ids = engine.tenant_ids();
+    let err = engine.admit(giant()).unwrap_err();
+    assert!(matches!(err, Error::MemoryCapacity(_)), "got {err:?}");
+    assert!(err.to_string().contains("memory capacity"));
+    assert_eq!(engine.tenants().len(), before);
+    assert_eq!(engine.tenant_ids(), ids);
+    engine.sharded_plan().validate(engine.tenants()).unwrap();
+}
+
+#[test]
+fn single_device_degenerate_case() {
+    // devices(1): nothing to separate — memory-aware placement is a
+    // single valid bin and within-capacity admission still works.
+    let set = demo_set();
+    let p = Placement::memory_aware(&set, 1);
+    p.validate(set.len()).unwrap();
+    assert_eq!(p.n_devices(), 1);
+    assert!((0..set.len()).all(|s| p.device_of(s) == Some(0)));
+
+    let platform = Platform::titan_v();
+    let mix = memory_demo_mix(&platform);
+    let mut engine = GacerEngine::builder()
+        .devices(1)
+        .placement_objective(PlacementObjective::MemoryAware)
+        .search(quick_cfg())
+        .tenant(mix[1].clone())
+        .build()
+        .unwrap();
+    engine.admit(mix[2].clone()).unwrap();
+    assert_eq!(engine.tenants().len(), 2);
+    engine.sharded_plan().validate(engine.tenants()).unwrap();
+}

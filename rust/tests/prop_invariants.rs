@@ -380,6 +380,103 @@ fn prop_identical_tenants_degenerate_to_lpt_max_load() {
 }
 
 #[test]
+fn prop_roofline_slowdown_invariants() {
+    // (h) the two-dimensional roofline slowdown
+    // (`CostModel::colocation_slowdown`): for random tenant groups mixing
+    // zoo models with bandwidth-hog BatchNorm chains,
+    //   * it dominates the occupancy-only model (a max over two axes can
+    //     only see more contention),
+    //   * it is bounded by the tenant count (each tenant demands at most
+    //     100% of either axis),
+    //   * a lone tenant (or an empty group) is free,
+    //   * adding a co-tenant never reduces it (demand sums only grow),
+    //   * it is deterministic.
+    let platform = Platform::titan_v();
+    let cost = CostModel::new(platform);
+    check_property("roofline-invariants", 25, |rng| {
+        let n = rng.range(1, 6);
+        let tenants: Vec<gacer::dfg::Dfg> = (0..n)
+            .map(|i| {
+                if rng.f64() < 0.4 {
+                    // A bandwidth hog: ~96% of peak HBM bandwidth, floor
+                    // SM occupancy — exercises the memory axis.
+                    let mut d = gacer::dfg::Dfg::new(format!("bn-{i}"));
+                    for j in 0..rng.range(1, 20) {
+                        d.push(
+                            gacer::dfg::OpKind::BatchNorm { elems: 56 * 56 * 256 },
+                            8,
+                            format!("bn{j}"),
+                        );
+                    }
+                    d
+                } else {
+                    let name = *rng.choose(&["Alex", "R18", "V16", "M3", "LSTM"]);
+                    let batch = *rng.choose(&[1, 2, 8, 32]);
+                    zoo::build(name, batch).unwrap()
+                }
+            })
+            .collect();
+        let refs: Vec<&gacer::dfg::Dfg> = tenants.iter().collect();
+        let roofline = cost.colocation_slowdown(&refs);
+        let occ = cost.occupancy_slowdown(&refs);
+        assert!(
+            roofline >= occ - 1e-9,
+            "memory-aware {roofline} below occupancy-only {occ}"
+        );
+        assert!(occ >= 1.0 - 1e-9);
+        assert!(
+            roofline <= n as f64 + 1e-9,
+            "{n} tenants cannot slow each other {roofline}x"
+        );
+        if n < 2 {
+            assert_eq!(roofline, 1.0, "a lone tenant contends with nobody");
+        }
+        assert_eq!(roofline, cost.colocation_slowdown(&refs), "must be deterministic");
+        // Monotone in added co-tenants.
+        let extra = zoo::build_default("R18").unwrap();
+        let mut grown = refs.clone();
+        grown.push(&extra);
+        assert!(
+            cost.colocation_slowdown(&grown) >= roofline - 1e-9,
+            "adding a co-tenant reduced the slowdown"
+        );
+    });
+}
+
+#[test]
+fn prop_memory_placement_is_a_deterministic_partition_within_capacity() {
+    // (i) `Placement::memory_aware` mirrors the interference-placement
+    // property: always a valid partition, deterministic, and — since
+    // every zoo tenant's footprint is far under the 12 GB device — the
+    // per-device HBM usage stays within capacity.
+    let platform = Platform::titan_v();
+    check_property("memory-placement-partition", 20, |rng| {
+        let n_tenants = rng.range(1, 6);
+        let tenants: Vec<gacer::dfg::Dfg> = (0..n_tenants)
+            .map(|_| {
+                let name = *rng.choose(&["Alex", "R18", "V16", "M3", "LSTM"]);
+                let batch = *rng.choose(&[1, 2, 8, 32]);
+                zoo::build(name, batch).unwrap()
+            })
+            .collect();
+        let set = TenantSet::new(tenants, CostModel::new(platform));
+        let n_devices = rng.range(1, 4);
+        let p = Placement::memory_aware(&set, n_devices);
+        p.validate(set.len()).unwrap();
+        assert_eq!(p.n_devices(), n_devices);
+        assert_eq!(
+            p,
+            Placement::memory_aware(&set, n_devices),
+            "placement must be deterministic"
+        );
+        let capacity = set.cost.platform.hbm_bytes();
+        assert!(p.hbm_usage(&set).iter().all(|&b| b <= capacity));
+        assert!(p.predicted_slowdowns(&set).iter().all(|&s| s >= 1.0));
+        assert!(p.memory_scores(&set).iter().all(|&s| s >= 0.0));
+    });
+}
+
+#[test]
 fn prop_pointer_matrix_segments_partition_the_dfg() {
     let tenants = zoo::build_combo(&["Alex", "V16", "R18"]);
     check_property("segments-partition", 40, |rng| {
