@@ -1,0 +1,141 @@
+//! Heterogeneous elastic device pools, end to end — the code companion
+//! of `docs/OPERATIONS.md` §Scale-out / scale-in.
+//!
+//! Walks the elastic lifecycle on a mixed A100 + T4 pool: build (the
+//! pool-aware placement prices each device with its own cost model) →
+//! scale-out (`add_device`: warm re-shard onto the joiner) → scale-in
+//! (`remove_device`: drain the retiree's tenants to capacity-feasible
+//! survivors) → the typed `DrainImpossible` floor → a live synthetic
+//! cluster that grows and shrinks its device set by stable id under
+//! traffic. Runs everywhere — the planner half is pure simulator, the
+//! serving half uses the synthetic backend (no artifacts, no GPU).
+//!
+//!     cargo run --release --example elastic_cluster
+
+use std::time::Duration;
+
+use gacer::coordinator::{BatchPolicy, ServerConfig, TenantSpec};
+use gacer::models::zoo;
+use gacer::prelude::*;
+
+/// Shrunk search budget so the example runs in seconds; drop it to use
+/// `SearchConfig::default()` at deployment quality.
+fn quick_cfg() -> SearchConfig {
+    SearchConfig {
+        max_pointers: 2,
+        rounds_per_level: 1,
+        positions_per_coordinate: 6,
+        spatial_steps_per_level: 2,
+        ..Default::default()
+    }
+}
+
+fn show(engine: &GacerEngine, banner: &str) {
+    let pool = engine.device_pool();
+    println!("{banner} (pool {})", pool.label());
+    for d in 0..pool.len() {
+        println!(
+            "  {} ({}): tenant slots {:?}",
+            pool.id(d),
+            pool.platform(d).name,
+            engine.placement().tenants_on(d)
+        );
+    }
+}
+
+fn main() -> gacer::Result<()> {
+    // ---- Stage 1: build on a mixed pool --------------------------------
+    // `device_pool` replaces `devices(n)` when the devices differ; the
+    // first entry is the reference platform. `devices(n)` remains sugar
+    // for n identical copies of `.platform(...)`.
+    let mut b = GacerEngine::builder()
+        .device_pool(vec![Platform::a100(), Platform::t4()])
+        .search(quick_cfg());
+    for name in ["R50", "V16", "R18", "M3"] {
+        b = b.tenant(zoo::build_default(name).unwrap());
+    }
+    let mut engine = b.build()?;
+    show(&engine, "== build ==");
+
+    // ---- Stage 2: scale-out --------------------------------------------
+    // A new T4 joins. The pool assigns it the next stable id (ids are
+    // never reused) and the engine re-shards warm: placement, per-device
+    // Algorithm-1 searches, and routing all rebuilt at the new width.
+    let joined = engine.add_device(Platform::t4());
+    engine.sharded_plan().validate(engine.tenants())?;
+    show(&engine, &format!("\n== scale-out: {joined} joined =="));
+
+    // ---- Stage 3: scale-in ---------------------------------------------
+    // Retire the joiner. Its residents drain to the survivors with the
+    // most free HBM (validated against each survivor's own capacity
+    // BEFORE anything moves), then the affected shards re-search warm.
+    let drained = engine.remove_device(joined)?;
+    engine.sharded_plan().validate(engine.tenants())?;
+    show(&engine, &format!("\n== scale-in: {joined} retired =="));
+    for m in &drained {
+        println!("  drained tenant {} {} -> {}", m.tenant, m.from, m.to);
+    }
+
+    // ---- Stage 4: the DrainImpossible floor ----------------------------
+    // Scale-in refuses to strand tenants: retiring the last device (or
+    // retiring into survivors without the HBM to hold the residents)
+    // fails typed, with the pool left exactly as it was.
+    let survivors = engine.device_pool().ids();
+    engine.remove_device(survivors[1])?;
+    match engine.remove_device(survivors[0]) {
+        Err(Error::DrainImpossible(why)) => {
+            println!("\n== drain floor ==\n  refused as expected: {why}")
+        }
+        other => panic!("expected DrainImpossible, got {other:?}"),
+    }
+    assert_eq!(engine.device_pool().len(), 1, "pool untouched by the refusal");
+
+    // ---- Stage 5: elastic serving by stable id -------------------------
+    // The cluster hot-swap path matches devices by stable id, so a
+    // deployment may span a different device set than the running
+    // cluster: unknown ids join, absent ids retire, and an unchanged
+    // surviving shard is never fenced. Tenants a/b keep answering with
+    // their own tag through both scale events.
+    let tenant = |name: &str| TenantSpec {
+        name: name.to_string(),
+        family: "synthetic".to_string(),
+        policy: BatchPolicy::new(4, Duration::from_micros(200), vec![1, 2, 4]),
+        chunk: None,
+    };
+    let dep = |names: &[&str]| Deployment {
+        tenants: names.iter().map(|n| tenant(n)).collect(),
+        config: ServerConfig::default(),
+    };
+    let cluster = ClusterServer::start_sharded_with_backend(
+        ServerBackend::Synthetic(SyntheticModel::echo()),
+        ShardedDeployment {
+            per_device: vec![dep(&["a", "b"])],
+            routing: vec![(0, 0), (0, 1)],
+            device_ids: vec![DeviceId(0)],
+        },
+    )?;
+    // Scale-out: gpu1 joins and takes tenant b.
+    let touched = cluster.apply(ShardedDeployment {
+        per_device: vec![dep(&["a"]), dep(&["b"])],
+        routing: vec![(0, 0), (1, 0)],
+        device_ids: vec![DeviceId(0), DeviceId(1)],
+    })?;
+    println!("\n== serving scale-out ==\n  devices swapped: {touched:?}");
+    // Scale-in: gpu0 retires; gpu1's shard grows to hold both tenants.
+    let touched = cluster.apply(ShardedDeployment {
+        per_device: vec![dep(&["b", "a"])],
+        routing: vec![(0, 1), (0, 0)],
+        device_ids: vec![DeviceId(1)],
+    })?;
+    println!("== serving scale-in ==\n  devices swapped: {touched:?}");
+    for (slot, name) in ["a", "b"].iter().enumerate() {
+        let out = cluster.infer(slot, vec![42.0, 0.0])?;
+        assert_eq!(out[0], 42.0);
+        assert_eq!(out[1], gacer::coordinator::name_tag(name));
+        println!("  tenant {name} answers from {:?}", cluster.route_of(slot));
+    }
+    assert_eq!(cluster.device_ids(), vec![DeviceId(1)]);
+
+    println!("\nok: the device set breathed 2 -> 3 -> 1 (planner) and 1 -> 2 -> 1 (serving) without losing a tenant or a request");
+    Ok(())
+}

@@ -95,7 +95,13 @@ fn main() -> gacer::Result<()> {
         migration.to,
         engine.last_searched_devices()
     );
-    let mut expected = vec![migration.from, migration.to];
+    // Migration records carry stable DeviceIds; the plan diff speaks
+    // dense indices — translate through the pool.
+    let pool = engine.device_pool();
+    let mut expected = vec![
+        pool.index_of(migration.from).unwrap(),
+        pool.index_of(migration.to).unwrap(),
+    ];
     expected.sort_unstable();
     assert_eq!(engine.sharded_plan().changed_devices(&before), expected);
     engine.sharded_plan().validate(engine.tenants())?;

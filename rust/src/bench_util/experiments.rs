@@ -6,9 +6,9 @@
 
 use crate::baselines::BaselineKind;
 use super::{
-    compare_placements, fig7_header, fig7_row, interference_demo_mix,
-    memory_demo_mix, run_combo, run_replan, run_strategy, PlacementArm, ReplanCell,
-    Strategy,
+    compare_placements, fig7_header, fig7_row, hetero_demo_mix,
+    interference_demo_mix, memory_demo_mix, run_combo, run_replan, run_strategy,
+    PlacementArm, ReplanCell, Strategy,
 };
 use crate::dfg::{Dfg, OpKind};
 use crate::gpu::SimOptions;
@@ -848,5 +848,316 @@ pub fn throughput(args: &crate::util::cli::Args) {
             ba.achieved_rps(),
             min_throughput
         );
+    }
+}
+
+/// `gacer-bench elastic`: heterogeneous elastic device pools, end to
+/// end — the three layers the pool refactor touches.
+///
+/// 1. **Placement** (`BENCH_elastic.json` headline): on a mixed
+///    A100 + T4 pool the pool-aware interference objective must beat a
+///    homogeneous-assumption placement (both devices priced as the
+///    reference A100) — strictly lower bottleneck slowdown when both
+///    placements are re-priced with each device's *true* cost model.
+/// 2. **Planner**: a live [`crate::engine::GacerEngine`] on the mixed
+///    pool scales out (`add_device` re-shards warm onto the joiner) and
+///    back in (`remove_device` drains the retiree's tenants to
+///    capacity-feasible survivors), with every intermediate plan valid.
+/// 3. **Serving**: a synthetic-backend [`ClusterServer`] rides a
+///    diurnal autoscale timeline — 1 → 2 → 3 → 2 → 1 devices, four
+///    scale events matched by stable device id — under closed-loop
+///    client fire. Every submission must be answered with its own
+///    echoed marker and its own tenant's tag: nothing lost, duplicated
+///    or misrouted across any scale event.
+pub fn elastic() {
+    use crate::coordinator::{
+        name_tag, BatchPolicy, ClusterServer, ServerBackend, ServerConfig,
+        SyntheticModel, TenantSpec,
+    };
+    use crate::engine::{Deployment, GacerEngine, ShardedDeployment};
+    use crate::plan::{Placement, PlacementObjective};
+    use crate::profile::{DeviceId, DevicePool};
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    // ---- 1. Heterogeneity-aware placement on an A100 + T4 pool. ----
+    let (a100, t4) = (Platform::a100(), Platform::t4());
+    let pool = DevicePool::from_platforms([a100, t4]);
+    println!("== Elastic: heterogeneous pools + diurnal autoscale ({}) ==", pool.label());
+    let mix = hetero_demo_mix();
+    let tenant_names: Vec<String> = mix.iter().map(|d| d.name.clone()).collect();
+    let set = TenantSet::new(mix, CostModel::new(a100));
+    let aware =
+        Placement::with_objective_pool(&set, &pool, PlacementObjective::InterferenceAware);
+    let blind = Placement::with_objective(&set, 2, PlacementObjective::InterferenceAware);
+    aware.validate(set.len()).unwrap();
+    blind.validate(set.len()).unwrap();
+
+    let names_on = |p: &Placement, d: usize| -> Vec<String> {
+        p.tenants_on(d).iter().map(|&s| tenant_names[s].clone()).collect()
+    };
+    let fmax = |v: &[f64]| v.iter().copied().fold(0.0f64, f64::max);
+    let arms = [("pool-aware", &aware), ("homogeneous-assumption", &blind)];
+    for (label, p) in arms {
+        // Both placements are priced with each device's TRUE cost model
+        // — the blind arm committed to its split believing both devices
+        // were the reference A100.
+        let slow = p.predicted_slowdowns_pool(&set, &pool);
+        println!("{label:<23} true bottleneck slowdown {:.2}x", fmax(&slow));
+        for d in 0..pool.len() {
+            println!(
+                "    {} ({}): {:?}  slowdown {:.2}x",
+                pool.id(d),
+                pool.platform(d).name,
+                names_on(p, d),
+                slow[d]
+            );
+        }
+    }
+    let aware_slow = aware.predicted_slowdowns_pool(&set, &pool);
+    let blind_slow = blind.predicted_slowdowns_pool(&set, &pool);
+    let (aware_max, blind_max) = (fmax(&aware_slow), fmax(&blind_slow));
+    println!(
+        "=> heterogeneity-aware placement cuts the true bottleneck slowdown \
+         {blind_max:.2}x -> {aware_max:.2}x on {}",
+        pool.label()
+    );
+    assert!(
+        aware_max < blind_max,
+        "pool-aware ({aware_max}x) must strictly beat the homogeneous \
+         assumption ({blind_max}x) on a mixed pool"
+    );
+
+    // ---- 2. Planner-level scale-out / scale-in on the live engine. ----
+    let quick = SearchConfig {
+        max_pointers: 2,
+        rounds_per_level: 1,
+        positions_per_coordinate: 6,
+        spatial_steps_per_level: 2,
+        ..Default::default()
+    };
+    let mut engine = GacerEngine::builder()
+        .device_pool(vec![a100, t4])
+        .search(quick)
+        .tenant(zoo::build_default("R50").unwrap())
+        .tenant(zoo::build_default("R18").unwrap())
+        .tenant(zoo::build_default("M3").unwrap())
+        .tenant(zoo::build_default("V16").unwrap())
+        .build()
+        .unwrap();
+    let pool_start = engine.device_pool().label();
+    let joined = engine.add_device(Platform::t4());
+    engine.sharded_plan().validate(engine.tenants()).unwrap();
+    let pool_grown = engine.device_pool().label();
+    println!(
+        "engine scale-out: {pool_start} -> {pool_grown} ({joined} joined, warm re-shard)"
+    );
+    let retiree = DeviceId(1);
+    let drained = engine.remove_device(retiree).unwrap();
+    engine.sharded_plan().validate(engine.tenants()).unwrap();
+    assert_eq!(engine.tenant_ids().len(), 4, "drain loses no tenant");
+    assert!(drained.iter().all(|m| m.from == retiree));
+    let pool_shrunk = engine.device_pool().label();
+    println!(
+        "engine scale-in:  {pool_grown} -> {pool_shrunk} ({retiree} retired, \
+         {} tenant(s) drained)",
+        drained.len()
+    );
+
+    // ---- 3. Serving-path diurnal autoscale under closed-loop fire. ----
+    let tenant = |name: &str| TenantSpec {
+        name: name.to_string(),
+        family: "synthetic".to_string(),
+        policy: BatchPolicy::new(8, Duration::from_micros(300), vec![1, 2, 4, 8]),
+        chunk: None,
+    };
+    let dep = |names: &[&str]| Deployment {
+        tenants: names.iter().map(|n| tenant(n)).collect(),
+        config: ServerConfig::default(),
+    };
+    let ids = |v: &[u64]| -> Vec<DeviceId> { v.iter().map(|&n| DeviceId(n)).collect() };
+    // Global tenant slots stay [a, b, c, d] throughout; only the device
+    // set under them breathes. Stable ids mean gpu1's [c, d] shard is
+    // carried untouched across the stage-3 retirement of gpu0 even
+    // though its dense position shifts.
+    let stages: Vec<(&str, ShardedDeployment)> = vec![
+        (
+            "night start: 1 device",
+            ShardedDeployment {
+                per_device: vec![dep(&["a", "b", "c", "d"])],
+                routing: vec![(0, 0), (0, 1), (0, 2), (0, 3)],
+                device_ids: ids(&[0]),
+            },
+        ),
+        (
+            "morning ramp: gpu1 joins",
+            ShardedDeployment {
+                per_device: vec![dep(&["a", "b"]), dep(&["c", "d"])],
+                routing: vec![(0, 0), (0, 1), (1, 0), (1, 1)],
+                device_ids: ids(&[0, 1]),
+            },
+        ),
+        (
+            "midday peak: gpu2 joins",
+            ShardedDeployment {
+                per_device: vec![dep(&["a"]), dep(&["c", "d"]), dep(&["b"])],
+                routing: vec![(0, 0), (2, 0), (1, 0), (1, 1)],
+                device_ids: ids(&[0, 1, 2]),
+            },
+        ),
+        (
+            "evening: gpu0 retires",
+            ShardedDeployment {
+                per_device: vec![dep(&["c", "d"]), dep(&["b", "a"])],
+                routing: vec![(1, 1), (1, 0), (0, 0), (0, 1)],
+                device_ids: ids(&[1, 2]),
+            },
+        ),
+        (
+            "night: gpu1 retires",
+            ShardedDeployment {
+                per_device: vec![dep(&["b", "a", "c", "d"])],
+                routing: vec![(0, 1), (0, 0), (0, 2), (0, 3)],
+                device_ids: ids(&[2]),
+            },
+        ),
+    ];
+    let mut stages = stages.into_iter();
+    let (start_label, start) = stages.next().expect("timeline has a start");
+    println!("serving timeline: {start_label}");
+    let cluster = ClusterServer::start_sharded_with_backend(
+        ServerBackend::Synthetic(SyntheticModel::echo()),
+        start,
+    )
+    .unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut producers = Vec::new();
+    for (slot, name) in ["a", "b", "c", "d"].iter().enumerate() {
+        let cluster = cluster.clone();
+        let stop = Arc::clone(&stop);
+        let expected_tag = name_tag(name);
+        producers.push(std::thread::spawn(move || -> (u64, u64) {
+            let (mut oks, mut i) = (0u64, 0u64);
+            while !stop.load(Ordering::Relaxed) {
+                // Unique marker, exact in f32 (stays far below 2^24).
+                let marker = (i % 1_000_000) as f32;
+                i += 1;
+                let out = cluster.infer(slot, vec![marker, 0.0]).unwrap_or_else(|e| {
+                    panic!("tenant {slot} request {i} failed mid-scale: {e:?}")
+                });
+                assert_eq!(out[0], marker, "response paired with the wrong request");
+                assert_eq!(out[1], expected_tag, "response served by the wrong tenant");
+                oks += 1;
+            }
+            (oks, i)
+        }));
+    }
+
+    let mut events: Vec<(String, usize, usize)> = Vec::new();
+    for (label, plan) in stages {
+        std::thread::sleep(Duration::from_millis(3));
+        let devices = plan.per_device.len();
+        let touched = cluster.apply(plan).unwrap();
+        println!(
+            "  scale event: {label} -> {devices} device(s), {} swapped",
+            touched.len()
+        );
+        events.push((label.to_string(), devices, touched.len()));
+    }
+    std::thread::sleep(Duration::from_millis(3));
+    stop.store(true, Ordering::Relaxed);
+
+    let (mut submitted, mut completed) = (0u64, 0u64);
+    for p in producers {
+        let (oks, sent) = p.join().expect("producer panicked");
+        assert_eq!(oks, sent, "closed loop: every submission answered Ok");
+        assert!(oks > 0, "producer made progress across scale events");
+        submitted += sent;
+        completed += oks;
+    }
+    assert!(events.len() >= 4, "the diurnal timeline holds 4 scale events");
+    assert_eq!(cluster.device_ids(), ids(&[2]), "only the night device survives");
+    println!(
+        "=> {submitted} submitted / {completed} completed across {} scale \
+         events: 0 lost, 0 misrouted, 0 errors",
+        events.len()
+    );
+
+    // ---- BENCH_elastic.json ----
+    let nums = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
+    let arm_json = |p: &Placement, slow: &[f64]| {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "per_device".to_string(),
+            Json::Arr(
+                (0..pool.len())
+                    .map(|d| {
+                        Json::Arr(
+                            names_on(p, d).into_iter().map(Json::Str).collect(),
+                        )
+                    })
+                    .collect(),
+            ),
+        );
+        m.insert("true_slowdowns".to_string(), nums(slow));
+        m.insert("max_true_slowdown".to_string(), Json::Num(fmax(slow)));
+        Json::Obj(m)
+    };
+    let mut placement = BTreeMap::new();
+    placement.insert("pool".to_string(), Json::Str(pool.label()));
+    placement.insert(
+        "tenants".to_string(),
+        Json::Arr(tenant_names.iter().cloned().map(Json::Str).collect()),
+    );
+    placement.insert("pool_aware".to_string(), arm_json(&aware, &aware_slow));
+    placement.insert(
+        "homogeneous_assumption".to_string(),
+        arm_json(&blind, &blind_slow),
+    );
+    placement.insert(
+        "pool_aware_strictly_better".to_string(),
+        Json::Bool(aware_max < blind_max),
+    );
+    let mut engine_json = BTreeMap::new();
+    engine_json.insert("pool_start".to_string(), Json::Str(pool_start));
+    engine_json.insert("pool_after_scale_out".to_string(), Json::Str(pool_grown));
+    engine_json.insert("pool_after_scale_in".to_string(), Json::Str(pool_shrunk));
+    engine_json.insert("joined".to_string(), Json::Str(joined.to_string()));
+    engine_json.insert("retired".to_string(), Json::Str(retiree.to_string()));
+    engine_json.insert("drained_tenants".to_string(), Json::Num(drained.len() as f64));
+    let mut serving = BTreeMap::new();
+    serving.insert(
+        "stages".to_string(),
+        Json::Arr(
+            events
+                .iter()
+                .map(|(label, devices, touched)| {
+                    let mut s = BTreeMap::new();
+                    s.insert("label".to_string(), Json::Str(label.clone()));
+                    s.insert("devices".to_string(), Json::Num(*devices as f64));
+                    s.insert("swapped".to_string(), Json::Num(*touched as f64));
+                    Json::Obj(s)
+                })
+                .collect(),
+        ),
+    );
+    serving.insert("scale_events".to_string(), Json::Num(events.len() as f64));
+    serving.insert("submitted".to_string(), Json::Num(submitted as f64));
+    serving.insert("completed".to_string(), Json::Num(completed as f64));
+    serving.insert("lost".to_string(), Json::Num((submitted - completed) as f64));
+    serving.insert("errors".to_string(), Json::Num(0.0));
+    let mut root = BTreeMap::new();
+    root.insert("experiment".to_string(), Json::Str("elastic".to_string()));
+    root.insert("placement".to_string(), Json::Obj(placement));
+    root.insert("engine".to_string(), Json::Obj(engine_json));
+    root.insert("serving".to_string(), Json::Obj(serving));
+    let json = Json::Obj(root).to_string_compact();
+    match std::fs::write("BENCH_elastic.json", &json) {
+        Ok(()) => println!("wrote BENCH_elastic.json ({} bytes)", json.len()),
+        Err(e) => eprintln!("could not write BENCH_elastic.json: {e}"),
     }
 }

@@ -290,6 +290,30 @@ pub fn memory_demo_mix(platform: &Platform) -> Vec<Dfg> {
     ]
 }
 
+/// A tenant mix that only a **heterogeneity-aware** placement prices
+/// correctly on a mixed A100 + T4 pool: four batch-8 mid-network conv
+/// chains (56×56×256, 3×3). The per-tenant SM demand of that conv class
+/// is ~39% of an A100's 108-SM pool but ~78% of a T4's 40 SMs — so any
+/// *pair* co-located on the T4 oversubscribes it (~156%) while the same
+/// pair fits the A100 with headroom, and even a *trio* on the A100
+/// (~117%) interferes less than a T4 pair. A homogeneous-assumption
+/// placement that prices both devices as the reference A100 sees every
+/// pair as contention-free and happily splits 2+2, parking a pair on
+/// the T4; the pool-aware objective, pricing each device with its own
+/// cost model, drains the T4 down to one tenant. Op counts are unequal
+/// (24..=48) so the LPT orderings are deterministic.
+pub fn hetero_demo_mix() -> Vec<Dfg> {
+    let conv = OpKind::Conv { h: 56, w: 56, cin: 256, cout: 256, k: 3, stride: 1 };
+    let net = |name: &str, n: usize| {
+        let mut d = Dfg::new(name);
+        for i in 0..n {
+            d.push(conv, 8, format!("conv{i}"));
+        }
+        d
+    };
+    vec![net("res-a", 48), net("res-b", 40), net("res-c", 32), net("res-d", 24)]
+}
+
 /// One measured arm of the re-plan experiment (`gacer-bench replan`):
 /// how an admit re-search behaved under one budget, cold vs warm.
 #[derive(Debug, Clone)]
@@ -472,6 +496,46 @@ mod tests {
         assert!(lb.max_slowdown() > 1.5);
         assert!(ma.max_slowdown() < lb.max_slowdown());
         assert!(arms.iter().all(|a| a.hbm_gb.iter().all(|&g| g >= 0.0)));
+    }
+
+    #[test]
+    fn hetero_mix_defeats_the_homogeneous_assumption_on_a_mixed_pool() {
+        use crate::plan::{Placement, PlacementObjective};
+        use crate::profile::DevicePool;
+
+        let (a100, t4) = (Platform::a100(), Platform::t4());
+        let mix = hetero_demo_mix();
+        // Premises the mix's doc comment claims: a T4 pair oversubscribes
+        // its SM pool, an A100 pair does not.
+        let occ = |p: &Platform| {
+            CostModel::new(*p)
+                .occupancy_profile(&mix[0])
+                .iter()
+                .copied()
+                .fold(0.0f64, f64::max)
+        };
+        assert!(2.0 * occ(&t4) > 100.0, "a T4 pair must overflow 40 SMs");
+        assert!(2.0 * occ(&a100) < 100.0, "an A100 pair must fit 108 SMs");
+
+        let pool = DevicePool::from_platforms([a100, t4]);
+        let set = TenantSet::new(mix, CostModel::new(a100));
+        let aware =
+            Placement::with_objective_pool(&set, &pool, PlacementObjective::InterferenceAware);
+        let blind =
+            Placement::with_objective(&set, 2, PlacementObjective::InterferenceAware);
+        aware.validate(set.len()).unwrap();
+        blind.validate(set.len()).unwrap();
+        // Priced with each device's true cost model, the pool-aware
+        // placement's bottleneck slowdown is strictly lower: the blind
+        // arm parked a tenant pair on the T4.
+        let max = |v: Vec<f64>| v.into_iter().fold(0.0f64, f64::max);
+        let aware_max = max(aware.predicted_slowdowns_pool(&set, &pool));
+        let blind_max = max(blind.predicted_slowdowns_pool(&set, &pool));
+        assert!(blind.tenants_on(1).len() >= 2, "blind splits 2+2 onto the T4");
+        assert!(
+            aware_max < blind_max,
+            "pool-aware {aware_max} must beat homogeneous-assumption {blind_max}"
+        );
     }
 
     #[test]

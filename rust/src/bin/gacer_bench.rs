@@ -2,7 +2,7 @@
 //! evaluation section (see DESIGN.md §6 for the experiment index).
 //!
 //! Usage: `gacer-bench
-//! <fig4|fig7|fig8|table2|fig9|table3|table4|placement|memory|replan|slo|throughput|all>
+//! <fig4|fig7|fig8|table2|fig9|table3|table4|placement|memory|replan|slo|throughput|elastic|all>
 //! [--rounds N]`
 //!
 //! `placement` is this repo's multi-GPU extension: LoadBalance vs
@@ -22,6 +22,10 @@
 //! `--duration-ms`, `--rates R1,R2,...`, `--trace poisson|bursty|diurnal`,
 //! `--tenants N`, `--queue-cap N`, `--seed S`, `--submitters N`, and a CI
 //! floor `--min-throughput R` (exit 1 if the batched arm achieves less).
+//! `elastic` is the heterogeneous-pool extension: pool-aware vs
+//! homogeneous-assumption placement on a mixed A100 + T4 pool, engine
+//! scale-out/scale-in, and a diurnal cluster autoscale under closed-loop
+//! fire, recorded in `BENCH_elastic.json` (`docs/OPERATIONS.md`).
 
 use gacer::bench_util::experiments;
 use gacer::util::cli::Args;
@@ -37,7 +41,7 @@ fn main() {
     let ids: Vec<&str> = if experiment == "all" {
         vec![
             "fig4", "fig7", "fig8", "table2", "fig9", "table3", "table4",
-            "placement", "memory", "replan", "slo", "throughput",
+            "placement", "memory", "replan", "slo", "throughput", "elastic",
         ]
     } else {
         vec![experiment.as_str()]
@@ -56,6 +60,7 @@ fn main() {
             "replan" => experiments::replan(),
             "slo" => experiments::slo(),
             "throughput" => experiments::throughput(&args),
+            "elastic" => experiments::elastic(),
             other => {
                 eprintln!("unknown experiment: {other}");
                 std::process::exit(2);

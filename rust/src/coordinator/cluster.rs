@@ -42,6 +42,7 @@ use super::completion::Pending;
 use super::server::{Server, ServerBackend, ServerConfig, TenantSpec};
 use crate::engine::{Deployment, ShardedDeployment};
 use crate::error::{Error, Result};
+use crate::profile::DeviceId;
 
 /// The mutable half of a running cluster: per-device servers, the last
 /// deployment applied to each, and the routing table — everything a hot
@@ -55,6 +56,11 @@ struct ClusterState {
     /// for idle devices) — what [`ClusterServer::apply`] diffs against to
     /// leave unchanged devices completely untouched.
     deployments: Vec<Deployment>,
+    /// The stable [`DeviceId`] of each dense position — how an elastic
+    /// [`ClusterServer::apply`] matches an incoming deployment's devices
+    /// against the running servers across scale-out/scale-in (dense
+    /// indices shift when a device retires; ids never do).
+    device_ids: Vec<DeviceId>,
     routing: Vec<(usize, usize)>,
 }
 
@@ -159,6 +165,44 @@ impl ClusterServer {
         per_device: Vec<(Vec<TenantSpec>, ServerConfig)>,
         routing: Vec<(usize, usize)>,
     ) -> Result<ClusterServer> {
+        let ids = (0..per_device.len()).map(|d| DeviceId(d as u64)).collect();
+        Self::start_inner(backend, per_device, routing, ids)
+    }
+
+    /// Start a cluster directly from a lowered [`ShardedDeployment`] —
+    /// the id-carrying counterpart of [`ClusterServer::start`]. The
+    /// deployment's [`DeviceId`]s seed the cluster's identity table, so
+    /// later elastic [`ClusterServer::apply`]s (after
+    /// `GacerEngine::add_device` / `remove_device`) match devices by
+    /// stable id instead of assuming the device count never changes.
+    pub fn start_sharded(
+        artifact_dir: &str,
+        deployment: ShardedDeployment,
+    ) -> Result<ClusterServer> {
+        Self::start_sharded_with_backend(
+            ServerBackend::Artifacts(artifact_dir.to_string()),
+            deployment,
+        )
+    }
+
+    /// [`ClusterServer::start_sharded`] over an explicit
+    /// [`ServerBackend`].
+    pub fn start_sharded_with_backend(
+        backend: ServerBackend,
+        deployment: ShardedDeployment,
+    ) -> Result<ClusterServer> {
+        let ShardedDeployment { per_device, routing, device_ids } = deployment;
+        Self::check_device_ids(&device_ids, per_device.len())?;
+        let per_device = per_device.into_iter().map(|d| (d.tenants, d.config)).collect();
+        Self::start_inner(backend, per_device, routing, device_ids)
+    }
+
+    fn start_inner(
+        backend: ServerBackend,
+        per_device: Vec<(Vec<TenantSpec>, ServerConfig)>,
+        routing: Vec<(usize, usize)>,
+        device_ids: Vec<DeviceId>,
+    ) -> Result<ClusterServer> {
         let sizes: Vec<usize> = per_device.iter().map(|(t, _)| t.len()).collect();
         Self::validate_routing(&routing, &sizes)?;
         let mut servers = Vec::with_capacity(per_device.len());
@@ -178,10 +222,34 @@ impl ClusterServer {
         Ok(ClusterServer {
             backend,
             shared: Arc::new(ClusterShared {
-                state: RwLock::new(ClusterState { servers, deployments, routing }),
+                state: RwLock::new(ClusterState {
+                    servers,
+                    deployments,
+                    device_ids,
+                    routing,
+                }),
                 apply_lock: Mutex::new(()),
             }),
         })
+    }
+
+    /// A deployment's device-id list must name each device exactly once.
+    fn check_device_ids(device_ids: &[DeviceId], n_devices: usize) -> Result<()> {
+        if device_ids.len() != n_devices {
+            return Err(Error::InvalidConfig(format!(
+                "deployment lists {} device ids for {n_devices} devices",
+                device_ids.len()
+            )));
+        }
+        let mut seen: Vec<u64> = device_ids.iter().map(|id| id.0).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        if seen.len() != device_ids.len() {
+            return Err(Error::InvalidConfig(
+                "deployment repeats a device id".into(),
+            ));
+        }
+        Ok(())
     }
 
     /// Hot-swap a freshly lowered [`ShardedDeployment`] into the running
@@ -205,6 +273,13 @@ impl ClusterServer {
     ///   scheduler drains (a migrated-away tenant's queued requests were
     ///   already flushed by the destination-side fence semantics of
     ///   [`Server::apply`], or drain here).
+    ///
+    /// Devices are matched by stable [`DeviceId`], so the deployment may
+    /// span a *different* device set than the running cluster: an id the
+    /// cluster has never seen joins (scale-out — idle → occupied rules
+    /// apply), and a running id absent from the deployment retires
+    /// (scale-in — its server drains and stops once the new routing
+    /// table, which can no longer reach it, is committed).
     ///
     /// Concurrency: appliers serialize on a dedicated lock, and all the
     /// *expensive* fallible work — routing validation, per-device
@@ -250,24 +325,20 @@ impl ClusterServer {
         // between that snapshot and ours.
         let _serialized = self.shared.apply_lock.lock().unwrap_or_else(|e| e.into_inner());
 
-        let sizes: Vec<usize> =
-            deployment.per_device.iter().map(|d| d.tenants.len()).collect();
-        Self::validate_routing(&deployment.routing, &sizes)?;
+        let ShardedDeployment { per_device, routing, device_ids } = deployment;
+        Self::check_device_ids(&device_ids, per_device.len())?;
+        let sizes: Vec<usize> = per_device.iter().map(|d| d.tenants.len()).collect();
+        Self::validate_routing(&routing, &sizes)?;
 
         // Snapshot under a read lock (server handles are cheap clones);
         // request traffic keeps flowing through everything below until
-        // the commit.
-        let (servers, deployments) = {
+        // the commit. Devices are matched **by stable id**, not dense
+        // position: the incoming deployment may have grown, shrunk, or
+        // reordered the pool since this cluster started.
+        let (old_servers, old_deployments, old_ids) = {
             let st = read_state(&self.shared);
-            (st.servers.clone(), st.deployments.clone())
+            (st.servers.clone(), st.deployments.clone(), st.device_ids.clone())
         };
-        if deployment.per_device.len() != servers.len() {
-            return Err(Error::InvalidConfig(format!(
-                "deployment spans {} devices, cluster runs {}",
-                deployment.per_device.len(),
-                servers.len()
-            )));
-        }
         // Run every fallible step BEFORE touching any running server or
         // taking the write lock: preflight each in-place swap (config,
         // shape, names, variants against that server's backend —
@@ -277,17 +348,19 @@ impl ClusterServer {
         // Server::start). Failing anywhere here leaves the cluster
         // exactly as it was — fresh servers are dropped without ever
         // having been routed to.
-        let mut fresh: Vec<(usize, Server)> = Vec::new();
-        for (d, dep) in deployment.per_device.iter().enumerate() {
-            if *dep == deployments[d] || dep.tenants.is_empty() {
+        let mut fresh: Vec<(DeviceId, Server)> = Vec::new();
+        for (d, dep) in per_device.iter().enumerate() {
+            let prev = old_ids.iter().position(|&id| id == device_ids[d]);
+            let unchanged = prev.is_some_and(|p| old_deployments[p] == *dep);
+            if unchanged || dep.tenants.is_empty() {
                 continue;
             }
-            match &servers[d] {
+            match prev.and_then(|p| old_servers[p].clone()) {
                 Some(server) => {
                     server.preflight_apply(dep)?;
                 }
                 None => fresh.push((
-                    d,
+                    device_ids[d],
                     Server::start_with_backend(
                         self.backend.clone(),
                         dep.tenants.clone(),
@@ -297,39 +370,76 @@ impl ClusterServer {
             }
         }
         // Commit under the write lock: epoch fences + routing swap only.
+        // The state vectors are rebuilt in the incoming deployment's
+        // order; a surviving unchanged device's server is carried over
+        // untouched (no fence, no swap), and a retired id's server is
+        // dropped after the lock is released (it drains, then stops).
         // From here on the only possible failure is a device whose
         // scheduler has died (its preflight passed); the loop finishes
-        // the remaining healthy devices and STILL swaps the routing
-        // table so every living device ends consistent with it, then
-        // reports the dead device's error.
+        // the remaining healthy devices — a failed device keeps its old
+        // plan — and STILL swaps the routing table so every living
+        // device ends consistent with it, then reports that error.
         let mut st = self.shared.state.write().unwrap_or_else(|e| e.into_inner());
+        let prev_servers = std::mem::take(&mut st.servers);
+        let prev_deployments = std::mem::take(&mut st.deployments);
+        let prev_ids = std::mem::replace(&mut st.device_ids, device_ids.clone());
+        let mut new_servers = Vec::with_capacity(per_device.len());
+        let mut new_deployments = Vec::with_capacity(per_device.len());
         let mut touched = Vec::new();
         let mut first_err = None;
-        for (d, dep) in deployment.per_device.into_iter().enumerate() {
-            if dep == st.deployments[d] {
+        for (d, dep) in per_device.into_iter().enumerate() {
+            let prev = prev_ids.iter().position(|&id| id == device_ids[d]);
+            let prev_server = prev.and_then(|p| prev_servers[p].clone());
+            let prev_dep = prev.map(|p| &prev_deployments[p]);
+            if prev_dep.is_some_and(|pd| *pd == dep) {
+                // Unchanged surviving device: carried over untouched.
+                new_servers.push(prev_server);
+                new_deployments.push(dep);
                 continue;
             }
             if dep.tenants.is_empty() {
-                // Occupied -> idle: drop the server (drains, then stops).
-                st.servers[d] = None;
-            } else if let Some(server) = &st.servers[d] {
-                if let Err(e) = server.apply(dep.clone()) {
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
-                    continue;
+                // Occupied -> idle drains; a brand-new idle device just
+                // takes its position (nothing ran, nothing changed).
+                if prev_server.is_some() {
+                    touched.push(d);
                 }
-            } else {
-                let at = fresh
-                    .iter()
-                    .position(|(fd, _)| *fd == d)
-                    .expect("started above for every idle->occupied device");
-                st.servers[d] = Some(fresh.swap_remove(at).1);
+                new_servers.push(None);
+                new_deployments.push(dep);
+                continue;
             }
-            st.deployments[d] = dep;
+            match prev_server {
+                Some(server) => {
+                    if let Err(e) = server.apply(dep.clone()) {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                        new_servers.push(Some(server));
+                        new_deployments.push(
+                            prev_dep
+                                .cloned()
+                                .expect("an occupied device has a deployment"),
+                        );
+                        continue;
+                    }
+                    new_servers.push(Some(server));
+                }
+                None => {
+                    let at = fresh
+                        .iter()
+                        .position(|(fid, _)| *fid == device_ids[d])
+                        .expect("started above for every idle->occupied device");
+                    new_servers.push(Some(fresh.swap_remove(at).1));
+                }
+            }
+            new_deployments.push(dep);
             touched.push(d);
         }
-        st.routing = deployment.routing;
+        st.servers = new_servers;
+        st.deployments = new_deployments;
+        st.routing = routing;
+        drop(st);
+        // `prev_servers` drops here, outside the routing lock: retired
+        // devices' servers drain and stop without stalling submission.
         match first_err {
             Some(e) => Err(e),
             None => Ok(touched),
@@ -369,6 +479,14 @@ impl ClusterServer {
     /// Number of devices (including idle ones).
     pub fn n_devices(&self) -> usize {
         read_state(&self.shared).servers.len()
+    }
+
+    /// The stable [`DeviceId`] of each dense device position — parallel
+    /// to [`ClusterServer::epochs`] / [`ClusterServer::server`] indices,
+    /// and the key [`ClusterServer::apply`] matches devices on across
+    /// scale-out/scale-in.
+    pub fn device_ids(&self) -> Vec<DeviceId> {
+        read_state(&self.shared).device_ids.clone()
     }
 
     /// The server of one device, for introspection (each exposes its own
@@ -481,5 +599,78 @@ mod tests {
         // Empty devices are legal.
         ClusterServer::validate_routing(&[(1, 0)], &[0, 1]).unwrap();
         ClusterServer::validate_routing(&[], &[0, 0]).unwrap();
+    }
+
+    #[test]
+    fn elastic_apply_matches_devices_by_stable_id() {
+        use super::super::server::SyntheticModel;
+        use crate::coordinator::BatchPolicy;
+        use std::time::Duration;
+
+        fn tenant(name: &str) -> TenantSpec {
+            TenantSpec {
+                name: name.to_string(),
+                family: "synthetic".to_string(),
+                policy: BatchPolicy::new(4, Duration::from_micros(200), vec![1, 2, 4]),
+                chunk: None,
+            }
+        }
+        fn dep(names: &[&str]) -> Deployment {
+            Deployment {
+                tenants: names.iter().map(|n| tenant(n)).collect(),
+                config: ServerConfig::default(),
+            }
+        }
+
+        let cluster = ClusterServer::start_sharded_with_backend(
+            ServerBackend::Synthetic(SyntheticModel::echo()),
+            ShardedDeployment {
+                per_device: vec![dep(&["a", "b"]), dep(&["c"])],
+                routing: vec![(0, 0), (0, 1), (1, 0)],
+                device_ids: vec![DeviceId(0), DeviceId(1)],
+            },
+        )
+        .unwrap();
+        assert_eq!(cluster.device_ids(), vec![DeviceId(0), DeviceId(1)]);
+
+        // Scale-out: gpu2 joins and takes tenant b off gpu0; gpu1 is
+        // untouched (no fence, same server).
+        let touched = cluster
+            .apply(ShardedDeployment {
+                per_device: vec![dep(&["a"]), dep(&["c"]), dep(&["b"])],
+                routing: vec![(0, 0), (2, 0), (1, 0)],
+                device_ids: vec![DeviceId(0), DeviceId(1), DeviceId(2)],
+            })
+            .unwrap();
+        assert_eq!(touched, vec![0, 2]);
+        assert_eq!(cluster.n_devices(), 3);
+
+        // Scale-in: gpu0 retires, tenant a drains onto gpu2. Dense
+        // positions shift but ids keep their meaning — gpu1's server is
+        // still carried over untouched at its new position 0.
+        let touched = cluster
+            .apply(ShardedDeployment {
+                per_device: vec![dep(&["c"]), dep(&["b", "a"])],
+                routing: vec![(1, 1), (1, 0), (0, 0)],
+                device_ids: vec![DeviceId(1), DeviceId(2)],
+            })
+            .unwrap();
+        assert_eq!(touched, vec![1]);
+        assert_eq!(cluster.device_ids(), vec![DeviceId(1), DeviceId(2)]);
+        // Every tenant still answers on the post-scale routing.
+        for t in 0..3 {
+            let out = cluster.infer(t, vec![7.0; 4]).unwrap();
+            assert!(!out.is_empty());
+        }
+
+        // A malformed id list is rejected before any change.
+        assert!(cluster
+            .apply(ShardedDeployment {
+                per_device: vec![dep(&["c"]), dep(&["b", "a"])],
+                routing: vec![(1, 1), (1, 0), (0, 0)],
+                device_ids: vec![DeviceId(1), DeviceId(1)],
+            })
+            .is_err());
+        assert_eq!(cluster.device_ids(), vec![DeviceId(1), DeviceId(2)]);
     }
 }

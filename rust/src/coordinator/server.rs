@@ -1162,7 +1162,15 @@ pub struct ServeOptions {
     /// Requests served per tenant.
     pub n_requests: usize,
     /// Devices to shard the deployment across (1 = classic single GPU).
+    /// Ignored when `device_pool` is non-empty.
     pub n_devices: usize,
+    /// Explicit per-device platform list (`--devices a100,t4x2`): the
+    /// engine gets a heterogeneous [`DevicePool`] and each device is
+    /// costed, searched, and served against its own platform. Empty =
+    /// `n_devices` identical devices.
+    ///
+    /// [`DevicePool`]: crate::profile::DevicePool
+    pub device_pool: Vec<crate::profile::Platform>,
     /// Placement objective for the device dimension.
     pub objective: PlacementObjective,
     /// Admit one more tenant of this family against the *running*
@@ -1193,6 +1201,7 @@ impl Default for ServeOptions {
         ServeOptions {
             n_requests: 64,
             n_devices: 1,
+            device_pool: Vec::new(),
             objective: PlacementObjective::default(),
             live_admit: None,
             replan_budget: SearchBudget::unbounded(),
@@ -1237,6 +1246,9 @@ pub fn serve_demo(
         .placement_objective(opts.objective)
         .replan_budget(opts.replan_budget)
         .artifacts(artifact_dir);
+    if !opts.device_pool.is_empty() {
+        builder = builder.device_pool(opts.device_pool.clone());
+    }
     let slo_on = opts.slo_p99_ms.is_some() || !opts.tiers.is_empty();
     for (i, family) in tenant_models.iter().enumerate() {
         let batch_policy =
@@ -1270,9 +1282,10 @@ pub fn serve_demo(
     let mut engine = builder.build()?;
     let deployment = engine.sharded_deployment()?;
     println!(
-        "searched plan: {} decomposed ops across {} device(s)",
+        "searched plan: {} decomposed ops across {} device(s) [{}]",
         engine.plan().decomposed_ops(),
         engine.n_devices(),
+        engine.device_pool().label(),
     );
     for (d, dep) in deployment.per_device.iter().enumerate() {
         println!(

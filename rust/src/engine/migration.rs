@@ -31,7 +31,7 @@
 use crate::engine::TenantId;
 use crate::metrics::imbalance_ratio;
 use crate::plan::{Placement, TenantSet};
-use crate::profile::{roofline_slowdown, slowdown_from_phases};
+use crate::profile::{roofline_slowdown, slowdown_from_phases, DeviceId};
 
 /// Threshold rule for load-drift migration: act when the max/min
 /// observed device-load ratio exceeds `max_imbalance`, and only when a
@@ -62,9 +62,11 @@ use crate::profile::{roofline_slowdown, slowdown_from_phases};
 #[derive(Debug, Clone, PartialEq)]
 pub struct MigrationPolicy {
     /// Trigger threshold on the max/min device-load ratio
-    /// ([`crate::metrics::imbalance_ratio`]); must be > 1. A ratio of
-    /// `f64::INFINITY` (a loaded device next to an idle one) always
-    /// triggers.
+    /// ([`crate::metrics::imbalance_ratio`]); must be > 1. Idle devices
+    /// are excluded from the ratio (a freshly scaled-out or drained
+    /// device beside balanced load does not trigger), but once the
+    /// *loaded* devices are skewed past the threshold an idle device is
+    /// still the preferred destination.
     pub max_imbalance: f64,
     /// Hysteresis against migration thrash: after an executed migration,
     /// proposals that would move the same tenant straight back onto the
@@ -159,14 +161,19 @@ pub struct MigrationProposal {
 }
 
 /// A migration the engine actually executed
-/// ([`crate::engine::GacerEngine::maybe_migrate`]).
+/// ([`crate::engine::GacerEngine::maybe_migrate`]). Devices are named by
+/// stable [`DeviceId`], not dense index: on an elastic pool the executed
+/// move must stay meaningful even after a later scale-in shifts the
+/// dense indices.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Migration {
     /// Stable id of the moved tenant (its global slot is unchanged —
     /// migration never compacts slots).
     pub tenant: TenantId,
-    pub from: usize,
-    pub to: usize,
+    /// Stable id of the device the tenant left.
+    pub from: DeviceId,
+    /// Stable id of the device the tenant moved to.
+    pub to: DeviceId,
 }
 
 impl MigrationPolicy {
@@ -590,26 +597,42 @@ mod tests {
     }
 
     #[test]
-    fn idle_device_always_triggers_and_absorbs() {
+    fn idle_device_absorbs_skew_among_the_loaded_devices() {
         let p = MigrationPolicy::default();
-        // Device 2 idle: ratio infinite.
+        // Loads [12, 2, 0]: the skew among the loaded devices (12/2 = 6)
+        // triggers, and the idle device is the preferred destination.
         let prop = p.propose(&[8.0, 4.0, 2.0, 0.0], &placement()).unwrap();
-        assert_eq!(prop.imbalance_before, f64::INFINITY);
+        assert_eq!(prop.imbalance_before, 6.0, "idle device excluded from the ratio");
         assert_eq!((prop.from, prop.to), (0, 2));
     }
 
     #[test]
-    fn tied_maxima_still_rebalance_onto_the_idle_device() {
-        // Devices 0 and 1 both saturated at 5, device 2 idle. A
+    fn fresh_empty_device_does_not_fire_when_loaded_devices_are_balanced() {
+        // Regression (elastic pools): loads [2, 2, 0] — e.g. right after
+        // a scale-out added an empty device. The old INFINITY ratio
+        // exceeded every threshold and churned a migration each window;
+        // balanced loaded devices must stay put.
+        let p = MigrationPolicy::default();
+        assert!(p.propose(&[1.0, 1.0, 2.0, 0.0], &placement()).is_none());
+        // The interference variant shares the trigger.
+        let set = interference_set();
+        assert!(p
+            .propose_interference_aware(&[1.0, 1.0, 2.0, 0.0], &placement(), &set)
+            .is_none());
+    }
+
+    #[test]
+    fn tied_maxima_still_rebalance() {
+        // Devices 0 and 1 both saturated at 5, device 2 nearly idle. A
         // strict-max-only criterion would refuse every move (the max
         // stays 5 because the *other* saturated device is untouched);
         // improving the ratio at an unchanged max is enough, and
         // candidates come from every bottleneck-tied device.
         let p = MigrationPolicy::default();
-        let prop = p.propose(&[3.0, 2.0, 5.0, 0.0], &placement()).unwrap();
-        assert_eq!((prop.slot, prop.from, prop.to), (0, 0, 2));
-        assert_eq!(prop.imbalance_before, f64::INFINITY);
-        assert!(prop.imbalance_after.is_finite());
+        let prop = p.propose(&[3.0, 2.0, 5.0, 1.0], &placement()).unwrap();
+        assert_eq!((prop.from, prop.to), (0, 2));
+        assert_eq!(prop.imbalance_before, 5.0);
+        assert!(prop.imbalance_after < prop.imbalance_before);
     }
 
     #[test]

@@ -50,6 +50,19 @@
 //! a [`ClusterServer`] front-end ([`GacerEngine::serve_cluster`]) that
 //! routes requests by tenant placement.
 //!
+//! The device dimension is a first-class [`DevicePool`]: each device
+//! carries its own [`Platform`] profile (SM pool, bandwidth peak, HBM
+//! capacity) and a stable [`DeviceId`] that survives scale events.
+//! [`EngineBuilder::device_pool`] builds a heterogeneous engine (e.g. an
+//! A100 beside two T4s) where placement, per-shard search, and
+//! simulation all price each device with its own cost model;
+//! [`EngineBuilder::devices`] stays as sugar for `n` identical devices.
+//! At runtime [`GacerEngine::add_device`] scales the pool out (warm
+//! re-shard onto the grown pool) and [`GacerEngine::remove_device`]
+//! drains a device onto capacity-feasible survivors — refusing with
+//! [`Error::DrainImpossible`], pool untouched, when some resident tenant
+//! fits no surviving device.
+//!
 //! ```
 //! use gacer::engine::GacerEngine;
 //! use gacer::models::zoo;
@@ -112,7 +125,7 @@ use crate::plan::{
     ChunkMap, DeploymentPlan, Placement, PlacementObjective, ShardedDeploymentPlan,
     TenantSet,
 };
-use crate::profile::{CostModel, Platform};
+use crate::profile::{CostModel, DeviceId, DevicePool, Platform};
 use crate::runtime::ArtifactManifest;
 use crate::search::{SearchBudget, SearchConfig, SearchReport, SearchState, ShardedSearch};
 use crate::slo::{BurnConfig, SloMonitor, SloPolicy, SloPressure, SloTarget};
@@ -134,7 +147,9 @@ impl std::fmt::Display for TenantId {
 #[derive(Debug, Clone, Copy)]
 struct Cooldown {
     tenant: TenantId,
-    from: usize,
+    /// Stable id of the device the tenant migrated off (ids stay valid
+    /// across scale events; dense indices would not).
+    from: DeviceId,
     remaining: usize,
 }
 
@@ -189,6 +204,11 @@ pub struct ShardedDeployment {
     /// Global tenant slot → `(device, local slot)` — the cluster front-end
     /// routes requests with this table.
     pub routing: Vec<(usize, usize)>,
+    /// Stable id of each device, in `per_device` order — how
+    /// [`ClusterServer::apply`] matches a freshly lowered deployment
+    /// against the running servers when a scale event changed the device
+    /// count or order. Same length as `per_device`.
+    pub device_ids: Vec<DeviceId>,
 }
 
 /// Builder for [`GacerEngine`] — `GacerEngine::builder().platform(..)
@@ -200,6 +220,9 @@ pub struct EngineBuilder {
     replan_budget: SearchBudget,
     tick: Duration,
     n_devices: usize,
+    /// Explicit per-device platform list; `None` means `n_devices`
+    /// copies of `platform` (the classic homogeneous engine).
+    pool: Option<Vec<Platform>>,
     objective: PlacementObjective,
     burn: BurnConfig,
     tenants: Vec<(Dfg, TenantMeta)>,
@@ -215,6 +238,7 @@ impl EngineBuilder {
             replan_budget: SearchBudget::unbounded(),
             tick: Duration::from_micros(200),
             n_devices: 1,
+            pool: None,
             objective: PlacementObjective::default(),
             burn: BurnConfig::default(),
             tenants: Vec::new(),
@@ -222,7 +246,10 @@ impl EngineBuilder {
         }
     }
 
-    /// Target platform for the cost model and simulator.
+    /// Target platform for the cost model and simulator. With an
+    /// explicit [`EngineBuilder::device_pool`] the pool wins and this is
+    /// ignored (the engine's reference platform becomes the pool's first
+    /// device).
     pub fn platform(mut self, p: Platform) -> Self {
         self.platform = p;
         self
@@ -230,11 +257,30 @@ impl EngineBuilder {
 
     /// Number of devices to shard the deployment across (default 1 —
     /// the classic single-GPU engine; values below 1 are clamped to 1).
-    /// With `n > 1` the engine places tenants with [`Placement::balanced`],
-    /// searches each shard independently, and serves through one
-    /// coordinator per device ([`GacerEngine::serve_cluster`]).
+    /// Sugar for a [`DevicePool`] of `n` identical copies of the
+    /// builder's platform: a homogeneous pool prices, places, and
+    /// searches exactly as the pre-pool engine did. With `n > 1` the
+    /// engine places tenants with [`Placement::balanced`], searches each
+    /// shard independently, and serves through one coordinator per
+    /// device ([`GacerEngine::serve_cluster`]).
     pub fn devices(mut self, n: usize) -> Self {
         self.n_devices = n.max(1);
+        self.pool = None;
+        self
+    }
+
+    /// Shard across an explicit, possibly heterogeneous device pool —
+    /// one [`Platform`] profile per device (an empty list falls back to
+    /// one device of the builder's platform). Placement weighs each
+    /// candidate device with its own cost model (a T4 absorbs less than
+    /// an A100 before it saturates), each shard's Algorithm-1 search and
+    /// simulation run against that device's platform, and admission/
+    /// migration re-price the moving tenant per device. The engine's
+    /// reference platform ([`GacerEngine::platform`], global cost
+    /// pricing) becomes the pool's first device.
+    pub fn device_pool(mut self, platforms: Vec<Platform>) -> Self {
+        self.n_devices = platforms.len().max(1);
+        self.pool = if platforms.is_empty() { None } else { Some(platforms) };
         self
     }
 
@@ -395,17 +441,25 @@ impl EngineBuilder {
             None => None,
         };
         self.burn.validate()?;
-        let n_devices = self.n_devices;
+        let pool = match self.pool {
+            Some(platforms) => DevicePool::from_platforms(platforms),
+            None => DevicePool::uniform(self.platform, self.n_devices),
+        };
+        // The reference platform (global cost model, single-device
+        // simulate) is the pool's first device; for the homogeneous
+        // builder path this is exactly the builder's platform.
+        let platform = *pool.platform(0);
+        let n_devices = pool.len();
         let empty = Placement::from_assignments(vec![Vec::new(); n_devices]);
         let mut engine = GacerEngine {
-            opts: SimOptions::for_platform(&self.platform),
-            platform: self.platform,
+            opts: SimOptions::for_platform(&platform),
+            platform,
             search_cfg: self.search,
             replan_budget: self.replan_budget,
             tick: self.tick,
-            n_devices,
+            pool,
             objective: self.objective,
-            set: TenantSet::new(Vec::new(), CostModel::new(self.platform)),
+            set: TenantSet::new(Vec::new(), CostModel::new(platform)),
             meta: Vec::new(),
             next_id: self.next_id,
             sharded: ShardedDeploymentPlan::unregulated(empty),
@@ -442,6 +496,8 @@ impl EngineBuilder {
 /// The deployment engine: tenant set + placement + per-device searched
 /// plans + lowering to the live serving configuration.
 pub struct GacerEngine {
+    /// Reference platform (the pool's first device at build time): the
+    /// global cost model and single-device simulate price against it.
     platform: Platform,
     opts: SimOptions,
     search_cfg: SearchConfig,
@@ -449,8 +505,12 @@ pub struct GacerEngine {
     /// re-plans stay unbounded ([`EngineBuilder::replan_budget`]).
     replan_budget: SearchBudget,
     tick: Duration,
-    /// Device count the deployment is sharded across (>= 1).
-    n_devices: usize,
+    /// The device pool the deployment is sharded across (>= 1 device):
+    /// one [`Platform`] profile + stable [`DeviceId`] per device. Grows
+    /// and shrinks at runtime ([`GacerEngine::add_device`] /
+    /// [`GacerEngine::remove_device`]); dense indices shift on removal,
+    /// ids never do.
+    pool: DevicePool,
     /// Placement objective for placement, admission, and migration.
     objective: PlacementObjective,
     set: TenantSet,
@@ -535,14 +595,35 @@ impl GacerEngine {
         self.meta.iter().map(|m| m.id).collect()
     }
 
-    /// The platform the engine prices against.
+    /// The engine's reference platform (the pool's first device at build
+    /// time) — what the global cost model prices against. Per-device
+    /// pricing lives in [`GacerEngine::device_pool`].
     pub fn platform(&self) -> &Platform {
         &self.platform
     }
 
     /// Number of devices the deployment is sharded across (>= 1).
     pub fn n_devices(&self) -> usize {
-        self.n_devices
+        self.pool.len()
+    }
+
+    /// The device pool: per-device [`Platform`] profiles and stable
+    /// [`DeviceId`]s, in dense order.
+    pub fn device_pool(&self) -> &DevicePool {
+        &self.pool
+    }
+
+    /// Stable device ids, in dense order. An id is assigned when its
+    /// device joins the pool and is never reused; dense indices shift
+    /// when [`GacerEngine::remove_device`] compacts the pool, ids do not.
+    pub fn device_ids(&self) -> Vec<DeviceId> {
+        self.pool.ids()
+    }
+
+    /// The stable id of a deployed tenant's device — the scale-safe
+    /// sibling of [`GacerEngine::device_of`].
+    pub fn device_id_of(&self, id: TenantId) -> Result<DeviceId> {
+        self.device_of(id).map(|d| self.pool.id(d))
     }
 
     /// The placement objective the engine places, admits, and migrates
@@ -570,7 +651,9 @@ impl GacerEngine {
         &self.sharded.placement
     }
 
-    /// The device a deployed tenant is placed on.
+    /// The *dense index* of a deployed tenant's device. Dense indices
+    /// shift when a scale-in compacts the pool — hold
+    /// [`GacerEngine::device_id_of`] across scale events instead.
     pub fn device_of(&self, id: TenantId) -> Result<usize> {
         let idx = self.index_of(id)?;
         self.sharded
@@ -615,9 +698,9 @@ impl GacerEngine {
     /// shard bounds the makespan). For a single-device engine this is
     /// exactly the classic whole-set simulation.
     pub fn simulate(&self) -> SimOutcome {
-        if self.n_devices == 1 {
-            // Single device: simulate the owned set directly (no per-shard
-            // tenant cloning).
+        if self.pool.len() == 1 && *self.pool.platform(0) == self.platform {
+            // Single device on the reference platform: simulate the owned
+            // set directly (no per-shard tenant cloning).
             return self.set.simulate(&self.merged, self.opts);
         }
         self.simulate_devices()
@@ -630,14 +713,34 @@ impl GacerEngine {
             .unwrap_or_else(|| self.set.simulate(&self.merged, self.opts))
     }
 
-    /// Simulate every device's shard independently (empty devices report
-    /// a zero-makespan outcome).
+    /// Simulator options for one device: the shared options on a uniform
+    /// reference pool (bit-identical to the pre-pool engine), that
+    /// device's own platform otherwise.
+    fn device_opts(&self, d: usize) -> SimOptions {
+        if self.pool.is_uniform() && *self.pool.platform(0) == self.platform {
+            self.opts
+        } else {
+            SimOptions::for_platform(self.pool.platform(d))
+        }
+    }
+
+    /// One device's shard as a standalone tenant set, priced by that
+    /// device's own cost model on a heterogeneous pool.
+    fn device_set(&self, d: usize) -> TenantSet {
+        if self.pool.is_uniform() && *self.pool.platform(0) == self.platform {
+            self.set.shard(&self.sharded.placement, d)
+        } else {
+            self.set.shard_on(&self.sharded.placement, d, self.pool.cost(d))
+        }
+    }
+
+    /// Simulate every device's shard independently, each on its own
+    /// platform (empty devices report a zero-makespan outcome).
     pub fn simulate_devices(&self) -> Vec<SimOutcome> {
-        (0..self.n_devices)
+        (0..self.pool.len())
             .map(|d| {
-                self.set
-                    .shard(&self.sharded.placement, d)
-                    .simulate(&self.sharded.shards[d], self.opts)
+                self.device_set(d)
+                    .simulate(&self.sharded.shards[d], self.device_opts(d))
             })
             .collect()
     }
@@ -755,13 +858,18 @@ impl GacerEngine {
         }
         // Device selection happens before any engine state mutates: a
         // memory-capacity refusal must leave no trace of the newcomer.
+        // The pool-aware choosers price the newcomer per candidate
+        // device (and on a uniform reference pool reduce exactly to the
+        // homogeneous choosers).
         let device = match self.objective {
-            PlacementObjective::LoadBalance => self.sharded.placement.least_loaded(&self.set),
+            PlacementObjective::LoadBalance => {
+                self.sharded.placement.least_loaded_pool(&self.set, &self.pool, &dfg)
+            }
             PlacementObjective::InterferenceAware => {
-                self.sharded.placement.least_interfering(&self.set, &dfg)
+                self.sharded.placement.least_interfering_pool(&self.set, &self.pool, &dfg)
             }
             PlacementObjective::MemoryAware => {
-                self.sharded.placement.fit_memory_aware(&self.set, &dfg)?
+                self.sharded.placement.fit_memory_aware_pool(&self.set, &self.pool, &dfg)?
             }
         };
         let id = TenantId(self.next_id);
@@ -834,12 +942,13 @@ impl GacerEngine {
     /// Algorithm 1 from the unregulated plan on every shard, replacing
     /// the current sharded plan.
     pub fn replan(&mut self) {
+        let n_devices = self.pool.len();
         if self.set.is_empty() {
-            let empty = Placement::from_assignments(vec![Vec::new(); self.n_devices]);
+            let empty = Placement::from_assignments(vec![Vec::new(); n_devices]);
             self.sharded = ShardedDeploymentPlan::unregulated(empty);
             self.merged = DeploymentPlan::unregulated(0);
-            self.reports = (0..self.n_devices).map(|_| None).collect();
-            self.search_states = vec![SearchState::default(); self.n_devices];
+            self.reports = (0..n_devices).map(|_| None).collect();
+            self.search_states = vec![SearchState::default(); n_devices];
             self.last_report = None;
             self.last_searched_device = None;
             self.last_searched_devices = Vec::new();
@@ -848,10 +957,11 @@ impl GacerEngine {
         // Cold searches also refill the per-device warm states, so the
         // next incremental event starts from this re-plan's compiled
         // streams and converged plans.
-        let mut states = vec![SearchState::default(); self.n_devices];
+        let mut states = vec![SearchState::default(); n_devices];
         let report = ShardedSearch::new(&self.set, self.opts, self.search_cfg)
             .objective(self.objective)
-            .run_warm(self.n_devices, &mut states);
+            .pool(&self.pool)
+            .run_warm(n_devices, &mut states);
         self.search_states = states;
         let bottleneck = report.bottleneck_device();
         self.last_report =
@@ -875,6 +985,7 @@ impl GacerEngine {
     fn research_shard(&mut self, device: usize) -> Result<()> {
         let seed = self.sharded.shards[device].clone();
         let report = ShardedSearch::new(&self.set, self.opts, self.search_cfg)
+            .pool(&self.pool)
             .budget(self.replan_budget)
             .research_device_warm(
                 &self.sharded.placement,
@@ -1023,10 +1134,10 @@ impl GacerEngine {
     /// Single-device engines only: a sharded engine has one configuration
     /// *per device* — use [`GacerEngine::sharded_deployment`].
     pub fn deployment(&self) -> Result<Deployment> {
-        if self.n_devices > 1 {
+        if self.pool.len() > 1 {
             return Err(Error::InvalidConfig(format!(
                 "engine is sharded across {} devices: use sharded_deployment()",
-                self.n_devices
+                self.pool.len()
             )));
         }
         self.deployment_of(&self.merged)
@@ -1048,8 +1159,9 @@ impl GacerEngine {
         let specs = self.serving_specs()?;
         let variants = self.family_variants()?;
         let placement = &self.sharded.placement;
-        let mut per_device = Vec::with_capacity(self.n_devices);
-        for d in 0..self.n_devices {
+        let n_devices = self.pool.len();
+        let mut per_device = Vec::with_capacity(n_devices);
+        for d in 0..n_devices {
             let tenants = placement.select(&self.set.tenants, d);
             let dspecs = placement.select(&specs, d);
             let dvariants = placement.select(&variants, d);
@@ -1068,7 +1180,11 @@ impl GacerEngine {
                 })
             })
             .collect::<Result<_>>()?;
-        Ok(ShardedDeployment { per_device, routing })
+        Ok(ShardedDeployment {
+            per_device,
+            routing,
+            device_ids: self.pool.ids(),
+        })
     }
 
     fn artifact_dir_str(&self) -> Result<String> {
@@ -1092,13 +1208,7 @@ impl GacerEngine {
     /// front-end — the sharded counterpart of [`GacerEngine::serve`].
     pub fn serve_cluster(&self) -> Result<ClusterServer> {
         let dir = self.artifact_dir_str()?;
-        let sharded = self.sharded_deployment()?;
-        let per_device = sharded
-            .per_device
-            .into_iter()
-            .map(|d| (d.tenants, d.config))
-            .collect();
-        ClusterServer::start(&dir, per_device, sharded.routing)
+        ClusterServer::start_sharded(&dir, self.sharded_deployment()?)
     }
 
     // ---- live re-deployment ----
@@ -1289,7 +1399,7 @@ impl GacerEngine {
     /// thresholds on.
     pub fn observed_device_loads(&self) -> Vec<f64> {
         let weights = self.observed_tenant_weights();
-        (0..self.n_devices)
+        (0..self.pool.len())
             .map(|d| {
                 self.sharded
                     .placement
@@ -1310,15 +1420,19 @@ impl GacerEngine {
     /// every other device's plan is left bit-identical. Pair with
     /// [`GacerEngine::redeploy_cluster`] to make the move live.
     ///
+    /// Both `to` and the returned origin are stable [`DeviceId`]s, not
+    /// dense indices — they keep meaning the same physical device across
+    /// [`GacerEngine::add_device`] / [`GacerEngine::remove_device`].
+    ///
     /// Returns the device the tenant came from.
-    pub fn migrate(&mut self, id: TenantId, to: usize) -> Result<usize> {
+    pub fn migrate(&mut self, id: TenantId, to: DeviceId) -> Result<DeviceId> {
         let slot = self.index_of(id)?;
-        if to >= self.n_devices {
-            return Err(Error::InvalidConfig(format!(
-                "cannot migrate {id} to device {to}: only {} devices",
-                self.n_devices
-            )));
-        }
+        let to = self.pool.index_of(to).ok_or_else(|| {
+            Error::InvalidConfig(format!(
+                "cannot migrate {id} to {to}: no such device in pool {}",
+                self.pool.label()
+            ))
+        })?;
         let (from, local) = self
             .sharded
             .placement
@@ -1326,7 +1440,8 @@ impl GacerEngine {
             .ok_or_else(|| Error::InvalidPlan(format!("tenant {id} has no device")))?;
         if from == to {
             return Err(Error::InvalidConfig(format!(
-                "tenant {id} is already on device {to}"
+                "tenant {id} is already on {}",
+                self.pool.id(to)
             )));
         }
         // Reshape: drop from the source shard, insert into the
@@ -1352,6 +1467,7 @@ impl GacerEngine {
             self.sharded.shards[to].clone(),
         ];
         let reports = ShardedSearch::new(&self.set, self.opts, self.search_cfg)
+            .pool(&self.pool)
             .budget(self.replan_budget)
             .research_devices_warm(
                 &self.sharded.placement,
@@ -1389,7 +1505,7 @@ impl GacerEngine {
         // fresh counter's full value instead of guessing from direction.
         self.served_window.forget(id.0);
         self.rebuild_merged();
-        Ok(from)
+        Ok(self.pool.id(from))
     }
 
     /// Consult a [`MigrationPolicy`] against the observed device loads
@@ -1407,6 +1523,7 @@ impl GacerEngine {
     /// ```
     /// use gacer::engine::{GacerEngine, MigrationPolicy};
     /// use gacer::models::zoo;
+    /// use gacer::profile::DeviceId;
     /// use gacer::search::SearchConfig;
     ///
     /// let quick = SearchConfig {
@@ -1438,7 +1555,7 @@ impl GacerEngine {
     /// }
     /// if busy.len() > 1 {
     ///     let m = engine.maybe_migrate(&MigrationPolicy::default()).unwrap().unwrap();
-    ///     assert_eq!((m.from, m.to), (0, 1));
+    ///     assert_eq!((m.from, m.to), (DeviceId(0), DeviceId(1)));
     ///     assert_eq!(engine.last_searched_devices(), &[0, 1]);
     /// }
     /// ```
@@ -1468,9 +1585,10 @@ impl GacerEngine {
         // until the next consultation.
         let suppressed = proposal.as_ref().is_some_and(|p| {
             let id = self.meta[p.slot].id;
+            let to_id = self.pool.id(p.to);
             self.cooldowns
                 .iter()
-                .any(|c| c.remaining > 0 && c.tenant == id && c.from == p.to)
+                .any(|c| c.remaining > 0 && c.tenant == id && c.from == to_id)
         });
         for c in &mut self.cooldowns {
             c.remaining = c.remaining.saturating_sub(1);
@@ -1483,15 +1601,16 @@ impl GacerEngine {
             return Ok(None);
         }
         let id = self.meta[proposal.slot].id;
-        self.migrate(id, proposal.to)?;
+        let (from_id, to_id) = (self.pool.id(proposal.from), self.pool.id(proposal.to));
+        self.migrate(id, to_id)?;
         if policy.cooldown_windows > 0 {
             self.cooldowns.push(Cooldown {
                 tenant: id,
-                from: proposal.from,
+                from: from_id,
                 remaining: policy.cooldown_windows,
             });
         }
-        Ok(Some(Migration { tenant: id, from: proposal.from, to: proposal.to }))
+        Ok(Some(Migration { tenant: id, from: from_id, to: to_id }))
     }
 
     /// The SLO-aware regulation step: treat **sustained** error-budget
@@ -1540,21 +1659,22 @@ impl GacerEngine {
             .device_of(slot)
             .ok_or_else(|| Error::InvalidPlan(format!("tenant {id} has no device")))?;
         let crowded = self.sharded.placement.tenants_on(from).len() > 1;
-        let action = if self.n_devices > 1 && crowded {
+        let action = if self.pool.len() > 1 && crowded {
             let loads = self.observed_device_loads();
-            let to = (0..self.n_devices)
+            let to = (0..self.pool.len())
                 .filter(|&d| d != from)
                 .min_by(|&a, &b| {
                     loads[a]
                         .partial_cmp(&loads[b])
                         .unwrap_or(std::cmp::Ordering::Equal)
                 })
-                .expect("n_devices > 1 leaves at least one other device");
-            self.migrate(id, to)?;
-            RegulationAction::Migrated(Migration { tenant: id, from, to })
+                .expect("a multi-device pool leaves at least one other device");
+            let (from_id, to_id) = (self.pool.id(from), self.pool.id(to));
+            self.migrate(id, to_id)?;
+            RegulationAction::Migrated(Migration { tenant: id, from: from_id, to: to_id })
         } else {
             self.research_shard(from)?;
-            RegulationAction::Resharded { device: from }
+            RegulationAction::Resharded { device: self.pool.id(from) }
         };
         // Restart the acted-on tenant's burn history: the new plan gets a
         // clean slate, so one sustained burn triggers one action.
@@ -1563,6 +1683,142 @@ impl GacerEngine {
             self.slo_monitor.track(key, tier, t)?;
         }
         Ok(Some(action))
+    }
+
+    // ---- elastic pool operations ----
+
+    /// Scale-out: join a new device to the pool and re-shard onto it.
+    ///
+    /// The device gets a fresh stable [`DeviceId`] (monotonic, never
+    /// reused even after a later [`GacerEngine::remove_device`]) and its
+    /// own [`Platform`] cost model — joining a T4 to an A100 pool is
+    /// first-class, not a special case. The whole set is then re-planned
+    /// ([`GacerEngine::replan`]) so placement can exploit the new
+    /// capacity; pair with [`GacerEngine::redeploy_cluster`] to fence the
+    /// expanded plan onto a running cluster (the joined device's server
+    /// starts on apply, and the routing table swap is epoch-fenced so no
+    /// in-flight request is lost).
+    pub fn add_device(&mut self, platform: Platform) -> DeviceId {
+        let id = self.pool.add(platform);
+        self.replan();
+        id
+    }
+
+    /// Scale-in: drain every tenant off device `id`, then retire it from
+    /// the pool.
+    ///
+    /// The drain is planned **before any mutation**: each resident is
+    /// assigned to the capacity-feasible survivor with the most free HBM
+    /// (deterministic greedy, largest-remaining-headroom first). If some
+    /// resident fits on no survivor — or `id` is the last device — the
+    /// call fails with [`Error::DrainImpossible`] and the engine is left
+    /// exactly as it was. On success each destination shard is
+    /// incrementally re-searched (seeded, budget-bounded, like
+    /// [`GacerEngine::migrate`]) and the executed [`Migration`]s are
+    /// returned with stable [`DeviceId`]s; pair with
+    /// [`GacerEngine::redeploy_cluster`] to retire the device's server
+    /// and fence the shrunk routing table onto a running cluster.
+    ///
+    /// Dense indices of later devices shift down by one; [`DeviceId`]s
+    /// of the survivors do not change — address devices by id across
+    /// scale events.
+    pub fn remove_device(&mut self, id: DeviceId) -> Result<Vec<Migration>> {
+        let d = self.pool.index_of(id).ok_or_else(|| {
+            Error::InvalidConfig(format!(
+                "cannot remove {id}: no such device in pool {}",
+                self.pool.label()
+            ))
+        })?;
+        if self.pool.len() == 1 {
+            return Err(Error::DrainImpossible(format!(
+                "{id} is the last device in the pool; nowhere to drain its tenants"
+            )));
+        }
+        // Plan the whole drain first: destination = feasible survivor
+        // with the most remaining free HBM, accounting for the tenants
+        // already re-homed ahead of this one. Any infeasibility aborts
+        // before the engine mutates.
+        let residents: Vec<usize> = self.sharded.placement.tenants_on(d).to_vec();
+        let usage = self.sharded.placement.hbm_usage(&self.set);
+        let mut free: Vec<f64> = (0..self.pool.len())
+            .map(|s| self.pool.platform(s).hbm_bytes() - usage[s])
+            .collect();
+        let mut planned: Vec<(usize, usize)> = Vec::with_capacity(residents.len());
+        for &slot in &residents {
+            let footprint = self.set.hbm_footprint(slot, None);
+            let dest = (0..self.pool.len())
+                .filter(|&s| s != d && free[s] >= footprint)
+                .max_by(|&a, &b| {
+                    free[a].partial_cmp(&free[b]).unwrap_or(std::cmp::Ordering::Equal)
+                });
+            let Some(dest) = dest else {
+                let best = (0..self.pool.len())
+                    .filter(|&s| s != d)
+                    .map(|s| free[s])
+                    .fold(f64::NEG_INFINITY, f64::max);
+                let tenant = self.meta[slot].id;
+                return Err(Error::DrainImpossible(format!(
+                    "draining {id} ({}): tenant {tenant} needs {:.2} GB HBM but the \
+                     roomiest survivor has only {:.2} GB free; pool left unchanged",
+                    self.pool.platform(d).name,
+                    footprint / 1e9,
+                    best / 1e9,
+                )));
+            };
+            free[dest] -= footprint;
+            planned.push((slot, dest));
+        }
+        // Execute: empty the retiring shard (reverse local order keeps
+        // the remaining local indices stable), re-home each resident at
+        // the position its global slot sorts to, then compact the device
+        // axis everywhere it is mirrored.
+        for local in (0..residents.len()).rev() {
+            self.sharded.shards[d].remove_tenant(local);
+        }
+        let mut migrations = Vec::with_capacity(planned.len());
+        for &(slot, dest) in &planned {
+            self.sharded.placement.move_slot(slot, dest);
+            let dest_local = self
+                .sharded
+                .placement
+                .tenants_on(dest)
+                .iter()
+                .position(|&s| s == slot)
+                .expect("slot was just placed on the destination");
+            let level = self.sharded.shards[dest].pointers.pointers_per_tenant();
+            let dfg_len = self.set.tenants[slot].len();
+            self.sharded.shards[dest].insert_tenant(dest_local, dfg_len, level);
+            let tenant = self.meta[slot].id;
+            // The tenant's server-side counter restarts on its new
+            // device — same baseline reset as `migrate`.
+            self.served_window.forget(tenant.0);
+            migrations.push(Migration { tenant, from: id, to: self.pool.id(dest) });
+        }
+        self.cooldowns.retain(|c| c.from != id);
+        self.pool.remove(d);
+        let _ = self.sharded.placement.remove_device(d);
+        self.sharded.shards.remove(d);
+        self.reports.remove(d);
+        self.search_states.remove(d);
+        // Seeded re-search of every destination shard, addressed at its
+        // post-compaction dense index.
+        let mut dests: Vec<usize> = planned
+            .iter()
+            .map(|&(_, dest)| if dest > d { dest - 1 } else { dest })
+            .collect();
+        dests.sort_unstable();
+        dests.dedup();
+        for &dest in &dests {
+            self.research_shard(dest)?;
+        }
+        if dests.is_empty() {
+            self.rebuild_merged();
+            self.last_searched_device = None;
+            self.last_searched_devices = Vec::new();
+        } else {
+            self.last_searched_devices = dests;
+        }
+        Ok(migrations)
     }
 }
 
@@ -1577,8 +1833,8 @@ pub enum RegulationAction {
     /// The burning tenant's shard was incrementally re-searched in place
     /// (it was alone on its device, or the engine is single-device).
     Resharded {
-        /// The re-searched device.
-        device: usize,
+        /// The re-searched device (stable id, not a dense index).
+        device: DeviceId,
     },
 }
 
@@ -1847,16 +2103,18 @@ mod tests {
         let ids = engine.tenant_ids();
         let from = engine.device_of(ids[0]).unwrap();
         let to = 1 - from;
-        assert_eq!(engine.migrate(ids[0], to).unwrap(), from);
+        let (from_id, to_id) =
+            (engine.device_pool().id(from), engine.device_pool().id(to));
+        assert_eq!(engine.migrate(ids[0], to_id).unwrap(), from_id);
         // Same id, same global slot, new device.
         assert_eq!(engine.device_of(ids[0]).unwrap(), to);
         assert_eq!(engine.tenant_ids(), ids, "migration never compacts slots");
         assert_eq!(engine.last_searched_devices(), &[from, to]);
         engine.sharded_plan().validate(engine.tenants()).unwrap();
         engine.plan().validate(engine.tenants()).unwrap();
-        // Migrating to the same device or out of range is rejected.
-        assert!(engine.migrate(ids[0], to).is_err());
-        assert!(engine.migrate(ids[0], 7).is_err());
+        // Migrating to the same device or to an unknown id is rejected.
+        assert!(engine.migrate(ids[0], to_id).is_err());
+        assert!(engine.migrate(ids[0], DeviceId(7)).is_err());
     }
 
     #[test]
@@ -1890,9 +2148,9 @@ mod tests {
             .maybe_migrate(&MigrationPolicy::default())
             .unwrap()
             .expect("fully skewed load must trigger a migration");
-        assert_eq!(m.from, hot_device);
+        assert_eq!(m.from, engine.device_pool().id(hot_device));
         assert!(hot.contains(&m.tenant));
-        assert_eq!(engine.device_of(m.tenant).unwrap(), m.to);
+        assert_eq!(engine.device_id_of(m.tenant).unwrap(), m.to);
         engine.sharded_plan().validate(engine.tenants()).unwrap();
         // A fresh window forgets the skew.
         engine.reset_demand();
@@ -1921,7 +2179,7 @@ mod tests {
             engine.record_requests(ids[c], 1_000).unwrap();
         }
         let m1 = engine.maybe_migrate(policy).unwrap().expect("skew migrates");
-        assert_eq!((m1.from, m1.to), (0, 1));
+        assert_eq!((m1.from, m1.to), (DeviceId(0), DeviceId(1)));
         assert_eq!(m1.tenant, ids[hot[1]]);
 
         // Invert the skew so moving m1.tenant back to device 0 is the
@@ -1947,7 +2205,7 @@ mod tests {
         // Window 1: the reverse move is proposed but suppressed by the
         // cooldown — the tenant stays put for this window.
         assert!(engine.maybe_migrate(&policy).unwrap().is_none());
-        assert_eq!(engine.device_of(m1.tenant).unwrap(), m1.to);
+        assert_eq!(engine.device_id_of(m1.tenant).unwrap(), m1.to);
         // Window 2: the skew persisted past the cooldown — now the move
         // is real load drift, not thrash, and it executes.
         let m2 = engine.maybe_migrate(&policy).unwrap().expect("cooldown expired");
@@ -2047,7 +2305,7 @@ mod tests {
             payback_windows: 1.0,
         });
         let m = engine.maybe_migrate(&free).unwrap().expect("skew migrates");
-        assert_eq!(m.from, 0);
+        assert_eq!(m.from, DeviceId(0));
         engine.sharded_plan().validate(engine.tenants()).unwrap();
     }
 
@@ -2320,7 +2578,7 @@ mod tests {
             .build()
             .unwrap();
         let id = engine.tenant_ids()[0];
-        let from = engine.device_of(id).unwrap();
+        let from = engine.device_id_of(id).unwrap();
         // No burn, no skew: nothing to regulate.
         let policy = MigrationPolicy::default();
         assert!(engine.maybe_regulate(&policy).unwrap().is_none());
@@ -2339,7 +2597,7 @@ mod tests {
             RegulationAction::Migrated(m) => {
                 assert_eq!(m.tenant, id);
                 assert_eq!(m.from, from);
-                assert_eq!(engine.device_of(id).unwrap(), m.to);
+                assert_eq!(engine.device_id_of(id).unwrap(), m.to);
             }
             RegulationAction::Resharded { device } => assert_eq!(device, from),
         }
@@ -2412,5 +2670,97 @@ mod tests {
         whole.insert(0, vec![8]);
         assert_eq!(modal_chunk(&whole), None);
         assert_eq!(modal_chunk(&ChunkMap::new()), None);
+    }
+
+    #[test]
+    fn device_pool_builder_sets_reference_platform_and_ids() {
+        let mut b = GacerEngine::builder()
+            .device_pool(vec![Platform::a100(), Platform::t4()])
+            .search(quick_cfg());
+        for n in ["Alex", "V16", "R18"] {
+            b = b.tenant(zoo::build_default(n).unwrap());
+        }
+        let engine = b.build().unwrap();
+        assert_eq!(engine.n_devices(), 2);
+        // The reference platform is the first pool entry.
+        assert_eq!(*engine.platform(), Platform::a100());
+        assert_eq!(engine.device_pool().label(), "A100+T4");
+        assert_eq!(engine.device_ids(), vec![DeviceId(0), DeviceId(1)]);
+        engine.sharded_plan().validate(engine.tenants()).unwrap();
+        let dep = engine.sharded_deployment();
+        // No artifacts in unit tests: deployment lowering needs them, but
+        // the placement itself must already cover every slot.
+        assert!(dep.is_err() || dep.unwrap().device_ids.len() == 2);
+    }
+
+    #[test]
+    fn uniform_device_pool_matches_devices_sugar() {
+        let pooled = {
+            let mut b = GacerEngine::builder()
+                .device_pool(vec![Platform::titan_v(); 2])
+                .search(quick_cfg());
+            for n in ["Alex", "V16", "R18"] {
+                b = b.tenant(zoo::build_default(n).unwrap());
+            }
+            b.build().unwrap()
+        };
+        let sugared = demo_sharded(&["Alex", "V16", "R18"], 2);
+        assert_eq!(pooled.sharded_plan(), sugared.sharded_plan());
+        assert_eq!(
+            pooled.simulate().makespan_us,
+            sugared.simulate().makespan_us
+        );
+    }
+
+    #[test]
+    fn add_device_expands_pool_and_replans() {
+        let mut engine = demo_sharded(&["Alex", "V16", "R18", "M3"], 2);
+        let joined = engine.add_device(Platform::t4());
+        assert_eq!(joined, DeviceId(2), "ids are assigned monotonically");
+        assert_eq!(engine.n_devices(), 3);
+        assert_eq!(
+            engine.device_ids(),
+            vec![DeviceId(0), DeviceId(1), DeviceId(2)]
+        );
+        engine.sharded_plan().validate(engine.tenants()).unwrap();
+        engine.plan().validate(engine.tenants()).unwrap();
+    }
+
+    #[test]
+    fn remove_device_drains_tenants_to_survivors() {
+        let mut engine = demo_sharded(&["Alex", "V16", "R18", "M3"], 3);
+        let ids = engine.tenant_ids();
+        let retire = DeviceId(2);
+        let resident_count = engine.placement().tenants_on(2).len();
+        let migrations = engine.remove_device(retire).unwrap();
+        assert_eq!(migrations.len(), resident_count);
+        for m in &migrations {
+            assert_eq!(m.from, retire);
+            assert_ne!(m.to, retire);
+            // The tenant landed where the migration says it did.
+            assert_eq!(engine.device_id_of(m.tenant).unwrap(), m.to);
+        }
+        assert_eq!(engine.n_devices(), 2);
+        // Survivor ids are untouched; the retired id is gone for good.
+        assert_eq!(engine.device_ids(), vec![DeviceId(0), DeviceId(1)]);
+        assert_eq!(engine.tenant_ids(), ids, "drain never compacts slots");
+        engine.sharded_plan().validate(engine.tenants()).unwrap();
+        engine.plan().validate(engine.tenants()).unwrap();
+        // Removing an unknown (already retired) id is a config error...
+        assert!(matches!(
+            engine.remove_device(retire),
+            Err(Error::InvalidConfig(_))
+        ));
+        // ...and ids are never reused: the next join continues the count.
+        assert_eq!(engine.add_device(Platform::titan_v()), DeviceId(3));
+    }
+
+    #[test]
+    fn remove_last_device_is_drain_impossible() {
+        let mut engine = demo_engine(&["Alex"]);
+        let err = engine.remove_device(DeviceId(0)).unwrap_err();
+        assert!(matches!(err, Error::DrainImpossible(_)));
+        assert_eq!(engine.n_devices(), 1, "pool left unchanged");
+        engine.plan().validate(engine.tenants()).unwrap();
     }
 }

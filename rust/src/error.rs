@@ -55,6 +55,12 @@ pub enum Error {
     /// activations), even if it would fit by compute. The message names
     /// the tenant, its footprint, and the tightest device's free bytes.
     MemoryCapacity(String),
+    /// Scale-in refused: draining the device would leave at least one of
+    /// its resident tenants with no capacity-feasible surviving device
+    /// (every survivor's free HBM is smaller than the tenant's resident
+    /// footprint). The pool is left exactly as it was — the operator can
+    /// evict tenants, add capacity, or retry; see docs/OPERATIONS.md.
+    DrainImpossible(String),
     /// Filesystem failure (artifact/param loading, spawn).
     Io(std::io::Error),
 }
@@ -78,6 +84,7 @@ impl fmt::Display for Error {
             Error::Overloaded(m) => write!(f, "overloaded: {m}"),
             Error::DeadlineExceeded(m) => write!(f, "deadline exceeded: {m}"),
             Error::MemoryCapacity(m) => write!(f, "memory capacity: {m}"),
+            Error::DrainImpossible(m) => write!(f, "drain impossible: {m}"),
             Error::Io(e) => write!(f, "io: {e}"),
         }
     }
@@ -143,6 +150,17 @@ mod tests {
         let s = e.to_string();
         assert!(s.contains("memory capacity"));
         assert!(s.contains("14.4 GB"));
+    }
+
+    #[test]
+    fn drain_impossible_is_matchable_and_descriptive() {
+        let e = Error::DrainImpossible(
+            "device gpu1: tenant big (14.4 GB) fits no surviving device".into(),
+        );
+        assert!(matches!(e, Error::DrainImpossible(_)));
+        let s = e.to_string();
+        assert!(s.contains("drain impossible"));
+        assert!(s.contains("gpu1"));
     }
 
     #[test]

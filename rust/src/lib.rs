@@ -84,7 +84,7 @@ pub mod prelude {
     pub use crate::plan::{
         DeploymentPlan, Placement, PlacementObjective, ShardedDeploymentPlan, TenantSet,
     };
-    pub use crate::profile::{CostModel, Platform};
+    pub use crate::profile::{CostModel, DeviceId, DevicePool, Platform};
     pub use crate::search::{
         GacerSearch, SearchBudget, SearchConfig, SearchReport, SearchState,
         ShardedSearch, ShardedSearchReport,

@@ -63,7 +63,11 @@ const USAGE: &str = "usage: gacer <simulate|search|serve|loadtest> [options]
   --devices N   shard the deployment across N devices: tenants are placed
                 by cost-model bin-packing, each device is searched
                 independently, and serving runs one coordinator per device
-                behind a placement-routing front-end (default 1)
+                behind a placement-routing front-end (default 1). Under
+                `serve`, also accepts a heterogeneous pool spec — a comma
+                list of platform names with optional xN repeats, e.g.
+                `--devices a100,t4x2` — and each device is then costed and
+                searched against its own platform
   --placement balanced|interference|memory
                 placement objective for the device dimension: 'balanced'
                 equalizes summed serial latency (LPT); 'interference'
@@ -106,9 +110,29 @@ fn parse_models(s: &str) -> Vec<String> {
 
 fn platform_or_exit(name: &str) -> Platform {
     Platform::by_name(name).unwrap_or_else(|| {
-        eprintln!("unknown platform {name}; expected TitanV|P6000|1080Ti");
+        eprintln!("unknown platform {name}; expected TitanV|P6000|1080Ti|A100|T4");
         std::process::exit(2);
     })
+}
+
+/// `--devices` accepts either a plain count (`--devices 2`: that many
+/// copies of `--platform`) or a heterogeneous pool spec
+/// (`--devices a100,t4x2`: per-device platforms, see
+/// [`gacer::profile::DevicePool::parse_spec`]). Returns
+/// `(count, explicit platforms)` — the platform list is empty for a
+/// plain count.
+fn devices_or_exit(args: &Args) -> (usize, Vec<Platform>) {
+    let spec = args.opt_or("devices", "1");
+    if let Ok(n) = spec.parse::<usize>() {
+        return (n.max(1), Vec::new());
+    }
+    match gacer::profile::DevicePool::parse_spec(spec) {
+        Ok(platforms) => (platforms.len(), platforms),
+        Err(e) => {
+            eprintln!("--devices expects a count or a pool spec like a100,t4x2: {e}");
+            std::process::exit(2);
+        }
+    }
 }
 
 fn placement_or_exit(name: &str) -> PlacementObjective {
@@ -261,9 +285,11 @@ fn main() -> gacer::Result<()> {
         "serve" => {
             let artifacts = args.opt_or("artifacts", "artifacts").to_string();
             let tenants = parse_models(args.opt_or("tenants", "tiny_cnn,tiny_cnn,tiny_cnn"));
+            let (n_devices, device_pool) = devices_or_exit(&args);
             let opts = ServeOptions {
                 n_requests: args.opt_usize("requests", 64),
-                n_devices: args.opt_usize("devices", 1).max(1),
+                n_devices,
+                device_pool,
                 objective: placement_or_exit(args.opt_or("placement", "balanced")),
                 live_admit: args.opt("live-admit").map(String::from),
                 replan_budget: replan_budget(&args),

@@ -6,14 +6,28 @@ use std::time::Duration;
 
 /// Max/min device-load ratio — the imbalance measure
 /// [`crate::engine::MigrationPolicy`] thresholds on. `1.0` for an empty
-/// or all-idle cluster (nothing to balance), `f64::INFINITY` when some
-/// device carries load while another sits idle.
+/// or all-idle cluster (nothing to balance).
+///
+/// **Idle devices are excluded from the minimum.** A device with zero
+/// observed load — freshly scaled out, just drained for removal, or
+/// simply unassigned — used to drive the ratio to `f64::INFINITY`, which
+/// exceeds every threshold and fired the migration policy on every
+/// observe window even when the *loaded* devices were perfectly
+/// balanced. The ratio now measures skew among devices that actually
+/// carry load; with fewer than two loaded devices there is no skew to
+/// measure and the ratio is `1.0`. (Elastic scale-out does not rely on
+/// the infinity: [`crate::engine::GacerEngine::add_device`] re-shards
+/// the placement onto the grown pool directly, and a genuinely skewed
+/// loaded cluster still prefers an idle device as the migration
+/// destination.)
 ///
 /// ```
 /// use gacer::metrics::imbalance_ratio;
 ///
 /// assert_eq!(imbalance_ratio(&[4.0, 2.0]), 2.0);
-/// assert_eq!(imbalance_ratio(&[3.0, 0.0]), f64::INFINITY);
+/// // An idle device no longer makes balanced load look infinitely skewed.
+/// assert_eq!(imbalance_ratio(&[3.0, 0.0]), 1.0);
+/// assert_eq!(imbalance_ratio(&[12.0, 2.0, 0.0]), 6.0);
 /// assert_eq!(imbalance_ratio(&[0.0, 0.0]), 1.0);
 /// assert_eq!(imbalance_ratio(&[]), 1.0);
 /// ```
@@ -22,12 +36,12 @@ pub fn imbalance_ratio(loads: &[f64]) -> f64 {
     if loads.is_empty() || max <= 0.0 {
         return 1.0;
     }
-    let min = loads.iter().copied().fold(f64::INFINITY, f64::min);
-    if min <= 0.0 {
-        f64::INFINITY
-    } else {
-        max / min
-    }
+    let min_loaded = loads
+        .iter()
+        .copied()
+        .filter(|&l| l > 0.0)
+        .fold(f64::INFINITY, f64::min);
+    max / min_loaded
 }
 
 /// Delta extractor over cumulative per-slot counters (e.g.
@@ -465,6 +479,20 @@ mod tests {
     #[should_panic(expected = "capacity must be >= 1")]
     fn zero_capacity_is_rejected() {
         LatencyHistogram::with_cap(0);
+    }
+
+    #[test]
+    fn imbalance_ignores_idle_devices() {
+        // Regression (elastic pools): a fresh scale-out or a drained
+        // device observes zero load; the ratio must stay finite so the
+        // migration threshold keeps meaning "skew among loaded devices",
+        // not "any idle device exists".
+        assert_eq!(imbalance_ratio(&[1.0, 1.0, 0.0]), 1.0);
+        assert_eq!(imbalance_ratio(&[12.0, 2.0, 0.0]), 6.0);
+        assert_eq!(imbalance_ratio(&[5.0, 0.0, 0.0]), 1.0);
+        assert!(imbalance_ratio(&[9.0, 3.0, 0.0]).is_finite());
+        // No zeros: classic max/min is unchanged.
+        assert_eq!(imbalance_ratio(&[4.0, 2.0]), 2.0);
     }
 
     #[test]

@@ -41,7 +41,7 @@ use std::collections::BTreeMap;
 use crate::dfg::{Dfg, OpId, OpKind};
 use crate::error::{Error, Result};
 use crate::gpu::{SimOp, SimStage};
-use crate::profile::CostModel;
+use crate::profile::{CostModel, DevicePool};
 use crate::temporal::PointerMatrix;
 
 /// Per-tenant batch-decomposition choices: `op id -> list_B` (Eq. 5).
@@ -265,15 +265,23 @@ struct InterferenceCtx {
 type ExtraTenant<'a> = (f64, &'a [f64], &'a [f64]);
 
 impl InterferenceCtx {
-    /// Occupancy-only scoring (the `InterferenceAware` objective).
+    /// Occupancy-only scoring (the `InterferenceAware` objective),
+    /// priced with the set's own cost model.
     fn new(set: &TenantSet) -> Self {
+        Self::new_with(set, &set.cost)
+    }
+
+    /// Occupancy-only scoring priced with an explicit (per-device) cost
+    /// model — a T4's context weighs and profiles the same tenants
+    /// differently than an A100's.
+    fn new_with(set: &TenantSet, cost: &CostModel) -> Self {
         InterferenceCtx {
             weights: set
                 .tenants
                 .iter()
-                .map(|d| set.cost.sequential_latency_us(d))
+                .map(|d| cost.sequential_latency_us(d))
                 .collect(),
-            profiles: set.tenants.iter().map(|d| set.cost.occupancy_profile(d)).collect(),
+            profiles: set.tenants.iter().map(|d| cost.occupancy_profile(d)).collect(),
             mem_profiles: Vec::new(),
             footprints: Vec::new(),
             capacity: f64::INFINITY,
@@ -281,13 +289,19 @@ impl InterferenceCtx {
     }
 
     /// Two-dimensional roofline scoring with HBM capacity enforcement
-    /// (the `MemoryAware` objective).
+    /// (the `MemoryAware` objective), priced with the set's cost model.
     fn roofline(set: &TenantSet) -> Self {
-        let mut ctx = Self::new(set);
+        Self::roofline_with(set, &set.cost)
+    }
+
+    /// Roofline scoring priced with an explicit (per-device) cost model;
+    /// the HBM capacity is that model's platform capacity.
+    fn roofline_with(set: &TenantSet, cost: &CostModel) -> Self {
+        let mut ctx = Self::new_with(set, cost);
         ctx.mem_profiles =
-            set.tenants.iter().map(|d| set.cost.bandwidth_profile(d)).collect();
+            set.tenants.iter().map(|d| cost.bandwidth_profile(d)).collect();
         ctx.footprints = (0..set.len()).map(|s| set.hbm_footprint(s, None)).collect();
-        ctx.capacity = set.cost.platform.hbm_bytes();
+        ctx.capacity = cost.platform.hbm_bytes();
         ctx
     }
 
@@ -349,10 +363,18 @@ const REFINE_PASSES: usize = 16;
 /// strictly lowers the max per-device interference score. Scans in
 /// ascending slot/device order with first-wins ties, so the result is
 /// deterministic.
-fn refine_interference(ctx: &InterferenceCtx, assignments: &mut [Vec<usize>]) {
+///
+/// `ctxs` holds one scoring context per device. A homogeneous caller
+/// passes the same context reference `n` times, which makes this
+/// *exactly* the single-context refinement (same floats, same ties); a
+/// heterogeneous caller passes per-device contexts so every candidate
+/// move is scored — and capacity-checked — against the destination
+/// device's own cost model.
+fn refine_interference(ctxs: &[&InterferenceCtx], assignments: &mut [Vec<usize>]) {
     let n_devices = assignments.len();
     for _ in 0..REFINE_PASSES {
-        let scores: Vec<f64> = assignments.iter().map(|a| ctx.score(a)).collect();
+        let scores: Vec<f64> =
+            assignments.iter().enumerate().map(|(d, a)| ctxs[d].score(a)).collect();
         let bottleneck = (0..n_devices)
             .reduce(|a, b| if scores[b] > scores[a] { b } else { a })
             .unwrap_or(0);
@@ -367,8 +389,9 @@ fn refine_interference(ctx: &InterferenceCtx, assignments: &mut [Vec<usize>]) {
                 .copied()
                 .filter(|&s| s != slot)
                 .collect();
-            let src_score = ctx.score(&remaining);
+            let src_score = ctxs[bottleneck].score(&remaining);
             for to in (0..n_devices).filter(|&t| t != bottleneck) {
+                let ctx = ctxs[to];
                 if !ctx.fits(&assignments[to], ctx.slot_footprint(slot)) {
                     continue;
                 }
@@ -504,7 +527,8 @@ impl Placement {
     /// When no co-location overflows the pool, every slowdown is 1.0 and
     /// this reduces to load balancing.
     pub fn interference_aware(set: &TenantSet, n_devices: usize) -> Self {
-        Self::min_max_greedy(set, n_devices, &InterferenceCtx::new(set))
+        let ctx = InterferenceCtx::new(set);
+        Self::min_max_greedy(set, &vec![&ctx; n_devices.max(1)])
     }
 
     /// Memory-aware placement: same greedy + refinement as
@@ -518,32 +542,45 @@ impl Placement {
     /// [`Placement::fit_memory_aware`], which returns
     /// [`Error::MemoryCapacity`]).
     pub fn memory_aware(set: &TenantSet, n_devices: usize) -> Self {
-        Self::min_max_greedy(set, n_devices, &InterferenceCtx::roofline(set))
+        let ctx = InterferenceCtx::roofline(set);
+        Self::min_max_greedy(set, &vec![&ctx; n_devices.max(1)])
     }
 
     /// Shared greedy min-max seeding + local refinement for the two
-    /// interference objectives; the `ctx` decides the slowdown model and
-    /// whether HBM capacity constrains candidate devices.
-    fn min_max_greedy(set: &TenantSet, n_devices: usize, ctx: &InterferenceCtx) -> Self {
-        let n_devices = n_devices.max(1);
+    /// interference objectives; `ctxs` (one per device — homogeneous
+    /// callers repeat one shared reference) decide the slowdown model
+    /// and whether HBM capacity constrains candidate devices.
+    ///
+    /// Slots are seeded in decreasing weight order; a slot's ordering
+    /// weight is its **max across devices** (on a uniform pool this is
+    /// bit-for-bit the single-device weight, so the homogeneous path is
+    /// unchanged; on a mixed pool the pessimistic size keeps LPT's
+    /// big-rocks-first property however the devices price them).
+    fn min_max_greedy(set: &TenantSet, ctxs: &[&InterferenceCtx]) -> Self {
+        let n_devices = ctxs.len();
+        let order_weight = |s: usize| {
+            ctxs.iter().map(|c| c.weights[s]).fold(f64::NEG_INFINITY, f64::max)
+        };
         let mut order: Vec<usize> = (0..set.len()).collect();
         order.sort_by(|&a, &b| {
-            ctx.weights[b]
-                .partial_cmp(&ctx.weights[a])
+            order_weight(b)
+                .partial_cmp(&order_weight(a))
                 .unwrap_or(std::cmp::Ordering::Equal)
                 .then(a.cmp(&b))
         });
         let mut assignments: Vec<Vec<usize>> = vec![Vec::new(); n_devices];
         let mut scores = vec![0.0f64; n_devices];
         for slot in order {
-            let footprint = ctx.slot_footprint(slot);
-            let any_fits =
-                assignments.iter().any(|a| ctx.fits(a, footprint));
+            let any_fits = assignments
+                .iter()
+                .enumerate()
+                .any(|(d, a)| ctxs[d].fits(a, ctxs[d].slot_footprint(slot)));
             let mut best: Option<(f64, f64, usize)> = None;
             for (d, a) in assignments.iter().enumerate() {
+                let ctx = ctxs[d];
                 // Capacity constraint: skip devices the slot cannot fit
                 // on, unless no device fits (best-effort construction).
-                if any_fits && !ctx.fits(a, footprint) {
+                if any_fits && !ctx.fits(a, ctx.slot_footprint(slot)) {
                     continue;
                 }
                 let mut trial = a.clone();
@@ -569,8 +606,97 @@ impl Placement {
             assignments[device].push(slot);
             scores[device] = score;
         }
-        refine_interference(ctx, &mut assignments);
+        refine_interference(ctxs, &mut assignments);
         Self::from_assignments(assignments)
+    }
+
+    /// Pool-aware [`Placement::balanced`]: LPT on **per-device** serial
+    /// latencies. Every tenant is priced by each device's own cost model
+    /// and greedily assigned to the device whose *resulting* load (its
+    /// current load plus the tenant **at that device's speed**) is
+    /// smallest — so an A100 absorbs proportionally more work than a T4
+    /// beside it. On a uniform pool matching the set's cost model this
+    /// delegates to the classic homogeneous path bit-for-bit.
+    pub fn balanced_pool(set: &TenantSet, pool: &DevicePool) -> Self {
+        if pool.is_uniform() && *pool.platform(0) == set.cost.platform {
+            return Self::balanced(set, pool.len());
+        }
+        let n_devices = pool.len();
+        let weights: Vec<Vec<f64>> = (0..n_devices)
+            .map(|d| {
+                set.tenants
+                    .iter()
+                    .map(|t| pool.cost(d).sequential_latency_us(t))
+                    .collect()
+            })
+            .collect();
+        let order_weight = |s: usize| {
+            weights.iter().map(|w| w[s]).fold(f64::NEG_INFINITY, f64::max)
+        };
+        let mut order: Vec<usize> = (0..set.len()).collect();
+        order.sort_by(|&a, &b| {
+            order_weight(b)
+                .partial_cmp(&order_weight(a))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut assignments = vec![Vec::new(); n_devices];
+        let mut loads = vec![0.0f64; n_devices];
+        for slot in order {
+            let device = (0..n_devices)
+                .min_by(|&a, &b| {
+                    (loads[a] + weights[a][slot])
+                        .partial_cmp(&(loads[b] + weights[b][slot]))
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .unwrap();
+            assignments[device].push(slot);
+            loads[device] += weights[device][slot];
+        }
+        Self::from_assignments(assignments)
+    }
+
+    /// Pool-aware [`Placement::interference_aware`]: each device scores
+    /// candidate groups with its **own** occupancy curves and serial
+    /// latencies, so a group that overflows a T4's 40-SM pool is priced
+    /// as interfering there even though an A100 would absorb it.
+    pub fn interference_aware_pool(set: &TenantSet, pool: &DevicePool) -> Self {
+        if pool.is_uniform() && *pool.platform(0) == set.cost.platform {
+            return Self::interference_aware(set, pool.len());
+        }
+        let ctxs: Vec<InterferenceCtx> =
+            (0..pool.len()).map(|d| InterferenceCtx::new_with(set, pool.cost(d))).collect();
+        Self::min_max_greedy(set, &ctxs.iter().collect::<Vec<_>>())
+    }
+
+    /// Pool-aware [`Placement::memory_aware`]: per-device roofline
+    /// scoring **and per-device HBM capacity** — a 16 GB T4 refuses
+    /// groups its own capacity cannot hold even when the pool's A100s
+    /// could.
+    pub fn memory_aware_pool(set: &TenantSet, pool: &DevicePool) -> Self {
+        if pool.is_uniform() && *pool.platform(0) == set.cost.platform {
+            return Self::memory_aware(set, pool.len());
+        }
+        let ctxs: Vec<InterferenceCtx> = (0..pool.len())
+            .map(|d| InterferenceCtx::roofline_with(set, pool.cost(d)))
+            .collect();
+        Self::min_max_greedy(set, &ctxs.iter().collect::<Vec<_>>())
+    }
+
+    /// Build a pool-aware placement under a caller-chosen objective —
+    /// the heterogeneous sibling of [`Placement::with_objective`].
+    pub fn with_objective_pool(
+        set: &TenantSet,
+        pool: &DevicePool,
+        objective: PlacementObjective,
+    ) -> Self {
+        match objective {
+            PlacementObjective::LoadBalance => Self::balanced_pool(set, pool),
+            PlacementObjective::InterferenceAware => {
+                Self::interference_aware_pool(set, pool)
+            }
+            PlacementObjective::MemoryAware => Self::memory_aware_pool(set, pool),
+        }
     }
 
     /// Number of devices (bins), including empty ones.
@@ -621,6 +747,20 @@ impl Placement {
             self.assign(slot, device);
         }
         Some(from)
+    }
+
+    /// Scale-out: append an empty device bin (the new device starts with
+    /// no tenants; a replan or migrations populate it).
+    pub fn push_device(&mut self) {
+        self.assignments.push(Vec::new());
+    }
+
+    /// Scale-in: drop the device at dense index `device`, returning the
+    /// global slots that were still placed on it (empty after a drain).
+    /// Later devices shift down by one — exactly mirroring
+    /// [`crate::profile::DevicePool::remove`]'s dense-index compaction.
+    pub fn remove_device(&mut self, device: usize) -> Vec<usize> {
+        self.assignments.remove(device)
     }
 
     /// Remove a global slot (eviction) and shift the later slots down —
@@ -810,6 +950,187 @@ impl Placement {
             }
         }
         Ok(best.expect("at least one device fits").0)
+    }
+
+    /// Pool-aware [`Placement::loads`]: each device's load is the summed
+    /// serial latency of its tenants **at that device's speed** (its own
+    /// cost model), so the same tenant contributes more load on a T4
+    /// than on an A100. These are device-local microseconds — already
+    /// normalized by device throughput, directly comparable across a
+    /// mixed pool.
+    pub fn loads_pool(&self, set: &TenantSet, pool: &DevicePool) -> Vec<f64> {
+        self.assignments
+            .iter()
+            .enumerate()
+            .map(|(d, a)| {
+                a.iter()
+                    .map(|&s| pool.cost(d).sequential_latency_us(&set.tenants[s]))
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Pool-aware [`Placement::least_loaded`]: the device where admitting
+    /// `newcomer` leaves the smallest resulting load, with both the
+    /// standing load and the newcomer priced by each device's own cost
+    /// model (ties break toward the lowest device index). On a uniform
+    /// pool the newcomer's weight is identical everywhere, so this picks
+    /// the same device as the homogeneous chooser.
+    pub fn least_loaded_pool(
+        &self,
+        set: &TenantSet,
+        pool: &DevicePool,
+        newcomer: &Dfg,
+    ) -> usize {
+        if pool.is_uniform() && *pool.platform(0) == set.cost.platform {
+            return self.least_loaded(set);
+        }
+        let loads = self.loads_pool(set, pool);
+        (0..self.n_devices())
+            .min_by(|&a, &b| {
+                (loads[a] + pool.cost(a).sequential_latency_us(newcomer))
+                    .partial_cmp(&(loads[b] + pool.cost(b).sequential_latency_us(newcomer)))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .unwrap_or(0)
+    }
+
+    /// Pool-aware [`Placement::least_interfering`]: the newcomer's
+    /// weight and occupancy timeline are re-priced per candidate device,
+    /// and every device's standing score uses its own context.
+    pub fn least_interfering_pool(
+        &self,
+        set: &TenantSet,
+        pool: &DevicePool,
+        newcomer: &Dfg,
+    ) -> usize {
+        if pool.is_uniform() && *pool.platform(0) == set.cost.platform {
+            return self.least_interfering(set, newcomer);
+        }
+        let ctxs: Vec<InterferenceCtx> =
+            (0..pool.len()).map(|d| InterferenceCtx::new_with(set, pool.cost(d))).collect();
+        let scores: Vec<f64> =
+            self.assignments.iter().enumerate().map(|(d, a)| ctxs[d].score(a)).collect();
+        let mut best = 0usize;
+        let mut best_key = (f64::INFINITY, f64::INFINITY);
+        for (d, a) in self.assignments.iter().enumerate() {
+            let extra_weight = pool.cost(d).sequential_latency_us(newcomer);
+            let extra_profile = pool.cost(d).occupancy_profile(newcomer);
+            let trial =
+                ctxs[d].score_with(a, Some((extra_weight, extra_profile.as_slice(), &[])));
+            let resulting_max = scores
+                .iter()
+                .enumerate()
+                .map(|(o, &s)| if o == d { trial } else { s })
+                .fold(0.0f64, f64::max);
+            if resulting_max < best_key.0
+                || (resulting_max == best_key.0 && trial < best_key.1)
+            {
+                best = d;
+                best_key = (resulting_max, trial);
+            }
+        }
+        best
+    }
+
+    /// Pool-aware [`Placement::fit_memory_aware`]: candidate devices are
+    /// restricted by **their own** HBM capacity (a 16 GB T4 beside a
+    /// 40 GB A100 refuses what the A100 accepts), and scoring re-prices
+    /// the newcomer per device. Returns [`Error::MemoryCapacity`] naming
+    /// the roomiest device's free bytes when no device fits.
+    pub fn fit_memory_aware_pool(
+        &self,
+        set: &TenantSet,
+        pool: &DevicePool,
+        newcomer: &Dfg,
+    ) -> Result<usize> {
+        if pool.is_uniform() && *pool.platform(0) == set.cost.platform {
+            return self.fit_memory_aware(set, newcomer);
+        }
+        let footprint = TenantSet::dfg_footprint(newcomer, None);
+        let usage = self.hbm_usage(set);
+        let fits = |d: usize| usage[d] + footprint <= pool.platform(d).hbm_bytes();
+        if !(0..self.n_devices()).any(|d| fits(d)) {
+            let gb = 1e-9;
+            let max_free = (0..self.n_devices())
+                .map(|d| (pool.platform(d).hbm_bytes() - usage[d]).max(0.0))
+                .fold(0.0f64, f64::max);
+            return Err(Error::MemoryCapacity(format!(
+                "tenant {}: footprint {:.2} GB exceeds the {:.2} GB free on the \
+                 roomiest of {} device(s) ({})",
+                newcomer.name,
+                footprint * gb,
+                max_free * gb,
+                self.n_devices(),
+                pool.label(),
+            )));
+        }
+        let ctxs: Vec<InterferenceCtx> = (0..pool.len())
+            .map(|d| InterferenceCtx::roofline_with(set, pool.cost(d)))
+            .collect();
+        let scores: Vec<f64> =
+            self.assignments.iter().enumerate().map(|(d, a)| ctxs[d].score(a)).collect();
+        let mut best: Option<(usize, f64, f64)> = None;
+        for (d, a) in self.assignments.iter().enumerate() {
+            if !fits(d) {
+                continue;
+            }
+            let extra_weight = pool.cost(d).sequential_latency_us(newcomer);
+            let extra_occ = pool.cost(d).occupancy_profile(newcomer);
+            let extra_mem = pool.cost(d).bandwidth_profile(newcomer);
+            let trial = ctxs[d].score_with(
+                a,
+                Some((extra_weight, extra_occ.as_slice(), extra_mem.as_slice())),
+            );
+            let resulting_max = scores
+                .iter()
+                .enumerate()
+                .map(|(o, &s)| if o == d { trial } else { s })
+                .fold(0.0f64, f64::max);
+            let better = match best {
+                None => true,
+                Some((_, m, s)) => {
+                    resulting_max < m || (resulting_max == m && trial < s)
+                }
+            };
+            if better {
+                best = Some((d, resulting_max, trial));
+            }
+        }
+        Ok(best.expect("at least one device fits").0)
+    }
+
+    /// Pool-aware [`Placement::predicted_slowdowns`]: each device's
+    /// co-location slowdown is computed with its own roofline (SM pool
+    /// and bandwidth peak), so the same tenant group predicts a larger
+    /// slowdown on a T4 than on an A100.
+    pub fn predicted_slowdowns_pool(&self, set: &TenantSet, pool: &DevicePool) -> Vec<f64> {
+        self.assignments
+            .iter()
+            .enumerate()
+            .map(|(d, a)| {
+                let dfgs: Vec<&Dfg> = a.iter().map(|&s| &set.tenants[s]).collect();
+                pool.cost(d).colocation_slowdown(&dfgs)
+            })
+            .collect()
+    }
+
+    /// Pool-aware [`Placement::interference_scores`].
+    pub fn interference_scores_pool(&self, set: &TenantSet, pool: &DevicePool) -> Vec<f64> {
+        self.assignments
+            .iter()
+            .enumerate()
+            .map(|(d, a)| InterferenceCtx::new_with(set, pool.cost(d)).score(a))
+            .collect()
+    }
+
+    /// Pool-aware [`Placement::memory_scores`].
+    pub fn memory_scores_pool(&self, set: &TenantSet, pool: &DevicePool) -> Vec<f64> {
+        self.assignments
+            .iter()
+            .enumerate()
+            .map(|(d, a)| InterferenceCtx::roofline_with(set, pool.cost(d)).score(a))
+            .collect()
     }
 
     /// Project a global per-tenant sequence down to `device`'s tenants, in
@@ -1011,6 +1332,14 @@ impl TenantSet {
     /// cost model) — the per-device search input of a sharded deployment.
     pub fn shard(&self, placement: &Placement, device: usize) -> TenantSet {
         TenantSet::new(placement.select(&self.tenants, device), self.cost.clone())
+    }
+
+    /// [`TenantSet::shard`] priced with an explicit per-device cost
+    /// model — the heterogeneous search input: the shard's simulation,
+    /// HBM pressure, and operator costs all use `cost`'s platform
+    /// (its roofline, its capacity), not the set-wide one.
+    pub fn shard_on(&self, placement: &Placement, device: usize, cost: &CostModel) -> TenantSet {
+        TenantSet::new(placement.select(&self.tenants, device), cost.clone())
     }
 
     /// Resident HBM footprint of `dfg` in bytes under an optional chunk
@@ -1601,6 +1930,124 @@ mod tests {
         let p = Placement::balanced(&set, 1);
         assert_eq!(p, Placement::single_device(3));
         assert_eq!(p.tenants_on(0), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn uniform_pool_placements_match_the_n_devices_path() {
+        let (tenants, cost) = setup();
+        let set = TenantSet::new(tenants, cost);
+        let pool = DevicePool::uniform(Platform::titan_v(), 2);
+        assert_eq!(Placement::balanced_pool(&set, &pool), Placement::balanced(&set, 2));
+        assert_eq!(
+            Placement::interference_aware_pool(&set, &pool),
+            Placement::interference_aware(&set, 2)
+        );
+        assert_eq!(
+            Placement::memory_aware_pool(&set, &pool),
+            Placement::memory_aware(&set, 2)
+        );
+        for objective in [
+            PlacementObjective::LoadBalance,
+            PlacementObjective::InterferenceAware,
+            PlacementObjective::MemoryAware,
+        ] {
+            assert_eq!(
+                Placement::with_objective_pool(&set, &pool, objective),
+                Placement::with_objective(&set, 2, objective)
+            );
+        }
+    }
+
+    #[test]
+    fn heterogeneous_balanced_gives_the_fast_device_more_work() {
+        // Six identical tenants on an A100 + T4 pool: a count-blind 3/3
+        // split leaves the T4 the bottleneck in wall-clock time; the
+        // pool-aware LPT shifts work toward the A100 until the
+        // *device-local* loads even out.
+        let tenants: Vec<Dfg> =
+            (0..6).map(|i| conv_net(&format!("t{i}"), 8, 3)).collect();
+        let set = TenantSet::new(tenants, CostModel::new(Platform::a100()));
+        let pool = DevicePool::from_platforms([Platform::a100(), Platform::t4()]);
+        let p = Placement::balanced_pool(&set, &pool);
+        p.validate(6).unwrap();
+        assert!(
+            p.tenants_on(0).len() > p.tenants_on(1).len(),
+            "A100 takes more identical tenants than the T4, got {:?}/{:?}",
+            p.tenants_on(0),
+            p.tenants_on(1)
+        );
+        let max = |v: &[f64]| v.iter().copied().fold(0.0f64, f64::max);
+        let naive = Placement::balanced(&set, 2);
+        assert!(
+            max(&p.loads_pool(&set, &pool)) < max(&naive.loads_pool(&set, &pool)),
+            "pool-aware LPT lowers the wall-clock bottleneck"
+        );
+    }
+
+    #[test]
+    fn least_loaded_pool_prefers_the_fast_empty_device() {
+        let set = TenantSet::new(Vec::new(), CostModel::new(Platform::a100()));
+        // T4 first: a speed-blind chooser would tie-break onto it.
+        let pool = DevicePool::from_platforms([Platform::t4(), Platform::a100()]);
+        let p = Placement::from_assignments(vec![vec![], vec![]]);
+        let newcomer = conv_net("new", 8, 3);
+        assert_eq!(p.least_loaded_pool(&set, &pool, &newcomer), 1);
+    }
+
+    #[test]
+    fn fit_memory_aware_pool_enforces_each_devices_own_capacity() {
+        let cost = CostModel::new(Platform::a100());
+        let set = TenantSet::new(vec![conv_net("a", 1, 2), conv_net("b", 1, 2)], cost);
+        let pool = DevicePool::from_platforms([Platform::t4(), Platform::a100()]);
+        let p = Placement::from_assignments(vec![vec![0], vec![1]]);
+        // ~19.6 GB tenant: over the T4's 16 GB, within the A100's 40 GB.
+        let mut giant = Dfg::new("giant");
+        giant.push(OpKind::Linear { fin: 70_000, fout: 70_000 }, 1, "fc");
+        assert_eq!(p.fit_memory_aware_pool(&set, &pool, &giant).unwrap(), 1);
+        // ~57.6 GB fits nobody: typed refusal naming the pool.
+        let mut huge = Dfg::new("huge");
+        huge.push(OpKind::Linear { fin: 120_000, fout: 120_000 }, 1, "fc");
+        let err = p.fit_memory_aware_pool(&set, &pool, &huge).unwrap_err();
+        assert!(matches!(err, Error::MemoryCapacity(_)), "got {err:?}");
+        assert!(err.to_string().contains("huge"));
+    }
+
+    #[test]
+    fn pool_scores_price_each_device_with_its_own_roofline() {
+        // Batch-8 mid convs: ~78 % occupancy on a T4's 40-SM pool,
+        // ~39 % on an A100's 108 — the pair overflows the T4 only.
+        let set = TenantSet::new(
+            vec![conv_net("a", 8, 2), conv_net("b", 8, 2)],
+            CostModel::new(Platform::a100()),
+        );
+        let pool = DevicePool::from_platforms([Platform::a100(), Platform::t4()]);
+        // The same pair on each device in turn: the T4 predicts a
+        // strictly worse slowdown than the A100 for the identical group.
+        let on_fast = Placement::from_assignments(vec![vec![0, 1], vec![]]);
+        let on_slow = Placement::from_assignments(vec![vec![], vec![0, 1]]);
+        let fast = on_fast.predicted_slowdowns_pool(&set, &pool)[0];
+        let slow = on_slow.predicted_slowdowns_pool(&set, &pool)[1];
+        assert!(
+            slow > fast,
+            "T4 slowdown {slow} should exceed A100 slowdown {fast}"
+        );
+        assert!(
+            on_slow.memory_scores_pool(&set, &pool)[1]
+                > on_fast.memory_scores_pool(&set, &pool)[0]
+        );
+    }
+
+    #[test]
+    fn push_and_remove_device_reshape_the_placement() {
+        let mut p = Placement::from_assignments(vec![vec![0, 1], vec![2]]);
+        p.push_device();
+        assert_eq!(p.n_devices(), 3);
+        assert!(p.tenants_on(2).is_empty());
+        p.move_slot(2, 2);
+        assert_eq!(p.remove_device(1), Vec::<usize>::new());
+        assert_eq!(p.n_devices(), 2);
+        assert_eq!(p.tenants_on(1), &[2], "survivor shifted down intact");
+        p.validate(3).unwrap();
     }
 
     #[test]

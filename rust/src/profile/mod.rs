@@ -10,6 +10,8 @@
 
 mod cost;
 mod platform;
+mod pool;
 
 pub use cost::{roofline_slowdown, slowdown_from_phases, CostModel, OpCost};
 pub use platform::Platform;
+pub use pool::{DeviceId, DevicePool};

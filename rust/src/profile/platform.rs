@@ -80,9 +80,44 @@ impl Platform {
         }
     }
 
-    /// All platforms of the paper's evaluation.
-    pub fn all() -> [Platform; 3] {
-        [Self::titan_v(), Self::p6000(), Self::gtx_1080ti()]
+    /// NVIDIA A100 (SXM, 40 GB) — the datacenter end of the heterogeneous
+    /// pool mix. Spec-sheet fp32 peak, SM count, and HBM2e bandwidth.
+    pub fn a100() -> Self {
+        Platform {
+            name: "A100",
+            peak_tflops: 19.5,
+            sm_count: 108,
+            mem_bw_gbps: 1555.0,
+            hbm_gb: 40.0,
+            sync_wait_us: 4.0,
+            launch_us: 2.5,
+            contention_alpha: 0.22,
+            supports_mps: true,
+        }
+    }
+
+    /// NVIDIA T4 — the inference-accelerator end of the heterogeneous
+    /// pool mix: a quarter of the A100's SMs and a fifth of its
+    /// bandwidth, so a placement that treats the two as identical
+    /// overloads it badly.
+    pub fn t4() -> Self {
+        Platform {
+            name: "T4",
+            peak_tflops: 8.1,
+            sm_count: 40,
+            mem_bw_gbps: 320.0,
+            hbm_gb: 16.0,
+            sync_wait_us: 6.0,
+            launch_us: 3.5,
+            contention_alpha: 0.30,
+            supports_mps: true,
+        }
+    }
+
+    /// All platforms of the paper's evaluation, plus the datacenter pair
+    /// (A100/T4) used by the heterogeneous-pool benchmarks.
+    pub fn all() -> [Platform; 5] {
+        [Self::titan_v(), Self::p6000(), Self::gtx_1080ti(), Self::a100(), Self::t4()]
     }
 
     /// Look a platform up by (case-insensitive) name.
@@ -120,17 +155,40 @@ mod tests {
     }
 
     #[test]
-    fn titan_fastest() {
-        let [t, p, g] = Platform::all();
+    fn titan_fastest_of_the_paper_trio() {
+        let [t, p, g, ..] = Platform::all();
         assert!(t.peak_tflops > p.peak_tflops);
         assert!(p.peak_tflops > g.peak_tflops);
     }
 
     #[test]
-    fn only_titan_supports_mps() {
+    fn only_titan_of_the_paper_trio_supports_mps() {
         assert!(Platform::titan_v().supports_mps);
         assert!(!Platform::p6000().supports_mps);
         assert!(!Platform::gtx_1080ti().supports_mps);
+    }
+
+    #[test]
+    fn a100_and_t4_match_their_spec_sheets() {
+        let a = Platform::a100();
+        assert_eq!((a.sm_count, a.hbm_gb), (108, 40.0));
+        assert_eq!(a.mem_bw_gbps, 1555.0);
+        let t = Platform::t4();
+        assert_eq!((t.sm_count, t.hbm_gb), (40, 16.0));
+        assert_eq!(t.mem_bw_gbps, 320.0);
+        // The ratio the heterogeneous placement must respect: the T4 has
+        // well under half the A100 on every axis.
+        assert!(t.peak_tflops < a.peak_tflops / 2.0);
+        assert!((t.sm_count as f64) < a.sm_count as f64 / 2.0);
+        assert!(t.mem_bw_gbps < a.mem_bw_gbps / 2.0);
+    }
+
+    #[test]
+    fn a100_and_t4_roundtrip_by_name() {
+        assert_eq!(Platform::by_name("a100").unwrap(), Platform::a100());
+        assert_eq!(Platform::by_name("A100").unwrap(), Platform::a100());
+        assert_eq!(Platform::by_name("t4").unwrap(), Platform::t4());
+        assert_eq!(Platform::by_name("T4").unwrap(), Platform::t4());
     }
 
     #[test]

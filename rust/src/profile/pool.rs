@@ -1,0 +1,272 @@
+//! The device dimension as a first-class value: an ordered pool of
+//! per-device [`Platform`] profiles with **stable identities**.
+//!
+//! Every multi-device decision in the crate — placement, per-shard
+//! search, admission, migration, serving — used to take a bare
+//! `n_devices: usize` and price every device with one shared
+//! [`CostModel`], which silently assumes a homogeneous fleet. A
+//! [`DevicePool`] replaces that: each device carries its own cost model
+//! (built from its own [`Platform`]), so a T4 beside an A100 is priced
+//! as a T4 — smaller SM pool, lower bandwidth peak, its own HBM
+//! capacity.
+//!
+//! **DeviceId stability contract:** a [`DeviceId`] is assigned once when
+//! the device joins the pool and never reused. Dense indices (positions
+//! in the pool, what [`crate::plan::Placement`] partitions over) shift
+//! when a device is removed; ids never do. Everything that must survive
+//! scale-in — the cluster server's per-device diff, migration records,
+//! operator-facing APIs — is keyed by id; everything positional
+//! (placement bins, shard vectors, routing tables) is keyed by dense
+//! index and rebuilt from the pool's current order.
+
+use super::{CostModel, Platform};
+use std::fmt;
+
+/// Stable identity of one device in a [`DevicePool`] — assigned at join,
+/// never reused, unchanged by the removal of other devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct DeviceId(pub u64);
+
+impl fmt::Display for DeviceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "gpu{}", self.0)
+    }
+}
+
+#[derive(Debug, Clone)]
+struct PoolDevice {
+    id: DeviceId,
+    cost: CostModel,
+}
+
+/// An ordered, elastic pool of devices, each with its own [`Platform`]
+/// profile and [`CostModel`].
+///
+/// ```
+/// use gacer::profile::{DevicePool, Platform};
+///
+/// let mut pool = DevicePool::from_platforms([Platform::a100(), Platform::t4()]);
+/// assert_eq!(pool.len(), 2);
+/// assert_eq!(pool.platform(1).name, "T4");
+///
+/// // Scale out: the new device gets a fresh id.
+/// let id = pool.add(Platform::t4());
+/// assert_eq!(pool.index_of(id), Some(2));
+///
+/// // Scale in the middle device: ids of the survivors are stable even
+/// // though their dense indices shift.
+/// let t4 = pool.id(1);
+/// pool.remove(0);
+/// assert_eq!(pool.index_of(t4), Some(0));
+/// assert_eq!(pool.index_of(id), Some(1));
+/// ```
+#[derive(Debug, Clone)]
+pub struct DevicePool {
+    devices: Vec<PoolDevice>,
+    next_id: u64,
+}
+
+impl DevicePool {
+    /// A pool of `n` identical devices — the sugar behind every
+    /// `n_devices: usize` API (`n` is clamped to at least 1).
+    pub fn uniform(platform: Platform, n: usize) -> Self {
+        Self::from_platforms(std::iter::repeat(platform).take(n.max(1)))
+    }
+
+    /// A pool from an explicit per-device platform list, ids `0..n`.
+    pub fn from_platforms(platforms: impl IntoIterator<Item = Platform>) -> Self {
+        let devices: Vec<PoolDevice> = platforms
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| PoolDevice { id: DeviceId(i as u64), cost: CostModel::new(p) })
+            .collect();
+        let next_id = devices.len() as u64;
+        DevicePool { devices, next_id }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// The platform profile of the device at dense index `d`.
+    pub fn platform(&self, d: usize) -> &Platform {
+        &self.devices[d].cost.platform
+    }
+
+    /// The cost model of the device at dense index `d` (cached per
+    /// device, so repeated pricing against the same platform is cheap).
+    pub fn cost(&self, d: usize) -> &CostModel {
+        &self.devices[d].cost
+    }
+
+    /// The stable id of the device at dense index `d`.
+    pub fn id(&self, d: usize) -> DeviceId {
+        self.devices[d].id
+    }
+
+    /// Stable ids in dense order.
+    pub fn ids(&self) -> Vec<DeviceId> {
+        self.devices.iter().map(|d| d.id).collect()
+    }
+
+    /// Platform profiles in dense order.
+    pub fn platforms(&self) -> Vec<Platform> {
+        self.devices.iter().map(|d| d.cost.platform).collect()
+    }
+
+    /// The current dense index of a stable id, `None` once removed.
+    pub fn index_of(&self, id: DeviceId) -> Option<usize> {
+        self.devices.iter().position(|d| d.id == id)
+    }
+
+    /// Whether every device runs the same platform — when true, every
+    /// heterogeneous code path reduces exactly to the homogeneous one.
+    pub fn is_uniform(&self) -> bool {
+        self.devices
+            .windows(2)
+            .all(|w| w[0].cost.platform == w[1].cost.platform)
+    }
+
+    /// Scale out: append a device, returning its fresh (never-reused) id.
+    pub fn add(&mut self, platform: Platform) -> DeviceId {
+        let id = DeviceId(self.next_id);
+        self.next_id += 1;
+        self.devices.push(PoolDevice { id, cost: CostModel::new(platform) });
+        id
+    }
+
+    /// Scale in: remove the device at dense index `d` (later devices
+    /// shift down; their ids do not change). Returns the removed id.
+    pub fn remove(&mut self, d: usize) -> DeviceId {
+        self.devices.remove(d).id
+    }
+
+    /// Short human label, e.g. `A100+T4x2`.
+    pub fn label(&self) -> String {
+        let mut parts: Vec<(String, usize)> = Vec::new();
+        for d in &self.devices {
+            match parts.last_mut() {
+                Some((name, n)) if *name == d.cost.platform.name => *n += 1,
+                _ => parts.push((d.cost.platform.name.to_string(), 1)),
+            }
+        }
+        parts
+            .into_iter()
+            .map(|(name, n)| if n == 1 { name } else { format!("{name}x{n}") })
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    /// Parse a CLI device spec: a comma list of platform names with an
+    /// optional `xN` repeat — `titanv,p6000x2` is a Titan V plus two
+    /// P6000s. Returns a descriptive error for unknown names or counts.
+    ///
+    /// ```
+    /// use gacer::profile::DevicePool;
+    ///
+    /// let platforms = DevicePool::parse_spec("a100,t4x2").unwrap();
+    /// assert_eq!(platforms.len(), 3);
+    /// assert_eq!(platforms[1].name, "T4");
+    /// assert!(DevicePool::parse_spec("h100").is_err());
+    /// ```
+    pub fn parse_spec(spec: &str) -> Result<Vec<Platform>, String> {
+        let mut out = Vec::new();
+        for item in spec.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                return Err(format!("empty device entry in spec {spec:?}"));
+            }
+            let (name, count) = match item.rsplit_once(['x', 'X']) {
+                Some((name, n)) if !name.is_empty() && n.chars().all(|c| c.is_ascii_digit()) && !n.is_empty() => {
+                    (name, n.parse::<usize>().map_err(|e| e.to_string())?)
+                }
+                _ => (item, 1),
+            };
+            if count == 0 {
+                return Err(format!("device count 0 in entry {item:?}"));
+            }
+            let platform = Platform::by_name(name).ok_or_else(|| {
+                format!(
+                    "unknown platform {name:?}; expected one of {}",
+                    Platform::all().map(|p| p.name).join("|")
+                )
+            })?;
+            out.extend(std::iter::repeat(platform).take(count));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_pool_is_uniform_and_clamped() {
+        let pool = DevicePool::uniform(Platform::titan_v(), 0);
+        assert_eq!(pool.len(), 1, "clamped to at least one device");
+        let pool = DevicePool::uniform(Platform::titan_v(), 3);
+        assert!(pool.is_uniform());
+        assert_eq!(pool.ids(), vec![DeviceId(0), DeviceId(1), DeviceId(2)]);
+    }
+
+    #[test]
+    fn mixed_pool_is_not_uniform() {
+        let pool = DevicePool::from_platforms([Platform::a100(), Platform::t4()]);
+        assert!(!pool.is_uniform());
+        assert_eq!(pool.label(), "A100+T4");
+    }
+
+    #[test]
+    fn ids_are_stable_and_never_reused_across_scale_events() {
+        let mut pool = DevicePool::uniform(Platform::titan_v(), 2);
+        let added = pool.add(Platform::t4());
+        assert_eq!(added, DeviceId(2));
+        let removed = pool.remove(1);
+        assert_eq!(removed, DeviceId(1));
+        // Survivors keep their ids at shifted dense indices.
+        assert_eq!(pool.index_of(DeviceId(0)), Some(0));
+        assert_eq!(pool.index_of(added), Some(1));
+        assert_eq!(pool.index_of(removed), None);
+        // The freed id is never handed out again.
+        assert_eq!(pool.add(Platform::t4()), DeviceId(3));
+    }
+
+    #[test]
+    fn per_device_cost_models_price_their_own_platform() {
+        let pool = DevicePool::from_platforms([Platform::a100(), Platform::t4()]);
+        assert_eq!(pool.cost(0).platform.name, "A100");
+        assert_eq!(pool.cost(1).platform.name, "T4");
+        assert!(pool.platform(0).sm_count > pool.platform(1).sm_count);
+    }
+
+    #[test]
+    fn spec_parsing_expands_repeats_and_rejects_junk() {
+        let p = DevicePool::parse_spec("titanv,p6000x2").unwrap();
+        assert_eq!(
+            p.iter().map(|p| p.name).collect::<Vec<_>>(),
+            vec!["TitanV", "P6000", "P6000"]
+        );
+        assert!(DevicePool::parse_spec("").is_err());
+        assert!(DevicePool::parse_spec("titanv,,t4").is_err());
+        assert!(DevicePool::parse_spec("t4x0").is_err());
+        assert!(DevicePool::parse_spec("warpdrive").is_err());
+        // A bare count with no name is rejected, not parsed as repeat.
+        assert!(DevicePool::parse_spec("x3").is_err());
+    }
+
+    #[test]
+    fn labels_group_adjacent_runs() {
+        let pool = DevicePool::from_platforms([
+            Platform::t4(),
+            Platform::t4(),
+            Platform::a100(),
+            Platform::t4(),
+        ]);
+        assert_eq!(pool.label(), "T4x2+A100+T4");
+    }
+}

@@ -42,6 +42,7 @@ use crate::gpu::SimOptions;
 use crate::plan::{
     DeploymentPlan, Placement, PlacementObjective, ShardedDeploymentPlan, TenantSet,
 };
+use crate::profile::DevicePool;
 
 use super::{GacerSearch, SearchBudget, SearchConfig, SearchReport, SearchState};
 
@@ -100,6 +101,7 @@ pub struct ShardedSearch<'a> {
     cfg: SearchConfig,
     objective: PlacementObjective,
     budget: SearchBudget,
+    pool: Option<&'a DevicePool>,
 }
 
 impl<'a> ShardedSearch<'a> {
@@ -110,6 +112,7 @@ impl<'a> ShardedSearch<'a> {
             cfg,
             objective: PlacementObjective::default(),
             budget: SearchBudget::unbounded(),
+            pool: None,
         }
     }
 
@@ -118,6 +121,48 @@ impl<'a> ShardedSearch<'a> {
     pub fn objective(mut self, objective: PlacementObjective) -> Self {
         self.objective = objective;
         self
+    }
+
+    /// Search against a heterogeneous [`DevicePool`]: placement scores
+    /// candidates per device ([`Placement::with_objective_pool`]), and
+    /// each device's Algorithm-1 run prices and simulates its shard on
+    /// **its own** platform ([`SimOptions::for_platform`] + the device's
+    /// cost model) instead of the constructor's shared `opts`/cost. The
+    /// device-count arguments of [`ShardedSearch::run`]/
+    /// [`ShardedSearch::run_warm`] must equal `pool.len()`. On a uniform
+    /// pool matching the set's cost model this is behaviour-identical to
+    /// the pool-less searcher.
+    pub fn pool(mut self, pool: &'a DevicePool) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Per-device simulator options: the device's own platform when a
+    /// pool is set, the shared constructor `opts` otherwise.
+    fn device_opts(&self, device: usize) -> SimOptions {
+        match self.pool {
+            Some(pool) => SimOptions::for_platform(pool.platform(device)),
+            None => self.opts,
+        }
+    }
+
+    /// Per-device shard input: priced with the device's own cost model
+    /// when a pool is set.
+    fn device_shard(&self, placement: &Placement, device: usize) -> TenantSet {
+        match self.pool {
+            Some(pool) => self.set.shard_on(placement, device, pool.cost(device)),
+            None => self.set.shard(placement, device),
+        }
+    }
+
+    fn make_placement(&self, n_devices: usize) -> Placement {
+        match self.pool {
+            Some(pool) => {
+                debug_assert_eq!(pool.len(), n_devices, "pool size vs n_devices");
+                Placement::with_objective_pool(self.set, pool, self.objective)
+            }
+            None => Placement::with_objective(self.set, n_devices, self.objective),
+        }
     }
 
     /// Budget for **each per-device search** (default
@@ -133,7 +178,7 @@ impl<'a> ShardedSearch<'a> {
     /// Cold sharded search: compute a placement across `n_devices` under
     /// the configured objective, then run Algorithm 1 per device.
     pub fn run(&self, n_devices: usize) -> ShardedSearchReport {
-        self.run_placed(Placement::with_objective(self.set, n_devices, self.objective))
+        self.run_placed(self.make_placement(n_devices))
     }
 
     /// [`ShardedSearch::run`], also (re)filling one warm [`SearchState`]
@@ -146,10 +191,7 @@ impl<'a> ShardedSearch<'a> {
         n_devices: usize,
         states: &mut [SearchState],
     ) -> ShardedSearchReport {
-        self.run_placed_warm(
-            Placement::with_objective(self.set, n_devices, self.objective),
-            states,
-        )
+        self.run_placed_warm(self.make_placement(n_devices), states)
     }
 
     /// Cold per-device searches under a caller-fixed placement.
@@ -170,14 +212,14 @@ impl<'a> ShardedSearch<'a> {
         let mut shards = Vec::with_capacity(placement.n_devices());
         let mut reports = Vec::with_capacity(placement.n_devices());
         for d in 0..placement.n_devices() {
-            let sub = self.set.shard(&placement, d);
+            let sub = self.device_shard(&placement, d);
             if sub.is_empty() {
                 states[d].invalidate();
                 shards.push(DeploymentPlan::unregulated(0));
                 reports.push(None);
                 continue;
             }
-            let report = GacerSearch::new(&sub, self.opts, self.cfg)
+            let report = GacerSearch::new(&sub, self.device_opts(d), self.cfg)
                 .budget(self.budget)
                 .run_with_state(&mut states[d]);
             shards.push(report.plan.clone());
@@ -218,12 +260,12 @@ impl<'a> ShardedSearch<'a> {
         seed: DeploymentPlan,
         state: &mut SearchState,
     ) -> Result<Option<SearchReport>> {
-        let sub = self.set.shard(placement, device);
+        let sub = self.device_shard(placement, device);
         if sub.is_empty() {
             state.invalidate();
             return Ok(None);
         }
-        let report = GacerSearch::new(&sub, self.opts, self.cfg)
+        let report = GacerSearch::new(&sub, self.device_opts(device), self.cfg)
             .budget(self.budget)
             .run_from_state(seed, state)?;
         Ok(Some(report))
@@ -429,6 +471,33 @@ mod tests {
             .unwrap()
             .is_none());
         assert!(states[d].is_empty());
+    }
+
+    #[test]
+    fn pool_searches_each_device_on_its_own_platform() {
+        use crate::profile::DevicePool;
+        // Heterogeneous pool: the placement is the pool-aware one and
+        // every shard still searches to a valid, non-regressing plan.
+        let ts = TenantSet::new(
+            zoo::build_combo(&["Alex", "V16", "R18"]),
+            CostModel::new(Platform::a100()),
+        );
+        let pool = DevicePool::from_platforms([Platform::a100(), Platform::t4()]);
+        let opts = SimOptions::for_platform(&Platform::a100());
+        let r = ShardedSearch::new(&ts, opts, quick_cfg()).pool(&pool).run(2);
+        r.plan.validate(&ts.tenants).unwrap();
+        assert_eq!(r.plan.placement, Placement::balanced_pool(&ts, &pool));
+        for rep in r.reports.iter().flatten() {
+            assert!(rep.outcome.objective() <= rep.initial.objective() + 1e-6);
+        }
+        // A uniform pool matching the set's platform reproduces the
+        // pool-less searcher bit-for-bit.
+        let uni = DevicePool::uniform(Platform::titan_v(), 2);
+        let ts2 = set(&["Alex", "V16", "R18"]);
+        let o2 = SimOptions::for_platform(&Platform::titan_v());
+        let with_pool = ShardedSearch::new(&ts2, o2, quick_cfg()).pool(&uni).run(2);
+        let without = ShardedSearch::new(&ts2, o2, quick_cfg()).run(2);
+        assert_eq!(with_pool.plan, without.plan);
     }
 
     #[test]

@@ -143,27 +143,29 @@ fn skewed_load_migrates_one_tenant_and_researches_only_two_shards() {
         .maybe_migrate(&MigrationPolicy::default())
         .unwrap()
         .expect("fully skewed load must trigger a migration");
-    assert_eq!(migration.from, hot_device);
+    let from_d = engine.device_pool().index_of(migration.from).unwrap();
+    let to_d = engine.device_pool().index_of(migration.to).unwrap();
+    assert_eq!(from_d, hot_device);
 
     // Exactly one tenant changed device; its global slot is unchanged.
     let moved: Vec<usize> = (0..engine.len())
         .filter(|&s| engine.placement().device_of(s) != placement_before[s])
         .collect();
     assert_eq!(moved.len(), 1, "migration moves exactly one tenant");
-    assert_eq!(engine.placement().device_of(moved[0]), Some(migration.to));
+    assert_eq!(engine.placement().device_of(moved[0]), Some(to_d));
 
     // Only the two affected shards were re-searched: the third device's
     // plan is bit-identical.
-    assert_eq!(engine.last_searched_devices(), &[migration.from, migration.to]);
+    assert_eq!(engine.last_searched_devices(), &[from_d, to_d]);
     for d in 0..3 {
-        if d != migration.from && d != migration.to {
+        if d != from_d && d != to_d {
             assert_eq!(
                 engine.sharded_plan().shards[d], before.shards[d],
                 "uninvolved shard must not be re-searched"
             );
         }
     }
-    let mut expected = vec![migration.from, migration.to];
+    let mut expected = vec![from_d, to_d];
     expected.sort_unstable();
     assert_eq!(engine.sharded_plan().changed_devices(&before), expected);
     engine.sharded_plan().validate(engine.tenants()).unwrap();
@@ -374,12 +376,14 @@ fn migration_hot_swaps_on_a_running_cluster() {
         .position(|&id| id == migration.tenant)
         .unwrap();
 
+    let from_d = engine.device_pool().index_of(migration.from).unwrap();
+    let to_d = engine.device_pool().index_of(migration.to).unwrap();
     let route_before = cluster.route_of(moved_slot).unwrap();
     let touched = engine.redeploy_cluster(&cluster).unwrap();
     let route_after = cluster.route_of(moved_slot).unwrap();
-    assert_eq!(route_before.0, migration.from);
-    assert_eq!(route_after.0, migration.to, "routing follows the migration");
-    assert!(touched.contains(&migration.from) || touched.contains(&migration.to));
+    assert_eq!(route_before.0, from_d);
+    assert_eq!(route_after.0, to_d, "routing follows the migration");
+    assert!(touched.contains(&from_d) || touched.contains(&to_d));
 
     for t in 0..4 {
         let out = cluster.infer(t, pseudo_input(100 + t)).unwrap();

@@ -200,6 +200,6 @@ fn cost_gain_contrast_marginal_declined_large_migrates() {
         payback_windows: 1.0,
     });
     let m = engine.maybe_migrate(&fair).unwrap().expect("large skew migrates");
-    assert_eq!(m.from, 0);
+    assert_eq!(m.from, gacer::profile::DeviceId(0));
     engine.sharded_plan().validate(engine.tenants()).unwrap();
 }

@@ -21,6 +21,7 @@ use gacer::coordinator::{
     SyntheticModel, TenantSpec,
 };
 use gacer::engine::{Deployment, ShardedDeployment};
+use gacer::profile::DeviceId;
 use gacer::slo::{SloPolicy, Tier};
 use gacer::Error;
 
@@ -43,6 +44,7 @@ fn plan_b_on_device0() -> ShardedDeployment {
     ShardedDeployment {
         per_device: vec![deployment(&["a", "b"]), deployment(&["c"])],
         routing: vec![(0, 0), (0, 1), (1, 0)],
+        device_ids: vec![DeviceId(0), DeviceId(1)],
     }
 }
 
@@ -50,6 +52,7 @@ fn plan_b_on_device1() -> ShardedDeployment {
     ShardedDeployment {
         per_device: vec![deployment(&["a"]), deployment(&["c", "b"])],
         routing: vec![(0, 0), (1, 1), (1, 0)],
+        device_ids: vec![DeviceId(0), DeviceId(1)],
     }
 }
 

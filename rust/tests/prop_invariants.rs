@@ -491,3 +491,143 @@ fn prop_pointer_matrix_segments_partition_the_dfg() {
         }
     });
 }
+
+#[test]
+fn prop_pool_placement_is_a_deterministic_partition_within_every_device() {
+    // (j) heterogeneous pools: for random tenant sets on random MIXED
+    // device pools, every pool-aware objective yields a valid partition,
+    // is deterministic, prices slowdowns as well-formed multipliers with
+    // each device's own cost model, and the memory-aware arm keeps every
+    // device's HBM usage within THAT device's capacity (a 1080Ti bin is
+    // smaller than the A100 beside it).
+    use gacer::plan::PlacementObjective;
+    use gacer::profile::DevicePool;
+    let platforms = [
+        Platform::titan_v(),
+        Platform::p6000(),
+        Platform::gtx_1080ti(),
+        Platform::a100(),
+        Platform::t4(),
+    ];
+    check_property("pool-placement-partition", 20, |rng| {
+        let n_tenants = rng.range(1, 6);
+        let tenants: Vec<gacer::dfg::Dfg> = (0..n_tenants)
+            .map(|_| {
+                let name = *rng.choose(&["Alex", "R18", "V16", "M3", "LSTM"]);
+                let batch = *rng.choose(&[1, 2, 8, 32]);
+                zoo::build(name, batch).unwrap()
+            })
+            .collect();
+        let n_devices = rng.range(2, 5);
+        let picks: Vec<Platform> =
+            (0..n_devices).map(|_| *rng.choose(&platforms)).collect();
+        let pool = DevicePool::from_platforms(picks.clone());
+        let set = TenantSet::new(tenants, CostModel::new(picks[0]));
+        for objective in [
+            PlacementObjective::LoadBalance,
+            PlacementObjective::InterferenceAware,
+            PlacementObjective::MemoryAware,
+        ] {
+            let p = Placement::with_objective_pool(&set, &pool, objective);
+            p.validate(set.len()).unwrap();
+            assert_eq!(p.n_devices(), n_devices);
+            assert_eq!(
+                p,
+                Placement::with_objective_pool(&set, &pool, objective),
+                "{objective:?} on {} must be deterministic",
+                pool.label()
+            );
+            assert!(p
+                .predicted_slowdowns_pool(&set, &pool)
+                .iter()
+                .all(|&s| s >= 1.0));
+            if objective == PlacementObjective::MemoryAware {
+                for (d, &used) in p.hbm_usage(&set).iter().enumerate() {
+                    assert!(
+                        used <= pool.platform(d).hbm_bytes(),
+                        "{} ({}) holds {used} B over its own capacity",
+                        pool.id(d),
+                        pool.platform(d).name
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_uniform_pool_is_bit_for_bit_the_homogeneous_path() {
+    // (k) a pool of k identical platforms is sugar, not a fork: every
+    // objective must return the EXACT placement of the `n_devices = k`
+    // homogeneous path (the pool constructors short-circuit to it), so
+    // existing single-platform deployments are unchanged by the pool
+    // refactor.
+    use gacer::plan::PlacementObjective;
+    use gacer::profile::DevicePool;
+    let platforms =
+        [Platform::titan_v(), Platform::p6000(), Platform::a100(), Platform::t4()];
+    check_property("uniform-pool-bit-for-bit", 15, |rng| {
+        let platform = *rng.choose(&platforms);
+        let n_tenants = rng.range(1, 6);
+        let tenants: Vec<gacer::dfg::Dfg> = (0..n_tenants)
+            .map(|_| {
+                let name = *rng.choose(&["Alex", "R18", "V16", "M3", "LSTM"]);
+                let batch = *rng.choose(&[1, 2, 8, 32]);
+                zoo::build(name, batch).unwrap()
+            })
+            .collect();
+        let k = rng.range(1, 5);
+        let pool = DevicePool::from_platforms(vec![platform; k]);
+        let set = TenantSet::new(tenants, CostModel::new(platform));
+        for objective in [
+            PlacementObjective::LoadBalance,
+            PlacementObjective::InterferenceAware,
+            PlacementObjective::MemoryAware,
+        ] {
+            let pooled = Placement::with_objective_pool(&set, &pool, objective);
+            let sugared = Placement::with_objective(&set, k, objective);
+            assert_eq!(
+                pooled, sugared,
+                "{objective:?} diverged on a uniform {} x{k} pool",
+                platform.name
+            );
+            // And the uniform pool prices exactly like the flat model.
+            assert_eq!(
+                pooled.predicted_slowdowns_pool(&set, &pool),
+                pooled.predicted_slowdowns(&set)
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_single_device_pool_degenerates() {
+    // (k') the `devices(1)` degenerate case through the pool path: one
+    // device of any platform holds every tenant, the only placement a
+    // 1-bin partition allows.
+    use gacer::plan::PlacementObjective;
+    use gacer::profile::DevicePool;
+    let platforms =
+        [Platform::titan_v(), Platform::gtx_1080ti(), Platform::a100(), Platform::t4()];
+    check_property("single-device-pool", 10, |rng| {
+        let platform = *rng.choose(&platforms);
+        let tenants: Vec<gacer::dfg::Dfg> = (0..rng.range(1, 5))
+            .map(|_| {
+                let name = *rng.choose(&["Alex", "R18", "V16", "M3"]);
+                zoo::build_default(name).unwrap()
+            })
+            .collect();
+        let pool = DevicePool::from_platforms([platform]);
+        let set = TenantSet::new(tenants, CostModel::new(platform));
+        for objective in [
+            PlacementObjective::LoadBalance,
+            PlacementObjective::InterferenceAware,
+            PlacementObjective::MemoryAware,
+        ] {
+            let p = Placement::with_objective_pool(&set, &pool, objective);
+            p.validate(set.len()).unwrap();
+            assert_eq!(p.n_devices(), 1);
+            assert_eq!(p.tenants_on(0).len(), set.len());
+        }
+    });
+}
