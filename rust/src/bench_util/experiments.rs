@@ -1161,3 +1161,91 @@ pub fn elastic() {
         Err(e) => eprintln!("could not write BENCH_elastic.json: {e}"),
     }
 }
+
+/// `gacer-bench calibration` — the predicted-vs-observed loop closed
+/// end to end (docs/OPERATIONS.md §Calibration): four analytically
+/// identical tenants on two devices, one of which really runs 6× its
+/// predicted latency. The analytic arm balances 2+2 and can never see
+/// the skew; the calibrated arm feeds served windows back through
+/// [`crate::engine::GacerEngine::record_latencies`], the trust ramp
+/// completes, the corrected weights trip the migration policy, and the
+/// mispriced tenant is isolated — strictly improving the worst measured
+/// per-tenant p99. A third check drives both engines with **zero**
+/// observations and asserts every decision is bit-for-bit identical.
+/// All three results are asserted here and written to
+/// `BENCH_calibration.json`.
+pub fn calibration() {
+    use super::calibration_sim::{
+        calibration_is_noop_without_observations, calibration_report_json,
+        run_calibration_sim, CalibSimConfig,
+    };
+
+    let cfg = CalibSimConfig::calibrated();
+    println!(
+        "== Calibration: online correction of a {}x mispriced tenant \
+         ({} warmup + {} measured windows, {} samples/window) ==",
+        cfg.inflation, cfg.warmup_windows, cfg.measure_windows, cfg.samples_per_window
+    );
+    let arms = [
+        ("calibrated", run_calibration_sim(&cfg)),
+        ("analytic", run_calibration_sim(&CalibSimConfig::analytic())),
+    ];
+    for (label, out) in &arms {
+        println!("{label}:");
+        println!(
+            "  {:<8} {:>3} {:>11} {:>11} {:>11} {:>11}",
+            "tenant", "dev", "correction", "p50(us)", "p99(us)", "max(us)"
+        );
+        for t in &out.tenants {
+            println!(
+                "  {:<8} {:>3} {:>11.2} {:>11.0} {:>11.0} {:>11.0}",
+                t.name,
+                t.final_device,
+                t.correction,
+                t.latency.p50_us,
+                t.latency.p99_us,
+                t.latency.max_us
+            );
+        }
+        match out.migrated_window {
+            Some(w) => println!("  migrated at observe window {w}"),
+            None => println!("  never migrated"),
+        }
+    }
+    let (calibrated, analytic) = (&arms[0].1, &arms[1].1);
+    println!(
+        "worst tenant p99: {:.0}us calibrated vs {:.0}us analytic",
+        calibrated.max_p99_us(),
+        analytic.max_p99_us()
+    );
+    // Acceptance criterion 1: with calibration ON, the mispriced mix is
+    // re-placed and the measured worst p99 strictly improves.
+    assert!(
+        calibrated.migrated_window.is_some() && calibrated.mis_isolated,
+        "the calibrated arm must isolate the mispriced tenant"
+    );
+    assert_eq!(
+        analytic.migrated_window, None,
+        "the analytic arm must never see the skew"
+    );
+    assert!(
+        calibrated.max_p99_us() < analytic.max_p99_us(),
+        "calibrated worst p99 {} must strictly beat analytic {}",
+        calibrated.max_p99_us(),
+        analytic.max_p99_us()
+    );
+    // Acceptance criterion 2: with zero observations, every decision is
+    // identical to the analytic path.
+    let zero_obs_identical = calibration_is_noop_without_observations(4);
+    assert!(
+        zero_obs_identical,
+        "an unobserved calibrator must change no decision"
+    );
+    println!("zero-observation decisions identical: {zero_obs_identical}");
+    let json = calibration_report_json(&cfg, calibrated, analytic, zero_obs_identical)
+        .to_string_compact();
+    match std::fs::write("BENCH_calibration.json", &json) {
+        Ok(()) => println!("wrote BENCH_calibration.json ({} bytes)", json.len()),
+        Err(e) => eprintln!("could not write BENCH_calibration.json: {e}"),
+    }
+}

@@ -2,6 +2,7 @@
 //! (baselines + GACER arms) on a combo/platform and formats paper-style
 //! rows. `experiments` holds the per-table/figure drivers.
 
+pub mod calibration_sim;
 pub mod experiments;
 pub mod loadgen;
 pub mod slo_sim;

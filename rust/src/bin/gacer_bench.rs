@@ -2,7 +2,7 @@
 //! evaluation section (see DESIGN.md §6 for the experiment index).
 //!
 //! Usage: `gacer-bench
-//! <fig4|fig7|fig8|table2|fig9|table3|table4|placement|memory|replan|slo|throughput|elastic|all>
+//! <fig4|fig7|fig8|table2|fig9|table3|table4|placement|memory|replan|slo|throughput|elastic|calibration|all>
 //! [--rounds N]`
 //!
 //! `placement` is this repo's multi-GPU extension: LoadBalance vs
@@ -26,6 +26,12 @@
 //! homogeneous-assumption placement on a mixed A100 + T4 pool, engine
 //! scale-out/scale-in, and a diurnal cluster autoscale under closed-loop
 //! fire, recorded in `BENCH_elastic.json` (`docs/OPERATIONS.md`).
+//! `calibration` is the online cost-model calibration extension: a
+//! mis-modeled tenant mix served with and without the residual-EWMA
+//! correction loop, asserting that the calibrated arm strictly improves
+//! the worst per-tenant p99 and that zero observations leave every
+//! decision bit-for-bit analytic, recorded in `BENCH_calibration.json`
+//! (`docs/BENCHMARKS.md`).
 
 use gacer::bench_util::experiments;
 use gacer::util::cli::Args;
@@ -42,6 +48,7 @@ fn main() {
         vec![
             "fig4", "fig7", "fig8", "table2", "fig9", "table3", "table4",
             "placement", "memory", "replan", "slo", "throughput", "elastic",
+            "calibration",
         ]
     } else {
         vec![experiment.as_str()]
@@ -61,6 +68,7 @@ fn main() {
             "slo" => experiments::slo(),
             "throughput" => experiments::throughput(&args),
             "elastic" => experiments::elastic(),
+            "calibration" => experiments::calibration(),
             other => {
                 eprintln!("unknown experiment: {other}");
                 std::process::exit(2);

@@ -1,0 +1,441 @@
+//! Online cost-model calibration: close the predicted-vs-observed loop.
+//!
+//! Every placement, admission, and migration decision in the engine flows
+//! from the analytic roofline cost model ([`crate::profile::CostModel`]).
+//! The serving path, however, already *measures* the truth: each observe
+//! window [`crate::engine::GacerEngine::record_latencies`] receives the
+//! served per-tenant latencies. This module holds the correction layer
+//! between the two — a [`Calibrator`] that maintains bounded
+//! per-(tenant, device-platform) residual EWMAs of
+//! `observed / predicted` latency and exposes a clamped multiplicative
+//! correction factor the engine blends back into the weights used by
+//! [`crate::plan::Placement`] scorers, admission
+//! ([`crate::engine::GacerEngine::admit_with`]), the
+//! [`crate::engine::MigrationPolicy`] proposers, and
+//! [`crate::engine::GacerEngine::maybe_regulate`].
+//!
+//! Three properties make the layer safe to leave on in production:
+//!
+//! 1. **Trust ramp** — a residual is *analytic-only* (correction exactly
+//!    `1.0`) until it has accumulated [`CalibrationConfig::min_samples`]
+//!    observations, so cold-start decisions are bit-for-bit identical to
+//!    the uncalibrated engine (regression-tested in
+//!    `rust/tests/prop_invariants.rs`).
+//! 2. **Clamping** — trusted corrections are clamped into
+//!    `[min_correction, max_correction]`, bounding the damage a
+//!    mis-measured window can do.
+//! 3. **Bounded state** — at most [`CalibrationConfig::max_entries`]
+//!    residuals are retained; the least-recently-touched entry is evicted
+//!    first, so a long-lived engine serving a churning tenant population
+//!    cannot grow without bound.
+//!
+//! The calibrator is fully deterministic: no clocks, no RNG — recency is
+//! a monotonic touch counter, and the EWMA depends only on the
+//! observation sequence. Determinism in (seed, observation order) is one
+//! of the seeded properties in the invariant battery.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Knobs for the online correction layer (`serve --calibrate` runs the
+/// defaults; see `docs/OPERATIONS.md` §Calibration for the runbook).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CalibrationConfig {
+    /// Trust ramp: a residual contributes no correction (factor `1.0`)
+    /// until it has at least this many observations. Keeps cold-start
+    /// behavior bit-for-bit analytic.
+    pub min_samples: u32,
+    /// EWMA blend weight for each new `observed / predicted` ratio
+    /// (`ewma = alpha * ratio + (1 - alpha) * ewma`). Must lie in
+    /// `(0, 1]`.
+    pub alpha: f64,
+    /// Lower clamp on the trusted correction factor.
+    pub min_correction: f64,
+    /// Upper clamp on the trusted correction factor.
+    pub max_correction: f64,
+    /// Maximum number of (tenant, platform) residuals retained; the
+    /// least-recently-observed entry is evicted beyond this.
+    pub max_entries: usize,
+}
+
+impl Default for CalibrationConfig {
+    fn default() -> Self {
+        Self {
+            min_samples: 3,
+            alpha: 0.3,
+            min_correction: 0.25,
+            max_correction: 4.0,
+            max_entries: 256,
+        }
+    }
+}
+
+impl CalibrationConfig {
+    /// Validate the knob ranges (typed errors, checked at engine build).
+    pub fn validate(&self) -> Result<()> {
+        if self.min_samples == 0 {
+            return Err(Error::InvalidConfig(
+                "calibration min_samples must be >= 1 (0 would trust an \
+                 empty residual)"
+                    .to_string(),
+            ));
+        }
+        if !(self.alpha > 0.0 && self.alpha <= 1.0) {
+            return Err(Error::InvalidConfig(format!(
+                "calibration alpha must be in (0, 1], got {}",
+                self.alpha
+            )));
+        }
+        if !(self.min_correction > 0.0 && self.min_correction.is_finite()) {
+            return Err(Error::InvalidConfig(format!(
+                "calibration min_correction must be finite and positive, got {}",
+                self.min_correction
+            )));
+        }
+        if !(self.max_correction >= self.min_correction
+            && self.max_correction.is_finite())
+        {
+            return Err(Error::InvalidConfig(format!(
+                "calibration max_correction ({}) must be finite and >= \
+                 min_correction ({})",
+                self.max_correction, self.min_correction
+            )));
+        }
+        if self.max_entries == 0 {
+            return Err(Error::InvalidConfig(
+                "calibration max_entries must be >= 1".to_string(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// One residual EWMA: the running `observed / predicted` latency ratio
+/// for a (tenant, device-platform) pair.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Residual {
+    /// EWMA of `observed_us / predicted_us`.
+    ratio_ewma: f64,
+    /// Observations folded in so far (saturating).
+    samples: u32,
+    /// Monotonic recency stamp for LRU eviction.
+    touch: u64,
+}
+
+/// A read-only snapshot of one residual, for introspection
+/// ([`Calibrator::entries`], `serve --calibrate` status lines).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationEntry {
+    /// Engine-assigned tenant id (`TenantId.0`).
+    pub tenant: u64,
+    /// Device platform name the observations were served on.
+    pub platform: String,
+    /// Current EWMA of `observed / predicted`.
+    pub ratio_ewma: f64,
+    /// Observations folded in so far.
+    pub samples: u32,
+    /// Whether the trust ramp has completed (`samples >= min_samples`).
+    pub trusted: bool,
+    /// The clamped correction factor decisions would use right now
+    /// (`1.0` while untrusted).
+    pub correction: f64,
+}
+
+/// Bounded store of per-(tenant, device-platform) residual EWMAs with a
+/// trust ramp and clamped corrections. See the module docs for the
+/// safety contract.
+#[derive(Debug, Clone)]
+pub struct Calibrator {
+    cfg: CalibrationConfig,
+    residuals: BTreeMap<(u64, String), Residual>,
+    clock: u64,
+    /// Total observations accepted (not evicted ones — ever accepted).
+    observations: u64,
+}
+
+impl Calibrator {
+    /// Build a calibrator with validated knobs.
+    pub fn new(cfg: CalibrationConfig) -> Result<Self> {
+        cfg.validate()?;
+        Ok(Self { cfg, residuals: BTreeMap::new(), clock: 0, observations: 0 })
+    }
+
+    /// The active knob set.
+    pub fn config(&self) -> &CalibrationConfig {
+        &self.cfg
+    }
+
+    /// Fold one observe-window measurement into the (tenant, platform)
+    /// residual. Non-finite or non-positive inputs are dropped (a shed
+    /// window or a division by a zero prediction must not poison the
+    /// EWMA). Returns whether the observation was accepted.
+    pub fn observe(
+        &mut self,
+        tenant: u64,
+        platform: &str,
+        predicted_us: f64,
+        observed_us: f64,
+    ) -> bool {
+        if !(predicted_us.is_finite() && predicted_us > 0.0) {
+            return false;
+        }
+        if !(observed_us.is_finite() && observed_us > 0.0) {
+            return false;
+        }
+        let ratio = observed_us / predicted_us;
+        if !ratio.is_finite() {
+            return false;
+        }
+        self.clock += 1;
+        self.observations += 1;
+        let key = (tenant, platform.to_string());
+        match self.residuals.get_mut(&key) {
+            Some(r) => {
+                r.ratio_ewma = self.cfg.alpha * ratio
+                    + (1.0 - self.cfg.alpha) * r.ratio_ewma;
+                r.samples = r.samples.saturating_add(1);
+                r.touch = self.clock;
+            }
+            None => {
+                self.residuals.insert(
+                    key,
+                    Residual { ratio_ewma: ratio, samples: 1, touch: self.clock },
+                );
+                self.enforce_bound();
+            }
+        }
+        true
+    }
+
+    /// Evict least-recently-touched residuals beyond the bound.
+    fn enforce_bound(&mut self) {
+        while self.residuals.len() > self.cfg.max_entries {
+            let oldest = self
+                .residuals
+                .iter()
+                .min_by_key(|(_, r)| r.touch)
+                .map(|(k, _)| k.clone());
+            match oldest {
+                Some(k) => {
+                    self.residuals.remove(&k);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// The multiplicative correction decisions should apply to the
+    /// analytic score of `tenant` on `platform`: exactly `1.0` until the
+    /// trust ramp completes, then the residual EWMA clamped into
+    /// `[min_correction, max_correction]`.
+    pub fn correction(&self, tenant: u64, platform: &str) -> f64 {
+        match self.residuals.get(&(tenant, platform.to_string())) {
+            Some(r) if r.samples >= self.cfg.min_samples => {
+                r.ratio_ewma.clamp(self.cfg.min_correction, self.cfg.max_correction)
+            }
+            _ => 1.0,
+        }
+    }
+
+    /// Whether `tenant` has any residual past the trust ramp (on any
+    /// platform). Engines skip the blend entirely when no tenant is
+    /// trusted, preserving the bit-for-bit analytic path.
+    pub fn is_trusted(&self, tenant: u64, platform: &str) -> bool {
+        self.residuals
+            .get(&(tenant, platform.to_string()))
+            .is_some_and(|r| r.samples >= self.cfg.min_samples)
+    }
+
+    /// Drop every residual for `tenant` (all platforms). Called by the
+    /// engine on [`crate::engine::GacerEngine::evict`] so a readmitted
+    /// tenant restarts its trust ramp from zero.
+    pub fn forget(&mut self, tenant: u64) {
+        self.residuals.retain(|(t, _), _| *t != tenant);
+    }
+
+    /// Number of residuals currently retained.
+    pub fn len(&self) -> usize {
+        self.residuals.len()
+    }
+
+    /// Whether the calibrator holds no residuals at all.
+    pub fn is_empty(&self) -> bool {
+        self.residuals.is_empty()
+    }
+
+    /// Number of residuals past the trust ramp.
+    pub fn trusted_count(&self) -> usize {
+        self.residuals
+            .values()
+            .filter(|r| r.samples >= self.cfg.min_samples)
+            .count()
+    }
+
+    /// Total observations ever accepted.
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// Snapshot every residual (deterministic key order) for
+    /// introspection and status printing.
+    pub fn entries(&self) -> Vec<CalibrationEntry> {
+        self.residuals
+            .iter()
+            .map(|((tenant, platform), r)| {
+                let trusted = r.samples >= self.cfg.min_samples;
+                CalibrationEntry {
+                    tenant: *tenant,
+                    platform: platform.clone(),
+                    ratio_ewma: r.ratio_ewma,
+                    samples: r.samples,
+                    trusted,
+                    correction: if trusted {
+                        r.ratio_ewma
+                            .clamp(self.cfg.min_correction, self.cfg.max_correction)
+                    } else {
+                        1.0
+                    },
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn calib() -> Calibrator {
+        Calibrator::new(CalibrationConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn untrusted_correction_is_exactly_one() {
+        let mut c = calib();
+        // min_samples = 3: two observations stay analytic-only.
+        c.observe(1, "titan-v", 100.0, 400.0);
+        c.observe(1, "titan-v", 100.0, 400.0);
+        assert_eq!(c.correction(1, "titan-v"), 1.0);
+        assert!(!c.is_trusted(1, "titan-v"));
+        // Third observation completes the ramp.
+        c.observe(1, "titan-v", 100.0, 400.0);
+        assert!(c.is_trusted(1, "titan-v"));
+        assert!(c.correction(1, "titan-v") > 1.0);
+    }
+
+    #[test]
+    fn unknown_pair_is_analytic() {
+        let c = calib();
+        assert_eq!(c.correction(42, "a100"), 1.0);
+        assert!(!c.is_trusted(42, "a100"));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn correction_converges_to_constant_bias_and_clamps() {
+        let mut c = calib();
+        for _ in 0..64 {
+            c.observe(7, "titan-v", 100.0, 250.0);
+        }
+        let k = c.correction(7, "titan-v");
+        assert!((k - 2.5).abs() < 1e-9, "EWMA of a constant converges: {k}");
+        // A 100x bias clamps at max_correction.
+        for _ in 0..64 {
+            c.observe(8, "titan-v", 1.0, 100.0);
+        }
+        assert_eq!(c.correction(8, "titan-v"), c.config().max_correction);
+        // A 100x speedup clamps at min_correction.
+        for _ in 0..64 {
+            c.observe(9, "titan-v", 100.0, 1.0);
+        }
+        assert_eq!(c.correction(9, "titan-v"), c.config().min_correction);
+    }
+
+    #[test]
+    fn residuals_are_per_platform() {
+        let mut c = calib();
+        for _ in 0..4 {
+            c.observe(1, "a100", 100.0, 300.0);
+        }
+        assert!(c.correction(1, "a100") > 1.0);
+        // Same tenant, different platform: still on the analytic path.
+        assert_eq!(c.correction(1, "t4"), 1.0);
+    }
+
+    #[test]
+    fn bad_observations_are_dropped() {
+        let mut c = calib();
+        assert!(!c.observe(1, "titan-v", 0.0, 100.0));
+        assert!(!c.observe(1, "titan-v", -5.0, 100.0));
+        assert!(!c.observe(1, "titan-v", f64::NAN, 100.0));
+        assert!(!c.observe(1, "titan-v", 100.0, 0.0));
+        assert!(!c.observe(1, "titan-v", 100.0, f64::INFINITY));
+        assert!(c.is_empty());
+        assert_eq!(c.observations(), 0);
+    }
+
+    #[test]
+    fn forget_resets_the_trust_ramp() {
+        let mut c = calib();
+        for _ in 0..8 {
+            c.observe(3, "titan-v", 100.0, 600.0);
+            c.observe(3, "t4", 100.0, 600.0);
+        }
+        assert!(c.is_trusted(3, "titan-v"));
+        assert!(c.is_trusted(3, "t4"));
+        c.forget(3);
+        assert_eq!(c.correction(3, "titan-v"), 1.0);
+        assert_eq!(c.correction(3, "t4"), 1.0);
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn lru_bound_evicts_the_coldest_entry() {
+        let mut c = Calibrator::new(CalibrationConfig {
+            max_entries: 2,
+            ..CalibrationConfig::default()
+        })
+        .unwrap();
+        c.observe(1, "titan-v", 100.0, 200.0);
+        c.observe(2, "titan-v", 100.0, 200.0);
+        // Touch tenant 1 so tenant 2 is the LRU victim.
+        c.observe(1, "titan-v", 100.0, 200.0);
+        c.observe(3, "titan-v", 100.0, 200.0);
+        assert_eq!(c.len(), 2);
+        let tenants: Vec<u64> = c.entries().iter().map(|e| e.tenant).collect();
+        assert_eq!(tenants, vec![1, 3], "tenant 2 was least recently touched");
+    }
+
+    #[test]
+    fn entries_snapshot_reports_trust_and_clamp() {
+        let mut c = calib();
+        for _ in 0..5 {
+            c.observe(1, "titan-v", 1.0, 1000.0);
+        }
+        c.observe(2, "titan-v", 100.0, 150.0);
+        let e = c.entries();
+        assert_eq!(e.len(), 2);
+        assert!(e[0].trusted);
+        assert_eq!(e[0].correction, c.config().max_correction);
+        assert!(!e[1].trusted);
+        assert_eq!(e[1].correction, 1.0);
+        assert!((e[1].ratio_ewma - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_knobs() {
+        let bad = |cfg: CalibrationConfig| Calibrator::new(cfg).is_err();
+        assert!(bad(CalibrationConfig { min_samples: 0, ..Default::default() }));
+        assert!(bad(CalibrationConfig { alpha: 0.0, ..Default::default() }));
+        assert!(bad(CalibrationConfig { alpha: 1.5, ..Default::default() }));
+        assert!(bad(CalibrationConfig { min_correction: 0.0, ..Default::default() }));
+        assert!(bad(CalibrationConfig {
+            min_correction: 2.0,
+            max_correction: 1.0,
+            ..Default::default()
+        }));
+        assert!(bad(CalibrationConfig { max_entries: 0, ..Default::default() }));
+        assert!(Calibrator::new(CalibrationConfig::default()).is_ok());
+    }
+}

@@ -1194,6 +1194,15 @@ pub struct ServeOptions {
     /// (`--slo`). Attaches an [`crate::slo::SloTarget`] (tracked by the
     /// engine's monitor) and a per-request deadline of 4x the target.
     pub slo_p99_ms: Option<f64>,
+    /// Attach the online cost-model calibrator (`--calibrate`): the
+    /// engine compares predicted against served latencies each observe
+    /// window and blends the trusted residual corrections into every
+    /// placement, admission, migration, and regulation decision (see
+    /// [`crate::calibrate`] and `docs/OPERATIONS.md`). After serving,
+    /// the driver feeds one observe window through
+    /// [`GacerEngine::record_latencies`] and prints the per-tenant
+    /// correction table.
+    pub calibrate: bool,
 }
 
 impl Default for ServeOptions {
@@ -1208,6 +1217,7 @@ impl Default for ServeOptions {
             cost_aware_migration: false,
             tiers: Vec::new(),
             slo_p99_ms: None,
+            calibrate: false,
         }
     }
 }
@@ -1248,6 +1258,9 @@ pub fn serve_demo(
         .artifacts(artifact_dir);
     if !opts.device_pool.is_empty() {
         builder = builder.device_pool(opts.device_pool.clone());
+    }
+    if opts.calibrate {
+        builder = builder.calibration(crate::calibrate::CalibrationConfig::default());
     }
     let slo_on = opts.slo_p99_ms.is_some() || !opts.tiers.is_empty();
     for (i, family) in tenant_models.iter().enumerate() {
@@ -1438,6 +1451,34 @@ pub fn serve_demo(
                     p.burn_slow
                 );
             }
+        }
+    }
+    if opts.calibrate {
+        // Close the calibration observe loop once. If the SLO block above
+        // already drained the latency buffers this drain is empty, which
+        // is fine — the calibrator saw the samples on the first drain.
+        if !slo_on {
+            engine.record_latencies(&server.take_latencies())?;
+        }
+        let entries = engine.corrections();
+        if entries.is_empty() {
+            println!("  calibration: no residuals yet (decisions stay analytic)");
+        } else {
+            for e in &entries {
+                println!(
+                    "  calibration tenant {} on {}: ratio {:.3} over {} samples \
+                     -> correction {:.3}{}",
+                    e.tenant,
+                    e.platform,
+                    e.ratio_ewma,
+                    e.samples,
+                    e.correction,
+                    if e.trusted { "" } else { " (ramping, not yet trusted)" }
+                );
+            }
+        }
+        if let Some(us) = engine.observed_fence_pause_us() {
+            println!("  calibration: observed swap-pause EWMA {us:.0}us");
         }
     }
     Ok(report)

@@ -105,8 +105,10 @@ impl Default for MigrationPolicy {
 /// ([`GacerEngine::migration_cost`]): `replan_us` from the EWMA of
 /// recent budgeted incremental re-search wall-times (×2 — a migration
 /// re-searches the source and the destination shard), `swap_pause_us`
-/// from the scheduler tick (the epoch-fence commit each affected device
-/// pays, see `docs/OPERATIONS.md`).
+/// from the EWMA of **observed** epoch-fence commit latencies (the
+/// pause each affected device pays at `redeploy`/`redeploy_cluster`,
+/// see `docs/OPERATIONS.md`), falling back to one scheduler tick until
+/// any redeploy has been measured.
 ///
 /// [`GacerEngine::migration_cost`]: crate::engine::GacerEngine::migration_cost
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -112,10 +112,12 @@ mod migration;
 
 pub use migration::{Migration, MigrationCost, MigrationPolicy, MigrationProposal};
 
+use std::cell::Cell;
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::PathBuf;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use crate::calibrate::{CalibrationConfig, CalibrationEntry, Calibrator};
 use crate::coordinator::{BatchPolicy, ClusterServer, Server, ServerConfig, TenantSpec};
 use crate::dfg::Dfg;
 use crate::error::{Error, Result};
@@ -225,6 +227,7 @@ pub struct EngineBuilder {
     pool: Option<Vec<Platform>>,
     objective: PlacementObjective,
     burn: BurnConfig,
+    calibration: Option<CalibrationConfig>,
     tenants: Vec<(Dfg, TenantMeta)>,
     next_id: u64,
 }
@@ -241,6 +244,7 @@ impl EngineBuilder {
             pool: None,
             objective: PlacementObjective::default(),
             burn: BurnConfig::default(),
+            calibration: None,
             tenants: Vec::new(),
             next_id: 0,
         }
@@ -349,6 +353,25 @@ impl EngineBuilder {
         self
     }
 
+    /// Enable the online cost-model calibration stage
+    /// ([`crate::calibrate`]): each [`GacerEngine::record_latencies`]
+    /// window compares the served per-tenant latency against the analytic
+    /// prediction ([`CostModel::predicted_colocated_latency_us`]) and
+    /// folds the residual into a bounded per-(tenant, device-platform)
+    /// EWMA; the clamped correction factors then scale the weights behind
+    /// placement, admission, migration, and
+    /// [`GacerEngine::maybe_regulate`]. Until a residual passes the trust
+    /// ramp ([`CalibrationConfig::min_samples`]) every decision is
+    /// bit-for-bit the analytic path. Knobs are validated at
+    /// [`EngineBuilder::build`]. Off by default.
+    ///
+    /// [`CostModel::predicted_colocated_latency_us`]:
+    ///     crate::profile::CostModel::predicted_colocated_latency_us
+    pub fn calibration(mut self, cfg: CalibrationConfig) -> Self {
+        self.calibration = Some(cfg);
+        self
+    }
+
     fn push(
         &mut self,
         dfg: Dfg,
@@ -441,6 +464,10 @@ impl EngineBuilder {
             None => None,
         };
         self.burn.validate()?;
+        let calibrator = match self.calibration {
+            Some(cfg) => Some(Calibrator::new(cfg)?),
+            None => None,
+        };
         let pool = match self.pool {
             Some(platforms) => DevicePool::from_platforms(platforms),
             None => DevicePool::uniform(self.platform, self.n_devices),
@@ -475,6 +502,8 @@ impl EngineBuilder {
             slo_monitor: SloMonitor::new(self.burn),
             pending_baseline_seed: BTreeSet::new(),
             evicted_serving: Vec::new(),
+            calibrator,
+            fence_pause_ewma_us: Cell::new(None),
             artifact_dir: self.artifact_dir,
             manifest,
         };
@@ -567,6 +596,20 @@ pub struct GacerEngine {
     /// same serving identity. Bounded at `EVICTED_SERVING_MEMORY`
     /// entries (oldest dropped).
     evicted_serving: Vec<(String, String)>,
+    /// The online predicted-vs-observed correction layer
+    /// ([`EngineBuilder::calibration`]); `None` = calibration off, every
+    /// decision purely analytic. Fed by
+    /// [`GacerEngine::record_latencies`], read through
+    /// [`GacerEngine::correction_scale`] by placement, admission,
+    /// migration, and regulation.
+    calibrator: Option<Calibrator>,
+    /// 50/50 EWMA of observed epoch-fence commit latencies (µs) from
+    /// [`GacerEngine::redeploy`] / [`GacerEngine::redeploy_cluster`] —
+    /// the measured swap-pause input to [`GacerEngine::migration_cost`]
+    /// (falls back to one scheduler tick until a fence is observed).
+    /// Interior-mutable because redeploys take `&self` (the plan is
+    /// read, not changed).
+    fence_pause_ewma_us: Cell<Option<f64>>,
     artifact_dir: Option<PathBuf>,
     manifest: Option<ArtifactManifest>,
 }
@@ -860,17 +903,25 @@ impl GacerEngine {
         // memory-capacity refusal must leave no trace of the newcomer.
         // The pool-aware choosers price the newcomer per candidate
         // device (and on a uniform reference pool reduce exactly to the
-        // homogeneous choosers).
+        // homogeneous choosers). Standing tenants' weights carry their
+        // calibrated corrections; the newcomer has no residual yet, so
+        // it is priced analytically everywhere — and with no trusted
+        // residual anywhere the scale is the identity and the scaled
+        // choosers delegate to the analytic ones bit-for-bit.
+        let scale = self.correction_scale();
         let device = match self.objective {
-            PlacementObjective::LoadBalance => {
-                self.sharded.placement.least_loaded_pool(&self.set, &self.pool, &dfg)
-            }
-            PlacementObjective::InterferenceAware => {
-                self.sharded.placement.least_interfering_pool(&self.set, &self.pool, &dfg)
-            }
-            PlacementObjective::MemoryAware => {
-                self.sharded.placement.fit_memory_aware_pool(&self.set, &self.pool, &dfg)?
-            }
+            PlacementObjective::LoadBalance => self
+                .sharded
+                .placement
+                .least_loaded_pool_scaled(&self.set, &self.pool, &dfg, &scale),
+            PlacementObjective::InterferenceAware => self
+                .sharded
+                .placement
+                .least_interfering_pool_scaled(&self.set, &self.pool, &dfg, &scale),
+            PlacementObjective::MemoryAware => self
+                .sharded
+                .placement
+                .fit_memory_aware_pool_scaled(&self.set, &self.pool, &dfg, &scale)?,
         };
         let id = TenantId(self.next_id);
         self.next_id += 1;
@@ -930,6 +981,12 @@ impl GacerEngine {
         self.slo_monitor.forget(id.0);
         self.served_window.forget(id.0);
         self.pending_baseline_seed.remove(&id.0);
+        // The trust ramp resets with the identity: a readmission under a
+        // fresh id starts analytic-only, and the dead id's residuals must
+        // not linger in the bounded store.
+        if let Some(c) = &mut self.calibrator {
+            c.forget(id.0);
+        }
         let dfg = self.set.evict(idx);
         self.sharded.placement.remove_slot(idx);
         self.sharded.shards[device].remove_tenant(local);
@@ -958,10 +1015,26 @@ impl GacerEngine {
         // next incremental event starts from this re-plan's compiled
         // streams and converged plans.
         let mut states = vec![SearchState::default(); n_devices];
-        let report = ShardedSearch::new(&self.set, self.opts, self.search_cfg)
+        let search = ShardedSearch::new(&self.set, self.opts, self.search_cfg)
             .objective(self.objective)
-            .pool(&self.pool)
-            .run_warm(n_devices, &mut states);
+            .pool(&self.pool);
+        // A trusted calibration residual re-weights the placement: the
+        // mis-modeled tenant is priced at its corrected cost before the
+        // per-shard searches run. With no trusted residual the scale is
+        // the identity and this is the plain analytic cold re-plan,
+        // bit-for-bit.
+        let scale = self.correction_scale();
+        let report = if scale.iter().all(|&k| k == 1.0) {
+            search.run_warm(n_devices, &mut states)
+        } else {
+            let placement = Placement::with_objective_pool_scaled(
+                &self.set,
+                &self.pool,
+                self.objective,
+                &scale,
+            );
+            search.run_placed_warm(placement, &mut states)
+        };
         self.search_states = states;
         let bottleneck = report.bottleneck_device();
         self.last_report =
@@ -1053,13 +1126,16 @@ impl GacerEngine {
     /// Build a [`MigrationCost`] from the engine's own observed
     /// telemetry: re-plan cost is twice the EWMA of recent incremental
     /// re-search wall-times (a migration re-searches the source and
-    /// destination shards), swap pause is one scheduler tick per
-    /// affected device (the epoch-fence commit latency of
-    /// `docs/OPERATIONS.md`). Before any incremental event has run, the
-    /// re-plan cost falls back to the slowest *cold* per-device search
-    /// of the current deployment — a conservative upper bound (a cold
-    /// search costs more than a seeded one), so the gate never prices an
-    /// unknown re-plan as free. Pair it with
+    /// destination shards), swap pause is the **observed** epoch-fence
+    /// commit latency — an EWMA over the wall-time of recent
+    /// [`GacerEngine::redeploy`] / [`GacerEngine::redeploy_cluster`]
+    /// calls — falling back to one scheduler tick per affected device
+    /// (the analytic guess of `docs/OPERATIONS.md`) until any redeploy
+    /// has been measured. Before any incremental event has run, the
+    /// re-plan cost likewise falls back to the slowest *cold* per-device
+    /// search of the current deployment — a conservative upper bound (a
+    /// cold search costs more than a seeded one), so the gate never
+    /// prices an unknown re-plan as free. Pair it with
     /// [`MigrationPolicy::cost_aware`] to get a policy that only moves a
     /// tenant when the predicted gain pays for the disruption within
     /// `payback_windows` observe windows.
@@ -1071,11 +1147,44 @@ impl GacerEngine {
                 .map(|r| r.elapsed.as_secs_f64() * 1e6)
                 .fold(0.0, f64::max)
         });
+        let swap_pause_us = self
+            .fence_pause_ewma_us
+            .get()
+            .unwrap_or(self.tick.as_secs_f64() * 1e6);
         MigrationCost {
             replan_us: 2.0 * per_shard,
-            swap_pause_us: self.tick.as_secs_f64() * 1e6,
+            swap_pause_us,
             payback_windows,
         }
+    }
+
+    /// Fold one observed epoch-fence commit (a redeploy's wall-time)
+    /// into the swap-pause telemetry [`GacerEngine::migration_cost`]
+    /// consumes — the same 50/50 EWMA shape as the re-plan cost, held in
+    /// a [`Cell`] because redeploys take `&self`.
+    fn note_fence_pause(&self, elapsed: Duration) {
+        let us = elapsed.as_secs_f64() * 1e6;
+        self.fence_pause_ewma_us.set(Some(match self.fence_pause_ewma_us.get() {
+            Some(prev) => 0.5 * prev + 0.5 * us,
+            None => us,
+        }));
+    }
+
+    /// Observed epoch-fence commit latency (µs, EWMA over recent
+    /// [`GacerEngine::redeploy`] / [`GacerEngine::redeploy_cluster`]
+    /// wall-times). `None` until the engine has redeployed anything —
+    /// [`GacerEngine::migration_cost`] then falls back to one scheduler
+    /// tick.
+    pub fn observed_fence_pause_us(&self) -> Option<f64> {
+        self.fence_pause_ewma_us.get()
+    }
+
+    /// Feed an externally measured fence pause into the swap-pause
+    /// telemetry — for operations loops that time the commit themselves
+    /// (e.g. around a maintenance drain) instead of going through
+    /// [`GacerEngine::redeploy_cluster`].
+    pub fn record_fence_pause(&self, elapsed: Duration) {
+        self.note_fence_pause(elapsed);
     }
 
     fn rebuild_merged(&mut self) {
@@ -1242,7 +1351,15 @@ impl GacerEngine {
     /// assert_eq!(server.tenant_specs().len(), 2);
     /// ```
     pub fn redeploy(&self, server: &Server) -> Result<()> {
-        server.apply(self.deployment()?)
+        let deployment = self.deployment()?;
+        // Time only the fence commit itself (the lowering above is
+        // engine-side work the serving path never pauses for).
+        let start = Instant::now();
+        let out = server.apply(deployment);
+        if out.is_ok() {
+            self.note_fence_pause(start.elapsed());
+        }
+        out
     }
 
     /// Propagate the engine's current sharded plan to a **running**
@@ -1271,7 +1388,17 @@ impl GacerEngine {
     /// assert_eq!(touched.len(), 1, "only the admitting device swaps");
     /// ```
     pub fn redeploy_cluster(&self, cluster: &ClusterServer) -> Result<Vec<usize>> {
-        cluster.apply(self.sharded_deployment()?)
+        let deployment = self.sharded_deployment()?;
+        let start = Instant::now();
+        let out = cluster.apply(deployment);
+        // A no-op diff pauses nothing — only commits that actually
+        // swapped a device teach the swap-pause estimate.
+        if let Ok(touched) = &out {
+            if !touched.is_empty() {
+                self.note_fence_pause(start.elapsed());
+            }
+        }
+        out
     }
 
     // ---- load-drift migration ----
@@ -1337,6 +1464,15 @@ impl GacerEngine {
     /// ignored by the monitor, so the full cluster drain can be fed
     /// unfiltered. The operations loop calls this beside
     /// [`GacerEngine::record_served`] once per observe window.
+    ///
+    /// When the engine was built with [`EngineBuilder::calibration`],
+    /// this is also the **observe→calibrate** step: each tenant's window
+    /// mean is compared against the cost model's prediction for its
+    /// current co-location
+    /// ([`CostModel::predicted_colocated_latency_us`]) and the residual
+    /// feeds the [`Calibrator`]. Tenants with an empty sample buffer
+    /// this window contribute no observation (their trust ramp neither
+    /// advances nor resets).
     pub fn record_latencies(&mut self, samples: &[Vec<f64>]) -> Result<()> {
         if samples.len() != self.len() {
             return Err(Error::InvalidConfig(format!(
@@ -1347,6 +1483,43 @@ impl GacerEngine {
         }
         for (m, s) in self.meta.iter().zip(samples) {
             self.slo_monitor.observe(m.id.0, s);
+        }
+        if self.calibrator.is_some() {
+            // Price every observed tenant against the *current* plan
+            // first (immutable borrows of set/pool/placement), then
+            // mutate the calibrator.
+            let mut obs: Vec<(u64, &'static str, f64, f64)> = Vec::new();
+            for (slot, (m, s)) in self.meta.iter().zip(samples).enumerate() {
+                if s.is_empty() {
+                    continue;
+                }
+                let Some((device, _)) = self.sharded.placement.locate(slot) else {
+                    continue;
+                };
+                let cotenants: Vec<&Dfg> = self
+                    .sharded
+                    .placement
+                    .tenants_on(device)
+                    .iter()
+                    .filter(|&&t| t != slot)
+                    .map(|&t| &self.set.tenants[t])
+                    .collect();
+                let predicted = self
+                    .pool
+                    .cost(device)
+                    .predicted_colocated_latency_us(&self.set.tenants[slot], &cotenants);
+                let observed = s.iter().sum::<f64>() / s.len() as f64;
+                obs.push((
+                    m.id.0,
+                    self.pool.platform(device).name,
+                    predicted,
+                    observed,
+                ));
+            }
+            let calibrator = self.calibrator.as_mut().expect("checked above");
+            for (id, platform, predicted, observed) in obs {
+                calibrator.observe(id, platform, predicted, observed);
+            }
         }
         Ok(())
     }
@@ -1377,14 +1550,24 @@ impl GacerEngine {
     /// demand is recorded, falls back to the cost model alone (the same
     /// weights the initial placement balanced, i.e. "assume uniform
     /// traffic").
+    ///
+    /// Under [`EngineBuilder::calibration`], each weight additionally
+    /// carries the tenant's trusted correction factor for the platform
+    /// it currently runs on ([`GacerEngine::corrections`]) — a tenant
+    /// the cost model underprices 3× weighs 3× heavier to the migration
+    /// and regulation thresholds. Untrusted or absent residuals
+    /// contribute exactly 1.0, so the analytic weights are unchanged
+    /// until the trust ramp fills.
     pub fn observed_tenant_weights(&self) -> Vec<f64> {
         let observed = self.meta.iter().any(|m| m.demand > 0.0);
+        let scale = self.correction_scale();
         self.set
             .tenants
             .iter()
             .zip(&self.meta)
-            .map(|(dfg, m)| {
-                let per_request = self.set.cost.sequential_latency_us(dfg);
+            .zip(&scale)
+            .map(|((dfg, m), &k)| {
+                let per_request = self.set.cost.sequential_latency_us(dfg) * k;
                 if observed {
                     m.demand * per_request
                 } else {
@@ -1392,6 +1575,53 @@ impl GacerEngine {
                 }
             })
             .collect()
+    }
+
+    // ---- online calibration ----
+
+    /// Per-slot correction factors for the calibrated decision paths:
+    /// each tenant's trusted residual for the platform of the device it
+    /// currently occupies, 1.0 for untrusted/unknown pairs, unplaced
+    /// slots, or an uncalibrated engine. Multiplying by 1.0 is
+    /// bit-exact in IEEE 754, so an all-identity scale perturbs
+    /// nothing.
+    fn correction_scale(&self) -> Vec<f64> {
+        let Some(c) = &self.calibrator else {
+            return vec![1.0; self.len()];
+        };
+        self.meta
+            .iter()
+            .enumerate()
+            .map(|(slot, m)| match self.sharded.placement.locate(slot) {
+                Some((device, _)) => {
+                    c.correction(m.id.0, self.pool.platform(device).name)
+                }
+                None => 1.0,
+            })
+            .collect()
+    }
+
+    /// The engine's online calibrator (read-only introspection), or
+    /// `None` when the engine was built without
+    /// [`EngineBuilder::calibration`].
+    pub fn calibration(&self) -> Option<&Calibrator> {
+        self.calibrator.as_ref()
+    }
+
+    /// Snapshot every (tenant, platform) residual the calibrator holds
+    /// — trust state, clamped correction, raw ratio EWMA — for dashboards
+    /// and the `serve --calibrate` console. Empty when the engine is
+    /// uncalibrated or nothing has been observed yet.
+    pub fn corrections(&self) -> Vec<CalibrationEntry> {
+        self.calibrator.as_ref().map(Calibrator::entries).unwrap_or_default()
+    }
+
+    /// One tenant's effective correction factor on its **current**
+    /// device (1.0 when untrusted, unplaced, or the engine is
+    /// uncalibrated). Errors only on an unknown id.
+    pub fn correction_of(&self, id: TenantId) -> Result<f64> {
+        let slot = self.index_of(id)?;
+        Ok(self.correction_scale()[slot])
     }
 
     /// Per-device observed load: [`GacerEngine::observed_tenant_weights`]
@@ -2762,5 +2992,117 @@ mod tests {
         assert!(matches!(err, Error::DrainImpossible(_)));
         assert_eq!(engine.n_devices(), 1, "pool left unchanged");
         engine.plan().validate(engine.tenants()).unwrap();
+    }
+
+    // ---- online calibration ----
+
+    fn calibrated_sharded(names: &[&str], devices: usize) -> GacerEngine {
+        let mut b = GacerEngine::builder()
+            .devices(devices)
+            .search(quick_cfg())
+            .calibration(CalibrationConfig::default());
+        for n in names {
+            b = b.tenant(zoo::build_default(n).unwrap());
+        }
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn uncalibrated_engine_has_no_correction_surface() {
+        let engine = demo_sharded(&["Alex", "R18"], 2);
+        assert!(engine.calibration().is_none());
+        assert!(engine.corrections().is_empty());
+        let id = engine.tenant_ids()[0];
+        assert_eq!(engine.correction_of(id).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn zero_observation_calibration_is_bit_for_bit_analytic() {
+        let analytic = demo_sharded(&["Alex", "V16", "R18"], 2);
+        let mut calibrated = calibrated_sharded(&["Alex", "V16", "R18"], 2);
+        // Same build, same plan, same weights — the trust ramp has not
+        // even started.
+        assert_eq!(calibrated.sharded_plan(), analytic.sharded_plan());
+        assert_eq!(
+            calibrated.observed_tenant_weights(),
+            analytic.observed_tenant_weights()
+        );
+        // An empty-sample window advances nothing...
+        let empty = vec![Vec::new(); 3];
+        calibrated.record_latencies(&empty).unwrap();
+        assert_eq!(calibrated.calibration().unwrap().observations(), 0);
+        // ...and below min_samples every correction stays exactly 1.0,
+        // so a cold replan matches the analytic engine bit-for-bit.
+        calibrated.replan();
+        assert_eq!(calibrated.sharded_plan(), analytic.sharded_plan());
+        for id in calibrated.tenant_ids() {
+            assert_eq!(calibrated.correction_of(id).unwrap(), 1.0);
+        }
+    }
+
+    #[test]
+    fn observed_windows_ramp_trust_and_scale_the_weights() {
+        let mut engine = calibrated_sharded(&["Alex", "R18"], 2);
+        let ids = engine.tenant_ids();
+        let analytic = engine.observed_tenant_weights();
+        // Serve tenant 0 at 4x its predicted latency for enough windows
+        // to pass the default trust ramp (min_samples = 3).
+        let slot0 = engine.index_of(ids[0]).unwrap();
+        let d0 = engine.device_of(ids[0]).unwrap();
+        let predicted = engine.pool.cost(d0).predicted_colocated_latency_us(
+            &engine.tenants()[slot0],
+            &[],
+        );
+        for _ in 0..4 {
+            let samples = vec![vec![4.0 * predicted; 8], Vec::new()];
+            engine.record_latencies(&samples).unwrap();
+        }
+        let k = engine.correction_of(ids[0]).unwrap();
+        assert!((k - 4.0).abs() < 1e-9, "constant 4x residual converges: {k}");
+        assert_eq!(engine.correction_of(ids[1]).unwrap(), 1.0);
+        let scaled = engine.observed_tenant_weights();
+        assert!((scaled[0] - 4.0 * analytic[0]).abs() < 1e-6);
+        assert_eq!(scaled[1], analytic[1]);
+        // The introspection snapshot agrees.
+        let entries = engine.corrections();
+        assert_eq!(entries.len(), 1);
+        assert!(entries[0].trusted);
+        assert_eq!(entries[0].tenant, ids[0].0);
+    }
+
+    #[test]
+    fn evict_forgets_the_residual_and_restarts_the_ramp() {
+        let mut engine = calibrated_sharded(&["Alex", "R18"], 2);
+        let ids = engine.tenant_ids();
+        for _ in 0..4 {
+            let samples = vec![vec![1_000_000.0; 4], Vec::new()];
+            engine.record_latencies(&samples).unwrap();
+        }
+        assert!(engine.correction_of(ids[0]).unwrap() > 1.0);
+        engine.evict(ids[0]).unwrap();
+        assert!(
+            engine.corrections().is_empty(),
+            "eviction drops the tenant's residuals"
+        );
+        // A readmission gets a fresh id and a fresh (analytic) ramp.
+        let id = engine.admit(zoo::build_default("Alex").unwrap()).unwrap();
+        assert_eq!(engine.correction_of(id).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn fence_pause_telemetry_feeds_migration_cost() {
+        let engine = demo_engine(&["Alex"]);
+        // Before any redeploy is measured, the swap pause falls back to
+        // one scheduler tick.
+        let tick_us = engine.tick.as_secs_f64() * 1e6;
+        assert!(engine.observed_fence_pause_us().is_none());
+        assert_eq!(engine.migration_cost(2.0).swap_pause_us, tick_us);
+        // An externally timed fence seeds the EWMA...
+        engine.record_fence_pause(Duration::from_micros(400));
+        assert_eq!(engine.observed_fence_pause_us(), Some(400.0));
+        assert_eq!(engine.migration_cost(2.0).swap_pause_us, 400.0);
+        // ...and later fences fold in 50/50.
+        engine.record_fence_pause(Duration::from_micros(200));
+        assert_eq!(engine.observed_fence_pause_us(), Some(300.0));
     }
 }

@@ -536,4 +536,67 @@ mod tests {
         assert_eq!(out.makespan_us, 0.0);
         assert_eq!(out.residue, 0.0);
     }
+
+    #[test]
+    fn r_mem_pricing_matches_the_analytic_slowdown() {
+        // Closed-form check of the bandwidth axis: two 20%-SM ops with
+        // 90% memory demand each. SM fits (r_sm = 1.0), bandwidth
+        // oversubscribes at 180% (r_mem = 1.8), so r_eff = 1.8 and the
+        // penalty is 1 + 0.25 * 0.8 = 1.2 — a global slowdown of
+        // 1.8 * 1.2 = 2.16, putting both 100us ops at exactly 216us.
+        let mut a = op(20.0, 100.0, 0);
+        let mut b = op(20.0, 100.0, 0);
+        a.mem_util = 90.0;
+        b.mem_util = 90.0;
+        let out = GpuSim::new(opts()).run(&[vec![a], vec![b]]);
+        assert!((out.makespan_us - 216.0).abs() < 1e-6, "{}", out.makespan_us);
+        // And the residue identity still balances under memory pricing.
+        assert!(
+            (out.residue - (100.0 * out.makespan_us - out.used_sm_time)).abs() < 1e-6
+        );
+    }
+
+    #[test]
+    fn contention_axes_take_the_max_not_the_sum() {
+        // 75 + 75 SM (r_sm = 1.5) against 80 + 80 bandwidth
+        // (r_mem = 1.6): the roofline governs by the tighter axis only —
+        // r_eff = 1.6, penalty 1.15, slowdown 1.84, makespan 184 — not
+        // some compounded product of both ratios.
+        let mut a = op(75.0, 100.0, 0);
+        let mut b = op(75.0, 100.0, 0);
+        a.mem_util = 80.0;
+        b.mem_util = 80.0;
+        let out = GpuSim::new(opts()).run(&[vec![a], vec![b]]);
+        assert!((out.makespan_us - 184.0).abs() < 1e-6, "{}", out.makespan_us);
+    }
+
+    #[test]
+    fn timeline_captures_contention_then_solo_phases() {
+        // One long op (60%, 100us) against one short (60%, 50us):
+        // interval 1 runs both at demand 120% — r = 1.2, penalty 1.05,
+        // slowdown 1.26, useful occupancy 100/1.05 — until the short op
+        // finishes at 63us; interval 2 runs the survivor solo at 60%
+        // until 113us. The captured timeline must show exactly those two
+        // phases, and the op records the exact start/end stamps.
+        let out = GpuSim::new(opts()).run(&[
+            vec![op(60.0, 100.0, 0)],
+            vec![op(60.0, 50.0, 0)],
+        ]);
+        assert!((out.makespan_us - 113.0).abs() < 1e-6, "{}", out.makespan_us);
+        let tr = out.trace.as_ref().unwrap();
+        let iv = tr.intervals();
+        assert_eq!(iv.len(), 2, "two utilization phases");
+        assert!((iv[0].start_us - 0.0).abs() < 1e-9);
+        assert!((iv[0].end_us - 63.0).abs() < 1e-6);
+        assert!((iv[0].occupancy - 100.0 / 1.05).abs() < 1e-6);
+        assert!((iv[1].end_us - 113.0).abs() < 1e-6);
+        assert!((iv[1].occupancy - 60.0).abs() < 1e-9);
+        let mut recs = out.op_records.unwrap();
+        recs.sort_by(|a, b| a.end_us.partial_cmp(&b.end_us).unwrap());
+        assert_eq!(recs[0].stream, 1);
+        assert!((recs[0].end_us - 63.0).abs() < 1e-6);
+        assert_eq!(recs[1].stream, 0);
+        assert!((recs[1].end_us - 113.0).abs() < 1e-6);
+        assert!(recs.iter().all(|r| r.start_us == 0.0));
+    }
 }

@@ -163,4 +163,56 @@ mod tests {
     fn sparkline_length_matches_bins() {
         assert_eq!(t3().sparkline(16).chars().count(), 16);
     }
+
+    #[test]
+    fn resample_splits_intervals_across_misaligned_bins() {
+        // 3 bins over a 40us span (width 13.33us) cut through both
+        // interval boundaries of t3: bin 0 mixes 10us at 100% with
+        // 3.33us at 50% (= 87.5%), bin 1 mixes the tail of the 50%
+        // interval with idle (= 25%), bin 2 is fully idle.
+        let bins = t3().resample(3);
+        assert_eq!(bins.len(), 3);
+        assert!((bins[0] - 87.5).abs() < 1e-6, "{}", bins[0]);
+        assert!((bins[1] - 25.0).abs() < 1e-6, "{}", bins[1]);
+        assert!(bins[2].abs() < 1e-6, "{}", bins[2]);
+        // Mass conservation: bins * width re-integrate to the trace's
+        // total work (100*10 + 50*10 = 1500 percent-us).
+        let width = t3().makespan_us() / 3.0;
+        let work: f64 = bins.iter().map(|b| b * width).sum();
+        assert!((work - 1500.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_trace_is_zero_everywhere() {
+        let tr = UtilTrace::new();
+        assert_eq!(tr.makespan_us(), 0.0);
+        assert_eq!(tr.mean_occupancy(), 0.0);
+        assert_eq!(tr.idle_fraction(50.0), 0.0);
+        assert_eq!(tr.resample(5), vec![0.0; 5]);
+        assert_eq!(tr.resample(0), Vec::<f64>::new());
+        assert_eq!(tr.sparkline(4), "▁▁▁▁");
+    }
+
+    #[test]
+    fn gapped_or_distinct_intervals_never_merge() {
+        let mut tr = UtilTrace::new();
+        tr.push(0.0, 5.0, 60.0);
+        // A time gap blocks merging even at equal occupancy...
+        tr.push(7.0, 9.0, 60.0);
+        // ...and adjacency does not merge distinct occupancies.
+        tr.push(9.0, 12.0, 30.0);
+        assert_eq!(tr.intervals().len(), 3);
+        assert!((tr.makespan_us() - 12.0).abs() < 1e-12);
+        // The unrecorded [5, 7] gap still dilutes the time-weighted
+        // mean: (60*5 + 60*2 + 30*3) / 12 = 42.5.
+        assert!((tr.mean_occupancy() - 42.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_fraction_threshold_is_strict() {
+        // t3 holds 50% occupancy for 10 of 40us: a threshold AT 50 must
+        // not count it (strictly below), a nudge above must.
+        assert!((t3().idle_fraction(50.0) - 0.5).abs() < 1e-9);
+        assert!((t3().idle_fraction(50.1) - 0.75).abs() < 1e-9);
+    }
 }

@@ -47,6 +47,7 @@
 
 pub mod baselines;
 pub mod bench_util;
+pub mod calibrate;
 pub mod coordinator;
 pub mod dfg;
 pub mod engine;
@@ -69,6 +70,7 @@ pub use error::{Error, Result};
 /// flow used by examples, benches, and the CLI.
 pub mod prelude {
     pub use crate::baselines::{Baseline, BaselineKind};
+    pub use crate::calibrate::{CalibrationConfig, CalibrationEntry, Calibrator};
     pub use crate::coordinator::{
         ClusterServer, CompletionMode, Pending, ServerBackend, SyntheticModel,
     };

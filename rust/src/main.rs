@@ -8,7 +8,7 @@
 //!                  [--placement balanced|interference|memory] [--replan-budget-ms N]
 //!   gacer serve    [--artifacts artifacts] [--requests 64] [--tenants tiny_cnn,...] [--devices 1]
 //!                  [--placement balanced|interference|memory] [--live-admit tiny_cnn]
-//!                  [--replan-budget-ms N] [--migration-cost-aware]
+//!                  [--replan-budget-ms N] [--migration-cost-aware] [--calibrate]
 //!                  [--tier interactive,batch,...] [--slo MS]
 //!   gacer loadtest [--rate 4000] [--duration-ms 1000] [--trace poisson|bursty|diurnal]
 //!                  [--tenants 4] [--seed 7] [--queue-cap N] [--completion batched|per-request]
@@ -51,7 +51,7 @@ const USAGE: &str = "usage: gacer <simulate|search|serve|loadtest> [options]
            [--placement balanced|interference|memory] [--replan-budget-ms N]
   serve    --artifacts artifacts --requests 64 --tenants tiny_cnn,tiny_cnn,tiny_cnn --devices 1
            [--placement balanced|interference|memory] [--live-admit tiny_cnn]
-           [--replan-budget-ms N] [--migration-cost-aware]
+           [--replan-budget-ms N] [--migration-cost-aware] [--calibrate]
            [--tier interactive,batch,...] [--slo MS]
   loadtest --rate 4000 --duration-ms 1000 [--trace poisson|bursty|diurnal]
            [--tenants 4] [--seed 7] [--queue-cap N]
@@ -92,6 +92,13 @@ const USAGE: &str = "usage: gacer <simulate|search|serve|loadtest> [options]
                 migration policy priced from the engine's observed re-plan
                 telemetry (a move must pay for its re-plan + swap pause)
                 and hot-swap the decision in
+  --calibrate   under `serve`: attach the online cost-model calibrator —
+                the engine compares predicted against served latencies
+                each observe window, keeps bounded per-(tenant, platform)
+                residual EWMAs, and blends the trusted corrections into
+                placement, admission, migration, and regulation decisions
+                (trust ramps from zero, so a cold engine behaves exactly
+                like the analytic one; see docs/OPERATIONS.md)
   --tier interactive,standard,batch
                 under `serve`: per-tenant SLO tier, comma list parallel to
                 --tenants (missing entries default to standard). Higher
@@ -296,6 +303,7 @@ fn main() -> gacer::Result<()> {
                 cost_aware_migration: args.flag("migration-cost-aware"),
                 tiers: parse_tiers(args.opt("tier")),
                 slo_p99_ms: parse_slo_ms(args.opt("slo")),
+                calibrate: args.flag("calibrate"),
             };
             gacer::coordinator::serve_demo(&artifacts, &tenants, &opts)?;
         }

@@ -279,6 +279,17 @@ impl LatencyHistogram {
     /// Multi-quantile snapshot in one pass over the (already sorted)
     /// samples — the monitor-facing alternative to calling
     /// [`LatencyHistogram::percentile_us`] three times per window.
+    ///
+    /// Edge cases are part of the contract, not accidents of the
+    /// reservoir:
+    ///
+    /// * **Empty histogram** — returns exactly [`Quantiles::default()`]
+    ///   (`n == 0`, every statistic `0.0`). Consumers that must
+    ///   distinguish "no traffic" from "all-zero latency" check
+    ///   [`Quantiles::is_empty`], never a `0.0` percentile.
+    /// * **Single sample** — every percentile, the mean, and the max
+    ///   collapse to that one sample (nearest-rank over a one-element
+    ///   reservoir), so `p50 == p99 == max` is expected, not a bug.
     pub fn quantiles(&self) -> Quantiles {
         Quantiles {
             n: self.len(),
@@ -301,6 +312,11 @@ impl LatencyHistogram {
 }
 
 /// Fixed multi-quantile snapshot of a [`LatencyHistogram`].
+///
+/// The all-zero [`Quantiles::default`] is the typed "no samples"
+/// value — [`LatencyHistogram::quantiles`] returns it for an empty
+/// histogram, and [`Quantiles::is_empty`] is the supported way to test
+/// for it.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Quantiles {
     pub n: usize,
@@ -309,6 +325,15 @@ pub struct Quantiles {
     pub p95_us: f64,
     pub p99_us: f64,
     pub max_us: f64,
+}
+
+impl Quantiles {
+    /// Whether this snapshot summarizes zero samples (the statistics are
+    /// then the `0.0` placeholders of [`Quantiles::default`], not
+    /// measurements).
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
 }
 
 /// Throughput window: completed items over elapsed wall time.
@@ -400,6 +425,34 @@ mod tests {
         h.record_us(f64::NAN);
         assert_eq!(h.len(), 1);
         assert_eq!(h.percentile_us(0.99), 42.0);
+    }
+
+    #[test]
+    fn empty_histogram_quantiles_are_the_typed_default() {
+        let h = LatencyHistogram::new();
+        let q = h.quantiles();
+        assert_eq!(q, Quantiles::default(), "empty snapshot is the typed zero");
+        assert!(q.is_empty());
+        assert_eq!(q.n, 0);
+        assert_eq!(q.mean_us, 0.0);
+        assert_eq!(q.p50_us, 0.0);
+        assert_eq!(q.p95_us, 0.0);
+        assert_eq!(q.p99_us, 0.0);
+        assert_eq!(q.max_us, 0.0);
+    }
+
+    #[test]
+    fn single_sample_quantiles_collapse_to_that_sample() {
+        let mut h = LatencyHistogram::new();
+        h.record_us(123.5);
+        let q = h.quantiles();
+        assert!(!q.is_empty());
+        assert_eq!(q.n, 1);
+        assert_eq!(q.mean_us, 123.5);
+        assert_eq!(q.p50_us, 123.5);
+        assert_eq!(q.p95_us, 123.5);
+        assert_eq!(q.p99_us, 123.5);
+        assert_eq!(q.max_us, 123.5);
     }
 
     #[test]

@@ -350,6 +350,27 @@ impl InterferenceCtx {
     fn slot_footprint(&self, slot: usize) -> f64 {
         self.footprints.get(slot).copied().unwrap_or(0.0)
     }
+
+    /// Multiply each slot's serial-latency weight by a calibrated
+    /// correction factor (`scale[slot]`, one per standing tenant). Only
+    /// the load axis is scaled: occupancy/bandwidth timelines stay
+    /// analytic — the calibrator corrects *how much time* a tenant
+    /// costs, not *which resources* it touches. HBM footprints are
+    /// physical and likewise unscaled.
+    fn apply_scale(&mut self, scale: &[f64]) {
+        for (w, &k) in self.weights.iter_mut().zip(scale) {
+            *w *= k;
+        }
+    }
+}
+
+/// Whether a calibration scale vector is the identity — every factor
+/// exactly `1.0`. The scaled placement entry points delegate to their
+/// analytic siblings in this case, which is what makes the
+/// zero-observation path bit-for-bit identical (not merely numerically
+/// close) to the uncalibrated engine.
+fn scale_is_trivial(scale: &[f64]) -> bool {
+    scale.iter().all(|&k| k == 1.0)
 }
 
 /// Max local-refinement passes [`Placement::interference_aware`] runs
@@ -1067,6 +1088,257 @@ impl Placement {
         }
         let ctxs: Vec<InterferenceCtx> = (0..pool.len())
             .map(|d| InterferenceCtx::roofline_with(set, pool.cost(d)))
+            .collect();
+        let scores: Vec<f64> =
+            self.assignments.iter().enumerate().map(|(d, a)| ctxs[d].score(a)).collect();
+        let mut best: Option<(usize, f64, f64)> = None;
+        for (d, a) in self.assignments.iter().enumerate() {
+            if !fits(d) {
+                continue;
+            }
+            let extra_weight = pool.cost(d).sequential_latency_us(newcomer);
+            let extra_occ = pool.cost(d).occupancy_profile(newcomer);
+            let extra_mem = pool.cost(d).bandwidth_profile(newcomer);
+            let trial = ctxs[d].score_with(
+                a,
+                Some((extra_weight, extra_occ.as_slice(), extra_mem.as_slice())),
+            );
+            let resulting_max = scores
+                .iter()
+                .enumerate()
+                .map(|(o, &s)| if o == d { trial } else { s })
+                .fold(0.0f64, f64::max);
+            let better = match best {
+                None => true,
+                Some((_, m, s)) => {
+                    resulting_max < m || (resulting_max == m && trial < s)
+                }
+            };
+            if better {
+                best = Some((d, resulting_max, trial));
+            }
+        }
+        Ok(best.expect("at least one device fits").0)
+    }
+
+    /// Calibration-scaled [`Placement::with_objective_pool`]: each
+    /// standing slot's serial-latency weight is multiplied by
+    /// `scale[slot]` — the [`crate::calibrate::Calibrator`]'s clamped
+    /// `observed / predicted` correction — before the objective runs, so
+    /// a tenant the analytic model underprices is packed as the heavy
+    /// tenant it really is. Occupancy/bandwidth timelines and HBM
+    /// footprints stay analytic (see the scaling note on the ctx).
+    ///
+    /// With an identity scale (every factor exactly `1.0`) this
+    /// **delegates** to [`Placement::with_objective_pool`] — bit-for-bit,
+    /// not approximately — which is the calibration trust-ramp contract:
+    /// zero trusted observations means the analytic placement, unchanged.
+    pub fn with_objective_pool_scaled(
+        set: &TenantSet,
+        pool: &DevicePool,
+        objective: PlacementObjective,
+        scale: &[f64],
+    ) -> Self {
+        if scale_is_trivial(scale) {
+            return Self::with_objective_pool(set, pool, objective);
+        }
+        match objective {
+            PlacementObjective::LoadBalance => {
+                Self::balanced_pool_scaled(set, pool, scale)
+            }
+            PlacementObjective::InterferenceAware => {
+                let ctxs: Vec<InterferenceCtx> = (0..pool.len())
+                    .map(|d| {
+                        let mut c = InterferenceCtx::new_with(set, pool.cost(d));
+                        c.apply_scale(scale);
+                        c
+                    })
+                    .collect();
+                Self::min_max_greedy(set, &ctxs.iter().collect::<Vec<_>>())
+            }
+            PlacementObjective::MemoryAware => {
+                let ctxs: Vec<InterferenceCtx> = (0..pool.len())
+                    .map(|d| {
+                        let mut c = InterferenceCtx::roofline_with(set, pool.cost(d));
+                        c.apply_scale(scale);
+                        c
+                    })
+                    .collect();
+                Self::min_max_greedy(set, &ctxs.iter().collect::<Vec<_>>())
+            }
+        }
+    }
+
+    /// Calibration-scaled [`Placement::balanced_pool`]: LPT over
+    /// per-device serial latencies multiplied by each slot's correction
+    /// factor. Identity scale delegates to the analytic sibling.
+    pub fn balanced_pool_scaled(
+        set: &TenantSet,
+        pool: &DevicePool,
+        scale: &[f64],
+    ) -> Self {
+        if scale_is_trivial(scale) {
+            return Self::balanced_pool(set, pool);
+        }
+        let n_devices = pool.len();
+        let weights: Vec<Vec<f64>> = (0..n_devices)
+            .map(|d| {
+                set.tenants
+                    .iter()
+                    .enumerate()
+                    .map(|(s, t)| {
+                        pool.cost(d).sequential_latency_us(t)
+                            * scale.get(s).copied().unwrap_or(1.0)
+                    })
+                    .collect()
+            })
+            .collect();
+        let order_weight = |s: usize| {
+            weights.iter().map(|w| w[s]).fold(f64::NEG_INFINITY, f64::max)
+        };
+        let mut order: Vec<usize> = (0..set.len()).collect();
+        order.sort_by(|&a, &b| {
+            order_weight(b)
+                .partial_cmp(&order_weight(a))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut assignments = vec![Vec::new(); n_devices];
+        let mut loads = vec![0.0f64; n_devices];
+        for slot in order {
+            let device = (0..n_devices)
+                .min_by(|&a, &b| {
+                    (loads[a] + weights[a][slot])
+                        .partial_cmp(&(loads[b] + weights[b][slot]))
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .unwrap();
+            assignments[device].push(slot);
+            loads[device] += weights[device][slot];
+        }
+        Self::from_assignments(assignments)
+    }
+
+    /// Calibration-scaled [`Placement::least_loaded_pool`]: standing
+    /// loads are corrected by `scale`; the newcomer has no residual yet
+    /// (trust ramp) so it is priced analytically everywhere. Identity
+    /// scale delegates to the analytic sibling.
+    pub fn least_loaded_pool_scaled(
+        &self,
+        set: &TenantSet,
+        pool: &DevicePool,
+        newcomer: &Dfg,
+        scale: &[f64],
+    ) -> usize {
+        if scale_is_trivial(scale) {
+            return self.least_loaded_pool(set, pool, newcomer);
+        }
+        let loads: Vec<f64> = self
+            .assignments
+            .iter()
+            .enumerate()
+            .map(|(d, a)| {
+                a.iter()
+                    .map(|&s| {
+                        pool.cost(d).sequential_latency_us(&set.tenants[s])
+                            * scale.get(s).copied().unwrap_or(1.0)
+                    })
+                    .sum()
+            })
+            .collect();
+        (0..self.n_devices())
+            .min_by(|&a, &b| {
+                (loads[a] + pool.cost(a).sequential_latency_us(newcomer))
+                    .partial_cmp(
+                        &(loads[b] + pool.cost(b).sequential_latency_us(newcomer)),
+                    )
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .unwrap_or(0)
+    }
+
+    /// Calibration-scaled [`Placement::least_interfering_pool`]: every
+    /// device's standing score uses calibrated weights; the newcomer is
+    /// analytic (no residual yet). Identity scale delegates.
+    pub fn least_interfering_pool_scaled(
+        &self,
+        set: &TenantSet,
+        pool: &DevicePool,
+        newcomer: &Dfg,
+        scale: &[f64],
+    ) -> usize {
+        if scale_is_trivial(scale) {
+            return self.least_interfering_pool(set, pool, newcomer);
+        }
+        let ctxs: Vec<InterferenceCtx> = (0..pool.len())
+            .map(|d| {
+                let mut c = InterferenceCtx::new_with(set, pool.cost(d));
+                c.apply_scale(scale);
+                c
+            })
+            .collect();
+        let scores: Vec<f64> =
+            self.assignments.iter().enumerate().map(|(d, a)| ctxs[d].score(a)).collect();
+        let mut best = 0usize;
+        let mut best_key = (f64::INFINITY, f64::INFINITY);
+        for (d, a) in self.assignments.iter().enumerate() {
+            let extra_weight = pool.cost(d).sequential_latency_us(newcomer);
+            let extra_profile = pool.cost(d).occupancy_profile(newcomer);
+            let trial = ctxs[d]
+                .score_with(a, Some((extra_weight, extra_profile.as_slice(), &[])));
+            let resulting_max = scores
+                .iter()
+                .enumerate()
+                .map(|(o, &s)| if o == d { trial } else { s })
+                .fold(0.0f64, f64::max);
+            if resulting_max < best_key.0
+                || (resulting_max == best_key.0 && trial < best_key.1)
+            {
+                best = d;
+                best_key = (resulting_max, trial);
+            }
+        }
+        best
+    }
+
+    /// Calibration-scaled [`Placement::fit_memory_aware_pool`]: roofline
+    /// scores use calibrated weights; HBM capacity checks are untouched
+    /// (footprints are physical bytes — a latency correction does not
+    /// change what fits). Identity scale delegates.
+    pub fn fit_memory_aware_pool_scaled(
+        &self,
+        set: &TenantSet,
+        pool: &DevicePool,
+        newcomer: &Dfg,
+        scale: &[f64],
+    ) -> Result<usize> {
+        if scale_is_trivial(scale) {
+            return self.fit_memory_aware_pool(set, pool, newcomer);
+        }
+        let footprint = TenantSet::dfg_footprint(newcomer, None);
+        let usage = self.hbm_usage(set);
+        let fits = |d: usize| usage[d] + footprint <= pool.platform(d).hbm_bytes();
+        if !(0..self.n_devices()).any(fits) {
+            let gb = 1e-9;
+            let max_free = (0..self.n_devices())
+                .map(|d| (pool.platform(d).hbm_bytes() - usage[d]).max(0.0))
+                .fold(0.0f64, f64::max);
+            return Err(Error::MemoryCapacity(format!(
+                "tenant {}: footprint {:.2} GB exceeds the {:.2} GB free on the \
+                 roomiest of {} device(s) ({})",
+                newcomer.name,
+                footprint * gb,
+                max_free * gb,
+                self.n_devices(),
+                pool.label(),
+            )));
+        }
+        let ctxs: Vec<InterferenceCtx> = (0..pool.len())
+            .map(|d| {
+                let mut c = InterferenceCtx::roofline_with(set, pool.cost(d));
+                c.apply_scale(scale);
+                c
+            })
             .collect();
         let scores: Vec<f64> =
             self.assignments.iter().enumerate().map(|(d, a)| ctxs[d].score(a)).collect();
@@ -1956,6 +2228,95 @@ mod tests {
                 Placement::with_objective(&set, 2, objective)
             );
         }
+    }
+
+    #[test]
+    fn identity_scale_delegates_bit_for_bit() {
+        let (tenants, cost) = setup();
+        let newcomer = conv_net("new", 8, 3);
+        let set = TenantSet::new(tenants, cost);
+        let ones = vec![1.0; set.len()];
+        for pool in [
+            DevicePool::uniform(Platform::titan_v(), 2),
+            DevicePool::from_platforms([Platform::a100(), Platform::t4()]),
+        ] {
+            for objective in [
+                PlacementObjective::LoadBalance,
+                PlacementObjective::InterferenceAware,
+                PlacementObjective::MemoryAware,
+            ] {
+                assert_eq!(
+                    Placement::with_objective_pool_scaled(&set, &pool, objective, &ones),
+                    Placement::with_objective_pool(&set, &pool, objective)
+                );
+            }
+            let p = Placement::with_objective_pool(
+                &set,
+                &pool,
+                PlacementObjective::LoadBalance,
+            );
+            assert_eq!(
+                p.least_loaded_pool_scaled(&set, &pool, &newcomer, &ones),
+                p.least_loaded_pool(&set, &pool, &newcomer)
+            );
+            assert_eq!(
+                p.least_interfering_pool_scaled(&set, &pool, &newcomer, &ones),
+                p.least_interfering_pool(&set, &pool, &newcomer)
+            );
+            assert_eq!(
+                p.fit_memory_aware_pool_scaled(&set, &pool, &newcomer, &ones).unwrap(),
+                p.fit_memory_aware_pool(&set, &pool, &newcomer).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn scaled_placement_isolates_an_underpriced_tenant() {
+        // Four identical tenants on two identical devices: the analytic
+        // LPT pairs them 2/2. A trusted 3x correction on tenant 0 makes
+        // it the heavy rock — the scaled LPT gives it a device alone.
+        let tenants: Vec<Dfg> =
+            (0..4).map(|i| conv_net(&format!("t{i}"), 8, 3)).collect();
+        let set = TenantSet::new(tenants, CostModel::new(Platform::titan_v()));
+        let pool = DevicePool::uniform(Platform::titan_v(), 2);
+        let analytic = Placement::balanced_pool(&set, &pool);
+        assert_eq!(analytic.tenants_on(0).len(), 2);
+        let scaled = Placement::with_objective_pool_scaled(
+            &set,
+            &pool,
+            PlacementObjective::LoadBalance,
+            &[3.0, 1.0, 1.0, 1.0],
+        );
+        scaled.validate(4).unwrap();
+        let d0 = scaled.device_of(0).unwrap();
+        assert_eq!(
+            scaled.tenants_on(d0),
+            &[0],
+            "the corrected-heavy tenant is placed alone"
+        );
+        assert_eq!(scaled.tenants_on(1 - d0).len(), 3);
+    }
+
+    #[test]
+    fn scaled_admission_avoids_the_corrected_heavy_device() {
+        // Two identical standing tenants, one per device. A 4x trusted
+        // correction on tenant 0 must steer an identical newcomer onto
+        // tenant 1's device even though analytic loads tie (tie-break
+        // would pick device 0).
+        let tenants: Vec<Dfg> =
+            (0..2).map(|i| conv_net(&format!("t{i}"), 8, 3)).collect();
+        let set = TenantSet::new(tenants, CostModel::new(Platform::titan_v()));
+        let pool = DevicePool::uniform(Platform::titan_v(), 2);
+        let p = Placement::from_assignments(vec![vec![0], vec![1]]);
+        let newcomer = conv_net("new", 8, 3);
+        assert_eq!(p.least_loaded_pool(&set, &pool, &newcomer), 0);
+        let scale = [4.0, 1.0];
+        assert_eq!(p.least_loaded_pool_scaled(&set, &pool, &newcomer, &scale), 1);
+        assert_eq!(p.least_interfering_pool_scaled(&set, &pool, &newcomer, &scale), 1);
+        assert_eq!(
+            p.fit_memory_aware_pool_scaled(&set, &pool, &newcomer, &scale).unwrap(),
+            1
+        );
     }
 
     #[test]

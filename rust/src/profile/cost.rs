@@ -240,6 +240,27 @@ impl CostModel {
         let refs: Vec<&[f64]> = phases.iter().map(Vec::as_slice).collect();
         slowdown_from_phases(&refs)
     }
+
+    /// The analytic prediction of `dfg`'s *served* latency while
+    /// co-resident with `cotenants` on this device: serial latency
+    /// ([`CostModel::sequential_latency_us`]) × the group's
+    /// two-dimensional roofline slowdown
+    /// ([`CostModel::colocation_slowdown`] over `dfg` + `cotenants`).
+    /// This is the predicted half of the online calibration loop
+    /// ([`crate::calibrate`]): each observe window the engine divides the
+    /// served latency by this value and folds the residual into the
+    /// tenant's correction EWMA. Alone on the device (`cotenants` empty)
+    /// the slowdown is `1.0` and this reduces to the serial latency.
+    pub fn predicted_colocated_latency_us(
+        &self,
+        dfg: &crate::dfg::Dfg,
+        cotenants: &[&crate::dfg::Dfg],
+    ) -> f64 {
+        let mut group: Vec<&crate::dfg::Dfg> = Vec::with_capacity(cotenants.len() + 1);
+        group.push(dfg);
+        group.extend_from_slice(cotenants);
+        self.sequential_latency_us(dfg) * self.colocation_slowdown(&group)
+    }
 }
 
 /// [`CostModel::colocation_slowdown`] over pre-sampled tenant timelines
@@ -305,6 +326,23 @@ mod tests {
     /// occupancy curve Fig. 4 plots.
     fn conv_mid() -> OpKind {
         OpKind::Conv { h: 56, w: 56, cin: 256, cout: 256, k: 3, stride: 1 }
+    }
+
+    #[test]
+    fn predicted_colocated_latency_is_serial_times_group_slowdown() {
+        let m = model();
+        let a = crate::models::zoo::build_default("R18").unwrap();
+        let b = crate::models::zoo::build_default("V16").unwrap();
+        // Alone: exactly the serial latency.
+        assert_eq!(
+            m.predicted_colocated_latency_us(&a, &[]),
+            m.sequential_latency_us(&a)
+        );
+        // Co-resident: serial latency scaled by the pair's roofline.
+        let expect = m.sequential_latency_us(&a) * m.colocation_slowdown(&[&a, &b]);
+        let got = m.predicted_colocated_latency_us(&a, &[&b]);
+        assert!((got - expect).abs() < 1e-9, "got {got}, expected {expect}");
+        assert!(got >= m.sequential_latency_us(&a));
     }
 
     #[test]

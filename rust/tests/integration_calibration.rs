@@ -1,0 +1,193 @@
+//! End-to-end tests of the online cost-model calibration loop
+//! (`gacer::calibrate` wired through the engine): measurement exposes a
+//! mispricing no analytic objective can see, the correction changes a
+//! real decision, and the trust ramp resets across evict/readmit so a
+//! returning tenant can never inherit stale residuals.
+
+use gacer::bench_util::calibration_sim::{
+    bench_calibration_config, calibration_is_noop_without_observations, mis_modeled_mix,
+    run_calibration_sim, CalibSimConfig,
+};
+use gacer::calibrate::CalibrationConfig;
+use gacer::engine::{GacerEngine, MigrationPolicy};
+use gacer::profile::{CostModel, Platform};
+use gacer::search::SearchConfig;
+
+fn small_search() -> SearchConfig {
+    SearchConfig {
+        max_pointers: 1,
+        rounds_per_level: 1,
+        positions_per_coordinate: 4,
+        spatial_steps_per_level: 1,
+        ..Default::default()
+    }
+}
+
+fn calibrated_engine() -> GacerEngine {
+    let mut b = GacerEngine::builder()
+        .devices(2)
+        .search(small_search())
+        .calibration(CalibrationConfig::default());
+    for t in mis_modeled_mix() {
+        b = b.tenant(t);
+    }
+    b.build().expect("the demo mix builds")
+}
+
+/// The engine's predicted per-window latency for `slot` under the
+/// current placement — the same number `record_latencies` compares
+/// served samples against.
+fn predicted_us(engine: &GacerEngine, slot: usize) -> f64 {
+    let cost = CostModel::new(Platform::titan_v());
+    let (device, _) = engine.placement().locate(slot).expect("placed");
+    let tenants = engine.tenants();
+    let cotenants: Vec<&gacer::dfg::Dfg> = engine
+        .placement()
+        .tenants_on(device)
+        .iter()
+        .copied()
+        .filter(|&s| s != slot)
+        .map(|s| &tenants[s])
+        .collect();
+    cost.predicted_colocated_latency_us(&tenants[slot], &cotenants)
+}
+
+/// Feed one observe window where every slot serves `multiplier[slot] ×`
+/// its predicted latency (8 identical samples per slot).
+fn feed_window(engine: &mut GacerEngine, multiplier: &[f64]) {
+    let samples: Vec<Vec<f64>> = (0..engine.len())
+        .map(|slot| vec![predicted_us(engine, slot) * multiplier[slot]; 8])
+        .collect();
+    engine.record_latencies(&samples).expect("slot-ordered samples");
+}
+
+#[test]
+fn calibrated_migration_fires_where_the_analytic_policy_never_does() {
+    // The full loop through the bench simulator: four analytically
+    // identical tenants, one secretly `inflation ×` slower. The analytic
+    // arm holds the 2+2 split forever; the calibrated arm's residuals
+    // cross the trust ramp, the load-ratio policy fires, and the
+    // mispriced tenant ends the run isolated — with a strictly better
+    // worst-tenant p99 over the measurement windows.
+    let analytic = run_calibration_sim(&CalibSimConfig::analytic());
+    let calibrated = run_calibration_sim(&CalibSimConfig::calibrated());
+    assert_eq!(analytic.migrated_window, None, "analytic weights stay balanced");
+    assert!(!analytic.mis_isolated);
+    assert!(calibrated.migrated_window.is_some(), "the correction must fire a move");
+    assert!(calibrated.mis_isolated);
+    assert!(
+        calibrated.max_p99_us() < analytic.max_p99_us(),
+        "calibrated worst p99 {} must strictly beat analytic {}",
+        calibrated.max_p99_us(),
+        analytic.max_p99_us()
+    );
+}
+
+#[test]
+fn migration_decision_flips_only_after_the_trust_ramp() {
+    // Direct engine drive of the same effect, window by window: while
+    // the residuals are still ramping the policy must decline (the
+    // observed weights are analytic), and only once `min_samples`
+    // windows have been folded in may the move fire.
+    let mut engine = calibrated_engine();
+    let policy = MigrationPolicy::default();
+    let min_samples = CalibrationConfig::default().min_samples as usize;
+    // Slot 0 secretly serves 6x its prediction; peers are accurate.
+    let multiplier = [6.0, 1.0, 1.0, 1.0];
+    let mut fired_at = None;
+    for window in 0..6 {
+        feed_window(&mut engine, &multiplier);
+        let moved = engine.maybe_migrate(&policy).expect("consultation succeeds");
+        if moved.is_some() && fired_at.is_none() {
+            fired_at = Some(window);
+        }
+        if window + 1 < min_samples {
+            assert_eq!(
+                fired_at, None,
+                "a move fired in window {window}, inside the trust ramp"
+            );
+        }
+    }
+    let fired_at = fired_at.expect("trusted residuals must eventually fire a move");
+    assert!(fired_at + 1 >= min_samples);
+    // The engine settled on the hidden truth: slot 0's correction is
+    // well above 1 (6x clamped into the default [0.25, 4.0] band).
+    let ids = engine.tenant_ids();
+    let k = engine.correction_of(ids[0]).expect("id is live");
+    assert!(k > 2.0, "mispriced tenant's correction is {k}");
+}
+
+#[test]
+fn drift_then_recover_evict_readmit_resets_the_trust_ramp() {
+    let mut engine = calibrated_engine();
+    let ids = engine.tenant_ids();
+    let drifter = ids[0];
+
+    // Drift: tenant 0 serves 5x its prediction for enough windows to
+    // complete the trust ramp. Its correction leaves 1.0.
+    for _ in 0..4 {
+        feed_window(&mut engine, &[5.0, 1.0, 1.0, 1.0]);
+    }
+    let drifted = engine.correction_of(drifter).expect("id is live");
+    assert!(drifted > 1.0, "drift never registered: correction {drifted}");
+    assert!(engine
+        .calibration()
+        .expect("calibrator attached")
+        .is_trusted(drifter.0, "TitanV"));
+
+    // Evict: every residual of the departed tenant is forgotten — the
+    // calibrator holds nothing keyed to the old id.
+    let dfg = engine.evict(drifter).expect("tenant is live");
+    assert!(
+        engine.corrections().iter().all(|e| e.tenant != drifter.0),
+        "evict left residuals behind for tenant {drifter}"
+    );
+
+    // Readmit the same model: a fresh id, a fresh ramp. Decisions about
+    // the returning tenant are analytic again until re-observed.
+    let back = engine.admit(dfg).expect("readmission succeeds");
+    assert_ne!(back, drifter, "tenant ids are never reused");
+    assert_eq!(engine.correction_of(back).expect("id is live"), 1.0);
+    assert!(!engine
+        .calibration()
+        .expect("calibrator attached")
+        .is_trusted(back.0, "TitanV"));
+
+    // Recover: the readmitted tenant now serves accurately. After the
+    // ramp re-completes, its trusted correction sits at ~1.0 — the loop
+    // converged back to the analytic model, not to the stale drift.
+    let multiplier = vec![1.0; engine.len()];
+    for _ in 0..4 {
+        feed_window(&mut engine, &multiplier);
+    }
+    assert!(engine
+        .calibration()
+        .expect("calibrator attached")
+        .is_trusted(back.0, "TitanV"));
+    let recovered = engine.correction_of(back).expect("id is live");
+    assert!(
+        (recovered - 1.0).abs() < 1e-9,
+        "recovered correction {recovered} should be ~1.0"
+    );
+}
+
+#[test]
+fn zero_observations_keep_every_decision_bit_for_bit_analytic() {
+    // Acceptance criterion 2, at the integration level: enabling the
+    // feature without feeding it changes nothing — placements, migration
+    // consultations, re-plans, and admissions all match the analytic
+    // twin exactly.
+    assert!(calibration_is_noop_without_observations(3));
+}
+
+#[test]
+fn bench_arm_config_is_stricter_than_default_only_in_its_clamp() {
+    // Guard the bench knobs the acceptance criteria run under: same
+    // trust ramp and EWMA as production defaults, wider clamp only.
+    let bench = bench_calibration_config();
+    let default = CalibrationConfig::default();
+    assert_eq!(bench.min_samples, default.min_samples);
+    assert_eq!(bench.alpha, default.alpha);
+    assert_eq!(bench.min_correction, default.min_correction);
+    assert!(bench.max_correction > default.max_correction);
+}

@@ -631,3 +631,168 @@ fn prop_single_device_pool_degenerates() {
         }
     });
 }
+
+#[test]
+fn prop_calibration_corrections_stay_inside_the_clamp() {
+    // (l) under arbitrary observation streams — including junk samples
+    // (NaN, infinities, zeros, negatives) that must be dropped — every
+    // correction a calibrator hands a decision is either exactly 1.0
+    // (trust ramp not completed) or inside [min_correction,
+    // max_correction], and the residual store never exceeds its bound.
+    use gacer::calibrate::{CalibrationConfig, Calibrator};
+    check_property("calibration-clamp", 30, |rng| {
+        let cfg = CalibrationConfig {
+            min_samples: rng.range(1, 6) as u32,
+            alpha: 0.05 + 0.9 * rng.f64(),
+            min_correction: 0.1 + 0.9 * rng.f64(),
+            max_correction: 1.0 + 9.0 * rng.f64(),
+            max_entries: rng.range(1, 12),
+        };
+        let mut c = Calibrator::new(cfg).unwrap();
+        let platforms = ["TitanV", "A100", "T4"];
+        for _ in 0..rng.range(1, 120) {
+            let tenant = rng.below(6) as u64;
+            let platform = *rng.choose(&platforms);
+            let (predicted, observed) = if rng.f64() < 0.2 {
+                // Junk the calibrator must refuse to fold in.
+                *rng.choose(&[
+                    (f64::NAN, 100.0),
+                    (100.0, f64::NAN),
+                    (0.0, 100.0),
+                    (100.0, 0.0),
+                    (-5.0, 100.0),
+                    (100.0, f64::INFINITY),
+                ])
+            } else {
+                (10.0 + 1e5 * rng.f64(), 10.0 + 1e5 * rng.f64())
+            };
+            c.observe(tenant, platform, predicted, observed);
+            assert!(c.len() <= cfg.max_entries, "residual store exceeded its bound");
+            for t in 0..6u64 {
+                for p in &platforms {
+                    let k = c.correction(t, p);
+                    if c.is_trusted(t, p) {
+                        assert!(
+                            (cfg.min_correction..=cfg.max_correction).contains(&k),
+                            "trusted correction {k} outside \
+                             [{}, {}]",
+                            cfg.min_correction,
+                            cfg.max_correction
+                        );
+                    } else {
+                        assert_eq!(k, 1.0, "untrusted pair must stay analytic");
+                    }
+                }
+            }
+        }
+        for e in c.entries() {
+            assert_eq!(e.trusted, e.samples >= cfg.min_samples);
+            if e.trusted {
+                assert!((cfg.min_correction..=cfg.max_correction).contains(&e.correction));
+            } else {
+                assert_eq!(e.correction, 1.0);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_calibration_is_deterministic_in_seed_and_order() {
+    // (l') the calibrator is a pure fold: replaying the identical
+    // observation sequence (same seed, same order) into a fresh
+    // calibrator reproduces every residual, trust flag, and correction
+    // bit-for-bit.
+    use gacer::calibrate::{CalibrationConfig, Calibrator};
+    check_property("calibration-deterministic", 25, |rng| {
+        let cfg = CalibrationConfig {
+            max_entries: rng.range(2, 16),
+            ..CalibrationConfig::default()
+        };
+        let platforms = ["TitanV", "P6000", "A100"];
+        let sequence: Vec<(u64, &str, f64, f64)> = (0..rng.range(1, 80))
+            .map(|_| {
+                (
+                    rng.below(5) as u64,
+                    *rng.choose(&platforms),
+                    1.0 + 1e4 * rng.f64(),
+                    1.0 + 1e4 * rng.f64(),
+                )
+            })
+            .collect();
+        let mut a = Calibrator::new(cfg).unwrap();
+        let mut b = Calibrator::new(cfg).unwrap();
+        for &(tenant, platform, predicted, observed) in &sequence {
+            assert_eq!(
+                a.observe(tenant, platform, predicted, observed),
+                b.observe(tenant, platform, predicted, observed)
+            );
+        }
+        assert_eq!(a.entries(), b.entries(), "same fold, different residuals");
+        assert_eq!(a.observations(), b.observations());
+        for &(tenant, platform, ..) in &sequence {
+            assert_eq!(a.correction(tenant, platform), b.correction(tenant, platform));
+        }
+    });
+}
+
+#[test]
+fn prop_zero_observation_calibration_never_changes_a_decision() {
+    // (l'') the regression guard behind the trust ramp: an engine built
+    // WITH the calibrator but fed no latency window takes bit-for-bit
+    // the decisions of its analytic twin — placement, migration, replan,
+    // and admission — for any number of observe windows.
+    use gacer::bench_util::calibration_sim::calibration_is_noop_without_observations;
+    check_property("calibration-zero-obs-identity", 3, |rng| {
+        let windows = rng.range(1, 4);
+        assert!(
+            calibration_is_noop_without_observations(windows),
+            "{windows} empty windows diverged from the analytic twin"
+        );
+    });
+}
+
+#[test]
+fn prop_calibration_ewma_converges_monotonically_to_a_constant_bias() {
+    // (l''') fed a constant multiplicative bias after arbitrary warmup
+    // noise, the residual EWMA's error against that bias is
+    // non-increasing every step and converges; once trusted, the
+    // correction lands on the clamped bias.
+    use gacer::calibrate::{CalibrationConfig, Calibrator};
+    check_property("calibration-ewma-converges", 25, |rng| {
+        let cfg = CalibrationConfig::default();
+        let mut c = Calibrator::new(cfg).unwrap();
+        let bias = 0.3 + 4.7 * rng.f64();
+        let predicted = 50.0 + 1e4 * rng.f64();
+        // Warmup noise: random ratios in [0.5, 2.5].
+        for _ in 0..rng.below(10) {
+            c.observe(7, "TitanV", predicted, predicted * (0.5 + 2.0 * rng.f64()));
+        }
+        let ratio_of = |c: &Calibrator| {
+            c.entries()
+                .iter()
+                .find(|e| e.tenant == 7 && e.platform == "TitanV")
+                .map(|e| e.ratio_ewma)
+        };
+        let mut err = ratio_of(&c).map(|r| (r - bias).abs());
+        for _ in 0..80 {
+            assert!(c.observe(7, "TitanV", predicted, predicted * bias));
+            let next = (ratio_of(&c).unwrap() - bias).abs();
+            if let Some(prev) = err {
+                assert!(
+                    next <= prev + 1e-12,
+                    "EWMA error grew under a constant bias: {next} > {prev}"
+                );
+            }
+            err = Some(next);
+        }
+        // 80 folds of alpha=0.3 shrink any warmup error below 1e-9.
+        assert!(err.unwrap() < 1e-9, "EWMA failed to converge to the bias");
+        assert!(c.is_trusted(7, "TitanV"));
+        assert!(
+            (c.correction(7, "TitanV")
+                - bias.clamp(cfg.min_correction, cfg.max_correction))
+            .abs()
+                < 1e-9
+        );
+    });
+}

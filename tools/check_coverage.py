@@ -1,0 +1,67 @@
+#!/usr/bin/env python3
+"""Enforce committed per-module line-coverage floors.
+
+Reads the JSON export of `cargo llvm-cov report --json` (the
+llvm.coverage.json.export format) and aggregates line coverage over the
+source prefixes named in FLOORS. Exits non-zero when any module falls
+below its floor, printing a table either way, so the CI coverage job is
+a regression gate and not just a report.
+
+The floors are deliberately modest: they exist to catch a module's tests
+being deleted or skipped wholesale, not to chase a number. Raise a floor
+when a module's coverage durably improves; never lower one to make a
+red build green without discussing it in the PR.
+"""
+
+import json
+import sys
+
+# Module prefix (repo-relative) -> minimum line coverage, percent.
+FLOORS = {
+    "rust/src/calibrate/": 80.0,
+    "rust/src/engine/": 55.0,
+    "rust/src/plan.rs": 55.0,
+}
+
+
+def main() -> int:
+    if len(sys.argv) != 2:
+        print(f"usage: {sys.argv[0]} <llvm-cov-report.json>", file=sys.stderr)
+        return 2
+    with open(sys.argv[1], encoding="utf-8") as f:
+        report = json.load(f)
+
+    # One (covered, total) accumulator per floor prefix.
+    acc = {prefix: [0, 0] for prefix in FLOORS}
+    for export in report.get("data", []):
+        for entry in export.get("files", []):
+            filename = entry.get("filename", "")
+            lines = entry.get("summary", {}).get("lines", {})
+            for prefix, counts in acc.items():
+                if prefix in filename:
+                    counts[0] += int(lines.get("covered", 0))
+                    counts[1] += int(lines.get("count", 0))
+
+    failed = False
+    print(f"{'module':<28} {'lines':>12} {'coverage':>9} {'floor':>7}")
+    for prefix, floor in sorted(FLOORS.items()):
+        covered, total = acc[prefix]
+        if total == 0:
+            print(f"{prefix:<28} {'-':>12} {'MISSING':>9} {floor:>6.1f}%")
+            failed = True
+            continue
+        pct = 100.0 * covered / total
+        verdict = "ok" if pct >= floor else "FAIL"
+        print(
+            f"{prefix:<28} {covered:>5}/{total:<6} {pct:>8.2f}% {floor:>6.1f}% {verdict}"
+        )
+        if pct < floor:
+            failed = True
+    if failed:
+        print("coverage floor violated", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
